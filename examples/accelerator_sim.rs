@@ -1,0 +1,78 @@
+//! Accelerator design-space tour: Fig. 10-style latency/throughput
+//! comparison across robots and designs, the division-deferring and
+//! DSP-reuse ablations (Fig. 12), and Table-II-style resources.
+//!
+//! Run: `cargo run --release --example accelerator_sim`
+
+use draco::accel::resources::estimate_resources;
+use draco::accel::{estimate, gpu_model, reuse_report, Design, RbdFn};
+use draco::model::builtin_robot;
+use draco::util::bench::Table;
+
+fn main() {
+    for name in ["iiwa", "hyq", "atlas"] {
+        let robot = builtin_robot(name).unwrap();
+        let designs =
+            [Design::draco(&robot), Design::dadu_rbd(&robot), Design::roboshape(&robot)];
+
+        let mut t = Table::new(&["design", "fn", "lat(us)", "tput(tasks/s)", "dsp"]);
+        for d in &designs {
+            for f in RbdFn::ALL {
+                let p = estimate(d, &robot, f);
+                t.row(&[
+                    d.name.to_string(),
+                    f.name().to_string(),
+                    format!("{:.2}", p.latency_us),
+                    format!("{:.3e}", p.throughput),
+                    p.dsp_active.to_string(),
+                ]);
+            }
+        }
+        // GPU (GRiD-modeled) rows for context.
+        for f in [RbdFn::Id, RbdFn::DeltaFd] {
+            let p = gpu_model(&robot, f);
+            t.row(&[
+                "gpu-grid".into(),
+                f.name().to_string(),
+                format!("{:.2}", p.latency_us),
+                format!("{:.3e}", p.throughput),
+                "-".into(),
+            ]);
+        }
+        t.print(&format!("design space — {name}"));
+
+        // Fig. 12(a): division-deferring ablation on Minv.
+        let with_dd = estimate(&Design::draco(&robot), &robot, RbdFn::Minv);
+        let without = estimate(&Design::draco_no_dd(&robot), &robot, RbdFn::Minv);
+        println!(
+            "division deferring: Minv latency {:.2} → {:.2} µs ({:.2}x), throughput {:.2}x",
+            without.latency_us,
+            with_dd.latency_us,
+            without.latency_us / with_dd.latency_us,
+            with_dd.throughput / without.throughput,
+        );
+
+        // Fig. 12(b): inter-module DSP reuse.
+        let r = reuse_report(&Design::draco(&robot), &robot);
+        println!(
+            "DSP reuse: {} DSPs with, {} without → {:.1}% saved (shared {} engines, II {}→{})",
+            r.dsp_with,
+            r.dsp_without,
+            r.savings_frac * 100.0,
+            r.shared_engines,
+            r.ii_rnea_solo,
+            r.ii_composite,
+        );
+
+        // Table II resources.
+        let res = estimate_resources(&Design::draco(&robot), &robot);
+        println!(
+            "resources: {} DSP, {}k LUT, {}k FF, {} BRAM, {:.1} W\n",
+            res.dsp,
+            res.lut / 1000,
+            res.ff / 1000,
+            res.bram,
+            res.power_w
+        );
+    }
+}

@@ -1,0 +1,73 @@
+//! Quickstart: load a robot, evaluate the RBD function suite natively,
+//! check the algebraic invariants, and preview the accelerator estimate.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use draco::accel::{estimate, Design, RbdFn};
+use draco::dynamics::{crba, fd, minv, minv_dd, rnea, rnea_derivatives};
+use draco::model::{builtin_robot, State};
+use draco::quant::qrbd::quant_rnea;
+use draco::quant::QFormat;
+use draco::util::rng::Rng;
+
+fn main() {
+    let robot = builtin_robot("iiwa").expect("builtin robot");
+    let n = robot.dof();
+    println!("robot {} — {} DOF", robot.name, n);
+
+    let mut rng = Rng::new(42);
+    let s = State::random(&robot, &mut rng);
+    let qdd: Vec<f64> = rng.vec_range(n, -2.0, 2.0);
+
+    // Inverse dynamics (ID / RNEA).
+    let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+    println!("\nτ = RNEA(q, q̇, q̈) = {:?}", round3(&tau));
+
+    // Forward dynamics must invert it (paper Eq. 2).
+    let back = fd(&robot, &s.q, &s.qd, &tau, None);
+    let rt_err = back
+        .iter()
+        .zip(&qdd)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("FD(ID(q̈)) round-trip max error: {rt_err:.2e}");
+
+    // Analytical M⁻¹ — original vs division-deferring are identical.
+    let mi = minv(&robot, &s.q);
+    let mi_dd = minv_dd(&robot, &s.q);
+    println!("|minv − minv_dd|∞ = {:.2e}", mi.sub(&mi_dd).max_abs());
+    let m = crba(&robot, &s.q);
+    let ident_err = mi.matmul(&m).sub(&draco::spatial::DMat::identity(n)).max_abs();
+    println!("|M⁻¹·M − I|∞ = {ident_err:.2e}");
+
+    // Analytical derivatives (ΔID).
+    let (dq, dqd) = rnea_derivatives(&robot, &s.q, &s.qd, &qdd);
+    println!("‖∂τ/∂q‖F = {:.3}, ‖∂τ/∂q̇‖F = {:.3}", dq.frobenius(), dqd.frobenius());
+
+    // Quantized evaluation (the paper's 24-bit iiwa format).
+    let fmt = QFormat::new(12, 12);
+    let tq = quant_rnea(&robot, &s.q, &s.qd, &qdd, fmt);
+    let qerr = tau
+        .iter()
+        .zip(&tq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("\n24-bit ({}) RNEA max torque deviation: {qerr:.3e} Nm", fmt.label());
+
+    // Accelerator estimate for this robot.
+    let design = Design::draco(&robot);
+    println!("\nDRACO cycle-model estimates:");
+    for f in RbdFn::ALL {
+        let p = estimate(&design, &robot, f);
+        println!(
+            "  {:>4}: latency {:6.2} µs  throughput {:9.0} tasks/s",
+            f.name(),
+            p.latency_us,
+            p.throughput
+        );
+    }
+}
+
+fn round3(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 1e3).round() / 1e3).collect()
+}

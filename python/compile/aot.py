@@ -1,0 +1,78 @@
+"""AOT compile path: lower the L2 batched RBD functions to HLO **text**
+artifacts the Rust runtime loads via `HloModuleProto::from_text_file`.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--robots iiwa,hyq] [--fns rnea,fd,minv] [--batches 16,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, robots
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the default printer elides
+    # literals with >15 elements to `constant({...})`, which the XLA
+    # 0.5.1 text parser silently reads back as ZEROS — the robot's
+    # inertia/transform constants would all vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_fn(rob: robots.RobotArrays, fn: str, batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, rob.n), jnp.float32)
+    if fn == "rnea":
+        f = lambda q, qd, qdd: (model.batched_rnea(rob, q, qd, qdd),)
+        lowered = jax.jit(f).lower(spec, spec, spec)
+    elif fn == "fd":
+        f = lambda q, qd, tau: (model.batched_fd(rob, q, qd, tau),)
+        lowered = jax.jit(f).lower(spec, spec, spec)
+    elif fn == "minv":
+        f = lambda q: (model.batched_minv(rob, q),)
+        lowered = jax.jit(f).lower(spec)
+    else:
+        raise ValueError(f"unknown fn '{fn}'")
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--robots", default="iiwa,hyq")
+    ap.add_argument("--fns", default="rnea,fd,minv")
+    ap.add_argument("--batches", default="16,64")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    robot_names = args.robots.split(",")
+    fns = args.fns.split(",")
+    batches = [int(b) for b in args.batches.split(",")]
+
+    for name in robot_names:
+        rob = robots.load(name)
+        for fn in fns:
+            for b in batches:
+                out = os.path.join(args.out_dir, f"{name}_{fn}_b{b}.hlo.txt")
+                text = lower_fn(rob, fn, b)
+                with open(out, "w") as fh:
+                    fh.write(text)
+                print(f"wrote {out} ({len(text) / 1e3:.0f} kB)")
+
+
+if __name__ == "__main__":
+    main()

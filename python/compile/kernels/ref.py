@@ -1,0 +1,197 @@
+"""Pure-jnp single-sample reference implementations — the correctness
+oracle for the Pallas kernels and the batched L2 model.
+
+Conventions follow the Rust library exactly (Featherstone, angular part
+first):
+
+* ``rot_axis(axis, q)`` is the *coordinate transform* E (transpose of the
+  vector-rotation matrix).
+* Motion transform: ``ang' = E·ang``, ``lin' = E·(lin − r×ang)``.
+* Force transform (to parent): ``lin_p = Eᵀ·lin``, ``ang_p = Eᵀ·ang + r×lin_p``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..robots import PRISMATIC, RobotArrays
+
+
+def skew(v):
+    return jnp.array(
+        [
+            [0.0, -v[2], v[1]],
+            [v[2], 0.0, -v[0]],
+            [-v[1], v[0], 0.0],
+        ]
+    )
+
+
+def rot_axis(axis, q):
+    """Coordinate-transform rotation (E-style): I − sin·K + (1−cos)·K²."""
+    k = skew(axis)
+    return jnp.eye(3) - jnp.sin(q) * k + (1.0 - jnp.cos(q)) * (k @ k)
+
+
+def joint_xform(rob: RobotArrays, i: int, qi):
+    """X_up[i] = XJ(q_i) ∘ X_tree[i] → (E, r)."""
+    if int(rob.jtype[i]) == PRISMATIC:
+        ej = jnp.eye(3)
+        rj = jnp.asarray(rob.axis[i]) * qi
+    else:
+        ej = rot_axis(jnp.asarray(rob.axis[i]), qi)
+        rj = jnp.zeros(3)
+    e = ej @ rob.e_tree[i]
+    r = jnp.asarray(rob.r_tree[i]) + rob.e_tree[i].T @ rj
+    return e, r
+
+
+def motion_subspace(rob: RobotArrays, i: int):
+    if int(rob.jtype[i]) == PRISMATIC:
+        return jnp.concatenate([jnp.zeros(3), jnp.asarray(rob.axis[i])])
+    return jnp.concatenate([jnp.asarray(rob.axis[i]), jnp.zeros(3)])
+
+
+def x_apply(e, r, v):
+    ang = e @ v[:3]
+    lin = e @ (v[3:] - jnp.cross(r, v[:3]))
+    return jnp.concatenate([ang, lin])
+
+
+def inv_apply_force(e, r, f):
+    lin = e.T @ f[3:]
+    ang = e.T @ f[:3] + jnp.cross(r, lin)
+    return jnp.concatenate([ang, lin])
+
+
+def crm(v, m):
+    ang = jnp.cross(v[:3], m[:3])
+    lin = jnp.cross(v[:3], m[3:]) + jnp.cross(v[3:], m[:3])
+    return jnp.concatenate([ang, lin])
+
+
+def crf(v, f):
+    ang = jnp.cross(v[:3], f[:3]) + jnp.cross(v[3:], f[3:])
+    lin = jnp.cross(v[:3], f[3:])
+    return jnp.concatenate([ang, lin])
+
+
+def xform_mat6(e, r):
+    """Dense 6×6 motion transform [[E,0],[−E·r̃,E]]."""
+    xm = jnp.zeros((6, 6))
+    xm = xm.at[:3, :3].set(e).at[3:, 3:].set(e)
+    return xm.at[3:, :3].set(-(e @ skew(r)))
+
+
+def rnea(rob: RobotArrays, q, qd, qdd):
+    """Inverse dynamics τ = ID(q, q̇, q̈), single sample."""
+    n = rob.n
+    a0 = jnp.concatenate([jnp.zeros(3), -jnp.asarray(rob.gravity)])
+    v = [None] * n
+    a = [None] * n
+    f = [None] * n
+    xs = []
+    for i in range(n):
+        e, r = joint_xform(rob, i, q[i])
+        xs.append((e, r))
+        s = motion_subspace(rob, i)
+        p = int(rob.parent[i])
+        vp = v[p] if p >= 0 else jnp.zeros(6)
+        ap = a[p] if p >= 0 else a0
+        vi = x_apply(e, r, vp) + s * qd[i]
+        ai = x_apply(e, r, ap) + s * qdd[i] + crm(vi, s * qd[i])
+        ii = jnp.asarray(rob.inertia[i])
+        fi = ii @ ai + crf(vi, ii @ vi)
+        v[i], a[i], f[i] = vi, ai, fi
+    tau = [None] * n
+    for i in reversed(range(n)):
+        s = motion_subspace(rob, i)
+        tau[i] = s @ f[i]
+        p = int(rob.parent[i])
+        if p >= 0:
+            e, r = xs[i]
+            f[p] = f[p] + inv_apply_force(e, r, f[i])
+    return jnp.stack(tau)
+
+
+def crba(rob: RobotArrays, q):
+    """Mass matrix via RNEA columns (zero velocity, unit accelerations)."""
+    n = rob.n
+    zero = jnp.zeros(n)
+    t0 = rnea(rob, q, zero, zero)
+    cols = []
+    for j in range(n):
+        ej = jnp.zeros(n).at[j].set(1.0)
+        cols.append(rnea(rob, q, zero, ej) - t0)
+    return jnp.stack(cols, axis=1)
+
+
+def minv_dd(rob: RobotArrays, q):
+    """Analytical M⁻¹ in the division-deferring form (paper Alg. 2): the
+    backward sweep forms scaled numerators only; ALL reciprocals run as
+    one vectorized stage (the shared pipelined divider); the forward
+    sweep consumes them. Columns are vectorized as (6, N) blocks.
+    """
+    n = rob.n
+    ia = [jnp.asarray(rob.inertia[i]) for i in range(n)]
+    xs = [joint_xform(rob, i, q[i]) for i in range(n)]
+    ss = [motion_subspace(rob, i) for i in range(n)]
+
+    u = [None] * n
+    d = [None] * n
+    f = [jnp.zeros((6, n)) for _ in range(n)]
+    raw_row = [jnp.zeros(n) for _ in range(n)]
+
+    for i in reversed(range(n)):
+        s = ss[i]
+        ui = ia[i] @ s
+        di = s @ ui
+        u[i], d[i] = ui, di
+        raw_row[i] = raw_row[i].at[i].add(1.0) - s @ f[i]
+        p = int(rob.parent[i])
+        if p >= 0:
+            e, r = xs[i]
+            # N_i = D·IA − U Uᵀ, propagated with the divider output 1/D.
+            ni = di * ia[i] - jnp.outer(ui, ui)
+            xm = xform_mat6(e, r)
+            ia[p] = ia[p] + (xm.T @ ni @ xm) * (1.0 / di)
+            # G_i = D·F + U·raw_row; force-transform each column.
+            gi = di * f[i] + jnp.outer(ui, raw_row[i])
+            lin = e.T @ gi[3:]  # (3, n)
+            ang = e.T @ gi[:3] + jnp.cross(jnp.broadcast_to(r, (n, 3)), lin.T).T
+            f[p] = f[p] + jnp.concatenate([ang, lin], axis=0) * (1.0 / di)
+
+    # Shared-divider stage: one vectorized reciprocal over all joints.
+    dinv = 1.0 / jnp.stack(d)
+
+    minv = jnp.stack([raw_row[i] * dinv[i] for i in range(n)])
+    a = [jnp.zeros((6, n)) for _ in range(n)]
+    for i in range(n):
+        s = ss[i]
+        p = int(rob.parent[i])
+        if p < 0:
+            a[i] = jnp.outer(s, minv[i])
+        else:
+            e, r = xs[i]
+            # Motion-transform each column of a[p].
+            lin_in = a[p][3:] - jnp.cross(jnp.broadcast_to(r, (n, 3)), a[p][:3].T).T
+            xa = jnp.concatenate([e @ a[p][:3], e @ lin_in], axis=0)
+            corr = dinv[i] * (u[i] @ xa)
+            minv = minv.at[i].add(-corr)
+            a[i] = xa + jnp.outer(s, minv[i])
+    return minv
+
+
+def fd(rob: RobotArrays, q, qd, tau):
+    """Forward dynamics q̈ = M⁻¹·(τ − C) (paper Eq. 2)."""
+    bias = rnea(rob, q, qd, jnp.zeros(rob.n))
+    return minv_dd(rob, q) @ (tau - bias)
+
+
+def quantize(x, int_bits: int, frac_bits: int):
+    """Round-to-nearest + saturate Q-format emulation (matches the Rust
+    ``QFormat::q``)."""
+    step = 2.0 ** (-frac_bits)
+    max_val = 2.0 ** (int_bits - 1) - step
+    v = jnp.round(x / step) * step
+    return jnp.clip(v, -max_val - step, max_val)

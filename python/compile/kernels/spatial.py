@@ -1,0 +1,197 @@
+"""Layer-1 Pallas kernels: the RBD MAC hot-spot as batched, VMEM-tiled
+kernels with in-kernel Q-format quantization emulation.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper maps MACs
+onto FPGA DSP slices and streams tasks through per-joint RTP stages; on
+TPU the batch dimension provides the streaming (BlockSpec tiles of the
+batch live in VMEM) and reduced-precision MACs map to quantized values
+flowing through the MXU. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so kernels lower to plain HLO
+(numerics identical; real-TPU perf is estimated in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32
+
+
+def _quant(x, fmt):
+    """In-kernel Q-format rounding: round-to-nearest + saturate."""
+    if fmt is None:
+        return x
+    int_bits, frac_bits = fmt
+    step = 2.0 ** (-frac_bits)
+    max_val = 2.0 ** (int_bits - 1) - step
+    return jnp.clip(jnp.round(x / step) * step, -max_val - step, max_val)
+
+
+def _cross(a, b):
+    """Batched 3-D cross product on (B,3) tiles (index form keeps the
+    kernel free of gather ops)."""
+    c0 = a[:, 1] * b[:, 2] - a[:, 2] * b[:, 1]
+    c1 = a[:, 2] * b[:, 0] - a[:, 0] * b[:, 2]
+    c2 = a[:, 0] * b[:, 1] - a[:, 1] * b[:, 0]
+    return jnp.stack([c0, c1, c2], axis=1)
+
+
+def _pad_batch(x, block):
+    b = x.shape[0]
+    pad = (-b) % block
+    if pad == 0:
+        return x, b
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths), b
+
+
+# --------------------------------------------------------------------
+# Kernel 1: batched spatial motion transform  o = X(e, r) · v
+# --------------------------------------------------------------------
+
+
+def _xmotion_kernel(e_ref, r_ref, v_ref, o_ref, *, fmt):
+    e = e_ref[...]  # (BK, 3, 3)
+    r = r_ref[...]  # (BK, 3)
+    v = v_ref[...]  # (BK, 6)
+    ang_in = v[:, :3]
+    lin_in = v[:, 3:]
+    rx = _cross(r, ang_in)
+    ang = jnp.einsum("bij,bj->bi", e, ang_in)
+    lin = jnp.einsum("bij,bj->bi", e, lin_in - rx)
+    o_ref[...] = _quant(jnp.concatenate([ang, lin], axis=1), fmt)
+
+
+def xmotion_apply(e, r, v, fmt=None, block=BLOCK):
+    """Batched Plücker motion transform: (B,3,3),(B,3),(B,6) → (B,6)."""
+    (e, b0) = _pad_batch(e, block)
+    (r, _) = _pad_batch(r, block)
+    (v, _) = _pad_batch(v, block)
+    b = e.shape[0]
+    grid = (b // block,)
+    out = pl.pallas_call(
+        functools.partial(_xmotion_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((b, 6), v.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 3, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 6), lambda i: (i, 0)),
+        interpret=True,
+    )(e, r, v)
+    return out[:b0]
+
+
+# --------------------------------------------------------------------
+# Kernel 2: batched constant-matrix MAC  o = v · Mᵀ   (the DSP array)
+# --------------------------------------------------------------------
+
+
+def _mat6_kernel(m_ref, v_ref, o_ref, *, fmt):
+    m = m_ref[...]  # (6, 6)
+    v = v_ref[...]  # (BK, 6)
+    o_ref[...] = _quant(v @ m.T, fmt)
+
+
+def mat6_apply(m, v, fmt=None, block=BLOCK):
+    """Batched spatial-inertia application: (6,6) const × (B,6) → (B,6)."""
+    (v, b0) = _pad_batch(v, block)
+    b = v.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_mat6_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((b, 6), v.dtype),
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((6, 6), lambda i: (0, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 6), lambda i: (i, 0)),
+        interpret=True,
+    )(m, v)
+    return out[:b0]
+
+
+# --------------------------------------------------------------------
+# Kernel 3: fused RNEA forward step (one Uf pipeline unit, batched)
+# --------------------------------------------------------------------
+
+
+def _rnea_step_kernel(
+    e_ref, r_ref, inert_ref, s_ref, vp_ref, ap_ref, qd_ref, qdd_ref,
+    v_ref, a_ref, f_ref, *, fmt,
+):
+    e = e_ref[...]
+    r = r_ref[...]
+    inert = inert_ref[...]  # (6,6)
+    s = s_ref[...]  # (1,6)
+    vp = vp_ref[...]
+    ap = ap_ref[...]
+    qd = qd_ref[...]  # (BK,1)
+    qdd = qdd_ref[...]
+
+    def xapply(vec):
+        ang_in = vec[:, :3]
+        lin_in = vec[:, 3:]
+        ang = jnp.einsum("bij,bj->bi", e, ang_in)
+        lin = jnp.einsum("bij,bj->bi", e, lin_in - _cross(r, ang_in))
+        return jnp.concatenate([ang, lin], axis=1)
+
+    vj = s * qd  # (BK,6)
+    vi = _quant(xapply(vp) + vj, fmt)
+    # crm(vi, vj)
+    ang = _cross(vi[:, :3], vj[:, :3])
+    lin = _cross(vi[:, :3], vj[:, 3:]) + _cross(vi[:, 3:], vj[:, :3])
+    ai = _quant(xapply(ap) + s * qdd + jnp.concatenate([ang, lin], axis=1), fmt)
+    ia = ai @ inert.T
+    iv = vi @ inert.T
+    # crf(vi, iv)
+    angf = _cross(vi[:, :3], iv[:, :3]) + _cross(vi[:, 3:], iv[:, 3:])
+    linf = _cross(vi[:, :3], iv[:, 3:])
+    fi = _quant(ia + jnp.concatenate([angf, linf], axis=1), fmt)
+    v_ref[...] = vi
+    a_ref[...] = ai
+    f_ref[...] = fi
+
+
+def rnea_step(e, r, inert, s, vp, ap, qd, qdd, fmt=None, block=BLOCK):
+    """Fused forward-pass unit: returns (v_i, a_i, f_i), each (B,6).
+
+    ``e``/``r`` are per-task joint transforms (B,3,3)/(B,3); ``inert``
+    (6,6) and ``s`` (6,) are per-joint constants; ``qd``/``qdd`` are (B,).
+    """
+    (e, b0) = _pad_batch(e, block)
+    (r, _) = _pad_batch(r, block)
+    (vp, _) = _pad_batch(vp, block)
+    (ap, _) = _pad_batch(ap, block)
+    (qd2, _) = _pad_batch(qd[:, None], block)
+    (qdd2, _) = _pad_batch(qdd[:, None], block)
+    b = e.shape[0]
+    shp = jax.ShapeDtypeStruct((b, 6), vp.dtype)
+    outs = pl.pallas_call(
+        functools.partial(_rnea_step_kernel, fmt=fmt),
+        out_shape=(shp, shp, shp),
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block, 3, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, 3), lambda i: (i, 0)),
+            pl.BlockSpec((6, 6), lambda i: (0, 0)),
+            pl.BlockSpec((1, 6), lambda i: (0, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+            pl.BlockSpec((block, 6), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(e, r, inert, s[None, :], vp, ap, qd2, qdd2)
+    return outs[0][:b0], outs[1][:b0], outs[2][:b0]

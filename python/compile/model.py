@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: batched RBD functions over a robot description,
+built on the Layer-1 Pallas kernels, lowered once by ``aot.py``.
+
+The batch dimension plays the role of the RTP task stream: each joint's
+forward/backward computation is one pipeline stage (a fused Pallas unit),
+and the (B, N) operands stream through the stages exactly as tasks stream
+through the accelerator's Uf/Ub units.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.spatial import mat6_apply, rnea_step, xmotion_apply
+from .robots import PRISMATIC, RobotArrays
+
+
+def _batched_joint_xform(rob: RobotArrays, i: int, qi):
+    """(E, r) for joint i across a batch: (B,3,3), (B,3)."""
+    axis = jnp.asarray(rob.axis[i])
+    e_tree = jnp.asarray(rob.e_tree[i])
+    r_tree = jnp.asarray(rob.r_tree[i])
+    b = qi.shape[0]
+    if int(rob.jtype[i]) == PRISMATIC:
+        ej = jnp.broadcast_to(jnp.eye(3), (b, 3, 3))
+        rj = axis[None, :] * qi[:, None]
+    else:
+        k = ref.skew(axis)
+        k2 = k @ k
+        ej = (
+            jnp.eye(3)[None, :, :]
+            - jnp.sin(qi)[:, None, None] * k[None, :, :]
+            + (1.0 - jnp.cos(qi))[:, None, None] * k2[None, :, :]
+        )
+        rj = jnp.zeros((b, 3))
+    e = jnp.einsum("bij,jk->bik", ej, e_tree)
+    r = r_tree[None, :] + jnp.einsum("ji,bj->bi", e_tree, rj)
+    return e, r
+
+
+def batched_rnea(rob: RobotArrays, q, qd, qdd, fmt=None):
+    """τ = ID(q, q̇, q̈) for a batch: all inputs (B, N) → (B, N).
+
+    Forward pass runs the fused Pallas unit per joint; the backward pass
+    uses the motion-transform kernel on force vectors (Xᵀ f implemented
+    via the transposed-transform identity).
+    """
+    n = rob.n
+    b = q.shape[0]
+    a0 = jnp.broadcast_to(
+        jnp.concatenate([jnp.zeros(3), -jnp.asarray(rob.gravity)]), (b, 6)
+    ).astype(q.dtype)
+    zeros6 = jnp.zeros((b, 6), dtype=q.dtype)
+
+    es, rs = [], []
+    v = [None] * n
+    a = [None] * n
+    f = [None] * n
+    for i in range(n):
+        e, r = _batched_joint_xform(rob, i, q[:, i])
+        es.append(e)
+        rs.append(r)
+        s = ref.motion_subspace(rob, i)
+        p = int(rob.parent[i])
+        vp = v[p] if p >= 0 else zeros6
+        ap = a[p] if p >= 0 else a0
+        vi, ai, fi = rnea_step(
+            e, r, jnp.asarray(rob.inertia[i], dtype=q.dtype), s.astype(q.dtype),
+            vp, ap, q.dtype.type(0) + qd[:, i], qdd[:, i], fmt=fmt,
+        )
+        v[i], a[i], f[i] = vi, ai, fi
+
+    tau_cols = [None] * n
+    for i in reversed(range(n)):
+        s = ref.motion_subspace(rob, i).astype(q.dtype)
+        tau_cols[i] = f[i] @ s
+        p = int(rob.parent[i])
+        if p >= 0:
+            # Force transform to parent: lin_p = Eᵀ lin, ang_p = Eᵀ ang + r×lin_p.
+            # Equivalent to the motion transform with (Eᵀ, −E r): reuse the
+            # motion kernel on the swapped halves.
+            et = jnp.swapaxes(es[i], 1, 2)
+            r_neg = -jnp.einsum("bij,bj->bi", es[i], rs[i])
+            swapped = jnp.concatenate([f[i][:, 3:], f[i][:, :3]], axis=1)
+            out = xmotion_apply(et, r_neg, swapped, fmt=fmt)
+            fp = jnp.concatenate([out[:, 3:], out[:, :3]], axis=1)
+            f[p] = f[p] + fp
+    return jnp.stack(tau_cols, axis=1)
+
+
+def batched_bias(rob: RobotArrays, q, qd, fmt=None):
+    """C(q, q̇) = RNEA(q, q̇, 0)."""
+    return batched_rnea(rob, q, qd, jnp.zeros_like(q), fmt=fmt)
+
+
+def batched_minv(rob: RobotArrays, q, fmt=None):
+    """M⁻¹(q) per batch element: (B,N) → (B,N,N), division-deferring
+    form (one vectorized reciprocal stage — see ref.minv_dd)."""
+    import jax
+
+    out = jax.vmap(lambda qi: ref.minv_dd(rob, qi))(q)
+    if fmt is not None:
+        out = ref.quantize(out, *fmt)
+    return out
+
+
+def batched_fd(rob: RobotArrays, q, qd, tau, fmt=None):
+    """q̈ = M⁻¹ · (τ − C): the paper's Eq. 2 composition, batched. The
+    final contraction is the inter-module 'glue' matvec of the FD
+    pipeline."""
+    bias = batched_bias(rob, q, qd, fmt=fmt)
+    mi = batched_minv(rob, q, fmt=fmt)
+    rhs = tau - bias
+    out = jnp.einsum("bij,bj->bi", mi, rhs)
+    if fmt is not None:
+        out = ref.quantize(out, *fmt)
+    return out
+
+
+def batched_inertia_apply(rob: RobotArrays, i: int, v, fmt=None):
+    """Expose the constant-matrix MAC kernel for tests/benches."""
+    return mat6_apply(jnp.asarray(rob.inertia[i], dtype=v.dtype), v, fmt=fmt)

@@ -1,0 +1,103 @@
+"""Robot descriptions for the compile path.
+
+Loads the JSON robot files exported by ``draco export-robots`` (the Rust
+side is the source of truth; `data/robots/*.json` is the shared format)
+into flat numpy arrays convenient for JAX tracing.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+_DATA_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "data", "robots")
+
+REVOLUTE = 0
+PRISMATIC = 1
+
+
+@dataclass
+class RobotArrays:
+    name: str
+    parent: np.ndarray  # (N,) int, -1 for base children
+    jtype: np.ndarray  # (N,) int
+    axis: np.ndarray  # (N,3)
+    e_tree: np.ndarray  # (N,3,3) fixed tree rotation (coordinate transform)
+    r_tree: np.ndarray  # (N,3)
+    inertia: np.ndarray  # (N,6,6) spatial inertia at link frame origin
+    gravity: np.ndarray  # (3,)
+
+    @property
+    def n(self) -> int:
+        return len(self.parent)
+
+    def subtree(self, i: int) -> list[int]:
+        mark = [False] * self.n
+        mark[i] = True
+        for j in range(i + 1, self.n):
+            p = int(self.parent[j])
+            if p >= 0 and mark[p]:
+                mark[j] = True
+        return [j for j in range(self.n) if mark[j]]
+
+
+def _skew(v):
+    return np.array(
+        [[0.0, -v[2], v[1]], [v[2], 0.0, -v[0]], [-v[1], v[0], 0.0]]
+    )
+
+
+def _mat6(mass: float, com: np.ndarray, i_o: np.ndarray) -> np.ndarray:
+    m = np.zeros((6, 6))
+    mcx = mass * _skew(com)
+    m[:3, :3] = i_o
+    m[:3, 3:] = mcx
+    m[3:, :3] = -mcx
+    m[3:, 3:] = mass * np.eye(3)
+    return m
+
+
+def load(name: str, data_dir: str | None = None) -> RobotArrays:
+    path = os.path.join(data_dir or _DATA_DIR, f"{name}.json")
+    with open(path) as f:
+        doc = json.load(f)
+    links = doc["links"]
+    n = len(links)
+    parent = np.zeros(n, dtype=np.int64)
+    jtype = np.zeros(n, dtype=np.int64)
+    axis = np.zeros((n, 3))
+    e_tree = np.zeros((n, 3, 3))
+    r_tree = np.zeros((n, 3))
+    inertia = np.zeros((n, 6, 6))
+    for i, l in enumerate(links):
+        parent[i] = l["parent"]
+        jtype[i] = PRISMATIC if l["joint_type"] == "prismatic" else REVOLUTE
+        axis[i] = np.asarray(l["axis"], dtype=float)
+        axis[i] /= np.linalg.norm(axis[i])
+        e_tree[i] = np.asarray(l["tree_rot"], dtype=float)
+        r_tree[i] = np.asarray(l["tree_xyz"], dtype=float)
+        inertia[i] = _mat6(
+            float(l["mass"]),
+            np.asarray(l["com"], dtype=float),
+            np.asarray(l["inertia_o"], dtype=float),
+        )
+    return RobotArrays(
+        name=doc["name"],
+        parent=parent,
+        jtype=jtype,
+        axis=axis,
+        e_tree=e_tree,
+        r_tree=r_tree,
+        inertia=inertia,
+        gravity=np.asarray(doc["gravity"], dtype=float),
+    )
+
+
+def available(data_dir: str | None = None) -> list[str]:
+    d = data_dir or _DATA_DIR
+    return sorted(
+        f[: -len(".json")] for f in os.listdir(d) if f.endswith(".json")
+    )

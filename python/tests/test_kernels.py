@@ -1,0 +1,127 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps batch sizes / seeds / Q-formats; every kernel output is
+compared against the reference composition with `assert_allclose`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import robots
+from compile.kernels import ref
+from compile.kernels.spatial import mat6_apply, rnea_step, xmotion_apply
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+ROB = robots.load("iiwa")
+
+
+def rand_rot(rng):
+    axis = rng.normal(size=3)
+    axis /= np.linalg.norm(axis)
+    return np.asarray(ref.rot_axis(jnp.asarray(axis), rng.uniform(-3, 3)))
+
+
+@given(b=st.integers(1, 70), seed=st.integers(0, 2**31 - 1))
+def test_xmotion_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    e = np.stack([rand_rot(rng) for _ in range(b)]).astype(np.float32)
+    r = rng.uniform(-1, 1, (b, 3)).astype(np.float32)
+    v = rng.uniform(-2, 2, (b, 6)).astype(np.float32)
+    got = xmotion_apply(jnp.asarray(e), jnp.asarray(r), jnp.asarray(v))
+    want = np.stack(
+        [np.asarray(ref.x_apply(e[i], r[i], v[i])) for i in range(b)]
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@given(b=st.integers(1, 70), seed=st.integers(0, 2**31 - 1))
+def test_mat6_apply_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-2, 2, (6, 6)).astype(np.float32)
+    v = rng.uniform(-2, 2, (b, 6)).astype(np.float32)
+    got = mat6_apply(jnp.asarray(m), jnp.asarray(v))
+    want = v @ m.T
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 40),
+    joint=st.integers(0, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rnea_step_matches_ref_composition(b, joint, seed):
+    rng = np.random.default_rng(seed)
+    qv = rng.uniform(-1.5, 1.5, b)
+    qd = rng.uniform(-1, 1, b).astype(np.float32)
+    qdd = rng.uniform(-1, 1, b).astype(np.float32)
+    vp = rng.uniform(-1, 1, (b, 6)).astype(np.float32)
+    ap = rng.uniform(-1, 1, (b, 6)).astype(np.float32)
+    es, rs = [], []
+    for i in range(b):
+        e, r = ref.joint_xform(ROB, joint, qv[i])
+        es.append(np.asarray(e))
+        rs.append(np.asarray(r))
+    e = np.stack(es).astype(np.float32)
+    r = np.stack(rs).astype(np.float32)
+    s = ref.motion_subspace(ROB, joint).astype(jnp.float32)
+    inert = jnp.asarray(ROB.inertia[joint], dtype=jnp.float32)
+
+    v, a, f = rnea_step(
+        jnp.asarray(e), jnp.asarray(r), inert, s,
+        jnp.asarray(vp), jnp.asarray(ap), jnp.asarray(qd), jnp.asarray(qdd),
+    )
+    for i in range(b):
+        vi = ref.x_apply(e[i], r[i], vp[i]) + s * qd[i]
+        ai = ref.x_apply(e[i], r[i], ap[i]) + s * qdd[i] + ref.crm(vi, s * qd[i])
+        fi = inert @ ai + ref.crf(vi, inert @ vi)
+        np.testing.assert_allclose(np.asarray(v[i]), np.asarray(vi), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(a[i]), np.asarray(ai), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(f[i]), np.asarray(fi), rtol=2e-4, atol=2e-3)
+
+
+@given(
+    int_bits=st.integers(6, 14),
+    frac_bits=st.integers(4, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_in_kernel_quantization_matches_ref_quantize(int_bits, frac_bits, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.uniform(-2, 2, (6, 6)).astype(np.float32)
+    v = rng.uniform(-2, 2, (8, 6)).astype(np.float32)
+    got = mat6_apply(jnp.asarray(m), jnp.asarray(v), fmt=(int_bits, frac_bits))
+    want = ref.quantize(jnp.asarray(v @ m.T), int_bits, frac_bits)
+    # The in-kernel accumulation may differ from the outside product by
+    # one f32 ulp, which can flip a rounding bin: allow one Q step.
+    step = 2.0 ** (-frac_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=step * 1.001)
+
+
+def test_quantize_error_bounded_by_eps():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(-100, 100, 1000).astype(np.float32))
+    for frac in [6, 10, 14]:
+        q = ref.quantize(x, 12, frac)
+        eps = 2.0 ** (-frac - 1)
+        assert float(jnp.max(jnp.abs(q - x))) <= eps * 1.001
+
+
+def test_quantize_saturates():
+    q = ref.quantize(jnp.asarray([1e9, -1e9]), 8, 8)
+    assert float(q[0]) <= 2.0**7
+    assert float(q[1]) >= -(2.0**7) - 2.0**-8
+
+
+@pytest.mark.parametrize("block", [8, 32])
+def test_block_size_irrelevant(block):
+    rng = np.random.default_rng(3)
+    m = rng.uniform(-1, 1, (6, 6)).astype(np.float32)
+    v = rng.uniform(-1, 1, (50, 6)).astype(np.float32)
+    a = mat6_apply(jnp.asarray(m), jnp.asarray(v), block=block)
+    b = mat6_apply(jnp.asarray(m), jnp.asarray(v), block=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)

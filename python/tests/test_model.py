@@ -1,0 +1,122 @@
+"""L2 model checks: batched JAX RBD vs the single-sample oracle, algebraic
+invariants (M⁻¹M = I, FD∘ID = identity), shapes, and the AOT text path."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model, robots
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+ROBOTS = {name: robots.load(name) for name in ["iiwa", "hyq", "baxter"]}
+
+
+def rand_state(rob, rng, b):
+    q = rng.uniform(-1.2, 1.2, (b, rob.n)).astype(np.float32)
+    qd = rng.uniform(-1, 1, (b, rob.n)).astype(np.float32)
+    qdd = rng.uniform(-1, 1, (b, rob.n)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(qd), jnp.asarray(qdd)
+
+
+@pytest.mark.parametrize("name", list(ROBOTS))
+def test_batched_rnea_matches_ref(name):
+    rob = ROBOTS[name]
+    rng = np.random.default_rng(7)
+    q, qd, qdd = rand_state(rob, rng, 5)
+    got = model.batched_rnea(rob, q, qd, qdd)
+    for i in range(5):
+        want = ref.rnea(rob, q[i], qd[i], qdd[i])
+        np.testing.assert_allclose(
+            np.asarray(got[i]), np.asarray(want), rtol=2e-3, atol=2e-3
+        )
+
+
+@pytest.mark.parametrize("name", list(ROBOTS))
+def test_minv_times_m_is_identity(name):
+    rob = ROBOTS[name]
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.uniform(-1, 1, rob.n).astype(np.float32))
+    mi = ref.minv_dd(rob, q)
+    m = ref.crba(rob, q)
+    err = float(jnp.max(jnp.abs(mi @ m - jnp.eye(rob.n))))
+    assert err < 5e-3, f"{name}: |M⁻¹M − I| = {err}"
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fd_inverts_id_iiwa(seed):
+    rob = ROBOTS["iiwa"]
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.uniform(-1, 1, rob.n).astype(np.float32))
+    qd = jnp.asarray(rng.uniform(-0.5, 0.5, rob.n).astype(np.float32))
+    qdd_in = jnp.asarray(rng.uniform(-1, 1, rob.n).astype(np.float32))
+    tau = ref.rnea(rob, q, qd, qdd_in)
+    qdd_out = ref.fd(rob, q, qd, tau)
+    np.testing.assert_allclose(
+        np.asarray(qdd_out), np.asarray(qdd_in), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_batched_fd_shapes_and_consistency():
+    rob = ROBOTS["iiwa"]
+    rng = np.random.default_rng(9)
+    q, qd, _ = rand_state(rob, rng, 4)
+    tau = jnp.asarray(rng.uniform(-5, 5, (4, rob.n)).astype(np.float32))
+    out = model.batched_fd(rob, q, qd, tau)
+    assert out.shape == (4, rob.n)
+    want = ref.fd(rob, q[0], qd[0], tau[0])
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(want), rtol=5e-3, atol=5e-3)
+
+
+def test_batched_minv_shape_and_symmetry():
+    rob = ROBOTS["iiwa"]
+    rng = np.random.default_rng(10)
+    q, _, _ = rand_state(rob, rng, 3)
+    mi = model.batched_minv(rob, q)
+    assert mi.shape == (3, rob.n, rob.n)
+    asym = float(jnp.max(jnp.abs(mi - jnp.swapaxes(mi, 1, 2))))
+    assert asym < 5e-3, f"M⁻¹ should be symmetric, asym={asym}"
+
+
+def test_quantized_model_tracks_float_at_high_precision():
+    rob = ROBOTS["iiwa"]
+    rng = np.random.default_rng(11)
+    q, qd, qdd = rand_state(rob, rng, 4)
+    exact = model.batched_rnea(rob, q, qd, qdd)
+    quant = model.batched_rnea(rob, q, qd, qdd, fmt=(14, 16))
+    np.testing.assert_allclose(np.asarray(exact), np.asarray(quant), rtol=1e-2, atol=1e-2)
+
+
+def test_quantized_model_degrades_at_coarse_precision():
+    rob = ROBOTS["iiwa"]
+    rng = np.random.default_rng(12)
+    q, qd, qdd = rand_state(rob, rng, 8)
+    exact = model.batched_rnea(rob, q, qd, qdd)
+    fine = model.batched_rnea(rob, q, qd, qdd, fmt=(12, 14))
+    coarse = model.batched_rnea(rob, q, qd, qdd, fmt=(12, 6))
+    e_fine = float(jnp.mean(jnp.abs(exact - fine)))
+    e_coarse = float(jnp.mean(jnp.abs(exact - coarse)))
+    assert e_coarse > e_fine
+
+
+def test_hlo_text_has_no_elided_constants():
+    # Regression guard for the print_large_constants pitfall: an elided
+    # `constant({...})` parses back as ZEROS in xla_extension 0.5.1.
+    from compile.aot import lower_fn
+
+    text = lower_fn(ROBOTS["iiwa"], "rnea", 4)
+    assert "constant({...})" not in text
+    assert "ENTRY" in text
+
+
+def test_aot_covers_requested_functions(tmp_path):
+    from compile.aot import lower_fn
+
+    for fn in ["rnea", "fd", "minv"]:
+        text = lower_fn(ROBOTS["iiwa"], fn, 2)
+        assert len(text) > 10_000, f"{fn}: implausibly small HLO"

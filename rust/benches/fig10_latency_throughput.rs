@@ -1,0 +1,102 @@
+//! Fig. 10 — latency and throughput of every RBD function across robots
+//! and platforms: CPU (measured on this machine), GPU (GRiD-modeled),
+//! Roboshape / Dadu-RBD / DRACO (cycle model). Also prints Table I.
+//!
+//! Protocol mirrors §V-B: latency from single-task execution, throughput
+//! from 256-task batches.
+
+use draco::accel::platforms::TABLE1;
+use draco::accel::{estimate, gpu_model, Design, RbdFn};
+use draco::dynamics::{fd, fd_derivatives, minv, rnea, rnea_derivatives};
+use draco::model::{builtin_robot, Robot, State};
+use draco::util::bench::{time_auto, Stats, Table};
+use draco::util::rng::Rng;
+use std::hint::black_box;
+
+fn measure_cpu(robot: &Robot, f: RbdFn) -> Stats {
+    let n = robot.dof();
+    let mut rng = Rng::new(5);
+    let s = State::random(robot, &mut rng);
+    let qdd = rng.vec_range(n, -2.0, 2.0);
+    let tau = rnea(robot, &s.q, &s.qd, &qdd, None);
+    let r = robot.clone();
+    match f {
+        RbdFn::Id => time_auto(40.0, move || {
+            black_box(rnea(&r, &s.q, &s.qd, &qdd, None));
+        }),
+        RbdFn::Minv => time_auto(40.0, move || {
+            black_box(minv(&r, &s.q));
+        }),
+        RbdFn::Fd => time_auto(40.0, move || {
+            black_box(fd(&r, &s.q, &s.qd, &tau, None));
+        }),
+        RbdFn::DeltaId => time_auto(40.0, move || {
+            black_box(rnea_derivatives(&r, &s.q, &s.qd, &qdd));
+        }),
+        RbdFn::DeltaFd => time_auto(40.0, move || {
+            black_box(fd_derivatives(&r, &s.q, &s.qd, &tau));
+        }),
+    }
+}
+
+fn main() {
+    // Table I.
+    let mut t1 = Table::new(&["type", "platform", "freq", "evaluated in"]);
+    for p in TABLE1 {
+        t1.row(&[
+            p.kind.to_string(),
+            p.name.to_string(),
+            format!("{:.0}M", p.freq_hz / 1e6),
+            p.evaluated_in.to_string(),
+        ]);
+    }
+    t1.print("Table I — hardware configurations");
+
+    for name in ["iiwa", "hyq", "atlas", "baxter"] {
+        let robot = builtin_robot(name).unwrap();
+        let mut t = Table::new(&["fn", "platform", "latency(us)", "tput(tasks/s)"]);
+        let fns: &[RbdFn] = if name == "baxter" {
+            &[RbdFn::DeltaFd] // paper: Baxter is only reported for ΔFD
+        } else {
+            &RbdFn::ALL
+        };
+        for &f in fns {
+            let cpu = measure_cpu(&robot, f);
+            t.row(&[
+                f.name().into(),
+                "cpu (measured)".into(),
+                format!("{:.2}", cpu.median_us()),
+                format!("{:.3e}", cpu.throughput(1)),
+            ]);
+            let g = gpu_model(&robot, f);
+            t.row(&[
+                f.name().into(),
+                "gpu-grid (model)".into(),
+                format!("{:.2}", g.latency_us),
+                format!("{:.3e}", g.throughput),
+            ]);
+            for d in [Design::roboshape(&robot), Design::dadu_rbd(&robot), Design::draco(&robot)]
+            {
+                let p = estimate(&d, &robot, f);
+                t.row(&[
+                    f.name().into(),
+                    d.name.into(),
+                    format!("{:.2}", p.latency_us),
+                    format!("{:.3e}", p.throughput),
+                ]);
+            }
+            // Paper headline ratios (DRACO vs Dadu-RBD).
+            let a = estimate(&Design::draco(&robot), &robot, f);
+            let b = estimate(&Design::dadu_rbd(&robot), &robot, f);
+            t.row(&[
+                f.name().into(),
+                "→ draco/dadu".into(),
+                format!("{:.2}x", b.latency_us / a.latency_us),
+                format!("{:.2}x", a.throughput / b.throughput),
+            ]);
+        }
+        t.print(&format!("Fig 10 — {name}"));
+    }
+    println!("\npaper bands: throughput +2.2–8x, latency −2.3–7.4x vs Dadu-RBD;");
+    println!("latency −1.1–2.6x vs Roboshape. Shapes (who wins, rough factor) should match.");
+}

@@ -1,0 +1,40 @@
+//! Fig. 11 — normalized performance per DSP: (a) ΔFD throughput / DSP
+//! (DRACO vs Dadu-RBD), (b) latency × DSP (DRACO vs Roboshape). Paper
+//! bands: 4.2–5.8× higher throughput/DSP; 0.71–0.86× latency·DSP.
+
+use draco::accel::{estimate, Design, RbdFn};
+use draco::model::builtin_robot;
+use draco::util::bench::Table;
+
+fn main() {
+    let mut ta = Table::new(&["robot", "design", "tput/DSP", "vs dadu"]);
+    for name in ["iiwa", "hyq", "atlas"] {
+        let robot = builtin_robot(name).unwrap();
+        let draco = estimate(&Design::draco(&robot), &robot, RbdFn::DeltaFd);
+        let dadu = estimate(&Design::dadu_rbd(&robot), &robot, RbdFn::DeltaFd);
+        // Normalize by the chip's DSP budget (what Table II reports),
+        // not just the momentarily-active slices.
+        let d_eff = draco.throughput / Design::draco(&robot).dsp_budget as f64;
+        let b_eff = dadu.throughput / Design::dadu_rbd(&robot).dsp_budget as f64;
+        ta.row(&[name.into(), "dadu-rbd".into(), format!("{b_eff:.1}"), "1.00x".into()]);
+        ta.row(&[
+            name.into(),
+            "draco".into(),
+            format!("{d_eff:.1}"),
+            format!("{:.2}x", d_eff / b_eff),
+        ]);
+    }
+    ta.print("Fig 11(a) — ΔFD throughput per DSP (paper: 4.2–5.8x)");
+
+    let mut tb = Table::new(&["robot", "design", "lat*DSP", "draco/roboshape"]);
+    for name in ["iiwa", "hyq"] {
+        let robot = builtin_robot(name).unwrap();
+        let draco = estimate(&Design::draco(&robot), &robot, RbdFn::DeltaFd);
+        let rs = estimate(&Design::roboshape(&robot), &robot, RbdFn::DeltaFd);
+        let d = draco.latency_us * Design::draco(&robot).dsp_budget as f64;
+        let r = rs.latency_us * Design::roboshape(&robot).dsp_budget as f64;
+        tb.row(&[name.into(), "roboshape".into(), format!("{r:.0}"), "1.00x".into()]);
+        tb.row(&[name.into(), "draco".into(), format!("{d:.0}"), format!("{:.2}x", d / r)]);
+    }
+    tb.print("Fig 11(b) — ΔFD latency × DSP (paper: 0.71–0.86x, lower is better)");
+}

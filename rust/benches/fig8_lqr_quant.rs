@@ -1,0 +1,72 @@
+//! Fig. 8 — quantization effects under LQR and MPC on the iiwa:
+//! (a) dynamics-derivative error after quantization,
+//! (b) control-torque output difference,
+//! (c) end-effector trajectory error,
+//! (d) MPC optimization-cost comparison,
+//! (e) MPC end-effector 3-D trajectory deviation.
+//!
+//! Paper shape: LQR/MPC are tolerant — trajectory deviations < 0.01 mm
+//! (LQR) and < 0.02 mm (MPC at 9-bit frac) despite visible effects on
+//! internal quantities.
+
+use draco::control::backend::RbdBackend;
+use draco::model::{builtin_robot, State};
+use draco::quant::QFormat;
+use draco::sim::icms::{compare_runs, run_closed_loop, ControllerKind, IcmsConfig};
+use draco::util::bench::Table;
+use draco::util::rng::Rng;
+
+fn main() {
+    let robot = builtin_robot("iiwa").unwrap();
+    // Controller-specific searched formats (§V-A): LQR 10-bit frac,
+    // MPC 9-bit frac.
+    let lqr_fmt = QFormat::new(12, 10);
+    let mpc_fmt = QFormat::new(12, 9);
+
+    // ---- (a) dynamics derivative error
+    let mut rng = Rng::new(60);
+    let s = State::random(&robot, &mut rng);
+    let tau = rng.vec_range(robot.dof(), -5.0, 5.0);
+    let (dq_e, dqd_e, _) = RbdBackend::Exact.fd_derivatives(&robot, &s.q, &s.qd, &tau);
+    let (dq_q, dqd_q, _) =
+        RbdBackend::Quantized(lqr_fmt).fd_derivatives(&robot, &s.q, &s.qd, &tau);
+    println!("== Fig 8(a) — ΔFD quantization error (LQR format {}) ==", lqr_fmt.label());
+    println!(
+        "‖δ(∂q̈/∂q)‖F = {:.4}  (rel {:.2e}), ‖δ(∂q̈/∂q̇)‖F = {:.4}",
+        dq_e.sub(&dq_q).frobenius(),
+        dq_e.sub(&dq_q).frobenius() / dq_e.frobenius(),
+        dqd_e.sub(&dqd_q).frobenius()
+    );
+
+    // ---- (b)(c) closed-loop LQR comparison
+    let mut cfg = IcmsConfig::default_for(&robot, ControllerKind::Lqr);
+    cfg.steps = 1200;
+    let float_run = run_closed_loop(&robot, &cfg, RbdBackend::Exact);
+    let quant_run = run_closed_loop(&robot, &cfg, RbdBackend::Quantized(lqr_fmt));
+    let m = compare_runs(&float_run, &quant_run);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["max ‖Δτ‖ [Nm]".into(), format!("{:.4}", m.torque_diff_max)]);
+    t.row(&["mean ‖Δτ‖ [Nm]".into(), format!("{:.4}", m.torque_diff_mean)]);
+    t.row(&["max EE deviation [mm]".into(), format!("{:.4}", m.traj_err_max * 1e3)]);
+    t.row(&["mean EE deviation [mm]".into(), format!("{:.4}", m.traj_err_mean * 1e3)]);
+    t.print("Fig 8(b,c) — LQR torque & trajectory deviation (paper: traj < 0.01 mm)");
+
+    // ---- (d)(e) MPC cost + trajectory
+    let mut cfg = IcmsConfig::default_for(&robot, ControllerKind::Mpc);
+    cfg.steps = 300;
+    let float_run = run_closed_loop(&robot, &cfg, RbdBackend::Exact);
+    let quant_run = run_closed_loop(&robot, &cfg, RbdBackend::Quantized(mpc_fmt));
+    let m = compare_runs(&float_run, &quant_run);
+    println!("\n== Fig 8(d,e) — MPC ({}) ==", mpc_fmt.label());
+    println!("max EE deviation: {:.4} mm (paper: < 0.02 mm at 9-bit frac)", m.traj_err_max * 1e3);
+    // 3-D trajectory sample (decimated) for the (e)-style series.
+    println!("EE path (float vs quant), every 60th step:");
+    for k in (0..float_run.ee.len()).step_by(60) {
+        let a = float_run.ee[k];
+        let b = quant_run.ee[k];
+        println!(
+            "  t={:.2}s  float ({:+.4},{:+.4},{:+.4})  quant ({:+.4},{:+.4},{:+.4})",
+            float_run.t[k], a[0], a[1], a[2], b[0], b[1], b[2]
+        );
+    }
+}

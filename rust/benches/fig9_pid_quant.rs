@@ -1,0 +1,71 @@
+//! Fig. 9 — PID with dynamics compensation under different quantization
+//! settings: temporal evolution of (a) the second joint's posture
+//! difference and (b) the end-effector trajectory difference, float vs
+//! quantized control of a reach-and-hold task.
+//!
+//! Paper shape: PID is the most sensitive controller; errors stay small
+//! during the large correction phase and accumulate near convergence —
+//! 8-bit frac exceeds 1 mm near the target; 12/16-bit stay adequate.
+
+use draco::control::backend::RbdBackend;
+use draco::model::builtin_robot;
+use draco::quant::QFormat;
+use draco::sim::icms::{compare_runs, run_closed_loop, ControllerKind, IcmsConfig};
+use draco::sim::traj::Trajectory;
+use draco::util::bench::Table;
+
+fn main() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let mut cfg = IcmsConfig::default_for(&robot, ControllerKind::Pid);
+    cfg.steps = 2500;
+    cfg.traj = Trajectory::reach(&robot, 0.4, 1.2);
+
+    let float_run = run_closed_loop(&robot, &cfg, RbdBackend::Exact);
+
+    let formats = [
+        ("16-frac", QFormat::new(12, 16)),
+        ("12-frac", QFormat::new(12, 12)),
+        ("8-frac", QFormat::new(12, 8)),
+        ("6-frac", QFormat::new(12, 6)),
+    ];
+
+    let mut summary = Table::new(&["format", "max EE diff (mm)", "final EE diff (mm)", "final j2 diff (rad)"]);
+    let mut series: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
+    for (label, fmt) in formats {
+        let quant_run = run_closed_loop(&robot, &cfg, RbdBackend::Quantized(fmt));
+        let m = compare_runs(&float_run, &quant_run);
+        // Joint-2 posture difference over time.
+        let j2: Vec<f64> = float_run
+            .q
+            .iter()
+            .zip(&quant_run.q)
+            .map(|(a, b)| (a[1] - b[1]).abs())
+            .collect();
+        summary.row(&[
+            label.into(),
+            format!("{:.4}", m.traj_err_max * 1e3),
+            format!("{:.4}", m.ee_diff.last().unwrap() * 1e3),
+            format!("{:.2e}", j2.last().unwrap()),
+        ]);
+        series.push((label.into(), m.ee_diff.clone(), j2));
+    }
+    summary.print("Fig 9 — PID quantization sensitivity (reach-and-hold, iiwa)");
+
+    println!("\ntemporal series (EE diff [mm], every 250 steps):");
+    print!("{:>8}", "t[s]");
+    for (l, _, _) in &series {
+        print!("{l:>10}");
+    }
+    println!();
+    for k in (0..cfg.steps).step_by(250) {
+        print!("{:>8.2}", k as f64 * cfg.dt);
+        for (_, ee, _) in &series {
+            print!("{:>10.4}", ee[k] * 1e3);
+        }
+        println!();
+    }
+    println!(
+        "\n(paper shape: coarser fractional bits → larger, accumulating deviation;\n\
+         errors grow in the fine-convergence phase)"
+    );
+}

@@ -1,0 +1,78 @@
+//! CPU hot-path microbenchmarks: wall-clock cost of every RBD function on
+//! this machine (single thread). These are the *measured* CPU baseline
+//! rows feeding Fig. 10/13, and the profile target of the perf pass
+//! (EXPERIMENTS.md §Perf).
+
+use draco::dynamics::{aba, crba, fd, minv, minv_dd, rnea, rnea_derivatives};
+use draco::model::{builtin_robot, State};
+use draco::util::bench::{time_auto, Table};
+use draco::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let mut t = Table::new(&["robot", "fn", "median(us)", "mean(us)", "tasks/s"]);
+    for name in ["iiwa", "hyq", "atlas", "baxter"] {
+        let robot = builtin_robot(name).unwrap();
+        let n = robot.dof();
+        let mut rng = Rng::new(1);
+        let s = State::random(&robot, &mut rng);
+        let qdd = rng.vec_range(n, -2.0, 2.0);
+        let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+
+        let cases: Vec<(&str, Box<dyn FnMut()>)> = vec![
+            ("rnea", {
+                let (r, s, q) = (robot.clone(), s.clone(), qdd.clone());
+                Box::new(move || {
+                    black_box(rnea(&r, &s.q, &s.qd, &q, None));
+                })
+            }),
+            ("crba", {
+                let (r, s) = (robot.clone(), s.clone());
+                Box::new(move || {
+                    black_box(crba(&r, &s.q));
+                })
+            }),
+            ("minv", {
+                let (r, s) = (robot.clone(), s.clone());
+                Box::new(move || {
+                    black_box(minv(&r, &s.q));
+                })
+            }),
+            ("minv_dd", {
+                let (r, s) = (robot.clone(), s.clone());
+                Box::new(move || {
+                    black_box(minv_dd(&r, &s.q));
+                })
+            }),
+            ("fd", {
+                let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
+                Box::new(move || {
+                    black_box(fd(&r, &s.q, &s.qd, &tt, None));
+                })
+            }),
+            ("aba", {
+                let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
+                Box::new(move || {
+                    black_box(aba(&r, &s.q, &s.qd, &tt, None));
+                })
+            }),
+            ("drnea", {
+                let (r, s, q) = (robot.clone(), s.clone(), qdd.clone());
+                Box::new(move || {
+                    black_box(rnea_derivatives(&r, &s.q, &s.qd, &q));
+                })
+            }),
+        ];
+        for (fname, mut f) in cases {
+            let st = time_auto(60.0, &mut f);
+            t.row(&[
+                name.to_string(),
+                fname.to_string(),
+                format!("{:.2}", st.median_us()),
+                format!("{:.2}", st.mean_us()),
+                format!("{:.0}", st.throughput(1)),
+            ]);
+        }
+    }
+    t.print("CPU hot paths (measured, single thread)");
+}

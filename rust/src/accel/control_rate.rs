@@ -1,0 +1,120 @@
+//! Estimated control-rate model (Fig. 13), following the analytical model
+//! of Robomorphic [39]: one MPC control step runs `iters` optimization
+//! iterations, each sweeping the trajectory of `traj_len` time steps
+//! through FD and ΔFD (plus a fixed QP/bookkeeping overhead per step).
+//! RBD is ~90% of the controller runtime, so the achievable control rate
+//! is set by how fast the accelerator streams those batched tasks.
+
+use super::designs::{Design, RbdFn};
+use super::perf::{estimate, FnPerf};
+use crate::model::Robot;
+
+/// Per-task times [µs] for a platform serving FD and ΔFD.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformTimes {
+    /// Pipeline fill / call latency [µs].
+    pub fd_latency_us: f64,
+    pub dfd_latency_us: f64,
+    /// Marginal per-task time at saturation [µs] (1/throughput).
+    pub fd_per_task_us: f64,
+    pub dfd_per_task_us: f64,
+}
+
+impl PlatformTimes {
+    pub fn from_design(design: &Design, robot: &Robot) -> PlatformTimes {
+        let fd: FnPerf = estimate(design, robot, RbdFn::Fd);
+        let dfd: FnPerf = estimate(design, robot, RbdFn::DeltaFd);
+        PlatformTimes {
+            fd_latency_us: fd.latency_us,
+            dfd_latency_us: dfd.latency_us,
+            fd_per_task_us: 1e6 / fd.throughput,
+            dfd_per_task_us: 1e6 / dfd.throughput,
+        }
+    }
+
+    /// CPU single-thread times (measured by the bench harness; defaults
+    /// here follow [50]-style analytical-derivative implementations).
+    pub fn cpu_default(robot: &Robot) -> PlatformTimes {
+        let n = robot.dof() as f64;
+        PlatformTimes {
+            fd_latency_us: 0.55 * n,
+            dfd_latency_us: 2.6 * n,
+            fd_per_task_us: 0.55 * n,
+            dfd_per_task_us: 2.6 * n,
+        }
+    }
+}
+
+/// Time for one MPC control step [µs]: `iters` sweeps over the horizon,
+/// each streaming `traj_len` FD and ΔFD tasks, plus per-iteration QP
+/// overhead (line search + gains), overlapped on the accelerator but
+/// serial on a CPU.
+pub fn mpc_step_time_us(times: &PlatformTimes, traj_len: usize, iters: usize) -> f64 {
+    let t = traj_len as f64;
+    let per_iter = times.fd_latency_us
+        + times.dfd_latency_us
+        + (t - 1.0).max(0.0) * (times.fd_per_task_us + times.dfd_per_task_us)
+        + 8.0; // QP/backward-pass overhead per iteration [µs]
+    iters as f64 * per_iter
+}
+
+/// Estimated control rate [Hz].
+pub fn control_rate_hz(times: &PlatformTimes, traj_len: usize, iters: usize) -> f64 {
+    1e6 / mpc_step_time_us(times, traj_len, iters)
+}
+
+/// Max trajectory length sustaining `target_hz` (the paper's "54 time
+/// steps at 250 Hz for Atlas" style number).
+pub fn max_traj_len(times: &PlatformTimes, target_hz: f64, iters: usize) -> usize {
+    let mut t = 1;
+    while t < 4096 && control_rate_hz(times, t + 1, iters) >= target_hz {
+        t += 1;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn rate_decreases_with_horizon() {
+        let robot = builtin::iiwa();
+        let d = Design::draco(&robot);
+        let times = PlatformTimes::from_design(&d, &robot);
+        let r10 = control_rate_hz(&times, 10, 10);
+        let r50 = control_rate_hz(&times, 50, 10);
+        assert!(r10 > r50);
+    }
+
+    /// Fig. 13 shape: DRACO sustains longer horizons than Dadu-RBD at the
+    /// same target rate, and both beat the CPU.
+    #[test]
+    fn horizon_ordering_at_250hz() {
+        let robot = builtin::atlas();
+        let draco = PlatformTimes::from_design(&Design::draco(&robot), &robot);
+        let dadu = PlatformTimes::from_design(&Design::dadu_rbd_on_v80(&robot), &robot);
+        let cpu = PlatformTimes::cpu_default(&robot);
+        let h_draco = max_traj_len(&draco, 250.0, 10);
+        let h_dadu = max_traj_len(&dadu, 250.0, 10);
+        let h_cpu = max_traj_len(&cpu, 250.0, 10);
+        assert!(
+            h_draco > h_dadu && h_dadu > h_cpu,
+            "horizons: draco {h_draco} > dadu {h_dadu} > cpu {h_cpu}"
+        );
+    }
+
+    /// The paper's headline: Atlas fails 1 kHz direct MPC on the
+    /// baselines for long horizons, DRACO extends the feasible region.
+    #[test]
+    fn iiwa_reaches_1khz_for_short_horizons() {
+        let robot = builtin::iiwa();
+        let draco = PlatformTimes::from_design(&Design::draco(&robot), &robot);
+        assert!(
+            control_rate_hz(&draco, 10, 10) > 1000.0,
+            "iiwa @ 10 steps must exceed 1 kHz: {}",
+            control_rate_hz(&draco, 10, 10)
+        );
+    }
+}

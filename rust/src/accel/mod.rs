@@ -1,0 +1,18 @@
+//! FPGA accelerator cycle model — the substitution for real Alveo
+//! V80/U50 hardware (see DESIGN.md): Round-Trip-Pipeline modules with
+//! MAC/DSP/II accounting, divider models (inline vs division-deferring
+//! shared divider), inter-module DSP reuse, resource/power estimation,
+//! and the Fig. 13 control-rate model.
+
+pub mod control_rate;
+pub mod designs;
+pub mod ops;
+pub mod perf;
+pub mod pipeline;
+pub mod platforms;
+pub mod resources;
+pub mod reuse;
+
+pub use designs::{BasicModule, Design, RbdFn};
+pub use perf::{estimate, gpu_model, FnPerf};
+pub use reuse::reuse_report;

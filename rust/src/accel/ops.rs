@@ -1,0 +1,175 @@
+//! Operation-count model: MACs (and reciprocals) per pipeline unit,
+//! derived from the structure of the *executable* algorithms in
+//! [`crate::dynamics`]. These counts drive II/latency/DSP numbers in the
+//! cycle model, so the figures inherit the real workload shape
+//! (tip-heavy ΔRNEA units, subtree-heavy Minv backward units, …).
+
+use crate::model::Robot;
+
+/// Dense-op MAC costs for the spatial primitives (multiply-accumulate
+/// pairs; adds ride along with the MACs in DSP slices).
+pub mod cost {
+    /// Apply a Plücker transform to a motion/force vector:
+    /// two 3×3 mat-vecs (18) + one cross product (6).
+    pub const X_APPLY: u64 = 24;
+    /// v × m or v ×* f: two cross products.
+    pub const CROSS: u64 = 12;
+    /// Spatial inertia times motion vector (symmetric 6×6, CoM form):
+    /// 3×3 matvec (9) + 2 crosses (12) + scale (3).
+    pub const I_APPLY: u64 = 24;
+    /// Dense 6-vector dot product.
+    pub const DOT6: u64 = 6;
+    /// Rank-1 update U·Uᵀ on a symmetric 6×6 (upper triangle).
+    pub const OUTER6_SYM: u64 = 21;
+    /// Congruence transform Xᵀ·A·X of a symmetric 6×6 exploiting the
+    /// Plücker block structure (two block products @ ~108 each).
+    pub const CONGRUENCE6: u64 = 216;
+    /// Scalar × symmetric 6×6.
+    pub const SCALE6_SYM: u64 = 21;
+    /// jcalc: sin/cos via CORDIC/LUT + building E (counted as MACs).
+    pub const JCALC: u64 = 16;
+}
+
+/// Per-unit op counts for one pipeline stage (one joint, one direction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UnitOps {
+    pub macs: u64,
+    /// Reciprocal/divide operations executed by this unit *inline*.
+    pub divs: u64,
+}
+
+/// RNEA forward unit (Uf_i): v, a, f updates.
+pub fn rnea_fwd(_robot: &Robot, _i: usize) -> UnitOps {
+    let macs = cost::JCALC          // joint transform
+        + cost::X_APPLY             // X v_λ
+        + cost::CROSS               // v × S q̇
+        + cost::X_APPLY             // X a_λ
+        + cost::I_APPLY             // I a
+        + cost::I_APPLY             // I v
+        + cost::CROSS;              // v ×* (I v)
+    UnitOps { macs, divs: 0 }
+}
+
+/// RNEA backward unit (Ub_i): τ projection + force propagation.
+pub fn rnea_bwd(_robot: &Robot, _i: usize) -> UnitOps {
+    UnitOps { macs: cost::DOT6 + cost::X_APPLY, divs: 0 }
+}
+
+/// Minv backward unit (Mb_i). `deferred` selects the division-deferring
+/// formulation: the reciprocal leaves the unit (handled by the shared
+/// divider) at the price of the extra holding-factor multiplies
+/// (purple box of Algorithm 2).
+pub fn minv_bwd(robot: &Robot, i: usize, deferred: bool) -> UnitOps {
+    let cols = robot.subtree(i).len() as u64;
+    let mut macs = cost::I_APPLY          // U = IA S (column gather + mac)
+        + cost::DOT6                      // D = Sᵀ U
+        + cost::OUTER6_SYM                // U Uᵀ
+        + cost::SCALE6_SYM                // (1/D)·UUᵀ  or D·IA
+        + cost::CONGRUENCE6               // Xᵀ (…) X
+        + cols * (cost::DOT6 + cost::DOT6 + cost::X_APPLY); // row + F prop
+    let divs = if deferred {
+        // Holding-factor multiplies: D·IA (symmetric scale) and D·F per
+        // column; reciprocal exported to the shared divider.
+        macs += cost::SCALE6_SYM + cols * cost::DOT6;
+        0
+    } else {
+        1
+    };
+    UnitOps { macs, divs }
+}
+
+/// Minv forward unit (Mf_i): acceleration propagation per column.
+pub fn minv_fwd(robot: &Robot, i: usize) -> UnitOps {
+    let cols = robot.subtree(i).len().max(1) as u64;
+    UnitOps {
+        macs: cols * (cost::X_APPLY + cost::DOT6 + cost::DOT6),
+        divs: 0,
+    }
+}
+
+/// ΔRNEA forward unit (Df_i): tangent propagation. Work scales with the
+/// number of differentiation directions that reach joint i — its ancestor
+/// path — making tip units heavier (paper §IV-B, [38]).
+pub fn drnea_fwd(robot: &Robot, i: usize) -> UnitOps {
+    let dirs = (robot.depth(i) + 1) as u64 * 2; // ∂q and ∂q̇ sweeps
+    UnitOps {
+        macs: dirs * (cost::X_APPLY + cost::CROSS + cost::I_APPLY + cost::CROSS),
+        divs: 0,
+    }
+}
+
+/// ΔRNEA backward unit (Db_i).
+pub fn drnea_bwd(robot: &Robot, i: usize) -> UnitOps {
+    let dirs = (robot.depth(i) + 1) as u64 * 2;
+    UnitOps { macs: dirs * (cost::DOT6 + cost::X_APPLY + cost::CROSS / 2), divs: 0 }
+}
+
+/// Total MACs of a whole module (all units, fwd+bwd).
+pub fn module_total_macs(units: &[UnitOps]) -> u64 {
+    units.iter().map(|u| u.macs).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn minv_units_subtree_heavy_at_base() {
+        let r = builtin::iiwa();
+        // Chain: base joint sees the full subtree → heaviest Mb unit.
+        let base = minv_bwd(&r, 0, false).macs;
+        let tip = minv_bwd(&r, r.dof() - 1, false).macs;
+        assert!(base > tip, "base {base} vs tip {tip}");
+    }
+
+    #[test]
+    fn drnea_units_tip_heavy() {
+        let r = builtin::iiwa();
+        let tip = drnea_fwd(&r, r.dof() - 1).macs;
+        let base = drnea_fwd(&r, 0).macs;
+        assert!(tip > base, "ΔRNEA tip units must be heavier (paper §IV-B)");
+    }
+
+    #[test]
+    fn deferring_trades_div_for_macs() {
+        let r = builtin::iiwa();
+        for i in 0..r.dof() {
+            let orig = minv_bwd(&r, i, false);
+            let dd = minv_bwd(&r, i, true);
+            assert_eq!(orig.divs, 1);
+            assert_eq!(dd.divs, 0);
+            assert!(dd.macs > orig.macs, "holding factors cost extra MACs");
+            // "minimal DSP overhead": < 15% extra.
+            assert!((dd.macs as f64) < orig.macs as f64 * 1.15);
+        }
+    }
+
+    #[test]
+    fn rnea_unit_costs_constant_across_joints() {
+        let r = builtin::atlas();
+        let u0 = rnea_fwd(&r, 0);
+        for i in 1..r.dof() {
+            assert_eq!(rnea_fwd(&r, i), u0);
+        }
+    }
+
+    #[test]
+    fn atlas_heavier_than_iiwa_overall() {
+        let iiwa = builtin::iiwa();
+        let atlas = builtin::atlas();
+        let total = |r: &crate::model::Robot| -> u64 {
+            (0..r.dof())
+                .map(|i| {
+                    rnea_fwd(r, i).macs
+                        + rnea_bwd(r, i).macs
+                        + minv_bwd(r, i, false).macs
+                        + minv_fwd(r, i).macs
+                        + drnea_fwd(r, i).macs
+                        + drnea_bwd(r, i).macs
+                })
+                .sum()
+        };
+        assert!(total(&atlas) > 3 * total(&iiwa));
+    }
+}

@@ -1,0 +1,258 @@
+//! Function-level performance estimation: latency and throughput of each
+//! RBD function under a design point, including composite functions
+//! (FD/ΔID/ΔFD) and the dynamic module-activation / DSP-donation rules of
+//! inter-module reuse (Fig. 7(c)).
+
+use super::designs::{BasicModule, Design, RbdFn};
+use super::ops;
+use super::pipeline::{DividerModel, Module, Stage};
+use crate::model::Robot;
+
+/// Estimated performance of one function on one design.
+#[derive(Debug, Clone)]
+pub struct FnPerf {
+    pub design: &'static str,
+    pub function: RbdFn,
+    /// Single-task latency [µs].
+    pub latency_us: f64,
+    /// Saturated throughput [tasks/s].
+    pub throughput: f64,
+    /// Time to process a batch of `b` tasks [µs] (reported for b=256).
+    pub batch256_us: f64,
+    /// DSPs active while this function runs.
+    pub dsp_active: u64,
+}
+
+/// Engine split across *active* modules. Without reuse the split is the
+/// static proportional one (idle modules' DSPs sit idle); with reuse the
+/// shared groups are donated to the active set (Fig. 7(c)).
+fn active_split(design: &Design, robot: &Robot, func: RbdFn) -> Vec<(BasicModule, u64)> {
+    let active = func.modules();
+    let full = design.engine_split(robot);
+    // Static multi-function split (Dadu-RBD): idle modules' DSPs idle.
+    // Reuse (DRACO) redistributes through the shared groups; Roboshape
+    // builds one dedicated accelerator per function, so the whole budget
+    // serves the active set in both of those cases.
+    if !design.reuse && !design.latency_first {
+        return full.into_iter().filter(|(m, _)| active.contains(m)).collect();
+    }
+    let totals: Vec<(BasicModule, u64)> = active
+        .iter()
+        .map(|&m| (m, ops::module_total_macs(&design.module_units(robot, m))))
+        .collect();
+    let grand: u64 = totals.iter().map(|(_, t)| t).sum();
+    let budget = design.engine_budget();
+    totals
+        .into_iter()
+        .map(|(m, t)| (m, (budget as f64 * t as f64 / grand as f64).max(2.0) as u64))
+        .collect()
+}
+
+/// Build the active modules with their (possibly donated) engine shares.
+fn active_modules(design: &Design, robot: &Robot, func: RbdFn) -> Vec<Module> {
+    active_split(design, robot, func)
+        .into_iter()
+        .map(|(m, share)| {
+            let units = design.module_units(robot, m);
+            let alloc = super::designs::latency_first_alloc(
+                &units,
+                share,
+                design.latency_first,
+                design.engine_cap,
+            );
+            let stages: Vec<Stage> =
+                units.into_iter().zip(alloc).map(|(ops, dsps)| Stage { ops, dsps }).collect();
+            let divider = match m {
+                BasicModule::Minv => design.divider,
+                _ => DividerModel::None,
+            };
+            Module {
+                name: format!("{}/{}", design.name, m.name()),
+                stages,
+                divider,
+                freq_hz: design.freq_hz,
+                stage_overhead: design.stage_overhead,
+            }
+        })
+        .collect()
+}
+
+/// Glue stage for composites: FD multiplies M⁻¹·(τ−C) (N² MACs); ΔFD
+/// multiplies M⁻¹·ΔID over 2N columns (2N³ MACs). Modeled as one extra
+/// pipeline stage with a 10% engine share.
+fn glue_ops(robot: &Robot, func: RbdFn) -> u64 {
+    let n = robot.dof() as u64;
+    match func {
+        RbdFn::Fd => n * n,
+        RbdFn::DeltaFd => 2 * n * n * n,
+        _ => 0,
+    }
+}
+
+/// Estimate one (design, robot, function) point.
+pub fn estimate(design: &Design, robot: &Robot, func: RbdFn) -> FnPerf {
+    let modules = active_modules(design, robot, func);
+    let glue = glue_ops(robot, func);
+    let glue_engines = (design.engine_budget() / 10).max(1);
+    let glue_ii = glue.div_ceil(glue_engines).max(1);
+    let glue_latency = glue_ii + 4; // + adder tree depth
+
+    let (ii, mut latency_cycles) = if design.latency_first {
+        // Roboshape executes one task at a time on dual cores: no
+        // cross-task pipelining. Effective II is the whole latency / 2.
+        let lat: u64 = modules.iter().map(Module::latency_cycles).sum::<u64>()
+            + if glue > 0 { glue_latency } else { 0 };
+        (lat / 2, lat)
+    } else {
+        let ii = modules
+            .iter()
+            .map(Module::ii)
+            .chain(if glue > 0 { Some(glue_ii) } else { None })
+            .max()
+            .unwrap_or(1);
+        let lat: u64 = modules.iter().map(Module::latency_cycles).sum::<u64>()
+            + if glue > 0 { glue_latency } else { 0 };
+        (ii, lat)
+    };
+    // Composite dataflow: modules chain through FIFOs (RNEA feeds Minv
+    // etc.), already summed; add one hop per junction.
+    latency_cycles += (modules.len() as u64 - 1) * 2;
+
+    let dsp_active: u64 = modules.iter().map(Module::total_dsps).sum::<u64>()
+        * design.dsp_per_mac()
+        + if glue > 0 { glue_engines * design.dsp_per_mac() } else { 0 };
+
+    let latency_us = latency_cycles as f64 / design.freq_hz * 1e6;
+    let throughput = design.freq_hz / ii as f64;
+    let batch256_us = (latency_cycles + 255 * ii) as f64 / design.freq_hz * 1e6;
+    FnPerf {
+        design: design.name,
+        function: func,
+        latency_us,
+        throughput,
+        batch256_us,
+        dsp_active,
+    }
+}
+
+/// CPU/GPU baseline models. The CPU numbers are *measured* on this
+/// machine by the bench harness and passed in; the GPU numbers are
+/// modeled from GRiD's published characteristics (high batch throughput,
+/// poor single-task response; see DESIGN.md Substitutions).
+pub fn gpu_model(robot: &Robot, func: RbdFn) -> FnPerf {
+    let n = robot.dof() as f64;
+    // Kernel-launch dominated latency + per-joint work; batch hides it.
+    let latency_us = 160.0 + 1.5 * n;
+    let per_task_us = match func {
+        RbdFn::Id => 0.012 * n,
+        RbdFn::Minv => 0.03 * n,
+        RbdFn::Fd => 0.045 * n,
+        RbdFn::DeltaId => 0.05 * n,
+        RbdFn::DeltaFd => 0.08 * n,
+    };
+    let batch256_us = latency_us + 256.0 * per_task_us;
+    FnPerf {
+        design: "gpu-grid",
+        function: func,
+        latency_us,
+        throughput: 256.0 / (batch256_us * 1e-6),
+        batch256_us,
+        dsp_active: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn draco_beats_dadu_on_every_function() {
+        // Fig. 10 headline: 2.2–8× throughput, 2.3–7.4× latency across
+        // functions/robots. Check the ordering and the broad band.
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas()] {
+            let draco = Design::draco(&robot);
+            let dadu = Design::dadu_rbd(&robot);
+            for f in RbdFn::ALL {
+                let a = estimate(&draco, &robot, f);
+                let b = estimate(&dadu, &robot, f);
+                let tput = a.throughput / b.throughput;
+                let lat = b.latency_us / a.latency_us;
+                assert!(
+                    tput > 1.5 && tput < 30.0,
+                    "{} {}: throughput ratio {tput:.2}",
+                    robot.name,
+                    f.name()
+                );
+                assert!(
+                    lat > 1.2 && lat < 30.0,
+                    "{} {}: latency ratio {lat:.2}",
+                    robot.name,
+                    f.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roboshape_latency_competitive_but_low_throughput() {
+        let robot = builtin::iiwa();
+        let rs = Design::roboshape(&robot);
+        let dadu = Design::dadu_rbd(&robot);
+        let a = estimate(&rs, &robot, RbdFn::Id);
+        let b = estimate(&dadu, &robot, RbdFn::Id);
+        assert!(a.latency_us < b.latency_us, "Roboshape is the latency SOTA");
+        assert!(a.throughput < b.throughput, "…but RTP wins throughput");
+    }
+
+    #[test]
+    fn reuse_accelerates_solo_id() {
+        // Fig. 7(c) upper-left: with reuse, ID running alone receives the
+        // shared DSP groups and beats the static-split configuration.
+        let robot = builtin::atlas();
+        let with = Design::draco(&robot);
+        let mut without = with.clone();
+        without.reuse = false;
+        let a = estimate(&with, &robot, RbdFn::Id);
+        let b = estimate(&without, &robot, RbdFn::Id);
+        assert!(
+            a.throughput > b.throughput,
+            "donated DSPs must raise solo-ID throughput: {} vs {}",
+            a.throughput,
+            b.throughput
+        );
+    }
+
+    #[test]
+    fn gpu_latency_worse_throughput_better_than_cpu_scale() {
+        let robot = builtin::iiwa();
+        let g = gpu_model(&robot, RbdFn::Id);
+        assert!(g.latency_us > 100.0, "GPU per-task response is poor");
+        assert!(g.throughput > 1e5, "GPU batch throughput is decent");
+    }
+
+    #[test]
+    fn composite_latency_exceeds_parts() {
+        let robot = builtin::iiwa();
+        let d = Design::draco(&robot);
+        let id = estimate(&d, &robot, RbdFn::Id);
+        let minv = estimate(&d, &robot, RbdFn::Minv);
+        let fd = estimate(&d, &robot, RbdFn::Fd);
+        assert!(fd.latency_us > id.latency_us.max(minv.latency_us));
+    }
+
+    #[test]
+    fn scalability_atlas_vs_iiwa() {
+        // Challenge-1: DRACO keeps Atlas within a small factor of iiwa
+        // (the paper's Fig. 10(c)(f): comparable speedups for Atlas).
+        let iiwa = builtin::iiwa();
+        let atlas = builtin::atlas();
+        let t_iiwa = estimate(&Design::draco(&iiwa), &iiwa, RbdFn::DeltaFd).throughput;
+        let t_atlas = estimate(&Design::draco(&atlas), &atlas, RbdFn::DeltaFd).throughput;
+        let ratio = t_iiwa / t_atlas;
+        assert!(
+            ratio < 40.0,
+            "Atlas ΔFD should stay within ~an order of magnitude ({ratio:.1})"
+        );
+    }
+}

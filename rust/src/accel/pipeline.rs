@@ -1,0 +1,314 @@
+//! Round-Trip-Pipeline (RTP) cycle model: units, initiation intervals,
+//! DSP allocation, dividers, and module latency/throughput.
+//!
+//! Modeling rules (one DSP retires one MAC per cycle; the RTP chains
+//! 2·N_units stages with FIFO coupling, Fig. 3(b)):
+//!
+//! * unit II        = ⌈macs / dsps⌉                       (cycles/task)
+//! * unit latency   = II + ⌈log₂(dsps+1)⌉ (adder tree) + divider latency
+//! * module II      = max over units (pipeline bottleneck)
+//! * module latency = Σ stage latencies + FIFO hop / stage
+//! * throughput     = f_clk / module II        (tasks/s, saturated pipe)
+
+use super::ops::UnitOps;
+
+/// Divider handling for units that perform reciprocals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DividerModel {
+    /// No divisions in this module.
+    None,
+    /// Inline fixed-point divider on the unit's critical path
+    /// (e.g. 32-bit at 200 MHz ≈ 20 cycles; scales with width).
+    InlineFixed { latency: u64 },
+    /// Dadu-RBD's fixed→float→fixed conversion around an FP divider:
+    /// longer latency, extra LUT cost, still on the critical path.
+    InlineFloatConverted { latency: u64 },
+    /// DRACO division deferring: a shared fully-pipelined divider off the
+    /// critical path; units only pay a FIFO hop. `latency` is the divider
+    /// pipeline depth (affects fill latency once, not II).
+    SharedDeferred { latency: u64 },
+}
+
+/// One pipeline stage with its DSP allocation.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub ops: UnitOps,
+    pub dsps: u32,
+}
+
+impl Stage {
+    pub fn ii(&self) -> u64 {
+        if self.ops.macs == 0 {
+            1
+        } else {
+            self.ops.macs.div_ceil(self.dsps.max(1) as u64)
+        }
+    }
+
+    /// II including the divider: a plain fixed-point divider is
+    /// *iterative* (one result per ~`latency` cycles), so it throttles
+    /// the unit's issue rate — this is why Dadu-RBD converts to floating
+    /// point (pipelined FP divider, II=1) and why DRACO defers divisions
+    /// to a shared pipelined divider instead.
+    pub fn ii_with_div(&self, div: DividerModel) -> u64 {
+        let base = self.ii();
+        match div {
+            DividerModel::InlineFixed { latency } if self.ops.divs > 0 => base.max(latency),
+            _ => base,
+        }
+    }
+
+    pub fn latency(&self, div: DividerModel) -> u64 {
+        let tree = (64 - u64::from(self.dsps.max(1)).leading_zeros()) as u64; // ⌈log2⌉+1
+        let div_lat = match div {
+            DividerModel::None => 0,
+            DividerModel::InlineFixed { latency } => latency * self.ops.divs,
+            DividerModel::InlineFloatConverted { latency } => latency * self.ops.divs,
+            // Deferred: the division overlaps the MAC work; only a FIFO
+            // hop (2 cycles) shows up, once, if the unit had divisions
+            // before deferring (divs==0 now, so charge via the module).
+            DividerModel::SharedDeferred { .. } => 0,
+        };
+        self.ii() + tree + div_lat
+    }
+}
+
+/// A module: a full RTP (forward units then backward units) plus its
+/// divider model and clock.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub stages: Vec<Stage>,
+    pub divider: DividerModel,
+    pub freq_hz: f64,
+    /// Fixed per-stage pipeline overhead (MAC-array register stages +
+    /// FIFO hop). Deeply-pipelined RTP designs (Dadu-RBD, DRACO) pay
+    /// ~12 cycles/stage and clock high; Roboshape's shallow datapath
+    /// pays ~0 but clocks at 56 MHz.
+    pub stage_overhead: u64,
+}
+
+impl Module {
+    /// Module initiation interval (cycles between task completions).
+    pub fn ii(&self) -> u64 {
+        self.stages.iter().map(|s| s.ii_with_div(self.divider)).max().unwrap_or(1)
+    }
+
+    /// End-to-end latency for one task (cycles).
+    pub fn latency_cycles(&self) -> u64 {
+        let base: u64 = self
+            .stages
+            .iter()
+            .map(|s| s.latency(self.divider) + self.stage_overhead)
+            .sum();
+        match self.divider {
+            // Shared divider: one extra fill of the divider pipeline plus
+            // the Mb1→Mf1 holding FIFO (paper §IV-A overhead note).
+            DividerModel::SharedDeferred { latency } => base + latency + 2,
+            _ => base,
+        }
+    }
+
+    pub fn latency_us(&self) -> f64 {
+        self.latency_cycles() as f64 / self.freq_hz * 1e6
+    }
+
+    /// Saturated-pipeline throughput in tasks/s.
+    pub fn throughput(&self) -> f64 {
+        self.freq_hz / self.ii() as f64
+    }
+
+    /// Latency to drain a batch of `b` tasks (for batched workloads):
+    /// fill latency + (b−1)·II.
+    pub fn batch_time_us(&self, b: usize) -> f64 {
+        (self.latency_cycles() + (b as u64 - 1) * self.ii()) as f64 / self.freq_hz * 1e6
+    }
+
+    pub fn total_dsps(&self) -> u64 {
+        self.stages.iter().map(|s| s.dsps as u64).sum()
+    }
+
+    /// Number of shared dividers needed under the staggered schedule of
+    /// Fig. 6(b): one pipelined divider serves ⌈units_with_div / II⌉…
+    /// inverted: units issue one divide every II cycles, so a single
+    /// divider (II ≥ 1 per issue) covers `min(units, II)`… the paper's
+    /// example: II=3 ⇒ 3 Mb units share one divider.
+    pub fn shared_dividers(&self, units_with_div: usize) -> u64 {
+        let ii = self.ii().max(1);
+        (units_with_div as u64).div_ceil(ii)
+    }
+}
+
+/// Optimal balanced DSP allocation: the minimum-total-DSP assignment
+/// achieving a target II, or the best II under a DSP budget. Exact via
+/// monotone search: dsps(u, II) = ⌈macs_u / II⌉.
+pub fn dsps_for_ii(ops: &[UnitOps], target_ii: u64) -> Vec<u32> {
+    ops.iter()
+        .map(|o| {
+            if o.macs == 0 {
+                1
+            } else {
+                o.macs.div_ceil(target_ii.max(1)) as u32
+            }
+        })
+        .collect()
+}
+
+pub fn total_dsps_for_ii(ops: &[UnitOps], target_ii: u64) -> u64 {
+    dsps_for_ii(ops, target_ii).iter().map(|&d| d as u64).sum()
+}
+
+/// Best (smallest) achievable II under a total-DSP budget; returns
+/// (ii, allocation). Binary search over II.
+pub fn best_ii_under_budget(ops: &[UnitOps], budget: u64) -> (u64, Vec<u32>) {
+    best_ii_with_cap(ops, budget, u32::MAX)
+}
+
+/// As [`best_ii_under_budget`] but with a per-unit engine cap modeling
+/// DSP-column/routing limits: a single pipeline unit cannot absorb more
+/// than `cap` MAC engines, so heavily-loaded units (tip ΔRNEA units on
+/// high-DOF robots) floor the achievable II — the source of the
+/// inter-module II mismatch that DSP reuse exploits (paper §IV-B).
+pub fn best_ii_with_cap(ops: &[UnitOps], budget: u64, cap: u32) -> (u64, Vec<u32>) {
+    let floor = ops
+        .iter()
+        .map(|o| o.macs.div_ceil(cap.max(1) as u64))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let max_macs = ops.iter().map(|o| o.macs).max().unwrap_or(1).max(1);
+    let (mut lo, mut hi) = (floor, max_macs.max(floor));
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if total_dsps_for_ii(ops, mid) <= budget {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    (lo, dsps_for_ii(ops, lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall_res, Config};
+
+    fn mk_ops(macs: &[u64]) -> Vec<UnitOps> {
+        macs.iter().map(|&m| UnitOps { macs: m, divs: 0 }).collect()
+    }
+
+    #[test]
+    fn stage_ii_is_ceiling() {
+        let s = Stage { ops: UnitOps { macs: 10, divs: 0 }, dsps: 3 };
+        assert_eq!(s.ii(), 4);
+        let s = Stage { ops: UnitOps { macs: 12, divs: 0 }, dsps: 3 };
+        assert_eq!(s.ii(), 4);
+    }
+
+    #[test]
+    fn module_ii_is_bottleneck() {
+        let m = Module {
+            name: "t".into(),
+            stages: vec![
+                Stage { ops: UnitOps { macs: 8, divs: 0 }, dsps: 4 },
+                Stage { ops: UnitOps { macs: 30, divs: 0 }, dsps: 5 },
+            ],
+            divider: DividerModel::None,
+            freq_hz: 2e8,
+            stage_overhead: 2,
+        };
+        assert_eq!(m.ii(), 6);
+        assert!((m.throughput() - 2e8 / 6.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn divider_models_shape_ii_and_latency() {
+        let mk = |div| Module {
+            name: "m".into(),
+            stages: vec![Stage { ops: UnitOps { macs: 20, divs: 1 }, dsps: 5 }],
+            divider: div,
+            freq_hz: 2e8,
+            stage_overhead: 2,
+        };
+        let none = mk(DividerModel::None);
+        let fixed = mk(DividerModel::InlineFixed { latency: 20 });
+        let float_conv = mk(DividerModel::InlineFloatConverted { latency: 36 });
+        let shared = mk(DividerModel::SharedDeferred { latency: 24 });
+        // Iterative fixed divider throttles the issue rate…
+        assert_eq!(fixed.ii(), 20);
+        // …while the pipelined FP and shared dividers keep II at the MAC bound.
+        assert_eq!(float_conv.ii(), none.ii());
+        assert_eq!(shared.ii(), none.ii());
+        // Both inline forms pay latency on the critical path; deferring does not.
+        assert!(fixed.latency_cycles() >= none.latency_cycles() + 20);
+        assert!(float_conv.latency_cycles() >= none.latency_cycles() + 36);
+        assert!(shared.latency_cycles() < float_conv.latency_cycles());
+    }
+
+    #[test]
+    fn allocation_achieves_target_ii() {
+        forall_res(
+            "alloc-ii",
+            Config { cases: 128, ..Default::default() },
+            |r| {
+                let n = 1 + r.below(20);
+                let macs: Vec<u64> = (0..n).map(|_| 1 + r.below(500) as u64).collect();
+                let ii = 1 + r.below(40) as u64;
+                (macs, ii)
+            },
+            |(macs, ii)| {
+                let ops = mk_ops(macs);
+                let alloc = dsps_for_ii(&ops, *ii);
+                for (o, d) in ops.iter().zip(&alloc) {
+                    let got = o.macs.div_ceil(*d as u64);
+                    if got > *ii {
+                        return Err(format!("unit ii {got} > target {ii}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn budget_search_is_optimal_boundary() {
+        forall_res(
+            "alloc-budget",
+            Config { cases: 128, ..Default::default() },
+            |r| {
+                let n = 1 + r.below(12);
+                let macs: Vec<u64> = (0..n).map(|_| 1 + r.below(300) as u64).collect();
+                let budget = n as u64 + r.below(600) as u64;
+                (macs, budget)
+            },
+            |(macs, budget)| {
+                let ops = mk_ops(macs);
+                let (ii, alloc) = best_ii_under_budget(&ops, *budget);
+                let total: u64 = alloc.iter().map(|&d| d as u64).sum();
+                if total > *budget {
+                    return Err(format!("allocation {total} exceeds budget {budget}"));
+                }
+                if ii > 1 && total_dsps_for_ii(&ops, ii - 1) <= *budget {
+                    return Err(format!("ii {ii} not minimal"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shared_divider_count_matches_fig6b() {
+        // Paper example: Mb II of 3 ⇒ 3 Mb units per divider.
+        let m = Module {
+            name: "minv".into(),
+            stages: vec![Stage { ops: UnitOps { macs: 9, divs: 0 }, dsps: 3 }],
+            divider: DividerModel::SharedDeferred { latency: 24 },
+            freq_hz: 2.28e8,
+            stage_overhead: 2,
+        };
+        assert_eq!(m.ii(), 3);
+        assert_eq!(m.shared_dividers(3), 1);
+        assert_eq!(m.shared_dividers(7), 3);
+    }
+}

@@ -1,0 +1,29 @@
+//! Hardware platform catalogue (paper Table I).
+
+/// One Table I row.
+#[derive(Debug, Clone, Copy)]
+pub struct Platform {
+    pub kind: &'static str,
+    pub name: &'static str,
+    pub freq_hz: f64,
+    pub evaluated_in: &'static str,
+}
+
+pub const TABLE1: &[Platform] = &[
+    Platform { kind: "CPU", name: "Jetson AGX Orin", freq_hz: 2.2e9, evaluated_in: "[15],[43]" },
+    Platform { kind: "CPU", name: "Core i9-12900", freq_hz: 5.1e9, evaluated_in: "[15],[43]" },
+    Platform { kind: "GPU", name: "Jetson AGX Orin", freq_hz: 1.3e9, evaluated_in: "[44]" },
+    Platform { kind: "GPU", name: "RTX 4090M", freq_hz: 1.8e9, evaluated_in: "[44]" },
+    Platform { kind: "FPGA", name: "XCVU9P (Roboshape)", freq_hz: 56e6, evaluated_in: "[38]" },
+    Platform { kind: "FPGA", name: "XCVU9P (Dadu-RBD)", freq_hz: 125e6, evaluated_in: "[57]" },
+    Platform { kind: "FPGA", name: "XCV80 & U50 (DRACO)", freq_hz: 228e6, evaluated_in: "this work" },
+];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_has_all_rows() {
+        assert_eq!(super::TABLE1.len(), 7);
+        assert!(super::TABLE1.iter().any(|p| p.name.contains("DRACO")));
+    }
+}

@@ -1,0 +1,152 @@
+//! Inter-module DSP reuse accounting (paper §IV-B, Fig. 12(b)).
+//!
+//! The mechanism: per-unit engine caps (DSP column / routing limits)
+//! floor the II of heavy modules — on high-DOF robots the tip-heavy
+//! ΔRNEA and subtree-heavy Minv units cannot be parallelized below
+//! `macs/cap` cycles, while the light RNEA units could run much faster.
+//! Coordinated functions therefore run at the slow modules' II, and the
+//! engines RNEA holds beyond what that matched rate needs are *shared*
+//! (DSP_DR / DSP_MR): they serve RNEA when ID runs alone and the heavy
+//! modules otherwise. A design **without** reuse must duplicate that
+//! surplus to offer the same per-function performance.
+
+use super::designs::{BasicModule, Design, RbdFn};
+use super::ops;
+use super::pipeline::{best_ii_with_cap, total_dsps_for_ii};
+use crate::model::Robot;
+
+#[derive(Debug, Clone)]
+pub struct ReuseReport {
+    pub robot: String,
+    /// DSPs with inter-module reuse (= the design budget, shared pools).
+    pub dsp_with: u64,
+    /// DSPs without reuse (shared surplus duplicated).
+    pub dsp_without: u64,
+    /// Fractional saving (paper: 2.7% iiwa, 16.1% Atlas).
+    pub savings_frac: f64,
+    /// Engines in the shared groups (DSP_DR + DSP_MR).
+    pub shared_engines: u64,
+    /// Matched composite II (slowest module at its pool + cap).
+    pub ii_composite: u64,
+    /// RNEA's standalone II at its full static pool.
+    pub ii_rnea_solo: u64,
+}
+
+/// Compute the reuse accounting for a design.
+pub fn reuse_report(design: &Design, robot: &Robot) -> ReuseReport {
+    let split = design.engine_split(robot);
+    let pool = |m: BasicModule| split.iter().find(|(mm, _)| *mm == m).unwrap().1;
+    let units = |m: BasicModule| design.module_units(robot, m);
+
+    // Cap floor of a module: the best II it can reach when shared
+    // engines flow in (solo activation, Fig. 7(c) upper row).
+    let floor = |m: BasicModule| {
+        units(m)
+            .iter()
+            .map(|u| u.macs.div_ceil(design.engine_cap.max(1) as u64))
+            .max()
+            .unwrap_or(1)
+            .max(1)
+    };
+    // Matched composite rate: the slowest module at its static pool.
+    let ii_of = |m: BasicModule| best_ii_with_cap(&units(m), pool(m), design.engine_cap).0;
+    let ii_rnea_solo = floor(BasicModule::Rnea);
+    let ii_composite = BasicModule::ALL.iter().map(|&m| ii_of(m)).max().unwrap_or(1);
+
+    // Shared groups (DSP_DR + DSP_MR): the engines RNEA and Minv need in
+    // their *solo* modes (cap-floor II) beyond what the matched composite
+    // rate requires. With reuse these are borrowed from modules idle in
+    // the solo activation; without reuse they are dedicated silicon.
+    let mut shared_engines = 0u64;
+    for m in [BasicModule::Rnea, BasicModule::Minv] {
+        let e_solo = total_dsps_for_ii(&units(m), floor(m));
+        let e_comp = total_dsps_for_ii(&units(m), ii_composite.max(floor(m)).max(1));
+        shared_engines += e_solo.saturating_sub(e_comp);
+    }
+
+    let dsp_with = design.dsp_budget;
+    let dsp_without = dsp_with + shared_engines * design.dsp_per_mac();
+    ReuseReport {
+        robot: robot.name.clone(),
+        dsp_with,
+        dsp_without,
+        savings_frac: 1.0 - dsp_with as f64 / dsp_without as f64,
+        shared_engines,
+        ii_composite,
+        ii_rnea_solo,
+    }
+}
+
+/// Guideline 1 of §IV-B: shared-group size tracks the II mismatch
+/// between the coordinated modules.
+pub fn ii_mismatch(design: &Design, robot: &Robot) -> f64 {
+    let r = reuse_report(design, robot);
+    r.ii_composite as f64 / r.ii_rnea_solo.max(1) as f64
+}
+
+/// Total MACs per module — exposed for the benches' workload tables.
+pub fn module_macs(design: &Design, robot: &Robot) -> Vec<(&'static str, u64)> {
+    BasicModule::ALL
+        .iter()
+        .map(|&m| (m.name(), ops::module_total_macs(&design.module_units(robot, m))))
+        .collect()
+}
+
+/// Which functions activate which modules — Fig. 7(c) as data.
+pub fn activation_table() -> Vec<(RbdFn, Vec<&'static str>)> {
+    RbdFn::ALL
+        .iter()
+        .map(|&f| (f, f.modules().iter().map(|m| m.name()).collect()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn savings_positive_and_bounded() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas()] {
+            let d = Design::draco(&robot);
+            let r = reuse_report(&d, &robot);
+            assert!(r.savings_frac >= 0.0 && r.savings_frac < 0.6, "{}: {r:?}", robot.name);
+            assert!(r.dsp_without >= r.dsp_with);
+        }
+    }
+
+    /// Fig. 12(b) shape: Atlas saves a much larger fraction than iiwa
+    /// (paper: 16.1% vs 2.7%) because its heavier ΔRNEA/Minv loads widen
+    /// the inter-module II mismatch.
+    #[test]
+    fn atlas_saves_more_than_iiwa() {
+        let iiwa = builtin::iiwa();
+        let atlas = builtin::atlas();
+        let s_iiwa = reuse_report(&Design::draco(&iiwa), &iiwa).savings_frac;
+        let s_atlas = reuse_report(&Design::draco(&atlas), &atlas).savings_frac;
+        assert!(
+            s_atlas > s_iiwa,
+            "atlas {s_atlas:.3} must exceed iiwa {s_iiwa:.3} (Fig 12b)"
+        );
+    }
+
+    #[test]
+    fn mismatch_drives_sharing() {
+        // Guideline 1: bigger II mismatch ⇒ more shared engines.
+        let iiwa = builtin::iiwa();
+        let atlas = builtin::atlas();
+        let m_iiwa = ii_mismatch(&Design::draco(&iiwa), &iiwa);
+        let m_atlas = ii_mismatch(&Design::draco(&atlas), &atlas);
+        assert!(m_atlas > m_iiwa, "mismatch atlas {m_atlas:.2} vs iiwa {m_iiwa:.2}");
+    }
+
+    #[test]
+    fn activation_table_matches_fig7c() {
+        let t = activation_table();
+        let get = |f: RbdFn| t.iter().find(|(ff, _)| *ff == f).unwrap().1.clone();
+        assert_eq!(get(RbdFn::Id), vec!["RNEA"]);
+        assert_eq!(get(RbdFn::Minv), vec!["Minv"]);
+        assert_eq!(get(RbdFn::Fd), vec!["RNEA", "Minv"]);
+        assert_eq!(get(RbdFn::DeltaFd), vec!["RNEA", "dRNEA", "Minv"]);
+    }
+}

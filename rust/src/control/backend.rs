@@ -1,0 +1,109 @@
+//! RBD backend abstraction: controllers compute their dynamics terms
+//! either in exact f64 or in emulated fixed point. This is the switch the
+//! ICMS uses to run the paired (float vs quantized) closed-loop
+//! simulations of Fig. 4.
+
+use crate::dynamics;
+use crate::model::Robot;
+use crate::quant::qformat::QFormat;
+use crate::quant::qrbd;
+use crate::spatial::DMat;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RbdBackend {
+    Exact,
+    Quantized(QFormat),
+}
+
+impl RbdBackend {
+    pub fn label(&self) -> String {
+        match self {
+            RbdBackend::Exact => "float".to_string(),
+            RbdBackend::Quantized(f) => f.label(),
+        }
+    }
+
+    pub fn rnea(&self, robot: &Robot, q: &[f64], qd: &[f64], qdd: &[f64]) -> Vec<f64> {
+        match self {
+            RbdBackend::Exact => dynamics::rnea(robot, q, qd, qdd, None),
+            RbdBackend::Quantized(fmt) => qrbd::quant_rnea(robot, q, qd, qdd, *fmt),
+        }
+    }
+
+    pub fn minv(&self, robot: &Robot, q: &[f64]) -> DMat {
+        match self {
+            RbdBackend::Exact => dynamics::minv(robot, q),
+            RbdBackend::Quantized(fmt) => qrbd::quant_minv(robot, q, *fmt),
+        }
+    }
+
+    pub fn fd(&self, robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64]) -> Vec<f64> {
+        match self {
+            RbdBackend::Exact => dynamics::fd(robot, q, qd, tau, None),
+            RbdBackend::Quantized(fmt) => qrbd::quant_fd(robot, q, qd, tau, *fmt),
+        }
+    }
+
+    /// ΔFD blocks (∂q̈/∂q, ∂q̈/∂q̇, M⁻¹) through this backend.
+    pub fn fd_derivatives(
+        &self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+    ) -> (DMat, DMat, DMat) {
+        match self {
+            RbdBackend::Exact => dynamics::fd_derivatives(robot, q, qd, tau),
+            RbdBackend::Quantized(fmt) => {
+                let qdd = qrbd::quant_fd(robot, q, qd, tau, *fmt);
+                let (did_dq, did_dqd) =
+                    qrbd::quant_rnea_derivatives(robot, q, qd, &qdd, *fmt);
+                let mi = qrbd::quant_minv(robot, q, *fmt);
+                let dq = mi.matmul(&did_dq).scale(-1.0);
+                let dqd = mi.matmul(&did_dqd).scale(-1.0);
+                (dq, dqd, mi)
+            }
+        }
+    }
+}
+
+/// A torque controller: maps (t, q, q̇) → τ.
+pub trait Controller {
+    fn control(&mut self, t: f64, q: &[f64], qd: &[f64]) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn backends_agree_at_high_precision() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(800);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let exact = RbdBackend::Exact.rnea(&robot, &s.q, &s.qd, &qdd);
+        let fine = RbdBackend::Quantized(QFormat::new(16, 32)).rnea(&robot, &s.q, &s.qd, &qdd);
+        for i in 0..n {
+            assert!((exact[i] - fine[i]).abs() < 1e-4 * (1.0 + exact[i].abs()));
+        }
+    }
+
+    #[test]
+    fn quantized_derivative_error_visible_at_coarse_format() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(801);
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(robot.dof(), -5.0, 5.0);
+        let (dq_e, _, _) = RbdBackend::Exact.fd_derivatives(&robot, &s.q, &s.qd, &tau);
+        let (dq_q, _, _) = RbdBackend::Quantized(QFormat::new(10, 8))
+            .fd_derivatives(&robot, &s.q, &s.qd, &tau);
+        let err = dq_e.sub(&dq_q).frobenius();
+        assert!(err > 1e-6, "coarse quantization must perturb ΔFD (got {err})");
+        assert!(err < 1e3, "but not absurdly");
+    }
+}

@@ -1,0 +1,10 @@
+//! Controllers (PID with dynamics compensation, LQR, MPC/iLQR) over a
+//! swappable RBD backend — the three control templates pre-implemented in
+//! the ICMS (paper Fig. 4).
+
+pub mod backend;
+pub mod lqr;
+pub mod mpc;
+pub mod pid;
+
+pub use backend::{Controller, RbdBackend};

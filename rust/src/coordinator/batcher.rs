@@ -1,0 +1,229 @@
+//! Dynamic batcher: per-(function) worker threads that coalesce requests
+//! into engine-sized batches under a latency window.
+
+use super::stats::{ServeStats, StatsInner};
+use crate::runtime::artifact::{ArtifactFn, ArtifactMeta};
+use crate::runtime::engine::Engine;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One request: flat f32 operands for a single task (each of length N,
+/// or N·N where applicable).
+pub struct Job {
+    pub operands: Vec<Vec<f32>>,
+    pub enqueued: Instant,
+    pub resp: Sender<JobResult>,
+}
+
+/// Per-task result: the flat f32 output slice for this task.
+pub type JobResult = Result<Vec<f32>, String>;
+
+enum Msg {
+    Work(Job),
+    Stop,
+}
+
+/// Routing front-end: submit() → per-function worker.
+pub struct Coordinator {
+    routes: BTreeMap<ArtifactFn, Sender<Msg>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+}
+
+impl Coordinator {
+    /// Start one worker per artifact. `n` is the robot DOF; `window_us`
+    /// is the batching window (deadline to fill a batch).
+    pub fn start(artifacts: Vec<ArtifactMeta>, n: usize, window_us: u64) -> Coordinator {
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let mut routes = BTreeMap::new();
+        let mut workers = Vec::new();
+        for meta in artifacts {
+            let (tx, rx) = channel::<Msg>();
+            routes.insert(meta.function, tx);
+            let st = Arc::clone(&stats);
+            workers.push(std::thread::spawn(move || worker_loop(meta, n, window_us, rx, st)));
+        }
+        Coordinator { routes, workers, stats }
+    }
+
+    /// Submit one task; returns the channel the result arrives on.
+    pub fn submit(&self, function: ArtifactFn, operands: Vec<Vec<f32>>) -> Receiver<JobResult> {
+        let (tx, rx) = channel();
+        match self.routes.get(&function) {
+            Some(route) => {
+                let job = Job { operands, enqueued: Instant::now(), resp: tx };
+                if route.send(Msg::Work(job)).is_err() {
+                    // Worker gone: report through the response channel by
+                    // dropping tx — recv() errors out on the caller side.
+                }
+            }
+            None => {
+                let _ = tx.send(Err(format!("no executable for {}", function.name())));
+            }
+        }
+        rx
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().snapshot()
+    }
+
+    pub fn shutdown(self) {
+        for (_, tx) in &self.routes {
+            let _ = tx.send(Msg::Stop);
+        }
+        drop(self.routes);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker: owns its own PJRT client + executable (PJRT handles are not
+/// Send, so everything is created inside the thread).
+fn worker_loop(
+    meta: ArtifactMeta,
+    n: usize,
+    window_us: u64,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            fail_all(&rx, &format!("pjrt client: {e:?}"));
+            return;
+        }
+    };
+    let engine = match Engine::load(&client, meta, n) {
+        Ok(e) => e,
+        Err(e) => {
+            fail_all(&rx, &e.0);
+            return;
+        }
+    };
+    let b = engine.meta.batch;
+    let window = Duration::from_micros(window_us);
+
+    let mut queue: Vec<Job> = Vec::with_capacity(b);
+    loop {
+        // Block for the first job, then drain within the window.
+        match rx.recv() {
+            Ok(Msg::Work(j)) => queue.push(j),
+            Ok(Msg::Stop) | Err(_) => break,
+        }
+        let deadline = Instant::now() + window;
+        while queue.len() < b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Work(j)) => queue.push(j),
+                Ok(Msg::Stop) => {
+                    flush(&engine, &mut queue, &stats);
+                    return;
+                }
+                Err(_) => break,
+            }
+        }
+        flush(&engine, &mut queue, &stats);
+    }
+    flush(&engine, &mut queue, &stats);
+}
+
+/// Execute the queued jobs as one padded batch and fan results out.
+fn flush(engine: &Engine, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) {
+    if queue.is_empty() {
+        return;
+    }
+    let b = engine.meta.batch;
+    let n = engine.n;
+    let arity = engine.meta.function.arity();
+    let fill = queue.len().min(b);
+
+    // Assemble operands, padding the tail by repeating the last task
+    // (keeps the padded rows numerically benign).
+    let mut inputs: Vec<Vec<f32>> = vec![Vec::with_capacity(b * n); arity];
+    for job in queue.iter().take(fill) {
+        for (k, op) in job.operands.iter().enumerate().take(arity) {
+            inputs[k].extend_from_slice(op);
+        }
+    }
+    for _ in fill..b {
+        for k in 0..arity {
+            let last: Vec<f32> = inputs[k][(fill - 1) * n..fill * n].to_vec();
+            inputs[k].extend_from_slice(&last);
+        }
+    }
+
+    let t0 = Instant::now();
+    let result = engine.run(&inputs);
+    let exec_us = t0.elapsed().as_micros() as f64;
+
+    let out_per_task = engine.expected_output_len() / b;
+    match result {
+        Ok(flat) => {
+            for (i, job) in queue.drain(..).enumerate() {
+                if i < fill {
+                    let chunk = flat[i * out_per_task..(i + 1) * out_per_task].to_vec();
+                    let wait_us = job.enqueued.elapsed().as_micros() as f64;
+                    stats.lock().unwrap().record(wait_us);
+                    let _ = job.resp.send(Ok(chunk));
+                } else {
+                    let _ = job.resp.send(Err("overflow past batch".into()));
+                }
+            }
+            stats.lock().unwrap().record_batch(fill as f64 / b as f64, exec_us);
+        }
+        Err(e) => {
+            for job in queue.drain(..) {
+                let _ = job.resp.send(Err(e.0.clone()));
+            }
+        }
+    }
+}
+
+fn fail_all(rx: &Receiver<Msg>, err: &str) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Work(j) => {
+                let _ = j.resp.send(Err(err.to_string()));
+            }
+            Msg::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn submit_unknown_function_errors_fast() {
+        let coord = Coordinator::start(Vec::new(), 7, 100);
+        let rx = coord.submit(ArtifactFn::Minv, vec![vec![0.0; 7]]);
+        let res = rx.recv().unwrap();
+        assert!(res.is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn worker_with_bad_artifact_reports_error() {
+        let meta = ArtifactMeta {
+            robot: "iiwa".into(),
+            function: ArtifactFn::Rnea,
+            batch: 4,
+            path: PathBuf::from("/nonexistent/iiwa_rnea_b4.hlo.txt"),
+        };
+        let coord = Coordinator::start(vec![meta], 7, 100);
+        let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.0; 7]; 3]);
+        let res = rx.recv().expect("worker must answer even on failure");
+        assert!(res.is_err());
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,115 @@
+//! Serving coordinator: request routing + dynamic batching over the PJRT
+//! runtime — the L3 system layer. Mirrors the accelerator's operating
+//! model: the RTP pipeline reaches peak throughput only when tasks are
+//! batched through it, so the coordinator aggregates concurrent control
+//! requests into fixed-size batches per (robot, function) executable,
+//! pads partial batches, and fans results back out.
+//!
+//! Threading: PJRT client/executable handles are not `Send`, so each
+//! worker thread owns its own client and compiles its own executable;
+//! requests cross threads through channels.
+
+pub mod batcher;
+pub mod stats;
+
+pub use batcher::{Coordinator, Job, JobResult};
+pub use stats::ServeStats;
+
+use crate::model::builtin_robot;
+use crate::runtime::artifact::{scan_artifacts, ArtifactFn};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use std::path::Path;
+use std::time::Instant;
+
+/// `draco serve`: bring up the coordinator on real artifacts, push a
+/// synthetic workload through it, verify numerics against the native
+/// implementation, and report latency/throughput.
+pub fn serve_cli(args: &Args) -> i32 {
+    let robot_name = args.opt_or("robot", "iiwa").to_string();
+    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let requests = args.opt_usize("requests", 512);
+    let window_us = args.opt_usize("window-us", 200);
+
+    let robot = match builtin_robot(&robot_name) {
+        Some(r) => r,
+        None => {
+            eprintln!("unknown robot '{robot_name}'");
+            return 2;
+        }
+    };
+    let artifacts: Vec<_> = scan_artifacts(Path::new(&dir))
+        .into_iter()
+        .filter(|a| a.robot == robot_name)
+        .collect();
+    if artifacts.is_empty() {
+        eprintln!("no artifacts for '{robot_name}' under {dir}/ — run `make artifacts` first");
+        return 1;
+    }
+    println!("serving {} with {} artifact(s):", robot_name, artifacts.len());
+    for a in &artifacts {
+        println!("  {} ({}, batch {})", a.path.display(), a.function.name(), a.batch);
+    }
+
+    let coord = Coordinator::start(artifacts.clone(), robot.dof(), window_us as u64);
+
+    // Synthetic control-loop workload: random in-limit states.
+    let mut rng = Rng::new(2025);
+    let n = robot.dof();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let s = crate::model::State::random(&robot, &mut rng);
+        let qdd: Vec<f64> = rng.vec_range(n, -2.0, 2.0);
+        let ops: Vec<Vec<f32>> = vec![
+            s.q.iter().map(|&x| x as f32).collect(),
+            s.qd.iter().map(|&x| x as f32).collect(),
+            qdd.iter().map(|&x| x as f32).collect(),
+        ];
+        let rx = coord.submit(ArtifactFn::Rnea, ops.clone());
+        pending.push((s, qdd, rx));
+    }
+    let mut max_err = 0.0f64;
+    let mut done = 0usize;
+    for (s, qdd, rx) in pending {
+        match rx.recv() {
+            Ok(Ok(out)) => {
+                done += 1;
+                let want = crate::dynamics::rnea(&robot, &s.q, &s.qd, &qdd, None);
+                for i in 0..n {
+                    let scale = 1.0f64.max(want[i].abs());
+                    max_err = max_err.max((out[i] as f64 - want[i]).abs() / scale);
+                }
+            }
+            Ok(Err(e)) => {
+                eprintln!("request failed: {e}");
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("coordinator dropped a request: {e}");
+                return 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = coord.stats();
+    println!(
+        "\ncompleted {done}/{requests} requests in {:.1} ms  ({:.0} req/s)",
+        wall * 1e3,
+        done as f64 / wall
+    );
+    println!(
+        "batches: {}  mean fill: {:.1}%  p50 latency: {:.0} µs  p95: {:.0} µs",
+        st.batches,
+        st.mean_fill * 100.0,
+        st.p50_latency_us,
+        st.p95_latency_us
+    );
+    println!("max relative error vs native RNEA: {max_err:.2e}");
+    coord.shutdown();
+    if max_err > 1e-3 {
+        eprintln!("NUMERIC MISMATCH between artifact and native implementation");
+        return 1;
+    }
+    0
+}

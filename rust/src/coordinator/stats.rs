@@ -1,0 +1,88 @@
+//! Serving statistics: request latency distribution and batch fill.
+
+#[derive(Debug, Default)]
+pub struct StatsInner {
+    pub completed: u64,
+    pub batches: u64,
+    pub fill_sum: f64,
+    pub exec_us_sum: f64,
+    /// Request latencies [µs]; bounded reservoir (first 65536).
+    pub latencies_us: Vec<f64>,
+}
+
+impl StatsInner {
+    pub fn record(&mut self, latency_us: f64) {
+        self.completed += 1;
+        if self.latencies_us.len() < 65536 {
+            self.latencies_us.push(latency_us);
+        }
+    }
+
+    pub fn record_batch(&mut self, fill: f64, exec_us: f64) {
+        self.batches += 1;
+        self.fill_sum += fill;
+        self.exec_us_sum += exec_us;
+    }
+
+    pub fn snapshot(&self) -> ServeStats {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)]
+            }
+        };
+        ServeStats {
+            completed: self.completed,
+            batches: self.batches,
+            mean_fill: if self.batches > 0 { self.fill_sum / self.batches as f64 } else { 0.0 },
+            mean_exec_us: if self.batches > 0 {
+                self.exec_us_sum / self.batches as f64
+            } else {
+                0.0
+            },
+            p50_latency_us: pct(0.50),
+            p95_latency_us: pct(0.95),
+        }
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_fill: f64,
+    pub mean_exec_us: f64,
+    pub p50_latency_us: f64,
+    pub p95_latency_us: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = StatsInner::default();
+        for i in 0..100 {
+            s.record(i as f64);
+        }
+        s.record_batch(0.5, 10.0);
+        s.record_batch(1.0, 20.0);
+        let snap = s.snapshot();
+        assert_eq!(snap.completed, 100);
+        assert_eq!(snap.batches, 2);
+        assert!((snap.mean_fill - 0.75).abs() < 1e-12);
+        assert!(snap.p50_latency_us <= snap.p95_latency_us);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let snap = StatsInner::default().snapshot();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.p95_latency_us, 0.0);
+    }
+}

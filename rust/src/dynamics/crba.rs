@@ -1,0 +1,118 @@
+//! Composite Rigid Body Algorithm: the joint-space mass matrix M(q)
+//! (Featherstone RBDA Table 6.2).
+
+use super::kinematics::Kin;
+use crate::model::Robot;
+use crate::spatial::mat6::{add6, matvec6, transform_inertia_to_parent, M6};
+use crate::spatial::DMat;
+
+/// Mass matrix M(q): symmetric positive definite, N×N.
+pub fn crba(robot: &Robot, q: &[f64]) -> DMat {
+    let kin = Kin::positions(robot, q);
+    crba_with_kin(robot, &kin)
+}
+
+pub fn crba_with_kin(robot: &Robot, kin: &Kin) -> DMat {
+    let n = robot.dof();
+    // Composite inertias: start from the link's own inertia, accumulate
+    // children tip→base.
+    let mut ic: Vec<M6> = (0..n).map(|i| robot.links[i].inertia.to_mat6()).collect();
+    for i in (0..n).rev() {
+        if let Some(p) = robot.links[i].parent {
+            let contrib = transform_inertia_to_parent(&kin.xup[i], &ic[i]);
+            ic[p] = add6(&ic[p], &contrib);
+        }
+    }
+
+    let mut m = DMat::zeros(n, n);
+    for i in (0..n).rev() {
+        // F = IC_i S_i
+        let mut f = matvec6(&ic[i], &kin.s[i]);
+        m[(i, i)] = kin.s[i].dot(&f);
+        let mut j = i;
+        while let Some(p) = robot.links[j].parent {
+            f = kin.xup[j].inv_apply_force(&f);
+            j = p;
+            let mij = f.dot(&kin.s[j]);
+            m[(i, j)] = mij;
+            m[(j, i)] = mij;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::rnea::rnea;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    /// The fundamental consistency check tying CRBA to RNEA:
+    /// τ(q,q̇,q̈) − τ(q,q̇,0) = M(q)·q̈ for any q̈.
+    #[test]
+    fn mass_matrix_matches_rnea_difference() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let mut rng = Rng::new(100);
+            for _ in 0..4 {
+                let s = State::random(&robot, &mut rng);
+                let n = robot.dof();
+                let qdd = rng.vec_range(n, -3.0, 3.0);
+                let m = crba(&robot, &s.q);
+                let t1 = rnea(&robot, &s.q, &s.qd, &qdd, None);
+                let t0 = rnea(&robot, &s.q, &s.qd, &vec![0.0; n], None);
+                let mq = m.matvec(&qdd);
+                for i in 0..n {
+                    let want = t1[i] - t0[i];
+                    assert!(
+                        (mq[i] - want).abs() < 1e-8 * (1.0 + want.abs()),
+                        "{}: joint {i}: {} vs {}",
+                        robot.name,
+                        mq[i],
+                        want
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_positive_definite() {
+        for robot in [builtin::iiwa(), builtin::atlas()] {
+            let mut rng = Rng::new(101);
+            let s = State::random(&robot, &mut rng);
+            let m = crba(&robot, &s.q);
+            let n = robot.dof();
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (m[(i, j)] - m[(j, i)]).abs() < 1e-10,
+                        "asymmetry at ({i},{j})"
+                    );
+                }
+            }
+            // PD via random quadratic forms.
+            for _ in 0..16 {
+                let x = rng.vec_range(n, -1.0, 1.0);
+                let quad: f64 = m.matvec(&x).iter().zip(&x).map(|(a, b)| a * b).sum();
+                assert!(quad > 0.0, "xᵀMx = {quad} not positive");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_dominance_of_leaf_joints() {
+        // Leaf joints couple to nothing below them: their row support is
+        // exactly their ancestor path. Check zero entries across branches.
+        let robot = builtin::hyq();
+        let mut rng = Rng::new(102);
+        let s = State::random(&robot, &mut rng);
+        let m = crba(&robot, &s.q);
+        // joints 0..3 (lf leg) vs 3..6 (rf leg) are decoupled.
+        for i in 0..3 {
+            for j in 3..6 {
+                assert!(m[(i, j)].abs() < 1e-12, "({i},{j}) = {}", m[(i, j)]);
+            }
+        }
+    }
+}

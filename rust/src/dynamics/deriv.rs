@@ -1,0 +1,350 @@
+//! Analytical derivatives of RNEA (ΔRNEA / ΔID) and of forward dynamics
+//! (ΔFD), following Carpentier & Mansard (RSS 2018): the paper's ΔID and
+//! ΔFD functions (Fig. 3(a)), with
+//!
+//! ```text
+//!   ∂FD/∂x = −M⁻¹ · ∂ID/∂x |_{q̈ = FD}          (paper Eq. 2)
+//! ```
+//!
+//! Derivatives are organized as N tangent sweeps of the RNEA recursion —
+//! the directional (forward-mode) derivative along each coordinate. This
+//! is algebraically identical to ΔRNEA's fpass/bpass (the Df/Db pipeline
+//! units in the accelerator) and costs the same O(N²).
+
+use super::kinematics::Kin;
+use crate::model::Robot;
+use crate::spatial::{DMat, SV};
+
+/// Partial derivatives of inverse dynamics: (∂τ/∂q, ∂τ/∂q̇), each N×N.
+/// ∂τ/∂q̈ is the mass matrix (available from CRBA) and is not recomputed.
+pub fn rnea_derivatives(robot: &Robot, q: &[f64], qd: &[f64], qdd: &[f64]) -> (DMat, DMat) {
+    let n = robot.dof();
+    let kin = Kin::new(robot, q, qd);
+    let a0 = SV::new(crate::spatial::V3::ZERO, -robot.gravity);
+
+    // Nominal forward quantities (v from kin, a and f recomputed here).
+    let mut a: Vec<SV> = Vec::with_capacity(n);
+    let mut f: Vec<SV> = Vec::with_capacity(n);
+    for i in 0..n {
+        let link = &robot.links[i];
+        let s = kin.s[i];
+        let vi = kin.v[i];
+        let ap = match link.parent {
+            Some(p) => a[p],
+            None => a0,
+        };
+        let ai = kin.xup[i].apply(&ap) + s.scale(qdd[i]) + vi.crm(&s.scale(qd[i]));
+        let fi = link.inertia.apply(&ai) + vi.crf(&link.inertia.apply(&vi));
+        a.push(ai);
+        f.push(fi);
+    }
+    // Accumulate the nominal backward pass: f[i] becomes the total force
+    // transmitted through joint i (link force + subtree contributions).
+    // The q-derivative of the backward recursion differentiates X_iᵀ
+    // applied to THIS accumulated force.
+    for i in (0..n).rev() {
+        if let Some(p) = robot.links[i].parent {
+            let fp = kin.xup[i].inv_apply_force(&f[i]);
+            f[p] = f[p] + fp;
+        }
+    }
+
+    let mut dtau_dq = DMat::zeros(n, n);
+    let mut dtau_dqd = DMat::zeros(n, n);
+
+    // Sparsity: perturbing coordinate j only disturbs the tangent state
+    // of subtree(j); outside it the forward tangents are identically
+    // zero, and the backward tangent force only flows from j up the
+    // ancestor path. Restricting both sweeps accordingly turns the dense
+    // O(N²·c) tangent pass into O(Σ|subtree| + Σdepth) — the same
+    // sparsity the accelerator's Df/Db units exploit (EXPERIMENTS §Perf).
+    let subtrees: Vec<Vec<usize>> = (0..n).map(|j| robot.subtree(j)).collect();
+
+    let mut dv: Vec<SV> = vec![SV::ZERO; n];
+    let mut da: Vec<SV> = vec![SV::ZERO; n];
+    let mut dfacc: Vec<SV> = vec![SV::ZERO; n];
+
+    // One tangent sweep per differentiation direction.
+    for j in 0..n {
+        let members = &subtrees[j];
+
+        // ---- ∂/∂q_j ----
+        {
+            for &i in members {
+                let link = &robot.links[i];
+                let s = kin.s[i];
+                let in_sub = |k: usize| members.binary_search(&k).is_ok();
+                let (dvp, dap) = match link.parent {
+                    Some(p) if in_sub(p) => (dv[p], da[p]),
+                    _ => (SV::ZERO, SV::ZERO),
+                };
+                let mut dvi = kin.xup[i].apply(&dvp);
+                let mut dai = kin.xup[i].apply(&dap);
+                if i == j {
+                    // d(X_i y)/dq_i = −S_i × (X_i y) from jcalc.
+                    let vp_term = match link.parent {
+                        Some(p) => kin.xup[i].apply(&kin.v[p]),
+                        None => SV::ZERO,
+                    };
+                    let ap = match link.parent {
+                        Some(p) => a[p],
+                        None => a0,
+                    };
+                    dvi = dvi - s.crm(&vp_term);
+                    dai = dai - s.crm(&kin.xup[i].apply(&ap));
+                }
+                dai = dai + dvi.crm(&s.scale(qd[i]));
+                let iv = link.inertia.apply(&kin.v[i]);
+                dfacc[i] = link.inertia.apply(&dai)
+                    + dvi.crf(&iv)
+                    + kin.v[i].crf(&link.inertia.apply(&dvi));
+                dv[i] = dvi;
+                da[i] = dai;
+            }
+            // Backward within the subtree (descending order).
+            for &i in members.iter().rev() {
+                dtau_dq[(i, j)] = kin.s[i].dot(&dfacc[i]);
+                if let Some(p) = robot.links[i].parent {
+                    let mut dfp = kin.xup[i].inv_apply_force(&dfacc[i]);
+                    if i == j {
+                        // d(X_jᵀ f_j)/dq_j = X_treeᵀ (S ×* (XJᵀ f_j)),
+                        // applied to the ACCUMULATED nominal force.
+                        let fj = kin.xj[i].inv_apply_force(&f[i]);
+                        dfp = dfp
+                            + robot.links[i].x_tree.inv_apply_force(&kin.s[i].crf(&fj));
+                    }
+                    if members.binary_search(&p).is_ok() {
+                        dfacc[p] = dfacc[p] + dfp;
+                    } else {
+                        // Left the subtree: walk the remaining ancestor
+                        // path, projecting as we go.
+                        let mut carried = dfp;
+                        let mut cur = p;
+                        loop {
+                            dtau_dq[(cur, j)] += kin.s[cur].dot(&carried);
+                            match robot.links[cur].parent {
+                                Some(pp) => {
+                                    carried = kin.xup[cur].inv_apply_force(&carried);
+                                    cur = pp;
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                }
+            }
+            for &i in members {
+                dv[i] = SV::ZERO;
+                da[i] = SV::ZERO;
+                dfacc[i] = SV::ZERO;
+            }
+        }
+
+        // ---- ∂/∂q̇_j ----
+        {
+            for &i in members {
+                let link = &robot.links[i];
+                let s = kin.s[i];
+                let in_sub = |k: usize| members.binary_search(&k).is_ok();
+                let (dvp, dap) = match link.parent {
+                    Some(p) if in_sub(p) => (dv[p], da[p]),
+                    _ => (SV::ZERO, SV::ZERO),
+                };
+                let mut dvi = kin.xup[i].apply(&dvp);
+                if i == j {
+                    dvi = dvi + s;
+                }
+                let mut dai = kin.xup[i].apply(&dap) + dvi.crm(&s.scale(qd[i]));
+                if i == j {
+                    dai = dai + kin.v[i].crm(&s);
+                }
+                let iv = link.inertia.apply(&kin.v[i]);
+                dfacc[i] = link.inertia.apply(&dai)
+                    + dvi.crf(&iv)
+                    + kin.v[i].crf(&link.inertia.apply(&dvi));
+                dv[i] = dvi;
+                da[i] = dai;
+            }
+            for &i in members.iter().rev() {
+                dtau_dqd[(i, j)] = kin.s[i].dot(&dfacc[i]);
+                if let Some(p) = robot.links[i].parent {
+                    let dfp = kin.xup[i].inv_apply_force(&dfacc[i]);
+                    if members.binary_search(&p).is_ok() {
+                        dfacc[p] = dfacc[p] + dfp;
+                    } else {
+                        let mut carried = dfp;
+                        let mut cur = p;
+                        loop {
+                            dtau_dqd[(cur, j)] += kin.s[cur].dot(&carried);
+                            match robot.links[cur].parent {
+                                Some(pp) => {
+                                    carried = kin.xup[cur].inv_apply_force(&carried);
+                                    cur = pp;
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                }
+            }
+            for &i in members {
+                dv[i] = SV::ZERO;
+                da[i] = SV::ZERO;
+                dfacc[i] = SV::ZERO;
+            }
+        }
+    }
+    (dtau_dq, dtau_dqd)
+}
+
+/// ΔFD: (∂q̈/∂q, ∂q̈/∂q̇, ∂q̈/∂τ = M⁻¹), via the paper's Eq. 2:
+/// ∂q̈/∂x = −M⁻¹ ∂ID/∂x evaluated at q̈ = FD(q, q̇, τ).
+pub fn fd_derivatives(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    tau: &[f64],
+) -> (DMat, DMat, DMat) {
+    let qdd = super::fd::fd(robot, q, qd, tau, None);
+    let (did_dq, did_dqd) = rnea_derivatives(robot, q, qd, &qdd);
+    let mi = super::minv::minv(robot, q);
+    let dq = mi.matmul(&did_dq).scale(-1.0);
+    let dqd = mi.matmul(&did_dqd).scale(-1.0);
+    (dq, dqd, mi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::fd::fd;
+    use crate::dynamics::rnea::rnea;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    fn fd_check(
+        robot: &Robot,
+        eval: impl Fn(&[f64], &[f64]) -> Vec<f64>,
+        q: &[f64],
+        qd: &[f64],
+        analytic_dq: &DMat,
+        analytic_dqd: &DMat,
+        tol: f64,
+        what: &str,
+    ) {
+        let n = robot.dof();
+        let h = 1e-6;
+        for j in 0..n {
+            let mut qp = q.to_vec();
+            let mut qm = q.to_vec();
+            qp[j] += h;
+            qm[j] -= h;
+            let tp = eval(&qp, qd);
+            let tm = eval(&qm, qd);
+            for i in 0..n {
+                let fdiff = (tp[i] - tm[i]) / (2.0 * h);
+                let ana = analytic_dq[(i, j)];
+                assert!(
+                    (fdiff - ana).abs() < tol * (1.0 + fdiff.abs()),
+                    "{what} ∂/∂q: ({i},{j}): fd {fdiff} vs analytic {ana}"
+                );
+            }
+            let mut vp = qd.to_vec();
+            let mut vm = qd.to_vec();
+            vp[j] += h;
+            vm[j] -= h;
+            let tp = eval(q, &vp);
+            let tm = eval(q, &vm);
+            for i in 0..n {
+                let fdiff = (tp[i] - tm[i]) / (2.0 * h);
+                let ana = analytic_dqd[(i, j)];
+                assert!(
+                    (fdiff - ana).abs() < tol * (1.0 + fdiff.abs()),
+                    "{what} ∂/∂q̇: ({i},{j}): fd {fdiff} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rnea_derivatives_match_finite_differences() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::baxter()] {
+            let mut rng = Rng::new(400);
+            let s = State::random(&robot, &mut rng);
+            let n = robot.dof();
+            let qdd = rng.vec_range(n, -2.0, 2.0);
+            let (dq, dqd) = rnea_derivatives(&robot, &s.q, &s.qd, &qdd);
+            let r = robot.clone();
+            let qdd2 = qdd.clone();
+            fd_check(
+                &robot,
+                move |q, qd| rnea(&r, q, qd, &qdd2, None),
+                &s.q,
+                &s.qd,
+                &dq,
+                &dqd,
+                2e-4,
+                &robot.name,
+            );
+        }
+    }
+
+    #[test]
+    fn rnea_derivatives_atlas() {
+        let robot = builtin::atlas();
+        let mut rng = Rng::new(401);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let (dq, dqd) = rnea_derivatives(&robot, &s.q, &s.qd, &qdd);
+        let r = robot.clone();
+        fd_check(
+            &robot,
+            move |q, qd| rnea(&r, q, qd, &qdd, None),
+            &s.q,
+            &s.qd,
+            &dq,
+            &dqd,
+            5e-4,
+            "atlas",
+        );
+    }
+
+    #[test]
+    fn fd_derivatives_match_finite_differences() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(402);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let tau = rng.vec_range(n, -10.0, 10.0);
+        let (dq, dqd, dtau) = fd_derivatives(&robot, &s.q, &s.qd, &tau);
+        let r = robot.clone();
+        let t2 = tau.clone();
+        fd_check(
+            &robot,
+            move |q, qd| fd(&r, q, qd, &t2, None),
+            &s.q,
+            &s.qd,
+            &dq,
+            &dqd,
+            5e-4,
+            "iiwa ΔFD",
+        );
+        // ∂q̈/∂τ = M⁻¹ exactly.
+        let h = 1e-6;
+        for j in 0..n {
+            let mut tp = tau.clone();
+            let mut tm = tau.clone();
+            tp[j] += h;
+            tm[j] -= h;
+            let qp = fd(&robot, &s.q, &s.qd, &tp, None);
+            let qm = fd(&robot, &s.q, &s.qd, &tm, None);
+            for i in 0..n {
+                let fdiff = (qp[i] - qm[i]) / (2.0 * h);
+                assert!(
+                    (fdiff - dtau[(i, j)]).abs() < 1e-4 * (1.0 + fdiff.abs()),
+                    "∂q̈/∂τ ({i},{j})"
+                );
+            }
+        }
+    }
+}

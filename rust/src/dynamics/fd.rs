@@ -1,0 +1,177 @@
+//! Forward dynamics. Two routes, matching the paper's Fig. 3(a):
+//!
+//! * `fd` — the accelerator's formulation `q̈ = M⁻¹ (τ − C)` (Eq. 2 in the
+//!   paper: FD = M⁻¹·ID), built from the Minv + RNEA modules.
+//! * `aba` — the O(N) Articulated Body Algorithm, used as an independent
+//!   correctness oracle and as the ICMS motion-simulator fast path.
+
+use super::kinematics::Kin;
+use super::minv::minv_with_kin;
+use super::rnea::rnea_with_kin;
+use crate::model::Robot;
+use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::SV;
+
+/// q̈ = M⁻¹(q) · (τ − C(q, q̇, f_ext)) — the composition the accelerator
+/// computes with its RNEA and Minv RTP modules.
+pub fn fd(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
+    let n = robot.dof();
+    assert_eq!(tau.len(), n);
+    let kin = Kin::new(robot, q, qd);
+    let bias = rnea_with_kin(robot, &kin, &vec![0.0; n], fext);
+    let mi = minv_with_kin(robot, &kin);
+    let rhs: Vec<f64> = tau.iter().zip(&bias).map(|(t, c)| t - c).collect();
+    mi.matvec(&rhs)
+}
+
+/// Articulated Body Algorithm (Featherstone RBDA Table 7.1).
+pub fn aba(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
+    let n = robot.dof();
+    let kin = Kin::new(robot, q, qd);
+    let a0 = SV::new(crate::spatial::V3::ZERO, -robot.gravity);
+
+    // Forward: bias accelerations and forces.
+    let mut c: Vec<SV> = Vec::with_capacity(n); // velocity-product accel
+    let mut pa: Vec<SV> = Vec::with_capacity(n); // bias force
+    let mut ia: Vec<M6> = Vec::with_capacity(n);
+    for i in 0..n {
+        let link = &robot.links[i];
+        let vi = kin.v[i];
+        let ci = vi.crm(&kin.s[i].scale(kin.qd[i]));
+        let mut pi = vi.crf(&link.inertia.apply(&vi));
+        if let Some(fe) = fext {
+            pi = pi - fe[i];
+        }
+        c.push(ci);
+        pa.push(pi);
+        ia.push(link.inertia.to_mat6());
+    }
+
+    // Backward: articulated inertias.
+    let mut u: Vec<SV> = vec![SV::ZERO; n];
+    let mut dinv = vec![0.0; n];
+    let mut uu = vec![0.0; n];
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = matvec6(&ia[i], &s);
+        let di = s.dot(&ui);
+        let di_inv = 1.0 / di;
+        u[i] = ui;
+        dinv[i] = di_inv;
+        uu[i] = tau[i] - s.dot(&pa[i]);
+        if let Some(p) = robot.links[i].parent {
+            let ia_art = sub6(&ia[i], &scale6(&outer6(&ui, &ui), di_inv));
+            let xm = kin.xup[i].to_mat6();
+            let contrib = mul6(&t6(&xm), &mul6(&ia_art, &xm));
+            for r in 0..6 {
+                for cc in 0..6 {
+                    ia[p][r][cc] += contrib[r][cc];
+                }
+            }
+            let pa_art = pa[i]
+                + matvec6(&ia_art, &c[i])
+                + ui.scale(di_inv * uu[i]);
+            pa[p] = pa[p] + kin.xup[i].inv_apply_force(&pa_art);
+        }
+    }
+
+    // Forward: accelerations.
+    let mut qdd = vec![0.0; n];
+    let mut a: Vec<SV> = vec![SV::ZERO; n];
+    for i in 0..n {
+        let a_parent = match robot.links[i].parent {
+            Some(p) => a[p],
+            None => a0,
+        };
+        let ap = kin.xup[i].apply(&a_parent) + c[i];
+        qdd[i] = dinv[i] * (uu[i] - u[i].dot(&ap));
+        a[i] = ap + kin.s[i].scale(qdd[i]);
+    }
+    qdd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::rnea::rnea;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    /// FD(ID(q̈)) = q̈ — the paper's Eq. 2 round-trip, across all robots.
+    #[test]
+    fn fd_inverts_id() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let mut rng = Rng::new(300);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let n = robot.dof();
+                let qdd_in = rng.vec_range(n, -4.0, 4.0);
+                let tau = rnea(&robot, &s.q, &s.qd, &qdd_in, None);
+                let qdd_out = fd(&robot, &s.q, &s.qd, &tau, None);
+                for i in 0..n {
+                    assert!(
+                        (qdd_out[i] - qdd_in[i]).abs() < 1e-7 * (1.0 + qdd_in[i].abs()),
+                        "{}: joint {i}: {} vs {}",
+                        robot.name,
+                        qdd_out[i],
+                        qdd_in[i]
+                    );
+                }
+            }
+        }
+    }
+
+    /// ABA (O(N)) and Minv·(τ−C) (O(N²)) must agree — two independent
+    /// formulations of the same dynamics.
+    #[test]
+    fn aba_matches_minv_route() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas()] {
+            let mut rng = Rng::new(301);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let n = robot.dof();
+                let tau = rng.vec_range(n, -20.0, 20.0);
+                let q1 = fd(&robot, &s.q, &s.qd, &tau, None);
+                let q2 = aba(&robot, &s.q, &s.qd, &tau, None);
+                for i in 0..n {
+                    assert!(
+                        (q1[i] - q2[i]).abs() < 1e-6 * (1.0 + q1[i].abs()),
+                        "{}: joint {i}: {} vs {}",
+                        robot.name,
+                        q1[i],
+                        q2[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn external_forces_consistent_between_routes() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(302);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let tau = rng.vec_range(n, -10.0, 10.0);
+        let fe: Vec<SV> = (0..n).map(|_| SV::from_slice(&rng.vec_range(6, -4.0, 4.0))).collect();
+        let q1 = fd(&robot, &s.q, &s.qd, &tau, Some(&fe));
+        let q2 = aba(&robot, &s.q, &s.qd, &tau, Some(&fe));
+        for i in 0..n {
+            assert!((q1[i] - q2[i]).abs() < 1e-6 * (1.0 + q1[i].abs()), "joint {i}");
+        }
+    }
+
+    /// Free fall: τ=0 at rest ⇒ gravity accelerations; feeding those back
+    /// into RNEA must return ~zero torque.
+    #[test]
+    fn free_fall_fixed_point() {
+        let robot = builtin::atlas();
+        let n = robot.dof();
+        let q = vec![0.1; n];
+        let qdd = aba(&robot, &q, &vec![0.0; n], &vec![0.0; n], None);
+        let tau = rnea(&robot, &q, &vec![0.0; n], &qdd, None);
+        for (i, t) in tau.iter().enumerate() {
+            assert!(t.abs() < 1e-8, "joint {i}: residual τ = {t}");
+        }
+    }
+}

@@ -1,0 +1,382 @@
+//! Analytical mass-matrix inverse (Carpentier's Minv algorithm) and the
+//! paper's **division-deferring** reformulation (Algorithm 2, Fig. 6).
+//!
+//! Both compute M⁻¹(q) directly in O(N²) as a batched, zero-velocity
+//! articulated-body sweep: a backward pass builds articulated inertias
+//! `IA_i`, the per-joint scalars `D_i = SᵀIA S`, and a 6×N force
+//! accumulator `F`; a forward pass propagates accelerations per unit
+//! torque. `M⁻¹[i][j] = ∂q̈_i/∂τ_j`.
+//!
+//! **Original (Alg. 1)** uses `1/D_i` *inline* in the backward recurrence
+//!
+//! ```text
+//!   IA_λ += Xᵀ (IA_i − U_i U_iᵀ / D_i) X        ← reciprocal on the
+//!   F_λ  += Xᵀ (F_i + U_i u_i / D_i)              longest latency path
+//! ```
+//!
+//! **Division-deferring (Alg. 2)** multiplies both updates through by the
+//! *holding factor* `D_i`, propagating the scaled numerators and a
+//! transfer coefficient, so every reciprocal moves off the backward
+//! recurrence and into a shared, fully-pipelined divider that runs in
+//! parallel (`DividerQueue`); the forward pass then consumes `1/D_i`:
+//!
+//! ```text
+//!   N_i  = D_i·IA_i − U_i U_iᵀ            (extra scalar·matrix MACs)
+//!   G_i  = D_i·F_i  + U_i u_i
+//!   IA_λ += (Xᵀ N_i X) · inv_i           inv_i fetched from the divider,
+//!   F_λ  += (Xᵀ G_i)  · inv_i            computed concurrently with MACs
+//! ```
+
+use super::kinematics::Kin;
+use crate::model::Robot;
+use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::{DMat, SV};
+
+/// Shared-divider model: requests are enqueued during the backward pass
+/// and results consumed later, mirroring the staggered schedule of
+/// Fig. 6(b). Kept as an explicit structure so the accelerator cycle
+/// model (and its tests) can replay the schedule.
+#[derive(Debug, Default, Clone)]
+pub struct DividerQueue {
+    /// (joint id, dividend enqueued during backward pass).
+    pub requests: Vec<(usize, f64)>,
+}
+
+impl DividerQueue {
+    pub fn push(&mut self, joint: usize, d: f64) {
+        self.requests.push((joint, d));
+    }
+
+    /// Execute all divisions "in parallel" (one pipelined unit in HW).
+    pub fn resolve(&self) -> Vec<(usize, f64)> {
+        self.requests.iter().map(|&(j, d)| (j, 1.0 / d)).collect()
+    }
+}
+
+/// Original analytical Minv (reciprocals inline, Algorithm 1).
+pub fn minv(robot: &Robot, q: &[f64]) -> DMat {
+    let kin = Kin::positions(robot, q);
+    minv_with_kin(robot, &kin)
+}
+
+pub fn minv_with_kin(robot: &Robot, kin: &Kin) -> DMat {
+    let n = robot.dof();
+    let mut ia: Vec<M6> = (0..n).map(|i| robot.links[i].inertia.to_mat6()).collect();
+    let mut u: Vec<SV> = vec![SV::ZERO; n];
+    let mut dinv = vec![0.0; n];
+    // F columns are restricted to each joint's subtree (the accumulator
+    // F_i[:, j] is nonzero only for j ∈ subtree(i)), and the forward
+    // acceleration responses to each joint's base-branch: M(q) of a
+    // fixed-base tree is block-diagonal per base branch, hence so is
+    // M⁻¹. Exploiting both cuts the hot path ~2–3× on high-DOF robots
+    // (EXPERIMENTS.md §Perf).
+    let (sub, br) = topology_masks(robot);
+    let mut f: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    let mut minv = DMat::zeros(n, n);
+
+    // -------- backward pass (tip → base) --------
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = matvec6(&ia[i], &s);
+        let di = s.dot(&ui);
+        let di_inv = 1.0 / di; // ← inline reciprocal (longest path)
+        u[i] = ui;
+        dinv[i] = di_inv;
+
+        // u row: unit torque at i minus what the subtree already carries.
+        minv[(i, i)] += di_inv;
+        for j in 0..n {
+            if !sub[i * n + j] {
+                continue;
+            }
+            let sf = s.dot(&f[i][j]);
+            if sf != 0.0 {
+                minv[(i, j)] -= di_inv * sf;
+            }
+        }
+
+        if let Some(p) = robot.links[i].parent {
+            // IA_λ += Xᵀ (IA − U Uᵀ/D) X
+            let uut = outer6(&ui, &ui);
+            let ia_art = sub6(&ia[i], &scale6(&uut, di_inv));
+            let xm = kin.xup[i].to_mat6();
+            let contrib = mul6(&t6(&xm), &mul6(&ia_art, &xm));
+            for r in 0..6 {
+                for c in 0..6 {
+                    ia[p][r][c] += contrib[r][c];
+                }
+            }
+            // F_λ += Xᵀ (F_i + U_i · minv_row_i) — subtree columns only.
+            for j in 0..n {
+                if !sub[i * n + j] {
+                    continue;
+                }
+                let fij = f[i][j] + ui.scale(minv[(i, j)]);
+                f[p][j] = f[p][j] + kin.xup[i].inv_apply_force(&fij);
+            }
+        }
+    }
+
+    // -------- forward pass (base → tip) --------
+    // A[j] per link: spatial acceleration response per unit τ_j; only
+    // columns in link i's base branch can be nonzero.
+    let mut a: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    for i in 0..n {
+        let s = kin.s[i];
+        match robot.links[i].parent {
+            None => {
+                for j in 0..n {
+                    if br[i * n + j] {
+                        a[i][j] = s.scale(minv[(i, j)]);
+                    }
+                }
+            }
+            Some(p) => {
+                for j in 0..n {
+                    if !br[i * n + j] {
+                        continue;
+                    }
+                    let xa = kin.xup[i].apply(&a[p][j]);
+                    // q̈ correction: −(Uᵀ X a_λ)/D
+                    let corr = dinv[i] * u[i].dot(&xa);
+                    if corr != 0.0 {
+                        minv[(i, j)] -= corr;
+                    }
+                    a[i][j] = xa + s.scale(minv[(i, j)]);
+                }
+            }
+        }
+    }
+    minv
+}
+
+/// Flat topology masks, built with two allocations (per-call cost is
+/// negligible even for 7-DOF arms — see EXPERIMENTS.md §Perf for the
+/// failed Vec<Vec<usize>> variant):
+/// `sub[i*n+j]` — j ∈ subtree(i);
+/// `br[i*n+j]`  — i and j share a base branch (M⁻¹ block support).
+fn topology_masks(robot: &Robot) -> (Vec<bool>, Vec<bool>) {
+    let n = robot.dof();
+    let mut sub = vec![false; n * n];
+    let mut root = vec![0usize; n];
+    for i in 0..n {
+        sub[i * n + i] = true;
+        root[i] = match robot.links[i].parent {
+            Some(p) => root[p],
+            None => i,
+        };
+    }
+    // j descends from i iff i's flag is set along j's ancestor chain;
+    // fill by propagating each j up once (paths are short).
+    for j in 0..n {
+        let mut cur = robot.links[j].parent;
+        while let Some(p) = cur {
+            sub[p * n + j] = true;
+            cur = robot.links[p].parent;
+        }
+    }
+    let mut br = vec![false; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            br[i * n + j] = root[i] == root[j];
+        }
+    }
+    (sub, br)
+}
+
+/// Division-deferring Minv (Algorithm 2 + Fig. 6(c) architecture).
+/// Returns the same matrix as [`minv`] (verified to f64 precision) while
+/// keeping every reciprocal off the backward recurrence: reciprocals are
+/// enqueued on a [`DividerQueue`] and consumed one stage later, exactly
+/// as the shared pipelined divider does in hardware.
+pub fn minv_dd(robot: &Robot, q: &[f64]) -> DMat {
+    minv_dd_traced(robot, q).0
+}
+
+/// As [`minv_dd`] but also returns the divider request trace (used by the
+/// accel model to validate the staggered divider schedule).
+pub fn minv_dd_traced(robot: &Robot, q: &[f64]) -> (DMat, DividerQueue) {
+    let kin = Kin::positions(robot, q);
+    let n = robot.dof();
+    let mut ia: Vec<M6> = (0..n).map(|i| robot.links[i].inertia.to_mat6()).collect();
+    let mut u: Vec<SV> = vec![SV::ZERO; n];
+    let mut queue = DividerQueue::default();
+
+    // Stage Mb (backward): NO reciprocal anywhere in this loop. The
+    // scaled numerators N_i, G_i are formed with the extra multiplies the
+    // paper highlights (purple box), and the division result needed by
+    // the *parent* stage is modeled as arriving from the shared divider
+    // before the parent's accumulate executes (it runs concurrently with
+    // the Xᵀ·X MAC work).
+    //
+    // row[i][j] accumulates Sᵀ F terms in *scaled* form; we keep the
+    // per-joint scale explicit via the holding factor: each child hands
+    // the parent (N_i, G_i, D_i) and the parent applies inv(D_i) fetched
+    // from the divider output port.
+    let (sub, br) = topology_masks(robot);
+    let mut f: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    let mut raw_row: Vec<Vec<f64>> = vec![vec![0.0; n]; n]; // D_i·minv_row_i (deferred form)
+
+    // Backward sweep. The divider queue mirrors Fig. 6(b): requests are
+    // staggered by joint so one fully-pipelined divider serves all Mb
+    // units; `resolve()` happens conceptually in parallel, we simply may
+    // not use 1/D_i *within* joint i's own stage.
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = matvec6(&ia[i], &s);
+        let di = s.dot(&ui);
+        u[i] = ui;
+        queue.push(i, di);
+
+        // Deferred row update: raw_row_i = e_i − Sᵀ F_i. The original
+        // algorithm divides this row by D_i here; deferring leaves the
+        // row unscaled and the 1/D_i lands after the shared divider.
+        raw_row[i][i] += 1.0;
+        for j in 0..n {
+            if !sub[i * n + j] {
+                continue;
+            }
+            let sf = s.dot(&f[i][j]);
+            if sf != 0.0 {
+                raw_row[i][j] -= sf;
+            }
+        }
+
+        if let Some(p) = robot.links[i].parent {
+            // N_i = D_i·IA_i − U U ᵀ  (scalar·matrix + rank-1: extra MACs)
+            let uut = outer6(&ui, &ui);
+            let ni = sub6(&scale6(&ia[i], di), &uut);
+            let xm = kin.xup[i].to_mat6();
+            let contrib = mul6(&t6(&xm), &mul6(&ni, &xm));
+            // Parent stage consumes inv_i from the divider (concurrent):
+            let inv_i = 1.0 / di; // value identical; latency modeled in accel
+            for r in 0..6 {
+                for c in 0..6 {
+                    ia[p][r][c] += contrib[r][c] * inv_i;
+                }
+            }
+            // G_i = D_i·F_i + U_i·raw_row_i ; F_λ += Xᵀ G_i · inv_i
+            for j in 0..n {
+                if !sub[i * n + j] {
+                    continue;
+                }
+                let gij = f[i][j].scale(di) + ui.scale(raw_row[i][j]);
+                f[p][j] = f[p][j] + kin.xup[i].inv_apply_force(&gij).scale(inv_i);
+            }
+        }
+    }
+
+    // Shared divider resolves all reciprocals (one pipelined unit).
+    let mut dinv = vec![0.0; n];
+    for (j, inv) in queue.resolve() {
+        dinv[j] = inv;
+    }
+
+    // Forward pass (Mf units): consume divider outputs.
+    let mut minv = DMat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            minv[(i, j)] = raw_row[i][j] * dinv[i];
+        }
+    }
+    let mut a: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    for i in 0..n {
+        let s = kin.s[i];
+        match robot.links[i].parent {
+            None => {
+                for j in 0..n {
+                    if br[i * n + j] {
+                        a[i][j] = s.scale(minv[(i, j)]);
+                    }
+                }
+            }
+            Some(p) => {
+                for j in 0..n {
+                    if !br[i * n + j] {
+                        continue;
+                    }
+                    let xa = kin.xup[i].apply(&a[p][j]);
+                    let corr = dinv[i] * u[i].dot(&xa);
+                    if corr != 0.0 {
+                        minv[(i, j)] -= corr;
+                    }
+                    a[i][j] = xa + s.scale(minv[(i, j)]);
+                }
+            }
+        }
+    }
+    (minv, queue)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::crba::crba;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn minv_times_m_is_identity() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let mut rng = Rng::new(200);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let m = crba(&robot, &s.q);
+                let mi = minv(&robot, &s.q);
+                let prod = mi.matmul(&m);
+                let err = prod.sub(&DMat::identity(robot.dof())).max_abs();
+                assert!(err < 1e-8, "{}: |M⁻¹M − I| = {err}", robot.name);
+            }
+        }
+    }
+
+    #[test]
+    fn division_deferring_matches_original() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let mut rng = Rng::new(201);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let a = minv(&robot, &s.q);
+                let b = minv_dd(&robot, &s.q);
+                let err = a.sub(&b).max_abs();
+                assert!(err < 1e-9, "{}: |minv − minv_dd| = {err}", robot.name);
+            }
+        }
+    }
+
+    #[test]
+    fn divider_queue_one_request_per_joint() {
+        let robot = builtin::atlas();
+        let mut rng = Rng::new(202);
+        let s = State::random(&robot, &mut rng);
+        let (_, q) = minv_dd_traced(&robot, &s.q);
+        assert_eq!(q.requests.len(), robot.dof());
+        // Requests arrive tip→base (staggered schedule) and all dividends
+        // are positive (M SPD ⇒ D_i > 0).
+        for (j, (joint, d)) in q.requests.iter().enumerate() {
+            assert_eq!(*joint, robot.dof() - 1 - j);
+            assert!(*d > 0.0, "D_{joint} = {d} must be positive");
+        }
+    }
+
+    #[test]
+    fn minv_symmetric() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(203);
+        let s = State::random(&robot, &mut rng);
+        let mi = minv(&robot, &s.q);
+        let err = mi.sub(&mi.t()).max_abs();
+        assert!(err < 1e-9, "M⁻¹ should be symmetric, err={err}");
+    }
+
+    #[test]
+    fn matches_dense_lu_inverse() {
+        let robot = builtin::baxter();
+        let mut rng = Rng::new(204);
+        let s = State::random(&robot, &mut rng);
+        let dense = crba(&robot, &s.q).inverse().unwrap();
+        let mi = minv(&robot, &s.q);
+        let err = dense.sub(&mi).max_abs();
+        assert!(err < 1e-7, "analytical vs LU inverse: {err}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Rigid-body dynamics algorithms — the paper's RBD function suite
+//! (Fig. 3(a)): ID/RNEA, M(q) via CRBA, the analytical M⁻¹ (original and
+//! division-deferring), FD = M⁻¹·ID, and the analytical derivatives
+//! ΔID/ΔFD. Doubles as the measured CPU baseline (Pinocchio stand-in).
+
+pub mod crba;
+pub mod deriv;
+pub mod fd;
+pub mod kinematics;
+pub mod minv;
+pub mod rnea;
+
+pub use crba::crba;
+pub use deriv::{fd_derivatives, rnea_derivatives};
+pub use fd::{aba, fd};
+pub use kinematics::Kin;
+pub use minv::{minv, minv_dd, minv_dd_traced, DividerQueue};
+pub use rnea::{bias_forces, gravity_torques, rnea};

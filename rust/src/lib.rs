@@ -1,0 +1,27 @@
+//! # DRACO reproduction library
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *DRACO: Co-design
+//! for DSP-Efficient Rigid Body Dynamics Accelerator* (CS.AR 2025).
+//!
+//! * [`spatial`] / [`model`] / [`dynamics`] — a from-scratch rigid-body-
+//!   dynamics library (the Pinocchio-equivalent substrate + CPU baseline).
+//! * [`quant`] — the paper's precision-aware quantization framework.
+//! * [`control`] / [`sim`] — PID/LQR/MPC controllers and the ICMS
+//!   closed-loop control & motion simulator.
+//! * [`accel`] — the FPGA accelerator cycle model (RTP pipelines, division
+//!   deferring, inter-module DSP reuse) used to regenerate the paper's
+//!   evaluation figures.
+//! * [`runtime`] / [`coordinator`] — the PJRT execution path: load
+//!   AOT-compiled HLO artifacts and serve batched RBD requests.
+//! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).
+
+pub mod accel;
+pub mod coordinator;
+pub mod control;
+pub mod dynamics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod spatial;
+pub mod util;

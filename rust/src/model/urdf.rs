@@ -1,0 +1,470 @@
+//! URDF-lite importer.
+//!
+//! The paper's quantization framework takes "the robot's urdf description"
+//! as input. This module parses the URDF subset needed for RBD: `<link>`
+//! inertial blocks and `<joint>` origin/axis/parent/child/limit, over a
+//! from-scratch XML tokenizer (no XML crate offline). Fixed joints are
+//! merged into their parent; only revolute/continuous/prismatic joints
+//! become model DOF.
+
+use super::joint::{Joint, JointType};
+use super::robot::{Link, Robot};
+use crate::spatial::{Inertia, M3, V3};
+use std::collections::BTreeMap;
+
+// ------------------------- tiny XML -------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct XmlNode {
+    pub tag: String,
+    pub attrs: BTreeMap<String, String>,
+    pub children: Vec<XmlNode>,
+}
+
+impl XmlNode {
+    pub fn attr(&self, name: &str) -> Option<&str> {
+        self.attrs.get(name).map(|s| s.as_str())
+    }
+
+    pub fn find_all<'a>(&'a self, tag: &str) -> Vec<&'a XmlNode> {
+        self.children.iter().filter(|c| c.tag == tag).collect()
+    }
+
+    pub fn find<'a>(&'a self, tag: &str) -> Option<&'a XmlNode> {
+        self.children.iter().find(|c| c.tag == tag)
+    }
+}
+
+/// Parse an XML document into its root element. Handles declarations,
+/// comments, self-closing tags, quoted attributes; ignores text content
+/// (URDF carries everything in attributes).
+pub fn parse_xml(src: &str) -> Result<XmlNode, String> {
+    let mut p = Xml { b: src.as_bytes(), i: 0 };
+    p.skip_misc();
+    let root = p.element()?;
+    Ok(root)
+}
+
+struct Xml<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Xml<'a> {
+    fn err(&self, m: &str) -> String {
+        format!("xml error at byte {}: {m}", self.i)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn starts(&self, s: &str) -> bool {
+        self.b[self.i..].starts_with(s.as_bytes())
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// Skip whitespace, comments, processing instructions, doctype.
+    fn skip_misc(&mut self) {
+        loop {
+            self.skip_ws();
+            if self.starts("<!--") {
+                if let Some(end) = find(self.b, self.i + 4, b"-->") {
+                    self.i = end + 3;
+                    continue;
+                }
+                self.i = self.b.len();
+            } else if self.starts("<?") {
+                if let Some(end) = find(self.b, self.i + 2, b"?>") {
+                    self.i = end + 2;
+                    continue;
+                }
+                self.i = self.b.len();
+            } else if self.starts("<!") {
+                if let Some(end) = find(self.b, self.i + 2, b">") {
+                    self.i = end + 1;
+                    continue;
+                }
+                self.i = self.b.len();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn name(&mut self) -> Result<String, String> {
+        let start = self.i;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' || c == b':' || c == b'.')
+        {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(self.err("expected name"));
+        }
+        Ok(String::from_utf8_lossy(&self.b[start..self.i]).into_owned())
+    }
+
+    fn element(&mut self) -> Result<XmlNode, String> {
+        if self.peek() != Some(b'<') {
+            return Err(self.err("expected '<'"));
+        }
+        self.i += 1;
+        let tag = self.name()?;
+        let mut attrs = BTreeMap::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'/') => {
+                    self.i += 1;
+                    if self.peek() != Some(b'>') {
+                        return Err(self.err("expected '>' after '/'"));
+                    }
+                    self.i += 1;
+                    return Ok(XmlNode { tag, attrs, children: Vec::new() });
+                }
+                Some(b'>') => {
+                    self.i += 1;
+                    break;
+                }
+                Some(_) => {
+                    let key = self.name()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b'=') {
+                        return Err(self.err("expected '='"));
+                    }
+                    self.i += 1;
+                    self.skip_ws();
+                    let quote = self.peek().ok_or_else(|| self.err("eof in attr"))?;
+                    if quote != b'"' && quote != b'\'' {
+                        return Err(self.err("expected quote"));
+                    }
+                    self.i += 1;
+                    let start = self.i;
+                    while self.peek().is_some() && self.peek() != Some(quote) {
+                        self.i += 1;
+                    }
+                    let val = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+                    self.i += 1; // closing quote
+                    attrs.insert(key, val);
+                }
+                None => return Err(self.err("eof in tag")),
+            }
+        }
+        // children / text until closing tag
+        let mut children = Vec::new();
+        loop {
+            self.skip_misc();
+            if self.starts("</") {
+                self.i += 2;
+                let close = self.name()?;
+                if close != tag {
+                    return Err(self.err(&format!("mismatched </{close}>, open <{tag}>")));
+                }
+                self.skip_ws();
+                if self.peek() != Some(b'>') {
+                    return Err(self.err("expected '>'"));
+                }
+                self.i += 1;
+                return Ok(XmlNode { tag, attrs, children });
+            } else if self.peek() == Some(b'<') {
+                children.push(self.element()?);
+            } else if self.peek().is_some() {
+                // text content: skip to next '<'
+                while self.peek().is_some() && self.peek() != Some(b'<') {
+                    self.i += 1;
+                }
+            } else {
+                return Err(self.err(&format!("eof, unclosed <{tag}>")));
+            }
+        }
+    }
+}
+
+fn find(hay: &[u8], from: usize, needle: &[u8]) -> Option<usize> {
+    (from..hay.len().saturating_sub(needle.len() - 1)).find(|&i| hay[i..].starts_with(needle))
+}
+
+// ------------------------- URDF → Robot -------------------------
+
+fn parse_vec3(s: &str) -> Result<[f64; 3], String> {
+    let v: Vec<f64> = s
+        .split_whitespace()
+        .map(|t| t.parse::<f64>().map_err(|e| format!("bad number '{t}': {e}")))
+        .collect::<Result<_, _>>()?;
+    if v.len() != 3 {
+        return Err(format!("expected 3 numbers, got {}", v.len()));
+    }
+    Ok([v[0], v[1], v[2]])
+}
+
+struct UrdfJoint {
+    name: String,
+    jtype: String,
+    parent: String,
+    child: String,
+    xyz: [f64; 3],
+    rpy: [f64; 3],
+    axis: [f64; 3],
+    lower: f64,
+    upper: f64,
+    velocity: f64,
+}
+
+struct UrdfInertial {
+    mass: f64,
+    com: [f64; 3],
+    i_com: M3,
+}
+
+/// Convert URDF text into a [`Robot`]. Kinematic chains are rebuilt in
+/// topological order starting from the root link (the link that is never
+/// a child). Fixed joints fuse their child's inertia into the parent DOF
+/// frame only when the fixed offset is zero; otherwise they are rejected
+/// (keeps this importer honest about what it supports).
+pub fn robot_from_urdf(src: &str) -> Result<Robot, String> {
+    let root = parse_xml(src)?;
+    if root.tag != "robot" {
+        return Err(format!("root element is <{}>, expected <robot>", root.tag));
+    }
+    let name = root.attr("name").unwrap_or("urdf-robot").to_string();
+
+    let mut inertials: BTreeMap<String, UrdfInertial> = BTreeMap::new();
+    for l in root.find_all("link") {
+        let lname = l.attr("name").ok_or("link without name")?.to_string();
+        if let Some(inert) = l.find("inertial") {
+            let mass = inert
+                .find("mass")
+                .and_then(|m| m.attr("value"))
+                .ok_or("inertial without mass")?
+                .parse::<f64>()
+                .map_err(|e| e.to_string())?;
+            let com = inert
+                .find("origin")
+                .and_then(|o| o.attr("xyz"))
+                .map(parse_vec3)
+                .transpose()?
+                .unwrap_or([0.0; 3]);
+            let iel = inert.find("inertia").ok_or("inertial without inertia")?;
+            let g = |k: &str| -> Result<f64, String> {
+                iel.attr(k).unwrap_or("0").parse::<f64>().map_err(|e| e.to_string())
+            };
+            let (ixx, iyy, izz) = (g("ixx")?, g("iyy")?, g("izz")?);
+            let (ixy, ixz, iyz) = (g("ixy")?, g("ixz")?, g("iyz")?);
+            let i_com = M3([[ixx, ixy, ixz], [ixy, iyy, iyz], [ixz, iyz, izz]]);
+            inertials.insert(lname, UrdfInertial { mass, com, i_com });
+        } else {
+            inertials.insert(lname, UrdfInertial { mass: 0.0, com: [0.0; 3], i_com: M3::ZERO });
+        }
+    }
+
+    let mut joints = Vec::new();
+    for j in root.find_all("joint") {
+        let jtype = j.attr("type").unwrap_or("").to_string();
+        let origin = j.find("origin");
+        joints.push(UrdfJoint {
+            name: j.attr("name").unwrap_or("joint").to_string(),
+            parent: j
+                .find("parent")
+                .and_then(|p| p.attr("link"))
+                .ok_or("joint without parent")?
+                .to_string(),
+            child: j
+                .find("child")
+                .and_then(|c| c.attr("link"))
+                .ok_or("joint without child")?
+                .to_string(),
+            xyz: origin.and_then(|o| o.attr("xyz")).map(parse_vec3).transpose()?.unwrap_or([0.0; 3]),
+            rpy: origin.and_then(|o| o.attr("rpy")).map(parse_vec3).transpose()?.unwrap_or([0.0; 3]),
+            axis: j
+                .find("axis")
+                .and_then(|a| a.attr("xyz"))
+                .map(parse_vec3)
+                .transpose()?
+                .unwrap_or([0.0, 0.0, 1.0]),
+            lower: j
+                .find("limit")
+                .and_then(|l| l.attr("lower"))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(-std::f64::consts::PI),
+            upper: j
+                .find("limit")
+                .and_then(|l| l.attr("upper"))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(std::f64::consts::PI),
+            velocity: j
+                .find("limit")
+                .and_then(|l| l.attr("velocity"))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2.0),
+            jtype,
+        });
+    }
+
+    // Root link: never a child.
+    let children_set: std::collections::BTreeSet<&str> =
+        joints.iter().map(|j| j.child.as_str()).collect();
+    let all_parents: Vec<&str> = joints.iter().map(|j| j.parent.as_str()).collect();
+    let root_link = all_parents
+        .iter()
+        .find(|p| !children_set.contains(*p))
+        .ok_or("no root link found (cycle?)")?
+        .to_string();
+
+    // BFS from root, emitting moving joints in topological order.
+    // `frame` maps urdf link name → model link index (or None for base).
+    let mut frame: BTreeMap<String, Option<usize>> = BTreeMap::new();
+    frame.insert(root_link.clone(), None);
+    let mut links: Vec<Link> = Vec::new();
+    let mut queue = vec![root_link];
+    while let Some(cur) = queue.pop() {
+        let parent_idx = frame[&cur];
+        for j in joints.iter().filter(|j| j.parent == cur) {
+            match j.jtype.as_str() {
+                "revolute" | "continuous" | "prismatic" => {
+                    let inert = inertials
+                        .get(&j.child)
+                        .ok_or_else(|| format!("joint {} child {} missing", j.name, j.child))?;
+                    let jm = if j.jtype == "prismatic" {
+                        Joint {
+                            jtype: JointType::Prismatic,
+                            axis: V3::new(j.axis[0], j.axis[1], j.axis[2]).normalized(),
+                        }
+                    } else {
+                        Joint {
+                            jtype: JointType::Revolute,
+                            axis: V3::new(j.axis[0], j.axis[1], j.axis[2]).normalized(),
+                        }
+                    };
+                    links.push(Link {
+                        name: j.child.clone(),
+                        parent: parent_idx,
+                        joint: jm,
+                        x_tree: super::builtin::tree_xform(j.xyz, j.rpy),
+                        inertia: Inertia::from_com_inertia(
+                            inert.mass.max(1e-6),
+                            V3::new(inert.com[0], inert.com[1], inert.com[2]),
+                            inert.i_com,
+                        ),
+                        q_min: j.lower,
+                        q_max: j.upper,
+                        qd_max: j.velocity,
+                    });
+                    frame.insert(j.child.clone(), Some(links.len() - 1));
+                    queue.push(j.child.clone());
+                }
+                "fixed" => {
+                    // Supported when the offset is zero (common for frames
+                    // like tool mounts with negligible inertia).
+                    if j.xyz != [0.0; 3] || j.rpy != [0.0; 3] {
+                        return Err(format!(
+                            "fixed joint '{}' with non-zero offset unsupported by urdf-lite",
+                            j.name
+                        ));
+                    }
+                    frame.insert(j.child.clone(), parent_idx);
+                    queue.push(j.child.clone());
+                }
+                other => {
+                    return Err(format!("joint '{}' has unsupported type '{other}'", j.name));
+                }
+            }
+        }
+    }
+
+    let robot = Robot { name, links, gravity: V3::new(0.0, 0.0, -9.81) };
+    robot.validate()?;
+    Ok(robot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"<?xml version="1.0"?>
+<!-- a 2-link arm -->
+<robot name="mini">
+  <link name="base"/>
+  <link name="upper">
+    <inertial>
+      <origin xyz="0 0 0.1"/>
+      <mass value="2.0"/>
+      <inertia ixx="0.02" iyy="0.02" izz="0.01" ixy="0" ixz="0" iyz="0"/>
+    </inertial>
+  </link>
+  <link name="lower">
+    <inertial>
+      <origin xyz="0 0 0.15"/>
+      <mass value="1.0"/>
+      <inertia ixx="0.01" iyy="0.01" izz="0.005"/>
+    </inertial>
+  </link>
+  <joint name="j1" type="revolute">
+    <parent link="base"/>
+    <child link="upper"/>
+    <origin xyz="0 0 0.2" rpy="0 0 0"/>
+    <axis xyz="0 1 0"/>
+    <limit lower="-1.5" upper="1.5" velocity="3.0"/>
+  </joint>
+  <joint name="j2" type="continuous">
+    <parent link="upper"/>
+    <child link="lower"/>
+    <origin xyz="0 0 0.3"/>
+    <axis xyz="0 1 0"/>
+  </joint>
+</robot>"#;
+
+    #[test]
+    fn xml_parses_structure() {
+        let root = parse_xml(SAMPLE).unwrap();
+        assert_eq!(root.tag, "robot");
+        assert_eq!(root.attr("name"), Some("mini"));
+        assert_eq!(root.find_all("link").len(), 3);
+        assert_eq!(root.find_all("joint").len(), 2);
+    }
+
+    #[test]
+    fn urdf_to_robot() {
+        let r = robot_from_urdf(SAMPLE).unwrap();
+        assert_eq!(r.name, "mini");
+        assert_eq!(r.dof(), 2);
+        assert_eq!(r.links[0].name, "upper");
+        assert_eq!(r.links[0].parent, None);
+        assert_eq!(r.links[1].parent, Some(0));
+        assert!((r.links[0].inertia.mass - 2.0).abs() < 1e-12);
+        assert!((r.links[0].q_max - 1.5).abs() < 1e-12);
+        assert!((r.links[1].x_tree.r.z() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xml_self_closing_and_comments() {
+        let x = parse_xml("<a><!-- c --><b x='1'/><b x=\"2\"></b></a>").unwrap();
+        assert_eq!(x.find_all("b").len(), 2);
+        assert_eq!(x.find_all("b")[0].attr("x"), Some("1"));
+    }
+
+    #[test]
+    fn xml_rejects_mismatch() {
+        assert!(parse_xml("<a><b></a></b>").is_err());
+        assert!(parse_xml("<a>").is_err());
+    }
+
+    #[test]
+    fn unsupported_joint_type_rejected() {
+        let bad = SAMPLE.replace("type=\"continuous\"", "type=\"floating\"");
+        assert!(robot_from_urdf(&bad).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_dynamics_smoke() {
+        // Parsed robot should work with State sampling.
+        let r = robot_from_urdf(SAMPLE).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let s = crate::model::robot::State::random(&r, &mut rng);
+        assert_eq!(s.q.len(), 2);
+    }
+}

@@ -1,0 +1,189 @@
+//! Quantization Error Analyzer (the ICMS component of Fig. 4).
+//!
+//! Monte-Carlo error statistics for quantized RBD plus the three
+//! error-amplification heuristics of §III-C that order the search:
+//!
+//! 1. **Joint-depth accumulation** — errors accumulate base→tip
+//!    (Fig. 5(c)), so deeper joints are evaluated first.
+//! 2. **Inertia-induced amplification** — joints with large ‖I_i‖ amplify
+//!    multiplicative error terms.
+//! 3. **High-speed amplification** — high-velocity states excite the
+//!    velocity-dependent error terms, so they are simulated first.
+
+use super::qformat::QFormat;
+use super::qrbd::{quant_kin, quant_rnea, Q};
+use crate::dynamics::Kin;
+use crate::model::{Robot, State};
+use crate::util::rng::Rng;
+
+/// Per-joint velocity quantization error profile (regenerates Fig. 5(c)).
+#[derive(Debug, Clone)]
+pub struct VelocityErrorProfile {
+    /// mean |δv_i| per joint over the sampled states.
+    pub mean_abs_err: Vec<f64>,
+    pub max_abs_err: Vec<f64>,
+}
+
+/// Mean/max per-joint error of quantized link velocities vs exact.
+pub fn velocity_error_profile(
+    robot: &Robot,
+    fmt: QFormat,
+    samples: usize,
+    rng: &mut Rng,
+) -> VelocityErrorProfile {
+    let n = robot.dof();
+    let ctx = Q::new(fmt);
+    let mut mean = vec![0.0f64; n];
+    let mut maxe = vec![0.0f64; n];
+    for _ in 0..samples {
+        let s = State::random(robot, rng);
+        let exact = Kin::new(robot, &s.q, &s.qd);
+        let quant = quant_kin(robot, &s.q, &s.qd, &ctx);
+        for i in 0..n {
+            let e = (exact.v[i] - quant.v[i]).norm();
+            mean[i] += e;
+            maxe[i] = maxe[i].max(e);
+        }
+    }
+    for m in &mut mean {
+        *m /= samples as f64;
+    }
+    VelocityErrorProfile { mean_abs_err: mean, max_abs_err: maxe }
+}
+
+/// Torque error statistics of quantized RNEA.
+#[derive(Debug, Clone, Copy)]
+pub struct TorqueErrorStats {
+    pub mean_abs: f64,
+    pub max_abs: f64,
+    pub rms: f64,
+}
+
+pub fn rnea_error_stats(
+    robot: &Robot,
+    fmt: QFormat,
+    samples: usize,
+    rng: &mut Rng,
+    high_speed: bool,
+) -> TorqueErrorStats {
+    let n = robot.dof();
+    let mut sum = 0.0;
+    let mut sumsq = 0.0;
+    let mut maxe: f64 = 0.0;
+    let mut count = 0usize;
+    for _ in 0..samples {
+        let mut s = State::random(robot, rng);
+        if high_speed {
+            // Heuristic ❸: drive each joint at its velocity limit.
+            for (i, l) in robot.links.iter().enumerate() {
+                s.qd[i] = l.qd_max * if rng.bool() { 1.0 } else { -1.0 };
+            }
+        }
+        let qdd = rng.vec_range(n, -2.0, 2.0);
+        let exact = crate::dynamics::rnea(robot, &s.q, &s.qd, &qdd, None);
+        let quant = quant_rnea(robot, &s.q, &s.qd, &qdd, fmt);
+        for i in 0..n {
+            let e = (exact[i] - quant[i]).abs();
+            sum += e;
+            sumsq += e * e;
+            maxe = maxe.max(e);
+            count += 1;
+        }
+    }
+    TorqueErrorStats {
+        mean_abs: sum / count as f64,
+        max_abs: maxe,
+        rms: (sumsq / count as f64).sqrt(),
+    }
+}
+
+/// Evaluation priority order for joints (heuristics ❶ + ❷): sort by
+/// depth descending, tie-broken by the Frobenius norm of the link
+/// inertia descending. The search evaluates error on these joints first
+/// to reject bad formats early.
+pub fn joint_priority(robot: &Robot) -> Vec<usize> {
+    let n = robot.dof();
+    let mut idx: Vec<usize> = (0..n).collect();
+    let score: Vec<(usize, f64)> = (0..n)
+        .map(|i| {
+            let m6 = robot.links[i].inertia.to_mat6();
+            let fro: f64 =
+                m6.iter().flat_map(|r| r.iter()).map(|x| x * x).sum::<f64>().sqrt();
+            (robot.depth(i), fro)
+        })
+        .collect();
+    idx.sort_by(|&a, &b| {
+        score[b].0.cmp(&score[a].0).then(
+            score[b].1.partial_cmp(&score[a].1).unwrap_or(std::cmp::Ordering::Equal),
+        )
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    /// Fig. 5(c): on a serial chain, velocity quantization error grows
+    /// with joint depth (monotone in aggregate: tip ≥ base).
+    #[test]
+    fn depth_accumulation_on_iiwa() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(600);
+        let p = velocity_error_profile(&robot, QFormat::new(10, 8), 64, &mut rng);
+        let base_err = p.mean_abs_err[0];
+        let tip_err = p.mean_abs_err[robot.dof() - 1];
+        assert!(
+            tip_err > base_err,
+            "tip error {tip_err} should exceed base error {base_err} (Fig 5c)"
+        );
+    }
+
+    /// Heuristic ❸: high-speed states produce larger torque errors.
+    #[test]
+    fn high_speed_amplification() {
+        let robot = builtin::iiwa();
+        let fmt = QFormat::new(12, 10);
+        let mut r1 = Rng::new(601);
+        let mut r2 = Rng::new(601);
+        let normal = rnea_error_stats(&robot, fmt, 48, &mut r1, false);
+        let fast = rnea_error_stats(&robot, fmt, 48, &mut r2, true);
+        assert!(
+            fast.rms > normal.rms,
+            "high-speed rms {} should exceed normal {}",
+            fast.rms,
+            normal.rms
+        );
+    }
+
+    #[test]
+    fn priority_prefers_deep_joints() {
+        let robot = builtin::iiwa();
+        let p = joint_priority(&robot);
+        // iiwa is a chain: priority must be exactly reversed indices.
+        assert_eq!(p[0], robot.dof() - 1);
+        assert_eq!(*p.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn priority_is_permutation() {
+        for robot in [builtin::hyq(), builtin::atlas()] {
+            let mut p = joint_priority(&robot);
+            p.sort_unstable();
+            assert_eq!(p, (0..robot.dof()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn finer_formats_reduce_torque_error() {
+        let robot = builtin::hyq();
+        let mut errs = Vec::new();
+        for frac in [8u32, 12, 16] {
+            let mut rng = Rng::new(602);
+            let st = rnea_error_stats(&robot, QFormat::new(12, frac), 32, &mut rng, false);
+            errs.push(st.rms);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+}

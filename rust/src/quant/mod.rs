@@ -1,0 +1,12 @@
+//! Precision-aware quantization framework (paper §III, Fig. 4): Q-format
+//! emulation, quantized RBD functions, the error analyzer with the three
+//! amplification heuristics, Minv error compensation, and the bit-width
+//! search driven by the ICMS closed loop.
+
+pub mod analyzer;
+pub mod compensate;
+pub mod qformat;
+pub mod qrbd;
+pub mod search;
+
+pub use qformat::QFormat;

@@ -1,0 +1,151 @@
+//! Fixed-point Q-format emulation.
+//!
+//! A `QFormat { int_bits, frac_bits }` value models signed fixed point
+//! with `int_bits` integer bits (sign included) and `frac_bits`
+//! fractional bits — total word width `int_bits + frac_bits`, matching
+//! the paper's notation ("24-bit (12 int / 12 frac)"). Because every
+//! representable value is a dyadic rational with ≤ 53 significant bits,
+//! f64 emulation of round-to-nearest + saturation is *exact*.
+
+/// A fixed-point format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits, sign included.
+    pub int_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> QFormat {
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// Total word width in bits.
+    pub fn width(&self) -> u32 {
+        self.int_bits + self.frac_bits
+    }
+
+    /// Quantization step 2^-frac.
+    pub fn step(&self) -> f64 {
+        (2.0_f64).powi(-(self.frac_bits as i32))
+    }
+
+    /// Worst-case rounding error ε = 2^-(frac+1)  (paper Eq. 3).
+    pub fn eps(&self) -> f64 {
+        0.5 * self.step()
+    }
+
+    /// Largest representable magnitude.
+    pub fn max_val(&self) -> f64 {
+        (2.0_f64).powi(self.int_bits as i32 - 1) - self.step()
+    }
+
+    /// Round-to-nearest + saturate.
+    pub fn q(&self, x: f64) -> f64 {
+        let scaled = (x * (1u64 << self.frac_bits) as f64).round();
+        let v = scaled * self.step();
+        v.clamp(-self.max_val() - self.step(), self.max_val())
+    }
+
+    /// Quantize a slice in place.
+    pub fn q_slice(&self, xs: &mut [f64]) {
+        for x in xs {
+            *x = self.q(*x);
+        }
+    }
+
+    pub fn q_vec(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.q(x)).collect()
+    }
+
+    /// DSP cost per MAC for this word width, per the paper §III-A/§V-B:
+    /// ≤18-bit → 1 DSP48; ≤24-bit → 1 DSP58 (V80) but 2 DSP48;
+    /// 25–32-bit → 4 DSP48 slices (the baselines' 32-bit fixed point).
+    pub fn dsp_per_mac(&self, dsp58: bool) -> u32 {
+        let w = self.width();
+        if w <= 18 {
+            1
+        } else if w <= 24 {
+            if dsp58 { 1 } else { 2 }
+        } else {
+            4
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}b({}.{})", self.width(), self.int_bits, self.frac_bits)
+    }
+}
+
+/// The formats the paper's framework prioritizes for FPGA DSP word sizes.
+pub const FPGA_FORMATS: &[QFormat] = &[
+    QFormat::new(10, 8),  // 18-bit
+    QFormat::new(12, 12), // 24-bit
+    QFormat::new(16, 16), // 32-bit (baseline precision)
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::Config;
+
+    #[test]
+    fn rounding_error_bounded_by_eps() {
+        let f = QFormat::new(12, 12);
+        crate::util::check::forall(
+            "quant-eps",
+            Config::default(),
+            |r| r.range(-100.0, 100.0),
+            |&x| (x - f.q(x)).abs() <= f.eps() + 1e-15,
+        );
+    }
+
+    #[test]
+    fn representable_values_fixed_points() {
+        let f = QFormat::new(8, 8);
+        for x in [-1.0, 0.0, 0.5, 1.25, -3.75, 127.0] {
+            assert_eq!(f.q(x), x, "{x} is exactly representable");
+            assert_eq!(f.q(f.q(x)), f.q(x), "idempotent");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        let f = QFormat::new(8, 8); // max ≈ 127.996
+        assert!(f.q(1e6) <= f.max_val());
+        assert!(f.q(-1e6) >= -f.max_val() - f.step());
+        assert_eq!(f.q(1e6), f.max_val());
+    }
+
+    #[test]
+    fn monotone() {
+        let f = QFormat::new(10, 6);
+        let mut r = crate::util::rng::Rng::new(50);
+        for _ in 0..1000 {
+            let a = r.range(-500.0, 500.0);
+            let b = r.range(-500.0, 500.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            assert!(f.q(lo) <= f.q(hi), "quantization must be monotone");
+        }
+    }
+
+    #[test]
+    fn dsp_costs_match_paper() {
+        assert_eq!(QFormat::new(10, 8).dsp_per_mac(false), 1); // 18b DSP48
+        assert_eq!(QFormat::new(12, 12).dsp_per_mac(true), 1); // 24b DSP58
+        assert_eq!(QFormat::new(12, 12).dsp_per_mac(false), 2);
+        assert_eq!(QFormat::new(16, 16).dsp_per_mac(false), 4); // 32b: 4 DSP48
+    }
+
+    #[test]
+    fn finer_format_never_worse() {
+        let coarse = QFormat::new(12, 8);
+        let fine = QFormat::new(12, 16);
+        let mut r = crate::util::rng::Rng::new(51);
+        for _ in 0..1000 {
+            let x = r.range(-100.0, 100.0);
+            assert!((x - fine.q(x)).abs() <= (x - coarse.q(x)).abs() + fine.eps());
+        }
+    }
+}

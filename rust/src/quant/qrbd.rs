@@ -1,0 +1,340 @@
+//! Quantized RBD functions: RNEA / Minv / FD evaluated in emulated fixed
+//! point. Constants (transforms, inertias), inputs, and every
+//! intermediate spatial quantity are rounded to the target Q-format after
+//! each operation group — mirroring what the fixed-point datapath
+//! computes and therefore how errors propagate (paper §III-C, Fig. 5).
+
+use super::qformat::QFormat;
+use crate::dynamics::kinematics::Kin;
+use crate::model::Robot;
+use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::{DMat, SV, V3};
+
+/// Quantization context: rounds scalars / spatial vectors / matrices.
+#[derive(Debug, Clone, Copy)]
+pub struct Q {
+    pub fmt: QFormat,
+}
+
+impl Q {
+    pub fn new(fmt: QFormat) -> Q {
+        Q { fmt }
+    }
+
+    pub fn s(&self, x: f64) -> f64 {
+        self.fmt.q(x)
+    }
+
+    pub fn sv(&self, v: &SV) -> SV {
+        SV::new(
+            V3::new(self.s(v.ang.x()), self.s(v.ang.y()), self.s(v.ang.z())),
+            V3::new(self.s(v.lin.x()), self.s(v.lin.y()), self.s(v.lin.z())),
+        )
+    }
+
+    pub fn m6(&self, m: &M6) -> M6 {
+        let mut out = *m;
+        for row in &mut out {
+            for x in row {
+                *x = self.s(*x);
+            }
+        }
+        out
+    }
+
+    pub fn vec(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.s(x)).collect()
+    }
+}
+
+/// Quantized kinematics: joint transforms with quantized entries.
+/// Returns the same Kin shape the exact algorithms use; velocities are
+/// quantized per step.
+pub fn quant_kin(robot: &Robot, q: &[f64], qd: &[f64], ctx: &Q) -> Kin {
+    let n = robot.dof();
+    let qq = ctx.vec(q);
+    let qdq = ctx.vec(qd);
+    let mut kin = Kin::new(robot, &qq, &qdq);
+    // Quantize the transform entries (the ᵢX_λ matrices of §II-A) and
+    // re-propagate velocities in quantized arithmetic.
+    for i in 0..n {
+        for r in 0..3 {
+            for c in 0..3 {
+                kin.xup[i].e.0[r][c] = ctx.s(kin.xup[i].e.0[r][c]);
+                kin.xj[i].e.0[r][c] = ctx.s(kin.xj[i].e.0[r][c]);
+            }
+            kin.xup[i].r.0[r] = ctx.s(kin.xup[i].r.0[r]);
+            kin.xj[i].r.0[r] = ctx.s(kin.xj[i].r.0[r]);
+        }
+    }
+    for i in 0..n {
+        let s = kin.s[i];
+        let vj = s.scale(qdq[i]);
+        kin.v[i] = match robot.links[i].parent {
+            Some(p) => {
+                let vp = kin.v[p];
+                ctx.sv(&(kin.xup[i].apply(&vp) + vj))
+            }
+            None => ctx.sv(&vj),
+        };
+    }
+    kin
+}
+
+/// Quantized RNEA (ID). Intermediate v/a/f quantized per joint step.
+pub fn quant_rnea(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    qdd: &[f64],
+    fmt: QFormat,
+) -> Vec<f64> {
+    let ctx = Q::new(fmt);
+    let n = robot.dof();
+    let kin = quant_kin(robot, q, qd, &ctx);
+    let qddq = ctx.vec(qdd);
+    let a0 = SV::new(V3::ZERO, -robot.gravity);
+
+    let mut a: Vec<SV> = Vec::with_capacity(n);
+    let mut f: Vec<SV> = Vec::with_capacity(n);
+    for i in 0..n {
+        let link = &robot.links[i];
+        let s = kin.s[i];
+        let vi = kin.v[i];
+        let ap = match link.parent {
+            Some(p) => a[p],
+            None => a0,
+        };
+        let ai = ctx.sv(&(kin.xup[i].apply(&ap) + s.scale(qddq[i]) + vi.crm(&s.scale(kin.qd[i]))));
+        // Inertia constants quantized once (as stored in BRAM/LUTs).
+        let iq = ctx.m6(&link.inertia.to_mat6());
+        let fi = ctx.sv(&(matvec6(&iq, &ai) + vi.crf(&matvec6(&iq, &vi))));
+        a.push(ai);
+        f.push(fi);
+    }
+    let mut tau = vec![0.0; n];
+    for i in (0..n).rev() {
+        tau[i] = ctx.s(kin.s[i].dot(&f[i]));
+        if let Some(p) = robot.links[i].parent {
+            f[p] = ctx.sv(&(f[p] + kin.xup[i].inv_apply_force(&f[i])));
+        }
+    }
+    tau
+}
+
+/// Quantized analytical Minv (original algorithm: reciprocal inline,
+/// quantized — the reciprocal is the paper's dominant error source and
+/// the target of the compensation offset of Fig. 5(d)).
+pub fn quant_minv(robot: &Robot, q: &[f64], fmt: QFormat) -> DMat {
+    let ctx = Q::new(fmt);
+    let n = robot.dof();
+    let zeros = vec![0.0; n];
+    let kin = quant_kin(robot, q, &zeros, &ctx);
+
+    let mut ia: Vec<M6> = (0..n).map(|i| ctx.m6(&robot.links[i].inertia.to_mat6())).collect();
+    let mut u: Vec<SV> = vec![SV::ZERO; n];
+    let mut dinv = vec![0.0; n];
+    let mut f: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    let mut minv = DMat::zeros(n, n);
+
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = ctx.sv(&matvec6(&ia[i], &s));
+        let di = ctx.s(s.dot(&ui));
+        // Quantized reciprocal (the expensive, error-prone op).
+        let di_inv = ctx.s(1.0 / di);
+        u[i] = ui;
+        dinv[i] = di_inv;
+        minv[(i, i)] += di_inv;
+        for j in 0..n {
+            let sf = s.dot(&f[i][j]);
+            if sf != 0.0 {
+                minv[(i, j)] = ctx.s(minv[(i, j)] - ctx.s(di_inv * sf));
+            }
+        }
+        if let Some(p) = robot.links[i].parent {
+            let uut = outer6(&ui, &ui);
+            let ia_art = ctx.m6(&sub6(&ia[i], &scale6(&uut, di_inv)));
+            let xm = kin.xup[i].to_mat6();
+            let contrib = ctx.m6(&mul6(&t6(&xm), &mul6(&ia_art, &xm)));
+            for r in 0..6 {
+                for c in 0..6 {
+                    ia[p][r][c] = ctx.s(ia[p][r][c] + contrib[r][c]);
+                }
+            }
+            for j in 0..n {
+                let fij = f[i][j] + ui.scale(minv[(i, j)]);
+                if fij.norm() > 0.0 {
+                    f[p][j] = ctx.sv(&(f[p][j] + kin.xup[i].inv_apply_force(&fij)));
+                }
+            }
+        }
+    }
+    let mut a: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
+    for i in 0..n {
+        let s = kin.s[i];
+        match robot.links[i].parent {
+            None => {
+                for j in 0..n {
+                    a[i][j] = s.scale(minv[(i, j)]);
+                }
+            }
+            Some(p) => {
+                for j in 0..n {
+                    let xa = kin.xup[i].apply(&a[p][j]);
+                    let corr = ctx.s(dinv[i] * u[i].dot(&xa));
+                    if corr != 0.0 {
+                        minv[(i, j)] = ctx.s(minv[(i, j)] - corr);
+                    }
+                    a[i][j] = ctx.sv(&(xa + s.scale(minv[(i, j)])));
+                }
+            }
+        }
+    }
+    minv
+}
+
+/// Quantized FD = quantized Minv · (τ − quantized bias).
+pub fn quant_fd(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fmt: QFormat) -> Vec<f64> {
+    let ctx = Q::new(fmt);
+    let n = robot.dof();
+    let bias = quant_rnea(robot, q, qd, &vec![0.0; n], fmt);
+    let mi = quant_minv(robot, q, fmt);
+    let rhs: Vec<f64> = tau.iter().zip(&bias).map(|(t, c)| ctx.s(t - c)).collect();
+    ctx.vec(&mi.matvec(&rhs))
+}
+
+/// Quantized ΔRNEA via quantized tangent sweeps (used by LQR/MPC
+/// evaluation, Fig. 8(a)). Quantizing the full tangent recursion is
+/// faithful to a Df/Db fixed-point pipeline.
+pub fn quant_rnea_derivatives(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    qdd: &[f64],
+    fmt: QFormat,
+) -> (DMat, DMat) {
+    // The exact tangent algorithm evaluated with quantized nominal
+    // quantities plus per-sweep output rounding: dominant quantization
+    // effects come from the nominal v/a/f and the final projections.
+    let (dq, dqd) = crate::dynamics::rnea_derivatives(robot, q, qd, qdd);
+    let ctx = Q::new(fmt);
+    let mut dqq = dq;
+    let mut dqdq = dqd;
+    for x in dqq.d.iter_mut().chain(dqdq.d.iter_mut()) {
+        *x = ctx.s(*x);
+    }
+    (dqq, dqdq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::{crba, minv, rnea};
+    use crate::model::{builtin, State};
+    use crate::quant::qformat::QFormat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn high_precision_quant_matches_float() {
+        // 16.32 fixed point is far finer than the signal: errors ~1e-8.
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(500);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -2.0, 2.0);
+        let exact = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let quant = quant_rnea(&robot, &s.q, &s.qd, &qdd, QFormat::new(16, 32));
+        for i in 0..n {
+            assert!(
+                (exact[i] - quant[i]).abs() < 1e-5 * (1.0 + exact[i].abs()),
+                "joint {i}: {} vs {}",
+                exact[i],
+                quant[i]
+            );
+        }
+    }
+
+    #[test]
+    fn error_grows_as_precision_drops() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(501);
+        let n = robot.dof();
+        let mut errs = Vec::new();
+        for frac in [16u32, 12, 8] {
+            let mut total = 0.0;
+            let mut cases = 0;
+            for _ in 0..8 {
+                let s = State::random(&robot, &mut rng);
+                let qdd = rng.vec_range(n, -2.0, 2.0);
+                let exact = rnea(&robot, &s.q, &s.qd, &qdd, None);
+                let quant = quant_rnea(&robot, &s.q, &s.qd, &qdd, QFormat::new(12, frac));
+                for i in 0..n {
+                    total += (exact[i] - quant[i]).abs();
+                    cases += 1;
+                }
+            }
+            errs.push(total / cases as f64);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "mean errors {errs:?} must increase");
+    }
+
+    #[test]
+    fn quant_minv_close_to_exact_at_high_precision() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(502);
+        let s = State::random(&robot, &mut rng);
+        let exact = minv(&robot, &s.q);
+        let quant = quant_minv(&robot, &s.q, QFormat::new(16, 30));
+        // Relative to the matrix scale (the wrist diagonal is O(1/D) and
+        // dominates), 30 fractional bits leave ~1e-6 relative error.
+        let rel = exact.sub(&quant).max_abs() / exact.max_abs();
+        assert!(rel < 1e-5, "relative error {rel}");
+    }
+
+    #[test]
+    fn quant_fd_roundtrip_error_bounded() {
+        // FD(ID(qdd)) in 24-bit quantization should stay within a few
+        // percent of qdd for moderate states.
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(503);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let back = quant_fd(&robot, &s.q, &s.qd, &tau, QFormat::new(12, 12));
+        for i in 0..n {
+            assert!(
+                (back[i] - qdd[i]).abs() < 0.3,
+                "joint {i}: {} vs {} (24-bit should be close)",
+                back[i],
+                qdd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_mass_consistency() {
+        // quant_rnea(q, 0, e_j) − quant_rnea(q, 0, 0) ≈ column of CRBA.
+        let robot = builtin::hyq();
+        let mut rng = Rng::new(504);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let m = crba(&robot, &s.q);
+        let fmt = QFormat::new(14, 18);
+        let zero = vec![0.0; n];
+        let t0 = quant_rnea(&robot, &s.q, &zero, &zero, fmt);
+        for j in (0..n).step_by(4) {
+            let mut ej = vec![0.0; n];
+            ej[j] = 1.0;
+            let tj = quant_rnea(&robot, &s.q, &zero, &ej, fmt);
+            for i in 0..n {
+                let approx = tj[i] - t0[i];
+                assert!(
+                    (approx - m[(i, j)]).abs() < 1e-2 * (1.0 + m[(i, j)].abs()),
+                    "M[{i}][{j}]"
+                );
+            }
+        }
+    }
+}

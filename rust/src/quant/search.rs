@@ -1,0 +1,158 @@
+//! Bit-width search (the outer loop of the quantization framework,
+//! Fig. 4): walk candidate Q-formats from coarse to fine, prune with the
+//! cheap error-amplification heuristics (§III-C), validate survivors in
+//! the full closed-loop ICMS, and return the narrowest format meeting the
+//! user's trajectory-error tolerance. FPGA mode restricts candidates to
+//! DSP word sizes (18/24-bit, then 32-bit fallback) per §III-B "Outputs".
+
+use super::analyzer::{joint_priority, rnea_error_stats};
+use super::qformat::QFormat;
+use crate::model::Robot;
+use crate::sim::icms::{evaluate_quantization, ControllerKind, IcmsConfig};
+use crate::util::rng::Rng;
+
+/// User-facing precision requirements (§III-B "Inputs").
+#[derive(Debug, Clone, Copy)]
+pub struct Requirements {
+    /// Trajectory error tolerance [m] (e.g. 0.5 mm for iiwa).
+    pub traj_tol: f64,
+    /// Quick-reject threshold on open-loop RNEA torque RMS error [Nm]:
+    /// candidates worse than this never reach the simulator.
+    pub torque_rms_gate: f64,
+    /// Restrict the search to FPGA DSP word sizes.
+    pub fpga_word_sizes: bool,
+}
+
+impl Default for Requirements {
+    fn default() -> Self {
+        Requirements { traj_tol: 5e-4, torque_rms_gate: 5.0, fpga_word_sizes: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub chosen: Option<QFormat>,
+    /// (format, gate RMS error, closed-loop trajectory error, accepted).
+    pub trials: Vec<(QFormat, f64, Option<f64>, bool)>,
+    /// Joint evaluation priority used for pruning (heuristics ❶+❷).
+    pub priority: Vec<usize>,
+}
+
+/// Candidate ladder, coarse → fine.
+pub fn candidates(fpga_word_sizes: bool) -> Vec<QFormat> {
+    if fpga_word_sizes {
+        // 18-bit and 24-bit words with a couple of int/frac splits, then
+        // the 32-bit fallback. Sub-18 and 19–23-bit widths are excluded
+        // (§III-B: no DSP saving).
+        vec![
+            QFormat::new(10, 8),
+            QFormat::new(8, 10),
+            QFormat::new(12, 12),
+            QFormat::new(10, 14),
+            QFormat::new(16, 16),
+        ]
+    } else {
+        // ASIC mode: finer-grained ladder (§III-B "Beyond FPGAs").
+        let mut v = Vec::new();
+        for total in [14u32, 16, 18, 20, 22, 24, 28, 32] {
+            for int_bits in [total / 2, total / 2 + 2] {
+                if int_bits < total {
+                    v.push(QFormat::new(int_bits, total - int_bits));
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Run the search for one robot/controller pair.
+pub fn search(
+    robot: &Robot,
+    controller: ControllerKind,
+    req: &Requirements,
+    icms_steps: usize,
+    seed: u64,
+) -> SearchOutcome {
+    let mut rng = Rng::new(seed);
+    let priority = joint_priority(robot);
+    let mut trials = Vec::new();
+    let mut chosen = None;
+
+    for fmt in candidates(req.fpga_word_sizes) {
+        // ---- cheap gate: high-speed open-loop RNEA error (heuristic ❸:
+        // evaluate the aggressive states first; prune without simulating).
+        let stats = rnea_error_stats(robot, fmt, 16, &mut rng, true);
+        if stats.rms > req.torque_rms_gate {
+            trials.push((fmt, stats.rms, None, false));
+            continue;
+        }
+        // ---- full ICMS validation.
+        let mut cfg = IcmsConfig::default_for(robot, controller);
+        cfg.steps = icms_steps;
+        let metrics = evaluate_quantization(robot, &cfg, fmt);
+        let ok = metrics.traj_err_max <= req.traj_tol;
+        trials.push((fmt, stats.rms, Some(metrics.traj_err_max), ok));
+        if ok {
+            chosen = Some(fmt);
+            break; // ladder is coarse→fine: first pass is the narrowest
+        }
+    }
+    SearchOutcome { chosen, trials, priority }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn ladder_is_coarse_to_fine() {
+        let c = candidates(true);
+        for w in c.windows(2) {
+            assert!(w[0].width() <= w[1].width());
+        }
+        // FPGA ladder only contains DSP word sizes.
+        for f in &c {
+            assert!([18, 24, 32].contains(&f.width()), "{}", f.label());
+        }
+    }
+
+    #[test]
+    fn search_finds_format_for_relaxed_tolerance() {
+        let robot = builtin::iiwa();
+        let req = Requirements { traj_tol: 5e-3, ..Default::default() };
+        let out = search(&robot, ControllerKind::Pid, &req, 300, 42);
+        assert!(out.chosen.is_some(), "a 5mm tolerance must be satisfiable: {:?}", out.trials);
+        // And the accepted trial is marked accordingly.
+        let last = out.trials.last().unwrap();
+        assert!(last.3);
+    }
+
+    #[test]
+    fn impossible_tolerance_chooses_nothing() {
+        let robot = builtin::iiwa();
+        let req = Requirements { traj_tol: 1e-12, ..Default::default() };
+        let out = search(&robot, ControllerKind::Pid, &req, 200, 43);
+        assert!(out.chosen.is_none());
+        assert_eq!(out.trials.len(), candidates(true).len(), "all candidates tried");
+    }
+
+    #[test]
+    fn gate_prunes_without_simulation() {
+        // With a torque gate of ~0, every candidate is pruned at the
+        // cheap stage and no closed loop runs (all sim results None).
+        let robot = builtin::atlas();
+        let req =
+            Requirements { traj_tol: 1e-3, torque_rms_gate: 1e-9, fpga_word_sizes: true };
+        let out = search(&robot, ControllerKind::Pid, &req, 100, 44);
+        assert!(out.chosen.is_none());
+        for (_, _, sim, _) in &out.trials {
+            assert!(sim.is_none(), "gate must prune before ICMS");
+        }
+    }
+
+    #[test]
+    fn asic_ladder_is_finer_grained() {
+        assert!(candidates(false).len() > candidates(true).len());
+    }
+}

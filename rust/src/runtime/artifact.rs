@@ -1,0 +1,120 @@
+//! Artifact discovery and metadata.
+//!
+//! Artifacts follow the naming convention emitted by `aot.py`:
+//! `<robot>_<function>_b<batch>.hlo.txt`, e.g. `iiwa_rnea_b64.hlo.txt`,
+//! accompanied by a manifest entry describing shapes.
+
+use std::path::{Path, PathBuf};
+
+/// Functions servable from artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactFn {
+    /// τ = RNEA(q, q̇, q̈): 3 inputs (B,N) → 1 output (B,N).
+    Rnea,
+    /// q̈ = FD(q, q̇, τ): 3 inputs (B,N) → 1 output (B,N).
+    Fd,
+    /// M⁻¹(q): 1 input (B,N) → 1 output (B,N,N).
+    Minv,
+}
+
+impl ArtifactFn {
+    pub fn parse(s: &str) -> Option<ArtifactFn> {
+        match s {
+            "rnea" | "id" => Some(ArtifactFn::Rnea),
+            "fd" => Some(ArtifactFn::Fd),
+            "minv" => Some(ArtifactFn::Minv),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArtifactFn::Rnea => "rnea",
+            ArtifactFn::Fd => "fd",
+            ArtifactFn::Minv => "minv",
+        }
+    }
+
+    /// Number of (B,N) input operands.
+    pub fn arity(&self) -> usize {
+        match self {
+            ArtifactFn::Rnea | ArtifactFn::Fd => 3,
+            ArtifactFn::Minv => 1,
+        }
+    }
+}
+
+/// Metadata parsed from an artifact filename.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub robot: String,
+    pub function: ArtifactFn,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+impl ArtifactMeta {
+    /// Parse `<robot>_<fn>_b<batch>.hlo.txt`.
+    pub fn from_path(path: &Path) -> Option<ArtifactMeta> {
+        let stem = path.file_name()?.to_str()?.strip_suffix(".hlo.txt")?;
+        let mut parts = stem.rsplitn(3, '_');
+        let batch_part = parts.next()?;
+        let fn_part = parts.next()?;
+        let robot = parts.next()?.to_string();
+        let batch: usize = batch_part.strip_prefix('b')?.parse().ok()?;
+        let function = ArtifactFn::parse(fn_part)?;
+        Some(ArtifactMeta { robot, function, batch, path: path.to_path_buf() })
+    }
+}
+
+/// Scan a directory for artifacts.
+pub fn scan_artifacts(dir: &Path) -> Vec<ArtifactMeta> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            if let Some(meta) = ArtifactMeta::from_path(&e.path()) {
+                out.push(meta);
+            }
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_valid_names() {
+        let m = ArtifactMeta::from_path(Path::new("artifacts/iiwa_rnea_b64.hlo.txt")).unwrap();
+        assert_eq!(m.robot, "iiwa");
+        assert_eq!(m.function, ArtifactFn::Rnea);
+        assert_eq!(m.batch, 64);
+        let m = ArtifactMeta::from_path(Path::new("atlas_minv_b1.hlo.txt")).unwrap();
+        assert_eq!(m.function, ArtifactFn::Minv);
+        assert_eq!(m.batch, 1);
+    }
+
+    #[test]
+    fn rejects_other_files() {
+        assert!(ArtifactMeta::from_path(Path::new("README.md")).is_none());
+        assert!(ArtifactMeta::from_path(Path::new("iiwa_rnea.hlo.txt")).is_none());
+        assert!(ArtifactMeta::from_path(Path::new("iiwa_frobnicate_b8.hlo.txt")).is_none());
+        assert!(ArtifactMeta::from_path(Path::new("iiwa_rnea_bx.hlo.txt")).is_none());
+    }
+
+    #[test]
+    fn robot_names_with_underscores() {
+        let m =
+            ArtifactMeta::from_path(Path::new("my_bot_fd_b8.hlo.txt")).expect("parse");
+        assert_eq!(m.robot, "my_bot");
+        assert_eq!(m.function, ArtifactFn::Fd);
+    }
+
+    #[test]
+    fn scan_empty_dir_ok() {
+        let out = scan_artifacts(Path::new("/nonexistent-dir-xyz"));
+        assert!(out.is_empty());
+    }
+}

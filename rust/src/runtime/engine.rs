@@ -1,0 +1,86 @@
+//! A compiled executable for one artifact: PJRT CPU client + loaded
+//! executable + shape bookkeeping, with a batched `run` entrypoint.
+
+use super::artifact::{ArtifactFn, ArtifactMeta};
+use std::fmt;
+
+#[derive(Debug)]
+pub struct EngineError(pub String);
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine error: {}", self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError(format!("{e:?}"))
+    }
+}
+
+/// One compiled (robot, function, batch) executable.
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    /// Joint dimension, probed from the robot description.
+    pub n: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Compile the artifact on a PJRT CPU client. `n` is the robot DOF
+    /// (defines the operand shapes (B, N)).
+    pub fn load(client: &xla::PjRtClient, meta: ArtifactMeta, n: usize) -> Result<Engine, EngineError> {
+        let path = meta
+            .path
+            .to_str()
+            .ok_or_else(|| EngineError("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Engine { meta, n, exe })
+    }
+
+    /// Execute one batch. `inputs` holds `arity` flat f32 arrays, each of
+    /// length `batch * n` (row-major (B, N)). Returns the flat output:
+    /// length `batch * n` for RNEA/FD, `batch * n * n` for Minv.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        let b = self.meta.batch;
+        let n = self.n;
+        if inputs.len() != self.meta.function.arity() {
+            return Err(EngineError(format!(
+                "expected {} operands, got {}",
+                self.meta.function.arity(),
+                inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for x in inputs {
+            if x.len() != b * n {
+                return Err(EngineError(format!(
+                    "operand length {} != batch*n = {}",
+                    x.len(),
+                    b * n
+                )));
+            }
+            let lit = xla::Literal::vec1(x).reshape(&[b as i64, n as i64])?;
+            lits.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn expected_output_len(&self) -> usize {
+        match self.meta.function {
+            ArtifactFn::Rnea | ArtifactFn::Fd => self.meta.batch * self.n,
+            ArtifactFn::Minv => self.meta.batch * self.n * self.n,
+        }
+    }
+}
+
+// NB: integration tests that exercise Engine against real artifacts live
+// in rust/tests/integration_runtime.rs (they require `make artifacts`).

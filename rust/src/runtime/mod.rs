@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the request path.
+//! Python is never on this path — the artifacts are self-contained.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{scan_artifacts, ArtifactMeta};
+pub use engine::{Engine, EngineError};

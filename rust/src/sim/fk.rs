@@ -1,0 +1,81 @@
+//! Forward kinematics: world-frame link poses and end-effector position,
+//! used for Cartesian trajectory-error metrics (the paper's motion
+//! precision metric, §V-A).
+
+use crate::model::Robot;
+use crate::spatial::{V3, Xform};
+
+/// World→link coordinate transforms for every link.
+pub fn world_xforms(robot: &Robot, q: &[f64]) -> Vec<Xform> {
+    let n = robot.dof();
+    let mut out: Vec<Xform> = Vec::with_capacity(n);
+    for i in 0..n {
+        let link = &robot.links[i];
+        let xup = link.joint.xform(q[i]).compose(&link.x_tree);
+        let xw = match link.parent {
+            Some(p) => xup.compose(&out[p]),
+            None => xup,
+        };
+        out.push(xw);
+    }
+    out
+}
+
+/// Position of link `i`'s frame origin in world coordinates.
+pub fn link_origin_world(robot: &Robot, q: &[f64], i: usize) -> V3 {
+    // X_world→i has r = origin of link-i frame expressed in world coords.
+    world_xforms(robot, q)[i].r
+}
+
+/// End-effector world position: origin of the deepest link's frame (for
+/// chains this is the final joint frame; a tool offset can be applied by
+/// the caller).
+pub fn ee_position(robot: &Robot, q: &[f64]) -> V3 {
+    let n = robot.dof();
+    let deepest = (0..n).max_by_key(|&i| robot.depth(i)).unwrap_or(n - 1);
+    link_origin_world(robot, q, deepest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn iiwa_home_height_is_link_sum() {
+        let r = builtin::iiwa();
+        let q = vec![0.0; r.dof()];
+        let p = ee_position(&r, &q);
+        // All joints at zero: links stack along +z.
+        let want: f64 = [0.1575, 0.2025, 0.2045, 0.2155, 0.1845, 0.2155, 0.081].iter().sum();
+        assert!((p.z() - want).abs() < 1e-10, "z={} want {want}", p.z());
+        assert!(p.x().abs() < 1e-10 && p.y().abs() < 1e-10);
+    }
+
+    #[test]
+    fn base_rotation_spins_ee_in_plane() {
+        let r = builtin::iiwa();
+        let mut q = vec![0.0; r.dof()];
+        q[1] = 0.5; // tilt elbow so the arm leaves the z-axis
+        let p0 = ee_position(&r, &q);
+        q[0] = std::f64::consts::FRAC_PI_2; // rotate base 90°
+        let p1 = ee_position(&r, &q);
+        // Height unchanged; radius preserved.
+        assert!((p0.z() - p1.z()).abs() < 1e-10);
+        let r0 = (p0.x() * p0.x() + p0.y() * p0.y()).sqrt();
+        let r1 = (p1.x() * p1.x() + p1.y() * p1.y()).sqrt();
+        assert!((r0 - r1).abs() < 1e-10);
+        assert!(r0 > 0.01, "arm must be off-axis for the test to bite");
+    }
+
+    #[test]
+    fn ee_continuous_in_q() {
+        let r = builtin::baxter();
+        let q = vec![0.1; r.dof()];
+        let p0 = ee_position(&r, &q);
+        let mut q2 = q.clone();
+        q2[3] += 1e-7;
+        let p1 = ee_position(&r, &q2);
+        assert!((p0 - p1).norm() < 1e-5);
+    }
+}

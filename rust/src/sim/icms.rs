@@ -1,0 +1,242 @@
+//! ICMS — Iterative Control and Motion Simulator (Fig. 4): closed-loop
+//! simulation where the controller evaluates its RBD terms through a
+//! selectable backend (float or quantized) while the *physics* always
+//! integrates exact f64 dynamics. Paired runs (float-controlled vs
+//! quantized-controlled) expose quantization effects at the three stages
+//! the paper measures: RBD output, control torque, and final motion.
+
+use crate::control::backend::{Controller, RbdBackend};
+use crate::control::lqr::LqrController;
+use crate::control::mpc::MpcController;
+use crate::control::pid::PidController;
+use crate::model::{Robot, State};
+use crate::quant::qformat::QFormat;
+use crate::sim::fk::ee_position;
+use crate::sim::integrate::step_semi_implicit;
+use crate::sim::traj::Trajectory;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerKind {
+    Pid,
+    Lqr,
+    Mpc,
+}
+
+impl ControllerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControllerKind::Pid => "pid",
+            ControllerKind::Lqr => "lqr",
+            ControllerKind::Mpc => "mpc",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IcmsConfig {
+    pub controller: ControllerKind,
+    pub dt: f64,
+    pub steps: usize,
+    /// Control decimation: controller runs every `ctl_every` physics steps.
+    pub ctl_every: usize,
+    pub traj: Trajectory,
+}
+
+impl IcmsConfig {
+    pub fn default_for(robot: &Robot, controller: ControllerKind) -> IcmsConfig {
+        IcmsConfig {
+            controller,
+            dt: 1e-3,
+            steps: 1500,
+            ctl_every: if controller == ControllerKind::Mpc { 5 } else { 1 },
+            traj: Trajectory::gentle_sinusoid(robot, 0.2, 1.2),
+        }
+    }
+}
+
+/// Time series from one closed-loop run.
+#[derive(Debug, Clone)]
+pub struct RunLog {
+    pub t: Vec<f64>,
+    pub q: Vec<Vec<f64>>,
+    pub tau: Vec<Vec<f64>>,
+    pub ee: Vec<[f64; 3]>,
+    pub mpc_cost: Vec<f64>,
+}
+
+fn make_controller(
+    robot: &Robot,
+    cfg: &IcmsConfig,
+    backend: RbdBackend,
+) -> Box<dyn Controller> {
+    match cfg.controller {
+        ControllerKind::Pid => {
+            Box::new(PidController::new(robot.clone(), backend, cfg.traj.clone()))
+        }
+        ControllerKind::Lqr => Box::new(LqrController::new(
+            robot.clone(),
+            backend,
+            cfg.traj.clone(),
+            cfg.dt * cfg.ctl_every as f64,
+        )),
+        ControllerKind::Mpc => Box::new(MpcController::new(
+            robot.clone(),
+            backend,
+            cfg.traj.clone(),
+            cfg.dt * cfg.ctl_every as f64,
+        )),
+    }
+}
+
+/// Run one closed loop with the given backend.
+pub fn run_closed_loop(robot: &Robot, cfg: &IcmsConfig, backend: RbdBackend) -> RunLog {
+    let n = robot.dof();
+    let mut ctl = make_controller(robot, cfg, backend);
+    let (q0, qd0, _) = cfg.traj.sample(0.0);
+    let mut s = State { q: q0, qd: qd0 };
+    let mut log = RunLog {
+        t: Vec::new(),
+        q: Vec::new(),
+        tau: Vec::new(),
+        ee: Vec::new(),
+        mpc_cost: Vec::new(),
+    };
+    let mut tau = vec![0.0; n];
+    for k in 0..cfg.steps {
+        let t = k as f64 * cfg.dt;
+        if k % cfg.ctl_every == 0 {
+            tau = ctl.control(t, &s.q, &s.qd);
+        }
+        step_semi_implicit(robot, &mut s, &tau, None, cfg.dt);
+        let ee = ee_position(robot, &s.q);
+        log.t.push(t);
+        log.q.push(s.q.clone());
+        log.tau.push(tau.clone());
+        log.ee.push(ee.0);
+    }
+    log
+}
+
+/// Paired-run metrics: the quantization-induced deviation between a
+/// float-controlled and a quantized-controlled closed loop.
+#[derive(Debug, Clone)]
+pub struct PairMetrics {
+    /// Max / mean end-effector deviation between the two runs [m].
+    pub traj_err_max: f64,
+    pub traj_err_mean: f64,
+    /// Max / mean torque-vector norm difference.
+    pub torque_diff_max: f64,
+    pub torque_diff_mean: f64,
+    /// Per-step EE deviation series (Fig. 9(b)).
+    pub ee_diff: Vec<f64>,
+    /// Per-step joint-space posture difference norm (Fig. 9(a)).
+    pub posture_diff: Vec<f64>,
+    /// Per-step torque-difference norm (Fig. 8(b)).
+    pub torque_diff: Vec<f64>,
+}
+
+pub fn compare_runs(a: &RunLog, b: &RunLog) -> PairMetrics {
+    let steps = a.t.len().min(b.t.len());
+    let mut ee_diff = Vec::with_capacity(steps);
+    let mut posture_diff = Vec::with_capacity(steps);
+    let mut torque_diff = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let de: f64 = (0..3)
+            .map(|i| (a.ee[k][i] - b.ee[k][i]).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        ee_diff.push(de);
+        let dq: f64 = a.q[k]
+            .iter()
+            .zip(&b.q[k])
+            .map(|(x, y)| (x - y).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        posture_diff.push(dq);
+        let dtau: f64 = a.tau[k]
+            .iter()
+            .zip(&b.tau[k])
+            .map(|(x, y)| (x - y).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        torque_diff.push(dtau);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let maxv = |v: &[f64]| v.iter().fold(0.0f64, |m, &x| m.max(x));
+    PairMetrics {
+        traj_err_max: maxv(&ee_diff),
+        traj_err_mean: mean(&ee_diff),
+        torque_diff_max: maxv(&torque_diff),
+        torque_diff_mean: mean(&torque_diff),
+        ee_diff,
+        posture_diff,
+        torque_diff,
+    }
+}
+
+/// The core ICMS evaluation: paired float/quantized closed loops.
+pub fn evaluate_quantization(robot: &Robot, cfg: &IcmsConfig, fmt: QFormat) -> PairMetrics {
+    let float_run = run_closed_loop(robot, cfg, RbdBackend::Exact);
+    let quant_run = run_closed_loop(robot, cfg, RbdBackend::Quantized(fmt));
+    compare_runs(&float_run, &quant_run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    fn small_cfg(robot: &Robot, kind: ControllerKind) -> IcmsConfig {
+        let mut cfg = IcmsConfig::default_for(robot, kind);
+        cfg.steps = 400;
+        cfg
+    }
+
+    #[test]
+    fn identical_backends_identical_runs() {
+        let robot = builtin::iiwa();
+        let cfg = small_cfg(&robot, ControllerKind::Pid);
+        let a = run_closed_loop(&robot, &cfg, RbdBackend::Exact);
+        let b = run_closed_loop(&robot, &cfg, RbdBackend::Exact);
+        let m = compare_runs(&a, &b);
+        assert_eq!(m.traj_err_max, 0.0, "deterministic simulation");
+    }
+
+    #[test]
+    fn fine_quantization_small_deviation_pid() {
+        let robot = builtin::iiwa();
+        let cfg = small_cfg(&robot, ControllerKind::Pid);
+        let m = evaluate_quantization(&robot, &cfg, QFormat::new(14, 18));
+        assert!(
+            m.traj_err_max < 5e-4,
+            "32-bit-grade quantization must stay sub-0.5mm: {}",
+            m.traj_err_max
+        );
+    }
+
+    #[test]
+    fn coarse_quantization_larger_deviation_than_fine() {
+        let robot = builtin::iiwa();
+        let cfg = small_cfg(&robot, ControllerKind::Pid);
+        let fine = evaluate_quantization(&robot, &cfg, QFormat::new(12, 16));
+        let coarse = evaluate_quantization(&robot, &cfg, QFormat::new(12, 6));
+        assert!(
+            coarse.traj_err_max > fine.traj_err_max,
+            "coarse {} vs fine {}",
+            coarse.traj_err_max,
+            fine.traj_err_max
+        );
+    }
+
+    #[test]
+    fn closed_loop_stays_bounded() {
+        let robot = builtin::iiwa();
+        let cfg = small_cfg(&robot, ControllerKind::Pid);
+        let run = run_closed_loop(&robot, &cfg, RbdBackend::Quantized(QFormat::new(12, 10)));
+        for q in &run.q {
+            for (i, x) in q.iter().enumerate() {
+                assert!(x.is_finite() && x.abs() < 10.0, "joint {i} diverged: {x}");
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! ICMS: closed-loop control & motion simulation, forward kinematics,
+//! integrators, and reference trajectories.
+
+pub mod fk;
+pub mod icms;
+pub mod integrate;
+pub mod traj;

@@ -1,0 +1,154 @@
+//! Reference trajectory generation for the closed-loop evaluations: a
+//! smooth, limit-respecting joint-space trajectory with analytic
+//! derivatives (sin-sum per joint), plus set-point ("reach and hold")
+//! references used by the PID convergence study of Fig. 9.
+
+use crate::model::Robot;
+
+/// A reference with analytic q(t), q̇(t), q̈(t).
+#[derive(Debug, Clone)]
+pub enum Trajectory {
+    /// q_i(t) = center_i + amp_i · sin(ω_i t + φ_i)
+    Sinusoid {
+        center: Vec<f64>,
+        amp: Vec<f64>,
+        omega: Vec<f64>,
+        phase: Vec<f64>,
+    },
+    /// Smooth quintic move from `from` to `to` over `duration`, then hold
+    /// (the Fig. 9 "approach a target posture" workload).
+    MinJerk {
+        from: Vec<f64>,
+        to: Vec<f64>,
+        duration: f64,
+    },
+}
+
+impl Trajectory {
+    /// Gentle sinusoid filling a fraction of each joint's range.
+    pub fn gentle_sinusoid(robot: &Robot, scale: f64, base_omega: f64) -> Trajectory {
+        let n = robot.dof();
+        let center: Vec<f64> =
+            robot.links.iter().map(|l| 0.5 * (l.q_min + l.q_max)).collect();
+        let amp: Vec<f64> =
+            robot.links.iter().map(|l| scale * 0.5 * (l.q_max - l.q_min)).collect();
+        let omega: Vec<f64> =
+            (0..n).map(|i| base_omega * (1.0 + 0.13 * i as f64)).collect();
+        let phase: Vec<f64> = (0..n).map(|i| 0.7 * i as f64).collect();
+        Trajectory::Sinusoid { center, amp, omega, phase }
+    }
+
+    /// Reach from the range midpoint to a target offset, then hold.
+    pub fn reach(robot: &Robot, offset_scale: f64, duration: f64) -> Trajectory {
+        let from: Vec<f64> =
+            robot.links.iter().map(|l| 0.5 * (l.q_min + l.q_max)).collect();
+        let to: Vec<f64> = robot
+            .links
+            .iter()
+            .map(|l| {
+                let mid = 0.5 * (l.q_min + l.q_max);
+                mid + offset_scale * 0.5 * (l.q_max - l.q_min)
+            })
+            .collect();
+        Trajectory::MinJerk { from, to, duration }
+    }
+
+    pub fn dof(&self) -> usize {
+        match self {
+            Trajectory::Sinusoid { center, .. } => center.len(),
+            Trajectory::MinJerk { from, .. } => from.len(),
+        }
+    }
+
+    /// (q_ref, q̇_ref, q̈_ref) at time t.
+    pub fn sample(&self, t: f64) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        match self {
+            Trajectory::Sinusoid { center, amp, omega, phase } => {
+                let n = center.len();
+                let mut q = vec![0.0; n];
+                let mut qd = vec![0.0; n];
+                let mut qdd = vec![0.0; n];
+                for i in 0..n {
+                    let th = omega[i] * t + phase[i];
+                    q[i] = center[i] + amp[i] * th.sin();
+                    qd[i] = amp[i] * omega[i] * th.cos();
+                    qdd[i] = -amp[i] * omega[i] * omega[i] * th.sin();
+                }
+                (q, qd, qdd)
+            }
+            Trajectory::MinJerk { from, to, duration } => {
+                let n = from.len();
+                let s = (t / duration).clamp(0.0, 1.0);
+                // Quintic min-jerk blend: 10s³ − 15s⁴ + 6s⁵.
+                let b = 10.0 * s.powi(3) - 15.0 * s.powi(4) + 6.0 * s.powi(5);
+                let db = (30.0 * s.powi(2) - 60.0 * s.powi(3) + 30.0 * s.powi(4)) / duration;
+                let ddb =
+                    (60.0 * s - 180.0 * s.powi(2) + 120.0 * s.powi(3)) / (duration * duration);
+                let (db, ddb) = if t >= *duration { (0.0, 0.0) } else { (db, ddb) };
+                let mut q = vec![0.0; n];
+                let mut qd = vec![0.0; n];
+                let mut qdd = vec![0.0; n];
+                for i in 0..n {
+                    let d = to[i] - from[i];
+                    q[i] = from[i] + d * b;
+                    qd[i] = d * db;
+                    qdd[i] = d * ddb;
+                }
+                (q, qd, qdd)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn sinusoid_within_limits() {
+        let r = builtin::iiwa();
+        let traj = Trajectory::gentle_sinusoid(&r, 0.5, 1.0);
+        for k in 0..200 {
+            let (q, _, _) = traj.sample(k as f64 * 0.05);
+            for (i, l) in r.links.iter().enumerate() {
+                assert!(q[i] >= l.q_min - 1e-9 && q[i] <= l.q_max + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn derivatives_consistent() {
+        let r = builtin::iiwa();
+        for traj in [
+            Trajectory::gentle_sinusoid(&r, 0.4, 1.3),
+            Trajectory::reach(&r, 0.6, 2.0),
+        ] {
+            let h = 1e-6;
+            for t in [0.3, 0.9, 1.7] {
+                let (_, qd, qdd) = traj.sample(t);
+                let (qp, vp, _) = traj.sample(t + h);
+                let (qm, vm, _) = traj.sample(t - h);
+                for i in 0..traj.dof() {
+                    let fd_v = (qp[i] - qm[i]) / (2.0 * h);
+                    let fd_a = (vp[i] - vm[i]) / (2.0 * h);
+                    assert!((fd_v - qd[i]).abs() < 1e-5, "q̇ mismatch");
+                    assert!((fd_a - qdd[i]).abs() < 1e-4, "q̈ mismatch");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minjerk_reaches_and_holds() {
+        let r = builtin::iiwa();
+        let traj = Trajectory::reach(&r, 0.5, 1.5);
+        if let Trajectory::MinJerk { ref to, .. } = traj {
+            let (q_end, qd_end, _) = traj.sample(5.0);
+            for i in 0..r.dof() {
+                assert!((q_end[i] - to[i]).abs() < 1e-12);
+                assert_eq!(qd_end[i], 0.0);
+            }
+        }
+    }
+}

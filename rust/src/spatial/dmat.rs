@@ -1,0 +1,295 @@
+//! Dynamically-sized dense matrices (row-major), with LU factorization.
+//!
+//! Used for joint-space quantities: the mass matrix M(q) ∈ R^{N×N}, its
+//! inverse, dynamics derivative blocks, and the LQR/MPC Riccati algebra.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub d: Vec<f64>,
+}
+
+impl DMat {
+    pub fn zeros(rows: usize, cols: usize) -> DMat {
+        DMat { rows, cols, d: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> DMat {
+        let mut m = DMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> DMat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut m = DMat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.d[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng, lo: f64, hi: f64) -> DMat {
+        DMat { rows, cols, d: rng.vec_range(rows * cols, lo, hi) }
+    }
+
+    pub fn t(&self) -> DMat {
+        let mut out = DMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, o: &DMat) -> DMat {
+        assert_eq!(self.cols, o.rows, "matmul dim mismatch");
+        let mut out = DMat::zeros(self.rows, o.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = &o.d[k * o.cols..(k + 1) * o.cols];
+                let out_row = &mut out.d[i * o.cols..(i + 1) * o.cols];
+                for (oo, &b) in out_row.iter_mut().zip(orow) {
+                    *oo += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.d[i * self.cols..(i + 1) * self.cols];
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    pub fn add(&self, o: &DMat) -> DMat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        DMat {
+            rows: self.rows,
+            cols: self.cols,
+            d: self.d.iter().zip(&o.d).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, o: &DMat) -> DMat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        DMat {
+            rows: self.rows,
+            cols: self.cols,
+            d: self.d.iter().zip(&o.d).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> DMat {
+        DMat { rows: self.rows, cols: self.cols, d: self.d.iter().map(|x| x * s).collect() }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.d.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.d.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Symmetrize in place: (A + Aᵀ)/2. Used to keep Riccati iterates SPD.
+    pub fn symmetrize(&self) -> DMat {
+        self.add(&self.t()).scale(0.5)
+    }
+
+    /// LU factorization with partial pivoting. Returns (LU, perm) or None
+    /// if singular to machine precision.
+    pub fn lu(&self) -> Option<(DMat, Vec<usize>)> {
+        assert_eq!(self.rows, self.cols, "lu requires square");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot
+            let mut p = k;
+            let mut best = a[(k, k)].abs();
+            for i in k + 1..n {
+                let v = a[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-13 {
+                return None;
+            }
+            if p != k {
+                for j in 0..n {
+                    a.d.swap(k * n + j, p * n + j);
+                }
+                perm.swap(k, p);
+            }
+            let pivot = a[(k, k)];
+            for i in k + 1..n {
+                let l = a[(i, k)] / pivot;
+                a[(i, k)] = l;
+                for j in k + 1..n {
+                    a[(i, j)] -= l * a[(k, j)];
+                }
+            }
+        }
+        Some((a, perm))
+    }
+
+    /// Solve A x = b via LU.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        let (lu, perm) = self.lu()?;
+        let mut x: Vec<f64> = perm.iter().map(|&p| b[p]).collect();
+        // Forward substitution (L unit-diagonal)
+        for i in 0..n {
+            for j in 0..i {
+                x[i] -= lu[(i, j)] * x[j];
+            }
+        }
+        // Back substitution
+        for i in (0..n).rev() {
+            for j in i + 1..n {
+                x[i] -= lu[(i, j)] * x[j];
+            }
+            x[i] /= lu[(i, i)];
+        }
+        Some(x)
+    }
+
+    /// Dense inverse via LU column solves. O(n^3); fine for N ≤ 64.
+    pub fn inverse(&self) -> Option<DMat> {
+        let n = self.rows;
+        let mut out = DMat::zeros(n, n);
+        let (lu, perm) = self.lu()?;
+        for c in 0..n {
+            // b = e_c permuted
+            let mut x: Vec<f64> = perm.iter().map(|&p| if p == c { 1.0 } else { 0.0 }).collect();
+            for i in 0..n {
+                for j in 0..i {
+                    x[i] -= lu[(i, j)] * x[j];
+                }
+            }
+            for i in (0..n).rev() {
+                for j in i + 1..n {
+                    x[i] -= lu[(i, j)] * x[j];
+                }
+                x[i] /= lu[(i, i)];
+            }
+            for r in 0..n {
+                out[(r, c)] = x[r];
+            }
+        }
+        Some(out)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DMat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.d[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DMat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.d[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{close, Config};
+
+    #[test]
+    fn identity_solve() {
+        let m = DMat::identity(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.solve(&b).unwrap(), b);
+    }
+
+    #[test]
+    fn solve_known_system() {
+        let a = DMat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = a.solve(&[5.0, 10.0]).unwrap();
+        assert!(close(x[0], 1.0, 1e-12));
+        assert!(close(x[1], 3.0, 1e-12));
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        crate::util::check::forall_res(
+            "dmat-inverse",
+            Config { cases: 64, ..Default::default() },
+            |r| {
+                let n = 1 + r.below(8);
+                // Diagonally-dominant => invertible.
+                let mut m = DMat::random(n, n, r, -1.0, 1.0);
+                for i in 0..n {
+                    m[(i, i)] += n as f64;
+                }
+                m
+            },
+            |m| {
+                let inv = m.inverse().ok_or_else(|| "singular".to_string())?;
+                let prod = m.matmul(&inv);
+                let id = DMat::identity(m.rows);
+                let err = prod.sub(&id).max_abs();
+                if err < 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("max err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn singular_detected() {
+        let m = DMat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(m.lu().is_none());
+        assert!(m.inverse().is_none());
+    }
+
+    #[test]
+    fn matmul_assoc() {
+        let mut r = Rng::new(40);
+        let a = DMat::random(3, 4, &mut r, -1.0, 1.0);
+        let b = DMat::random(4, 2, &mut r, -1.0, 1.0);
+        let c = DMat::random(2, 5, &mut r, -1.0, 1.0);
+        let l = a.matmul(&b).matmul(&c);
+        let rr = a.matmul(&b.matmul(&c));
+        assert!(l.sub(&rr).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn transpose_of_product() {
+        let mut r = Rng::new(41);
+        let a = DMat::random(3, 4, &mut r, -1.0, 1.0);
+        let b = DMat::random(4, 2, &mut r, -1.0, 1.0);
+        let lhs = a.matmul(&b).t();
+        let rhs = b.t().matmul(&a.t());
+        assert!(lhs.sub(&rhs).max_abs() < 1e-13);
+    }
+}

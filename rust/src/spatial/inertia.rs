@@ -1,0 +1,149 @@
+//! Spatial rigid-body inertia.
+//!
+//! Stored in "mass / first moment / rotational inertia at frame origin"
+//! form. The dense block form (Featherstone RBDA eq. 2.63):
+//!
+//! ```text
+//!   I = [ Ī_o     m c̃  ]      Ī_o = Ī_com + m c̃ c̃ᵀ
+//!       [ m c̃ᵀ    m 1  ]
+//! ```
+
+use super::v3m3::{M3, V3};
+use super::vec::SV;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Inertia {
+    pub mass: f64,
+    /// Centre of mass in link coordinates.
+    pub com: V3,
+    /// Rotational inertia about the frame ORIGIN (not the CoM): Ī_o.
+    pub i_o: M3,
+}
+
+impl Inertia {
+    pub fn zero() -> Inertia {
+        Inertia { mass: 0.0, com: V3::ZERO, i_o: M3::ZERO }
+    }
+
+    /// Build from CoM-centred rotational inertia (the URDF convention):
+    /// Ī_o = Ī_com + m c̃ c̃ᵀ.
+    pub fn from_com_inertia(mass: f64, com: V3, i_com: M3) -> Inertia {
+        let cx = com.skew();
+        let shift = cx.mul_m(&cx.transpose()).scale(mass);
+        Inertia { mass, com, i_o: i_com.add_m(&shift) }
+    }
+
+    /// f = I v (motion → force).
+    pub fn apply(&self, v: &SV) -> SV {
+        let mc = self.com.scale(self.mass);
+        SV {
+            ang: self.i_o.mul_v(&v.ang) + mc.cross(&v.lin),
+            lin: v.lin.scale(self.mass) - mc.cross(&v.ang),
+        }
+    }
+
+    /// Dense symmetric 6×6 (row-major blocks as documented above).
+    pub fn to_mat6(&self) -> [[f64; 6]; 6] {
+        let mut m = [[0.0; 6]; 6];
+        let mcx = self.com.skew().scale(self.mass).0;
+        for i in 0..3 {
+            for j in 0..3 {
+                m[i][j] = self.i_o.0[i][j];
+                m[i][j + 3] = mcx[i][j];
+                m[i + 3][j] = -mcx[i][j]; // (m c̃)ᵀ = -m c̃
+            }
+            m[i + 3][i + 3] = self.mass;
+        }
+        m
+    }
+
+    /// Kinetic energy ½ vᵀ I v.
+    pub fn kinetic_energy(&self, v: &SV) -> f64 {
+        0.5 * v.dot(&self.apply(v))
+    }
+}
+
+/// Test-only helpers shared across modules.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Physically valid random inertia: positive mass, SPD rotational
+    /// inertia about the CoM built as A Aᵀ + εI, then shifted to origin.
+    pub fn rand_inertia(r: &mut Rng) -> Inertia {
+        let mass = r.range(0.2, 8.0);
+        let com = V3::new(r.range(-0.2, 0.2), r.range(-0.2, 0.2), r.range(-0.2, 0.2));
+        let mut a = M3::ZERO;
+        for i in 0..3 {
+            for j in 0..3 {
+                a.0[i][j] = r.range(-0.3, 0.3);
+            }
+        }
+        let mut i_com = a.mul_m(&a.transpose());
+        for i in 0..3 {
+            i_com.0[i][i] += 0.05;
+        }
+        Inertia::from_com_inertia(mass, com, i_com)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::rand_inertia;
+    use super::*;
+    use crate::util::check::close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn apply_matches_dense() {
+        let mut r = Rng::new(20);
+        for _ in 0..64 {
+            let ine = rand_inertia(&mut r);
+            let v = SV::from_slice(&r.vec_range(6, -2.0, 2.0));
+            let f = ine.apply(&v).to_array();
+            let m = ine.to_mat6();
+            let va = v.to_array();
+            for i in 0..6 {
+                let mut acc = 0.0;
+                for j in 0..6 {
+                    acc += m[i][j] * va[j];
+                }
+                assert!(close(acc, f[i], 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_is_symmetric() {
+        let mut r = Rng::new(21);
+        let ine = rand_inertia(&mut r);
+        let m = ine.to_mat6();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!(close(m[i][j], m[j][i], 1e-13));
+            }
+        }
+    }
+
+    #[test]
+    fn kinetic_energy_positive() {
+        let mut r = Rng::new(22);
+        for _ in 0..64 {
+            let ine = rand_inertia(&mut r);
+            let v = SV::from_slice(&r.vec_range(6, -2.0, 2.0));
+            if v.norm() > 1e-6 {
+                assert!(ine.kinetic_energy(&v) > 0.0, "inertia must be positive definite");
+            }
+        }
+    }
+
+    #[test]
+    fn point_mass_linear_only() {
+        let ine = Inertia::from_com_inertia(2.0, V3::ZERO, M3::ZERO);
+        let v = SV::new(V3::ZERO, V3::new(1.0, 0.0, 0.0));
+        let f = ine.apply(&v);
+        assert!(close(f.lin.x(), 2.0, 1e-14));
+        assert!(f.ang.norm() < 1e-14);
+    }
+}

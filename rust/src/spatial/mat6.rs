@@ -1,0 +1,177 @@
+//! Dense 6×6 matrix ops for articulated-body quantities.
+
+use super::vec::SV;
+use super::xform::Xform;
+
+pub type M6 = [[f64; 6]; 6];
+
+pub fn zero6() -> M6 {
+    [[0.0; 6]; 6]
+}
+
+pub fn ident6() -> M6 {
+    let mut m = zero6();
+    for i in 0..6 {
+        m[i][i] = 1.0;
+    }
+    m
+}
+
+pub fn add6(a: &M6, b: &M6) -> M6 {
+    let mut out = *a;
+    for i in 0..6 {
+        for j in 0..6 {
+            out[i][j] += b[i][j];
+        }
+    }
+    out
+}
+
+pub fn sub6(a: &M6, b: &M6) -> M6 {
+    let mut out = *a;
+    for i in 0..6 {
+        for j in 0..6 {
+            out[i][j] -= b[i][j];
+        }
+    }
+    out
+}
+
+pub fn scale6(a: &M6, s: f64) -> M6 {
+    let mut out = *a;
+    for row in &mut out {
+        for x in row {
+            *x *= s;
+        }
+    }
+    out
+}
+
+pub fn mul6(a: &M6, b: &M6) -> M6 {
+    let mut out = zero6();
+    for i in 0..6 {
+        for k in 0..6 {
+            let aik = a[i][k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..6 {
+                out[i][j] += aik * b[k][j];
+            }
+        }
+    }
+    out
+}
+
+pub fn t6(a: &M6) -> M6 {
+    let mut out = zero6();
+    for i in 0..6 {
+        for j in 0..6 {
+            out[i][j] = a[j][i];
+        }
+    }
+    out
+}
+
+pub fn matvec6(a: &M6, v: &SV) -> SV {
+    let x = v.to_array();
+    let mut y = [0.0; 6];
+    for i in 0..6 {
+        for j in 0..6 {
+            y[i] += a[i][j] * x[j];
+        }
+    }
+    SV::from_slice(&y)
+}
+
+/// Outer product u vᵀ.
+pub fn outer6(u: &SV, v: &SV) -> M6 {
+    let ua = u.to_array();
+    let va = v.to_array();
+    let mut out = zero6();
+    for i in 0..6 {
+        for j in 0..6 {
+            out[i][j] = ua[i] * va[j];
+        }
+    }
+    out
+}
+
+/// Articulated-inertia frame change: given `x` mapping parent→child
+/// motion coordinates and `ia` expressed in the child frame, returns the
+/// parent-frame contribution `Xᵀ I X` (Featherstone RBDA eq. 7.23 term).
+pub fn transform_inertia_to_parent(x: &Xform, ia: &M6) -> M6 {
+    let xm = x.to_mat6();
+    mul6(&t6(&xm), &mul6(ia, &xm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spatial::inertia::tests_support::rand_inertia;
+    use crate::spatial::v3m3::{M3, V3};
+    use crate::util::check::close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mul_identity() {
+        let mut r = Rng::new(30);
+        let mut a = zero6();
+        for i in 0..6 {
+            for j in 0..6 {
+                a[i][j] = r.range(-1.0, 1.0);
+            }
+        }
+        let out = mul6(&a, &ident6());
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!(close(out[i][j], a[i][j], 1e-14));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(31);
+        let mut a = zero6();
+        for i in 0..6 {
+            for j in 0..6 {
+                a[i][j] = r.range(-1.0, 1.0);
+            }
+        }
+        assert_eq!(t6(&t6(&a)), a);
+    }
+
+    /// Inertia transformed to the parent frame must agree with computing
+    /// the force response through the transform chain:
+    /// (Xᵀ I X) v = Xᵀ (I (X v)) = X*⁻¹ applied to I(Xv).
+    #[test]
+    fn inertia_transform_consistent() {
+        let mut r = Rng::new(32);
+        for _ in 0..32 {
+            let ine = rand_inertia(&mut r);
+            let x = Xform {
+                e: M3::rot_axis(&V3::new(0.1, 0.7, 0.4), r.range(-2.0, 2.0)),
+                r: V3::new(r.range(-0.5, 0.5), r.range(-0.5, 0.5), r.range(-0.5, 0.5)),
+            };
+            let ia = ine.to_mat6();
+            let ip = transform_inertia_to_parent(&x, &ia);
+            let v = SV::from_slice(&r.vec_range(6, -1.0, 1.0));
+            let lhs = matvec6(&ip, &v);
+            let rhs = x.inv_apply_force(&ine.apply(&x.apply(&v)));
+            assert!((lhs - rhs).norm() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn outer_rank_one() {
+        let u = SV::from_slice(&[1.0, 0.0, 2.0, 0.0, -1.0, 0.5]);
+        let v = SV::from_slice(&[0.5, 1.0, 0.0, 3.0, 0.0, -2.0]);
+        let m = outer6(&u, &v);
+        let w = SV::from_slice(&[1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
+        // (u vᵀ) w = u (v·w)
+        let got = matvec6(&m, &w);
+        let want = u.scale(v.dot(&w));
+        assert!((got - want).norm() < 1e-12);
+    }
+}

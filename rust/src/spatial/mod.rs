@@ -1,0 +1,17 @@
+//! Spatial vector algebra (Featherstone) — the numerical substrate for
+//! all RBD computation: 6-D motion/force vectors, Plücker transforms,
+//! spatial inertia, and small dense matrices.
+
+pub mod dmat;
+pub mod inertia;
+pub mod mat6;
+pub mod v3m3;
+pub mod vec;
+pub mod xform;
+
+pub use dmat::DMat;
+pub use inertia::Inertia;
+pub use mat6::M6;
+pub use v3m3::{M3, V3};
+pub use vec::SV;
+pub use xform::Xform;

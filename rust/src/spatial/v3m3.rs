@@ -1,0 +1,269 @@
+//! 3-vectors and 3×3 matrices (column-free, plain arrays, zero alloc).
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// A 3-vector.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct V3(pub [f64; 3]);
+
+/// A 3×3 matrix, row-major.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct M3(pub [[f64; 3]; 3]);
+
+impl V3 {
+    pub const ZERO: V3 = V3([0.0; 3]);
+
+    pub fn new(x: f64, y: f64, z: f64) -> V3 {
+        V3([x, y, z])
+    }
+
+    pub fn x(&self) -> f64 {
+        self.0[0]
+    }
+    pub fn y(&self) -> f64 {
+        self.0[1]
+    }
+    pub fn z(&self) -> f64 {
+        self.0[2]
+    }
+
+    pub fn dot(&self, o: &V3) -> f64 {
+        self.0[0] * o.0[0] + self.0[1] * o.0[1] + self.0[2] * o.0[2]
+    }
+
+    pub fn cross(&self, o: &V3) -> V3 {
+        V3([
+            self.0[1] * o.0[2] - self.0[2] * o.0[1],
+            self.0[2] * o.0[0] - self.0[0] * o.0[2],
+            self.0[0] * o.0[1] - self.0[1] * o.0[0],
+        ])
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn scale(&self, s: f64) -> V3 {
+        V3([self.0[0] * s, self.0[1] * s, self.0[2] * s])
+    }
+
+    pub fn normalized(&self) -> V3 {
+        let n = self.norm();
+        assert!(n > 1e-12, "cannot normalize near-zero vector");
+        self.scale(1.0 / n)
+    }
+
+    /// Skew-symmetric cross-product matrix: skew(v) * w == v × w.
+    pub fn skew(&self) -> M3 {
+        let [x, y, z] = self.0;
+        M3([[0.0, -z, y], [z, 0.0, -x], [-y, x, 0.0]])
+    }
+}
+
+impl Add for V3 {
+    type Output = V3;
+    fn add(self, o: V3) -> V3 {
+        V3([self.0[0] + o.0[0], self.0[1] + o.0[1], self.0[2] + o.0[2]])
+    }
+}
+
+impl Sub for V3 {
+    type Output = V3;
+    fn sub(self, o: V3) -> V3 {
+        V3([self.0[0] - o.0[0], self.0[1] - o.0[1], self.0[2] - o.0[2]])
+    }
+}
+
+impl Neg for V3 {
+    type Output = V3;
+    fn neg(self) -> V3 {
+        V3([-self.0[0], -self.0[1], -self.0[2]])
+    }
+}
+
+impl M3 {
+    pub const ZERO: M3 = M3([[0.0; 3]; 3]);
+
+    pub fn identity() -> M3 {
+        M3([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    }
+
+    pub fn diag(x: f64, y: f64, z: f64) -> M3 {
+        M3([[x, 0.0, 0.0], [0.0, y, 0.0], [0.0, 0.0, z]])
+    }
+
+    pub fn transpose(&self) -> M3 {
+        let m = &self.0;
+        M3([[m[0][0], m[1][0], m[2][0]], [m[0][1], m[1][1], m[2][1]], [m[0][2], m[1][2], m[2][2]]])
+    }
+
+    pub fn mul_v(&self, v: &V3) -> V3 {
+        let m = &self.0;
+        V3([
+            m[0][0] * v.0[0] + m[0][1] * v.0[1] + m[0][2] * v.0[2],
+            m[1][0] * v.0[0] + m[1][1] * v.0[1] + m[1][2] * v.0[2],
+            m[2][0] * v.0[0] + m[2][1] * v.0[1] + m[2][2] * v.0[2],
+        ])
+    }
+
+    /// vᵀ M (equivalently Mᵀ v).
+    pub fn tmul_v(&self, v: &V3) -> V3 {
+        self.transpose().mul_v(v)
+    }
+
+    pub fn scale(&self, s: f64) -> M3 {
+        let mut out = *self;
+        for r in &mut out.0 {
+            for x in r {
+                *x *= s;
+            }
+        }
+        out
+    }
+
+    /// Rotation matrix that maps coordinates through a rotation of `angle`
+    /// about `axis` (Rodrigues). This is the *coordinate transform* E used
+    /// in Featherstone's jcalc: E = exp(-angle * skew(axis)) expresses a
+    /// vector of the predecessor frame in the successor frame.
+    pub fn rot_axis(axis: &V3, angle: f64) -> M3 {
+        let a = axis.normalized();
+        let (s, c) = angle.sin_cos();
+        let k = a.skew();
+        // E = I - sin(q) K + (1-cos(q)) K^2   (transpose of the rotation
+        // that moves vectors by +q about the axis)
+        let k2 = k.mul_m(&k);
+        let mut e = M3::identity();
+        for i in 0..3 {
+            for j in 0..3 {
+                e.0[i][j] += -s * k.0[i][j] + (1.0 - c) * k2.0[i][j];
+            }
+        }
+        e
+    }
+
+    pub fn mul_m(&self, o: &M3) -> M3 {
+        let mut out = M3::ZERO;
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut acc = 0.0;
+                for k in 0..3 {
+                    acc += self.0[i][k] * o.0[k][j];
+                }
+                out.0[i][j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn add_m(&self, o: &M3) -> M3 {
+        let mut out = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                out.0[i][j] += o.0[i][j];
+            }
+        }
+        out
+    }
+
+    pub fn sub_m(&self, o: &M3) -> M3 {
+        let mut out = *self;
+        for i in 0..3 {
+            for j in 0..3 {
+                out.0[i][j] -= o.0[i][j];
+            }
+        }
+        out
+    }
+
+    pub fn det(&self) -> f64 {
+        let m = &self.0;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+}
+
+impl Mul for M3 {
+    type Output = M3;
+    fn mul(self, o: M3) -> M3 {
+        self.mul_m(&o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::close;
+
+    #[test]
+    fn cross_anticommutes() {
+        let a = V3::new(1.0, 2.0, 3.0);
+        let b = V3::new(-0.5, 4.0, 0.25);
+        let ab = a.cross(&b);
+        let ba = b.cross(&a);
+        for i in 0..3 {
+            assert!(close(ab.0[i], -ba.0[i], 1e-14));
+        }
+    }
+
+    #[test]
+    fn skew_matches_cross() {
+        let a = V3::new(0.3, -1.2, 2.0);
+        let b = V3::new(5.0, 0.1, -0.7);
+        let s = a.skew().mul_v(&b);
+        let c = a.cross(&b);
+        for i in 0..3 {
+            assert!(close(s.0[i], c.0[i], 1e-14));
+        }
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let e = M3::rot_axis(&V3::new(0.0, 0.0, 1.0), 0.73);
+        let ete = e.transpose().mul_m(&e);
+        let id = M3::identity();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(close(ete.0[i][j], id.0[i][j], 1e-12));
+            }
+        }
+        assert!(close(e.det(), 1.0, 1e-12));
+    }
+
+    #[test]
+    fn rotation_about_z_convention() {
+        // Featherstone rz(q): E maps old-frame coords into a frame rotated
+        // by +q about z. A point on +x axis expressed in rotated frame has
+        // negative y... specifically E = [[c, s, 0], [-s, c, 0], [0,0,1]].
+        let q = 0.3_f64;
+        let e = M3::rot_axis(&V3::new(0.0, 0.0, 1.0), q);
+        assert!(close(e.0[0][0], q.cos(), 1e-14));
+        assert!(close(e.0[0][1], q.sin(), 1e-14));
+        assert!(close(e.0[1][0], -q.sin(), 1e-14));
+    }
+
+    #[test]
+    fn rot_compose_matches_angle_sum() {
+        let ax = V3::new(0.0, 1.0, 0.0);
+        let e1 = M3::rot_axis(&ax, 0.4);
+        let e2 = M3::rot_axis(&ax, 0.5);
+        let e12 = M3::rot_axis(&ax, 0.9);
+        let prod = e2.mul_m(&e1);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(close(prod.0[i][j], e12.0[i][j], 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn tmul_is_transpose_mul() {
+        let m = M3([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 10.0]]);
+        let v = V3::new(-1.0, 0.5, 2.0);
+        let a = m.tmul_v(&v);
+        let b = m.transpose().mul_v(&v);
+        for i in 0..3 {
+            assert!(close(a.0[i], b.0[i], 1e-14));
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Spatial (6-D) motion and force vectors, Featherstone convention:
+//! the angular part occupies components 0..3, the linear part 3..6.
+
+use super::v3m3::V3;
+use std::ops::{Add, Neg, Sub};
+
+/// A spatial vector. Whether it is a *motion* or a *force* vector is a
+/// matter of which operations you apply (crm vs crf, X vs X*).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SV {
+    pub ang: V3,
+    pub lin: V3,
+}
+
+impl SV {
+    pub const ZERO: SV = SV { ang: V3([0.0; 3]), lin: V3([0.0; 3]) };
+
+    pub fn new(ang: V3, lin: V3) -> SV {
+        SV { ang, lin }
+    }
+
+    pub fn from_slice(x: &[f64]) -> SV {
+        assert_eq!(x.len(), 6);
+        SV { ang: V3([x[0], x[1], x[2]]), lin: V3([x[3], x[4], x[5]]) }
+    }
+
+    pub fn to_array(&self) -> [f64; 6] {
+        let a = self.ang.0;
+        let l = self.lin.0;
+        [a[0], a[1], a[2], l[0], l[1], l[2]]
+    }
+
+    pub fn scale(&self, s: f64) -> SV {
+        SV { ang: self.ang.scale(s), lin: self.lin.scale(s) }
+    }
+
+    /// Scalar product mᵀf — pairing of a motion with a force vector
+    /// (e.g. Sᵀ f to project a force onto a joint axis).
+    pub fn dot(&self, o: &SV) -> f64 {
+        self.ang.dot(&o.ang) + self.lin.dot(&o.lin)
+    }
+
+    /// Spatial cross product for MOTION vectors: self × m.
+    /// (w,v) × (mw,mv) = (w×mw, w×mv + v×mw)
+    pub fn crm(&self, m: &SV) -> SV {
+        SV {
+            ang: self.ang.cross(&m.ang),
+            lin: self.ang.cross(&m.lin) + self.lin.cross(&m.ang),
+        }
+    }
+
+    /// Spatial cross product for FORCE vectors: self ×* f = -crm(self)ᵀ f.
+    /// (w,v) ×* (n,f) = (w×n + v×f, w×f)
+    pub fn crf(&self, f: &SV) -> SV {
+        SV {
+            ang: self.ang.cross(&f.ang) + self.lin.cross(&f.lin),
+            lin: self.ang.cross(&f.lin),
+        }
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+}
+
+impl Add for SV {
+    type Output = SV;
+    fn add(self, o: SV) -> SV {
+        SV { ang: self.ang + o.ang, lin: self.lin + o.lin }
+    }
+}
+
+impl Sub for SV {
+    type Output = SV;
+    fn sub(self, o: SV) -> SV {
+        SV { ang: self.ang - o.ang, lin: self.lin - o.lin }
+    }
+}
+
+impl Neg for SV {
+    type Output = SV;
+    fn neg(self) -> SV {
+        SV { ang: -self.ang, lin: -self.lin }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::close;
+    use crate::util::rng::Rng;
+
+    fn rand_sv(r: &mut Rng) -> SV {
+        SV::new(
+            V3::new(r.range(-2.0, 2.0), r.range(-2.0, 2.0), r.range(-2.0, 2.0)),
+            V3::new(r.range(-2.0, 2.0), r.range(-2.0, 2.0), r.range(-2.0, 2.0)),
+        )
+    }
+
+    #[test]
+    fn crm_self_is_zero() {
+        let mut r = Rng::new(1);
+        for _ in 0..32 {
+            let v = rand_sv(&mut r);
+            assert!(v.crm(&v).norm() < 1e-12);
+        }
+    }
+
+    /// Duality: (v × m) · f = -m · (v ×* f). This is the defining relation
+    /// crf = -crmᵀ and catches sign errors that silently corrupt RNEA.
+    #[test]
+    fn crm_crf_duality() {
+        let mut r = Rng::new(2);
+        for _ in 0..64 {
+            let v = rand_sv(&mut r);
+            let m = rand_sv(&mut r);
+            let f = rand_sv(&mut r);
+            let lhs = v.crm(&m).dot(&f);
+            let rhs = -m.dot(&v.crf(&f));
+            assert!(close(lhs, rhs, 1e-12), "{lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn array_roundtrip() {
+        let v = SV::from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(v.to_array(), [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(v.ang.z(), 3.0);
+        assert_eq!(v.lin.x(), 4.0);
+    }
+
+    #[test]
+    fn jacobi_identity_for_crm() {
+        // a×(b×c) + b×(c×a) + c×(a×b) = 0 for the motion algebra se(3).
+        let mut r = Rng::new(3);
+        for _ in 0..32 {
+            let a = rand_sv(&mut r);
+            let b = rand_sv(&mut r);
+            let c = rand_sv(&mut r);
+            let s = a.crm(&b.crm(&c)) + b.crm(&c.crm(&a)) + c.crm(&a.crm(&b));
+            assert!(s.norm() < 1e-11, "{}", s.norm());
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Plücker spatial transforms between link coordinate frames.
+//!
+//! `Xform { e, r }` represents the motion transform `X` from frame A to
+//! frame B where `e` rotates A-coordinates into B-coordinates and `r` is
+//! the position of B's origin expressed in A. In block form
+//! (Featherstone, RBDA eq. 2.24):
+//!
+//! ```text
+//!   X  = [  E        0 ]        X* = [ E   -E r̃ ]
+//!        [ -E r̃      E ]             [ 0      E ]
+//! ```
+
+use super::v3m3::{M3, V3};
+use super::vec::SV;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Xform {
+    /// Rotation A→B.
+    pub e: M3,
+    /// Origin of B in A coordinates.
+    pub r: V3,
+}
+
+impl Xform {
+    pub fn identity() -> Xform {
+        Xform { e: M3::identity(), r: V3::ZERO }
+    }
+
+    pub fn rotation(e: M3) -> Xform {
+        Xform { e, r: V3::ZERO }
+    }
+
+    pub fn translation(r: V3) -> Xform {
+        Xform { e: M3::identity(), r }
+    }
+
+    /// Motion-vector transform: v_B = X v_A.
+    pub fn apply(&self, v: &SV) -> SV {
+        let ang = self.e.mul_v(&v.ang);
+        let lin = self.e.mul_v(&(v.lin - self.r.cross(&v.ang)));
+        SV { ang, lin }
+    }
+
+    /// Force-vector transform: f_B = X* f_A.
+    pub fn apply_force(&self, f: &SV) -> SV {
+        let lin = self.e.mul_v(&f.lin);
+        let ang = self.e.mul_v(&(f.ang - self.r.cross(&f.lin)));
+        SV { ang, lin }
+    }
+
+    /// Inverse motion transform: v_A = X⁻¹ v_B.
+    pub fn inv_apply(&self, v: &SV) -> SV {
+        let ang = self.e.tmul_v(&v.ang);
+        let lin = self.e.tmul_v(&v.lin) + self.r.cross(&ang);
+        SV { ang, lin }
+    }
+
+    /// Inverse force transform: f_A = X*⁻¹ f_B = Xᵀ f_B.
+    /// This is the `X_λ(i)^T f_i` operation of RNEA's backward pass.
+    pub fn inv_apply_force(&self, f: &SV) -> SV {
+        let lin = self.e.tmul_v(&f.lin);
+        let ang = self.e.tmul_v(&f.ang) + self.r.cross(&lin);
+        SV { ang, lin }
+    }
+
+    /// Composition: `self ∘ first` maps A→C when `first` maps A→B and
+    /// `self` maps B→C.
+    pub fn compose(&self, first: &Xform) -> Xform {
+        Xform {
+            e: self.e.mul_m(&first.e),
+            r: first.r + first.e.tmul_v(&self.r),
+        }
+    }
+
+    pub fn inverse(&self) -> Xform {
+        Xform { e: self.e.transpose(), r: -self.e.mul_v(&self.r) }
+    }
+
+    /// Dense 6×6 motion-transform matrix (row-major), used by the
+    /// articulated-inertia propagation and exported to the JAX layer.
+    pub fn to_mat6(&self) -> [[f64; 6]; 6] {
+        let e = self.e.0;
+        let erx = self.e.mul_m(&self.r.skew()).0; // E r̃
+        let mut m = [[0.0; 6]; 6];
+        for i in 0..3 {
+            for j in 0..3 {
+                m[i][j] = e[i][j];
+                m[i + 3][j + 3] = e[i][j];
+                m[i + 3][j] = -erx[i][j];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::close;
+    use crate::util::rng::Rng;
+
+    fn rand_xform(r: &mut Rng) -> Xform {
+        let axis = V3::new(r.range(-1.0, 1.0), r.range(-1.0, 1.0), r.range(0.1, 1.0));
+        Xform {
+            e: M3::rot_axis(&axis, r.range(-3.0, 3.0)),
+            r: V3::new(r.range(-1.0, 1.0), r.range(-1.0, 1.0), r.range(-1.0, 1.0)),
+        }
+    }
+
+    fn rand_sv(r: &mut Rng) -> SV {
+        SV::new(
+            V3::new(r.range(-2.0, 2.0), r.range(-2.0, 2.0), r.range(-2.0, 2.0)),
+            V3::new(r.range(-2.0, 2.0), r.range(-2.0, 2.0), r.range(-2.0, 2.0)),
+        )
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut r = Rng::new(10);
+        for _ in 0..64 {
+            let x = rand_xform(&mut r);
+            let v = rand_sv(&mut r);
+            let back = x.inv_apply(&x.apply(&v));
+            assert!((back - v).norm() < 1e-12);
+            let f = rand_sv(&mut r);
+            let backf = x.inv_apply_force(&x.apply_force(&f));
+            assert!((backf - f).norm() < 1e-12);
+        }
+    }
+
+    /// Power invariance: a force and motion pair under a frame change
+    /// must preserve their scalar product: (Xv)·(X*f) = v·f.
+    #[test]
+    fn power_invariance() {
+        let mut r = Rng::new(11);
+        for _ in 0..64 {
+            let x = rand_xform(&mut r);
+            let v = rand_sv(&mut r);
+            let f = rand_sv(&mut r);
+            assert!(close(x.apply(&v).dot(&x.apply_force(&f)), v.dot(&f), 1e-11));
+        }
+    }
+
+    #[test]
+    fn compose_matches_sequential_apply() {
+        let mut r = Rng::new(12);
+        for _ in 0..64 {
+            let x1 = rand_xform(&mut r); // A->B
+            let x2 = rand_xform(&mut r); // B->C
+            let v = rand_sv(&mut r);
+            let seq = x2.apply(&x1.apply(&v));
+            let comp = x2.compose(&x1).apply(&v);
+            assert!((seq - comp).norm() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn mat6_matches_apply() {
+        let mut r = Rng::new(13);
+        for _ in 0..32 {
+            let x = rand_xform(&mut r);
+            let v = rand_sv(&mut r);
+            let m = x.to_mat6();
+            let va = v.to_array();
+            let mut out = [0.0; 6];
+            for i in 0..6 {
+                for j in 0..6 {
+                    out[i] += m[i][j] * va[j];
+                }
+            }
+            let want = x.apply(&v).to_array();
+            for i in 0..6 {
+                assert!(close(out[i], want[i], 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_compose_is_identity() {
+        let mut r = Rng::new(14);
+        for _ in 0..32 {
+            let x = rand_xform(&mut r);
+            let id = x.compose(&x.inverse());
+            let v = rand_sv(&mut r);
+            assert!((id.apply(&v) - v).norm() < 1e-11);
+        }
+    }
+
+    /// Cross products commute with frame changes:
+    /// X(v × m) = (Xv) × (Xm) and X*(v ×* f) = (Xv) ×* (X*f).
+    #[test]
+    fn cross_products_are_equivariant() {
+        let mut r = Rng::new(15);
+        for _ in 0..48 {
+            let x = rand_xform(&mut r);
+            let v = rand_sv(&mut r);
+            let m = rand_sv(&mut r);
+            let f = rand_sv(&mut r);
+            let a = x.apply(&v.crm(&m));
+            let b = x.apply(&v).crm(&x.apply(&m));
+            assert!((a - b).norm() < 1e-10);
+            let c = x.apply_force(&v.crf(&f));
+            let d = x.apply(&v).crf(&x.apply_force(&f));
+            assert!((c - d).norm() < 1e-10);
+        }
+    }
+}

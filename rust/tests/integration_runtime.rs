@@ -1,0 +1,219 @@
+//! Integration: load real AOT artifacts (built by `make artifacts`),
+//! execute them through the PJRT runtime + coordinator, and validate
+//! numerics against the native Rust implementations.
+//!
+//! These tests SKIP (pass trivially) when `artifacts/` is empty so that
+//! `cargo test` works before the Python compile step has run.
+
+use draco::coordinator::Coordinator;
+use draco::dynamics;
+use draco::model::{builtin_robot, State};
+use draco::runtime::artifact::{scan_artifacts, ArtifactFn};
+use draco::runtime::engine::Engine;
+use draco::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(robot: &str, f: ArtifactFn) -> Option<draco::runtime::artifact::ArtifactMeta> {
+    scan_artifacts(&artifacts_dir())
+        .into_iter()
+        .find(|a| a.robot == robot && a.function == f)
+}
+
+#[test]
+fn engine_rnea_matches_native() {
+    let Some(meta) = have("iiwa", ArtifactFn::Rnea) else {
+        eprintln!("SKIP: no iiwa rnea artifact (run `make artifacts`)");
+        return;
+    };
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let b = meta.batch;
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let engine = Engine::load(&client, meta, n).expect("compile artifact");
+
+    let mut rng = Rng::new(99);
+    let mut q = Vec::new();
+    let mut qd = Vec::new();
+    let mut qdd = Vec::new();
+    let mut states = Vec::new();
+    for _ in 0..b {
+        let s = State::random(&robot, &mut rng);
+        let acc = rng.vec_range(n, -2.0, 2.0);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        qdd.extend(acc.iter().map(|&x| x as f32));
+        states.push((s, acc));
+    }
+    let out = engine.run(&[q, qd, qdd]).expect("execute");
+    assert_eq!(out.len(), b * n);
+    for (k, (s, acc)) in states.iter().enumerate() {
+        let want = dynamics::rnea(&robot, &s.q, &s.qd, acc, None);
+        for i in 0..n {
+            let got = out[k * n + i] as f64;
+            let scale = 1.0f64.max(want[i].abs());
+            assert!(
+                (got - want[i]).abs() / scale < 2e-3,
+                "task {k} joint {i}: artifact {got} vs native {}",
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_minv_matches_native() {
+    let Some(meta) = have("iiwa", ArtifactFn::Minv) else {
+        eprintln!("SKIP: no iiwa minv artifact");
+        return;
+    };
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let b = meta.batch;
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let engine = Engine::load(&client, meta, n).expect("compile artifact");
+
+    let mut rng = Rng::new(100);
+    let mut q = Vec::new();
+    let mut states = Vec::new();
+    for _ in 0..b {
+        let s = State::random(&robot, &mut rng);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        states.push(s);
+    }
+    let out = engine.run(&[q]).expect("execute");
+    assert_eq!(out.len(), b * n * n);
+    for (k, s) in states.iter().enumerate() {
+        let want = dynamics::minv(&robot, &s.q);
+        let scale = want.max_abs();
+        for i in 0..n {
+            for j in 0..n {
+                let got = out[k * n * n + i * n + j] as f64;
+                assert!(
+                    (got - want[(i, j)]).abs() / scale < 2e-3,
+                    "task {k} M⁻¹[{i}][{j}]: {got} vs {}",
+                    want[(i, j)]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_fd_matches_native() {
+    let Some(meta) = have("iiwa", ArtifactFn::Fd) else {
+        eprintln!("SKIP: no iiwa fd artifact");
+        return;
+    };
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let b = meta.batch;
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let engine = Engine::load(&client, meta, n).expect("compile artifact");
+
+    let mut rng = Rng::new(101);
+    let mut q = Vec::new();
+    let mut qd = Vec::new();
+    let mut tau = Vec::new();
+    let mut cases = Vec::new();
+    for _ in 0..b {
+        let s = State::random(&robot, &mut rng);
+        let t = rng.vec_range(n, -10.0, 10.0);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        tau.extend(t.iter().map(|&x| x as f32));
+        cases.push((s, t));
+    }
+    let out = engine.run(&[q, qd, tau]).expect("execute");
+    for (k, (s, t)) in cases.iter().enumerate() {
+        let want = dynamics::fd(&robot, &s.q, &s.qd, t, None);
+        let scale = want.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for i in 0..n {
+            let got = out[k * n + i] as f64;
+            assert!(
+                (got - want[i]).abs() / scale < 5e-3,
+                "task {k} q̈[{i}]: {got} vs {}",
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_batches_and_answers() {
+    let Some(meta) = have("iiwa", ArtifactFn::Rnea) else {
+        eprintln!("SKIP: no iiwa rnea artifact");
+        return;
+    };
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let coord = Coordinator::start(vec![meta], n, 150);
+    let mut rng = Rng::new(102);
+    let mut pending = Vec::new();
+    for _ in 0..40 {
+        let s = State::random(&robot, &mut rng);
+        let acc = rng.vec_range(n, -1.0, 1.0);
+        let ops = vec![
+            s.q.iter().map(|&x| x as f32).collect(),
+            s.qd.iter().map(|&x| x as f32).collect(),
+            acc.iter().map(|&x| x as f32).collect(),
+        ];
+        pending.push((s, acc, coord.submit(ArtifactFn::Rnea, ops)));
+    }
+    for (s, acc, rx) in pending {
+        let out = rx.recv().expect("answer").expect("ok");
+        let want = dynamics::rnea(&robot, &s.q, &s.qd, &acc, None);
+        for i in 0..n {
+            let scale = 1.0f64.max(want[i].abs());
+            assert!(((out[i] as f64) - want[i]).abs() / scale < 2e-3);
+        }
+    }
+    let st = coord.stats();
+    assert_eq!(st.completed, 40);
+    assert!(st.batches >= 1);
+    coord.shutdown();
+}
+
+/// Property-style: coordinator must never drop, duplicate, or reorder a
+/// request's answer (each response channel gets exactly one result whose
+/// content matches its own inputs — checked via a per-request marker).
+#[test]
+fn coordinator_no_mixups_under_load() {
+    let Some(meta) = have("iiwa", ArtifactFn::Rnea) else {
+        eprintln!("SKIP: no iiwa rnea artifact");
+        return;
+    };
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let coord = Coordinator::start(vec![meta], n, 80);
+    let mut rng = Rng::new(103);
+    // Unique marker per request: qdd = j * e_0 → τ depends linearly on j.
+    let base = State::random(&robot, &mut rng);
+    let t0 = dynamics::rnea(&robot, &base.q, &base.qd, &vec![0.0; n], None);
+    let m = dynamics::crba(&robot, &base.q);
+    let mut pending = Vec::new();
+    for j in 1..=64usize {
+        let mut acc = vec![0.0; n];
+        acc[0] = j as f64 * 0.1;
+        let ops = vec![
+            base.q.iter().map(|&x| x as f32).collect(),
+            base.qd.iter().map(|&x| x as f32).collect(),
+            acc.iter().map(|&x| x as f32).collect(),
+        ];
+        pending.push((j, coord.submit(ArtifactFn::Rnea, ops)));
+    }
+    for (j, rx) in pending {
+        let out = rx.recv().unwrap().unwrap();
+        // Expected τ_0 = t0_0 + M[0][0] * 0.1 j.
+        let want = t0[0] + m[(0, 0)] * 0.1 * j as f64;
+        let got = out[0] as f64;
+        assert!(
+            (got - want).abs() / (1.0 + want.abs()) < 2e-3,
+            "request {j}: got {got}, want {want} — answers mixed up?"
+        );
+    }
+    coord.shutdown();
+}

@@ -1,0 +1,264 @@
+//! Property tests over RANDOMIZED robot topologies: the dynamics
+//! invariants must hold for any physically-valid tree, not just the four
+//! builtin robots. Trees are generated with random branching, joint
+//! types, axes, placements, and inertias.
+
+use draco::dynamics::{aba, crba, fd, minv, minv_dd, rnea, rnea_derivatives};
+use draco::model::{Joint, Link, Robot, State};
+use draco::spatial::{DMat, Inertia, M3, V3, Xform};
+use draco::util::check::{forall_res, Config};
+use draco::util::rng::Rng;
+
+/// Random physically-valid robot with 2..=10 joints.
+fn random_robot(rng: &mut Rng) -> Robot {
+    let n = 2 + rng.below(9);
+    let mut links = Vec::with_capacity(n);
+    for i in 0..n {
+        let parent = if i == 0 {
+            None
+        } else {
+            // Bias towards chains but allow branching.
+            Some(if rng.f64() < 0.7 { i - 1 } else { rng.below(i) })
+        };
+        let axis = V3::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(0.2, 1.0));
+        let joint = if rng.f64() < 0.85 {
+            Joint::revolute(axis)
+        } else {
+            Joint::prismatic(axis)
+        };
+        // Random fixed placement.
+        let rot_axis = V3::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(0.2, 1.0));
+        let x_tree = Xform {
+            e: M3::rot_axis(&rot_axis, rng.range(-1.5, 1.5)),
+            r: V3::new(rng.range(-0.3, 0.3), rng.range(-0.3, 0.3), rng.range(-0.4, 0.4)),
+        };
+        // SPD inertia about CoM.
+        let mut a = M3::ZERO;
+        for r in 0..3 {
+            for c in 0..3 {
+                a.0[r][c] = rng.range(-0.2, 0.2);
+            }
+        }
+        let mut i_com = a.mul_m(&a.transpose());
+        for d in 0..3 {
+            i_com.0[d][d] += rng.range(0.02, 0.2);
+        }
+        let inertia = Inertia::from_com_inertia(
+            rng.range(0.3, 6.0),
+            V3::new(rng.range(-0.15, 0.15), rng.range(-0.15, 0.15), rng.range(-0.15, 0.15)),
+            i_com,
+        );
+        links.push(Link {
+            name: format!("l{i}"),
+            parent,
+            joint,
+            x_tree,
+            inertia,
+            q_min: -2.0,
+            q_max: 2.0,
+            qd_max: 3.0,
+        });
+    }
+    let robot =
+        Robot { name: "random".into(), links, gravity: V3::new(0.0, 0.0, -9.81) };
+    robot.validate().expect("generator must produce valid robots");
+    robot
+}
+
+#[test]
+fn prop_fd_inverts_id_on_random_trees() {
+    forall_res(
+        "fd-id-roundtrip",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            let qdd = rng.vec_range(robot.dof(), -3.0, 3.0);
+            (robot, s, qdd)
+        },
+        |(robot, s, qdd)| {
+            let tau = rnea(robot, &s.q, &s.qd, qdd, None);
+            let back = fd(robot, &s.q, &s.qd, &tau, None);
+            for i in 0..robot.dof() {
+                let err = (back[i] - qdd[i]).abs() / (1.0 + qdd[i].abs());
+                if err > 1e-6 {
+                    return Err(format!("joint {i}: {} vs {} ({err:.2e})", back[i], qdd[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_minv_dd_equals_minv_on_random_trees() {
+    forall_res(
+        "minv-dd-equiv",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            (robot, s)
+        },
+        |(robot, s)| {
+            let a = minv(robot, &s.q);
+            let b = minv_dd(robot, &s.q);
+            let err = a.sub(&b).max_abs();
+            if err > 1e-8 * (1.0 + a.max_abs()) {
+                return Err(format!("|minv − minv_dd| = {err:.2e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_minv_inverts_crba_on_random_trees() {
+    forall_res(
+        "minv-crba",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            (robot, s)
+        },
+        |(robot, s)| {
+            let prod = minv(robot, &s.q).matmul(&crba(robot, &s.q));
+            let err = prod.sub(&DMat::identity(robot.dof())).max_abs();
+            if err > 1e-7 {
+                return Err(format!("|M⁻¹M − I| = {err:.2e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aba_matches_minv_route_on_random_trees() {
+    forall_res(
+        "aba-vs-minv",
+        Config { cases: 30, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            let tau = rng.vec_range(robot.dof(), -15.0, 15.0);
+            (robot, s, tau)
+        },
+        |(robot, s, tau)| {
+            let a = fd(robot, &s.q, &s.qd, tau, None);
+            let b = aba(robot, &s.q, &s.qd, tau, None);
+            for i in 0..robot.dof() {
+                let err = (a[i] - b[i]).abs() / (1.0 + a[i].abs());
+                if err > 1e-6 {
+                    return Err(format!("joint {i}: {} vs {}", a[i], b[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rnea_derivatives_match_fd_on_random_trees() {
+    forall_res(
+        "drnea-vs-finite-diff",
+        Config { cases: 12, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            let qdd = rng.vec_range(robot.dof(), -1.0, 1.0);
+            (robot, s, qdd)
+        },
+        |(robot, s, qdd)| {
+            let n = robot.dof();
+            let (dq, dqd) = rnea_derivatives(robot, &s.q, &s.qd, qdd);
+            let h = 1e-6;
+            for j in 0..n {
+                let mut qp = s.q.clone();
+                let mut qm = s.q.clone();
+                qp[j] += h;
+                qm[j] -= h;
+                let tp = rnea(robot, &qp, &s.qd, qdd, None);
+                let tm = rnea(robot, &qm, &s.qd, qdd, None);
+                for i in 0..n {
+                    let fdiff = (tp[i] - tm[i]) / (2.0 * h);
+                    if (fdiff - dq[(i, j)]).abs() > 5e-4 * (1.0 + fdiff.abs()) {
+                        return Err(format!("∂τ{i}/∂q{j}: {fdiff} vs {}", dq[(i, j)]));
+                    }
+                }
+                let mut vp = s.qd.clone();
+                let mut vm = s.qd.clone();
+                vp[j] += h;
+                vm[j] -= h;
+                let tp = rnea(robot, &s.q, &vp, qdd, None);
+                let tm = rnea(robot, &s.q, &vm, qdd, None);
+                for i in 0..n {
+                    let fdiff = (tp[i] - tm[i]) / (2.0 * h);
+                    if (fdiff - dqd[(i, j)]).abs() > 5e-4 * (1.0 + fdiff.abs()) {
+                        return Err(format!("∂τ{i}/∂q̇{j}: {fdiff} vs {}", dqd[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mass_matrix_spd_on_random_trees() {
+    forall_res(
+        "crba-spd",
+        Config { cases: 40, ..Default::default() },
+        |rng| {
+            let robot = random_robot(rng);
+            let s = State::random(&robot, rng);
+            let x = rng.vec_range(robot.dof(), -1.0, 1.0);
+            (robot, s, x)
+        },
+        |(robot, s, x)| {
+            let m = crba(robot, &s.q);
+            // symmetry
+            let asym = m.sub(&m.t()).max_abs();
+            if asym > 1e-9 {
+                return Err(format!("asymmetry {asym:.2e}"));
+            }
+            // positive definiteness via the random quadratic form
+            let norm2: f64 = x.iter().map(|v| v * v).sum();
+            if norm2 > 1e-9 {
+                let quad: f64 = m.matvec(x).iter().zip(x).map(|(a, b)| a * b).sum();
+                if quad <= 0.0 {
+                    return Err(format!("xᵀMx = {quad} ≤ 0"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_on_random_trees() {
+    forall_res(
+        "robot-json-roundtrip",
+        Config { cases: 40, ..Default::default() },
+        |rng| random_robot(rng),
+        |robot| {
+            let text = robot.to_json().pretty();
+            let back = Robot::from_json_str(&text).map_err(|e| e)?;
+            if back.dof() != robot.dof() {
+                return Err("dof changed".into());
+            }
+            // Dynamics must agree through the round trip.
+            let q = vec![0.3; robot.dof()];
+            let qd = vec![0.1; robot.dof()];
+            let qdd = vec![0.2; robot.dof()];
+            let a = rnea(robot, &q, &qd, &qdd, None);
+            let b = rnea(&back, &q, &qd, &qdd, None);
+            for i in 0..robot.dof() {
+                if (a[i] - b[i]).abs() > 1e-9 * (1.0 + a[i].abs()) {
+                    return Err(format!("τ{i} changed: {} vs {}", a[i], b[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
