@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke for the draco crate. Mirrors
+# .github/workflows/ci.yml so the same checks run locally.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy (dynamics crate, -D warnings) =="
+# Clippy is advisory-fatal on the library; keep going if clippy itself
+# is not installed (minimal toolchains).
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --lib --benches --tests -- -D warnings
+else
+    echo "clippy unavailable; skipping lint"
+fi
+
+echo "== bench smoke: hotpath_cpu --quick =="
+cargo bench --bench hotpath_cpu -- --quick
+
+echo "CI OK"

@@ -2,15 +2,36 @@
 //! this machine (single thread). These are the *measured* CPU baseline
 //! rows feeding Fig. 10/13, and the profile target of the perf pass
 //! (EXPERIMENTS.md §Perf).
+//!
+//! Each function is measured twice where a workspace kernel exists:
+//! the allocating path (fresh buffers per call, the pre-workspace
+//! behaviour) and the `*_ws` path (one reused [`DynWorkspace`], the
+//! serving hot path). Results are also written to `BENCH_hotpath.json`
+//! (schema `draco.hotpath.v1`) so successive PRs can track the perf
+//! trajectory. Pass `--quick` for a smoke run (CI).
 
-use draco::dynamics::{aba, crba, fd, minv, minv_dd, rnea, rnea_derivatives};
+use draco::dynamics::{
+    aba, crba, eval_batch, fd, minv, minv_dd, rnea, rnea_derivatives, BatchKernel, BatchTask,
+    DynWorkspace,
+};
 use draco::model::{builtin_robot, State};
+use draco::spatial::DMat;
 use draco::util::bench::{time_auto, Table};
+use draco::util::json::{self, Json};
 use draco::util::rng::Rng;
+use std::collections::BTreeMap;
 use std::hint::black_box;
 
+const BATCH: usize = 64;
+
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let target_ms = if quick { 8.0 } else { 60.0 };
+
     let mut t = Table::new(&["robot", "fn", "median(us)", "mean(us)", "tasks/s"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut medians: BTreeMap<(String, String), f64> = BTreeMap::new();
+
     for name in ["iiwa", "hyq", "atlas", "baxter"] {
         let robot = builtin_robot(name).unwrap();
         let n = robot.dof();
@@ -18,61 +39,169 @@ fn main() {
         let s = State::random(&robot, &mut rng);
         let qdd = rng.vec_range(n, -2.0, 2.0);
         let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let batch_tasks: Vec<BatchTask> = (0..BATCH)
+            .map(|_| {
+                let st = State::random(&robot, &mut rng);
+                BatchTask { q: st.q, qd: st.qd, u: rng.vec_range(n, -8.0, 8.0) }
+            })
+            .collect();
 
-        let cases: Vec<(&str, Box<dyn FnMut()>)> = vec![
-            ("rnea", {
+        // (label, tasks per iteration, measured closure)
+        let cases: Vec<(&str, usize, Box<dyn FnMut()>)> = vec![
+            ("rnea", 1, {
                 let (r, s, q) = (robot.clone(), s.clone(), qdd.clone());
                 Box::new(move || {
                     black_box(rnea(&r, &s.q, &s.qd, &q, None));
                 })
             }),
-            ("crba", {
+            ("rnea_ws", 1, {
+                let (r, s, q) = (robot.clone(), s.clone(), qdd.clone());
+                let mut ws = DynWorkspace::new(&robot);
+                let mut out = vec![0.0; n];
+                Box::new(move || {
+                    ws.rnea_into(&r, &s.q, &s.qd, &q, None, &mut out);
+                    black_box(&out);
+                })
+            }),
+            ("crba", 1, {
                 let (r, s) = (robot.clone(), s.clone());
                 Box::new(move || {
                     black_box(crba(&r, &s.q));
                 })
             }),
-            ("minv", {
+            ("crba_ws", 1, {
+                let (r, s) = (robot.clone(), s.clone());
+                let mut ws = DynWorkspace::new(&robot);
+                let mut m = DMat::zeros(n, n);
+                Box::new(move || {
+                    ws.crba_into(&r, &s.q, &mut m);
+                    black_box(&m);
+                })
+            }),
+            ("minv", 1, {
                 let (r, s) = (robot.clone(), s.clone());
                 Box::new(move || {
                     black_box(minv(&r, &s.q));
                 })
             }),
-            ("minv_dd", {
+            ("minv_dd", 1, {
                 let (r, s) = (robot.clone(), s.clone());
                 Box::new(move || {
                     black_box(minv_dd(&r, &s.q));
                 })
             }),
-            ("fd", {
+            ("minv_ws", 1, {
+                let (r, s) = (robot.clone(), s.clone());
+                let mut ws = DynWorkspace::new(&robot);
+                let mut m = DMat::zeros(n, n);
+                Box::new(move || {
+                    ws.minv_into(&r, &s.q, &mut m);
+                    black_box(&m);
+                })
+            }),
+            ("fd", 1, {
                 let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
                 Box::new(move || {
                     black_box(fd(&r, &s.q, &s.qd, &tt, None));
                 })
             }),
-            ("aba", {
+            ("fd_ws", 1, {
+                let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
+                let mut ws = DynWorkspace::new(&robot);
+                let mut out = vec![0.0; n];
+                Box::new(move || {
+                    ws.fd_into(&r, &s.q, &s.qd, &tt, None, &mut out);
+                    black_box(&out);
+                })
+            }),
+            ("aba", 1, {
                 let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
                 Box::new(move || {
                     black_box(aba(&r, &s.q, &s.qd, &tt, None));
                 })
             }),
-            ("drnea", {
+            ("aba_ws", 1, {
+                let (r, s, tt) = (robot.clone(), s.clone(), tau.clone());
+                let mut ws = DynWorkspace::new(&robot);
+                let mut out = vec![0.0; n];
+                Box::new(move || {
+                    ws.aba_into(&r, &s.q, &s.qd, &tt, None, &mut out);
+                    black_box(&out);
+                })
+            }),
+            ("fd_batch64", BATCH, {
+                let r = robot.clone();
+                let tasks = batch_tasks;
+                Box::new(move || {
+                    black_box(eval_batch(&r, BatchKernel::Fd, &tasks));
+                })
+            }),
+            ("drnea", 1, {
                 let (r, s, q) = (robot.clone(), s.clone(), qdd.clone());
                 Box::new(move || {
                     black_box(rnea_derivatives(&r, &s.q, &s.qd, &q));
                 })
             }),
         ];
-        for (fname, mut f) in cases {
-            let st = time_auto(60.0, &mut f);
+        for (fname, batch, mut f) in cases {
+            let st = time_auto(target_ms, &mut f);
+            let per_task_median = st.median_us() / batch as f64;
+            let tasks_s = st.throughput(batch);
             t.row(&[
                 name.to_string(),
                 fname.to_string(),
-                format!("{:.2}", st.median_us()),
-                format!("{:.2}", st.mean_us()),
-                format!("{:.0}", st.throughput(1)),
+                format!("{per_task_median:.2}"),
+                format!("{:.2}", st.mean_us() / batch as f64),
+                format!("{tasks_s:.0}"),
             ]);
+            medians.insert((name.to_string(), fname.to_string()), per_task_median);
+            rows_json.push(json::obj(vec![
+                ("robot", json::s(name)),
+                ("fn", json::s(fname)),
+                ("median_us", json::num(per_task_median)),
+                ("mean_us", json::num(st.mean_us() / batch as f64)),
+                ("tasks_per_s", json::num(tasks_s)),
+            ]));
         }
     }
     t.print("CPU hot paths (measured, single thread)");
+
+    // Workspace-vs-allocating speedups (median-to-median ratio; >1 means
+    // the workspace kernel is faster).
+    let mut st = Table::new(&["robot", "fn", "alloc(us)", "ws(us)", "speedup"]);
+    let mut speedups_json: Vec<Json> = Vec::new();
+    for robot in ["iiwa", "hyq", "atlas", "baxter"] {
+        for func in ["rnea", "crba", "minv", "fd", "aba"] {
+            let alloc = medians[&(robot.to_string(), func.to_string())];
+            let ws = medians[&(robot.to_string(), format!("{func}_ws"))];
+            let speedup = alloc / ws;
+            st.row(&[
+                robot.to_string(),
+                func.to_string(),
+                format!("{alloc:.2}"),
+                format!("{ws:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            speedups_json.push(json::obj(vec![
+                ("robot", json::s(robot)),
+                ("fn", json::s(func)),
+                ("alloc_median_us", json::num(alloc)),
+                ("ws_median_us", json::num(ws)),
+                ("speedup", json::num(speedup)),
+            ]));
+        }
+    }
+    st.print("workspace kernels vs allocating paths");
+
+    let out = json::obj(vec![
+        ("schema", json::s("draco.hotpath.v1")),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(rows_json)),
+        ("speedups", Json::Arr(speedups_json)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
+    match std::fs::write(path, out.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

@@ -1,9 +1,17 @@
 //! Dynamic batcher: per-(function) worker threads that coalesce requests
 //! into engine-sized batches under a latency window.
+//!
+//! Each route is backed by a [`BackendSpec`]: the native workspace engine
+//! (default — one [`NativeEngine`] and hence one `DynWorkspace` per
+//! worker thread) or, behind the `pjrt` feature, a compiled PJRT
+//! artifact. The batching loop is identical either way.
 
 use super::stats::{ServeStats, StatsInner};
-use crate::runtime::artifact::{ArtifactFn, ArtifactMeta};
-use crate::runtime::engine::Engine;
+use crate::model::Robot;
+#[cfg(feature = "pjrt")]
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::artifact::ArtifactFn;
+use crate::runtime::native::NativeEngine;
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -26,6 +34,92 @@ enum Msg {
     Stop,
 }
 
+/// How one route executes its batches.
+pub enum BackendSpec {
+    /// Native workspace engine: no artifacts, no external toolchain.
+    Native { robot: Robot, function: ArtifactFn, batch: usize },
+    /// Compiled PJRT artifact (requires the `pjrt` feature + artifacts).
+    #[cfg(feature = "pjrt")]
+    Pjrt(ArtifactMeta),
+}
+
+impl BackendSpec {
+    pub fn function(&self) -> ArtifactFn {
+        match self {
+            BackendSpec::Native { function, .. } => *function,
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt(meta) => meta.function,
+        }
+    }
+}
+
+/// Uniform executor interface the batching loop drives.
+trait BatchExecutor {
+    fn batch(&self) -> usize;
+    fn arity(&self) -> usize;
+    fn n(&self) -> usize;
+    fn out_per_task(&self) -> usize;
+    /// Whether the executor's shapes are compiled-in (PJRT) and partial
+    /// batches must be padded to `batch()`. The native engine accepts
+    /// any row count ≤ batch, so partial batches cost only the real
+    /// tasks.
+    fn pad_to_batch(&self) -> bool;
+    fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String>;
+}
+
+struct NativeExecutor(NativeEngine);
+
+impl BatchExecutor for NativeExecutor {
+    fn batch(&self) -> usize {
+        self.0.batch
+    }
+    fn arity(&self) -> usize {
+        self.0.function.arity()
+    }
+    fn n(&self) -> usize {
+        self.0.n()
+    }
+    fn out_per_task(&self) -> usize {
+        self.0.expected_output_len() / self.0.batch
+    }
+    fn pad_to_batch(&self) -> bool {
+        false
+    }
+    fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String> {
+        self.0.run(inputs).map_err(|e| e.0)
+    }
+}
+
+/// PJRT client + engine pair; the engine is declared first so it drops
+/// before the client that compiled it.
+#[cfg(feature = "pjrt")]
+struct PjrtExecutor {
+    engine: crate::runtime::engine::Engine,
+    _client: xla::PjRtClient,
+}
+
+#[cfg(feature = "pjrt")]
+impl BatchExecutor for PjrtExecutor {
+    fn batch(&self) -> usize {
+        self.engine.meta.batch
+    }
+    fn arity(&self) -> usize {
+        self.engine.meta.function.arity()
+    }
+    fn n(&self) -> usize {
+        self.engine.n
+    }
+    fn out_per_task(&self) -> usize {
+        self.engine.expected_output_len() / self.engine.meta.batch
+    }
+    fn pad_to_batch(&self) -> bool {
+        true
+    }
+    fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String> {
+        self.engine.run(inputs).map_err(|e| e.0)
+    }
+}
+
 /// Routing front-end: submit() → per-function worker.
 pub struct Coordinator {
     routes: BTreeMap<ArtifactFn, Sender<Msg>>,
@@ -34,19 +128,46 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start one worker per artifact. `n` is the robot DOF; `window_us`
-    /// is the batching window (deadline to fill a batch).
-    pub fn start(artifacts: Vec<ArtifactMeta>, n: usize, window_us: u64) -> Coordinator {
+    /// Start one worker per backend spec. `n` is the robot DOF (used by
+    /// the PJRT path to define operand shapes); `window_us` is the
+    /// batching window (deadline to fill a batch).
+    pub fn start(specs: Vec<BackendSpec>, n: usize, window_us: u64) -> Coordinator {
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
-        for meta in artifacts {
+        for spec in specs {
             let (tx, rx) = channel::<Msg>();
-            routes.insert(meta.function, tx);
+            routes.insert(spec.function(), tx);
             let st = Arc::clone(&stats);
-            workers.push(std::thread::spawn(move || worker_loop(meta, n, window_us, rx, st)));
+            workers.push(std::thread::spawn(move || worker_loop(spec, n, window_us, rx, st)));
         }
         Coordinator { routes, workers, stats }
+    }
+
+    /// Start a native coordinator serving `functions` for one robot, one
+    /// worker (and one workspace) per function.
+    pub fn start_native(
+        robot: &Robot,
+        functions: &[(ArtifactFn, usize)],
+        window_us: u64,
+    ) -> Coordinator {
+        let n = robot.dof();
+        let specs = functions
+            .iter()
+            .map(|&(function, batch)| BackendSpec::Native {
+                robot: robot.clone(),
+                function,
+                batch,
+            })
+            .collect();
+        Coordinator::start(specs, n, window_us)
+    }
+
+    /// Start a PJRT coordinator over compiled artifacts.
+    #[cfg(feature = "pjrt")]
+    pub fn start_pjrt(artifacts: Vec<ArtifactMeta>, n: usize, window_us: u64) -> Coordinator {
+        let specs = artifacts.into_iter().map(BackendSpec::Pjrt).collect();
+        Coordinator::start(specs, n, window_us)
     }
 
     /// Submit one task; returns the channel the result arrives on.
@@ -82,30 +203,41 @@ impl Coordinator {
     }
 }
 
-/// Worker: owns its own PJRT client + executable (PJRT handles are not
-/// Send, so everything is created inside the thread).
+/// Worker: owns its executor. PJRT handles are not `Send`, and the native
+/// engine's workspace is deliberately thread-local, so everything is
+/// created inside the thread.
 fn worker_loop(
-    meta: ArtifactMeta,
+    spec: BackendSpec,
     n: usize,
     window_us: u64,
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
 ) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            fail_all(&rx, &format!("pjrt client: {e:?}"));
-            return;
+    let mut exec: Box<dyn BatchExecutor> = match spec {
+        BackendSpec::Native { robot, function, batch } => {
+            Box::new(NativeExecutor(NativeEngine::new(robot, function, batch)))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendSpec::Pjrt(meta) => {
+            let client = match xla::PjRtClient::cpu() {
+                Ok(c) => c,
+                Err(e) => {
+                    fail_all(&rx, &format!("pjrt client: {e:?}"));
+                    return;
+                }
+            };
+            let engine = match crate::runtime::engine::Engine::load(&client, meta, n) {
+                Ok(e) => e,
+                Err(e) => {
+                    fail_all(&rx, &e.0);
+                    return;
+                }
+            };
+            Box::new(PjrtExecutor { engine, _client: client })
         }
     };
-    let engine = match Engine::load(&client, meta, n) {
-        Ok(e) => e,
-        Err(e) => {
-            fail_all(&rx, &e.0);
-            return;
-        }
-    };
-    let b = engine.meta.batch;
+    let _ = n; // used only by the pjrt arm
+    let b = exec.batch();
     let window = Duration::from_micros(window_us);
 
     let mut queue: Vec<Job> = Vec::with_capacity(b);
@@ -124,25 +256,44 @@ fn worker_loop(
             match rx.recv_timeout(deadline - now) {
                 Ok(Msg::Work(j)) => queue.push(j),
                 Ok(Msg::Stop) => {
-                    flush(&engine, &mut queue, &stats);
+                    flush(exec.as_mut(), &mut queue, &stats);
                     return;
                 }
                 Err(_) => break,
             }
         }
-        flush(&engine, &mut queue, &stats);
+        flush(exec.as_mut(), &mut queue, &stats);
     }
-    flush(&engine, &mut queue, &stats);
+    flush(exec.as_mut(), &mut queue, &stats);
 }
 
 /// Execute the queued jobs as one padded batch and fan results out.
-fn flush(engine: &Engine, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) {
+fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) {
     if queue.is_empty() {
         return;
     }
-    let b = engine.meta.batch;
-    let n = engine.n;
-    let arity = engine.meta.function.arity();
+    let b = exec.batch();
+    let n = exec.n();
+    let arity = exec.arity();
+
+    // Reject malformed jobs up front: a bad task must fail alone instead
+    // of poisoning (or panicking) the whole assembled batch.
+    let mut k = 0;
+    while k < queue.len() {
+        let ok = queue[k].operands.len() == arity
+            && queue[k].operands.iter().all(|op| op.len() == n);
+        if ok {
+            k += 1;
+        } else {
+            let job = queue.remove(k);
+            let _ = job
+                .resp
+                .send(Err(format!("bad operands: expected {arity} arrays of length {n}")));
+        }
+    }
+    if queue.is_empty() {
+        return;
+    }
     let fill = queue.len().min(b);
 
     // Assemble operands, padding the tail by repeating the last task
@@ -153,18 +304,20 @@ fn flush(engine: &Engine, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) 
             inputs[k].extend_from_slice(op);
         }
     }
-    for _ in fill..b {
-        for k in 0..arity {
-            let last: Vec<f32> = inputs[k][(fill - 1) * n..fill * n].to_vec();
-            inputs[k].extend_from_slice(&last);
+    if exec.pad_to_batch() {
+        for _ in fill..b {
+            for input in inputs.iter_mut() {
+                let last: Vec<f32> = input[(fill - 1) * n..fill * n].to_vec();
+                input.extend_from_slice(&last);
+            }
         }
     }
 
     let t0 = Instant::now();
-    let result = engine.run(&inputs);
+    let result = exec.execute(&inputs);
     let exec_us = t0.elapsed().as_micros() as f64;
 
-    let out_per_task = engine.expected_output_len() / b;
+    let out_per_task = exec.out_per_task();
     match result {
         Ok(flat) => {
             for (i, job) in queue.drain(..).enumerate() {
@@ -181,12 +334,13 @@ fn flush(engine: &Engine, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) 
         }
         Err(e) => {
             for job in queue.drain(..) {
-                let _ = job.resp.send(Err(e.0.clone()));
+                let _ = job.resp.send(Err(e.clone()));
             }
         }
     }
 }
 
+#[allow(dead_code)] // only reachable from the pjrt arm without the feature
 fn fail_all(rx: &Receiver<Msg>, err: &str) {
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -201,7 +355,7 @@ fn fail_all(rx: &Receiver<Msg>, err: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
+    use crate::model::builtin_robot;
 
     #[test]
     fn submit_unknown_function_errors_fast() {
@@ -213,15 +367,24 @@ mod tests {
     }
 
     #[test]
-    fn worker_with_bad_artifact_reports_error() {
-        let meta = ArtifactMeta {
-            robot: "iiwa".into(),
-            function: ArtifactFn::Rnea,
-            batch: 4,
-            path: PathBuf::from("/nonexistent/iiwa_rnea_b4.hlo.txt"),
-        };
-        let coord = Coordinator::start(vec![meta], 7, 100);
-        let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.0; 7]; 3]);
+    fn native_worker_answers_without_artifacts() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Rnea, 8)], 100);
+        let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.1; n]; 3]);
+        let res = rx.recv().expect("worker must answer");
+        let out = res.expect("native execution succeeds");
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|x| x.is_finite()));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn native_worker_reports_shape_errors() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Rnea, 4)], 100);
+        // Wrong arity: one operand instead of three.
+        let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.0; 7]]);
         let res = rx.recv().expect("worker must answer even on failure");
         assert!(res.is_err());
         coord.shutdown();

@@ -1,33 +1,38 @@
-//! Serving coordinator: request routing + dynamic batching over the PJRT
-//! runtime — the L3 system layer. Mirrors the accelerator's operating
-//! model: the RTP pipeline reaches peak throughput only when tasks are
-//! batched through it, so the coordinator aggregates concurrent control
-//! requests into fixed-size batches per (robot, function) executable,
-//! pads partial batches, and fans results back out.
+//! Serving coordinator: request routing + dynamic batching — the L3
+//! system layer. Mirrors the accelerator's operating model: the RTP
+//! pipeline reaches peak throughput only when tasks are batched through
+//! it, so the coordinator aggregates concurrent control requests into
+//! fixed-size batches per (robot, function) route, pads partial batches,
+//! and fans results back out.
 //!
-//! Threading: PJRT client/executable handles are not `Send`, so each
-//! worker thread owns its own client and compiles its own executable;
-//! requests cross threads through channels.
+//! Two backends: the **native** workspace engine (default — no artifacts,
+//! no external toolchain; one allocation-free `DynWorkspace` per worker
+//! thread) and, behind the `pjrt` feature, AOT-compiled HLO artifacts
+//! executed through PJRT.
+//!
+//! Threading: PJRT client/executable handles are not `Send`, and the
+//! native workspace is deliberately thread-local, so each worker thread
+//! owns its own executor; requests cross threads through channels.
 
 pub mod batcher;
 pub mod stats;
 
-pub use batcher::{Coordinator, Job, JobResult};
+pub use batcher::{BackendSpec, Coordinator, Job, JobResult};
 pub use stats::ServeStats;
 
 use crate::model::builtin_robot;
-use crate::runtime::artifact::{scan_artifacts, ArtifactFn};
+use crate::runtime::artifact::ArtifactFn;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
-use std::path::Path;
 use std::time::Instant;
 
-/// `draco serve`: bring up the coordinator on real artifacts, push a
-/// synthetic workload through it, verify numerics against the native
-/// implementation, and report latency/throughput.
+/// `draco serve`: bring up the coordinator, push a synthetic workload
+/// through it, verify numerics against the reference implementation, and
+/// report latency/throughput. `--backend native` (default) serves from
+/// the workspace core; `--backend pjrt` needs artifacts + the feature.
 pub fn serve_cli(args: &Args) -> i32 {
     let robot_name = args.opt_or("robot", "iiwa").to_string();
-    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let backend = args.opt_or("backend", "native").to_string();
     let requests = args.opt_usize("requests", 512);
     let window_us = args.opt_usize("window-us", 200);
 
@@ -38,20 +43,32 @@ pub fn serve_cli(args: &Args) -> i32 {
             return 2;
         }
     };
-    let artifacts: Vec<_> = scan_artifacts(Path::new(&dir))
-        .into_iter()
-        .filter(|a| a.robot == robot_name)
-        .collect();
-    if artifacts.is_empty() {
-        eprintln!("no artifacts for '{robot_name}' under {dir}/ — run `make artifacts` first");
-        return 1;
-    }
-    println!("serving {} with {} artifact(s):", robot_name, artifacts.len());
-    for a in &artifacts {
-        println!("  {} ({}, batch {})", a.path.display(), a.function.name(), a.batch);
-    }
 
-    let coord = Coordinator::start(artifacts.clone(), robot.dof(), window_us as u64);
+    let coord = match backend.as_str() {
+        "native" => {
+            let batch = args.opt_usize("batch", 64);
+            println!(
+                "serving {robot_name} natively (workspace core): rnea/fd/minv, batch {batch}"
+            );
+            Coordinator::start_native(
+                &robot,
+                &[
+                    (ArtifactFn::Rnea, batch),
+                    (ArtifactFn::Fd, batch),
+                    (ArtifactFn::Minv, batch),
+                ],
+                window_us as u64,
+            )
+        }
+        "pjrt" => match start_pjrt(args, &robot_name, robot.dof(), window_us as u64) {
+            Ok(c) => c,
+            Err(code) => return code,
+        },
+        other => {
+            eprintln!("unknown backend '{other}' (try native|pjrt)");
+            return 2;
+        }
+    };
 
     // Synthetic control-loop workload: random in-limit states.
     let mut rng = Rng::new(2025);
@@ -105,11 +122,37 @@ pub fn serve_cli(args: &Args) -> i32 {
         st.p50_latency_us,
         st.p95_latency_us
     );
-    println!("max relative error vs native RNEA: {max_err:.2e}");
+    println!("max relative error vs native f64 RNEA: {max_err:.2e}");
     coord.shutdown();
     if max_err > 1e-3 {
-        eprintln!("NUMERIC MISMATCH between artifact and native implementation");
+        eprintln!("NUMERIC MISMATCH between served and reference implementation");
         return 1;
     }
     0
+}
+
+#[cfg(feature = "pjrt")]
+fn start_pjrt(args: &Args, robot_name: &str, n: usize, window_us: u64) -> Result<Coordinator, i32> {
+    use crate::runtime::artifact::scan_artifacts;
+    use std::path::Path;
+    let dir = args.opt_or("artifacts", "artifacts").to_string();
+    let artifacts: Vec<_> = scan_artifacts(Path::new(&dir))
+        .into_iter()
+        .filter(|a| a.robot == robot_name)
+        .collect();
+    if artifacts.is_empty() {
+        eprintln!("no artifacts for '{robot_name}' under {dir}/ — run `make artifacts` first");
+        return Err(1);
+    }
+    println!("serving {} with {} artifact(s):", robot_name, artifacts.len());
+    for a in &artifacts {
+        println!("  {} ({}, batch {})", a.path.display(), a.function.name(), a.batch);
+    }
+    Ok(Coordinator::start_pjrt(artifacts, n, window_us))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn start_pjrt(_args: &Args, _robot_name: &str, _n: usize, _window_us: u64) -> Result<Coordinator, i32> {
+    eprintln!("the pjrt backend requires building with `--features pjrt` (and the xla crate)");
+    Err(2)
 }

@@ -1,0 +1,180 @@
+//! Batched evaluation over the workspace core — the CPU counterpart of
+//! the accelerator's batched RTP operation (tasks streamed back-to-back
+//! through resident pipelines). One [`DynWorkspace`] is reused for a whole
+//! batch; the threaded variant gives each worker thread its own
+//! workspace, so the hot loop performs zero heap allocation per task.
+
+use super::workspace::DynWorkspace;
+use crate::model::Robot;
+use crate::spatial::DMat;
+
+/// Which RBD function a batch evaluates (mirrors the servable artifact
+/// functions of the PJRT path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchKernel {
+    /// τ = RNEA(q, q̇, q̈): `u` holds q̈.
+    Rnea,
+    /// q̈ = FD(q, q̇, τ): `u` holds τ.
+    Fd,
+    /// M⁻¹(q): `u` ignored.
+    Minv,
+}
+
+/// One task: a joint state plus the third operand (`u` = q̈ for RNEA,
+/// τ for FD, ignored for Minv).
+#[derive(Debug, Clone)]
+pub struct BatchTask {
+    pub q: Vec<f64>,
+    pub qd: Vec<f64>,
+    pub u: Vec<f64>,
+}
+
+/// Per-task result: a joint-space vector (RNEA/FD) or matrix (Minv).
+#[derive(Debug, Clone)]
+pub enum BatchOutput {
+    Vector(Vec<f64>),
+    Matrix(DMat),
+}
+
+impl BatchOutput {
+    pub fn as_vector(&self) -> Option<&[f64]> {
+        match self {
+            BatchOutput::Vector(v) => Some(v),
+            BatchOutput::Matrix(_) => None,
+        }
+    }
+
+    pub fn as_matrix(&self) -> Option<&DMat> {
+        match self {
+            BatchOutput::Matrix(m) => Some(m),
+            BatchOutput::Vector(_) => None,
+        }
+    }
+}
+
+/// Evaluate one task into a fresh output, reusing `ws` for all scratch.
+fn eval_one(
+    robot: &Robot,
+    kernel: BatchKernel,
+    ws: &mut DynWorkspace,
+    task: &BatchTask,
+) -> BatchOutput {
+    let n = robot.dof();
+    match kernel {
+        BatchKernel::Rnea => {
+            let mut tau = vec![0.0; n];
+            ws.rnea_into(robot, &task.q, &task.qd, &task.u, None, &mut tau);
+            BatchOutput::Vector(tau)
+        }
+        BatchKernel::Fd => {
+            let mut qdd = vec![0.0; n];
+            ws.fd_into(robot, &task.q, &task.qd, &task.u, None, &mut qdd);
+            BatchOutput::Vector(qdd)
+        }
+        BatchKernel::Minv => {
+            let mut out = DMat::zeros(n, n);
+            ws.minv_into(robot, &task.q, &mut out);
+            BatchOutput::Matrix(out)
+        }
+    }
+}
+
+/// Evaluate a batch of tasks on the calling thread with one reused
+/// workspace. Output order matches task order.
+pub fn eval_batch(robot: &Robot, kernel: BatchKernel, tasks: &[BatchTask]) -> Vec<BatchOutput> {
+    let mut ws = DynWorkspace::new(robot);
+    tasks.iter().map(|t| eval_one(robot, kernel, &mut ws, t)).collect()
+}
+
+/// Evaluate a batch across `threads` worker threads, one workspace per
+/// thread. Tasks are split into contiguous chunks so outputs land in
+/// task order without any post-hoc sort.
+pub fn eval_batch_par(
+    robot: &Robot,
+    kernel: BatchKernel,
+    tasks: &[BatchTask],
+    threads: usize,
+) -> Vec<BatchOutput> {
+    let threads = threads.max(1).min(tasks.len().max(1));
+    if threads <= 1 {
+        return eval_batch(robot, kernel, tasks);
+    }
+    let chunk = tasks.len().div_ceil(threads);
+    let mut out: Vec<BatchOutput> = vec![BatchOutput::Vector(Vec::new()); tasks.len()];
+    std::thread::scope(|scope| {
+        for (task_chunk, out_chunk) in tasks.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                let mut ws = DynWorkspace::new(robot);
+                for (task, slot) in task_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = eval_one(robot, kernel, &mut ws, task);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::{fd, minv, rnea};
+    use crate::model::{builtin, State};
+    use crate::util::check::assert_slices_close;
+    use crate::util::rng::Rng;
+
+    fn random_tasks(robot: &Robot, count: usize, seed: u64) -> Vec<BatchTask> {
+        let n = robot.dof();
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let s = State::random(robot, &mut rng);
+                BatchTask { q: s.q, qd: s.qd, u: rng.vec_range(n, -8.0, 8.0) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_matches_per_task_eval() {
+        let robot = builtin::hyq();
+        let tasks = random_tasks(&robot, 17, 600);
+        let out = eval_batch(&robot, BatchKernel::Fd, &tasks);
+        assert_eq!(out.len(), tasks.len());
+        for (task, got) in tasks.iter().zip(&out) {
+            let want = fd(&robot, &task.q, &task.qd, &task.u, None);
+            assert_slices_close(got.as_vector().unwrap(), &want, 1e-9, "batch fd");
+        }
+        let out = eval_batch(&robot, BatchKernel::Rnea, &tasks);
+        for (task, got) in tasks.iter().zip(&out) {
+            let want = rnea(&robot, &task.q, &task.qd, &task.u, None);
+            assert_slices_close(got.as_vector().unwrap(), &want, 1e-12, "batch rnea");
+        }
+        let out = eval_batch(&robot, BatchKernel::Minv, &tasks);
+        for (task, got) in tasks.iter().zip(&out) {
+            let want = minv(&robot, &task.q);
+            let err = got.as_matrix().unwrap().sub(&want).max_abs();
+            assert!(err < 1e-9, "batch minv err {err}");
+        }
+    }
+
+    #[test]
+    fn threaded_batch_matches_single_thread() {
+        let robot = builtin::iiwa();
+        let tasks = random_tasks(&robot, 33, 601);
+        let single = eval_batch(&robot, BatchKernel::Fd, &tasks);
+        for threads in [2, 3, 8, 64] {
+            let par = eval_batch_par(&robot, BatchKernel::Fd, &tasks, threads);
+            assert_eq!(par.len(), single.len());
+            for (a, b) in single.iter().zip(&par) {
+                // Same kernel, same workspace semantics ⇒ bitwise equal.
+                assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let robot = builtin::iiwa();
+        assert!(eval_batch(&robot, BatchKernel::Fd, &[]).is_empty());
+        assert!(eval_batch_par(&robot, BatchKernel::Fd, &[], 8).is_empty());
+    }
+}

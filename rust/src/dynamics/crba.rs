@@ -12,11 +12,26 @@ pub fn crba(robot: &Robot, q: &[f64]) -> DMat {
     crba_with_kin(robot, &kin)
 }
 
+/// Thin allocating wrapper over [`crba_into`].
 pub fn crba_with_kin(robot: &Robot, kin: &Kin) -> DMat {
     let n = robot.dof();
+    let mut ic = vec![[[0.0; 6]; 6]; n];
+    let mut m = DMat::zeros(n, n);
+    crba_into(robot, kin, &mut ic, &mut m);
+    m
+}
+
+/// Allocation-free CRBA kernel: writes M(q) into `m` (N×N, zero-filled by
+/// the kernel) using caller-owned composite-inertia scratch `ic`.
+pub fn crba_into(robot: &Robot, kin: &Kin, ic: &mut [M6], m: &mut DMat) {
+    let n = robot.dof();
+    assert_eq!(ic.len(), n);
+    assert_eq!((m.rows, m.cols), (n, n));
     // Composite inertias: start from the link's own inertia, accumulate
     // children tip→base.
-    let mut ic: Vec<M6> = (0..n).map(|i| robot.links[i].inertia.to_mat6()).collect();
+    for i in 0..n {
+        ic[i] = robot.links[i].inertia.to_mat6();
+    }
     for i in (0..n).rev() {
         if let Some(p) = robot.links[i].parent {
             let contrib = transform_inertia_to_parent(&kin.xup[i], &ic[i]);
@@ -24,7 +39,7 @@ pub fn crba_with_kin(robot: &Robot, kin: &Kin) -> DMat {
         }
     }
 
-    let mut m = DMat::zeros(n, n);
+    m.d.fill(0.0);
     for i in (0..n).rev() {
         // F = IC_i S_i
         let mut f = matvec6(&ic[i], &kin.s[i]);
@@ -38,7 +53,6 @@ pub fn crba_with_kin(robot: &Robot, kin: &Kin) -> DMat {
             m[(j, i)] = mij;
         }
     }
-    m
 }
 
 #[cfg(test)]

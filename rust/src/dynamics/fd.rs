@@ -7,86 +7,157 @@
 
 use super::kinematics::Kin;
 use super::minv::minv_with_kin;
-use super::rnea::rnea_with_kin;
+use super::rnea::bias_into;
 use crate::model::Robot;
 use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
 use crate::spatial::SV;
 
 /// q̈ = M⁻¹(q) · (τ − C(q, q̇, f_ext)) — the composition the accelerator
-/// computes with its RNEA and Minv RTP modules.
+/// computes with its RNEA and Minv RTP modules. One shared `Kin` feeds
+/// both passes, and τ − C is folded directly into the M⁻¹ matvec (no
+/// intermediate right-hand-side vector).
+///
+/// Allocating path; the serving hot path is
+/// [`crate::dynamics::DynWorkspace::fd_into`], which reuses buffers
+/// across calls and defers the Minv divisions.
 pub fn fd(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
     let n = robot.dof();
     assert_eq!(tau.len(), n);
     let kin = Kin::new(robot, q, qd);
-    let bias = rnea_with_kin(robot, &kin, &vec![0.0; n], fext);
+    let mut a = vec![SV::ZERO; n];
+    let mut f = vec![SV::ZERO; n];
+    let mut bias = vec![0.0; n];
+    bias_into(robot, &kin, fext, &mut a, &mut f, &mut bias);
     let mi = minv_with_kin(robot, &kin);
-    let rhs: Vec<f64> = tau.iter().zip(&bias).map(|(t, c)| t - c).collect();
-    mi.matvec(&rhs)
+    let mut qdd = vec![0.0; n];
+    fold_rhs_matvec(&mi, tau, &bias, &mut qdd);
+    qdd
 }
 
-/// Articulated Body Algorithm (Featherstone RBDA Table 7.1).
-pub fn aba(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
+/// q̈ = M⁻¹·(τ − C) with the subtraction folded into the matvec — the
+/// shared final stage of both the allocating [`fd`] and the workspace
+/// [`crate::dynamics::DynWorkspace::fd_into`] (keep them byte-identical:
+/// the equivalence tests assume the two paths agree).
+pub fn fold_rhs_matvec(mi: &crate::spatial::DMat, tau: &[f64], bias: &[f64], qdd: &mut [f64]) {
+    let n = qdd.len();
+    assert_eq!((mi.rows, mi.cols), (n, n));
+    assert_eq!(tau.len(), n);
+    assert_eq!(bias.len(), n);
+    for i in 0..n {
+        let row = &mi.d[i * n..(i + 1) * n];
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * (tau[j] - bias[j]);
+        }
+        qdd[i] = acc;
+    }
+}
+
+/// Reusable buffers for the Articulated Body Algorithm sweeps.
+#[derive(Debug, Clone)]
+pub struct AbaScratch {
+    /// Velocity-product accelerations.
+    pub c: Vec<SV>,
+    /// Bias forces.
+    pub pa: Vec<SV>,
+    /// Articulated inertias.
+    pub ia: Vec<M6>,
+    pub u: Vec<SV>,
+    pub dinv: Vec<f64>,
+    pub uu: Vec<f64>,
+    /// Link accelerations.
+    pub a: Vec<SV>,
+}
+
+impl AbaScratch {
+    pub fn new(n: usize) -> AbaScratch {
+        AbaScratch {
+            c: vec![SV::ZERO; n],
+            pa: vec![SV::ZERO; n],
+            ia: vec![[[0.0; 6]; 6]; n],
+            u: vec![SV::ZERO; n],
+            dinv: vec![0.0; n],
+            uu: vec![0.0; n],
+            a: vec![SV::ZERO; n],
+        }
+    }
+}
+
+/// Allocation-free ABA kernel (Featherstone RBDA Table 7.1): writes q̈
+/// into `qdd` using a precomputed kinematic cache and caller-owned
+/// scratch.
+pub fn aba_into(
+    robot: &Robot,
+    kin: &Kin,
+    tau: &[f64],
+    fext: Option<&[SV]>,
+    scr: &mut AbaScratch,
+    qdd: &mut [f64],
+) {
     let n = robot.dof();
-    let kin = Kin::new(robot, q, qd);
+    assert_eq!(tau.len(), n);
+    assert_eq!(qdd.len(), n);
+    assert_eq!(scr.c.len(), n, "scratch sized for a different robot");
     let a0 = SV::new(crate::spatial::V3::ZERO, -robot.gravity);
 
     // Forward: bias accelerations and forces.
-    let mut c: Vec<SV> = Vec::with_capacity(n); // velocity-product accel
-    let mut pa: Vec<SV> = Vec::with_capacity(n); // bias force
-    let mut ia: Vec<M6> = Vec::with_capacity(n);
     for i in 0..n {
         let link = &robot.links[i];
         let vi = kin.v[i];
-        let ci = vi.crm(&kin.s[i].scale(kin.qd[i]));
+        scr.c[i] = vi.crm(&kin.s[i].scale(kin.qd[i]));
         let mut pi = vi.crf(&link.inertia.apply(&vi));
         if let Some(fe) = fext {
             pi = pi - fe[i];
         }
-        c.push(ci);
-        pa.push(pi);
-        ia.push(link.inertia.to_mat6());
+        scr.pa[i] = pi;
+        scr.ia[i] = link.inertia.to_mat6();
     }
 
     // Backward: articulated inertias.
-    let mut u: Vec<SV> = vec![SV::ZERO; n];
-    let mut dinv = vec![0.0; n];
-    let mut uu = vec![0.0; n];
     for i in (0..n).rev() {
         let s = kin.s[i];
-        let ui = matvec6(&ia[i], &s);
+        let ui = matvec6(&scr.ia[i], &s);
         let di = s.dot(&ui);
         let di_inv = 1.0 / di;
-        u[i] = ui;
-        dinv[i] = di_inv;
-        uu[i] = tau[i] - s.dot(&pa[i]);
+        scr.u[i] = ui;
+        scr.dinv[i] = di_inv;
+        scr.uu[i] = tau[i] - s.dot(&scr.pa[i]);
         if let Some(p) = robot.links[i].parent {
-            let ia_art = sub6(&ia[i], &scale6(&outer6(&ui, &ui), di_inv));
+            let ia_art = sub6(&scr.ia[i], &scale6(&outer6(&ui, &ui), di_inv));
             let xm = kin.xup[i].to_mat6();
             let contrib = mul6(&t6(&xm), &mul6(&ia_art, &xm));
             for r in 0..6 {
                 for cc in 0..6 {
-                    ia[p][r][cc] += contrib[r][cc];
+                    scr.ia[p][r][cc] += contrib[r][cc];
                 }
             }
-            let pa_art = pa[i]
-                + matvec6(&ia_art, &c[i])
-                + ui.scale(di_inv * uu[i]);
-            pa[p] = pa[p] + kin.xup[i].inv_apply_force(&pa_art);
+            let pa_art = scr.pa[i]
+                + matvec6(&ia_art, &scr.c[i])
+                + ui.scale(di_inv * scr.uu[i]);
+            let upd = kin.xup[i].inv_apply_force(&pa_art);
+            scr.pa[p] = scr.pa[p] + upd;
         }
     }
 
     // Forward: accelerations.
-    let mut qdd = vec![0.0; n];
-    let mut a: Vec<SV> = vec![SV::ZERO; n];
     for i in 0..n {
         let a_parent = match robot.links[i].parent {
-            Some(p) => a[p],
+            Some(p) => scr.a[p],
             None => a0,
         };
-        let ap = kin.xup[i].apply(&a_parent) + c[i];
-        qdd[i] = dinv[i] * (uu[i] - u[i].dot(&ap));
-        a[i] = ap + kin.s[i].scale(qdd[i]);
+        let ap = kin.xup[i].apply(&a_parent) + scr.c[i];
+        qdd[i] = scr.dinv[i] * (scr.uu[i] - scr.u[i].dot(&ap));
+        scr.a[i] = ap + kin.s[i].scale(qdd[i]);
     }
+}
+
+/// Articulated Body Algorithm. Thin allocating wrapper over [`aba_into`].
+pub fn aba(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
+    let n = robot.dof();
+    let kin = Kin::new(robot, q, qd);
+    let mut scr = AbaScratch::new(n);
+    let mut qdd = vec![0.0; n];
+    aba_into(robot, &kin, tau, fext, &mut scr, &mut qdd);
     qdd
 }
 

@@ -20,15 +20,25 @@ pub struct Kin {
 }
 
 impl Kin {
-    /// Compute transforms and velocities for state (q, q̇).
-    pub fn new(robot: &Robot, q: &[f64], qd: &[f64]) -> Kin {
+    /// Preallocate an n-joint cache filled with identity/zero entries.
+    /// Pair with [`Kin::recompute`] for the allocation-free hot path.
+    pub fn empty(n: usize) -> Kin {
+        Kin {
+            xup: vec![Xform::identity(); n],
+            xj: vec![Xform::identity(); n],
+            s: vec![SV::ZERO; n],
+            v: vec![SV::ZERO; n],
+            qd: vec![0.0; n],
+        }
+    }
+
+    /// Recompute transforms and velocities for state (q, q̇) in place —
+    /// the `kin_into` kernel. No allocation: all buffers are overwritten.
+    pub fn recompute(&mut self, robot: &Robot, q: &[f64], qd: &[f64]) {
         let n = robot.dof();
         assert_eq!(q.len(), n);
         assert_eq!(qd.len(), n);
-        let mut xup = Vec::with_capacity(n);
-        let mut xj = Vec::with_capacity(n);
-        let mut s = Vec::with_capacity(n);
-        let mut v: Vec<SV> = Vec::with_capacity(n);
+        assert_eq!(self.v.len(), n, "workspace sized for a different robot");
         for i in 0..n {
             let link = &robot.links[i];
             let xji = link.joint.xform(q[i]);
@@ -36,21 +46,48 @@ impl Kin {
             let si = link.joint.motion_subspace();
             let vj = si.scale(qd[i]);
             let vi = match link.parent {
-                Some(p) => x.apply(&v[p]) + vj,
+                Some(p) => {
+                    let vp = self.v[p];
+                    x.apply(&vp) + vj
+                }
                 None => vj,
             };
-            xup.push(x);
-            xj.push(xji);
-            s.push(si);
-            v.push(vi);
+            self.xup[i] = x;
+            self.xj[i] = xji;
+            self.s[i] = si;
+            self.v[i] = vi;
+            self.qd[i] = qd[i];
         }
-        Kin { xup, xj, s, v, qd: qd.to_vec() }
+    }
+
+    /// Compute transforms and velocities for state (q, q̇).
+    /// Thin allocating wrapper over [`Kin::recompute`].
+    pub fn new(robot: &Robot, q: &[f64], qd: &[f64]) -> Kin {
+        let mut kin = Kin::empty(robot.dof());
+        kin.recompute(robot, q, qd);
+        kin
     }
 
     /// Position-only variant (velocities zero); used by CRBA/Minv.
     pub fn positions(robot: &Robot, q: &[f64]) -> Kin {
         let zeros = vec![0.0; robot.dof()];
         Kin::new(robot, q, &zeros)
+    }
+
+    /// Position-only in-place recompute (velocities zeroed).
+    pub fn recompute_positions(&mut self, robot: &Robot, q: &[f64]) {
+        let n = robot.dof();
+        assert_eq!(q.len(), n);
+        assert_eq!(self.v.len(), n, "workspace sized for a different robot");
+        for i in 0..n {
+            let link = &robot.links[i];
+            let xji = link.joint.xform(q[i]);
+            self.xup[i] = xji.compose(&link.x_tree);
+            self.xj[i] = xji;
+            self.s[i] = link.joint.motion_subspace();
+            self.v[i] = SV::ZERO;
+            self.qd[i] = 0.0;
+        }
     }
 }
 

@@ -51,6 +51,164 @@ impl DividerQueue {
     pub fn resolve(&self) -> Vec<(usize, f64)> {
         self.requests.iter().map(|&(j, d)| (j, 1.0 / d)).collect()
     }
+
+    /// Allocation-free resolve: scatter 1/D_j into `dinv[j]`.
+    pub fn resolve_into(&self, dinv: &mut [f64]) {
+        for &(j, d) in &self.requests {
+            dinv[j] = 1.0 / d;
+        }
+    }
+}
+
+/// Per-robot topology index lists, precomputed once (e.g. when building a
+/// [`crate::dynamics::DynWorkspace`]) so the O(N²) mask construction and
+/// the mask *scans* both leave the per-call hot path:
+/// `subcols[i]` — columns j ∈ subtree(i), ascending;
+/// `brcols[i]`  — columns j sharing i's base branch (M⁻¹ block support).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub subcols: Vec<Vec<usize>>,
+    pub brcols: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn new(robot: &Robot) -> Topology {
+        let n = robot.dof();
+        let (sub, br) = topology_masks(robot);
+        let subcols = (0..n)
+            .map(|i| (0..n).filter(|&j| sub[i * n + j]).collect())
+            .collect();
+        let brcols = (0..n)
+            .map(|i| (0..n).filter(|&j| br[i * n + j]).collect())
+            .collect();
+        Topology { subcols, brcols }
+    }
+}
+
+/// Reusable buffers for the analytical-M⁻¹ sweeps: articulated inertias,
+/// the 6×N force/acceleration accumulators (flattened n×n), and the
+/// deferred row storage. Allocated once, reused per call.
+#[derive(Debug, Clone)]
+pub struct MinvScratch {
+    pub ia: Vec<M6>,
+    pub u: Vec<SV>,
+    pub dinv: Vec<f64>,
+    /// F accumulator, flattened: f[i*n + j].
+    pub f: Vec<SV>,
+    /// Acceleration responses, flattened: a[i*n + j].
+    pub a: Vec<SV>,
+    /// Deferred rows D_i·minv_row_i, flattened: row[i*n + j].
+    pub row: Vec<f64>,
+}
+
+impl MinvScratch {
+    pub fn new(n: usize) -> MinvScratch {
+        MinvScratch {
+            ia: vec![[[0.0; 6]; 6]; n],
+            u: vec![SV::ZERO; n],
+            dinv: vec![0.0; n],
+            f: vec![SV::ZERO; n * n],
+            a: vec![SV::ZERO; n * n],
+            row: vec![0.0; n * n],
+        }
+    }
+}
+
+/// Allocation-free division-deferring Minv kernel (Algorithm 2): writes
+/// M⁻¹(q) into `out` using caller-owned scratch and the precomputed
+/// topology. The divider trace is left in `queue` (cleared on entry),
+/// exactly one request per joint, tip→base.
+///
+/// Numerically identical to [`minv_dd`]: the per-entry accumulation
+/// order matches the mask-scan implementation it replaces.
+pub fn minv_dd_into(
+    robot: &Robot,
+    kin: &Kin,
+    topo: &Topology,
+    scr: &mut MinvScratch,
+    queue: &mut DividerQueue,
+    out: &mut DMat,
+) {
+    let n = robot.dof();
+    assert_eq!((out.rows, out.cols), (n, n));
+    assert_eq!(scr.f.len(), n * n, "scratch sized for a different robot");
+    queue.requests.clear();
+    scr.f.fill(SV::ZERO);
+    scr.a.fill(SV::ZERO);
+    scr.row.fill(0.0);
+    for i in 0..n {
+        scr.ia[i] = robot.links[i].inertia.to_mat6();
+    }
+
+    // Backward sweep (stage Mb): scaled numerators only; reciprocals go
+    // through the shared divider queue (see module docs).
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = matvec6(&scr.ia[i], &s);
+        let di = s.dot(&ui);
+        scr.u[i] = ui;
+        queue.push(i, di);
+
+        scr.row[i * n + i] += 1.0;
+        for &j in &topo.subcols[i] {
+            let sf = s.dot(&scr.f[i * n + j]);
+            if sf != 0.0 {
+                scr.row[i * n + j] -= sf;
+            }
+        }
+
+        if let Some(p) = robot.links[i].parent {
+            // N_i = D_i·IA_i − U Uᵀ  (scalar·matrix + rank-1: extra MACs)
+            let uut = outer6(&ui, &ui);
+            let ni = sub6(&scale6(&scr.ia[i], di), &uut);
+            let xm = kin.xup[i].to_mat6();
+            let contrib = mul6(&t6(&xm), &mul6(&ni, &xm));
+            // Parent stage consumes inv_i from the divider (concurrent):
+            let inv_i = 1.0 / di;
+            for r in 0..6 {
+                for c in 0..6 {
+                    scr.ia[p][r][c] += contrib[r][c] * inv_i;
+                }
+            }
+            // G_i = D_i·F_i + U_i·row_i ; F_λ += Xᵀ G_i · inv_i
+            for &j in &topo.subcols[i] {
+                let gij = scr.f[i * n + j].scale(di) + ui.scale(scr.row[i * n + j]);
+                let upd = kin.xup[i].inv_apply_force(&gij).scale(inv_i);
+                scr.f[p * n + j] = scr.f[p * n + j] + upd;
+            }
+        }
+    }
+
+    // Shared divider resolves all reciprocals (one pipelined unit).
+    queue.resolve_into(&mut scr.dinv);
+
+    // Forward pass (Mf units): consume divider outputs.
+    for i in 0..n {
+        let di = scr.dinv[i];
+        for j in 0..n {
+            out[(i, j)] = scr.row[i * n + j] * di;
+        }
+    }
+    for i in 0..n {
+        let s = kin.s[i];
+        match robot.links[i].parent {
+            None => {
+                for &j in &topo.brcols[i] {
+                    scr.a[i * n + j] = s.scale(out[(i, j)]);
+                }
+            }
+            Some(p) => {
+                for &j in &topo.brcols[i] {
+                    let xa = kin.xup[i].apply(&scr.a[p * n + j]);
+                    let corr = scr.dinv[i] * scr.u[i].dot(&xa);
+                    if corr != 0.0 {
+                        out[(i, j)] -= corr;
+                    }
+                    scr.a[i * n + j] = xa + s.scale(out[(i, j)]);
+                }
+            }
+        }
+    }
 }
 
 /// Original analytical Minv (reciprocals inline, Algorithm 1).
@@ -194,118 +352,17 @@ pub fn minv_dd(robot: &Robot, q: &[f64]) -> DMat {
 }
 
 /// As [`minv_dd`] but also returns the divider request trace (used by the
-/// accel model to validate the staggered divider schedule).
+/// accel model to validate the staggered divider schedule). Thin
+/// allocating wrapper over [`minv_dd_into`].
 pub fn minv_dd_traced(robot: &Robot, q: &[f64]) -> (DMat, DividerQueue) {
-    let kin = Kin::positions(robot, q);
     let n = robot.dof();
-    let mut ia: Vec<M6> = (0..n).map(|i| robot.links[i].inertia.to_mat6()).collect();
-    let mut u: Vec<SV> = vec![SV::ZERO; n];
+    let kin = Kin::positions(robot, q);
+    let topo = Topology::new(robot);
+    let mut scr = MinvScratch::new(n);
     let mut queue = DividerQueue::default();
-
-    // Stage Mb (backward): NO reciprocal anywhere in this loop. The
-    // scaled numerators N_i, G_i are formed with the extra multiplies the
-    // paper highlights (purple box), and the division result needed by
-    // the *parent* stage is modeled as arriving from the shared divider
-    // before the parent's accumulate executes (it runs concurrently with
-    // the Xᵀ·X MAC work).
-    //
-    // row[i][j] accumulates Sᵀ F terms in *scaled* form; we keep the
-    // per-joint scale explicit via the holding factor: each child hands
-    // the parent (N_i, G_i, D_i) and the parent applies inv(D_i) fetched
-    // from the divider output port.
-    let (sub, br) = topology_masks(robot);
-    let mut f: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
-    let mut raw_row: Vec<Vec<f64>> = vec![vec![0.0; n]; n]; // D_i·minv_row_i (deferred form)
-
-    // Backward sweep. The divider queue mirrors Fig. 6(b): requests are
-    // staggered by joint so one fully-pipelined divider serves all Mb
-    // units; `resolve()` happens conceptually in parallel, we simply may
-    // not use 1/D_i *within* joint i's own stage.
-    for i in (0..n).rev() {
-        let s = kin.s[i];
-        let ui = matvec6(&ia[i], &s);
-        let di = s.dot(&ui);
-        u[i] = ui;
-        queue.push(i, di);
-
-        // Deferred row update: raw_row_i = e_i − Sᵀ F_i. The original
-        // algorithm divides this row by D_i here; deferring leaves the
-        // row unscaled and the 1/D_i lands after the shared divider.
-        raw_row[i][i] += 1.0;
-        for j in 0..n {
-            if !sub[i * n + j] {
-                continue;
-            }
-            let sf = s.dot(&f[i][j]);
-            if sf != 0.0 {
-                raw_row[i][j] -= sf;
-            }
-        }
-
-        if let Some(p) = robot.links[i].parent {
-            // N_i = D_i·IA_i − U U ᵀ  (scalar·matrix + rank-1: extra MACs)
-            let uut = outer6(&ui, &ui);
-            let ni = sub6(&scale6(&ia[i], di), &uut);
-            let xm = kin.xup[i].to_mat6();
-            let contrib = mul6(&t6(&xm), &mul6(&ni, &xm));
-            // Parent stage consumes inv_i from the divider (concurrent):
-            let inv_i = 1.0 / di; // value identical; latency modeled in accel
-            for r in 0..6 {
-                for c in 0..6 {
-                    ia[p][r][c] += contrib[r][c] * inv_i;
-                }
-            }
-            // G_i = D_i·F_i + U_i·raw_row_i ; F_λ += Xᵀ G_i · inv_i
-            for j in 0..n {
-                if !sub[i * n + j] {
-                    continue;
-                }
-                let gij = f[i][j].scale(di) + ui.scale(raw_row[i][j]);
-                f[p][j] = f[p][j] + kin.xup[i].inv_apply_force(&gij).scale(inv_i);
-            }
-        }
-    }
-
-    // Shared divider resolves all reciprocals (one pipelined unit).
-    let mut dinv = vec![0.0; n];
-    for (j, inv) in queue.resolve() {
-        dinv[j] = inv;
-    }
-
-    // Forward pass (Mf units): consume divider outputs.
-    let mut minv = DMat::zeros(n, n);
-    for i in 0..n {
-        for j in 0..n {
-            minv[(i, j)] = raw_row[i][j] * dinv[i];
-        }
-    }
-    let mut a: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
-    for i in 0..n {
-        let s = kin.s[i];
-        match robot.links[i].parent {
-            None => {
-                for j in 0..n {
-                    if br[i * n + j] {
-                        a[i][j] = s.scale(minv[(i, j)]);
-                    }
-                }
-            }
-            Some(p) => {
-                for j in 0..n {
-                    if !br[i * n + j] {
-                        continue;
-                    }
-                    let xa = kin.xup[i].apply(&a[p][j]);
-                    let corr = dinv[i] * u[i].dot(&xa);
-                    if corr != 0.0 {
-                        minv[(i, j)] -= corr;
-                    }
-                    a[i][j] = xa + s.scale(minv[(i, j)]);
-                }
-            }
-        }
-    }
-    (minv, queue)
+    let mut out = DMat::zeros(n, n);
+    minv_dd_into(robot, &kin, &topo, &mut scr, &mut queue, &mut out);
+    (out, queue)
 }
 
 #[cfg(test)]

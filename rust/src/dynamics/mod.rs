@@ -3,16 +3,20 @@
 //! division-deferring), FD = M⁻¹·ID, and the analytical derivatives
 //! ΔID/ΔFD. Doubles as the measured CPU baseline (Pinocchio stand-in).
 
+pub mod batch;
 pub mod crba;
 pub mod deriv;
 pub mod fd;
 pub mod kinematics;
 pub mod minv;
 pub mod rnea;
+pub mod workspace;
 
-pub use crba::crba;
+pub use batch::{eval_batch, eval_batch_par, BatchKernel, BatchOutput, BatchTask};
+pub use crba::{crba, crba_into};
 pub use deriv::{fd_derivatives, rnea_derivatives};
-pub use fd::{aba, fd};
+pub use fd::{aba, aba_into, fd, AbaScratch};
 pub use kinematics::Kin;
-pub use minv::{minv, minv_dd, minv_dd_traced, DividerQueue};
-pub use rnea::{bias_forces, gravity_torques, rnea};
+pub use minv::{minv, minv_dd, minv_dd_into, minv_dd_traced, DividerQueue, MinvScratch, Topology};
+pub use rnea::{bias_forces, bias_into, gravity_torques, rnea, rnea_into};
+pub use workspace::DynWorkspace;

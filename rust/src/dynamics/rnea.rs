@@ -21,13 +21,65 @@ pub fn rnea(robot: &Robot, q: &[f64], qd: &[f64], qdd: &[f64], fext: Option<&[SV
 }
 
 /// RNEA reusing a precomputed kinematic cache (hot path for derivatives).
+/// Thin allocating wrapper over [`rnea_into`].
 pub fn rnea_with_kin(robot: &Robot, kin: &Kin, qdd: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
     let n = robot.dof();
+    let mut a = vec![SV::ZERO; n];
+    let mut f = vec![SV::ZERO; n];
+    let mut tau = vec![0.0; n];
+    rnea_core(robot, kin, Some(qdd), fext, &mut a, &mut f, &mut tau);
+    tau
+}
+
+/// Allocation-free RNEA kernel: writes τ into `tau`, using caller-owned
+/// scratch for link accelerations (`a`) and forces (`f`). All slices must
+/// have length `robot.dof()`.
+pub fn rnea_into(
+    robot: &Robot,
+    kin: &Kin,
+    qdd: &[f64],
+    fext: Option<&[SV]>,
+    a: &mut [SV],
+    f: &mut [SV],
+    tau: &mut [f64],
+) {
+    rnea_core(robot, kin, Some(qdd), fext, a, f, tau);
+}
+
+/// Bias-force kernel: RNEA with q̈ = 0, without materializing a zero
+/// vector. Writes C(q, q̇, f_ext) into `tau`.
+pub fn bias_into(
+    robot: &Robot,
+    kin: &Kin,
+    fext: Option<&[SV]>,
+    a: &mut [SV],
+    f: &mut [SV],
+    tau: &mut [f64],
+) {
+    rnea_core(robot, kin, None, fext, a, f, tau);
+}
+
+/// Shared forward/backward sweep. `qdd = None` means q̈ ≡ 0 (the bias
+/// pass), avoiding both the zero vector and the S·q̈ multiply-add.
+fn rnea_core(
+    robot: &Robot,
+    kin: &Kin,
+    qdd: Option<&[f64]>,
+    fext: Option<&[SV]>,
+    a: &mut [SV],
+    f: &mut [SV],
+    tau: &mut [f64],
+) {
+    let n = robot.dof();
+    assert_eq!(a.len(), n);
+    assert_eq!(f.len(), n);
+    assert_eq!(tau.len(), n);
+    if let Some(acc) = qdd {
+        assert_eq!(acc.len(), n);
+    }
     // a0 = -a_gravity: simulate gravity by accelerating the base upward.
     let a0 = SV::new(crate::spatial::V3::ZERO, -robot.gravity);
 
-    let mut a: Vec<SV> = Vec::with_capacity(n);
-    let mut f: Vec<SV> = Vec::with_capacity(n);
     for i in 0..n {
         let link = &robot.links[i];
         let si = kin.s[i];
@@ -36,16 +88,18 @@ pub fn rnea_with_kin(robot: &Robot, kin: &Kin, qdd: &[f64], fext: Option<&[SV]>)
             Some(p) => a[p],
             None => a0,
         };
-        let ai = kin.xup[i].apply(&a_parent) + si.scale(qdd[i]) + vi.crm(&si.scale(kin.qd[i]));
+        let mut ai = kin.xup[i].apply(&a_parent) + vi.crm(&si.scale(kin.qd[i]));
+        if let Some(acc) = qdd {
+            ai = ai + si.scale(acc[i]);
+        }
         let mut fi = link.inertia.apply(&ai) + vi.crf(&link.inertia.apply(&vi));
         if let Some(fe) = fext {
             fi = fi - fe[i];
         }
-        a.push(ai);
-        f.push(fi);
+        a[i] = ai;
+        f[i] = fi;
     }
 
-    let mut tau = vec![0.0; n];
     for i in (0..n).rev() {
         tau[i] = kin.s[i].dot(&f[i]);
         if let Some(p) = robot.links[i].parent {
@@ -53,13 +107,18 @@ pub fn rnea_with_kin(robot: &Robot, kin: &Kin, qdd: &[f64], fext: Option<&[SV]>)
             f[p] = f[p] + fp;
         }
     }
-    tau
 }
 
 /// Generalized bias forces C(q, q̇, f_ext) = RNEA(q, q̇, 0, f_ext):
 /// Coriolis + centrifugal + gravity − external.
 pub fn bias_forces(robot: &Robot, q: &[f64], qd: &[f64], fext: Option<&[SV]>) -> Vec<f64> {
-    rnea(robot, q, qd, &vec![0.0; robot.dof()], fext)
+    let n = robot.dof();
+    let kin = Kin::new(robot, q, qd);
+    let mut a = vec![SV::ZERO; n];
+    let mut f = vec![SV::ZERO; n];
+    let mut tau = vec![0.0; n];
+    rnea_core(robot, &kin, None, fext, &mut a, &mut f, &mut tau);
+    tau
 }
 
 /// Gravity-only torques: RNEA(q, 0, 0).

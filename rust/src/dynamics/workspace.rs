@@ -1,0 +1,228 @@
+//! Allocation-free dynamics workspace — the CPU analogue of the
+//! accelerator's resident task state. Dadu-RBD/DRACO keep all per-task
+//! intermediates (transforms, link velocities, articulated inertias, the
+//! shared-divider queue) in on-chip buffers so back-to-back tasks pay no
+//! setup cost; `DynWorkspace` does the same for the native serving path:
+//! every buffer any kernel needs is allocated once per (robot, worker
+//! thread) and overwritten per task.
+//!
+//! The fused [`DynWorkspace::fd_into`] additionally mirrors the RTP
+//! pipeline structure of FD = M⁻¹·ID: one kinematics pass feeds both the
+//! RNEA bias sweep and the division-deferring Minv sweep, and τ − C is
+//! folded directly into the M⁻¹ matvec — no intermediate vectors, no
+//! recomputed shared state.
+
+use super::crba::crba_into;
+use super::fd::{aba_into, fold_rhs_matvec, AbaScratch};
+use super::kinematics::Kin;
+use super::minv::{minv_dd_into, DividerQueue, MinvScratch, Topology};
+use super::rnea::{bias_into, rnea_into};
+use crate::model::Robot;
+use crate::spatial::{DMat, SV};
+
+/// Preallocated, n-sized buffers for every dynamics kernel: the kinematic
+/// cache, RNEA link accelerations/forces, articulated inertias, the
+/// [`DividerQueue`], M⁻¹ scratch, and the per-robot topology index lists.
+///
+/// One workspace serves one robot; `new` sizes every buffer from the
+/// robot's DOF and precomputes the subtree/branch column lists that the
+/// masked Minv sweeps otherwise rebuild on every call.
+#[derive(Debug, Clone)]
+pub struct DynWorkspace {
+    n: usize,
+    /// Kinematic cache (transforms, subspaces, velocities) for the
+    /// current task; recomputed in place per call.
+    pub kin: Kin,
+    /// Precomputed subtree/branch column lists.
+    pub topo: Topology,
+    /// RNEA scratch: link accelerations and forces.
+    pub a: Vec<SV>,
+    pub f: Vec<SV>,
+    /// Bias torques C(q, q̇, f_ext) of the last `fd_into`/`bias` pass.
+    pub bias: Vec<f64>,
+    /// Minv scratch: articulated inertias, U/D, flattened accumulators.
+    pub minv_scratch: MinvScratch,
+    /// Shared-divider request trace of the last Minv sweep.
+    pub divq: DividerQueue,
+    /// M⁻¹ of the last `fd_into`/`minv_into` call.
+    pub mi: DMat,
+    /// CRBA composite-inertia scratch (aliases nothing else).
+    pub ic: Vec<[[f64; 6]; 6]>,
+    /// ABA scratch for the oracle/simulator fast path.
+    pub aba_scratch: AbaScratch,
+}
+
+impl DynWorkspace {
+    pub fn new(robot: &Robot) -> DynWorkspace {
+        let n = robot.dof();
+        DynWorkspace {
+            n,
+            kin: Kin::empty(n),
+            topo: Topology::new(robot),
+            a: vec![SV::ZERO; n],
+            f: vec![SV::ZERO; n],
+            bias: vec![0.0; n],
+            minv_scratch: MinvScratch::new(n),
+            divq: DividerQueue::default(),
+            mi: DMat::zeros(n, n),
+            ic: vec![[[0.0; 6]; 6]; n],
+            aba_scratch: AbaScratch::new(n),
+        }
+    }
+
+    /// DOF the workspace was sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Inverse dynamics: τ = RNEA(q, q̇, q̈, f_ext), written into `tau`.
+    pub fn rnea_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        qdd: &[f64],
+        fext: Option<&[SV]>,
+        tau: &mut [f64],
+    ) {
+        self.kin.recompute(robot, q, qd);
+        rnea_into(robot, &self.kin, qdd, fext, &mut self.a, &mut self.f, tau);
+    }
+
+    /// Mass matrix M(q), written into `m` (N×N).
+    pub fn crba_into(&mut self, robot: &Robot, q: &[f64], m: &mut DMat) {
+        self.kin.recompute_positions(robot, q);
+        crba_into(robot, &self.kin, &mut self.ic, m);
+    }
+
+    /// Analytical M⁻¹(q) via the division-deferring sweep, written into
+    /// `out` (N×N). The divider trace is left in `self.divq`.
+    pub fn minv_into(&mut self, robot: &Robot, q: &[f64], out: &mut DMat) {
+        self.kin.recompute_positions(robot, q);
+        minv_dd_into(
+            robot,
+            &self.kin,
+            &self.topo,
+            &mut self.minv_scratch,
+            &mut self.divq,
+            out,
+        );
+    }
+
+    /// Fused forward dynamics q̈ = M⁻¹(q)·(τ − C(q, q̇, f_ext)): one
+    /// kinematics pass shared by the RNEA bias sweep and the
+    /// division-deferring Minv sweep, with τ − C folded into the final
+    /// matvec. Writes q̈ into `qdd`; leaves C in `self.bias` and M⁻¹ in
+    /// `self.mi` for callers that want the byproducts.
+    pub fn fd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fext: Option<&[SV]>,
+        qdd: &mut [f64],
+    ) {
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(qdd.len(), n);
+        self.kin.recompute(robot, q, qd);
+        bias_into(robot, &self.kin, fext, &mut self.a, &mut self.f, &mut self.bias);
+        // Minv only reads positions (xup, s); the velocity entries in the
+        // shared cache are simply ignored, so no second kinematics pass.
+        minv_dd_into(
+            robot,
+            &self.kin,
+            &self.topo,
+            &mut self.minv_scratch,
+            &mut self.divq,
+            &mut self.mi,
+        );
+        fold_rhs_matvec(&self.mi, tau, &self.bias, qdd);
+    }
+
+    /// Forward dynamics via the O(N) Articulated Body Algorithm — the
+    /// motion-simulator fast path. Writes q̈ into `qdd`.
+    pub fn aba_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fext: Option<&[SV]>,
+        qdd: &mut [f64],
+    ) {
+        self.kin.recompute(robot, q, qd);
+        aba_into(robot, &self.kin, tau, fext, &mut self.aba_scratch, qdd);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::{aba, crba, fd, minv, rnea};
+    use crate::model::{builtin, State};
+    use crate::util::check::assert_slices_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn workspace_kernels_match_allocating_paths() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let n = robot.dof();
+            let mut ws = DynWorkspace::new(&robot);
+            let mut rng = Rng::new(500);
+            // Reuse the same workspace across iterations: stale state from
+            // one task must never leak into the next.
+            for _ in 0..4 {
+                let s = State::random(&robot, &mut rng);
+                let qdd_in = rng.vec_range(n, -3.0, 3.0);
+                let tau_ref = rnea(&robot, &s.q, &s.qd, &qdd_in, None);
+                let mut tau_ws = vec![0.0; n];
+                ws.rnea_into(&robot, &s.q, &s.qd, &qdd_in, None, &mut tau_ws);
+                assert_slices_close(&tau_ws, &tau_ref, 1e-12, &format!("{} rnea", robot.name));
+
+                let mut qdd_ws = vec![0.0; n];
+                ws.fd_into(&robot, &s.q, &s.qd, &tau_ref, None, &mut qdd_ws);
+                let qdd_ref = fd(&robot, &s.q, &s.qd, &tau_ref, None);
+                assert_slices_close(&qdd_ws, &qdd_ref, 1e-9, &format!("{} fd", robot.name));
+                // fd(rnea(q̈)) round-trip against the requested q̈.
+                assert_slices_close(&qdd_ws, &qdd_in, 1e-7, &format!("{} fd∘id", robot.name));
+
+                let mut qdd_aba = vec![0.0; n];
+                ws.aba_into(&robot, &s.q, &s.qd, &tau_ref, None, &mut qdd_aba);
+                let aba_ref = aba(&robot, &s.q, &s.qd, &tau_ref, None);
+                assert_slices_close(&qdd_aba, &aba_ref, 1e-12, &format!("{} aba", robot.name));
+
+                let mut m = DMat::zeros(n, n);
+                ws.crba_into(&robot, &s.q, &mut m);
+                let m_ref = crba(&robot, &s.q);
+                let err = m.sub(&m_ref).max_abs();
+                assert!(err < 1e-12, "{}: crba workspace err {err}", robot.name);
+
+                let mut mi = DMat::zeros(n, n);
+                ws.minv_into(&robot, &s.q, &mut mi);
+                let mi_ref = minv(&robot, &s.q);
+                let err = mi.sub(&mi_ref).max_abs();
+                assert!(err < 1e-9, "{}: minv workspace err {err}", robot.name);
+                assert_eq!(ws.divq.requests.len(), n, "one divider request per joint");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_fd_byproducts_are_consistent() {
+        let robot = builtin::iiwa();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut rng = Rng::new(501);
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(n, -10.0, 10.0);
+        let mut qdd = vec![0.0; n];
+        ws.fd_into(&robot, &s.q, &s.qd, &tau, None, &mut qdd);
+        // bias == RNEA(q, q̇, 0) and mi == M⁻¹ are left behind.
+        let bias_ref = crate::dynamics::bias_forces(&robot, &s.q, &s.qd, None);
+        assert_slices_close(&ws.bias, &bias_ref, 1e-12, "fd bias byproduct");
+        let mi_ref = minv(&robot, &s.q);
+        assert!(ws.mi.sub(&mi_ref).max_abs() < 1e-9, "fd minv byproduct");
+    }
+}

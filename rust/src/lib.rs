@@ -4,15 +4,18 @@
 //! for DSP-Efficient Rigid Body Dynamics Accelerator* (CS.AR 2025).
 //!
 //! * [`spatial`] / [`model`] / [`dynamics`] — a from-scratch rigid-body-
-//!   dynamics library (the Pinocchio-equivalent substrate + CPU baseline).
+//!   dynamics library (the Pinocchio-equivalent substrate + CPU baseline),
+//!   including the allocation-free workspace core
+//!   ([`dynamics::DynWorkspace`]) and the batched evaluation API.
 //! * [`quant`] — the paper's precision-aware quantization framework.
 //! * [`control`] / [`sim`] — PID/LQR/MPC controllers and the ICMS
 //!   closed-loop control & motion simulator.
 //! * [`accel`] — the FPGA accelerator cycle model (RTP pipelines, division
 //!   deferring, inter-module DSP reuse) used to regenerate the paper's
 //!   evaluation figures.
-//! * [`runtime`] / [`coordinator`] — the PJRT execution path: load
-//!   AOT-compiled HLO artifacts and serve batched RBD requests.
+//! * [`runtime`] / [`coordinator`] — the serving path: dynamic batching
+//!   over the native workspace engine (default), or AOT-compiled HLO
+//!   artifacts via PJRT behind the `pjrt` feature.
 //! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).
 
 pub mod accel;

@@ -9,8 +9,11 @@
 //! * `quantize --robot NAME --controller pid|lqr|mpc [--tol MET]` — run
 //!   the bit-width search (paper §III).
 //! * `rates [--robot NAME]` — estimated control rates (Fig. 13).
-//! * `serve --artifacts DIR --robot NAME` — start the batched PJRT
-//!   serving coordinator and run a synthetic workload through it.
+//! * `serve --robot NAME [--backend native|pjrt] [--batch B]` — start the
+//!   batched serving coordinator and run a synthetic workload through it.
+//!   The default `native` backend serves from the allocation-free
+//!   workspace core (no artifacts needed); `pjrt` executes AOT artifacts
+//!   and requires `--features pjrt` plus `--artifacts DIR`.
 
 use draco::accel::{self, designs::RbdFn, Design};
 use draco::model::{builtin_robot, robot_registry};

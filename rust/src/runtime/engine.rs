@@ -1,6 +1,12 @@
 //! A compiled executable for one artifact: PJRT CPU client + loaded
 //! executable + shape bookkeeping, with a batched `run` entrypoint.
+//!
+//! The whole PJRT path is gated behind the `pjrt` cargo feature (it needs
+//! the vendored `xla` crate, unavailable offline); [`EngineError`] stays
+//! unconditional because the native engine shares it. Default builds
+//! serve through [`super::native::NativeEngine`] instead.
 
+#[cfg(feature = "pjrt")]
 use super::artifact::{ArtifactFn, ArtifactMeta};
 use std::fmt;
 
@@ -15,6 +21,7 @@ impl fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
         EngineError(format!("{e:?}"))
@@ -22,6 +29,7 @@ impl From<xla::Error> for EngineError {
 }
 
 /// One compiled (robot, function, batch) executable.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub meta: ArtifactMeta,
     /// Joint dimension, probed from the robot description.
@@ -29,6 +37,7 @@ pub struct Engine {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Compile the artifact on a PJRT CPU client. `n` is the robot DOF
     /// (defines the operand shapes (B, N)).
@@ -83,4 +92,5 @@ impl Engine {
 }
 
 // NB: integration tests that exercise Engine against real artifacts live
-// in rust/tests/integration_runtime.rs (they require `make artifacts`).
+// in rust/tests/integration_runtime.rs (they require `make artifacts`
+// and `--features pjrt`).

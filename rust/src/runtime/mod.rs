@@ -1,13 +1,23 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
-//! `python/compile/aot.py`) and execute them from the request path.
-//! Python is never on this path — the artifacts are self-contained.
+//! Execution runtimes behind the serving coordinator.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! * [`native`] — the default: a batched CPU engine running the
+//!   allocation-free workspace dynamics core directly. No external
+//!   toolchain, no artifacts; this is the path `draco serve` uses out of
+//!   the box.
+//! * [`engine`] (feature `pjrt`) — load AOT-compiled HLO-text artifacts
+//!   (produced once by `python/compile/aot.py`) and execute them through
+//!   PJRT. Python is never on this path — the artifacts are
+//!   self-contained. Interchange is HLO *text* (not serialized protos):
+//!   jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md).
 
 pub mod artifact;
 pub mod engine;
+pub mod native;
 
 pub use artifact::{scan_artifacts, ArtifactMeta};
-pub use engine::{Engine, EngineError};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+pub use engine::EngineError;
+pub use native::NativeEngine;

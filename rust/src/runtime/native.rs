@@ -1,0 +1,272 @@
+//! Native batched CPU engine: the default serving backend. Executes the
+//! workspace dynamics core directly on the request path — no PJRT, no
+//! artifacts, no Python — with the same flat-f32 batched interface as the
+//! PJRT [`super::engine::Engine`], so the coordinator can drive either
+//! interchangeably.
+//!
+//! One engine owns one [`DynWorkspace`]; the coordinator creates one
+//! engine per worker thread, so a whole serving batch runs without a
+//! single heap allocation inside the dynamics kernels.
+
+use super::artifact::ArtifactFn;
+use super::engine::EngineError;
+use crate::dynamics::DynWorkspace;
+use crate::model::Robot;
+use crate::spatial::DMat;
+
+/// Batched CPU executor for one (robot, function, batch) route.
+pub struct NativeEngine {
+    pub robot: Robot,
+    pub function: ArtifactFn,
+    pub batch: usize,
+    n: usize,
+    ws: DynWorkspace,
+    // Per-task f64 staging buffers (decoded from the flat f32 operands).
+    q: Vec<f64>,
+    qd: Vec<f64>,
+    u: Vec<f64>,
+    out_vec: Vec<f64>,
+    out_mat: DMat,
+}
+
+impl NativeEngine {
+    pub fn new(robot: Robot, function: ArtifactFn, batch: usize) -> NativeEngine {
+        let n = robot.dof();
+        assert!(batch > 0, "batch must be positive");
+        NativeEngine {
+            ws: DynWorkspace::new(&robot),
+            q: vec![0.0; n],
+            qd: vec![0.0; n],
+            u: vec![0.0; n],
+            out_vec: vec![0.0; n],
+            out_mat: DMat::zeros(n, n),
+            robot,
+            function,
+            batch,
+            n,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Flat output length for a full batch.
+    pub fn expected_output_len(&self) -> usize {
+        match self.function {
+            ArtifactFn::Rnea | ArtifactFn::Fd => self.batch * self.n,
+            ArtifactFn::Minv => self.batch * self.n * self.n,
+        }
+    }
+
+    /// Execute one batch. Same layout as the PJRT engine — `inputs`
+    /// holds `arity` flat f32 arrays, row-major (B, N) — but unlike a
+    /// compiled fixed-shape executable the native engine accepts any
+    /// B ≤ `batch`, so partial batches cost only the tasks they carry
+    /// (no padding waste). Returns the flat f32 output for B rows.
+    pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        if inputs.len() != self.function.arity() {
+            return Err(EngineError(format!(
+                "expected {} operands, got {}",
+                self.function.arity(),
+                inputs.len()
+            )));
+        }
+        let len0 = inputs[0].len();
+        for x in inputs {
+            if x.len() != len0 {
+                return Err(EngineError(format!(
+                    "ragged operands: {} vs {}",
+                    x.len(),
+                    len0
+                )));
+            }
+        }
+        if len0 == 0 || len0 % n != 0 {
+            return Err(EngineError(format!("operand length {len0} not a multiple of n = {n}")));
+        }
+        let b = len0 / n;
+        if b > self.batch {
+            return Err(EngineError(format!("{b} rows exceed engine batch {}", self.batch)));
+        }
+        let per_task = match self.function {
+            ArtifactFn::Rnea | ArtifactFn::Fd => n,
+            ArtifactFn::Minv => n * n,
+        };
+        let mut out = vec![0.0f32; b * per_task];
+        for k in 0..b {
+            let span = k * n..(k + 1) * n;
+            match self.function {
+                ArtifactFn::Rnea => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.rnea_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        None,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Fd => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.fd_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        None,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Minv => {
+                    decode(&inputs[0][span], &mut self.q);
+                    self.ws.minv_into(&self.robot, &self.q, &mut self.out_mat);
+                    encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn decode(src: &[f32], dst: &mut [f64]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s as f64;
+    }
+}
+
+fn encode(src: &[f64], dst: &mut [f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::{fd, minv, rnea};
+    use crate::model::{builtin_robot, State};
+    use crate::util::rng::Rng;
+
+    fn flat_inputs(robot: &Robot, b: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<(State, Vec<f64>)>) {
+        let n = robot.dof();
+        let mut rng = Rng::new(seed);
+        let mut q = Vec::with_capacity(b * n);
+        let mut qd = Vec::with_capacity(b * n);
+        let mut u = Vec::with_capacity(b * n);
+        let mut cases = Vec::with_capacity(b);
+        for _ in 0..b {
+            let s = State::random(robot, &mut rng);
+            let uu = rng.vec_range(n, -6.0, 6.0);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            qd.extend(s.qd.iter().map(|&x| x as f32));
+            u.extend(uu.iter().map(|&x| x as f32));
+            cases.push((s, uu));
+        }
+        (vec![q, qd, u], cases)
+    }
+
+    #[test]
+    fn native_engine_matches_reference_rnea_fd() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let b = 16;
+        let (inputs, cases) = flat_inputs(&robot, b, 700);
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd] {
+            let mut eng = NativeEngine::new(robot.clone(), function, b);
+            let out = eng.run(&inputs).expect("run");
+            assert_eq!(out.len(), b * n);
+            for (k, (s, u)) in cases.iter().enumerate() {
+                // Reference on the f32-rounded operands the engine saw.
+                let qr: Vec<f64> = s.q.iter().map(|&x| x as f32 as f64).collect();
+                let qdr: Vec<f64> = s.qd.iter().map(|&x| x as f32 as f64).collect();
+                let ur: Vec<f64> = u.iter().map(|&x| x as f32 as f64).collect();
+                let want = match function {
+                    ArtifactFn::Rnea => rnea(&robot, &qr, &qdr, &ur, None),
+                    ArtifactFn::Fd => fd(&robot, &qr, &qdr, &ur, None),
+                    ArtifactFn::Minv => unreachable!(),
+                };
+                for i in 0..n {
+                    let got = out[k * n + i] as f64;
+                    let scale = 1.0f64.max(want[i].abs());
+                    assert!(
+                        (got - want[i]).abs() / scale < 1e-5,
+                        "task {k} joint {i}: {got} vs {}",
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn native_engine_matches_reference_minv() {
+        let robot = builtin_robot("atlas").unwrap();
+        let n = robot.dof();
+        let b = 4;
+        let (inputs, cases) = flat_inputs(&robot, b, 701);
+        let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::Minv, b);
+        let out = eng.run(&inputs[..1]).expect("run");
+        assert_eq!(out.len(), b * n * n);
+        for (k, (s, _)) in cases.iter().enumerate() {
+            let qr: Vec<f64> = s.q.iter().map(|&x| x as f32 as f64).collect();
+            let want = minv(&robot, &qr);
+            let scale = want.max_abs();
+            for i in 0..n {
+                for j in 0..n {
+                    let got = out[k * n * n + i * n + j] as f64;
+                    assert!(
+                        (got - want[(i, j)]).abs() / scale < 1e-5,
+                        "task {k} M⁻¹[{i}][{j}]: {got} vs {}",
+                        want[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn native_engine_rejects_bad_shapes() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let mut eng = NativeEngine::new(robot, ArtifactFn::Rnea, 4);
+        // Wrong arity.
+        assert!(eng.run(&[vec![0.0; 28]]).is_err());
+        // Ragged operands.
+        assert!(eng.run(&[vec![0.0; 28], vec![0.0; 28], vec![0.0; 27]]).is_err());
+        // Not a multiple of n.
+        assert!(eng.run(&[vec![0.0; 10], vec![0.0; 10], vec![0.0; 10]]).is_err());
+        // More rows than the engine batch.
+        assert!(eng.run(&[vec![0.0; 42], vec![0.0; 42], vec![0.0; 42]]).is_err());
+    }
+
+    #[test]
+    fn native_engine_accepts_partial_batches() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::Rnea, 16);
+        // 3 rows into a batch-16 engine: output sized for 3, values match
+        // the reference per row.
+        let (inputs, cases) = flat_inputs(&robot, 3, 702);
+        let out = eng.run(&inputs).expect("partial batch runs");
+        assert_eq!(out.len(), 3 * n);
+        for (k, (s, u)) in cases.iter().enumerate() {
+            let qr: Vec<f64> = s.q.iter().map(|&x| x as f32 as f64).collect();
+            let qdr: Vec<f64> = s.qd.iter().map(|&x| x as f32 as f64).collect();
+            let ur: Vec<f64> = u.iter().map(|&x| x as f32 as f64).collect();
+            let want = rnea(&robot, &qr, &qdr, &ur, None);
+            for i in 0..n {
+                let got = out[k * n + i] as f64;
+                let scale = 1.0f64.max(want[i].abs());
+                assert!((got - want[i]).abs() / scale < 1e-5, "row {k} joint {i}");
+            }
+        }
+    }
+}

@@ -9,10 +9,11 @@ use crate::control::backend::{Controller, RbdBackend};
 use crate::control::lqr::LqrController;
 use crate::control::mpc::MpcController;
 use crate::control::pid::PidController;
+use crate::dynamics::DynWorkspace;
 use crate::model::{Robot, State};
 use crate::quant::qformat::QFormat;
 use crate::sim::fk::ee_position;
-use crate::sim::integrate::step_semi_implicit;
+use crate::sim::integrate::step_semi_implicit_ws;
 use crate::sim::traj::Trajectory;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,13 +102,17 @@ pub fn run_closed_loop(robot: &Robot, cfg: &IcmsConfig, backend: RbdBackend) -> 
         ee: Vec::new(),
         mpc_cost: Vec::new(),
     };
+    // Physics fast path: one workspace reused across every step, so the
+    // exact-dynamics integrator allocates nothing per step.
+    let mut ws = DynWorkspace::new(robot);
+    let mut qdd = vec![0.0; n];
     let mut tau = vec![0.0; n];
     for k in 0..cfg.steps {
         let t = k as f64 * cfg.dt;
         if k % cfg.ctl_every == 0 {
             tau = ctl.control(t, &s.q, &s.qd);
         }
-        step_semi_implicit(robot, &mut s, &tau, None, cfg.dt);
+        step_semi_implicit_ws(robot, &mut ws, &mut qdd, &mut s, &tau, None, cfg.dt);
         let ee = ee_position(robot, &s.q);
         log.t.push(t);
         log.q.push(s.q.clone());

@@ -1,9 +1,17 @@
 //! Motion simulator integrators (the Pinocchio-backed "Motion Simulator"
 //! box of Fig. 4): exact f64 forward dynamics + time stepping.
 
-use crate::dynamics::aba;
+use crate::dynamics::{aba, DynWorkspace};
 use crate::model::{Robot, State};
 use crate::spatial::SV;
+
+/// The shared update rule: q̇ += q̈ dt, then q += q̇ dt (symplectic order).
+fn semi_implicit_update(state: &mut State, qdd: &[f64], dt: f64) {
+    for i in 0..qdd.len() {
+        state.qd[i] += qdd[i] * dt;
+        state.q[i] += state.qd[i] * dt;
+    }
+}
 
 /// One semi-implicit (symplectic) Euler step: q̇ += q̈ dt, then q += q̇ dt.
 /// The standard choice for control-rate physics stepping.
@@ -15,10 +23,23 @@ pub fn step_semi_implicit(
     dt: f64,
 ) {
     let qdd = aba(robot, &state.q, &state.qd, tau, fext);
-    for i in 0..robot.dof() {
-        state.qd[i] += qdd[i] * dt;
-        state.q[i] += state.qd[i] * dt;
-    }
+    semi_implicit_update(state, &qdd, dt);
+}
+
+/// Allocation-free variant of [`step_semi_implicit`] for tight physics
+/// loops (the ICMS fast path): the ABA sweeps run inside a caller-owned
+/// [`DynWorkspace`], and `qdd` is scratch for the accelerations.
+pub fn step_semi_implicit_ws(
+    robot: &Robot,
+    ws: &mut DynWorkspace,
+    qdd: &mut [f64],
+    state: &mut State,
+    tau: &[f64],
+    fext: Option<&[SV]>,
+    dt: f64,
+) {
+    ws.aba_into(robot, &state.q, &state.qd, tau, fext, qdd);
+    semi_implicit_update(state, qdd, dt);
 }
 
 /// Classic RK4 step on the full state (higher accuracy; used for energy

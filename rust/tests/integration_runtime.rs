@@ -2,8 +2,11 @@
 //! execute them through the PJRT runtime + coordinator, and validate
 //! numerics against the native Rust implementations.
 //!
-//! These tests SKIP (pass trivially) when `artifacts/` is empty so that
-//! `cargo test` works before the Python compile step has run.
+//! The whole target is gated on the `pjrt` feature (the default build has
+//! no xla crate); within it, tests SKIP (pass trivially) when
+//! `artifacts/` is empty so that `cargo test --features pjrt` works
+//! before the Python compile step has run.
+#![cfg(feature = "pjrt")]
 
 use draco::coordinator::Coordinator;
 use draco::dynamics;
@@ -150,7 +153,7 @@ fn coordinator_batches_and_answers() {
     };
     let robot = builtin_robot("iiwa").unwrap();
     let n = robot.dof();
-    let coord = Coordinator::start(vec![meta], n, 150);
+    let coord = Coordinator::start_pjrt(vec![meta], n, 150);
     let mut rng = Rng::new(102);
     let mut pending = Vec::new();
     for _ in 0..40 {
@@ -188,7 +191,7 @@ fn coordinator_no_mixups_under_load() {
     };
     let robot = builtin_robot("iiwa").unwrap();
     let n = robot.dof();
-    let coord = Coordinator::start(vec![meta], n, 80);
+    let coord = Coordinator::start_pjrt(vec![meta], n, 80);
     let mut rng = Rng::new(103);
     // Unique marker per request: qdd = j * e_0 → τ depends linearly on j.
     let base = State::random(&robot, &mut rng);

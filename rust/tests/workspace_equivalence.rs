@@ -1,0 +1,225 @@
+//! Property tests for the allocation-free workspace core: every `*_into`
+//! kernel and the batch API must agree with the allocating reference
+//! implementations — and with the independent ABA oracle — across all
+//! builtin robots, random seeds, and randomized tree topologies, while
+//! REUSING one workspace across every case (so stale state from a
+//! previous task would be caught immediately).
+
+use draco::dynamics::{
+    aba, crba, eval_batch, eval_batch_par, fd, minv, rnea, BatchKernel, BatchOutput, BatchTask,
+    DynWorkspace,
+};
+use draco::model::{builtin_robot, Joint, Link, Robot, State};
+use draco::spatial::{DMat, Inertia, M3, V3, Xform};
+use draco::util::check::{assert_slices_close, close};
+use draco::util::rng::Rng;
+
+const ROBOTS: [&str; 4] = ["iiwa", "hyq", "atlas", "baxter"];
+
+/// Random physically-valid robot with 2..=10 joints (same generator
+/// family as tests/property_dynamics.rs).
+fn random_robot(rng: &mut Rng) -> Robot {
+    let n = 2 + rng.below(9);
+    let mut links = Vec::with_capacity(n);
+    for i in 0..n {
+        let parent = if i == 0 {
+            None
+        } else {
+            Some(if rng.f64() < 0.7 { i - 1 } else { rng.below(i) })
+        };
+        let axis = V3::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(0.2, 1.0));
+        let joint = if rng.f64() < 0.85 {
+            Joint::revolute(axis)
+        } else {
+            Joint::prismatic(axis)
+        };
+        let rot_axis = V3::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(0.2, 1.0));
+        let x_tree = Xform {
+            e: M3::rot_axis(&rot_axis, rng.range(-1.5, 1.5)),
+            r: V3::new(rng.range(-0.3, 0.3), rng.range(-0.3, 0.3), rng.range(-0.4, 0.4)),
+        };
+        let mut a = M3::ZERO;
+        for r in 0..3 {
+            for c in 0..3 {
+                a.0[r][c] = rng.range(-0.2, 0.2);
+            }
+        }
+        let mut i_com = a.mul_m(&a.transpose());
+        for d in 0..3 {
+            i_com.0[d][d] += rng.range(0.02, 0.2);
+        }
+        let inertia = Inertia::from_com_inertia(
+            rng.range(0.3, 6.0),
+            V3::new(rng.range(-0.15, 0.15), rng.range(-0.15, 0.15), rng.range(-0.15, 0.15)),
+            i_com,
+        );
+        links.push(Link {
+            name: format!("l{i}"),
+            parent,
+            joint,
+            x_tree,
+            inertia,
+            q_min: -2.0,
+            q_max: 2.0,
+            qd_max: 3.0,
+        });
+    }
+    let robot = Robot { name: "random".into(), links, gravity: V3::new(0.0, 0.0, -9.81) };
+    robot.validate().expect("generator must produce valid robots");
+    robot
+}
+
+/// Workspace fd vs the independent ABA oracle, all builtins × seeds.
+#[test]
+fn workspace_fd_matches_aba_oracle_on_builtins() {
+    for name in ROBOTS {
+        let robot = builtin_robot(name).unwrap();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut qdd_ws = vec![0.0; n];
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(900 + seed);
+            let s = State::random(&robot, &mut rng);
+            let tau = rng.vec_range(n, -25.0, 25.0);
+            ws.fd_into(&robot, &s.q, &s.qd, &tau, None, &mut qdd_ws);
+            let oracle = aba(&robot, &s.q, &s.qd, &tau, None);
+            for i in 0..n {
+                assert!(
+                    close(qdd_ws[i], oracle[i], 1e-9),
+                    "{name} seed {seed} joint {i}: ws {} vs aba {}",
+                    qdd_ws[i],
+                    oracle[i]
+                );
+            }
+        }
+    }
+}
+
+/// Workspace kernels vs allocating references on random topologies —
+/// each case gets a fresh workspace because the tree size changes, but
+/// within a case the workspace is exercised by several kernels in a row.
+#[test]
+fn workspace_kernels_match_references_on_random_trees() {
+    let mut rng = Rng::new(0xD8AC0);
+    for case in 0..40 {
+        let robot = random_robot(&mut rng);
+        let n = robot.dof();
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(n, -15.0, 15.0);
+        let qdd_in = rng.vec_range(n, -3.0, 3.0);
+        let mut ws = DynWorkspace::new(&robot);
+
+        let mut tau_ws = vec![0.0; n];
+        ws.rnea_into(&robot, &s.q, &s.qd, &qdd_in, None, &mut tau_ws);
+        let tau_ref = rnea(&robot, &s.q, &s.qd, &qdd_in, None);
+        assert_slices_close(&tau_ws, &tau_ref, 1e-12, &format!("case {case} rnea"));
+
+        let mut qdd_ws = vec![0.0; n];
+        ws.fd_into(&robot, &s.q, &s.qd, &tau, None, &mut qdd_ws);
+        let fd_ref = fd(&robot, &s.q, &s.qd, &tau, None);
+        assert_slices_close(&qdd_ws, &fd_ref, 1e-8, &format!("case {case} fd vs alloc"));
+        let oracle = aba(&robot, &s.q, &s.qd, &tau, None);
+        assert_slices_close(&qdd_ws, &oracle, 1e-8, &format!("case {case} fd vs aba"));
+
+        let mut mi_ws = DMat::zeros(n, n);
+        ws.minv_into(&robot, &s.q, &mut mi_ws);
+        // M⁻¹ must invert CRBA's M: two independent formulations.
+        let prod = mi_ws.matmul(&crba(&robot, &s.q));
+        let err = prod.sub(&DMat::identity(n)).max_abs();
+        assert!(err < 1e-7, "case {case}: |M⁻¹M − I| = {err:.2e}");
+        let mi_ref = minv(&robot, &s.q);
+        let err = mi_ws.sub(&mi_ref).max_abs();
+        assert!(
+            err < 1e-8 * (1.0 + mi_ref.max_abs()),
+            "case {case}: |minv_ws − minv| = {err:.2e}"
+        );
+    }
+}
+
+/// Round-trip through the workspace kernels alone: fd_ws(rnea_ws(q̈)) = q̈.
+#[test]
+fn workspace_fd_inverts_workspace_id() {
+    for name in ROBOTS {
+        let robot = builtin_robot(name).unwrap();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut tau = vec![0.0; n];
+        let mut back = vec![0.0; n];
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(910 + seed);
+            let s = State::random(&robot, &mut rng);
+            let qdd_in = rng.vec_range(n, -4.0, 4.0);
+            ws.rnea_into(&robot, &s.q, &s.qd, &qdd_in, None, &mut tau);
+            ws.fd_into(&robot, &s.q, &s.qd, &tau, None, &mut back);
+            for i in 0..n {
+                assert!(
+                    close(back[i], qdd_in[i], 1e-7),
+                    "{name} joint {i}: {} vs {}",
+                    back[i],
+                    qdd_in[i]
+                );
+            }
+        }
+    }
+}
+
+/// Batch API (single-threaded and threaded) vs per-task references on
+/// every builtin robot.
+#[test]
+fn batched_kernels_match_reference_on_builtins() {
+    for name in ROBOTS {
+        let robot = builtin_robot(name).unwrap();
+        let n = robot.dof();
+        let mut rng = Rng::new(920);
+        let tasks: Vec<BatchTask> = (0..12)
+            .map(|_| {
+                let s = State::random(&robot, &mut rng);
+                BatchTask { q: s.q, qd: s.qd, u: rng.vec_range(n, -10.0, 10.0) }
+            })
+            .collect();
+        for kernel in [BatchKernel::Rnea, BatchKernel::Fd, BatchKernel::Minv] {
+            let single = eval_batch(&robot, kernel, &tasks);
+            let par = eval_batch_par(&robot, kernel, &tasks, 4);
+            assert_eq!(single.len(), tasks.len());
+            for (k, task) in tasks.iter().enumerate() {
+                match (&single[k], &par[k]) {
+                    (BatchOutput::Vector(a), BatchOutput::Vector(b)) => {
+                        let want = match kernel {
+                            BatchKernel::Rnea => rnea(&robot, &task.q, &task.qd, &task.u, None),
+                            BatchKernel::Fd => fd(&robot, &task.q, &task.qd, &task.u, None),
+                            BatchKernel::Minv => unreachable!(),
+                        };
+                        let tol = if kernel == BatchKernel::Rnea { 1e-12 } else { 1e-9 };
+                        assert_slices_close(a, &want, tol, &format!("{name} task {k}"));
+                        assert_eq!(a, b, "{name} task {k}: threaded result differs");
+                    }
+                    (BatchOutput::Matrix(a), BatchOutput::Matrix(b)) => {
+                        let want = minv(&robot, &task.q);
+                        assert!(a.sub(&want).max_abs() < 1e-9, "{name} task {k} minv");
+                        assert!(a.sub(b).max_abs() == 0.0, "{name} task {k}: threaded minv");
+                    }
+                    _ => panic!("{name} task {k}: output kind mismatch"),
+                }
+            }
+        }
+    }
+}
+
+/// External forces flow through the workspace fd identically to the
+/// oracle route.
+#[test]
+fn workspace_fd_external_forces_match_oracle() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let mut ws = DynWorkspace::new(&robot);
+    let mut rng = Rng::new(930);
+    let s = State::random(&robot, &mut rng);
+    let tau = rng.vec_range(n, -10.0, 10.0);
+    let fe: Vec<draco::spatial::SV> = (0..n)
+        .map(|_| draco::spatial::SV::from_slice(&rng.vec_range(6, -4.0, 4.0)))
+        .collect();
+    let mut got = vec![0.0; n];
+    ws.fd_into(&robot, &s.q, &s.qd, &tau, Some(&fe), &mut got);
+    let want = aba(&robot, &s.q, &s.qd, &tau, Some(&fe));
+    assert_slices_close(&got, &want, 1e-9, "fd_ws with fext vs aba");
+}
