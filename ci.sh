@@ -19,6 +19,12 @@ else
     echo "clippy unavailable; skipping lint"
 fi
 
+echo "== cargo doc --no-deps =="
+cargo doc --no-deps
+
+echo "== docs link check =="
+bash ../scripts/check_doc_links.sh
+
 echo "== bench smoke: hotpath_cpu --quick =="
 cargo bench --bench hotpath_cpu -- --quick
 

@@ -6,15 +6,24 @@
 //! Each function is measured twice where a workspace kernel exists:
 //! the allocating path (fresh buffers per call, the pre-workspace
 //! behaviour) and the `*_ws` path (one reused [`DynWorkspace`], the
-//! serving hot path). Results are also written to `BENCH_hotpath.json`
-//! (schema `draco.hotpath.v1`) so successive PRs can track the perf
-//! trajectory. Pass `--quick` for a smoke run (CI).
+//! serving hot path). On top of the per-robot kernel rows, the serving
+//! paths are measured too: the quantized native backend
+//! (`fd_quant64_ws`), trajectory rollouts through the workspace
+//! integrator (`traj64_step_ws`, per step), and a multi-robot mixed
+//! batch through the registry coordinator (`serve_fd_mixed64`, robot
+//! "mixed" — dispatch and batching included). Results are also written
+//! to `BENCH_hotpath.json` (schema `draco.hotpath.v1`) so successive PRs
+//! can track the perf trajectory. Pass `--quick` for a smoke run (CI).
 
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
     aba, crba, eval_batch, fd, minv, minv_dd, rnea, rnea_derivatives, BatchKernel, BatchTask,
     DynWorkspace,
 };
-use draco::model::{builtin_robot, State};
+use draco::model::{builtin_robot, Robot, State};
+use draco::quant::QFormat;
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::{NativeEngine, QuantEngine};
 use draco::spatial::DMat;
 use draco::util::bench::{time_auto, Table};
 use draco::util::json::{self, Json};
@@ -164,6 +173,102 @@ fn main() {
             ]));
         }
     }
+
+    // Serving-path rows: the quantized native backend, trajectory
+    // rollouts, and a multi-robot mixed batch through the registry
+    // coordinator (per-robot backends, channel dispatch included).
+    {
+        let mut add = |robot: &str, fname: &str, st: &draco::util::bench::Stats, batch: usize| {
+            let per_task_median = st.median_us() / batch as f64;
+            let tasks_s = st.throughput(batch);
+            t.row(&[
+                robot.to_string(),
+                fname.to_string(),
+                format!("{per_task_median:.2}"),
+                format!("{:.2}", st.mean_us() / batch as f64),
+                format!("{tasks_s:.0}"),
+            ]);
+            medians.insert((robot.to_string(), fname.to_string()), per_task_median);
+            rows_json.push(json::obj(vec![
+                ("robot", json::s(robot)),
+                ("fn", json::s(fname)),
+                ("median_us", json::num(per_task_median)),
+                ("mean_us", json::num(st.mean_us() / batch as f64)),
+                ("tasks_per_s", json::num(tasks_s)),
+            ]));
+        };
+
+        let flat_fd_inputs = |robot: &Robot, b: usize, seed: u64| -> Vec<Vec<f32>> {
+            let n = robot.dof();
+            let mut rng = Rng::new(seed);
+            let mut q = Vec::with_capacity(b * n);
+            let mut qd = Vec::with_capacity(b * n);
+            let mut u = Vec::with_capacity(b * n);
+            for _ in 0..b {
+                let s = State::random(robot, &mut rng);
+                q.extend(s.q.iter().map(|&x| x as f32));
+                qd.extend(s.qd.iter().map(|&x| x as f32));
+                u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+            }
+            vec![q, qd, u]
+        };
+
+        let iiwa = builtin_robot("iiwa").unwrap();
+        let atlas = builtin_robot("atlas").unwrap();
+
+        // Quantized native engine, batched FD at the paper's 24-bit
+        // format.
+        let inputs = flat_fd_inputs(&iiwa, BATCH, 2);
+        let mut qeng = QuantEngine::new(iiwa.clone(), ArtifactFn::Fd, BATCH, QFormat::new(12, 12));
+        let st = time_auto(target_ms, || {
+            black_box(qeng.run(&inputs).expect("quant fd batch"));
+        });
+        add("iiwa", "fd_quant64_ws", &st, BATCH);
+
+        // Trajectory rollout: 64 integrator steps per request through the
+        // workspace (per-task number below = per step).
+        let h = 64usize;
+        let n = iiwa.dof();
+        let mut rng = Rng::new(3);
+        let s0 = State::random(&iiwa, &mut rng);
+        let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+        let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+        let tau: Vec<f32> =
+            rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect();
+        let mut teng = NativeEngine::new(iiwa.clone(), ArtifactFn::Fd, 8);
+        let st = time_auto(target_ms, || {
+            black_box(teng.rollout(&q0, &qd0, &tau, 1e-3).expect("rollout"));
+        });
+        add("iiwa", "traj64_step_ws", &st, h);
+
+        // Multi-robot mixed batch: one registry coordinator serving iiwa
+        // (f64 native) and atlas (quantized 32-bit) concurrently; 64
+        // interleaved FD requests per iteration, dispatch + batching
+        // included.
+        let mut reg = RobotRegistry::new();
+        reg.register(iiwa.clone(), BackendKind::Native, 32)
+            .register(atlas.clone(), BackendKind::NativeQuant(QFormat::new(16, 16)), 32);
+        let coord = Coordinator::start_registry(&reg, 100);
+        let iiwa_inputs = flat_fd_inputs(&iiwa, 1, 4);
+        let atlas_inputs = flat_fd_inputs(&atlas, 1, 5);
+        let st = time_auto(target_ms, || {
+            let mut rxs = Vec::with_capacity(64);
+            for k in 0..64usize {
+                let (name, ops) = if k % 2 == 0 {
+                    ("iiwa", iiwa_inputs.clone())
+                } else {
+                    ("atlas", atlas_inputs.clone())
+                };
+                rxs.push(coord.submit_to(name, ArtifactFn::Fd, ops));
+            }
+            for rx in rxs {
+                black_box(rx.recv().expect("serve answer").expect("serve ok"));
+            }
+        });
+        add("mixed", "serve_fd_mixed64", &st, 64);
+        coord.shutdown();
+    }
+
     t.print("CPU hot paths (measured, single thread)");
 
     // Workspace-vs-allocating speedups (median-to-median ratio; >1 means

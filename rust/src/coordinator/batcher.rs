@@ -1,28 +1,58 @@
-//! Dynamic batcher: per-(function) worker threads that coalesce requests
-//! into engine-sized batches under a latency window.
+//! Dynamic batcher: per-route worker threads that coalesce requests into
+//! engine-sized batches under a latency window.
 //!
-//! Each route is backed by a [`BackendSpec`]: the native workspace engine
-//! (default — one [`NativeEngine`] and hence one `DynWorkspace` per
-//! worker thread) or, behind the `pjrt` feature, a compiled PJRT
-//! artifact. The batching loop is identical either way.
+//! Routes are keyed by **(robot, route)** so a single coordinator serves
+//! many registered robots concurrently — the multi-tenant operating model
+//! of the accelerator (one deployment, heterogeneous dynamics queries).
+//! Each route is backed by a [`BackendSpec`]: the native f64 workspace
+//! engine, the quantized fixed-point engine at a per-robot `QFormat`, a
+//! trajectory-rollout route driven through the workspace integrator, or
+//! (behind the `pjrt` feature) a compiled PJRT artifact. The batching
+//! loop is identical either way.
 
+use super::registry::RobotRegistry;
 use super::stats::{ServeStats, StatsInner};
 use crate::model::Robot;
+use crate::quant::QFormat;
 #[cfg(feature = "pjrt")]
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::artifact::ArtifactFn;
-use crate::runtime::native::NativeEngine;
+use crate::runtime::{DynamicsEngine, NativeEngine, QuantEngine};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// One request: flat f32 operands for a single task (each of length N,
-/// or N·N where applicable).
+/// One trajectory request: an initial state plus H torque rows, unrolled
+/// server-side through the workspace integrator in a single dispatch.
+#[derive(Debug, Clone)]
+pub struct TrajRequest {
+    /// Initial joint positions (length N).
+    pub q0: Vec<f32>,
+    /// Initial joint velocities (length N).
+    pub qd0: Vec<f32>,
+    /// H torque rows, row-major flat (length H·N).
+    pub tau: Vec<f32>,
+    /// Integration step [s].
+    pub dt: f64,
+}
+
+/// What a job carries: one step task or one trajectory rollout.
+pub enum JobPayload {
+    /// Flat f32 operands for a single step task (each of length N).
+    Step(Vec<Vec<f32>>),
+    /// A trajectory rollout request.
+    Traj(TrajRequest),
+}
+
+/// One queued request.
 pub struct Job {
-    pub operands: Vec<Vec<f32>>,
+    /// The request body.
+    pub payload: JobPayload,
+    /// When the request entered the coordinator (for latency stats).
     pub enqueued: Instant,
+    /// Channel the flat f32 result (or error) is sent back on.
     pub resp: Sender<JobResult>,
 }
 
@@ -34,53 +64,108 @@ enum Msg {
     Stop,
 }
 
+/// Which worker a request is routed to within one robot's route group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Route {
+    /// Single-step RBD function batches (RNEA / FD / M⁻¹).
+    Step(ArtifactFn),
+    /// Trajectory rollouts through the workspace integrator.
+    Traj,
+}
+
 /// How one route executes its batches.
 pub enum BackendSpec {
-    /// Native workspace engine: no artifacts, no external toolchain.
-    Native { robot: Robot, function: ArtifactFn, batch: usize },
+    /// Native f64 workspace engine: no artifacts, no external toolchain.
+    Native {
+        /// Robot served by this route.
+        robot: Robot,
+        /// RBD function this route evaluates.
+        function: ArtifactFn,
+        /// Batch size (requests coalesced per execution).
+        batch: usize,
+    },
+    /// Quantized fixed-point engine (`quant::qrbd` kernels) at a
+    /// per-robot format — precision as a serving knob.
+    NativeQuant {
+        /// Robot served by this route.
+        robot: Robot,
+        /// RBD function this route evaluates.
+        function: ArtifactFn,
+        /// Batch size (requests coalesced per execution).
+        batch: usize,
+        /// Fixed-point format every evaluation is rounded to.
+        fmt: QFormat,
+    },
+    /// Trajectory-rollout route: FD + semi-implicit Euler unrolled
+    /// server-side (quantized FD when `fmt` is set).
+    Trajectory {
+        /// Robot served by this route.
+        robot: Robot,
+        /// Rollouts coalesced per drain.
+        batch: usize,
+        /// Quantized FD format, or `None` for the f64 path.
+        fmt: Option<QFormat>,
+    },
     /// Compiled PJRT artifact (requires the `pjrt` feature + artifacts).
     #[cfg(feature = "pjrt")]
     Pjrt(ArtifactMeta),
 }
 
 impl BackendSpec {
-    pub fn function(&self) -> ArtifactFn {
+    /// Name of the robot this spec serves (the routing key).
+    pub fn robot_name(&self) -> &str {
         match self {
-            BackendSpec::Native { function, .. } => *function,
+            BackendSpec::Native { robot, .. }
+            | BackendSpec::NativeQuant { robot, .. }
+            | BackendSpec::Trajectory { robot, .. } => &robot.name,
             #[cfg(feature = "pjrt")]
-            BackendSpec::Pjrt(meta) => meta.function,
+            BackendSpec::Pjrt(meta) => &meta.robot,
+        }
+    }
+
+    /// The route this spec backs.
+    pub fn route(&self) -> Route {
+        match self {
+            BackendSpec::Native { function, .. } | BackendSpec::NativeQuant { function, .. } => {
+                Route::Step(*function)
+            }
+            BackendSpec::Trajectory { .. } => Route::Traj,
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt(meta) => Route::Step(meta.function),
         }
     }
 }
 
-/// Uniform executor interface the batching loop drives.
+/// Uniform executor interface the step-batching loop drives.
 trait BatchExecutor {
     fn batch(&self) -> usize;
     fn arity(&self) -> usize;
     fn n(&self) -> usize;
     fn out_per_task(&self) -> usize;
     /// Whether the executor's shapes are compiled-in (PJRT) and partial
-    /// batches must be padded to `batch()`. The native engine accepts
+    /// batches must be padded to `batch()`. The native engines accept
     /// any row count ≤ batch, so partial batches cost only the real
     /// tasks.
     fn pad_to_batch(&self) -> bool;
     fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String>;
 }
 
-struct NativeExecutor(NativeEngine);
+/// Adapter from the runtime [`DynamicsEngine`] trait (native f64 or
+/// quantized) to the batching loop.
+struct EngineExecutor(Box<dyn DynamicsEngine>);
 
-impl BatchExecutor for NativeExecutor {
+impl BatchExecutor for EngineExecutor {
     fn batch(&self) -> usize {
-        self.0.batch
+        self.0.batch()
     }
     fn arity(&self) -> usize {
-        self.0.function.arity()
+        self.0.function().arity()
     }
     fn n(&self) -> usize {
         self.0.n()
     }
     fn out_per_task(&self) -> usize {
-        self.0.expected_output_len() / self.0.batch
+        self.0.out_per_task()
     }
     fn pad_to_batch(&self) -> bool {
         false
@@ -120,9 +205,11 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
-/// Routing front-end: submit() → per-function worker.
+/// Routing front-end: `submit_to(robot, fn, …)` → per-(robot, function)
+/// worker; `submit_traj(robot, …)` → the robot's trajectory worker.
 pub struct Coordinator {
-    routes: BTreeMap<ArtifactFn, Sender<Msg>>,
+    routes: BTreeMap<(String, Route), Sender<Msg>>,
+    default_robot: Option<String>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
 }
@@ -130,29 +217,32 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start one worker per backend spec. `n` is the robot DOF (used by
     /// the PJRT path to define operand shapes); `window_us` is the
-    /// batching window (deadline to fill a batch).
+    /// batching window (deadline to fill a batch). The first spec's
+    /// robot becomes the default target of [`Coordinator::submit`].
     pub fn start(specs: Vec<BackendSpec>, n: usize, window_us: u64) -> Coordinator {
         let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let default_robot = specs.first().map(|s| s.robot_name().to_string());
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
         for spec in specs {
             let (tx, rx) = channel::<Msg>();
-            routes.insert(spec.function(), tx);
+            routes.insert((spec.robot_name().to_string(), spec.route()), tx);
             let st = Arc::clone(&stats);
             workers.push(std::thread::spawn(move || worker_loop(spec, n, window_us, rx, st)));
         }
-        Coordinator { routes, workers, stats }
+        Coordinator { routes, default_robot, workers, stats }
     }
 
     /// Start a native coordinator serving `functions` for one robot, one
-    /// worker (and one workspace) per function.
+    /// worker (and one workspace) per function, plus a trajectory route.
     pub fn start_native(
         robot: &Robot,
         functions: &[(ArtifactFn, usize)],
         window_us: u64,
     ) -> Coordinator {
         let n = robot.dof();
-        let specs = functions
+        let traj_batch = functions.iter().map(|&(_, b)| b).max().unwrap_or(8);
+        let mut specs: Vec<BackendSpec> = functions
             .iter()
             .map(|&(function, batch)| BackendSpec::Native {
                 robot: robot.clone(),
@@ -160,7 +250,15 @@ impl Coordinator {
                 batch,
             })
             .collect();
+        specs.push(BackendSpec::Trajectory { robot: robot.clone(), batch: traj_batch, fmt: None });
         Coordinator::start(specs, n, window_us)
+    }
+
+    /// Start a coordinator over a [`RobotRegistry`]: for every registered
+    /// robot, one worker per RBD function on the robot's chosen backend
+    /// plus one trajectory route.
+    pub fn start_registry(registry: &RobotRegistry, window_us: u64) -> Coordinator {
+        Coordinator::start(registry.specs(), 0, window_us)
     }
 
     /// Start a PJRT coordinator over compiled artifacts.
@@ -170,28 +268,70 @@ impl Coordinator {
         Coordinator::start(specs, n, window_us)
     }
 
-    /// Submit one task; returns the channel the result arrives on.
+    /// Submit one step task to the **default** robot (the first spec
+    /// passed to [`Coordinator::start`]); returns the channel the result
+    /// arrives on. Single-robot deployments can ignore routing entirely.
     pub fn submit(&self, function: ArtifactFn, operands: Vec<Vec<f32>>) -> Receiver<JobResult> {
+        match self.default_robot.clone() {
+            Some(name) => self.submit_to(&name, function, operands),
+            None => {
+                let (tx, rx) = channel();
+                let _ = tx.send(Err(format!("no executable for {}", function.name())));
+                rx
+            }
+        }
+    }
+
+    /// Submit one step task for a named robot.
+    pub fn submit_to(
+        &self,
+        robot: &str,
+        function: ArtifactFn,
+        operands: Vec<Vec<f32>>,
+    ) -> Receiver<JobResult> {
+        self.dispatch(robot, Route::Step(function), JobPayload::Step(operands))
+    }
+
+    /// Submit one trajectory rollout for a named robot. The response is
+    /// flat f32 of length `2·H·N`: H q-rows then H q̇-rows (see
+    /// [`NativeEngine::rollout`]).
+    pub fn submit_traj(&self, robot: &str, req: TrajRequest) -> Receiver<JobResult> {
+        self.dispatch(robot, Route::Traj, JobPayload::Traj(req))
+    }
+
+    fn dispatch(&self, robot: &str, route: Route, payload: JobPayload) -> Receiver<JobResult> {
         let (tx, rx) = channel();
-        match self.routes.get(&function) {
-            Some(route) => {
-                let job = Job { operands, enqueued: Instant::now(), resp: tx };
-                if route.send(Msg::Work(job)).is_err() {
-                    // Worker gone: report through the response channel by
-                    // dropping tx — recv() errors out on the caller side.
-                }
+        match self.routes.get(&(robot.to_string(), route)) {
+            Some(sender) => {
+                let job = Job { payload, enqueued: Instant::now(), resp: tx };
+                // If the worker is gone the send fails and tx is dropped
+                // with it — recv() errors out on the caller side.
+                let _ = sender.send(Msg::Work(job));
             }
             None => {
-                let _ = tx.send(Err(format!("no executable for {}", function.name())));
+                let what = match route {
+                    Route::Step(f) => format!("no route for robot '{robot}' / {}", f.name()),
+                    Route::Traj => format!("no trajectory route for robot '{robot}'"),
+                };
+                let _ = tx.send(Err(what));
             }
         }
         rx
     }
 
+    /// Names of the robots this coordinator routes for (sorted, deduped).
+    pub fn robots(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.routes.keys().map(|(r, _)| r.clone()).collect();
+        names.dedup();
+        names
+    }
+
+    /// Snapshot of the aggregate serving statistics.
     pub fn stats(&self) -> ServeStats {
         self.stats.lock().unwrap().snapshot()
     }
 
+    /// Stop every worker (flushing queued work) and join the threads.
     pub fn shutdown(self) {
         for (_, tx) in &self.routes {
             let _ = tx.send(Msg::Stop);
@@ -204,7 +344,7 @@ impl Coordinator {
 }
 
 /// Worker: owns its executor. PJRT handles are not `Send`, and the native
-/// engine's workspace is deliberately thread-local, so everything is
+/// engines' workspaces are deliberately thread-local, so everything is
 /// created inside the thread.
 fn worker_loop(
     spec: BackendSpec,
@@ -213,9 +353,23 @@ fn worker_loop(
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
 ) {
-    let mut exec: Box<dyn BatchExecutor> = match spec {
+    let _ = n; // used only by the pjrt arm
+    let window = Duration::from_micros(window_us);
+    match spec {
         BackendSpec::Native { robot, function, batch } => {
-            Box::new(NativeExecutor(NativeEngine::new(robot, function, batch)))
+            let exec = EngineExecutor(Box::new(NativeEngine::new(robot, function, batch)));
+            step_worker(Box::new(exec), window, rx, stats);
+        }
+        BackendSpec::NativeQuant { robot, function, batch, fmt } => {
+            let exec = EngineExecutor(Box::new(QuantEngine::new(robot, function, batch, fmt)));
+            step_worker(Box::new(exec), window, rx, stats);
+        }
+        BackendSpec::Trajectory { robot, batch, fmt } => {
+            let engine: Box<dyn DynamicsEngine> = match fmt {
+                Some(f) => Box::new(QuantEngine::new(robot, ArtifactFn::Fd, batch, f)),
+                None => Box::new(NativeEngine::new(robot, ArtifactFn::Fd, batch)),
+            };
+            traj_worker(engine, batch, window, rx, stats);
         }
         #[cfg(feature = "pjrt")]
         BackendSpec::Pjrt(meta) => {
@@ -233,41 +387,81 @@ fn worker_loop(
                     return;
                 }
             };
-            Box::new(PjrtExecutor { engine, _client: client })
+            step_worker(Box::new(PjrtExecutor { engine, _client: client }), window, rx, stats);
         }
-    };
-    let _ = n; // used only by the pjrt arm
-    let b = exec.batch();
-    let window = Duration::from_micros(window_us);
+    }
+}
 
+/// Step-batch loop: block for the first job, drain within the window,
+/// execute as one batch.
+fn step_worker(
+    mut exec: Box<dyn BatchExecutor>,
+    window: Duration,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    let b = exec.batch();
     let mut queue: Vec<Job> = Vec::with_capacity(b);
     loop {
-        // Block for the first job, then drain within the window.
         match rx.recv() {
             Ok(Msg::Work(j)) => queue.push(j),
             Ok(Msg::Stop) | Err(_) => break,
         }
-        let deadline = Instant::now() + window;
-        while queue.len() < b {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Work(j)) => queue.push(j),
-                Ok(Msg::Stop) => {
-                    flush(exec.as_mut(), &mut queue, &stats);
-                    return;
-                }
-                Err(_) => break,
-            }
+        if !drain_window(&rx, &mut queue, b, window) {
+            flush(exec.as_mut(), &mut queue, &stats);
+            return;
         }
         flush(exec.as_mut(), &mut queue, &stats);
     }
     flush(exec.as_mut(), &mut queue, &stats);
 }
 
-/// Execute the queued jobs as one padded batch and fan results out.
+/// Trajectory loop: drain rollout requests within the window and execute
+/// them back-to-back on one engine (one workspace, zero per-step
+/// dispatch).
+fn traj_worker(
+    mut engine: Box<dyn DynamicsEngine>,
+    cap: usize,
+    window: Duration,
+    rx: Receiver<Msg>,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    let cap = cap.max(1);
+    let mut queue: Vec<Job> = Vec::with_capacity(cap);
+    loop {
+        match rx.recv() {
+            Ok(Msg::Work(j)) => queue.push(j),
+            Ok(Msg::Stop) | Err(_) => break,
+        }
+        if !drain_window(&rx, &mut queue, cap, window) {
+            flush_traj(engine.as_mut(), &mut queue, &stats, cap);
+            return;
+        }
+        flush_traj(engine.as_mut(), &mut queue, &stats, cap);
+    }
+    flush_traj(engine.as_mut(), &mut queue, &stats, cap);
+}
+
+/// Collect further work until `cap` jobs are queued or the window
+/// expires. Returns `false` when the worker should flush and exit (Stop
+/// received or all senders gone).
+fn drain_window(rx: &Receiver<Msg>, queue: &mut Vec<Job>, cap: usize, window: Duration) -> bool {
+    let deadline = Instant::now() + window;
+    while queue.len() < cap {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(Msg::Work(j)) => queue.push(j),
+            Ok(Msg::Stop) => return false,
+            Err(_) => break,
+        }
+    }
+    true
+}
+
+/// Execute the queued step jobs as one batch and fan results out.
 fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) {
     if queue.is_empty() {
         return;
@@ -280,8 +474,10 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
     // of poisoning (or panicking) the whole assembled batch.
     let mut k = 0;
     while k < queue.len() {
-        let ok = queue[k].operands.len() == arity
-            && queue[k].operands.iter().all(|op| op.len() == n);
+        let ok = match &queue[k].payload {
+            JobPayload::Step(ops) => ops.len() == arity && ops.iter().all(|op| op.len() == n),
+            JobPayload::Traj(_) => false,
+        };
         if ok {
             k += 1;
         } else {
@@ -300,8 +496,10 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
     // (keeps the padded rows numerically benign).
     let mut inputs: Vec<Vec<f32>> = vec![Vec::with_capacity(b * n); arity];
     for job in queue.iter().take(fill) {
-        for (k, op) in job.operands.iter().enumerate().take(arity) {
-            inputs[k].extend_from_slice(op);
+        if let JobPayload::Step(ops) = &job.payload {
+            for (k, op) in ops.iter().enumerate().take(arity) {
+                inputs[k].extend_from_slice(op);
+            }
         }
     }
     if exec.pad_to_batch() {
@@ -338,6 +536,35 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
             }
         }
     }
+}
+
+/// Execute the queued trajectory rollouts back-to-back and fan results
+/// out.
+fn flush_traj(
+    engine: &mut dyn DynamicsEngine,
+    queue: &mut Vec<Job>,
+    stats: &Arc<Mutex<StatsInner>>,
+    cap: usize,
+) {
+    if queue.is_empty() {
+        return;
+    }
+    let fill = queue.len().min(cap) as f64 / cap as f64;
+    let t0 = Instant::now();
+    for job in queue.drain(..) {
+        let result = match &job.payload {
+            JobPayload::Traj(req) => {
+                engine.rollout(&req.q0, &req.qd0, &req.tau, req.dt).map_err(|e| e.0)
+            }
+            JobPayload::Step(_) => Err("step operands sent to a trajectory route".to_string()),
+        };
+        if result.is_ok() {
+            let wait_us = job.enqueued.elapsed().as_micros() as f64;
+            stats.lock().unwrap().record(wait_us);
+        }
+        let _ = job.resp.send(result);
+    }
+    stats.lock().unwrap().record_batch(fill, t0.elapsed().as_micros() as f64);
 }
 
 #[allow(dead_code)] // only reachable from the pjrt arm without the feature
@@ -387,6 +614,38 @@ mod tests {
         let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.0; 7]]);
         let res = rx.recv().expect("worker must answer even on failure");
         assert!(res.is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unknown_robot_errors_fast() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Rnea, 4)], 100);
+        let rx = coord.submit_to("panda", ArtifactFn::Rnea, vec![vec![0.0; 7]; 3]);
+        assert!(rx.recv().unwrap().is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn trajectory_route_answers() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Fd, 8)], 100);
+        let h = 5;
+        let req = TrajRequest {
+            q0: vec![0.1; n],
+            qd0: vec![0.0; n],
+            tau: vec![0.0; h * n],
+            dt: 1e-3,
+        };
+        let rx = coord.submit_traj("iiwa", req);
+        let out = rx.recv().expect("answer").expect("rollout ok");
+        assert_eq!(out.len(), 2 * h * n);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Malformed rollouts fail alone.
+        let bad = TrajRequest { q0: vec![0.0; n - 1], qd0: vec![0.0; n], tau: vec![0.0; n], dt: 1e-3 };
+        let rx = coord.submit_traj("iiwa", bad);
+        assert!(rx.recv().unwrap().is_err());
         coord.shutdown();
     }
 }

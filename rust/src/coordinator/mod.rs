@@ -5,94 +5,166 @@
 //! fixed-size batches per (robot, function) route, pads partial batches,
 //! and fans results back out.
 //!
-//! Two backends: the **native** workspace engine (default — no artifacts,
-//! no external toolchain; one allocation-free `DynWorkspace` per worker
-//! thread) and, behind the `pjrt` feature, AOT-compiled HLO artifacts
-//! executed through PJRT.
+//! Multi-tenancy comes from the [`RobotRegistry`]: one coordinator owns
+//! one engine + workspace pool per registered robot and routes jobs by
+//! robot name, with a per-robot backend choice — the f64 native engine,
+//! the quantized engine at a per-robot `QFormat`, or (behind the `pjrt`
+//! feature) AOT-compiled HLO artifacts executed through PJRT. Trajectory
+//! requests carry whole `(q₀, q̇₀, τ₀…τ_H)` rollouts and are unrolled
+//! server-side through the workspace integrator, amortizing dispatch
+//! over the horizon.
 //!
 //! Threading: PJRT client/executable handles are not `Send`, and the
-//! native workspace is deliberately thread-local, so each worker thread
-//! owns its own executor; requests cross threads through channels.
+//! native workspaces are deliberately thread-local, so each worker
+//! thread owns its own executor; requests cross threads through
+//! channels.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
+pub mod registry;
 pub mod stats;
 
-pub use batcher::{BackendSpec, Coordinator, Job, JobResult};
+pub use batcher::{BackendSpec, Coordinator, Job, JobPayload, JobResult, Route, TrajRequest};
+pub use registry::{BackendKind, RobotEntry, RobotRegistry, DEFAULT_QUANT_FORMAT};
 pub use stats::ServeStats;
 
-use crate::model::builtin_robot;
+use crate::model::State;
+use crate::quant::qrbd::quant_rnea;
 use crate::runtime::artifact::ArtifactFn;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
 /// `draco serve`: bring up the coordinator, push a synthetic workload
-/// through it, verify numerics against the reference implementation, and
-/// report latency/throughput. `--backend native` (default) serves from
-/// the workspace core; `--backend pjrt` needs artifacts + the feature.
+/// through it, verify numerics against the backend's reference
+/// implementation, and report latency/throughput.
+///
+/// * `--robots iiwa,atlas:quant[,hyq:quant@14.18]` — the registry spec:
+///   which robots this process serves and each robot's backend
+///   (`native` default, `quant` = fixed point; see
+///   [`RobotRegistry::from_cli_spec`]). `--robot NAME` remains as a
+///   single-robot shorthand.
+/// * `--backend native|pjrt` — `native` (default) serves the registry
+///   from the workspace cores; `pjrt` needs artifacts + the feature and
+///   is single-robot (`--robots`/`--traj` are native-only and warn if
+///   passed).
+/// * `--traj H` — additionally submit trajectory requests with an
+///   H-step horizon through each robot's rollout route (native
+///   backend).
+/// * `--requests N`, `--batch B`, `--window-us W`, `--dt S` — workload
+///   shape.
 pub fn serve_cli(args: &Args) -> i32 {
-    let robot_name = args.opt_or("robot", "iiwa").to_string();
     let backend = args.opt_or("backend", "native").to_string();
     let requests = args.opt_usize("requests", 512);
     let window_us = args.opt_usize("window-us", 200);
+    let batch = args.opt_usize("batch", 64);
 
-    let robot = match builtin_robot(&robot_name) {
-        Some(r) => r,
-        None => {
-            eprintln!("unknown robot '{robot_name}'");
-            return 2;
-        }
-    };
-
-    let coord = match backend.as_str() {
+    match backend.as_str() {
         "native" => {
-            let batch = args.opt_usize("batch", 64);
-            println!(
-                "serving {robot_name} natively (workspace core): rnea/fd/minv, batch {batch}"
-            );
-            Coordinator::start_native(
-                &robot,
-                &[
-                    (ArtifactFn::Rnea, batch),
-                    (ArtifactFn::Fd, batch),
-                    (ArtifactFn::Minv, batch),
-                ],
-                window_us as u64,
-            )
+            let spec = args
+                .opt("robots")
+                .map(str::to_string)
+                .unwrap_or_else(|| args.opt_or("robot", "iiwa").to_string());
+            let registry = match RobotRegistry::from_cli_spec(&spec, batch) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("bad --robots spec: {e}");
+                    return 2;
+                }
+            };
+            println!("serving {} robot(s), batch {batch}, window {window_us} µs:", registry.len());
+            for name in registry.names() {
+                let entry = registry.get(&name).expect("registered");
+                println!(
+                    "  {name}: {} DOF, backend {}",
+                    entry.robot.dof(),
+                    entry.backend.label()
+                );
+            }
+            let coord = Coordinator::start_registry(&registry, window_us as u64);
+            let traj = args.opt_usize("traj", 0);
+            let dt = args.opt_f64("dt", 1e-3);
+            run_native_workload(&coord, &registry, requests, traj, dt)
         }
-        "pjrt" => match start_pjrt(args, &robot_name, robot.dof(), window_us as u64) {
-            Ok(c) => c,
-            Err(code) => return code,
-        },
+        "pjrt" => {
+            // Multi-robot registries and trajectory routes are native-only.
+            if args.opt("robots").is_some() {
+                eprintln!("warning: --robots is ignored with --backend pjrt (use --robot NAME)");
+            }
+            if args.opt("traj").is_some() {
+                eprintln!("warning: --traj is ignored with --backend pjrt (native backend only)");
+            }
+            let robot_name = args.opt_or("robot", "iiwa").to_string();
+            let robot = match crate::model::builtin_robot(&robot_name) {
+                Some(r) => r,
+                None => {
+                    eprintln!("unknown robot '{robot_name}'");
+                    return 2;
+                }
+            };
+            match start_pjrt(args, &robot_name, robot.dof(), window_us as u64) {
+                Ok(coord) => {
+                    let mut reg = RobotRegistry::new();
+                    reg.register(robot, BackendKind::Native, batch);
+                    run_native_workload(&coord, &reg, requests, 0, 1e-3)
+                }
+                Err(code) => code,
+            }
+        }
         other => {
             eprintln!("unknown backend '{other}' (try native|pjrt)");
-            return 2;
+            2
         }
-    };
+    }
+}
 
-    // Synthetic control-loop workload: random in-limit states.
+/// Synthetic control-loop workload over every registered robot:
+/// round-robin RNEA step requests (validated against the backend's own
+/// reference kernel — f64 RNEA for native robots, `quant_rnea` for
+/// quantized ones), plus optional trajectory rollouts.
+fn run_native_workload(
+    coord: &Coordinator,
+    registry: &RobotRegistry,
+    requests: usize,
+    traj: usize,
+    dt: f64,
+) -> i32 {
+    let names = registry.names();
     let mut rng = Rng::new(2025);
-    let n = robot.dof();
     let t0 = Instant::now();
     let mut pending = Vec::new();
-    for _ in 0..requests {
-        let s = crate::model::State::random(&robot, &mut rng);
+    for k in 0..requests {
+        let name = &names[k % names.len()];
+        let entry = registry.get(name).expect("registered");
+        let n = entry.robot.dof();
+        let s = State::random(&entry.robot, &mut rng);
         let qdd: Vec<f64> = rng.vec_range(n, -2.0, 2.0);
         let ops: Vec<Vec<f32>> = vec![
             s.q.iter().map(|&x| x as f32).collect(),
             s.qd.iter().map(|&x| x as f32).collect(),
             qdd.iter().map(|&x| x as f32).collect(),
         ];
-        let rx = coord.submit(ArtifactFn::Rnea, ops.clone());
-        pending.push((s, qdd, rx));
+        let rx = coord.submit_to(name, ArtifactFn::Rnea, ops);
+        pending.push((name.clone(), s, qdd, rx));
     }
     let mut max_err = 0.0f64;
     let mut done = 0usize;
-    for (s, qdd, rx) in pending {
+    for (name, s, qdd, rx) in pending {
         match rx.recv() {
             Ok(Ok(out)) => {
                 done += 1;
-                let want = crate::dynamics::rnea(&robot, &s.q, &s.qd, &qdd, None);
+                let entry = registry.get(&name).expect("registered");
+                let n = entry.robot.dof();
+                // Reference on the f32-rounded operands the engine saw,
+                // through the same kernel the backend runs.
+                let qr: Vec<f64> = s.q.iter().map(|&x| x as f32 as f64).collect();
+                let qdr: Vec<f64> = s.qd.iter().map(|&x| x as f32 as f64).collect();
+                let ur: Vec<f64> = qdd.iter().map(|&x| x as f32 as f64).collect();
+                let want = match entry.backend {
+                    BackendKind::Native => crate::dynamics::rnea(&entry.robot, &qr, &qdr, &ur, None),
+                    BackendKind::NativeQuant(fmt) => quant_rnea(&entry.robot, &qr, &qdr, &ur, fmt),
+                };
                 for i in 0..n {
                     let scale = 1.0f64.max(want[i].abs());
                     max_err = max_err.max((out[i] as f64 - want[i]).abs() / scale);
@@ -122,13 +194,53 @@ pub fn serve_cli(args: &Args) -> i32 {
         st.p50_latency_us,
         st.p95_latency_us
     );
-    println!("max relative error vs native f64 RNEA: {max_err:.2e}");
-    coord.shutdown();
+    println!("max relative error vs backend reference kernels: {max_err:.2e}");
+    let mut code = 0;
     if max_err > 1e-3 {
         eprintln!("NUMERIC MISMATCH between served and reference implementation");
-        return 1;
+        code = 1;
     }
-    0
+
+    if traj > 0 && code == 0 {
+        let t1 = Instant::now();
+        let mut traj_pending = Vec::new();
+        for name in &names {
+            let entry = registry.get(name).expect("registered");
+            let n = entry.robot.dof();
+            let s = State::random(&entry.robot, &mut rng);
+            let req = TrajRequest {
+                q0: s.q.iter().map(|&x| x as f32).collect(),
+                qd0: s.qd.iter().map(|&x| x as f32).collect(),
+                tau: rng.vec_range(traj * n, -2.0, 2.0).iter().map(|&x| x as f32).collect(),
+                dt,
+            };
+            traj_pending.push((name.clone(), n, coord.submit_traj(name, req)));
+        }
+        for (name, n, rx) in traj_pending {
+            match rx.recv() {
+                Ok(Ok(out)) if out.len() == 2 * traj * n && out.iter().all(|x| x.is_finite()) => {
+                    println!(
+                        "trajectory {name}: H={traj} rollout ok ({} samples, {:.1} ms)",
+                        out.len(),
+                        t1.elapsed().as_secs_f64() * 1e3
+                    );
+                }
+                Ok(Ok(out)) => {
+                    eprintln!("trajectory {name}: malformed response ({} samples)", out.len());
+                    code = 1;
+                }
+                Ok(Err(e)) => {
+                    eprintln!("trajectory {name} failed: {e}");
+                    code = 1;
+                }
+                Err(e) => {
+                    eprintln!("trajectory {name} dropped: {e}");
+                    code = 1;
+                }
+            }
+        }
+    }
+    code
 }
 
 #[cfg(feature = "pjrt")]

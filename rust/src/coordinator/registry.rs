@@ -1,0 +1,230 @@
+//! Multi-robot serving registry: which robots a coordinator serves and
+//! with which backend.
+//!
+//! DRACO's scalability claim is "across various robot types"; the
+//! registry is the serving-side realization — one `draco serve` process
+//! owns one engine + workspace pool per registered robot and routes jobs
+//! by robot name, instead of one robot per process. Each entry also
+//! picks the robot's execution backend: the f64 native engine or the
+//! quantized engine at a per-robot `QFormat` (precision as a serving
+//! knob, per the paper's precision-aware co-design).
+
+use super::batcher::BackendSpec;
+use crate::model::{builtin_robot, Robot};
+use crate::quant::QFormat;
+use crate::runtime::artifact::ArtifactFn;
+
+/// Default fixed-point format for `:quant` registry entries that do not
+/// name one: the paper's 24-bit (12 int / 12 frac) DSP-friendly format.
+pub const DEFAULT_QUANT_FORMAT: QFormat = QFormat::new(12, 12);
+
+/// Which execution backend serves a registered robot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// f64 workspace engine (the default).
+    Native,
+    /// Fixed-point engine at this format (`quant::qrbd` kernels).
+    NativeQuant(QFormat),
+}
+
+impl BackendKind {
+    /// Human-readable label for tables and logs.
+    pub fn label(&self) -> String {
+        match self {
+            BackendKind::Native => "native".to_string(),
+            BackendKind::NativeQuant(fmt) => format!("native-quant {}", fmt.label()),
+        }
+    }
+}
+
+/// One registered robot: the model, its backend, and its batch size.
+#[derive(Debug, Clone)]
+pub struct RobotEntry {
+    /// The robot model served under its `robot.name`.
+    pub robot: Robot,
+    /// Execution backend for every route of this robot.
+    pub backend: BackendKind,
+    /// Batch size for the robot's step routes (and rollout drain cap).
+    pub batch: usize,
+}
+
+/// Registry of robots one coordinator serves, keyed by robot name.
+/// Insertion order is preserved: the first registered robot is the
+/// coordinator's default target for [`super::Coordinator::submit`].
+#[derive(Debug, Clone, Default)]
+pub struct RobotRegistry {
+    entries: Vec<RobotEntry>,
+}
+
+impl RobotRegistry {
+    /// Empty registry.
+    pub fn new() -> RobotRegistry {
+        RobotRegistry::default()
+    }
+
+    /// Register (or replace) a robot under its model name.
+    pub fn register(&mut self, robot: Robot, backend: BackendKind, batch: usize) -> &mut Self {
+        assert!(batch > 0, "batch must be positive");
+        let entry = RobotEntry { robot, backend, batch };
+        match self.entries.iter_mut().find(|e| e.robot.name == entry.robot.name) {
+            Some(slot) => *slot = entry,
+            None => self.entries.push(entry),
+        }
+        self
+    }
+
+    /// Look a registered robot up by name.
+    pub fn get(&self, name: &str) -> Option<&RobotEntry> {
+        self.entries.iter().find(|e| e.robot.name == name)
+    }
+
+    /// Registered robot names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.iter().map(|e| e.robot.name.clone()).collect()
+    }
+
+    /// Number of registered robots.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Expand the registry into backend specs: for every robot (in
+    /// registration order, so the first robot becomes the coordinator's
+    /// default), one step route per RBD function (RNEA / FD / M⁻¹) on
+    /// the robot's backend, plus one trajectory route.
+    pub fn specs(&self) -> Vec<BackendSpec> {
+        let mut specs = Vec::with_capacity(self.entries.len() * 4);
+        for entry in &self.entries {
+            for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+                specs.push(match entry.backend {
+                    BackendKind::Native => BackendSpec::Native {
+                        robot: entry.robot.clone(),
+                        function,
+                        batch: entry.batch,
+                    },
+                    BackendKind::NativeQuant(fmt) => BackendSpec::NativeQuant {
+                        robot: entry.robot.clone(),
+                        function,
+                        batch: entry.batch,
+                        fmt,
+                    },
+                });
+            }
+            specs.push(BackendSpec::Trajectory {
+                robot: entry.robot.clone(),
+                batch: entry.batch,
+                fmt: match entry.backend {
+                    BackendKind::Native => None,
+                    BackendKind::NativeQuant(fmt) => Some(fmt),
+                },
+            });
+        }
+        specs
+    }
+
+    /// Build a registry from a CLI spec: a comma-separated list of
+    /// entries `name[:native|:quant[@INT.FRAC]]`, resolved against the
+    /// builtin robots. Examples:
+    ///
+    /// * `iiwa` — one robot, f64 native backend;
+    /// * `iiwa,atlas:quant` — two robots, atlas quantized at the default
+    ///   24-bit format ([`DEFAULT_QUANT_FORMAT`]);
+    /// * `hyq:quant@14.18` — quantized at Q14.18.
+    pub fn from_cli_spec(spec: &str, batch: usize) -> Result<RobotRegistry, String> {
+        let mut reg = RobotRegistry::new();
+        for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (name, backend_str) = match entry.split_once(':') {
+                Some((n, b)) => (n.trim(), Some(b.trim())),
+                None => (entry, None),
+            };
+            let robot = builtin_robot(name)
+                .ok_or_else(|| format!("unknown robot '{name}' (try iiwa|hyq|atlas|baxter)"))?;
+            let backend = match backend_str {
+                None | Some("native") => BackendKind::Native,
+                Some(b) => {
+                    let rest = b
+                        .strip_prefix("quant")
+                        .ok_or_else(|| format!("unknown backend '{b}' (try native|quant[@I.F])"))?;
+                    let fmt = match rest.strip_prefix('@') {
+                        None if rest.is_empty() => DEFAULT_QUANT_FORMAT,
+                        Some(f) => parse_qformat(f)?,
+                        None => {
+                            return Err(format!("unknown backend '{b}' (try native|quant[@I.F])"))
+                        }
+                    };
+                    BackendKind::NativeQuant(fmt)
+                }
+            };
+            reg.register(robot, backend, batch);
+        }
+        if reg.is_empty() {
+            return Err("no robots given".to_string());
+        }
+        Ok(reg)
+    }
+}
+
+/// Parse `INT.FRAC` (e.g. `12.14`) into a [`QFormat`].
+fn parse_qformat(s: &str) -> Result<QFormat, String> {
+    let (i, f) = s.split_once('.').ok_or_else(|| format!("bad Q-format '{s}' (want INT.FRAC)"))?;
+    let int_bits: u32 = i.parse().map_err(|_| format!("bad integer bits in '{s}'"))?;
+    let frac_bits: u32 = f.parse().map_err(|_| format!("bad fractional bits in '{s}'"))?;
+    if int_bits == 0 || int_bits + frac_bits > 53 {
+        return Err(format!("unsupported Q-format '{s}' (need 0 < INT and INT+FRAC ≤ 53)"));
+    }
+    Ok(QFormat::new(int_bits, frac_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Route;
+
+    #[test]
+    fn registry_expands_routes_per_robot() {
+        let mut reg = RobotRegistry::new();
+        reg.register(builtin_robot("iiwa").unwrap(), BackendKind::Native, 16)
+            .register(builtin_robot("atlas").unwrap(), BackendKind::NativeQuant(QFormat::new(12, 14)), 8);
+        assert_eq!(reg.len(), 2);
+        let specs = reg.specs();
+        // 3 step routes + 1 trajectory route per robot.
+        assert_eq!(specs.len(), 8);
+        let atlas_traj = specs
+            .iter()
+            .filter(|s| s.robot_name() == "atlas" && s.route() == Route::Traj)
+            .count();
+        assert_eq!(atlas_traj, 1);
+    }
+
+    #[test]
+    fn cli_spec_parses_backends() {
+        let reg = RobotRegistry::from_cli_spec("iiwa, atlas:quant,hyq:quant@14.18", 32).unwrap();
+        // Registration order is preserved — the first listed robot is
+        // the coordinator's default submit target.
+        assert_eq!(reg.names(), vec!["iiwa", "atlas", "hyq"]);
+        assert_eq!(reg.get("iiwa").unwrap().backend, BackendKind::Native);
+        assert_eq!(
+            reg.get("atlas").unwrap().backend,
+            BackendKind::NativeQuant(DEFAULT_QUANT_FORMAT)
+        );
+        assert_eq!(
+            reg.get("hyq").unwrap().backend,
+            BackendKind::NativeQuant(QFormat::new(14, 18))
+        );
+    }
+
+    #[test]
+    fn cli_spec_rejects_garbage() {
+        assert!(RobotRegistry::from_cli_spec("", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("panda", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("iiwa:fp8", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("iiwa:quant@twelve.12", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("iiwa:quant@0.12", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("iiwa:quant@40.40", 32).is_err());
+    }
+}

@@ -1,16 +1,22 @@
 //! Serving statistics: request latency distribution and batch fill.
 
+/// Mutable accumulator the workers feed; shared behind a mutex.
 #[derive(Debug, Default)]
 pub struct StatsInner {
+    /// Requests answered successfully.
     pub completed: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Sum of per-batch fill fractions (for the mean).
     pub fill_sum: f64,
+    /// Sum of per-batch execution times [µs].
     pub exec_us_sum: f64,
     /// Request latencies [µs]; bounded reservoir (first 65536).
     pub latencies_us: Vec<f64>,
 }
 
 impl StatsInner {
+    /// Record one completed request's queue-to-answer latency.
     pub fn record(&mut self, latency_us: f64) {
         self.completed += 1;
         if self.latencies_us.len() < 65536 {
@@ -18,12 +24,14 @@ impl StatsInner {
         }
     }
 
+    /// Record one executed batch (fill fraction and execution time).
     pub fn record_batch(&mut self, fill: f64, exec_us: f64) {
         self.batches += 1;
         self.fill_sum += fill;
         self.exec_us_sum += exec_us;
     }
 
+    /// Freeze the current counters into an immutable snapshot.
     pub fn snapshot(&self) -> ServeStats {
         let mut lat = self.latencies_us.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -52,11 +60,17 @@ impl StatsInner {
 /// Immutable snapshot for reporting.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeStats {
+    /// Requests answered successfully.
     pub completed: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Mean batch fill fraction (1.0 = every batch full).
     pub mean_fill: f64,
+    /// Mean per-batch execution time [µs].
     pub mean_exec_us: f64,
+    /// Median request latency [µs].
     pub p50_latency_us: f64,
+    /// 95th-percentile request latency [µs].
     pub p95_latency_us: f64,
 }
 

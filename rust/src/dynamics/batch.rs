@@ -53,7 +53,7 @@ impl BatchOutput {
 }
 
 /// Evaluate one task into a fresh output, reusing `ws` for all scratch.
-fn eval_one(
+pub(crate) fn eval_one(
     robot: &Robot,
     kernel: BatchKernel,
     ws: &mut DynWorkspace,
@@ -86,9 +86,14 @@ pub fn eval_batch(robot: &Robot, kernel: BatchKernel, tasks: &[BatchTask]) -> Ve
     tasks.iter().map(|t| eval_one(robot, kernel, &mut ws, t)).collect()
 }
 
-/// Evaluate a batch across `threads` worker threads, one workspace per
-/// thread. Tasks are split into contiguous chunks so outputs land in
-/// task order without any post-hoc sort.
+/// Evaluate a batch across the **persistent** worker pool
+/// ([`super::pool::WorkerPool`]), split into at most `threads` contiguous
+/// chunks so outputs land in task order without any post-hoc sort.
+///
+/// Earlier revisions spawned fresh threads per batch via
+/// `std::thread::scope`; the pool removes that per-batch respawn from
+/// the serving hot path. Results are identical to [`eval_batch`] (same
+/// kernels, one workspace per worker).
 pub fn eval_batch_par(
     robot: &Robot,
     kernel: BatchKernel,
@@ -99,19 +104,7 @@ pub fn eval_batch_par(
     if threads <= 1 {
         return eval_batch(robot, kernel, tasks);
     }
-    let chunk = tasks.len().div_ceil(threads);
-    let mut out: Vec<BatchOutput> = vec![BatchOutput::Vector(Vec::new()); tasks.len()];
-    std::thread::scope(|scope| {
-        for (task_chunk, out_chunk) in tasks.chunks(chunk).zip(out.chunks_mut(chunk)) {
-            scope.spawn(move || {
-                let mut ws = DynWorkspace::new(robot);
-                for (task, slot) in task_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *slot = eval_one(robot, kernel, &mut ws, task);
-                }
-            });
-        }
-    });
-    out
+    super::pool::WorkerPool::global().eval(robot, kernel, tasks, threads)
 }
 
 #[cfg(test)]

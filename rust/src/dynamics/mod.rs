@@ -9,10 +9,12 @@ pub mod deriv;
 pub mod fd;
 pub mod kinematics;
 pub mod minv;
+pub mod pool;
 pub mod rnea;
 pub mod workspace;
 
 pub use batch::{eval_batch, eval_batch_par, BatchKernel, BatchOutput, BatchTask};
+pub use pool::WorkerPool;
 pub use crba::{crba, crba_into};
 pub use deriv::{fd_derivatives, rnea_derivatives};
 pub use fd::{aba, aba_into, fd, AbaScratch};

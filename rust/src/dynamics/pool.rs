@@ -1,0 +1,280 @@
+//! Persistent worker pool for batched dynamics evaluation.
+//!
+//! `eval_batch_par` used to spawn fresh threads per batch via
+//! `std::thread::scope`; at serving rates the respawn cost (tens of µs
+//! per thread, every batch) dwarfs small-robot kernel time. The pool
+//! keeps a fixed set of workers alive for the process lifetime — the CPU
+//! analogue of the accelerator's resident RTP pipelines, which exist
+//! once and have tasks streamed through them.
+//!
+//! Work items are contiguous chunks of a shared task slice
+//! (`Arc<Vec<BatchTask>>`), pulled from one injector queue; each worker
+//! caches the `DynWorkspace` for the robot it saw last (compared by
+//! `Arc` identity), so all chunks of one batch reuse a single workspace
+//! per worker with no rebuild.
+
+use super::batch::{eval_batch, BatchKernel, BatchOutput, BatchTask};
+use super::workspace::DynWorkspace;
+use crate::model::Robot;
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One chunk of a batch, evaluated by whichever worker pulls it first.
+struct PoolJob {
+    robot: Arc<Robot>,
+    kernel: BatchKernel,
+    tasks: Arc<Vec<BatchTask>>,
+    range: Range<usize>,
+    /// (chunk ordinal, outputs or panic message) back to the caller.
+    out: Sender<(usize, Result<Vec<BatchOutput>, String>)>,
+    ordinal: usize,
+}
+
+/// A fixed set of persistent worker threads evaluating dynamics batches.
+///
+/// Workers exit when the pool (and every in-flight sender clone) is
+/// dropped; the global instance lives for the process lifetime.
+pub struct WorkerPool {
+    injector: Mutex<Sender<PoolJob>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` persistent workers.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<PoolJob>();
+        let shared: Arc<Mutex<Receiver<PoolJob>>> = Arc::new(Mutex::new(rx));
+        for _ in 0..threads {
+            let q = Arc::clone(&shared);
+            // Detached: each worker exits when every sender is gone.
+            std::thread::spawn(move || worker(q));
+        }
+        WorkerPool { injector: Mutex::new(tx), threads }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The process-wide pool, sized to the machine's parallelism; created
+    /// on first use.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let threads =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            WorkerPool::new(threads)
+        })
+    }
+
+    /// Evaluate `tasks` split into at most `max_chunks` contiguous chunks
+    /// across the pool. Outputs are returned in task order; results are
+    /// identical to [`eval_batch`] (same kernels, same workspace
+    /// semantics).
+    pub fn eval(
+        &self,
+        robot: &Robot,
+        kernel: BatchKernel,
+        tasks: &[BatchTask],
+        max_chunks: usize,
+    ) -> Vec<BatchOutput> {
+        if tasks.is_empty() {
+            return Vec::new();
+        }
+        let chunks = max_chunks.max(1).min(self.threads).min(tasks.len());
+        if chunks <= 1 {
+            return eval_batch(robot, kernel, tasks);
+        }
+        let robot = Arc::new(robot.clone());
+        let tasks = Arc::new(tasks.to_vec());
+        let chunk = tasks.len().div_ceil(chunks);
+        let (tx, rx) = channel();
+        let mut sent = 0usize;
+        {
+            let injector = self.injector.lock().unwrap();
+            let mut start = 0;
+            while start < tasks.len() {
+                let end = (start + chunk).min(tasks.len());
+                injector
+                    .send(PoolJob {
+                        robot: Arc::clone(&robot),
+                        kernel,
+                        tasks: Arc::clone(&tasks),
+                        range: start..end,
+                        out: tx.clone(),
+                        ordinal: sent,
+                    })
+                    .expect("worker pool alive");
+                sent += 1;
+                start = end;
+            }
+        }
+        drop(tx);
+        let mut parts: Vec<Option<Vec<BatchOutput>>> = (0..sent).map(|_| None).collect();
+        let mut panic_msg: Option<String> = None;
+        for _ in 0..sent {
+            let (ordinal, outs) = rx.recv().expect("pool worker answered");
+            match outs {
+                Ok(outs) => parts[ordinal] = Some(outs),
+                Err(msg) => panic_msg = Some(msg),
+            }
+        }
+        // Propagate task panics to the caller (as the old scoped-thread
+        // implementation did via join) — the workers themselves survive.
+        if let Some(msg) = panic_msg {
+            panic!("worker pool task panicked: {msg}");
+        }
+        parts.into_iter().flat_map(|p| p.expect("every chunk answered")).collect()
+    }
+}
+
+/// Whether a workspace built for `a` can serve `b`: every buffer in
+/// [`DynWorkspace`] is sized from the DOF and the precomputed topology
+/// column lists depend only on the parent structure, so equal parents ⇒
+/// reusable workspace (inertias/limits don't matter — they are read from
+/// the robot per task).
+fn same_structure(a: &Robot, b: &Robot) -> bool {
+    a.dof() == b.dof()
+        && a.links.iter().zip(&b.links).all(|(x, y)| x.parent == y.parent)
+}
+
+/// Worker loop: pull chunks from the shared queue until the pool drops.
+fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
+    // Workspace cached by robot structure: `Arc::ptr_eq` is the fast
+    // path (all chunks of one `eval` call share the robot Arc); the
+    // structural check keeps the cache warm across successive batches
+    // for the same robot, which is the serving steady state.
+    let mut cached: Option<(Arc<Robot>, DynWorkspace)> = None;
+    loop {
+        let job = {
+            let rx = queue.lock().unwrap();
+            rx.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => return, // pool dropped
+        };
+        let rebuild = match &cached {
+            Some((robot, _)) => {
+                !Arc::ptr_eq(robot, &job.robot) && !same_structure(robot, &job.robot)
+            }
+            None => true,
+        };
+        if rebuild {
+            cached = Some((Arc::clone(&job.robot), DynWorkspace::new(&job.robot)));
+        } else if let Some((robot, _)) = &mut cached {
+            // Remember the newest Arc so the fast path keeps hitting.
+            *robot = Arc::clone(&job.robot);
+        }
+        let (_, ws) = cached.as_mut().expect("workspace cached above");
+        // Contain task panics (malformed tasks assert inside the
+        // kernels): the caller gets the panic re-raised by `eval`, but
+        // this worker — shared process-wide — stays alive for later
+        // batches. AssertUnwindSafe is sound because the workspace is
+        // dropped below on panic and kernels overwrite it per task
+        // anyway.
+        let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            job.tasks[job.range.clone()]
+                .iter()
+                .map(|t| super::batch::eval_one(&job.robot, job.kernel, ws, t))
+                .collect::<Vec<BatchOutput>>()
+        }));
+        let outs = match outs {
+            Ok(outs) => Ok(outs),
+            Err(p) => {
+                cached = None; // discard possibly half-written workspace
+                Err(panic_message(&p))
+            }
+        };
+        // The caller may have gone away (it never does today — eval()
+        // blocks); dropping the result is then harmless.
+        let _ = job.out.send((job.ordinal, outs));
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    fn random_tasks(robot: &Robot, count: usize, seed: u64) -> Vec<BatchTask> {
+        let n = robot.dof();
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let s = State::random(robot, &mut rng);
+                BatchTask { q: s.q, qd: s.qd, u: rng.vec_range(n, -8.0, 8.0) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_single_thread_bitwise() {
+        let pool = WorkerPool::new(3);
+        let robot = builtin::iiwa();
+        let tasks = random_tasks(&robot, 25, 900);
+        let single = eval_batch(&robot, BatchKernel::Fd, &tasks);
+        for chunks in [1, 2, 3, 16] {
+            let par = pool.eval(&robot, BatchKernel::Fd, &tasks, chunks);
+            assert_eq!(par.len(), single.len());
+            for (a, b) in single.iter().zip(&par) {
+                assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_robot_switches() {
+        let pool = WorkerPool::new(2);
+        for (robot, seed) in [(builtin::iiwa(), 901), (builtin::hyq(), 902), (builtin::iiwa(), 903)]
+        {
+            let tasks = random_tasks(&robot, 9, seed);
+            let got = pool.eval(&robot, BatchKernel::Rnea, &tasks, 2);
+            let want = eval_batch(&robot, BatchKernel::Rnea, &tasks);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn pool_contains_task_panics() {
+        let pool = WorkerPool::new(2);
+        let robot = builtin::iiwa();
+        let mut tasks = random_tasks(&robot, 4, 905);
+        tasks[2].q.truncate(2); // malformed: the kernel asserts on length
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.eval(&robot, BatchKernel::Rnea, &tasks, 2)
+        }));
+        assert!(res.is_err(), "malformed task must propagate a panic to the caller");
+        // The workers survive: a healthy batch still evaluates afterwards.
+        let good = random_tasks(&robot, 6, 906);
+        assert_eq!(pool.eval(&robot, BatchKernel::Rnea, &good, 2).len(), 6);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_alive() {
+        let p1 = WorkerPool::global();
+        let p2 = WorkerPool::global();
+        assert!(std::ptr::eq(p1, p2));
+        assert!(p1.threads() >= 1);
+        let robot = builtin::iiwa();
+        let tasks = random_tasks(&robot, 5, 904);
+        assert_eq!(p1.eval(&robot, BatchKernel::Fd, &tasks, 4).len(), 5);
+    }
+}

@@ -13,9 +13,12 @@
 //! * [`accel`] — the FPGA accelerator cycle model (RTP pipelines, division
 //!   deferring, inter-module DSP reuse) used to regenerate the paper's
 //!   evaluation figures.
-//! * [`runtime`] / [`coordinator`] — the serving path: dynamic batching
-//!   over the native workspace engine (default), or AOT-compiled HLO
-//!   artifacts via PJRT behind the `pjrt` feature.
+//! * [`runtime`] / [`coordinator`] — the serving path: a multi-robot
+//!   registry routing to per-robot backends (the f64 native workspace
+//!   engine, the quantized fixed-point engine at a per-robot `QFormat`,
+//!   or AOT-compiled HLO artifacts via PJRT behind the `pjrt` feature),
+//!   with dynamic batching and server-side trajectory rollouts. See
+//!   `docs/architecture.md` and `docs/serving.md`.
 //! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).
 
 pub mod accel;

@@ -10,3 +10,4 @@ pub mod qrbd;
 pub mod search;
 
 pub use qformat::QFormat;
+pub use qrbd::QuantScratch;

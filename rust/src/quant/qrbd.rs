@@ -3,6 +3,21 @@
 //! intermediate spatial quantity are rounded to the target Q-format after
 //! each operation group — mirroring what the fixed-point datapath
 //! computes and therefore how errors propagate (paper §III-C, Fig. 5).
+//!
+//! Two entry styles exist for each function:
+//!
+//! * allocating (`quant_rnea`, `quant_minv`, `quant_fd`) — convenient
+//!   one-shot calls used by the analyzer and the bit-width search;
+//! * workspace (`QuantScratch::{rnea_into, minv_into, fd_into}`) — the
+//!   serving hot path. A [`QuantScratch`] is the quantized counterpart of
+//!   [`crate::dynamics::DynWorkspace`]: every buffer any quantized kernel
+//!   needs (the kinematic cache, the per-column Minv propagation state,
+//!   staging for quantized inputs) is allocated once per (robot DOF,
+//!   worker thread) and overwritten per task, so the quantized native
+//!   backend runs allocation-free exactly like the f64 one.
+//!
+//! The allocating functions are thin wrappers over a fresh scratch, so
+//! both styles are numerically identical bit for bit.
 
 use super::qformat::QFormat;
 use crate::dynamics::kinematics::Kin;
@@ -47,16 +62,14 @@ impl Q {
     }
 }
 
-/// Quantized kinematics: joint transforms with quantized entries.
-/// Returns the same Kin shape the exact algorithms use; velocities are
-/// quantized per step.
-pub fn quant_kin(robot: &Robot, q: &[f64], qd: &[f64], ctx: &Q) -> Kin {
+/// Recompute `kin` in place for an **already quantized** state
+/// (`qq`, `qdq`): joint transforms with quantized entries (the ᵢX_λ
+/// matrices of §II-A as stored in BRAM/LUTs) and link velocities
+/// re-propagated in quantized arithmetic. Allocation-free counterpart of
+/// [`quant_kin`].
+pub fn quant_kin_into(robot: &Robot, qq: &[f64], qdq: &[f64], ctx: &Q, kin: &mut Kin) {
     let n = robot.dof();
-    let qq = ctx.vec(q);
-    let qdq = ctx.vec(qd);
-    let mut kin = Kin::new(robot, &qq, &qdq);
-    // Quantize the transform entries (the ᵢX_λ matrices of §II-A) and
-    // re-propagate velocities in quantized arithmetic.
+    kin.recompute(robot, qq, qdq);
     for i in 0..n {
         for r in 0..3 {
             for c in 0..3 {
@@ -78,10 +91,246 @@ pub fn quant_kin(robot: &Robot, q: &[f64], qd: &[f64], ctx: &Q) -> Kin {
             None => ctx.sv(&vj),
         };
     }
+}
+
+/// Quantized kinematics: joint transforms with quantized entries.
+/// Returns the same Kin shape the exact algorithms use; velocities are
+/// quantized per step. Allocating wrapper over [`quant_kin_into`].
+pub fn quant_kin(robot: &Robot, q: &[f64], qd: &[f64], ctx: &Q) -> Kin {
+    let mut kin = Kin::empty(robot.dof());
+    quant_kin_into(robot, &ctx.vec(q), &ctx.vec(qd), ctx, &mut kin);
     kin
 }
 
+/// Preallocated buffers for the quantized kernels — the fixed-point
+/// counterpart of [`crate::dynamics::DynWorkspace`]. One scratch serves
+/// one robot DOF; `new` sizes every buffer so `rnea_into` / `minv_into` /
+/// `fd_into` perform zero heap allocation per task.
+#[derive(Debug, Clone)]
+pub struct QuantScratch {
+    n: usize,
+    /// Quantized kinematic cache, recomputed in place per task.
+    kin: Kin,
+    // Quantized-input staging.
+    qq: Vec<f64>,
+    qdq: Vec<f64>,
+    uq: Vec<f64>,
+    zero: Vec<f64>,
+    // RNEA sweeps: link accelerations and forces.
+    a: Vec<SV>,
+    f: Vec<SV>,
+    // Minv articulated sweep.
+    ia: Vec<M6>,
+    u: Vec<SV>,
+    dinv: Vec<f64>,
+    // Minv per-(link, column) force / acceleration propagation.
+    fcol: Vec<Vec<SV>>,
+    acol: Vec<Vec<SV>>,
+    // FD composition byproducts.
+    bias: Vec<f64>,
+    rhs: Vec<f64>,
+    mi: DMat,
+}
+
+impl QuantScratch {
+    /// Allocate every buffer for an `n`-DOF robot.
+    pub fn new(n: usize) -> QuantScratch {
+        QuantScratch {
+            n,
+            kin: Kin::empty(n),
+            qq: vec![0.0; n],
+            qdq: vec![0.0; n],
+            uq: vec![0.0; n],
+            zero: vec![0.0; n],
+            a: vec![SV::ZERO; n],
+            f: vec![SV::ZERO; n],
+            ia: vec![[[0.0; 6]; 6]; n],
+            u: vec![SV::ZERO; n],
+            dinv: vec![0.0; n],
+            fcol: vec![vec![SV::ZERO; n]; n],
+            acol: vec![vec![SV::ZERO; n]; n],
+            bias: vec![0.0; n],
+            rhs: vec![0.0; n],
+            mi: DMat::zeros(n, n),
+        }
+    }
+
+    /// DOF the scratch was sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Quantized RNEA (ID), written into `tau`. Intermediate v/a/f are
+    /// quantized per joint step; see [`quant_rnea`].
+    pub fn rnea_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        qdd: &[f64],
+        fmt: QFormat,
+        tau: &mut [f64],
+    ) {
+        let ctx = Q::new(fmt);
+        let n = self.n;
+        assert_eq!(robot.dof(), n, "scratch sized for a different robot");
+        assert_eq!(tau.len(), n);
+        for i in 0..n {
+            self.qq[i] = ctx.s(q[i]);
+            self.qdq[i] = ctx.s(qd[i]);
+            self.uq[i] = ctx.s(qdd[i]);
+        }
+        quant_kin_into(robot, &self.qq, &self.qdq, &ctx, &mut self.kin);
+        let a0 = SV::new(V3::ZERO, -robot.gravity);
+        for i in 0..n {
+            let link = &robot.links[i];
+            let s = self.kin.s[i];
+            let vi = self.kin.v[i];
+            let ap = match link.parent {
+                Some(p) => self.a[p],
+                None => a0,
+            };
+            let ai = ctx.sv(
+                &(self.kin.xup[i].apply(&ap)
+                    + s.scale(self.uq[i])
+                    + vi.crm(&s.scale(self.kin.qd[i]))),
+            );
+            // Inertia constants quantized once (as stored in BRAM/LUTs).
+            let iq = ctx.m6(&link.inertia.to_mat6());
+            let fi = ctx.sv(&(matvec6(&iq, &ai) + vi.crf(&matvec6(&iq, &vi))));
+            self.a[i] = ai;
+            self.f[i] = fi;
+        }
+        for i in (0..n).rev() {
+            tau[i] = ctx.s(self.kin.s[i].dot(&self.f[i]));
+            if let Some(p) = robot.links[i].parent {
+                self.f[p] = ctx.sv(&(self.f[p] + self.kin.xup[i].inv_apply_force(&self.f[i])));
+            }
+        }
+    }
+
+    /// Quantized analytical Minv (original algorithm: reciprocal inline,
+    /// quantized), written into `out` (N×N); see [`quant_minv`].
+    pub fn minv_into(&mut self, robot: &Robot, q: &[f64], fmt: QFormat, out: &mut DMat) {
+        let ctx = Q::new(fmt);
+        let n = self.n;
+        assert_eq!(robot.dof(), n, "scratch sized for a different robot");
+        assert_eq!(out.d.len(), n * n, "output sized for a different robot");
+        for i in 0..n {
+            self.qq[i] = ctx.s(q[i]);
+        }
+        quant_kin_into(robot, &self.qq, &self.zero, &ctx, &mut self.kin);
+
+        for i in 0..n {
+            self.ia[i] = ctx.m6(&robot.links[i].inertia.to_mat6());
+        }
+        for col in &mut self.fcol {
+            col.fill(SV::ZERO);
+        }
+        for col in &mut self.acol {
+            col.fill(SV::ZERO);
+        }
+        out.d.fill(0.0);
+
+        for i in (0..n).rev() {
+            let s = self.kin.s[i];
+            let ui = ctx.sv(&matvec6(&self.ia[i], &s));
+            let di = ctx.s(s.dot(&ui));
+            // Quantized reciprocal (the expensive, error-prone op — the
+            // paper's dominant error source, Fig. 5(d)).
+            let di_inv = ctx.s(1.0 / di);
+            self.u[i] = ui;
+            self.dinv[i] = di_inv;
+            out[(i, i)] += di_inv;
+            for j in 0..n {
+                let sf = s.dot(&self.fcol[i][j]);
+                if sf != 0.0 {
+                    out[(i, j)] = ctx.s(out[(i, j)] - ctx.s(di_inv * sf));
+                }
+            }
+            if let Some(p) = robot.links[i].parent {
+                let uut = outer6(&ui, &ui);
+                let ia_art = ctx.m6(&sub6(&self.ia[i], &scale6(&uut, di_inv)));
+                let xm = self.kin.xup[i].to_mat6();
+                let contrib = ctx.m6(&mul6(&t6(&xm), &mul6(&ia_art, &xm)));
+                for r in 0..6 {
+                    for c in 0..6 {
+                        self.ia[p][r][c] = ctx.s(self.ia[p][r][c] + contrib[r][c]);
+                    }
+                }
+                for j in 0..n {
+                    let fij = self.fcol[i][j] + ui.scale(out[(i, j)]);
+                    if fij.norm() > 0.0 {
+                        self.fcol[p][j] =
+                            ctx.sv(&(self.fcol[p][j] + self.kin.xup[i].inv_apply_force(&fij)));
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            let s = self.kin.s[i];
+            match robot.links[i].parent {
+                None => {
+                    for j in 0..n {
+                        self.acol[i][j] = s.scale(out[(i, j)]);
+                    }
+                }
+                Some(p) => {
+                    for j in 0..n {
+                        let xa = self.kin.xup[i].apply(&self.acol[p][j]);
+                        let corr = ctx.s(self.dinv[i] * self.u[i].dot(&xa));
+                        if corr != 0.0 {
+                            out[(i, j)] = ctx.s(out[(i, j)] - corr);
+                        }
+                        self.acol[i][j] = ctx.sv(&(xa + s.scale(out[(i, j)])));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Quantized FD = quantized Minv · (τ − quantized bias), written into
+    /// `qdd`. Leaves the bias in scratch and M⁻¹ in the internal matrix
+    /// buffer; see [`quant_fd`].
+    pub fn fd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fmt: QFormat,
+        qdd: &mut [f64],
+    ) {
+        let ctx = Q::new(fmt);
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(qdd.len(), n);
+        // Temporarily take the buffers the sub-kernels must not alias.
+        let zero = std::mem::take(&mut self.zero);
+        let mut bias = std::mem::take(&mut self.bias);
+        let mut mi = std::mem::replace(&mut self.mi, DMat::zeros(0, 0));
+        self.rnea_into(robot, q, qd, &zero, fmt, &mut bias);
+        // Give the zero vector back before minv_into — it reads it as
+        // the zero-velocity input to the quantized kinematics.
+        self.zero = zero;
+        self.minv_into(robot, q, fmt, &mut mi);
+        for i in 0..n {
+            self.rhs[i] = ctx.s(tau[i] - bias[i]);
+        }
+        self.bias = bias;
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += mi[(i, j)] * self.rhs[j];
+            }
+            qdd[i] = ctx.s(acc);
+        }
+        self.mi = mi;
+    }
+}
+
 /// Quantized RNEA (ID). Intermediate v/a/f quantized per joint step.
+/// Allocating wrapper over [`QuantScratch::rnea_into`].
 pub fn quant_rnea(
     robot: &Robot,
     q: &[f64],
@@ -89,119 +338,33 @@ pub fn quant_rnea(
     qdd: &[f64],
     fmt: QFormat,
 ) -> Vec<f64> {
-    let ctx = Q::new(fmt);
     let n = robot.dof();
-    let kin = quant_kin(robot, q, qd, &ctx);
-    let qddq = ctx.vec(qdd);
-    let a0 = SV::new(V3::ZERO, -robot.gravity);
-
-    let mut a: Vec<SV> = Vec::with_capacity(n);
-    let mut f: Vec<SV> = Vec::with_capacity(n);
-    for i in 0..n {
-        let link = &robot.links[i];
-        let s = kin.s[i];
-        let vi = kin.v[i];
-        let ap = match link.parent {
-            Some(p) => a[p],
-            None => a0,
-        };
-        let ai = ctx.sv(&(kin.xup[i].apply(&ap) + s.scale(qddq[i]) + vi.crm(&s.scale(kin.qd[i]))));
-        // Inertia constants quantized once (as stored in BRAM/LUTs).
-        let iq = ctx.m6(&link.inertia.to_mat6());
-        let fi = ctx.sv(&(matvec6(&iq, &ai) + vi.crf(&matvec6(&iq, &vi))));
-        a.push(ai);
-        f.push(fi);
-    }
+    let mut ws = QuantScratch::new(n);
     let mut tau = vec![0.0; n];
-    for i in (0..n).rev() {
-        tau[i] = ctx.s(kin.s[i].dot(&f[i]));
-        if let Some(p) = robot.links[i].parent {
-            f[p] = ctx.sv(&(f[p] + kin.xup[i].inv_apply_force(&f[i])));
-        }
-    }
+    ws.rnea_into(robot, q, qd, qdd, fmt, &mut tau);
     tau
 }
 
 /// Quantized analytical Minv (original algorithm: reciprocal inline,
 /// quantized — the reciprocal is the paper's dominant error source and
-/// the target of the compensation offset of Fig. 5(d)).
+/// the target of the compensation offset of Fig. 5(d)). Allocating
+/// wrapper over [`QuantScratch::minv_into`].
 pub fn quant_minv(robot: &Robot, q: &[f64], fmt: QFormat) -> DMat {
-    let ctx = Q::new(fmt);
     let n = robot.dof();
-    let zeros = vec![0.0; n];
-    let kin = quant_kin(robot, q, &zeros, &ctx);
-
-    let mut ia: Vec<M6> = (0..n).map(|i| ctx.m6(&robot.links[i].inertia.to_mat6())).collect();
-    let mut u: Vec<SV> = vec![SV::ZERO; n];
-    let mut dinv = vec![0.0; n];
-    let mut f: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
-    let mut minv = DMat::zeros(n, n);
-
-    for i in (0..n).rev() {
-        let s = kin.s[i];
-        let ui = ctx.sv(&matvec6(&ia[i], &s));
-        let di = ctx.s(s.dot(&ui));
-        // Quantized reciprocal (the expensive, error-prone op).
-        let di_inv = ctx.s(1.0 / di);
-        u[i] = ui;
-        dinv[i] = di_inv;
-        minv[(i, i)] += di_inv;
-        for j in 0..n {
-            let sf = s.dot(&f[i][j]);
-            if sf != 0.0 {
-                minv[(i, j)] = ctx.s(minv[(i, j)] - ctx.s(di_inv * sf));
-            }
-        }
-        if let Some(p) = robot.links[i].parent {
-            let uut = outer6(&ui, &ui);
-            let ia_art = ctx.m6(&sub6(&ia[i], &scale6(&uut, di_inv)));
-            let xm = kin.xup[i].to_mat6();
-            let contrib = ctx.m6(&mul6(&t6(&xm), &mul6(&ia_art, &xm)));
-            for r in 0..6 {
-                for c in 0..6 {
-                    ia[p][r][c] = ctx.s(ia[p][r][c] + contrib[r][c]);
-                }
-            }
-            for j in 0..n {
-                let fij = f[i][j] + ui.scale(minv[(i, j)]);
-                if fij.norm() > 0.0 {
-                    f[p][j] = ctx.sv(&(f[p][j] + kin.xup[i].inv_apply_force(&fij)));
-                }
-            }
-        }
-    }
-    let mut a: Vec<Vec<SV>> = vec![vec![SV::ZERO; n]; n];
-    for i in 0..n {
-        let s = kin.s[i];
-        match robot.links[i].parent {
-            None => {
-                for j in 0..n {
-                    a[i][j] = s.scale(minv[(i, j)]);
-                }
-            }
-            Some(p) => {
-                for j in 0..n {
-                    let xa = kin.xup[i].apply(&a[p][j]);
-                    let corr = ctx.s(dinv[i] * u[i].dot(&xa));
-                    if corr != 0.0 {
-                        minv[(i, j)] = ctx.s(minv[(i, j)] - corr);
-                    }
-                    a[i][j] = ctx.sv(&(xa + s.scale(minv[(i, j)])));
-                }
-            }
-        }
-    }
-    minv
+    let mut ws = QuantScratch::new(n);
+    let mut out = DMat::zeros(n, n);
+    ws.minv_into(robot, q, fmt, &mut out);
+    out
 }
 
-/// Quantized FD = quantized Minv · (τ − quantized bias).
+/// Quantized FD = quantized Minv · (τ − quantized bias). Allocating
+/// wrapper over [`QuantScratch::fd_into`].
 pub fn quant_fd(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fmt: QFormat) -> Vec<f64> {
-    let ctx = Q::new(fmt);
     let n = robot.dof();
-    let bias = quant_rnea(robot, q, qd, &vec![0.0; n], fmt);
-    let mi = quant_minv(robot, q, fmt);
-    let rhs: Vec<f64> = tau.iter().zip(&bias).map(|(t, c)| ctx.s(t - c)).collect();
-    ctx.vec(&mi.matvec(&rhs))
+    let mut ws = QuantScratch::new(n);
+    let mut qdd = vec![0.0; n];
+    ws.fd_into(robot, q, qd, tau, fmt, &mut qdd);
+    qdd
 }
 
 /// Quantized ΔRNEA via quantized tangent sweeps (used by LQR/MPC
@@ -334,6 +497,36 @@ mod tests {
                     (approx - m[(i, j)]).abs() < 1e-2 * (1.0 + m[(i, j)].abs()),
                     "M[{i}][{j}]"
                 );
+            }
+        }
+    }
+
+    /// Reusing one scratch across tasks (and interleaving the three
+    /// kernels) must give bitwise the same answers as fresh scratches —
+    /// no state may leak between calls.
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        for robot in [builtin::iiwa(), builtin::hyq()] {
+            let n = robot.dof();
+            let fmt = QFormat::new(12, 14);
+            let mut ws = QuantScratch::new(n);
+            let mut rng = Rng::new(505);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let qdd = rng.vec_range(n, -2.0, 2.0);
+                let tau = rng.vec_range(n, -8.0, 8.0);
+
+                let mut tau_ws = vec![0.0; n];
+                ws.rnea_into(&robot, &s.q, &s.qd, &qdd, fmt, &mut tau_ws);
+                assert_eq!(tau_ws, quant_rnea(&robot, &s.q, &s.qd, &qdd, fmt));
+
+                let mut mi_ws = DMat::zeros(n, n);
+                ws.minv_into(&robot, &s.q, fmt, &mut mi_ws);
+                assert_eq!(mi_ws.d, quant_minv(&robot, &s.q, fmt).d);
+
+                let mut qdd_ws = vec![0.0; n];
+                ws.fd_into(&robot, &s.q, &s.qd, &tau, fmt, &mut qdd_ws);
+                assert_eq!(qdd_ws, quant_fd(&robot, &s.q, &s.qd, &tau, fmt));
             }
         }
     }

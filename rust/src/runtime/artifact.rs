@@ -18,6 +18,7 @@ pub enum ArtifactFn {
 }
 
 impl ArtifactFn {
+    /// Parse a function tag as it appears in artifact filenames.
     pub fn parse(s: &str) -> Option<ArtifactFn> {
         match s {
             "rnea" | "id" => Some(ArtifactFn::Rnea),
@@ -27,6 +28,7 @@ impl ArtifactFn {
         }
     }
 
+    /// Canonical short name (matches the artifact filename tag).
     pub fn name(&self) -> &'static str {
         match self {
             ArtifactFn::Rnea => "rnea",
@@ -47,9 +49,13 @@ impl ArtifactFn {
 /// Metadata parsed from an artifact filename.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactMeta {
+    /// Robot name the artifact was compiled for.
     pub robot: String,
+    /// RBD function the artifact evaluates.
     pub function: ArtifactFn,
+    /// Compiled-in batch size (PJRT shapes are fixed).
     pub batch: usize,
+    /// Path of the HLO-text file.
     pub path: PathBuf,
 }
 

@@ -10,8 +10,13 @@
 use super::artifact::{ArtifactFn, ArtifactMeta};
 use std::fmt;
 
+/// Execution-layer failure (shape mismatch, load error, backend fault),
+/// shared by the native, quantized, and PJRT engines.
 #[derive(Debug)]
-pub struct EngineError(pub String);
+pub struct EngineError(
+    /// Human-readable failure description.
+    pub String,
+);
 
 impl fmt::Display for EngineError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -31,6 +36,7 @@ impl From<xla::Error> for EngineError {
 /// One compiled (robot, function, batch) executable.
 #[cfg(feature = "pjrt")]
 pub struct Engine {
+    /// Artifact metadata (robot, function, batch, path).
     pub meta: ArtifactMeta,
     /// Joint dimension, probed from the robot description.
     pub n: usize,

@@ -4,6 +4,10 @@
 //!   allocation-free workspace dynamics core directly. No external
 //!   toolchain, no artifacts; this is the path `draco serve` uses out of
 //!   the box.
+//! * [`quantized`] — the fixed-point twin of the native engine: the same
+//!   batched interface evaluated through `quant::qrbd` at a per-robot
+//!   `QFormat`, so precision (and, on the accelerator, DSP cost) is a
+//!   per-robot serving knob.
 //! * [`engine`] (feature `pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (produced once by `python/compile/aot.py`) and execute them through
 //!   PJRT. Python is never on this path — the artifacts are
@@ -11,13 +15,58 @@
 //!   jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //!   rejects; the text parser reassigns ids (see
 //!   /opt/xla-example/README.md).
+//!
+//! The CPU engines implement [`DynamicsEngine`], the uniform trait the
+//! coordinator's batching loop drives, so a route's precision is chosen
+//! at registration time and invisible to the batcher.
+
+#![warn(missing_docs)]
 
 pub mod artifact;
 pub mod engine;
 pub mod native;
+pub mod quantized;
 
-pub use artifact::{scan_artifacts, ArtifactMeta};
+use crate::model::Robot;
+
+pub use artifact::{scan_artifacts, ArtifactFn, ArtifactMeta};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use engine::EngineError;
 pub use native::NativeEngine;
+pub use quantized::QuantEngine;
+
+/// Uniform interface over the batched CPU execution backends (f64
+/// [`NativeEngine`] and fixed-point [`QuantEngine`]). The coordinator
+/// drives one boxed engine per worker thread; both entry points use the
+/// flat-f32 wire layout so backends are interchangeable per route.
+pub trait DynamicsEngine: Send {
+    /// The robot this engine serves.
+    fn robot(&self) -> &Robot;
+    /// The RBD function step batches evaluate.
+    fn function(&self) -> ArtifactFn;
+    /// Maximum tasks per executed batch.
+    fn batch(&self) -> usize;
+    /// Robot DOF (the per-operand row length).
+    fn n(&self) -> usize;
+    /// Flat f32 output length per task (N for RNEA/FD, N² for M⁻¹).
+    fn out_per_task(&self) -> usize {
+        match self.function() {
+            ArtifactFn::Minv => self.n() * self.n(),
+            _ => self.n(),
+        }
+    }
+    /// Execute one step batch: `arity` flat f32 operands, row-major
+    /// (B, N), any B ≤ [`DynamicsEngine::batch`]; returns B output rows.
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError>;
+    /// Unroll one trajectory request (H torque rows from an initial
+    /// state) through the engine's integrator; returns `2·H·N` f32 —
+    /// H q-rows then H q̇-rows.
+    fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError>;
+}

@@ -6,18 +6,30 @@
 //!
 //! One engine owns one [`DynWorkspace`]; the coordinator creates one
 //! engine per worker thread, so a whole serving batch runs without a
-//! single heap allocation inside the dynamics kernels.
+//! single heap allocation inside the dynamics kernels. The engine also
+//! implements [`super::DynamicsEngine`], the uniform trait the batcher
+//! drives for f64 and quantized execution, including trajectory
+//! [`NativeEngine::rollout`] through the workspace integrator.
 
 use super::artifact::ArtifactFn;
 use super::engine::EngineError;
+use super::DynamicsEngine;
 use crate::dynamics::DynWorkspace;
-use crate::model::Robot;
+use crate::model::{Robot, State};
+use crate::sim::integrate::step_semi_implicit_ws;
 use crate::spatial::DMat;
+
+/// Upper bound on trajectory-request horizons (steps); guards a worker
+/// against a single malformed request allocating an unbounded response.
+pub const MAX_HORIZON: usize = 65536;
 
 /// Batched CPU executor for one (robot, function, batch) route.
 pub struct NativeEngine {
+    /// The robot this engine serves.
     pub robot: Robot,
+    /// The RBD function this route evaluates.
     pub function: ArtifactFn,
+    /// Maximum tasks per executed batch.
     pub batch: usize,
     n: usize,
     ws: DynWorkspace,
@@ -30,6 +42,7 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// Build an engine (and its workspace) for one robot and function.
     pub fn new(robot: Robot, function: ArtifactFn, batch: usize) -> NativeEngine {
         let n = robot.dof();
         assert!(batch > 0, "batch must be positive");
@@ -47,16 +60,15 @@ impl NativeEngine {
         }
     }
 
+    /// Robot DOF (the per-operand row length).
     pub fn n(&self) -> usize {
         self.n
     }
 
-    /// Flat output length for a full batch.
+    /// Flat output length for a full batch (`batch ·` the per-task size
+    /// defined once by [`DynamicsEngine::out_per_task`]).
     pub fn expected_output_len(&self) -> usize {
-        match self.function {
-            ArtifactFn::Rnea | ArtifactFn::Fd => self.batch * self.n,
-            ArtifactFn::Minv => self.batch * self.n * self.n,
-        }
+        self.batch * DynamicsEngine::out_per_task(self)
     }
 
     /// Execute one batch. Same layout as the PJRT engine — `inputs`
@@ -66,34 +78,8 @@ impl NativeEngine {
     /// (no padding waste). Returns the flat f32 output for B rows.
     pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
-        if inputs.len() != self.function.arity() {
-            return Err(EngineError(format!(
-                "expected {} operands, got {}",
-                self.function.arity(),
-                inputs.len()
-            )));
-        }
-        let len0 = inputs[0].len();
-        for x in inputs {
-            if x.len() != len0 {
-                return Err(EngineError(format!(
-                    "ragged operands: {} vs {}",
-                    x.len(),
-                    len0
-                )));
-            }
-        }
-        if len0 == 0 || len0 % n != 0 {
-            return Err(EngineError(format!("operand length {len0} not a multiple of n = {n}")));
-        }
-        let b = len0 / n;
-        if b > self.batch {
-            return Err(EngineError(format!("{b} rows exceed engine batch {}", self.batch)));
-        }
-        let per_task = match self.function {
-            ArtifactFn::Rnea | ArtifactFn::Fd => n,
-            ArtifactFn::Minv => n * n,
-        };
+        let b = validate_batch(inputs, self.function.arity(), n, self.batch)?;
+        let per_task = DynamicsEngine::out_per_task(self);
         let mut out = vec![0.0f32; b * per_task];
         for k in 0..b {
             let span = k * n..(k + 1) * n;
@@ -135,15 +121,138 @@ impl NativeEngine {
         }
         Ok(out)
     }
+
+    /// Unroll one trajectory request through the workspace integrator
+    /// ([`step_semi_implicit_ws`], i.e. O(N) ABA + semi-implicit Euler).
+    /// `tau` holds H torque rows of length N (row-major); the response is
+    /// flat f32 of length `2·H·N`: all H q-rows, then all H q̇-rows.
+    pub fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        decode(q0, &mut self.q);
+        decode(qd0, &mut self.qd);
+        let mut state =
+            State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
+        let mut out = vec![0.0f32; 2 * h * n];
+        for t in 0..h {
+            decode(&tau[t * n..(t + 1) * n], &mut self.u);
+            step_semi_implicit_ws(
+                &self.robot,
+                &mut self.ws,
+                &mut self.out_vec,
+                &mut state,
+                &self.u,
+                None,
+                dt,
+            );
+            encode(&state.q, &mut out[t * n..(t + 1) * n]);
+            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+        }
+        self.q = state.q;
+        self.qd = state.qd;
+        Ok(out)
+    }
 }
 
-fn decode(src: &[f32], dst: &mut [f64]) {
+impl DynamicsEngine for NativeEngine {
+    fn robot(&self) -> &Robot {
+        &self.robot
+    }
+    fn function(&self) -> ArtifactFn {
+        self.function
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        NativeEngine::run(self, inputs)
+    }
+    fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        NativeEngine::rollout(self, q0, qd0, tau, dt)
+    }
+}
+
+/// Shared operand validation for the flat batched interface: checks
+/// arity, raggedness, row alignment, and the engine batch bound. Returns
+/// the row count B.
+pub(crate) fn validate_batch(
+    inputs: &[Vec<f32>],
+    arity: usize,
+    n: usize,
+    batch: usize,
+) -> Result<usize, EngineError> {
+    if inputs.len() != arity {
+        return Err(EngineError(format!("expected {arity} operands, got {}", inputs.len())));
+    }
+    let len0 = inputs[0].len();
+    for x in inputs {
+        if x.len() != len0 {
+            return Err(EngineError(format!("ragged operands: {} vs {}", x.len(), len0)));
+        }
+    }
+    if len0 == 0 || len0 % n != 0 {
+        return Err(EngineError(format!("operand length {len0} not a multiple of n = {n}")));
+    }
+    let b = len0 / n;
+    if b > batch {
+        return Err(EngineError(format!("{b} rows exceed engine batch {batch}")));
+    }
+    Ok(b)
+}
+
+/// Shared trajectory-request validation. Returns the horizon H.
+pub(crate) fn validate_rollout(
+    q0: &[f32],
+    qd0: &[f32],
+    tau: &[f32],
+    dt: f64,
+    n: usize,
+) -> Result<usize, EngineError> {
+    if q0.len() != n || qd0.len() != n {
+        return Err(EngineError(format!(
+            "initial state length {}/{} != n = {n}",
+            q0.len(),
+            qd0.len()
+        )));
+    }
+    if tau.is_empty() || tau.len() % n != 0 {
+        return Err(EngineError(format!(
+            "torque sequence length {} not a positive multiple of n = {n}",
+            tau.len()
+        )));
+    }
+    let h = tau.len() / n;
+    if h > MAX_HORIZON {
+        return Err(EngineError(format!("horizon {h} exceeds maximum {MAX_HORIZON}")));
+    }
+    if !(dt.is_finite() && dt > 0.0) {
+        return Err(EngineError(format!("bad dt {dt}")));
+    }
+    Ok(h)
+}
+
+pub(crate) fn decode(src: &[f32], dst: &mut [f64]) {
     for (d, s) in dst.iter_mut().zip(src) {
         *d = *s as f64;
     }
 }
 
-fn encode(src: &[f64], dst: &mut [f32]) {
+pub(crate) fn encode(src: &[f64], dst: &mut [f32]) {
     for (d, s) in dst.iter_mut().zip(src) {
         *d = *s as f32;
     }
@@ -154,6 +263,7 @@ mod tests {
     use super::*;
     use crate::dynamics::{fd, minv, rnea};
     use crate::model::{builtin_robot, State};
+    use crate::sim::integrate::step_semi_implicit;
     use crate::util::rng::Rng;
 
     fn flat_inputs(robot: &Robot, b: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<(State, Vec<f64>)>) {
@@ -268,5 +378,66 @@ mod tests {
                 assert!((got - want[i]).abs() / scale < 1e-5, "row {k} joint {i}");
             }
         }
+    }
+
+    #[test]
+    fn rollout_matches_per_step_integration() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut rng = Rng::new(703);
+        let s0 = State::random(&robot, &mut rng);
+        let h = 12;
+        let dt = 1e-3;
+        let tau_f64 = rng.vec_range(h * n, -4.0, 4.0);
+        let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+        let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+        let tau: Vec<f32> = tau_f64.iter().map(|&x| x as f32).collect();
+
+        let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::Fd, 8);
+        let out = eng.rollout(&q0, &qd0, &tau, dt).expect("rollout");
+        assert_eq!(out.len(), 2 * h * n);
+
+        // Reference: per-step allocating integrator from the f32-rounded
+        // initial state and torques (exactly what the engine decoded).
+        let mut state = State {
+            q: q0.iter().map(|&x| x as f64).collect(),
+            qd: qd0.iter().map(|&x| x as f64).collect(),
+        };
+        for t in 0..h {
+            let tt: Vec<f64> = tau[t * n..(t + 1) * n].iter().map(|&x| x as f64).collect();
+            step_semi_implicit(&robot, &mut state, &tt, None, dt);
+            for i in 0..n {
+                let got_q = out[t * n + i] as f64;
+                let got_qd = out[(h + t) * n + i] as f64;
+                let sq = 1.0f64.max(state.q[i].abs());
+                let sqd = 1.0f64.max(state.qd[i].abs());
+                assert!(
+                    (got_q - state.q[i]).abs() / sq < 1e-5,
+                    "step {t} q[{i}]: {got_q} vs {}",
+                    state.q[i]
+                );
+                assert!(
+                    (got_qd - state.qd[i]).abs() / sqd < 1e-5,
+                    "step {t} qd[{i}]: {got_qd} vs {}",
+                    state.qd[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rollout_rejects_bad_requests() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut eng = NativeEngine::new(robot, ArtifactFn::Fd, 8);
+        // Wrong initial-state length.
+        assert!(eng.rollout(&vec![0.0; n - 1], &vec![0.0; n], &vec![0.0; n], 1e-3).is_err());
+        // Empty torque sequence.
+        assert!(eng.rollout(&vec![0.0; n], &vec![0.0; n], &[], 1e-3).is_err());
+        // Misaligned torque sequence.
+        assert!(eng.rollout(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n + 1], 1e-3).is_err());
+        // Bad dt.
+        assert!(eng.rollout(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n], 0.0).is_err());
+        assert!(eng.rollout(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n], f64::NAN).is_err());
     }
 }

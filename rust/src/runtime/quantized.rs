@@ -1,0 +1,307 @@
+//! Quantized native CPU engine: the fixed-point serving backend.
+//!
+//! Identical flat-f32 batched interface to [`super::NativeEngine`], but
+//! every dynamics evaluation runs through the emulated fixed-point
+//! kernels of [`crate::quant::qrbd`] at a per-robot [`QFormat`] — the
+//! serving-side realization of the paper's precision-aware co-design:
+//! robots whose motion tolerance admits a narrow word width are served
+//! with the cheap (DSP-frugal, on FPGA) datapath while other robots in
+//! the same process keep full f64 precision.
+//!
+//! One engine owns one [`QuantScratch`] (the quantized counterpart of
+//! the f64 `DynWorkspace`), so quantized batches are allocation-free in
+//! the kernels exactly like the native path. Trajectory rollouts compute
+//! q̈ with the quantized FD and advance the state with the same
+//! semi-implicit update as the f64 integrator — matching the ICMS
+//! operating model (fixed-point accelerator in the loop, float state).
+
+use super::artifact::ArtifactFn;
+use super::engine::EngineError;
+use super::native::{decode, encode, validate_batch, validate_rollout};
+use super::DynamicsEngine;
+use crate::model::{Robot, State};
+use crate::quant::{QFormat, QuantScratch};
+use crate::sim::integrate::semi_implicit_update;
+use crate::spatial::DMat;
+
+/// Batched fixed-point CPU executor for one (robot, function, batch,
+/// format) route.
+pub struct QuantEngine {
+    /// The robot this engine serves.
+    pub robot: Robot,
+    /// The RBD function this route evaluates.
+    pub function: ArtifactFn,
+    /// Maximum tasks per executed batch.
+    pub batch: usize,
+    /// The fixed-point format every kernel evaluation is rounded to.
+    pub fmt: QFormat,
+    n: usize,
+    ws: QuantScratch,
+    // Per-task f64 staging buffers (decoded from the flat f32 operands).
+    q: Vec<f64>,
+    qd: Vec<f64>,
+    u: Vec<f64>,
+    out_vec: Vec<f64>,
+    out_mat: DMat,
+}
+
+impl QuantEngine {
+    /// Build an engine (and its quantized scratch) for one robot,
+    /// function, and fixed-point format.
+    pub fn new(robot: Robot, function: ArtifactFn, batch: usize, fmt: QFormat) -> QuantEngine {
+        let n = robot.dof();
+        assert!(batch > 0, "batch must be positive");
+        QuantEngine {
+            ws: QuantScratch::new(n),
+            q: vec![0.0; n],
+            qd: vec![0.0; n],
+            u: vec![0.0; n],
+            out_vec: vec![0.0; n],
+            out_mat: DMat::zeros(n, n),
+            robot,
+            function,
+            batch,
+            fmt,
+            n,
+        }
+    }
+
+    /// Robot DOF (the per-operand row length).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Flat output length for a full batch (`batch ·` the per-task size
+    /// defined once by [`DynamicsEngine::out_per_task`]).
+    pub fn expected_output_len(&self) -> usize {
+        self.batch * DynamicsEngine::out_per_task(self)
+    }
+
+    /// Execute one batch through the quantized kernels. Same contract as
+    /// [`super::NativeEngine::run`]: `arity` flat f32 operands, row-major
+    /// (B, N), any B ≤ `batch`.
+    pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        let b = validate_batch(inputs, self.function.arity(), n, self.batch)?;
+        let per_task = DynamicsEngine::out_per_task(self);
+        let mut out = vec![0.0f32; b * per_task];
+        for k in 0..b {
+            let span = k * n..(k + 1) * n;
+            match self.function {
+                ArtifactFn::Rnea => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.rnea_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        self.fmt,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Fd => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.fd_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        self.fmt,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Minv => {
+                    decode(&inputs[0][span], &mut self.q);
+                    self.ws.minv_into(&self.robot, &self.q, self.fmt, &mut self.out_mat);
+                    encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Unroll one trajectory request: q̈ from the quantized FD each step,
+    /// state advanced with the same semi-implicit update as the f64
+    /// integrator. Response layout matches
+    /// [`super::NativeEngine::rollout`]: `2·H·N` f32 — H q-rows then H
+    /// q̇-rows.
+    pub fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        decode(q0, &mut self.q);
+        decode(qd0, &mut self.qd);
+        let mut state =
+            State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
+        let mut out = vec![0.0f32; 2 * h * n];
+        for t in 0..h {
+            decode(&tau[t * n..(t + 1) * n], &mut self.u);
+            self.ws.fd_into(
+                &self.robot,
+                &state.q,
+                &state.qd,
+                &self.u,
+                self.fmt,
+                &mut self.out_vec,
+            );
+            semi_implicit_update(&mut state, &self.out_vec, dt);
+            encode(&state.q, &mut out[t * n..(t + 1) * n]);
+            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+        }
+        self.q = state.q;
+        self.qd = state.qd;
+        Ok(out)
+    }
+}
+
+impl DynamicsEngine for QuantEngine {
+    fn robot(&self) -> &Robot {
+        &self.robot
+    }
+    fn function(&self) -> ArtifactFn {
+        self.function
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        QuantEngine::run(self, inputs)
+    }
+    fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        QuantEngine::rollout(self, q0, qd0, tau, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{builtin_robot, State};
+    use crate::quant::qrbd::{quant_fd, quant_minv, quant_rnea};
+    use crate::util::rng::Rng;
+
+    fn f32_round(v: &[f64]) -> Vec<f64> {
+        v.iter().map(|&x| x as f32 as f64).collect()
+    }
+
+    #[test]
+    fn quant_engine_matches_allocating_kernels() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 14);
+        let b = 5;
+        let mut rng = Rng::new(710);
+        let mut q = Vec::new();
+        let mut qd = Vec::new();
+        let mut u = Vec::new();
+        let mut cases = Vec::new();
+        for _ in 0..b {
+            let s = State::random(&robot, &mut rng);
+            let uu = rng.vec_range(n, -6.0, 6.0);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            qd.extend(s.qd.iter().map(|&x| x as f32));
+            u.extend(uu.iter().map(|&x| x as f32));
+            cases.push((s, uu));
+        }
+        let inputs = vec![q, qd, u];
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            let mut eng = QuantEngine::new(robot.clone(), function, b, fmt);
+            let ins = match function {
+                ArtifactFn::Minv => inputs[..1].to_vec(),
+                _ => inputs.clone(),
+            };
+            let out = eng.run(&ins).expect("run");
+            for (k, (s, uu)) in cases.iter().enumerate() {
+                let qr = f32_round(&s.q);
+                let qdr = f32_round(&s.qd);
+                let ur = f32_round(uu);
+                match function {
+                    ArtifactFn::Rnea => {
+                        let want = quant_rnea(&robot, &qr, &qdr, &ur, fmt);
+                        for i in 0..n {
+                            assert_eq!(out[k * n + i], want[i] as f32, "rnea task {k} joint {i}");
+                        }
+                    }
+                    ArtifactFn::Fd => {
+                        let want = quant_fd(&robot, &qr, &qdr, &ur, fmt);
+                        for i in 0..n {
+                            assert_eq!(out[k * n + i], want[i] as f32, "fd task {k} joint {i}");
+                        }
+                    }
+                    ArtifactFn::Minv => {
+                        let want = quant_minv(&robot, &qr, fmt);
+                        for i in 0..n {
+                            for j in 0..n {
+                                assert_eq!(
+                                    out[k * n * n + i * n + j],
+                                    want[(i, j)] as f32,
+                                    "minv task {k} [{i}][{j}]"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_engine_validates_like_native() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let mut eng = QuantEngine::new(robot, ArtifactFn::Rnea, 4, fmt);
+        assert!(eng.run(&[vec![0.0; 28]]).is_err());
+        assert!(eng.run(&[vec![0.0; 10], vec![0.0; 10], vec![0.0; 10]]).is_err());
+        assert!(eng
+            .rollout(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n], -1.0)
+            .is_err());
+    }
+
+    #[test]
+    fn quant_rollout_stays_finite_and_tracks_f64_at_high_precision() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut rng = Rng::new(711);
+        let s0 = State::random(&robot, &mut rng);
+        let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+        let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+        let h = 8;
+        let tau: Vec<f32> = rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect();
+        let dt = 1e-3;
+
+        // Fine format: the quantized rollout must track the f64 one.
+        let fine = QFormat::new(16, 32);
+        let mut qeng = QuantEngine::new(robot.clone(), ArtifactFn::Fd, 4, fine);
+        let mut neng = super::super::NativeEngine::new(robot.clone(), ArtifactFn::Fd, 4);
+        let got = qeng.rollout(&q0, &qd0, &tau, dt).expect("quant rollout");
+        let want = neng.rollout(&q0, &qd0, &tau, dt).expect("native rollout");
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(a.is_finite(), "quant rollout produced non-finite at {i}");
+            assert!(
+                (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                "rollout sample {i}: {a} vs {b}"
+            );
+        }
+    }
+}

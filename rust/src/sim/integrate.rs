@@ -6,7 +6,11 @@ use crate::model::{Robot, State};
 use crate::spatial::SV;
 
 /// The shared update rule: q̇ += q̈ dt, then q += q̇ dt (symplectic order).
-fn semi_implicit_update(state: &mut State, qdd: &[f64], dt: f64) {
+/// Public so serving engines that compute q̈ themselves (e.g. the
+/// quantized native backend's fixed-point FD) can reuse the exact same
+/// stepping as [`step_semi_implicit_ws`] when unrolling trajectory
+/// requests.
+pub fn semi_implicit_update(state: &mut State, qdd: &[f64], dt: f64) {
     for i in 0..qdd.len() {
         state.qd[i] += qdd[i] * dt;
         state.q[i] += state.qd[i] * dt;

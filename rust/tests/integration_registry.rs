@@ -1,0 +1,285 @@
+//! Integration: the multi-robot serving registry end-to-end — one
+//! coordinator serving several robots concurrently with per-robot
+//! backends (f64 native / quantized), plus trajectory batch requests
+//! unrolled through the workspace integrator. No artifacts, no features,
+//! no Python: runs on every `cargo test`.
+
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry, TrajRequest};
+use draco::dynamics;
+use draco::model::{builtin_robot, Robot, State};
+use draco::quant::analyzer::rnea_error_stats;
+use draco::quant::qrbd::quant_rnea;
+use draco::quant::QFormat;
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::{NativeEngine, QuantEngine};
+use draco::util::rng::Rng;
+use std::sync::Arc;
+
+fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+fn f32_round(v: &[f64]) -> Vec<f64> {
+    v.iter().map(|&x| x as f32 as f64).collect()
+}
+
+/// Two robots on different backends behind one coordinator: concurrent
+/// clients hammer both; every response must match the *per-robot*
+/// reference kernel (a misroute would produce wrong dimensions for one
+/// robot pair and wrong numerics for the other).
+#[test]
+fn registry_serves_two_robots_concurrently() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let atlas = builtin_robot("atlas").unwrap();
+    let fmt = QFormat::new(14, 20);
+    let mut registry = RobotRegistry::new();
+    registry
+        .register(iiwa.clone(), BackendKind::Native, 16)
+        .register(atlas.clone(), BackendKind::NativeQuant(fmt), 8);
+    let coord = Arc::new(Coordinator::start_registry(&registry, 150));
+
+    let client = |coord: Arc<Coordinator>, robot: Robot, seed: u64| {
+        std::thread::spawn(move || {
+            let n = robot.dof();
+            let mut rng = Rng::new(seed);
+            let mut pending = Vec::new();
+            for k in 0..40usize {
+                let s = State::random(&robot, &mut rng);
+                let u = rng.vec_range(n, -2.0, 2.0);
+                let function = match k % 3 {
+                    0 => ArtifactFn::Rnea,
+                    1 => ArtifactFn::Fd,
+                    _ => ArtifactFn::Minv,
+                };
+                let ops = match function {
+                    ArtifactFn::Minv => vec![to_f32(&s.q)],
+                    _ => vec![to_f32(&s.q), to_f32(&s.qd), to_f32(&u)],
+                };
+                pending.push((function, s, u, coord.submit_to(&robot.name, function, ops)));
+            }
+            pending
+                .into_iter()
+                .map(|(f, s, u, rx)| (f, s, u, rx.recv().expect("answer").expect("ok")))
+                .collect::<Vec<_>>()
+        })
+    };
+
+    let h_iiwa = client(Arc::clone(&coord), iiwa.clone(), 810);
+    let h_atlas = client(Arc::clone(&coord), atlas.clone(), 811);
+
+    // iiwa (native f64): outputs match the f64 reference on the
+    // f32-rounded operands.
+    let n = iiwa.dof();
+    for (function, s, u, out) in h_iiwa.join().expect("iiwa client") {
+        let qr = f32_round(&s.q);
+        let qdr = f32_round(&s.qd);
+        let ur = f32_round(&u);
+        match function {
+            ArtifactFn::Rnea | ArtifactFn::Fd => {
+                assert_eq!(out.len(), n, "iiwa row length routed wrong");
+                let want = if function == ArtifactFn::Rnea {
+                    dynamics::rnea(&iiwa, &qr, &qdr, &ur, None)
+                } else {
+                    dynamics::fd(&iiwa, &qr, &qdr, &ur, None)
+                };
+                for i in 0..n {
+                    let scale = 1.0f64.max(want[i].abs());
+                    assert!(
+                        ((out[i] as f64) - want[i]).abs() / scale < 2e-3,
+                        "iiwa {} joint {i}",
+                        function.name()
+                    );
+                }
+            }
+            ArtifactFn::Minv => {
+                assert_eq!(out.len(), n * n, "iiwa matrix routed wrong");
+                let want = dynamics::minv(&iiwa, &qr);
+                let scale = want.max_abs();
+                for i in 0..n {
+                    for j in 0..n {
+                        assert!(
+                            ((out[i * n + j] as f64) - want[(i, j)]).abs() / scale < 1e-4,
+                            "iiwa minv [{i}][{j}]"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // atlas (quantized): outputs match the *quantized* kernels bitwise —
+    // proof the route really executes the fixed-point backend.
+    let m = atlas.dof();
+    for (function, s, u, out) in h_atlas.join().expect("atlas client") {
+        let qr = f32_round(&s.q);
+        let qdr = f32_round(&s.qd);
+        let ur = f32_round(&u);
+        match function {
+            ArtifactFn::Rnea => {
+                assert_eq!(out.len(), m, "atlas row length routed wrong");
+                let want = quant_rnea(&atlas, &qr, &qdr, &ur, fmt);
+                for i in 0..m {
+                    assert_eq!(out[i], want[i] as f32, "atlas quant rnea joint {i}");
+                }
+            }
+            ArtifactFn::Fd | ArtifactFn::Minv => {
+                let expect = if function == ArtifactFn::Minv { m * m } else { m };
+                assert_eq!(out.len(), expect, "atlas {} routed wrong", function.name());
+                assert!(out.iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+
+    assert_eq!(coord.robots(), vec!["atlas".to_string(), "iiwa".to_string()]);
+    let st = coord.stats();
+    assert!(st.completed >= 80, "all requests answered: {}", st.completed);
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+/// Quantized-vs-f64 native engine accuracy: the served error must stay
+/// within the envelope the quantization error analyzer measures for the
+/// same format, and a finer format must serve strictly more accurately.
+#[test]
+fn quant_engine_error_bounded_by_analyzer_metrics() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let coarse = QFormat::new(12, 10);
+    let fine = QFormat::new(16, 24);
+
+    // Analyzer envelope for the coarse format (same state distribution
+    // and q̈ range as the workload below).
+    let mut arng = Rng::new(820);
+    let stats = rnea_error_stats(&robot, coarse, 48, &mut arng, false);
+    assert!(stats.max_abs > 0.0);
+
+    let b = 16;
+    let mut rng = Rng::new(821);
+    let mut q = Vec::new();
+    let mut qd = Vec::new();
+    let mut u = Vec::new();
+    for _ in 0..b {
+        let s = State::random(&robot, &mut rng);
+        q.extend(to_f32(&s.q));
+        qd.extend(to_f32(&s.qd));
+        u.extend(to_f32(&rng.vec_range(n, -2.0, 2.0)));
+    }
+    let inputs = vec![q, qd, u];
+
+    let mut native = NativeEngine::new(robot.clone(), ArtifactFn::Rnea, b);
+    let exact = native.run(&inputs).expect("native run");
+    let mut max_err = [0.0f64; 2];
+    for (slot, fmt) in [(0usize, coarse), (1, fine)] {
+        let mut quant = QuantEngine::new(robot.clone(), ArtifactFn::Rnea, b, fmt);
+        let served = quant.run(&inputs).expect("quant run");
+        for (a, e) in served.iter().zip(&exact) {
+            max_err[slot] = max_err[slot].max((*a as f64 - *e as f64).abs());
+        }
+    }
+    // Envelope: served error within a small multiple of the analyzer's
+    // measured max (different random states, hence the margin), and the
+    // finer format strictly tighter than the coarse one.
+    assert!(
+        max_err[0] <= 10.0 * stats.max_abs,
+        "served quant error {} exceeds analyzer envelope {}",
+        max_err[0],
+        stats.max_abs
+    );
+    assert!(max_err[0] > 0.0, "coarse quantization must be visible");
+    assert!(
+        max_err[1] < max_err[0],
+        "fine format {} must beat coarse {}",
+        max_err[1],
+        max_err[0]
+    );
+}
+
+/// Trajectory batch requests: one submit carries a whole (q₀, q̇₀, τ…)
+/// rollout; the response must match stepping the forward dynamics
+/// per-step on the client side.
+#[test]
+fn trajectory_batch_matches_per_step_fd() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let mut registry = RobotRegistry::new();
+    registry.register(robot.clone(), BackendKind::Native, 8);
+    let coord = Coordinator::start_registry(&registry, 100);
+
+    let mut rng = Rng::new(830);
+    let s0 = State::random(&robot, &mut rng);
+    let h = 16;
+    let dt = 1e-3;
+    let tau64 = rng.vec_range(h * n, -3.0, 3.0);
+    let req = TrajRequest {
+        q0: to_f32(&s0.q),
+        qd0: to_f32(&s0.qd),
+        tau: to_f32(&tau64),
+        dt,
+    };
+    let out = coord
+        .submit_traj(&robot.name, req.clone())
+        .recv()
+        .expect("answer")
+        .expect("rollout ok");
+    assert_eq!(out.len(), 2 * h * n);
+
+    // Client-side reference: per-step FD + the same semi-implicit update,
+    // from the f32-rounded initial state and torques the server decoded.
+    let mut q: Vec<f64> = req.q0.iter().map(|&x| x as f64).collect();
+    let mut qd: Vec<f64> = req.qd0.iter().map(|&x| x as f64).collect();
+    for t in 0..h {
+        let tt: Vec<f64> = req.tau[t * n..(t + 1) * n].iter().map(|&x| x as f64).collect();
+        let qdd = dynamics::fd(&robot, &q, &qd, &tt, None);
+        for i in 0..n {
+            qd[i] += qdd[i] * dt;
+            q[i] += qd[i] * dt;
+        }
+        for i in 0..n {
+            let got_q = out[t * n + i] as f64;
+            let got_qd = out[(h + t) * n + i] as f64;
+            assert!(
+                (got_q - q[i]).abs() / (1.0f64.max(q[i].abs())) < 1e-4,
+                "step {t} q[{i}]: {got_q} vs {}",
+                q[i]
+            );
+            assert!(
+                (got_qd - qd[i]).abs() / (1.0f64.max(qd[i].abs())) < 1e-4,
+                "step {t} qd[{i}]: {got_qd} vs {}",
+                qd[i]
+            );
+        }
+    }
+    coord.shutdown();
+}
+
+/// Several trajectory requests in one window batch together but keep
+/// per-request identity (different horizons, different robots).
+#[test]
+fn trajectory_batching_preserves_request_identity() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+    let mut registry = RobotRegistry::new();
+    registry
+        .register(iiwa.clone(), BackendKind::Native, 4)
+        .register(hyq.clone(), BackendKind::Native, 4);
+    let coord = Coordinator::start_registry(&registry, 200);
+
+    let mut rxs = Vec::new();
+    for (robot, h) in [(&iiwa, 3usize), (&hyq, 7), (&iiwa, 5), (&hyq, 2)] {
+        let n = robot.dof();
+        let req = TrajRequest {
+            q0: vec![0.05; n],
+            qd0: vec![0.0; n],
+            tau: vec![0.0; h * n],
+            dt: 1e-3,
+        };
+        rxs.push((robot.dof(), h, coord.submit_traj(&robot.name, req)));
+    }
+    for (n, h, rx) in rxs {
+        let out = rx.recv().expect("answer").expect("ok");
+        assert_eq!(out.len(), 2 * h * n, "horizon/robot mixed up in batching");
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+    coord.shutdown();
+}

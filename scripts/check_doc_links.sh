@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Docs link check: fail if README.md or any file under docs/ contains a
+# markdown link to a relative path that does not exist. External links
+# (http/https/mailto) and pure anchors are skipped; anchors on relative
+# links are stripped before the existence check.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for f in README.md docs/*.md; do
+    [ -e "$f" ] || continue
+    base="$(dirname "$f")"
+    # Extract markdown link targets: ](target)
+    while IFS= read -r target; do
+        t="${target%%#*}"   # strip anchors
+        case "$t" in
+            '' ) continue ;;                              # pure anchor
+            http://*|https://*|mailto:* ) continue ;;     # external
+        esac
+        if [ ! -e "$base/$t" ]; then
+            echo "BROKEN LINK in $f: ($target)"
+            fail=1
+        fi
+    done < <(grep -oE '\]\([^)]+\)' "$f" | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [ "$fail" -ne 0 ]; then
+    echo "docs link check FAILED"
+    exit 1
+fi
+echo "docs link check OK"
