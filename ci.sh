@@ -10,11 +10,11 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== cargo clippy (dynamics crate, -D warnings) =="
-# Clippy is advisory-fatal on the library; keep going if clippy itself
-# is not installed (minimal toolchains).
+echo "== cargo clippy (all targets, -D warnings) =="
+# Clippy is advisory-fatal on every target (lib, bins, benches, tests);
+# keep going if clippy itself is not installed (minimal toolchains).
 if cargo clippy --version >/dev/null 2>&1; then
-    cargo clippy --lib --benches --tests -- -D warnings
+    cargo clippy --all-targets -- -D warnings
 else
     echo "clippy unavailable; skipping lint"
 fi

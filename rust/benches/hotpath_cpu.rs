@@ -14,16 +14,24 @@
 //! "mixed" — dispatch and batching included). Results are also written
 //! to `BENCH_hotpath.json` (schema `draco.hotpath.v1`) so successive PRs
 //! can track the perf trajectory. Pass `--quick` for a smoke run (CI).
+//!
+//! Parallel-serving rows: `fd_pool64` (the worker-pool handoff — one
+//! 64-task batch fanned across the persistent pool) and `serve_fd_par64`
+//! (64 FD requests through a coordinator route with intra-route
+//! parallelism, to compare against the serial `serve_fd_mixed64`
+//! baseline at the same dispatch cost). `mul6_flat` times the flattened
+//! branch-free 6×6 kernel that dominates the Minv sweeps.
 
 use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
     aba, crba, eval_batch, fd, minv, minv_dd, rnea, rnea_derivatives, BatchKernel, BatchTask,
-    DynWorkspace,
+    DynWorkspace, WorkerPool,
 };
 use draco::model::{builtin_robot, Robot, State};
 use draco::quant::QFormat;
 use draco::runtime::artifact::ArtifactFn;
 use draco::runtime::{NativeEngine, QuantEngine};
+use draco::spatial::mat6::{mul6, xtax};
 use draco::spatial::DMat;
 use draco::util::bench::{time_auto, Table};
 use draco::util::json::{self, Json};
@@ -267,6 +275,68 @@ fn main() {
         });
         add("mixed", "serve_fd_mixed64", &st, 64);
         coord.shutdown();
+
+        // Flattened 6×6 kernels: the branch-free flat mul6 and the fused
+        // congruence transform XᵀAX (256 evaluations per iteration).
+        let mut krng = Rng::new(6);
+        let mut a = [0.0f64; 36];
+        let mut bmat = [0.0f64; 36];
+        for x in a.iter_mut() {
+            *x = krng.range(-1.0, 1.0);
+        }
+        for x in bmat.iter_mut() {
+            *x = krng.range(-1.0, 1.0);
+        }
+        let st = time_auto(target_ms, || {
+            for _ in 0..256 {
+                black_box(mul6(black_box(&a), black_box(&bmat)));
+            }
+        });
+        add("kernel", "mul6_flat", &st, 256);
+        let st = time_auto(target_ms, || {
+            for _ in 0..256 {
+                black_box(xtax(black_box(&a), black_box(&bmat)));
+            }
+        });
+        add("kernel", "xtax_flat", &st, 256);
+
+        // Worker-pool handoff: one 64-task FD batch fanned across the
+        // persistent global pool (chunking, channels, and reassembly
+        // included) — compare with the serial fd_batch64 row.
+        let pool = WorkerPool::global();
+        let mut prng = Rng::new(8);
+        let n = iiwa.dof();
+        let pool_tasks: Vec<BatchTask> = (0..BATCH)
+            .map(|_| {
+                let s = State::random(&iiwa, &mut prng);
+                BatchTask { q: s.q, qd: s.qd, u: prng.vec_range(n, -8.0, 8.0) }
+            })
+            .collect();
+        let chunks = pool.threads();
+        let st = time_auto(target_ms, || {
+            black_box(pool.eval(&iiwa, BatchKernel::Fd, &pool_tasks, chunks));
+        });
+        add("iiwa", "fd_pool64", &st, BATCH);
+
+        // Intra-route parallelism: 64 FD requests through ONE
+        // coordinator route whose batches split across the worker pool —
+        // the parallel counterpart of the serial serve_fd_mixed64
+        // baseline (same dispatch + batching overhead, pooled execution).
+        let mut preg = RobotRegistry::new();
+        preg.register_parallel(iiwa.clone(), BackendKind::Native, 64, 0);
+        let pcoord = Coordinator::start_registry(&preg, 100);
+        let par_inputs = flat_fd_inputs(&iiwa, 1, 9);
+        let st = time_auto(target_ms, || {
+            let mut rxs = Vec::with_capacity(64);
+            for _ in 0..64usize {
+                rxs.push(pcoord.submit_to("iiwa", ArtifactFn::Fd, par_inputs.clone()));
+            }
+            for rx in rxs {
+                black_box(rx.recv().expect("serve answer").expect("serve ok"));
+            }
+        });
+        add("iiwa", "serve_fd_par64", &st, 64);
+        pcoord.shutdown();
     }
 
     t.print("CPU hot paths (measured, single thread)");

@@ -83,6 +83,10 @@ pub enum BackendSpec {
         function: ArtifactFn,
         /// Batch size (requests coalesced per execution).
         batch: usize,
+        /// Max chunks each assembled batch splits into on the global
+        /// worker pool (`0` = one per pool worker, `1` = serial).
+        /// Pooled execution is bitwise identical to serial.
+        parallel: usize,
     },
     /// Quantized fixed-point engine (`quant::qrbd` kernels) at a
     /// per-robot format — precision as a serving knob.
@@ -235,6 +239,9 @@ impl Coordinator {
 
     /// Start a native coordinator serving `functions` for one robot, one
     /// worker (and one workspace) per function, plus a trajectory route.
+    /// Routes execute serially; pass `BackendSpec::Native { parallel, .. }`
+    /// specs to [`Coordinator::start`] (or use
+    /// [`RobotRegistry::register_parallel`]) for intra-route parallelism.
     pub fn start_native(
         robot: &Robot,
         functions: &[(ArtifactFn, usize)],
@@ -248,6 +255,7 @@ impl Coordinator {
                 robot: robot.clone(),
                 function,
                 batch,
+                parallel: 1,
             })
             .collect();
         specs.push(BackendSpec::Trajectory { robot: robot.clone(), batch: traj_batch, fmt: None });
@@ -356,8 +364,10 @@ fn worker_loop(
     let _ = n; // used only by the pjrt arm
     let window = Duration::from_micros(window_us);
     match spec {
-        BackendSpec::Native { robot, function, batch } => {
-            let exec = EngineExecutor(Box::new(NativeEngine::new(robot, function, batch)));
+        BackendSpec::Native { robot, function, batch, parallel } => {
+            let exec = EngineExecutor(Box::new(NativeEngine::with_parallelism(
+                robot, function, batch, parallel,
+            )));
             step_worker(Box::new(exec), window, rx, stats);
         }
         BackendSpec::NativeQuant { robot, function, batch, fmt } => {
@@ -471,22 +481,21 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
     let arity = exec.arity();
 
     // Reject malformed jobs up front: a bad task must fail alone instead
-    // of poisoning (or panicking) the whole assembled batch.
-    let mut k = 0;
-    while k < queue.len() {
-        let ok = match &queue[k].payload {
+    // of poisoning (or panicking) the whole assembled batch. Single
+    // in-place pass (answering rejects as they are dropped) — the old
+    // `queue.remove(k)` loop was O(n²) under a malformed burst.
+    queue.retain(|job| {
+        let ok = match &job.payload {
             JobPayload::Step(ops) => ops.len() == arity && ops.iter().all(|op| op.len() == n),
             JobPayload::Traj(_) => false,
         };
-        if ok {
-            k += 1;
-        } else {
-            let job = queue.remove(k);
+        if !ok {
             let _ = job
                 .resp
                 .send(Err(format!("bad operands: expected {arity} arrays of length {n}")));
         }
-    }
+        ok
+    });
     if queue.is_empty() {
         return;
     }
@@ -528,7 +537,6 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
                     let _ = job.resp.send(Err("overflow past batch".into()));
                 }
             }
-            stats.lock().unwrap().record_batch(fill as f64 / b as f64, exec_us);
         }
         Err(e) => {
             for job in queue.drain(..) {
@@ -536,6 +544,10 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
             }
         }
     }
+    // Record the batch on BOTH paths: a failed execution still consumed
+    // a batch slot and wall clock, and skipping it skewed `mean_fill` /
+    // `mean_exec_us` against `batches` under error bursts.
+    stats.lock().unwrap().record_batch(fill as f64 / b as f64, exec_us);
 }
 
 /// Execute the queued trajectory rollouts back-to-back and fan results

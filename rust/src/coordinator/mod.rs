@@ -52,6 +52,9 @@ use std::time::Instant;
 /// * `--traj H` — additionally submit trajectory requests with an
 ///   H-step horizon through each robot's rollout route (native
 ///   backend).
+/// * `--par P` — split each native route's assembled batches into up to
+///   P chunks on the global worker pool (`0` = one per pool worker,
+///   default 1 = serial; bitwise identical either way).
 /// * `--requests N`, `--batch B`, `--window-us W`, `--dt S` — workload
 ///   shape.
 pub fn serve_cli(args: &Args) -> i32 {
@@ -66,13 +69,17 @@ pub fn serve_cli(args: &Args) -> i32 {
                 .opt("robots")
                 .map(str::to_string)
                 .unwrap_or_else(|| args.opt_or("robot", "iiwa").to_string());
-            let registry = match RobotRegistry::from_cli_spec(&spec, batch) {
+            let mut registry = match RobotRegistry::from_cli_spec(&spec, batch) {
                 Ok(r) => r,
                 Err(e) => {
                     eprintln!("bad --robots spec: {e}");
                     return 2;
                 }
             };
+            let par = args.opt_usize("par", 1);
+            if par != 1 {
+                registry.set_parallelism(par);
+            }
             println!("serving {} robot(s), batch {batch}, window {window_us} µs:", registry.len());
             for name in registry.names() {
                 let entry = registry.get(&name).expect("registered");

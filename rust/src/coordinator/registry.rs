@@ -37,7 +37,8 @@ impl BackendKind {
     }
 }
 
-/// One registered robot: the model, its backend, and its batch size.
+/// One registered robot: the model, its backend, its batch size, and
+/// its intra-route parallelism.
 #[derive(Debug, Clone)]
 pub struct RobotEntry {
     /// The robot model served under its `robot.name`.
@@ -46,6 +47,10 @@ pub struct RobotEntry {
     pub backend: BackendKind,
     /// Batch size for the robot's step routes (and rollout drain cap).
     pub batch: usize,
+    /// Max worker-pool chunks each native step batch splits into
+    /// (`0` = one per pool worker, `1` = serial; ignored by quantized
+    /// routes, which always execute serially).
+    pub parallel: usize,
 }
 
 /// Registry of robots one coordinator serves, keyed by robot name.
@@ -62,13 +67,40 @@ impl RobotRegistry {
         RobotRegistry::default()
     }
 
-    /// Register (or replace) a robot under its model name.
+    /// Register (or replace) a robot under its model name. Step batches
+    /// execute serially; use [`RobotRegistry::register_parallel`] to fan
+    /// a route's batches out across the worker pool.
     pub fn register(&mut self, robot: Robot, backend: BackendKind, batch: usize) -> &mut Self {
+        self.register_parallel(robot, backend, batch, 1)
+    }
+
+    /// Register (or replace) a robot with intra-route parallelism: each
+    /// assembled step batch of a native route splits into up to
+    /// `parallel` contiguous chunks on the global worker pool (`0` = one
+    /// chunk per pool worker, `1` = serial). Pooled execution is bitwise
+    /// identical to serial — same kernels, one cached workspace per pool
+    /// worker.
+    pub fn register_parallel(
+        &mut self,
+        robot: Robot,
+        backend: BackendKind,
+        batch: usize,
+        parallel: usize,
+    ) -> &mut Self {
         assert!(batch > 0, "batch must be positive");
-        let entry = RobotEntry { robot, backend, batch };
+        let entry = RobotEntry { robot, backend, batch, parallel };
         match self.entries.iter_mut().find(|e| e.robot.name == entry.robot.name) {
             Some(slot) => *slot = entry,
             None => self.entries.push(entry),
+        }
+        self
+    }
+
+    /// Set intra-route parallelism for every registered robot (`0` = one
+    /// chunk per pool worker, `1` = serial). Quantized routes ignore it.
+    pub fn set_parallelism(&mut self, parallel: usize) -> &mut Self {
+        for e in &mut self.entries {
+            e.parallel = parallel;
         }
         self
     }
@@ -106,6 +138,7 @@ impl RobotRegistry {
                         robot: entry.robot.clone(),
                         function,
                         batch: entry.batch,
+                        parallel: entry.parallel,
                     },
                     BackendKind::NativeQuant(fmt) => BackendSpec::NativeQuant {
                         robot: entry.robot.clone(),

@@ -1,7 +1,13 @@
 //! Serving statistics: request latency distribution and batch fill.
 
+use crate::util::rng::Rng;
+
+/// Reservoir capacity for the latency sample. Bounded memory no matter
+/// how long the server runs.
+const RESERVOIR: usize = 65536;
+
 /// Mutable accumulator the workers feed; shared behind a mutex.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct StatsInner {
     /// Requests answered successfully.
     pub completed: u64,
@@ -11,16 +17,44 @@ pub struct StatsInner {
     pub fill_sum: f64,
     /// Sum of per-batch execution times [µs].
     pub exec_us_sum: f64,
-    /// Request latencies [µs]; bounded reservoir (first 65536).
+    /// Request latencies [µs]: a uniform reservoir sample (Vitter's
+    /// Algorithm R) over **all** completed requests — not the first
+    /// `RESERVOIR`, which would freeze p50/p95 on startup traffic.
+    /// `completed` doubles as the sampling denominator (every completed
+    /// request records exactly one latency).
     pub latencies_us: Vec<f64>,
+    /// Seeded PRNG driving reservoir replacement — deterministic across
+    /// runs for a given record sequence.
+    rng: Rng,
+}
+
+impl Default for StatsInner {
+    fn default() -> StatsInner {
+        StatsInner {
+            completed: 0,
+            batches: 0,
+            fill_sum: 0.0,
+            exec_us_sum: 0.0,
+            latencies_us: Vec::new(),
+            rng: Rng::new(0x5EED_1A7E),
+        }
+    }
 }
 
 impl StatsInner {
     /// Record one completed request's queue-to-answer latency.
     pub fn record(&mut self, latency_us: f64) {
         self.completed += 1;
-        if self.latencies_us.len() < 65536 {
+        if self.latencies_us.len() < RESERVOIR {
             self.latencies_us.push(latency_us);
+        } else {
+            // Algorithm R: keep the newcomer with probability K/seen by
+            // replacing a uniformly random slot — every latency ever
+            // recorded ends up in the reservoir with equal probability.
+            let j = (self.rng.next_u64() % self.completed) as usize;
+            if j < RESERVOIR {
+                self.latencies_us[j] = latency_us;
+            }
         }
     }
 
@@ -39,7 +73,11 @@ impl StatsInner {
             if lat.is_empty() {
                 0.0
             } else {
-                lat[((lat.len() as f64 * p) as usize).min(lat.len() - 1)]
+                // Nearest-rank: the ⌈p·len⌉-th smallest value (1-based),
+                // so pct(0.5) over 100 samples reads index 49 — the old
+                // `(len·p) as usize` truncation read index 50.
+                let rank = (p * lat.len() as f64).ceil() as usize;
+                lat[rank.saturating_sub(1).min(lat.len() - 1)]
             }
         };
         ServeStats {
@@ -91,6 +129,62 @@ mod tests {
         assert_eq!(snap.batches, 2);
         assert!((snap.mean_fill - 0.75).abs() < 1e-12);
         assert!(snap.p50_latency_us <= snap.p95_latency_us);
+    }
+
+    /// Nearest-rank percentiles: over samples 0..100 the median is the
+    /// 50th smallest = 49.0 (the pre-fix truncation indexed 50).
+    #[test]
+    fn nearest_rank_indexing() {
+        let mut s = StatsInner::default();
+        for i in 0..100 {
+            s.record(i as f64);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.p50_latency_us, 49.0);
+        assert_eq!(snap.p95_latency_us, 94.0);
+        // Single sample: every percentile is that sample.
+        let mut one = StatsInner::default();
+        one.record(7.0);
+        let snap = one.snapshot();
+        assert_eq!(snap.p50_latency_us, 7.0);
+        assert_eq!(snap.p95_latency_us, 7.0);
+    }
+
+    /// Under sustained load the reservoir must keep sampling: late
+    /// requests appear and the percentiles track the whole run, not the
+    /// first 65536 (where the old truncating buffer froze — with
+    /// ascending latencies it would report p50 ≈ 32768 forever).
+    #[test]
+    fn reservoir_samples_whole_run() {
+        let mut s = StatsInner::default();
+        let total = 200_000u64;
+        for i in 0..total {
+            s.record(i as f64);
+        }
+        assert_eq!(s.completed, total);
+        assert_eq!(s.latencies_us.len(), RESERVOIR, "reservoir stays bounded");
+        assert!(
+            s.latencies_us.iter().any(|&x| x > 150_000.0),
+            "late latencies must be sampled"
+        );
+        let snap = s.snapshot();
+        // True p50/p95 of 0..200000 are ~100000/~190000; a uniform
+        // reservoir of 65536 samples lands well within ±5%.
+        assert!((snap.p50_latency_us - 100_000.0).abs() < 5_000.0, "p50 {}", snap.p50_latency_us);
+        assert!((snap.p95_latency_us - 190_000.0).abs() < 5_000.0, "p95 {}", snap.p95_latency_us);
+    }
+
+    /// Same record sequence ⇒ same reservoir (seeded, deterministic).
+    #[test]
+    fn reservoir_is_deterministic() {
+        let run = || {
+            let mut s = StatsInner::default();
+            for i in 0..100_000 {
+                s.record(i as f64);
+            }
+            s.latencies_us
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -92,8 +92,11 @@ pub fn eval_batch(robot: &Robot, kernel: BatchKernel, tasks: &[BatchTask]) -> Ve
 ///
 /// Earlier revisions spawned fresh threads per batch via
 /// `std::thread::scope`; the pool removes that per-batch respawn from
-/// the serving hot path. Results are identical to [`eval_batch`] (same
-/// kernels, one workspace per worker).
+/// the serving hot path. This convenience entry pays one copy of `tasks`
+/// into a shared `Arc<[BatchTask]>` — callers that already hold `Arc`s
+/// (or flat f32 operands) should use [`super::pool::WorkerPool`]'s
+/// `eval_shared` / `eval_flat` directly. Results are identical to
+/// [`eval_batch`] (same kernels, one workspace per worker).
 pub fn eval_batch_par(
     robot: &Robot,
     kernel: BatchKernel,

@@ -15,7 +15,7 @@ pub fn crba(robot: &Robot, q: &[f64]) -> DMat {
 /// Thin allocating wrapper over [`crba_into`].
 pub fn crba_with_kin(robot: &Robot, kin: &Kin) -> DMat {
     let n = robot.dof();
-    let mut ic = vec![[[0.0; 6]; 6]; n];
+    let mut ic: Vec<M6> = vec![[0.0; 36]; n];
     let mut m = DMat::zeros(n, n);
     crba_into(robot, kin, &mut ic, &mut m);
     m

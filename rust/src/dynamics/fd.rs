@@ -9,7 +9,7 @@ use super::kinematics::Kin;
 use super::minv::minv_with_kin;
 use super::rnea::bias_into;
 use crate::model::Robot;
-use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::mat6::{matvec6, outer6, scale6, sub6, xtax, M6};
 use crate::spatial::SV;
 
 /// q̈ = M⁻¹(q) · (τ − C(q, q̇, f_ext)) — the composition the accelerator
@@ -74,7 +74,7 @@ impl AbaScratch {
         AbaScratch {
             c: vec![SV::ZERO; n],
             pa: vec![SV::ZERO; n],
-            ia: vec![[[0.0; 6]; 6]; n],
+            ia: vec![[0.0; 36]; n],
             u: vec![SV::ZERO; n],
             dinv: vec![0.0; n],
             uu: vec![0.0; n],
@@ -124,12 +124,9 @@ pub fn aba_into(
         scr.uu[i] = tau[i] - s.dot(&scr.pa[i]);
         if let Some(p) = robot.links[i].parent {
             let ia_art = sub6(&scr.ia[i], &scale6(&outer6(&ui, &ui), di_inv));
-            let xm = kin.xup[i].to_mat6();
-            let contrib = mul6(&t6(&xm), &mul6(&ia_art, &xm));
-            for r in 0..6 {
-                for cc in 0..6 {
-                    scr.ia[p][r][cc] += contrib[r][cc];
-                }
+            let contrib = xtax(&kin.xup[i].to_mat6(), &ia_art);
+            for (dst, c) in scr.ia[p].iter_mut().zip(&contrib) {
+                *dst += c;
             }
             let pa_art = scr.pa[i]
                 + matvec6(&ia_art, &scr.c[i])

@@ -29,7 +29,7 @@
 
 use super::kinematics::Kin;
 use crate::model::Robot;
-use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::mat6::{matvec6, outer6, scale6, sub6, xtax, M6};
 use crate::spatial::{DMat, SV};
 
 /// Shared-divider model: requests are enqueued during the backward pass
@@ -104,7 +104,7 @@ pub struct MinvScratch {
 impl MinvScratch {
     pub fn new(n: usize) -> MinvScratch {
         MinvScratch {
-            ia: vec![[[0.0; 6]; 6]; n],
+            ia: vec![[0.0; 36]; n],
             u: vec![SV::ZERO; n],
             dinv: vec![0.0; n],
             f: vec![SV::ZERO; n * n],
@@ -161,14 +161,11 @@ pub fn minv_dd_into(
             // N_i = D_i·IA_i − U Uᵀ  (scalar·matrix + rank-1: extra MACs)
             let uut = outer6(&ui, &ui);
             let ni = sub6(&scale6(&scr.ia[i], di), &uut);
-            let xm = kin.xup[i].to_mat6();
-            let contrib = mul6(&t6(&xm), &mul6(&ni, &xm));
+            let contrib = xtax(&kin.xup[i].to_mat6(), &ni);
             // Parent stage consumes inv_i from the divider (concurrent):
             let inv_i = 1.0 / di;
-            for r in 0..6 {
-                for c in 0..6 {
-                    scr.ia[p][r][c] += contrib[r][c] * inv_i;
-                }
+            for (dst, c) in scr.ia[p].iter_mut().zip(&contrib) {
+                *dst += c * inv_i;
             }
             // G_i = D_i·F_i + U_i·row_i ; F_λ += Xᵀ G_i · inv_i
             for &j in &topo.subcols[i] {
@@ -257,12 +254,9 @@ pub fn minv_with_kin(robot: &Robot, kin: &Kin) -> DMat {
             // IA_λ += Xᵀ (IA − U Uᵀ/D) X
             let uut = outer6(&ui, &ui);
             let ia_art = sub6(&ia[i], &scale6(&uut, di_inv));
-            let xm = kin.xup[i].to_mat6();
-            let contrib = mul6(&t6(&xm), &mul6(&ia_art, &xm));
-            for r in 0..6 {
-                for c in 0..6 {
-                    ia[p][r][c] += contrib[r][c];
-                }
+            let contrib = xtax(&kin.xup[i].to_mat6(), &ia_art);
+            for (dst, c) in ia[p].iter_mut().zip(&contrib) {
+                *dst += c;
             }
             // F_λ += Xᵀ (F_i + U_i · minv_row_i) — subtree columns only.
             for j in 0..n {

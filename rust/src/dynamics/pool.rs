@@ -7,27 +7,76 @@
 //! analogue of the accelerator's resident RTP pipelines, which exist
 //! once and have tasks streamed through them.
 //!
-//! Work items are contiguous chunks of a shared task slice
-//! (`Arc<Vec<BatchTask>>`), pulled from one injector queue; each worker
-//! caches the `DynWorkspace` for the robot it saw last (compared by
-//! `Arc` identity), so all chunks of one batch reuse a single workspace
-//! per worker with no rebuild.
+//! Two job shapes flow through the same injector queue:
+//!
+//! * **task chunks** — contiguous ranges of a shared `Arc<[BatchTask]>`
+//!   slice (the f64 batch API);
+//! * **flat chunks** ([`WorkerPool::eval_flat`]) — *borrowed* views into
+//!   a caller's flat-f32 serving batch, written in place. Nothing is
+//!   copied or allocated per batch: the coordinator's route worker hands
+//!   the pool pointers into the operand arrays it already assembled and
+//!   blocks until every chunk has answered, which is exactly what makes
+//!   the borrow sound.
+//!
+//! Each worker keeps a small MRU set of [`DynWorkspace`]s (plus
+//! flat-path staging buffers), one per robot *structure* it recently
+//! served — matched by `Arc` identity with a structural fallback — so
+//! all chunks of one batch reuse a single workspace per worker with no
+//! rebuild, and a multi-robot registry's parallel routes can interleave
+//! batches of different robots (the serving steady state) without ever
+//! rebuilding either workspace.
 
 use super::batch::{eval_batch, BatchKernel, BatchOutput, BatchTask};
 use super::workspace::DynWorkspace;
 use crate::model::Robot;
+use crate::spatial::DMat;
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// Borrowed view of one contiguous chunk of a flat-f32 batch: `rows`
+/// input rows of length `n` starting at `q`/`qd`/`u`, outputs written in
+/// place to `out` (`rows · out_per_task` values). The raw pointers stay
+/// valid because [`WorkerPool::eval_flat`] blocks until every chunk has
+/// answered (the per-worker `catch_unwind` guarantees an answer even
+/// when a task panics), and chunks never overlap.
+struct FlatChunk {
+    q: *const f32,
+    qd: *const f32,
+    u: *const f32,
+    out: *mut f32,
+    rows: usize,
+    n: usize,
+    out_per_task: usize,
+}
+
+// SAFETY: the pointers reference disjoint chunk ranges of buffers that
+// outlive the blocking eval_flat call that created this job.
+unsafe impl Send for FlatChunk {}
+
+/// What one pool job evaluates.
+enum PoolWork {
+    /// A contiguous range of a shared task slice (f64 batch API).
+    Tasks { tasks: Arc<[BatchTask]>, range: Range<usize> },
+    /// A borrowed flat-f32 chunk written in place (serving hot path).
+    Flat(FlatChunk),
+}
+
+/// What a finished job reports back.
+enum PoolPart {
+    /// Outputs of a task chunk, in task order.
+    Outputs(Vec<BatchOutput>),
+    /// A flat chunk wrote into the caller's buffer; nothing to return.
+    Done,
+}
 
 /// One chunk of a batch, evaluated by whichever worker pulls it first.
 struct PoolJob {
     robot: Arc<Robot>,
     kernel: BatchKernel,
-    tasks: Arc<Vec<BatchTask>>,
-    range: Range<usize>,
-    /// (chunk ordinal, outputs or panic message) back to the caller.
-    out: Sender<(usize, Result<Vec<BatchOutput>, String>)>,
+    work: PoolWork,
+    /// (chunk ordinal, result or panic message) back to the caller.
+    out: Sender<(usize, Result<PoolPart, String>)>,
     ordinal: usize,
 }
 
@@ -73,7 +122,9 @@ impl WorkerPool {
     /// Evaluate `tasks` split into at most `max_chunks` contiguous chunks
     /// across the pool. Outputs are returned in task order; results are
     /// identical to [`eval_batch`] (same kernels, same workspace
-    /// semantics).
+    /// semantics). Convenience wrapper over [`WorkerPool::eval_shared`]
+    /// that pays one robot clone and one slice copy; callers that hold
+    /// `Arc`s already should use `eval_shared` directly.
     pub fn eval(
         &self,
         robot: &Robot,
@@ -88,8 +139,27 @@ impl WorkerPool {
         if chunks <= 1 {
             return eval_batch(robot, kernel, tasks);
         }
-        let robot = Arc::new(robot.clone());
-        let tasks = Arc::new(tasks.to_vec());
+        self.eval_shared(&Arc::new(robot.clone()), kernel, &Arc::from(tasks), chunks)
+    }
+
+    /// Evaluate a shared task slice split into at most `max_chunks`
+    /// contiguous chunks. Allocation per call is limited to the channel
+    /// and the reassembly vector — the robot and tasks travel as `Arc`
+    /// clones.
+    pub fn eval_shared(
+        &self,
+        robot: &Arc<Robot>,
+        kernel: BatchKernel,
+        tasks: &Arc<[BatchTask]>,
+        max_chunks: usize,
+    ) -> Vec<BatchOutput> {
+        if tasks.is_empty() {
+            return Vec::new();
+        }
+        let chunks = max_chunks.max(1).min(self.threads).min(tasks.len());
+        if chunks <= 1 {
+            return eval_batch(robot, kernel, tasks);
+        }
         let chunk = tasks.len().div_ceil(chunks);
         let (tx, rx) = channel();
         let mut sent = 0usize;
@@ -100,10 +170,9 @@ impl WorkerPool {
                 let end = (start + chunk).min(tasks.len());
                 injector
                     .send(PoolJob {
-                        robot: Arc::clone(&robot),
+                        robot: Arc::clone(robot),
                         kernel,
-                        tasks: Arc::clone(&tasks),
-                        range: start..end,
+                        work: PoolWork::Tasks { tasks: Arc::clone(tasks), range: start..end },
                         out: tx.clone(),
                         ordinal: sent,
                     })
@@ -116,9 +185,10 @@ impl WorkerPool {
         let mut parts: Vec<Option<Vec<BatchOutput>>> = (0..sent).map(|_| None).collect();
         let mut panic_msg: Option<String> = None;
         for _ in 0..sent {
-            let (ordinal, outs) = rx.recv().expect("pool worker answered");
-            match outs {
-                Ok(outs) => parts[ordinal] = Some(outs),
+            let (ordinal, res) = rx.recv().expect("pool worker answered");
+            match res {
+                Ok(PoolPart::Outputs(outs)) => parts[ordinal] = Some(outs),
+                Ok(PoolPart::Done) => {} // not produced by task chunks
                 Err(msg) => panic_msg = Some(msg),
             }
         }
@@ -129,25 +199,199 @@ impl WorkerPool {
         }
         parts.into_iter().flat_map(|p| p.expect("every chunk answered")).collect()
     }
+
+    /// Evaluate a flat-f32 serving batch across the pool, writing the
+    /// outputs in place — the zero-copy handoff of the coordinator's
+    /// parallel routes. `q`/`qd`/`u` each hold `q.len() / n` rows of
+    /// length `n` (pass `q` again for the unused operands of M⁻¹);
+    /// `out` must hold `rows · out_per_task` values (`out_per_task` = n
+    /// for RNEA/FD, n² for M⁻¹). The batch splits into at most
+    /// `max_chunks` contiguous chunks; per-task results are bitwise
+    /// identical to a serial decode→kernel→encode loop because the
+    /// workers run exactly that loop. Panics from malformed tasks are
+    /// re-raised here after every chunk has answered.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_flat(
+        &self,
+        robot: &Arc<Robot>,
+        kernel: BatchKernel,
+        q: &[f32],
+        qd: &[f32],
+        u: &[f32],
+        n: usize,
+        out_per_task: usize,
+        out: &mut [f32],
+        max_chunks: usize,
+    ) {
+        assert!(n > 0, "flat batches need a positive row length");
+        let rows = q.len() / n;
+        assert_eq!(q.len(), rows * n, "q rows misaligned");
+        assert_eq!(qd.len(), rows * n, "qd rows misaligned");
+        assert_eq!(u.len(), rows * n, "u rows misaligned");
+        assert_eq!(out.len(), rows * out_per_task, "output rows misaligned");
+        if rows == 0 {
+            return;
+        }
+        let chunks = max_chunks.max(1).min(self.threads).min(rows);
+        let per = rows.div_ceil(chunks);
+        let (tx, rx) = channel();
+        let mut sent = 0usize;
+        {
+            let injector = self.injector.lock().unwrap();
+            let mut start = 0usize;
+            while start < rows {
+                let end = (start + per).min(rows);
+                let chunk = FlatChunk {
+                    q: q[start * n..].as_ptr(),
+                    qd: qd[start * n..].as_ptr(),
+                    u: u[start * n..].as_ptr(),
+                    // SAFETY: chunk output ranges are disjoint; the &mut
+                    // borrow of `out` is held for the whole blocking call.
+                    out: unsafe { out.as_mut_ptr().add(start * out_per_task) },
+                    rows: end - start,
+                    n,
+                    out_per_task,
+                };
+                injector
+                    .send(PoolJob {
+                        robot: Arc::clone(robot),
+                        kernel,
+                        work: PoolWork::Flat(chunk),
+                        out: tx.clone(),
+                        ordinal: sent,
+                    })
+                    .expect("worker pool alive");
+                sent += 1;
+                start = end;
+            }
+        }
+        drop(tx);
+        // Block until EVERY chunk has answered — the borrows handed out
+        // above must not outlive this frame while a worker still holds
+        // them. A recv error means all job senders are gone (every chunk
+        // finished or was dropped by a dying worker), so unwinding is
+        // sound there too.
+        let mut panic_msg: Option<String> = None;
+        for _ in 0..sent {
+            let (_, res) = rx.recv().expect("pool worker answered");
+            if let Err(msg) = res {
+                panic_msg = Some(msg);
+            }
+        }
+        if let Some(msg) = panic_msg {
+            panic!("worker pool task panicked: {msg}");
+        }
+    }
 }
 
 /// Whether a workspace built for `a` can serve `b`: every buffer in
 /// [`DynWorkspace`] is sized from the DOF and the precomputed topology
-/// column lists depend only on the parent structure, so equal parents ⇒
-/// reusable workspace (inertias/limits don't matter — they are read from
-/// the robot per task).
+/// column lists depend only on the parent structure, so equal link
+/// counts + equal parents ⇒ reusable workspace (inertias/limits don't
+/// matter — they are read from the robot per task). The explicit length
+/// check keeps `zip` honest: without it a robot whose links are a strict
+/// prefix of the cached robot's would alias the cached workspace.
 fn same_structure(a: &Robot, b: &Robot) -> bool {
     a.dof() == b.dof()
+        && a.links.len() == b.links.len()
         && a.links.iter().zip(&b.links).all(|(x, y)| x.parent == y.parent)
 }
 
+/// Per-worker cached state: the workspace for the robot structure last
+/// seen plus the flat-path staging buffers, all sized from the DOF.
+struct WorkerCache {
+    robot: Arc<Robot>,
+    ws: DynWorkspace,
+    q: Vec<f64>,
+    qd: Vec<f64>,
+    u: Vec<f64>,
+    out_vec: Vec<f64>,
+    out_mat: DMat,
+}
+
+impl WorkerCache {
+    fn new(robot: &Arc<Robot>) -> WorkerCache {
+        let n = robot.dof();
+        WorkerCache {
+            robot: Arc::clone(robot),
+            ws: DynWorkspace::new(robot),
+            q: vec![0.0; n],
+            qd: vec![0.0; n],
+            u: vec![0.0; n],
+            out_vec: vec![0.0; n],
+            out_mat: DMat::zeros(n, n),
+        }
+    }
+}
+
+fn decode32(src: &[f32], dst: &mut [f64]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s as f64;
+    }
+}
+
+fn encode32(src: &[f64], dst: &mut [f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = *s as f32;
+    }
+}
+
+/// Evaluate one flat chunk exactly as the serial native engine does —
+/// decode each f32 row into f64 staging, run the workspace kernel,
+/// encode the f64 result back — so per-task outputs are bitwise
+/// identical to serial execution.
+///
+/// # Safety
+/// The chunk's pointers must reference live, disjoint buffers of the
+/// advertised lengths; [`WorkerPool::eval_flat`] guarantees this by
+/// blocking until the chunk answers.
+unsafe fn eval_flat_chunk(
+    robot: &Robot,
+    kernel: BatchKernel,
+    cache: &mut WorkerCache,
+    c: &FlatChunk,
+) {
+    let n = c.n;
+    assert_eq!(robot.dof(), n, "flat chunk row length != robot DOF");
+    for k in 0..c.rows {
+        let q = std::slice::from_raw_parts(c.q.add(k * n), n);
+        let out = std::slice::from_raw_parts_mut(c.out.add(k * c.out_per_task), c.out_per_task);
+        decode32(q, &mut cache.q);
+        match kernel {
+            BatchKernel::Rnea => {
+                decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), &mut cache.qd);
+                decode32(std::slice::from_raw_parts(c.u.add(k * n), n), &mut cache.u);
+                cache.ws.rnea_into(robot, &cache.q, &cache.qd, &cache.u, None, &mut cache.out_vec);
+                encode32(&cache.out_vec, out);
+            }
+            BatchKernel::Fd => {
+                decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), &mut cache.qd);
+                decode32(std::slice::from_raw_parts(c.u.add(k * n), n), &mut cache.u);
+                cache.ws.fd_into(robot, &cache.q, &cache.qd, &cache.u, None, &mut cache.out_vec);
+                encode32(&cache.out_vec, out);
+            }
+            BatchKernel::Minv => {
+                cache.ws.minv_into(robot, &cache.q, &mut cache.out_mat);
+                encode32(&cache.out_mat.d, out);
+            }
+        }
+    }
+}
+
+/// Robot structures each pool worker keeps warm workspaces for (MRU):
+/// bounds worker memory while letting a multi-robot registry's parallel
+/// routes interleave batches without rebuilding — one slot per resident
+/// robot structure in the steady state.
+const WORKER_CACHE_SLOTS: usize = 8;
+
 /// Worker loop: pull chunks from the shared queue until the pool drops.
 fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
-    // Workspace cached by robot structure: `Arc::ptr_eq` is the fast
-    // path (all chunks of one `eval` call share the robot Arc); the
-    // structural check keeps the cache warm across successive batches
-    // for the same robot, which is the serving steady state.
-    let mut cached: Option<(Arc<Robot>, DynWorkspace)> = None;
+    // MRU cache keyed by robot structure, most recent first:
+    // `Arc::ptr_eq` is the fast path (all chunks of one batch share the
+    // robot Arc, and a serving engine holds one Arc across batches); the
+    // structural check keeps slots warm across robot clones with
+    // identical topology.
+    let mut cached: Vec<WorkerCache> = Vec::new();
     loop {
         let job = {
             let rx = queue.lock().unwrap();
@@ -157,41 +401,54 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
             Ok(j) => j,
             Err(_) => return, // pool dropped
         };
-        let rebuild = match &cached {
-            Some((robot, _)) => {
-                !Arc::ptr_eq(robot, &job.robot) && !same_structure(robot, &job.robot)
+        let hit = cached.iter().position(|c| {
+            Arc::ptr_eq(&c.robot, &job.robot) || same_structure(&c.robot, &job.robot)
+        });
+        let mut cache = match hit {
+            Some(i) => {
+                let mut c = cached.remove(i);
+                // Remember the newest Arc so the fast path keeps hitting.
+                c.robot = Arc::clone(&job.robot);
+                c
             }
-            None => true,
+            None => WorkerCache::new(&job.robot),
         };
-        if rebuild {
-            cached = Some((Arc::clone(&job.robot), DynWorkspace::new(&job.robot)));
-        } else if let Some((robot, _)) = &mut cached {
-            // Remember the newest Arc so the fast path keeps hitting.
-            *robot = Arc::clone(&job.robot);
-        }
-        let (_, ws) = cached.as_mut().expect("workspace cached above");
         // Contain task panics (malformed tasks assert inside the
-        // kernels): the caller gets the panic re-raised by `eval`, but
-        // this worker — shared process-wide — stays alive for later
-        // batches. AssertUnwindSafe is sound because the workspace is
-        // dropped below on panic and kernels overwrite it per task
-        // anyway.
-        let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            job.tasks[job.range.clone()]
-                .iter()
-                .map(|t| super::batch::eval_one(&job.robot, job.kernel, ws, t))
-                .collect::<Vec<BatchOutput>>()
+        // kernels): the caller gets the panic re-raised by the eval
+        // entry point, but this worker — shared process-wide — stays
+        // alive for later batches. AssertUnwindSafe is sound because the
+        // cache is dropped below on panic and kernels overwrite it per
+        // task anyway.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match &job.work {
+            PoolWork::Tasks { tasks, range } => PoolPart::Outputs(
+                tasks[range.clone()]
+                    .iter()
+                    .map(|t| super::batch::eval_one(&job.robot, job.kernel, &mut cache.ws, t))
+                    .collect(),
+            ),
+            PoolWork::Flat(chunk) => {
+                // SAFETY: the caller blocks in eval_flat until this job
+                // answers, so the borrowed rows outlive the evaluation.
+                unsafe { eval_flat_chunk(&job.robot, job.kernel, &mut cache, chunk) };
+                PoolPart::Done
+            }
         }));
-        let outs = match outs {
-            Ok(outs) => Ok(outs),
+        let result = match result {
+            Ok(part) => {
+                // Return the workspace to the front of the MRU set.
+                cached.insert(0, cache);
+                cached.truncate(WORKER_CACHE_SLOTS);
+                Ok(part)
+            }
             Err(p) => {
-                cached = None; // discard possibly half-written workspace
+                // Discard the possibly half-written workspace.
+                drop(cache);
                 Err(panic_message(&p))
             }
         };
-        // The caller may have gone away (it never does today — eval()
-        // blocks); dropping the result is then harmless.
-        let _ = job.out.send((job.ordinal, outs));
+        // The caller may have gone away (it never does today — the eval
+        // entry points block); dropping the result is then harmless.
+        let _ = job.out.send((job.ordinal, result));
     }
 }
 
@@ -248,6 +505,101 @@ mod tests {
             let want = eval_batch(&robot, BatchKernel::Rnea, &tasks);
             for (a, b) in want.iter().zip(&got) {
                 assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
+            }
+        }
+    }
+
+    /// Same DOF, different topology: the structural cache must rebuild,
+    /// not alias. (Regression: `same_structure` also checks link-count
+    /// equality so a prefix-parent robot can never alias either.)
+    #[test]
+    fn structural_cache_rejects_same_dof_different_topology() {
+        let chain = builtin::iiwa();
+        let mut branched = builtin::iiwa();
+        branched.name = "iiwa-branched".to_string();
+        // Re-root the outer arm: links 4..7 hang off link 2 instead of
+        // continuing the chain (still topologically ordered).
+        branched.links[4].parent = Some(2);
+        assert!(same_structure(&chain, &builtin::iiwa()));
+        assert!(!same_structure(&chain, &branched));
+
+        // Interleave the two robots through one small pool: every batch
+        // must match its own serial reference (an aliased workspace
+        // would reuse the wrong topology column lists).
+        let pool = WorkerPool::new(2);
+        for (robot, seed) in [(&chain, 910u64), (&branched, 911), (&chain, 912)] {
+            let tasks = random_tasks(robot, 12, seed);
+            let got = pool.eval(robot, BatchKernel::Fd, &tasks, 2);
+            let want = eval_batch(robot, BatchKernel::Fd, &tasks);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
+            }
+        }
+    }
+
+    /// The zero-copy flat path must agree bitwise with the f64 batch API
+    /// evaluated on the f32-rounded operands (both run the same
+    /// decode→kernel chain).
+    #[test]
+    fn flat_batch_matches_task_batch_bitwise() {
+        let pool = WorkerPool::new(3);
+        let robot = Arc::new(builtin::iiwa());
+        let n = robot.dof();
+        let rows = 13;
+        let mut rng = Rng::new(920);
+        let mut q32 = Vec::with_capacity(rows * n);
+        let mut qd32 = Vec::with_capacity(rows * n);
+        let mut u32 = Vec::with_capacity(rows * n);
+        for _ in 0..rows {
+            let s = State::random(&robot, &mut rng);
+            q32.extend(s.q.iter().map(|&x| x as f32));
+            qd32.extend(s.qd.iter().map(|&x| x as f32));
+            u32.extend(rng.vec_range(n, -8.0, 8.0).iter().map(|&x| x as f32));
+        }
+        // Reference: serial f64 batch on the rounded operands, encoded.
+        let tasks: Vec<BatchTask> = (0..rows)
+            .map(|k| BatchTask {
+                q: q32[k * n..(k + 1) * n].iter().map(|&x| x as f64).collect(),
+                qd: qd32[k * n..(k + 1) * n].iter().map(|&x| x as f64).collect(),
+                u: u32[k * n..(k + 1) * n].iter().map(|&x| x as f64).collect(),
+            })
+            .collect();
+        for (kernel, per_task) in [(BatchKernel::Fd, n), (BatchKernel::Minv, n * n)] {
+            let want: Vec<f32> = eval_batch(&robot, kernel, &tasks)
+                .iter()
+                .flat_map(|o| match o {
+                    BatchOutput::Vector(v) => v.iter().map(|&x| x as f32).collect::<Vec<f32>>(),
+                    BatchOutput::Matrix(m) => m.d.iter().map(|&x| x as f32).collect(),
+                })
+                .collect();
+            let mut got = vec![0.0f32; rows * per_task];
+            for chunks in [2, 3, 16] {
+                got.fill(0.0);
+                match kernel {
+                    BatchKernel::Minv => pool.eval_flat(
+                        &robot,
+                        kernel,
+                        &q32,
+                        &q32,
+                        &q32,
+                        n,
+                        per_task,
+                        &mut got,
+                        chunks,
+                    ),
+                    _ => pool.eval_flat(
+                        &robot,
+                        kernel,
+                        &q32,
+                        &qd32,
+                        &u32,
+                        n,
+                        per_task,
+                        &mut got,
+                        chunks,
+                    ),
+                }
+                assert_eq!(got, want, "kernel {kernel:?} chunks {chunks}");
             }
         }
     }

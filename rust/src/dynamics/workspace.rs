@@ -18,7 +18,7 @@ use super::kinematics::Kin;
 use super::minv::{minv_dd_into, DividerQueue, MinvScratch, Topology};
 use super::rnea::{bias_into, rnea_into};
 use crate::model::Robot;
-use crate::spatial::{DMat, SV};
+use crate::spatial::{DMat, M6, SV};
 
 /// Preallocated, n-sized buffers for every dynamics kernel: the kinematic
 /// cache, RNEA link accelerations/forces, articulated inertias, the
@@ -47,7 +47,7 @@ pub struct DynWorkspace {
     /// M⁻¹ of the last `fd_into`/`minv_into` call.
     pub mi: DMat,
     /// CRBA composite-inertia scratch (aliases nothing else).
-    pub ic: Vec<[[f64; 6]; 6]>,
+    pub ic: Vec<M6>,
     /// ABA scratch for the oracle/simulator fast path.
     pub aba_scratch: AbaScratch,
 }
@@ -65,7 +65,7 @@ impl DynWorkspace {
             minv_scratch: MinvScratch::new(n),
             divq: DividerQueue::default(),
             mi: DMat::zeros(n, n),
-            ic: vec![[[0.0; 6]; 6]; n],
+            ic: vec![[0.0; 36]; n],
             aba_scratch: AbaScratch::new(n),
         }
     }

@@ -107,8 +107,7 @@ pub fn joint_priority(robot: &Robot) -> Vec<usize> {
     let score: Vec<(usize, f64)> = (0..n)
         .map(|i| {
             let m6 = robot.links[i].inertia.to_mat6();
-            let fro: f64 =
-                m6.iter().flat_map(|r| r.iter()).map(|x| x * x).sum::<f64>().sqrt();
+            let fro: f64 = m6.iter().map(|x| x * x).sum::<f64>().sqrt();
             (robot.depth(i), fro)
         })
         .collect();

@@ -22,7 +22,7 @@
 use super::qformat::QFormat;
 use crate::dynamics::kinematics::Kin;
 use crate::model::Robot;
-use crate::spatial::mat6::{matvec6, mul6, outer6, scale6, sub6, t6, M6};
+use crate::spatial::mat6::{matvec6, outer6, scale6, sub6, xtax, M6};
 use crate::spatial::{DMat, SV, V3};
 
 /// Quantization context: rounds scalars / spatial vectors / matrices.
@@ -49,10 +49,8 @@ impl Q {
 
     pub fn m6(&self, m: &M6) -> M6 {
         let mut out = *m;
-        for row in &mut out {
-            for x in row {
-                *x = self.s(*x);
-            }
+        for x in out.iter_mut() {
+            *x = self.s(*x);
         }
         out
     }
@@ -144,7 +142,7 @@ impl QuantScratch {
             zero: vec![0.0; n],
             a: vec![SV::ZERO; n],
             f: vec![SV::ZERO; n],
-            ia: vec![[[0.0; 6]; 6]; n],
+            ia: vec![[0.0; 36]; n],
             u: vec![SV::ZERO; n],
             dinv: vec![0.0; n],
             fcol: vec![vec![SV::ZERO; n]; n],
@@ -251,12 +249,9 @@ impl QuantScratch {
             if let Some(p) = robot.links[i].parent {
                 let uut = outer6(&ui, &ui);
                 let ia_art = ctx.m6(&sub6(&self.ia[i], &scale6(&uut, di_inv)));
-                let xm = self.kin.xup[i].to_mat6();
-                let contrib = ctx.m6(&mul6(&t6(&xm), &mul6(&ia_art, &xm)));
-                for r in 0..6 {
-                    for c in 0..6 {
-                        self.ia[p][r][c] = ctx.s(self.ia[p][r][c] + contrib[r][c]);
-                    }
+                let contrib = ctx.m6(&xtax(&self.kin.xup[i].to_mat6(), &ia_art));
+                for e in 0..36 {
+                    self.ia[p][e] = ctx.s(self.ia[p][e] + contrib[e]);
                 }
                 for j in 0..n {
                     let fij = self.fcol[i][j] + ui.scale(out[(i, j)]);

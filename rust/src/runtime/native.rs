@@ -14,24 +14,33 @@
 use super::artifact::ArtifactFn;
 use super::engine::EngineError;
 use super::DynamicsEngine;
-use crate::dynamics::DynWorkspace;
+use crate::dynamics::{BatchKernel, DynWorkspace, WorkerPool};
 use crate::model::{Robot, State};
 use crate::sim::integrate::step_semi_implicit_ws;
 use crate::spatial::DMat;
+use std::sync::Arc;
 
 /// Upper bound on trajectory-request horizons (steps); guards a worker
 /// against a single malformed request allocating an unbounded response.
 pub const MAX_HORIZON: usize = 65536;
 
+/// Smallest batch the parallel path bothers splitting: below this the
+/// channel round-trip costs more than a small-robot kernel call.
+pub const PAR_MIN_ROWS: usize = 2;
+
 /// Batched CPU executor for one (robot, function, batch) route.
 pub struct NativeEngine {
-    /// The robot this engine serves.
-    pub robot: Robot,
+    /// The robot this engine serves (shared with pool jobs, so the
+    /// workers' `Arc::ptr_eq` cache fast path hits on every batch).
+    pub robot: Arc<Robot>,
     /// The RBD function this route evaluates.
     pub function: ArtifactFn,
     /// Maximum tasks per executed batch.
     pub batch: usize,
     n: usize,
+    /// Max chunks a batch may split into on the global worker pool
+    /// (1 = serial execution on the calling thread).
+    par_chunks: usize,
     ws: DynWorkspace,
     // Per-task f64 staging buffers (decoded from the flat f32 operands).
     q: Vec<f64>,
@@ -42,10 +51,34 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
-    /// Build an engine (and its workspace) for one robot and function.
+    /// Build a serial engine (and its workspace) for one robot and
+    /// function.
     pub fn new(robot: Robot, function: ArtifactFn, batch: usize) -> NativeEngine {
+        NativeEngine::with_parallelism(robot, function, batch, 1)
+    }
+
+    /// As [`NativeEngine::new`], but batches of at least [`PAR_MIN_ROWS`]
+    /// rows split into up to `parallel` contiguous chunks on the global
+    /// [`WorkerPool`] (`0` = one chunk per pool worker, `1` = serial).
+    /// Results are bitwise identical to serial execution — the pooled
+    /// workers run the same decode→kernel→encode loop per task.
+    pub fn with_parallelism(
+        robot: Robot,
+        function: ArtifactFn,
+        batch: usize,
+        parallel: usize,
+    ) -> NativeEngine {
         let n = robot.dof();
         assert!(batch > 0, "batch must be positive");
+        // Clamp to the pool size: more chunks than workers only adds
+        // channel traffic, and on a 1-worker pool the serial loop below
+        // beats a pool round-trip outright. `parallel == 1` never touches
+        // (or spawns) the global pool.
+        let par_chunks = match parallel {
+            1 => 1,
+            0 => WorkerPool::global().threads(),
+            p => p.min(WorkerPool::global().threads()),
+        };
         NativeEngine {
             ws: DynWorkspace::new(&robot),
             q: vec![0.0; n],
@@ -53,11 +86,17 @@ impl NativeEngine {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
-            robot,
+            robot: Arc::new(robot),
             function,
             batch,
             n,
+            par_chunks,
         }
+    }
+
+    /// Max pool chunks a batch may split into (1 = serial).
+    pub fn parallelism(&self) -> usize {
+        self.par_chunks
     }
 
     /// Robot DOF (the per-operand row length).
@@ -76,11 +115,41 @@ impl NativeEngine {
     /// compiled fixed-shape executable the native engine accepts any
     /// B ≤ `batch`, so partial batches cost only the tasks they carry
     /// (no padding waste). Returns the flat f32 output for B rows.
+    ///
+    /// When the engine was built with parallelism
+    /// ([`NativeEngine::with_parallelism`]), batches of ≥
+    /// [`PAR_MIN_ROWS`] rows fan out across the global [`WorkerPool`]
+    /// zero-copy (the pool borrows these operand arrays in place) and the
+    /// outputs are bitwise identical to the serial path below.
     pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
         let b = validate_batch(inputs, self.function.arity(), n, self.batch)?;
         let per_task = DynamicsEngine::out_per_task(self);
         let mut out = vec![0.0f32; b * per_task];
+        if self.par_chunks > 1 && b >= PAR_MIN_ROWS {
+            let kernel = match self.function {
+                ArtifactFn::Rnea => BatchKernel::Rnea,
+                ArtifactFn::Fd => BatchKernel::Fd,
+                ArtifactFn::Minv => BatchKernel::Minv,
+            };
+            // M⁻¹ is unary; hand the pool `q` for the unused operands.
+            let (qd, u) = match self.function {
+                ArtifactFn::Minv => (&inputs[0], &inputs[0]),
+                _ => (&inputs[1], &inputs[2]),
+            };
+            WorkerPool::global().eval_flat(
+                &self.robot,
+                kernel,
+                &inputs[0],
+                qd,
+                u,
+                n,
+                per_task,
+                &mut out,
+                self.par_chunks,
+            );
+            return Ok(out);
+        }
         for k in 0..b {
             let span = k * n..(k + 1) * n;
             match self.function {

@@ -8,6 +8,7 @@
 //!       [ m c̃ᵀ    m 1  ]
 //! ```
 
+use super::mat6::M6;
 use super::v3m3::{M3, V3};
 use super::vec::SV;
 
@@ -42,17 +43,18 @@ impl Inertia {
         }
     }
 
-    /// Dense symmetric 6×6 (row-major blocks as documented above).
-    pub fn to_mat6(&self) -> [[f64; 6]; 6] {
-        let mut m = [[0.0; 6]; 6];
+    /// Dense symmetric 6×6 (flat row-major [`M6`], blocks as documented
+    /// above).
+    pub fn to_mat6(&self) -> M6 {
+        let mut m = [0.0; 36];
         let mcx = self.com.skew().scale(self.mass).0;
         for i in 0..3 {
             for j in 0..3 {
-                m[i][j] = self.i_o.0[i][j];
-                m[i][j + 3] = mcx[i][j];
-                m[i + 3][j] = -mcx[i][j]; // (m c̃)ᵀ = -m c̃
+                m[i * 6 + j] = self.i_o.0[i][j];
+                m[i * 6 + (j + 3)] = mcx[i][j];
+                m[(i + 3) * 6 + j] = -mcx[i][j]; // (m c̃)ᵀ = -m c̃
             }
-            m[i + 3][i + 3] = self.mass;
+            m[(i + 3) * 6 + (i + 3)] = self.mass;
         }
         m
     }
@@ -107,7 +109,7 @@ mod tests {
             for i in 0..6 {
                 let mut acc = 0.0;
                 for j in 0..6 {
-                    acc += m[i][j] * va[j];
+                    acc += m[i * 6 + j] * va[j];
                 }
                 assert!(close(acc, f[i], 1e-12));
             }
@@ -121,7 +123,7 @@ mod tests {
         let m = ine.to_mat6();
         for i in 0..6 {
             for j in 0..6 {
-                assert!(close(m[i][j], m[j][i], 1e-13));
+                assert!(close(m[i * 6 + j], m[j * 6 + i], 1e-13));
             }
         }
     }

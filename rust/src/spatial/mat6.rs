@@ -1,62 +1,64 @@
 //! Dense 6×6 matrix ops for articulated-body quantities.
+//!
+//! `M6` is stored **flat row-major** (`[f64; 36]`, entry (i, j) at
+//! `i * 6 + j`) rather than as nested `[[f64; 6]; 6]` rows: the kernels
+//! below are straight-line loops over contiguous lanes with no
+//! data-dependent branches, which is what the autovectorizer needs to
+//! turn `mul6`/`outer6` — the ops that dominate the Minv/CRBA sweeps —
+//! into packed FMA streams (the CPU analogue of the accelerator's
+//! MAC-array RTP datapath).
 
 use super::vec::SV;
 use super::xform::Xform;
 
-pub type M6 = [[f64; 6]; 6];
+/// Flat row-major 6×6 matrix: entry (i, j) lives at `i * 6 + j`.
+pub type M6 = [f64; 36];
 
 pub fn zero6() -> M6 {
-    [[0.0; 6]; 6]
+    [0.0; 36]
 }
 
 pub fn ident6() -> M6 {
     let mut m = zero6();
     for i in 0..6 {
-        m[i][i] = 1.0;
+        m[i * 6 + i] = 1.0;
     }
     m
 }
 
 pub fn add6(a: &M6, b: &M6) -> M6 {
     let mut out = *a;
-    for i in 0..6 {
-        for j in 0..6 {
-            out[i][j] += b[i][j];
-        }
+    for (o, x) in out.iter_mut().zip(b) {
+        *o += x;
     }
     out
 }
 
 pub fn sub6(a: &M6, b: &M6) -> M6 {
     let mut out = *a;
-    for i in 0..6 {
-        for j in 0..6 {
-            out[i][j] -= b[i][j];
-        }
+    for (o, x) in out.iter_mut().zip(b) {
+        *o -= x;
     }
     out
 }
 
 pub fn scale6(a: &M6, s: f64) -> M6 {
     let mut out = *a;
-    for row in &mut out {
-        for x in row {
-            *x *= s;
-        }
+    for x in out.iter_mut() {
+        *x *= s;
     }
     out
 }
 
+/// Branch-free row-major product: for each (i, k) the scalar `a[i][k]`
+/// streams across a contiguous row of `b`, so the j-loop vectorizes.
 pub fn mul6(a: &M6, b: &M6) -> M6 {
     let mut out = zero6();
     for i in 0..6 {
         for k in 0..6 {
-            let aik = a[i][k];
-            if aik == 0.0 {
-                continue;
-            }
+            let aik = a[i * 6 + k];
             for j in 0..6 {
-                out[i][j] += aik * b[k][j];
+                out[i * 6 + j] += aik * b[k * 6 + j];
             }
         }
     }
@@ -67,7 +69,7 @@ pub fn t6(a: &M6) -> M6 {
     let mut out = zero6();
     for i in 0..6 {
         for j in 0..6 {
-            out[i][j] = a[j][i];
+            out[i * 6 + j] = a[j * 6 + i];
         }
     }
     out
@@ -77,9 +79,11 @@ pub fn matvec6(a: &M6, v: &SV) -> SV {
     let x = v.to_array();
     let mut y = [0.0; 6];
     for i in 0..6 {
+        let mut acc = 0.0;
         for j in 0..6 {
-            y[i] += a[i][j] * x[j];
+            acc += a[i * 6 + j] * x[j];
         }
+        y[i] = acc;
     }
     SV::from_slice(&y)
 }
@@ -91,7 +95,39 @@ pub fn outer6(u: &SV, v: &SV) -> M6 {
     let mut out = zero6();
     for i in 0..6 {
         for j in 0..6 {
-            out[i][j] = ua[i] * va[j];
+            out[i * 6 + j] = ua[i] * va[j];
+        }
+    }
+    out
+}
+
+/// Fused congruence transform XᵀAX — the hot inner operation of every
+/// articulated-inertia propagation. Accumulates each entry in the same
+/// k-ascending order as `mul6(&t6(x), &mul6(a, x))` (so results are
+/// bitwise identical to the composed form) but without materializing the
+/// transpose or an extra intermediate, and with both passes running over
+/// contiguous rows.
+pub fn xtax(x: &M6, a: &M6) -> M6 {
+    // t = A X
+    let mut t = zero6();
+    for i in 0..6 {
+        for k in 0..6 {
+            let aik = a[i * 6 + k];
+            for j in 0..6 {
+                t[i * 6 + j] += aik * x[k * 6 + j];
+            }
+        }
+    }
+    // out = Xᵀ t: out[i][j] = Σ_k x[k][i] · t[k][j]; k outermost keeps
+    // both operand rows contiguous and the per-entry addition order
+    // identical to mul6's.
+    let mut out = zero6();
+    for k in 0..6 {
+        for i in 0..6 {
+            let xki = x[k * 6 + i];
+            for j in 0..6 {
+                out[i * 6 + j] += xki * t[k * 6 + j];
+            }
         }
     }
     out
@@ -101,8 +137,7 @@ pub fn outer6(u: &SV, v: &SV) -> M6 {
 /// motion coordinates and `ia` expressed in the child frame, returns the
 /// parent-frame contribution `Xᵀ I X` (Featherstone RBDA eq. 7.23 term).
 pub fn transform_inertia_to_parent(x: &Xform, ia: &M6) -> M6 {
-    let xm = x.to_mat6();
-    mul6(&t6(&xm), &mul6(ia, &xm))
+    xtax(&x.to_mat6(), ia)
 }
 
 #[cfg(test)]
@@ -113,33 +148,41 @@ mod tests {
     use crate::util::check::close;
     use crate::util::rng::Rng;
 
+    fn rand_m6(r: &mut Rng) -> M6 {
+        let mut a = zero6();
+        for x in a.iter_mut() {
+            *x = r.range(-1.0, 1.0);
+        }
+        a
+    }
+
     #[test]
     fn mul_identity() {
         let mut r = Rng::new(30);
-        let mut a = zero6();
-        for i in 0..6 {
-            for j in 0..6 {
-                a[i][j] = r.range(-1.0, 1.0);
-            }
-        }
+        let a = rand_m6(&mut r);
         let out = mul6(&a, &ident6());
-        for i in 0..6 {
-            for j in 0..6 {
-                assert!(close(out[i][j], a[i][j], 1e-14));
-            }
+        for i in 0..36 {
+            assert!(close(out[i], a[i], 1e-14));
         }
     }
 
     #[test]
     fn transpose_involution() {
         let mut r = Rng::new(31);
-        let mut a = zero6();
-        for i in 0..6 {
-            for j in 0..6 {
-                a[i][j] = r.range(-1.0, 1.0);
-            }
-        }
+        let a = rand_m6(&mut r);
         assert_eq!(t6(&t6(&a)), a);
+    }
+
+    /// The fused congruence transform must agree bitwise with the
+    /// composed `Xᵀ (A X)` it replaced (same per-entry addition order).
+    #[test]
+    fn fused_xtax_matches_composed() {
+        let mut r = Rng::new(33);
+        for _ in 0..16 {
+            let x = rand_m6(&mut r);
+            let a = rand_m6(&mut r);
+            assert_eq!(xtax(&x, &a), mul6(&t6(&x), &mul6(&a, &x)));
+        }
     }
 
     /// Inertia transformed to the parent frame must agree with computing

@@ -10,6 +10,7 @@
 //!        [ -E r̃      E ]             [ 0      E ]
 //! ```
 
+use super::mat6::M6;
 use super::v3m3::{M3, V3};
 use super::vec::SV;
 
@@ -76,17 +77,17 @@ impl Xform {
         Xform { e: self.e.transpose(), r: -self.e.mul_v(&self.r) }
     }
 
-    /// Dense 6×6 motion-transform matrix (row-major), used by the
-    /// articulated-inertia propagation and exported to the JAX layer.
-    pub fn to_mat6(&self) -> [[f64; 6]; 6] {
+    /// Dense 6×6 motion-transform matrix (flat row-major [`M6`]), used by
+    /// the articulated-inertia propagation and exported to the JAX layer.
+    pub fn to_mat6(&self) -> M6 {
         let e = self.e.0;
         let erx = self.e.mul_m(&self.r.skew()).0; // E r̃
-        let mut m = [[0.0; 6]; 6];
+        let mut m = [0.0; 36];
         for i in 0..3 {
             for j in 0..3 {
-                m[i][j] = e[i][j];
-                m[i + 3][j + 3] = e[i][j];
-                m[i + 3][j] = -erx[i][j];
+                m[i * 6 + j] = e[i][j];
+                m[(i + 3) * 6 + (j + 3)] = e[i][j];
+                m[(i + 3) * 6 + j] = -erx[i][j];
             }
         }
         m
@@ -165,7 +166,7 @@ mod tests {
             let mut out = [0.0; 6];
             for i in 0..6 {
                 for j in 0..6 {
-                    out[i] += m[i][j] * va[j];
+                    out[i] += m[i * 6 + j] * va[j];
                 }
             }
             let want = x.apply(&v).to_array();

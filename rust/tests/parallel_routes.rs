@@ -1,0 +1,118 @@
+//! Parallel-route equivalence: a coordinator route whose batches fan out
+//! across the global worker pool must answer **bitwise identically** to
+//! the serial route — same kernels, same decode→kernel→encode chain, one
+//! cached workspace per pool worker. Covers full batches, partial
+//! batches, mixed robots, and the engine-level fan-out directly.
+
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
+use draco::model::{builtin_robot, Robot, State};
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::NativeEngine;
+use draco::util::rng::Rng;
+
+/// Flat row-major (b, n) f32 operands for `function`.
+fn flat_inputs(robot: &Robot, function: ArtifactFn, b: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = robot.dof();
+    let mut rng = Rng::new(seed);
+    let mut q = Vec::with_capacity(b * n);
+    let mut qd = Vec::with_capacity(b * n);
+    let mut u = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let s = State::random(robot, &mut rng);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+    }
+    match function {
+        ArtifactFn::Minv => vec![q],
+        _ => vec![q, qd, u],
+    }
+}
+
+/// Engine level: the pooled fan-out inside `NativeEngine::run` is bitwise
+/// equal to the serial engine for every function, across full and
+/// partial batches and odd chunk counts.
+#[test]
+fn parallel_engine_matches_serial_bitwise() {
+    for name in ["iiwa", "atlas"] {
+        let robot = builtin_robot(name).unwrap();
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            let mut serial = NativeEngine::new(robot.clone(), function, 64);
+            for parallel in [2usize, 3, 8, 0] {
+                let mut par =
+                    NativeEngine::with_parallelism(robot.clone(), function, 64, parallel);
+                for b in [2usize, 5, 16, 64] {
+                    let inputs = flat_inputs(&robot, function, b, 7_000 + b as u64);
+                    let want = serial.run(&inputs).expect("serial run");
+                    let got = par.run(&inputs).expect("parallel run");
+                    assert_eq!(
+                        want, got,
+                        "{name}/{} b={b} parallel={parallel}",
+                        function.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Coordinator level: the same request stream through a serial registry
+/// and a parallel registry (mixed robots, f64 + quantized backends)
+/// produces bitwise-identical responses. The quantized robot pins the
+/// routing: its routes always execute serially.
+#[test]
+fn parallel_route_matches_serial_route_bitwise() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+
+    let build = |parallel: usize| {
+        let mut reg = RobotRegistry::new();
+        reg.register_parallel(iiwa.clone(), BackendKind::Native, 16, parallel)
+            .register_parallel(hyq.clone(), BackendKind::Native, 16, parallel);
+        Coordinator::start_registry(&reg, 20_000)
+    };
+    let serial = build(1);
+    let pooled = build(0); // one chunk per pool worker
+
+    // Full batch (16), partial batch (5), and a single-task batch per
+    // (robot, function) pair — identical streams to both coordinators.
+    for (robot, base_seed) in [(&iiwa, 100u64), (&hyq, 200)] {
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            for (burst, seed_off) in [(16usize, 0u64), (5, 1), (1, 2)] {
+                let n = robot.dof();
+                let per_task: Vec<Vec<Vec<f32>>> = (0..burst)
+                    .map(|k| {
+                        flat_inputs(robot, function, 1, base_seed + 10 * seed_off + k as u64)
+                    })
+                    .collect();
+                let answers = |coord: &Coordinator| -> Vec<Vec<f32>> {
+                    let rxs: Vec<_> = per_task
+                        .iter()
+                        .map(|ops| coord.submit_to(&robot.name, function, ops.clone()))
+                        .collect();
+                    rxs.into_iter()
+                        .map(|rx| rx.recv().expect("answer").expect("ok"))
+                        .collect()
+                };
+                let want = answers(&serial);
+                let got = answers(&pooled);
+                assert_eq!(want.len(), got.len());
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    let expect_len = match function {
+                        ArtifactFn::Minv => n * n,
+                        _ => n,
+                    };
+                    assert_eq!(a.len(), expect_len);
+                    assert_eq!(
+                        a, b,
+                        "{}/{} burst={burst} task {k} diverged",
+                        robot.name,
+                        function.name()
+                    );
+                }
+            }
+        }
+    }
+    serial.shutdown();
+    pooled.shutdown();
+}
