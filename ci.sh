@@ -28,4 +28,7 @@ bash ../scripts/check_doc_links.sh
 echo "== bench smoke: hotpath_cpu --quick =="
 cargo bench --bench hotpath_cpu -- --quick
 
+echo "== bench schema check (bench_diff --check) =="
+bash ../scripts/bench_diff.sh --check BENCH_hotpath.json
+
 echo "CI OK"

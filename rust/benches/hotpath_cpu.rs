@@ -16,11 +16,16 @@
 //! can track the perf trajectory. Pass `--quick` for a smoke run (CI).
 //!
 //! Parallel-serving rows: `fd_pool64` (the worker-pool handoff — one
-//! 64-task batch fanned across the persistent pool) and `serve_fd_par64`
+//! 64-task batch fanned across the persistent pool), `serve_fd_par64`
 //! (64 FD requests through a coordinator route with intra-route
 //! parallelism, to compare against the serial `serve_fd_mixed64`
-//! baseline at the same dispatch cost). `mul6_flat` times the flattened
-//! branch-free 6×6 kernel that dominates the Minv sweeps.
+//! baseline at the same dispatch cost), and `serve_fd_quant_par64` (the
+//! same shape through a QUANTIZED route on the engine-generic pool).
+//! Quantized-lane rows: `fd_quant64_ws` (legacy rounded-f64 lane) vs
+//! `fd_quant_int64` / `minv_quant_int64` (the true-integer i64 lane at
+//! the same format and operands — the integer lane should win).
+//! `mul6_flat` times the flattened branch-free 6×6 kernel that
+//! dominates the Minv sweeps.
 
 use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
@@ -28,7 +33,7 @@ use draco::dynamics::{
     DynWorkspace, WorkerPool,
 };
 use draco::model::{builtin_robot, Robot, State};
-use draco::quant::QFormat;
+use draco::quant::{QFormat, QuantIntScratch};
 use draco::runtime::artifact::ArtifactFn;
 use draco::runtime::{NativeEngine, QuantEngine};
 use draco::spatial::mat6::{mul6, xtax};
@@ -225,13 +230,64 @@ fn main() {
         let atlas = builtin_robot("atlas").unwrap();
 
         // Quantized native engine, batched FD at the paper's 24-bit
-        // format.
+        // format (the legacy rounded-f64 lane).
         let inputs = flat_fd_inputs(&iiwa, BATCH, 2);
         let mut qeng = QuantEngine::new(iiwa.clone(), ArtifactFn::Fd, BATCH, QFormat::new(12, 12));
         let st = time_auto(target_ms, || {
             black_box(qeng.run(&inputs).expect("quant fd batch"));
         });
         add("iiwa", "fd_quant64_ws", &st, BATCH);
+
+        // True-integer fixed-point lane at the same format and the same
+        // 64 operands, including the identical per-task f32 decode /
+        // encode the engine performs — apples-to-apples with
+        // fd_quant64_ws. The integer lane quantizes constants once on
+        // ingest and runs i64 mul/shift inner loops.
+        {
+            let n = iiwa.dof();
+            let fmt_int = QFormat::new(12, 12);
+            let mut iws = QuantIntScratch::new(n);
+            let (mut q, mut qd, mut u, mut o) =
+                (vec![0.0f64; n], vec![0.0f64; n], vec![0.0f64; n], vec![0.0f64; n]);
+            let mut out32 = vec![0.0f32; BATCH * n];
+            let st = time_auto(target_ms, || {
+                for k in 0..BATCH {
+                    let span = k * n..(k + 1) * n;
+                    for (d, s) in q.iter_mut().zip(&inputs[0][span.clone()]) {
+                        *d = *s as f64;
+                    }
+                    for (d, s) in qd.iter_mut().zip(&inputs[1][span.clone()]) {
+                        *d = *s as f64;
+                    }
+                    for (d, s) in u.iter_mut().zip(&inputs[2][span.clone()]) {
+                        *d = *s as f64;
+                    }
+                    iws.fd_into(&iiwa, &q, &qd, &u, fmt_int, &mut o);
+                    for (d, s) in out32[span].iter_mut().zip(&o) {
+                        *d = *s as f32;
+                    }
+                }
+                black_box(&out32);
+            });
+            add("iiwa", "fd_quant_int64", &st, BATCH);
+
+            // Integer M⁻¹ over the same 64 q-rows.
+            let mut mi = DMat::zeros(n, n);
+            let mut out32 = vec![0.0f32; BATCH * n * n];
+            let st = time_auto(target_ms, || {
+                for k in 0..BATCH {
+                    for (d, s) in q.iter_mut().zip(&inputs[0][k * n..(k + 1) * n]) {
+                        *d = *s as f64;
+                    }
+                    iws.minv_into(&iiwa, &q, fmt_int, &mut mi);
+                    for (d, s) in out32[k * n * n..(k + 1) * n * n].iter_mut().zip(&mi.d) {
+                        *d = *s as f32;
+                    }
+                }
+                black_box(&out32);
+            });
+            add("iiwa", "minv_quant_int64", &st, BATCH);
+        }
 
         // Trajectory rollout: 64 integrator steps per request through the
         // workspace (per-task number below = per step).
@@ -337,6 +393,32 @@ fn main() {
         });
         add("iiwa", "serve_fd_par64", &st, 64);
         pcoord.shutdown();
+
+        // Pooled QUANTIZED serving: the same 64-request dispatch shape
+        // through one quantized route whose batches fan out across the
+        // engine-generic worker pool (compare with the serial quantized
+        // execution inside serve_fd_mixed64 and with serve_fd_par64's
+        // f64 route at identical dispatch cost).
+        let mut qpreg = RobotRegistry::new();
+        qpreg.register_parallel(
+            iiwa.clone(),
+            BackendKind::NativeQuant(QFormat::new(12, 12)),
+            64,
+            0,
+        );
+        let qpcoord = Coordinator::start_registry(&qpreg, 100);
+        let qpar_inputs = flat_fd_inputs(&iiwa, 1, 10);
+        let st = time_auto(target_ms, || {
+            let mut rxs = Vec::with_capacity(64);
+            for _ in 0..64usize {
+                rxs.push(qpcoord.submit_to("iiwa", ArtifactFn::Fd, qpar_inputs.clone()));
+            }
+            for rx in rxs {
+                black_box(rx.recv().expect("serve answer").expect("serve ok"));
+            }
+        });
+        add("iiwa", "serve_fd_quant_par64", &st, 64);
+        qpcoord.shutdown();
     }
 
     t.print("CPU hot paths (measured, single thread)");

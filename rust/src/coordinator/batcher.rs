@@ -99,6 +99,14 @@ pub enum BackendSpec {
         batch: usize,
         /// Fixed-point format every evaluation is rounded to.
         fmt: QFormat,
+        /// Max chunks each assembled batch splits into on the global
+        /// worker pool (`0` = one per pool worker, `1` = serial) —
+        /// quantized routes fan out like native ones, bitwise identical
+        /// to serial.
+        parallel: usize,
+        /// Opt-in M⁻¹ error compensation (fitted at route startup,
+        /// applied on the M⁻¹ route; other functions ignore it).
+        comp: bool,
     },
     /// Trajectory-rollout route: FD + semi-implicit Euler unrolled
     /// server-side (quantized FD when `fmt` is set).
@@ -370,8 +378,10 @@ fn worker_loop(
             )));
             step_worker(Box::new(exec), window, rx, stats);
         }
-        BackendSpec::NativeQuant { robot, function, batch, fmt } => {
-            let exec = EngineExecutor(Box::new(QuantEngine::new(robot, function, batch, fmt)));
+        BackendSpec::NativeQuant { robot, function, batch, fmt, parallel, comp } => {
+            let exec = EngineExecutor(Box::new(QuantEngine::with_options(
+                robot, function, batch, fmt, parallel, comp,
+            )));
             step_worker(Box::new(exec), window, rx, stats);
         }
         BackendSpec::Trajectory { robot, batch, fmt } => {

@@ -40,9 +40,11 @@ use std::time::Instant;
 /// through it, verify numerics against the backend's reference
 /// implementation, and report latency/throughput.
 ///
-/// * `--robots iiwa,atlas:quant[,hyq:quant@14.18]` — the registry spec:
-///   which robots this process serves and each robot's backend
-///   (`native` default, `quant` = fixed point; see
+/// * `--robots iiwa,atlas:quant[,hyq:quant@14.18+comp,arm=path.urdf]` —
+///   the registry spec: which robots this process serves and each
+///   robot's backend (`native` default, `quant` = fixed point, `+comp`
+///   = fitted M⁻¹ error compensation on the quantized M⁻¹ route;
+///   `name=path.urdf` loads a robot through the URDF-lite importer; see
 ///   [`RobotRegistry::from_cli_spec`]). `--robot NAME` remains as a
 ///   single-robot shorthand.
 /// * `--backend native|pjrt` — `native` (default) serves the registry
@@ -52,9 +54,11 @@ use std::time::Instant;
 /// * `--traj H` — additionally submit trajectory requests with an
 ///   H-step horizon through each robot's rollout route (native
 ///   backend).
-/// * `--par P` — split each native route's assembled batches into up to
-///   P chunks on the global worker pool (`0` = one per pool worker,
-///   default 1 = serial; bitwise identical either way).
+/// * `--par P` — split each **step** route's assembled batches — native
+///   and quantized alike; the worker pool is engine-generic — into up
+///   to P chunks on the global worker pool (`0` = one per pool worker,
+///   default 1 = serial; bitwise identical either way). Trajectory
+///   rollouts stay serial (each step depends on the last).
 /// * `--requests N`, `--batch B`, `--window-us W`, `--dt S` — workload
 ///   shape.
 pub fn serve_cli(args: &Args) -> i32 {
@@ -84,9 +88,10 @@ pub fn serve_cli(args: &Args) -> i32 {
             for name in registry.names() {
                 let entry = registry.get(&name).expect("registered");
                 println!(
-                    "  {name}: {} DOF, backend {}",
+                    "  {name}: {} DOF, backend {}{}",
                     entry.robot.dof(),
-                    entry.backend.label()
+                    entry.backend.label(),
+                    if entry.comp { " +comp" } else { "" }
                 );
             }
             let coord = Coordinator::start_registry(&registry, window_us as u64);

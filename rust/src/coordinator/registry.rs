@@ -37,8 +37,8 @@ impl BackendKind {
     }
 }
 
-/// One registered robot: the model, its backend, its batch size, and
-/// its intra-route parallelism.
+/// One registered robot: the model, its backend, its batch size, its
+/// intra-route parallelism, and the M⁻¹ compensation opt-in.
 #[derive(Debug, Clone)]
 pub struct RobotEntry {
     /// The robot model served under its `robot.name`.
@@ -47,10 +47,14 @@ pub struct RobotEntry {
     pub backend: BackendKind,
     /// Batch size for the robot's step routes (and rollout drain cap).
     pub batch: usize,
-    /// Max worker-pool chunks each native step batch splits into
-    /// (`0` = one per pool worker, `1` = serial; ignored by quantized
-    /// routes, which always execute serially).
+    /// Max worker-pool chunks each step batch splits into (`0` = one per
+    /// pool worker, `1` = serial). Applies to native **and** quantized
+    /// routes — the pool is engine-generic.
     pub parallel: usize,
+    /// Opt-in M⁻¹ error compensation (`+comp` in the CLI spec): fitted
+    /// per (robot, format) and applied on the quantized M⁻¹ route;
+    /// ignored by native entries and by non-Minv routes.
+    pub comp: bool,
 }
 
 /// Registry of robots one coordinator serves, keyed by robot name.
@@ -75,10 +79,11 @@ impl RobotRegistry {
     }
 
     /// Register (or replace) a robot with intra-route parallelism: each
-    /// assembled step batch of a native route splits into up to
-    /// `parallel` contiguous chunks on the global worker pool (`0` = one
-    /// chunk per pool worker, `1` = serial). Pooled execution is bitwise
-    /// identical to serial — same kernels, one cached workspace per pool
+    /// assembled step batch (native **or** quantized — the worker pool is
+    /// engine-generic) splits into up to `parallel` contiguous chunks on
+    /// the global worker pool (`0` = one chunk per pool worker, `1` =
+    /// serial). Pooled execution is bitwise identical to serial — same
+    /// kernels, one cached per-(structure, format) workspace per pool
     /// worker.
     pub fn register_parallel(
         &mut self,
@@ -87,8 +92,23 @@ impl RobotRegistry {
         batch: usize,
         parallel: usize,
     ) -> &mut Self {
+        self.register_with(robot, backend, batch, parallel, false)
+    }
+
+    /// Full registration: parallelism as in
+    /// [`RobotRegistry::register_parallel`] plus the M⁻¹ compensation
+    /// opt-in (meaningful on quantized backends only; see
+    /// [`RobotEntry::comp`]).
+    pub fn register_with(
+        &mut self,
+        robot: Robot,
+        backend: BackendKind,
+        batch: usize,
+        parallel: usize,
+        comp: bool,
+    ) -> &mut Self {
         assert!(batch > 0, "batch must be positive");
-        let entry = RobotEntry { robot, backend, batch, parallel };
+        let entry = RobotEntry { robot, backend, batch, parallel, comp };
         match self.entries.iter_mut().find(|e| e.robot.name == entry.robot.name) {
             Some(slot) => *slot = entry,
             None => self.entries.push(entry),
@@ -97,7 +117,7 @@ impl RobotRegistry {
     }
 
     /// Set intra-route parallelism for every registered robot (`0` = one
-    /// chunk per pool worker, `1` = serial). Quantized routes ignore it.
+    /// chunk per pool worker, `1` = serial), native and quantized alike.
     pub fn set_parallelism(&mut self, parallel: usize) -> &mut Self {
         for e in &mut self.entries {
             e.parallel = parallel;
@@ -145,6 +165,8 @@ impl RobotRegistry {
                         function,
                         batch: entry.batch,
                         fmt,
+                        parallel: entry.parallel,
+                        comp: entry.comp,
                     },
                 });
             }
@@ -161,45 +183,112 @@ impl RobotRegistry {
     }
 
     /// Build a registry from a CLI spec: a comma-separated list of
-    /// entries `name[:native|:quant[@INT.FRAC]]`, resolved against the
-    /// builtin robots. Examples:
+    /// entries `name[=path.urdf][:native|:quant[@INT.FRAC][+comp]]`.
+    /// Plain names resolve against the builtin robots; `name=path.urdf`
+    /// loads the robot through the URDF-lite importer
+    /// ([`crate::model::urdf::robot_from_urdf`]) and registers it under
+    /// `name`. Examples:
     ///
-    /// * `iiwa` — one robot, f64 native backend;
+    /// * `iiwa` — one builtin robot, f64 native backend;
     /// * `iiwa,atlas:quant` — two robots, atlas quantized at the default
     ///   24-bit format ([`DEFAULT_QUANT_FORMAT`]);
-    /// * `hyq:quant@14.18` — quantized at Q14.18.
+    /// * `hyq:quant@14.18` — quantized at Q14.18;
+    /// * `atlas:quant@12.10+comp` — quantized with the fitted M⁻¹ error
+    ///   compensation applied on the M⁻¹ route;
+    /// * `arm=models/arm.urdf:quant` — a URDF-loaded robot named `arm`
+    ///   served next to the builtins.
     pub fn from_cli_spec(spec: &str, batch: usize) -> Result<RobotRegistry, String> {
         let mut reg = RobotRegistry::new();
         for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            let (name, backend_str) = match entry.split_once(':') {
-                Some((n, b)) => (n.trim(), Some(b.trim())),
-                None => (entry, None),
-            };
-            let robot = builtin_robot(name)
-                .ok_or_else(|| format!("unknown robot '{name}' (try iiwa|hyq|atlas|baxter)"))?;
-            let backend = match backend_str {
-                None | Some("native") => BackendKind::Native,
-                Some(b) => {
-                    let rest = b
-                        .strip_prefix("quant")
-                        .ok_or_else(|| format!("unknown backend '{b}' (try native|quant[@I.F])"))?;
-                    let fmt = match rest.strip_prefix('@') {
-                        None if rest.is_empty() => DEFAULT_QUANT_FORMAT,
-                        Some(f) => parse_qformat(f)?,
-                        None => {
-                            return Err(format!("unknown backend '{b}' (try native|quant[@I.F])"))
-                        }
-                    };
-                    BackendKind::NativeQuant(fmt)
+            // URDF entries are recognized by '=' BEFORE splitting off the
+            // backend, and their backend is the suffix after the LAST ':'
+            // only when it looks like one — so paths containing ':'
+            // (e.g. ros:noetic overlays) parse instead of being truncated
+            // at the first colon.
+            let (target, backend_str) = if entry.contains('=') {
+                match entry.rsplit_once(':') {
+                    Some((head, tail)) if looks_like_backend(tail.trim()) => {
+                        (head.trim(), Some(tail.trim()))
+                    }
+                    _ => (entry, None),
+                }
+            } else {
+                match entry.split_once(':') {
+                    Some((n, b)) => (n.trim(), Some(b.trim())),
+                    None => (entry, None),
                 }
             };
-            reg.register(robot, backend, batch);
+            let robot = match target.split_once('=') {
+                Some((name, path)) => {
+                    let (name, path) = (name.trim(), path.trim());
+                    if name.is_empty() {
+                        return Err(format!("empty robot name in '{entry}'"));
+                    }
+                    let src = std::fs::read_to_string(path)
+                        .map_err(|e| format!("cannot read urdf '{path}': {e}"))?;
+                    let mut robot = crate::model::urdf::robot_from_urdf(&src)
+                        .map_err(|e| format!("bad urdf '{path}': {e}"))?;
+                    // The registry routes by robot name; the spec's name
+                    // wins over whatever the URDF file calls itself.
+                    robot.name = name.to_string();
+                    robot
+                }
+                None => builtin_robot(target).ok_or_else(|| {
+                    format!("unknown robot '{target}' (try iiwa|hyq|atlas|baxter, or name=path.urdf)")
+                })?,
+            };
+            let (backend, comp) = match backend_str {
+                None => (BackendKind::Native, false),
+                Some(b) => {
+                    let (core, comp) = match b.strip_suffix("+comp") {
+                        Some(c) => (c.trim(), true),
+                        None => (b, false),
+                    };
+                    match core {
+                        "native" => {
+                            if comp {
+                                return Err(format!(
+                                    "'+comp' needs a quant backend in '{entry}' (M⁻¹ \
+                                     compensation corrects the quantized reciprocal)"
+                                ));
+                            }
+                            (BackendKind::Native, false)
+                        }
+                        _ => {
+                            let rest = core.strip_prefix("quant").ok_or_else(|| {
+                                format!("unknown backend '{b}' (try native|quant[@I.F][+comp])")
+                            })?;
+                            let fmt = match rest.strip_prefix('@') {
+                                None if rest.is_empty() => DEFAULT_QUANT_FORMAT,
+                                Some(f) => parse_qformat(f)?,
+                                None => {
+                                    return Err(format!(
+                                        "unknown backend '{b}' (try native|quant[@I.F][+comp])"
+                                    ))
+                                }
+                            };
+                            (BackendKind::NativeQuant(fmt), comp)
+                        }
+                    }
+                }
+            };
+            reg.register_with(robot, backend, batch, 1, comp);
         }
         if reg.is_empty() {
             return Err("no robots given".to_string());
         }
         Ok(reg)
     }
+}
+
+/// Whether a `:`-suffix of a registry entry is a backend selector
+/// (`native` / `quant…`, optionally `+comp`) rather than part of a URDF
+/// path containing colons.
+fn looks_like_backend(s: &str) -> bool {
+    let core = s.strip_suffix("+comp").unwrap_or(s);
+    // Exact grammar only: a path segment that merely *starts* with
+    // "quant" (e.g. `…ros:quant_overlay/arm.urdf`) must stay a path.
+    !core.contains('/') && (core == "native" || core == "quant" || core.starts_with("quant@"))
 }
 
 /// Parse `INT.FRAC` (e.g. `12.14`) into a [`QFormat`].
@@ -259,5 +348,70 @@ mod tests {
         assert!(RobotRegistry::from_cli_spec("iiwa:quant@twelve.12", 32).is_err());
         assert!(RobotRegistry::from_cli_spec("iiwa:quant@0.12", 32).is_err());
         assert!(RobotRegistry::from_cli_spec("iiwa:quant@40.40", 32).is_err());
+        // Compensation is a quant-only flag, and URDF paths must exist.
+        assert!(RobotRegistry::from_cli_spec("iiwa:native+comp", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("arm=/nonexistent/robot.urdf", 32).is_err());
+        assert!(RobotRegistry::from_cli_spec("=some.urdf", 32).is_err());
+    }
+
+    /// URDF entries may contain ':' in the path: the backend is split
+    /// off only when the last ':'-suffix looks like one, so the error
+    /// message carries the full (untruncated) path.
+    #[test]
+    fn cli_spec_urdf_paths_keep_colons() {
+        assert!(looks_like_backend("native"));
+        assert!(looks_like_backend("quant"));
+        assert!(looks_like_backend("quant+comp"));
+        assert!(looks_like_backend("quant@12.14+comp"));
+        assert!(!looks_like_backend("noetic/arm.urdf"));
+        assert!(!looks_like_backend("quant_overlay/arm.urdf"));
+        let err = RobotRegistry::from_cli_spec("arm=/data/ros:quant_overlay/arm.urdf", 32)
+            .unwrap_err();
+        assert!(err.contains("/data/ros:quant_overlay/arm.urdf"), "path truncated: {err}");
+        let err =
+            RobotRegistry::from_cli_spec("arm=/data/ros:noetic/arm.urdf", 32).unwrap_err();
+        assert!(err.contains("/data/ros:noetic/arm.urdf"), "path truncated: {err}");
+        // And a real backend suffix still splits off a colon-bearing path.
+        let err =
+            RobotRegistry::from_cli_spec("arm=/data/ros:noetic/arm.urdf:quant@12.12", 32)
+                .unwrap_err();
+        assert!(err.contains("/data/ros:noetic/arm.urdf"), "path truncated: {err}");
+        assert!(!err.contains("quant@12.12"), "backend leaked into the path: {err}");
+    }
+
+    #[test]
+    fn cli_spec_parses_comp_flag() {
+        let reg =
+            RobotRegistry::from_cli_spec("iiwa,atlas:quant+comp,hyq:quant@14.18+comp", 16).unwrap();
+        assert!(!reg.get("iiwa").unwrap().comp);
+        let atlas = reg.get("atlas").unwrap();
+        assert_eq!(atlas.backend, BackendKind::NativeQuant(DEFAULT_QUANT_FORMAT));
+        assert!(atlas.comp);
+        let hyq = reg.get("hyq").unwrap();
+        assert_eq!(hyq.backend, BackendKind::NativeQuant(QFormat::new(14, 18)));
+        assert!(hyq.comp);
+    }
+
+    #[test]
+    fn parallelism_applies_to_quant_entries() {
+        let mut reg = RobotRegistry::new();
+        reg.register(builtin_robot("iiwa").unwrap(), BackendKind::Native, 16).register(
+            builtin_robot("atlas").unwrap(),
+            BackendKind::NativeQuant(QFormat::new(12, 12)),
+            16,
+        );
+        reg.set_parallelism(0);
+        for spec in reg.specs() {
+            match spec {
+                BackendSpec::Native { parallel, .. } => assert_eq!(parallel, 0),
+                BackendSpec::NativeQuant { parallel, comp, .. } => {
+                    assert_eq!(parallel, 0, "quant routes must inherit parallelism");
+                    assert!(!comp);
+                }
+                BackendSpec::Trajectory { .. } => {}
+                #[cfg(feature = "pjrt")]
+                BackendSpec::Pjrt(_) => {}
+            }
+        }
     }
 }

@@ -18,21 +18,45 @@
 //!   blocks until every chunk has answered, which is exactly what makes
 //!   the borrow sound.
 //!
-//! Each worker keeps a small MRU set of [`DynWorkspace`]s (plus
-//! flat-path staging buffers), one per robot *structure* it recently
-//! served — matched by `Arc` identity with a structural fallback — so
-//! all chunks of one batch reuse a single workspace per worker with no
-//! rebuild, and a multi-robot registry's parallel routes can interleave
-//! batches of different robots (the serving steady state) without ever
-//! rebuilding either workspace.
+//! The pool is **engine-generic**: every flat job carries a
+//! [`PoolBackend`] descriptor — the f64 workspace kernels or the
+//! quantized fixed-point kernels at a [`QFormat`] — so a registry's
+//! quantized routes fan out across the same worker set as the f64 ones
+//! ([`WorkerPool::eval_flat_quant`]), with the identical zero-copy
+//! handoff and the identical bitwise-equals-serial guarantee (each
+//! worker runs the exact decode→kernel→encode loop the serial engines
+//! run).
+//!
+//! Each worker keeps a small MRU set of workspaces (plus flat-path
+//! staging buffers), keyed by **(robot structure, backend)** — a
+//! [`DynWorkspace`] per f64 structure, a [`QuantScratch`] per
+//! (structure, format). Robots are matched by `Arc` identity with a
+//! structural fallback; backends by exact equality, so cache entries
+//! never alias across formats or lanes. All chunks of one batch reuse a
+//! single workspace per worker with no rebuild, and a multi-robot
+//! registry's parallel routes can interleave batches of different
+//! robots and precisions (the serving steady state) without ever
+//! rebuilding a workspace.
 
 use super::batch::{eval_batch, BatchKernel, BatchOutput, BatchTask};
 use super::workspace::DynWorkspace;
 use crate::model::Robot;
+use crate::quant::{QFormat, QuantScratch};
 use crate::spatial::DMat;
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// Numeric datapath a pool job runs — the pool's per-job engine
+/// descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolBackend {
+    /// f64 workspace kernels (the default serving lane).
+    F64,
+    /// Emulated fixed point at this format (`quant::qrbd` kernels) —
+    /// what [`crate::runtime::QuantEngine`] serves.
+    Quant(QFormat),
+}
 
 /// Borrowed view of one contiguous chunk of a flat-f32 batch: `rows`
 /// input rows of length `n` starting at `q`/`qd`/`u`, outputs written in
@@ -74,6 +98,8 @@ enum PoolPart {
 struct PoolJob {
     robot: Arc<Robot>,
     kernel: BatchKernel,
+    /// Which datapath evaluates this chunk (task chunks are always f64).
+    backend: PoolBackend,
     work: PoolWork,
     /// (chunk ordinal, result or panic message) back to the caller.
     out: Sender<(usize, Result<PoolPart, String>)>,
@@ -172,6 +198,7 @@ impl WorkerPool {
                     .send(PoolJob {
                         robot: Arc::clone(robot),
                         kernel,
+                        backend: PoolBackend::F64,
                         work: PoolWork::Tasks { tasks: Arc::clone(tasks), range: start..end },
                         out: tx.clone(),
                         ordinal: sent,
@@ -223,6 +250,59 @@ impl WorkerPool {
         out: &mut [f32],
         max_chunks: usize,
     ) {
+        self.eval_flat_backend(robot, kernel, PoolBackend::F64, q, qd, u, n, out_per_task, out, max_chunks);
+    }
+
+    /// As [`WorkerPool::eval_flat`], but every task runs the quantized
+    /// fixed-point kernels at `fmt` — the engine-generic handoff for
+    /// quantized routes. Per-task results are bitwise identical to the
+    /// serial [`crate::runtime::QuantEngine`] loop (same decode →
+    /// `QuantScratch` kernel → encode chain); workers cache one
+    /// `QuantScratch` per (robot structure, format).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_flat_quant(
+        &self,
+        robot: &Arc<Robot>,
+        kernel: BatchKernel,
+        fmt: QFormat,
+        q: &[f32],
+        qd: &[f32],
+        u: &[f32],
+        n: usize,
+        out_per_task: usize,
+        out: &mut [f32],
+        max_chunks: usize,
+    ) {
+        self.eval_flat_backend(
+            robot,
+            kernel,
+            PoolBackend::Quant(fmt),
+            q,
+            qd,
+            u,
+            n,
+            out_per_task,
+            out,
+            max_chunks,
+        );
+    }
+
+    /// Backend-generic flat fan-out; see [`WorkerPool::eval_flat`] for
+    /// the layout/borrowing contract.
+    #[allow(clippy::too_many_arguments)]
+    fn eval_flat_backend(
+        &self,
+        robot: &Arc<Robot>,
+        kernel: BatchKernel,
+        backend: PoolBackend,
+        q: &[f32],
+        qd: &[f32],
+        u: &[f32],
+        n: usize,
+        out_per_task: usize,
+        out: &mut [f32],
+        max_chunks: usize,
+    ) {
         assert!(n > 0, "flat batches need a positive row length");
         let rows = q.len() / n;
         assert_eq!(q.len(), rows * n, "q rows misaligned");
@@ -256,6 +336,7 @@ impl WorkerPool {
                     .send(PoolJob {
                         robot: Arc::clone(robot),
                         kernel,
+                        backend,
                         work: PoolWork::Flat(chunk),
                         out: tx.clone(),
                         ordinal: sent,
@@ -297,11 +378,21 @@ fn same_structure(a: &Robot, b: &Robot) -> bool {
         && a.links.iter().zip(&b.links).all(|(x, y)| x.parent == y.parent)
 }
 
-/// Per-worker cached state: the workspace for the robot structure last
-/// seen plus the flat-path staging buffers, all sized from the DOF.
+/// The lane-specific workspace a cache entry holds: one per
+/// (structure, backend) pair. Boxed: the workspaces are large and a
+/// worker's MRU set stores several entries inline.
+enum LaneScratch {
+    F64(Box<DynWorkspace>),
+    Quant(Box<QuantScratch>),
+}
+
+/// Per-worker cached state: the lane workspace for the
+/// (robot structure, backend) pair last seen plus the flat-path staging
+/// buffers, all sized from the DOF.
 struct WorkerCache {
     robot: Arc<Robot>,
-    ws: DynWorkspace,
+    backend: PoolBackend,
+    lane: LaneScratch,
     q: Vec<f64>,
     qd: Vec<f64>,
     u: Vec<f64>,
@@ -310,11 +401,16 @@ struct WorkerCache {
 }
 
 impl WorkerCache {
-    fn new(robot: &Arc<Robot>) -> WorkerCache {
+    fn new(robot: &Arc<Robot>, backend: PoolBackend) -> WorkerCache {
         let n = robot.dof();
+        let lane = match backend {
+            PoolBackend::F64 => LaneScratch::F64(Box::new(DynWorkspace::new(robot))),
+            PoolBackend::Quant(_) => LaneScratch::Quant(Box::new(QuantScratch::new(n))),
+        };
         WorkerCache {
             robot: Arc::clone(robot),
-            ws: DynWorkspace::new(robot),
+            backend,
+            lane,
             q: vec![0.0; n],
             qd: vec![0.0; n],
             u: vec![0.0; n],
@@ -322,6 +418,15 @@ impl WorkerCache {
             out_mat: DMat::zeros(n, n),
         }
     }
+}
+
+/// Whether a cache entry can serve a `(robot, backend)` job: the backend
+/// must match **exactly** — a `Quant` entry never serves another format
+/// or the f64 lane (and vice versa) — and the robot must match by `Arc`
+/// identity or by structure (see [`same_structure`]).
+fn cache_serves(cache: &WorkerCache, backend: PoolBackend, robot: &Arc<Robot>) -> bool {
+    cache.backend == backend
+        && (Arc::ptr_eq(&cache.robot, robot) || same_structure(&cache.robot, robot))
 }
 
 fn decode32(src: &[f32], dst: &mut [f64]) {
@@ -336,15 +441,17 @@ fn encode32(src: &[f64], dst: &mut [f32]) {
     }
 }
 
-/// Evaluate one flat chunk exactly as the serial native engine does —
-/// decode each f32 row into f64 staging, run the workspace kernel,
+/// Evaluate one flat chunk exactly as the serial engine for its lane
+/// does — decode each f32 row into f64 staging, run the lane's workspace
+/// kernel (f64 `DynWorkspace`, or `QuantScratch` at the job's format),
 /// encode the f64 result back — so per-task outputs are bitwise
 /// identical to serial execution.
 ///
 /// # Safety
 /// The chunk's pointers must reference live, disjoint buffers of the
-/// advertised lengths; [`WorkerPool::eval_flat`] guarantees this by
-/// blocking until the chunk answers.
+/// advertised lengths; [`WorkerPool::eval_flat`] /
+/// [`WorkerPool::eval_flat_quant`] guarantee this by blocking until the
+/// chunk answers.
 unsafe fn eval_flat_chunk(
     robot: &Robot,
     kernel: BatchKernel,
@@ -353,44 +460,74 @@ unsafe fn eval_flat_chunk(
 ) {
     let n = c.n;
     assert_eq!(robot.dof(), n, "flat chunk row length != robot DOF");
+    let WorkerCache { backend, lane, q, qd, u, out_vec, out_mat, .. } = cache;
     for k in 0..c.rows {
-        let q = std::slice::from_raw_parts(c.q.add(k * n), n);
+        let qrow = std::slice::from_raw_parts(c.q.add(k * n), n);
         let out = std::slice::from_raw_parts_mut(c.out.add(k * c.out_per_task), c.out_per_task);
-        decode32(q, &mut cache.q);
-        match kernel {
-            BatchKernel::Rnea => {
-                decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), &mut cache.qd);
-                decode32(std::slice::from_raw_parts(c.u.add(k * n), n), &mut cache.u);
-                cache.ws.rnea_into(robot, &cache.q, &cache.qd, &cache.u, None, &mut cache.out_vec);
-                encode32(&cache.out_vec, out);
-            }
-            BatchKernel::Fd => {
-                decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), &mut cache.qd);
-                decode32(std::slice::from_raw_parts(c.u.add(k * n), n), &mut cache.u);
-                cache.ws.fd_into(robot, &cache.q, &cache.qd, &cache.u, None, &mut cache.out_vec);
-                encode32(&cache.out_vec, out);
-            }
-            BatchKernel::Minv => {
-                cache.ws.minv_into(robot, &cache.q, &mut cache.out_mat);
-                encode32(&cache.out_mat.d, out);
+        decode32(qrow, q);
+        match lane {
+            LaneScratch::F64(ws) => match kernel {
+                BatchKernel::Rnea => {
+                    decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                    decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                    ws.rnea_into(robot, q, qd, u, None, out_vec);
+                    encode32(out_vec, out);
+                }
+                BatchKernel::Fd => {
+                    decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                    decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                    ws.fd_into(robot, q, qd, u, None, out_vec);
+                    encode32(out_vec, out);
+                }
+                BatchKernel::Minv => {
+                    ws.minv_into(robot, q, out_mat);
+                    encode32(&out_mat.d, out);
+                }
+            },
+            LaneScratch::Quant(ws) => {
+                let PoolBackend::Quant(fmt) = *backend else {
+                    unreachable!("quant scratch cached under a non-quant backend")
+                };
+                match kernel {
+                    BatchKernel::Rnea => {
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.rnea_into(robot, q, qd, u, fmt, out_vec);
+                        encode32(out_vec, out);
+                    }
+                    BatchKernel::Fd => {
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.fd_into(robot, q, qd, u, fmt, out_vec);
+                        encode32(out_vec, out);
+                    }
+                    BatchKernel::Minv => {
+                        ws.minv_into(robot, q, fmt, out_mat);
+                        encode32(&out_mat.d, out);
+                    }
+                }
             }
         }
     }
 }
 
-/// Robot structures each pool worker keeps warm workspaces for (MRU):
-/// bounds worker memory while letting a multi-robot registry's parallel
-/// routes interleave batches without rebuilding — one slot per resident
-/// robot structure in the steady state.
-const WORKER_CACHE_SLOTS: usize = 8;
+/// (Robot structure, backend) pairs each pool worker keeps warm
+/// workspaces for (MRU): bounds worker memory while letting a
+/// multi-robot registry's parallel routes interleave batches without
+/// rebuilding — one slot per resident (structure, lane) pair in the
+/// steady state. Sized for the backend-keyed cache: every builtin robot
+/// served on BOTH lanes (8 pairs) plus imported robots still fit
+/// without thrashing.
+const WORKER_CACHE_SLOTS: usize = 16;
 
 /// Worker loop: pull chunks from the shared queue until the pool drops.
 fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
-    // MRU cache keyed by robot structure, most recent first:
+    // MRU cache keyed by (robot structure, backend), most recent first:
     // `Arc::ptr_eq` is the fast path (all chunks of one batch share the
     // robot Arc, and a serving engine holds one Arc across batches); the
     // structural check keeps slots warm across robot clones with
-    // identical topology.
+    // identical topology. Backends match exactly, so a format never
+    // borrows another format's (or the f64 lane's) slot.
     let mut cached: Vec<WorkerCache> = Vec::new();
     loop {
         let job = {
@@ -401,9 +538,7 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
             Ok(j) => j,
             Err(_) => return, // pool dropped
         };
-        let hit = cached.iter().position(|c| {
-            Arc::ptr_eq(&c.robot, &job.robot) || same_structure(&c.robot, &job.robot)
-        });
+        let hit = cached.iter().position(|c| cache_serves(c, job.backend, &job.robot));
         let mut cache = match hit {
             Some(i) => {
                 let mut c = cached.remove(i);
@@ -411,7 +546,7 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
                 c.robot = Arc::clone(&job.robot);
                 c
             }
-            None => WorkerCache::new(&job.robot),
+            None => WorkerCache::new(&job.robot, job.backend),
         };
         // Contain task panics (malformed tasks assert inside the
         // kernels): the caller gets the panic re-raised by the eval
@@ -420,12 +555,19 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
         // cache is dropped below on panic and kernels overwrite it per
         // task anyway.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match &job.work {
-            PoolWork::Tasks { tasks, range } => PoolPart::Outputs(
-                tasks[range.clone()]
-                    .iter()
-                    .map(|t| super::batch::eval_one(&job.robot, job.kernel, &mut cache.ws, t))
-                    .collect(),
-            ),
+            PoolWork::Tasks { tasks, range } => {
+                // Task chunks are injected by the f64 batch API only.
+                let ws = match &mut cache.lane {
+                    LaneScratch::F64(ws) => ws,
+                    LaneScratch::Quant(_) => unreachable!("task chunks always run the f64 lane"),
+                };
+                PoolPart::Outputs(
+                    tasks[range.clone()]
+                        .iter()
+                        .map(|t| super::batch::eval_one(&job.robot, job.kernel, ws, t))
+                        .collect(),
+                )
+            }
             PoolWork::Flat(chunk) => {
                 // SAFETY: the caller blocks in eval_flat until this job
                 // answers, so the borrowed rows outlive the evaluation.
@@ -617,6 +759,94 @@ mod tests {
         // The workers survive: a healthy batch still evaluates afterwards.
         let good = random_tasks(&robot, 6, 906);
         assert_eq!(pool.eval(&robot, BatchKernel::Rnea, &good, 2).len(), 6);
+    }
+
+    /// (structure, format) cache keying: a cache entry serves only its
+    /// exact backend — different formats (and the f64 lane) never alias
+    /// one another's workspaces.
+    #[test]
+    fn cache_entries_do_not_alias_across_formats() {
+        let robot = Arc::new(builtin::iiwa());
+        let fa = PoolBackend::Quant(QFormat::new(12, 12));
+        let fb = PoolBackend::Quant(QFormat::new(12, 14));
+        let entry = WorkerCache::new(&robot, fa);
+        assert!(cache_serves(&entry, fa, &robot), "exact (structure, format) must hit");
+        assert!(!cache_serves(&entry, fb, &robot), "another format must miss");
+        assert!(!cache_serves(&entry, PoolBackend::F64, &robot), "the f64 lane must miss");
+        let f64_entry = WorkerCache::new(&robot, PoolBackend::F64);
+        assert!(!cache_serves(&f64_entry, fa, &robot), "f64 entry must not serve quant jobs");
+        // Structural fallback still applies within one backend.
+        let clone = Arc::new(builtin::iiwa());
+        assert!(cache_serves(&entry, fa, &clone));
+    }
+
+    /// Interleaving two quantized formats and the f64 lane for the SAME
+    /// robot through a single-worker pool (so one worker's MRU set sees
+    /// every job) must reproduce each serial reference bitwise.
+    #[test]
+    fn interleaved_formats_match_serial_bitwise() {
+        use crate::quant::QuantScratch;
+        let pool = WorkerPool::new(1);
+        let robot = Arc::new(builtin::iiwa());
+        let n = robot.dof();
+        let rows = 9;
+        let mut rng = Rng::new(930);
+        let mut q32 = Vec::with_capacity(rows * n);
+        let mut qd32 = Vec::with_capacity(rows * n);
+        let mut u32 = Vec::with_capacity(rows * n);
+        for _ in 0..rows {
+            let s = State::random(&robot, &mut rng);
+            q32.extend(s.q.iter().map(|&x| x as f32));
+            qd32.extend(s.qd.iter().map(|&x| x as f32));
+            u32.extend(rng.vec_range(n, -8.0, 8.0).iter().map(|&x| x as f32));
+        }
+        // Serial references: the exact decode→kernel→encode loop.
+        let serial_quant = |fmt: QFormat| -> Vec<f32> {
+            let mut ws = QuantScratch::new(n);
+            let (mut q, mut qd, mut u, mut o) =
+                (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let mut out = vec![0.0f32; rows * n];
+            for k in 0..rows {
+                decode32(&q32[k * n..(k + 1) * n], &mut q);
+                decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+                decode32(&u32[k * n..(k + 1) * n], &mut u);
+                ws.fd_into(&robot, &q, &qd, &u, fmt, &mut o);
+                encode32(&o, &mut out[k * n..(k + 1) * n]);
+            }
+            out
+        };
+        let fa = QFormat::new(12, 12);
+        let fb = QFormat::new(12, 14);
+        let want_a = serial_quant(fa);
+        let want_b = serial_quant(fb);
+        let want_f64: Vec<f32> = {
+            let mut ws = DynWorkspace::new(&robot);
+            let (mut q, mut qd, mut u, mut o) =
+                (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+            let mut out = vec![0.0f32; rows * n];
+            for k in 0..rows {
+                decode32(&q32[k * n..(k + 1) * n], &mut q);
+                decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+                decode32(&u32[k * n..(k + 1) * n], &mut u);
+                ws.fd_into(&robot, &q, &qd, &u, None, &mut o);
+                encode32(&o, &mut out[k * n..(k + 1) * n]);
+            }
+            out
+        };
+        let mut got = vec![0.0f32; rows * n];
+        // Two rounds so the second visit of each backend reuses (never
+        // mistakes) a cached entry.
+        for _ in 0..2 {
+            got.fill(0.0);
+            pool.eval_flat_quant(&robot, BatchKernel::Fd, fa, &q32, &qd32, &u32, n, n, &mut got, 4);
+            assert_eq!(got, want_a, "format A diverged");
+            got.fill(0.0);
+            pool.eval_flat_quant(&robot, BatchKernel::Fd, fb, &q32, &qd32, &u32, n, n, &mut got, 4);
+            assert_eq!(got, want_b, "format B diverged");
+            got.fill(0.0);
+            pool.eval_flat(&robot, BatchKernel::Fd, &q32, &qd32, &u32, n, n, &mut got, 4);
+            assert_eq!(got, want_f64, "f64 lane diverged");
+        }
     }
 
     #[test]

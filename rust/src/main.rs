@@ -12,16 +12,19 @@
 //! * `serve [--robots SPEC] [--backend native|pjrt] [--batch B]
 //!   [--traj H] [--par P]` — start the batched serving coordinator and
 //!   run a synthetic workload through it. `--robots` takes a registry
-//!   spec such as `iiwa,atlas:quant,hyq:quant@14.18`: one coordinator
-//!   serves all listed robots concurrently, each on its own backend
-//!   (f64 native, or the quantized engine at a per-robot Q-format).
-//!   `--traj H` additionally exercises trajectory batch requests
-//!   (H-step rollouts unrolled server-side); `--par P` fans each native
-//!   route's batches out across the worker pool (0 = one chunk per
-//!   core). The default `native` backend serves from the
-//!   allocation-free workspace cores (no artifacts needed); `pjrt`
-//!   executes AOT artifacts and requires `--features pjrt` plus
-//!   `--artifacts DIR`. See docs/serving.md.
+//!   spec such as `iiwa,atlas:quant@12.10+comp,arm=path.urdf`: one
+//!   coordinator serves all listed robots concurrently, each on its own
+//!   backend (f64 native, or the quantized engine at a per-robot
+//!   Q-format, `+comp` adding the fitted M⁻¹ error compensation);
+//!   `name=path.urdf` entries load robots through the URDF-lite
+//!   importer. `--traj H` additionally exercises trajectory batch
+//!   requests (H-step rollouts unrolled server-side); `--par P` fans
+//!   each step route's batches — native and quantized alike — out
+//!   across the worker pool (0 = one chunk per core; rollouts stay
+//!   serial). The default `native` backend
+//!   serves from the allocation-free workspace cores (no artifacts
+//!   needed); `pjrt` executes AOT artifacts and requires
+//!   `--features pjrt` plus `--artifacts DIR`. See docs/serving.md.
 
 use draco::accel::{self, designs::RbdFn, Design};
 use draco::model::{builtin_robot, robot_registry};

@@ -1,13 +1,16 @@
 //! Precision-aware quantization framework (paper §III, Fig. 4): Q-format
-//! emulation, quantized RBD functions, the error analyzer with the three
-//! amplification heuristics, Minv error compensation, and the bit-width
-//! search driven by the ICMS closed loop.
+//! emulation, quantized RBD functions (the rounded-f64 lane in [`qrbd`]
+//! and the true-integer `i64` lane in [`qint`]), the error analyzer with
+//! the three amplification heuristics, Minv error compensation, and the
+//! bit-width search driven by the ICMS closed loop.
 
 pub mod analyzer;
 pub mod compensate;
 pub mod qformat;
+pub mod qint;
 pub mod qrbd;
 pub mod search;
 
 pub use qformat::QFormat;
+pub use qint::{QInt, QuantIntScratch};
 pub use qrbd::QuantScratch;

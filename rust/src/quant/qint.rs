@@ -1,0 +1,990 @@
+//! True-integer fixed-point lane: the RBD kernels evaluated over `i64`
+//! words instead of rounded f64s.
+//!
+//! The legacy lane ([`super::qrbd`]) *emulates* fixed point by rounding
+//! f64 intermediates — faithful error behaviour, but every "cheap" MAC
+//! still runs the full double-precision datapath plus a rounding call.
+//! This lane is the software analogue of actually running narrow: values
+//! are **scaled once on ingest** (`x → round(x·2^f)` as `i64`), every
+//! inner loop is integer multiply + shift-renormalize over flat
+//! `[i64; 36]` 6×6 blocks (mirroring [`crate::spatial::mat6`]) and
+//! `[i64; 6]` spatial vectors, and results are **dequantized once on
+//! egress**. Per-robot constants (inertia blocks, the gravity
+//! acceleration) are quantized once per `(robot, format)` and cached in
+//! the scratch — the BRAM/LUT constants of the accelerator, written once
+//! — instead of being re-rounded on every task like the legacy lane.
+//!
+//! Numerics: each block operation accumulates exact `i64` products at
+//! 2f fractional bits and renormalizes once per output entry with
+//! **round-half-away-from-zero** — bit-compatible with
+//! [`QFormat::q`]'s rounding (see the boundary-value regression tests:
+//! a naive `(p + half) >> f` would truncate negative ties toward −∞ and
+//! silently diverge from the legacy lane on shared vectors). Because the
+//! datapath renormalizes after every operation (as a width-f register
+//! file forces in hardware) rather than once per f64 expression group,
+//! the lane's trajectories differ from the legacy lane in the last
+//! units — but the error *envelope* matches the same format, which is
+//! what the bit-width search certifies.
+//!
+//! Supported word widths are capped at [`MAX_INT_WIDTH`] bits so that a
+//! 6-term accumulation of 2f-bit products can never overflow `i64` (and
+//! products stay exactly representable for the f64 cross-checks); the
+//! paper's DSP-friendly 18/24-bit formats sit comfortably inside. Wider
+//! formats (e.g. the 32-bit baseline) keep using the legacy lane.
+//!
+//! The M⁻¹ sweep keeps the reciprocal on Algorithm 1's inline path but
+//! routes it through [`QInt::recip_fix`] — the shared-divider emulation
+//! (dequantize, one f64 reciprocal, requantize), exactly the quantized
+//! divider output the legacy lane models. A fixed-point port of the
+//! division-deferring Algorithm 2 needs the holding-factor scaling
+//! analysis (D·IA overflows narrow words) and stays an open item.
+
+use super::qformat::QFormat;
+use crate::dynamics::kinematics::Kin;
+use crate::dynamics::minv::Topology;
+use crate::model::Robot;
+use crate::spatial::mat6::M6;
+use crate::spatial::{DMat, SV, V3};
+
+/// Widest supported word (int + frac bits). 6-term accumulations of
+/// 2f-bit products need `2·width + 3 ≤ 63` bits; capping at 26 also
+/// keeps every product ≤ 2^52, exactly representable in f64 for the
+/// equivalence tests.
+pub const MAX_INT_WIDTH: u32 = 26;
+
+/// Integer quantization context for one [`QFormat`]: ingest/egress
+/// scaling, saturation bounds, and the 2f→f renormalization.
+#[derive(Debug, Clone, Copy)]
+pub struct QInt {
+    /// The format this context realizes.
+    pub fmt: QFormat,
+    f: u32,
+    half: i64,
+    min: i64,
+    max: i64,
+    scale: f64,
+    inv_scale: f64,
+}
+
+impl QInt {
+    /// Build a context; panics on formats the integer lane cannot carry
+    /// (see [`MAX_INT_WIDTH`]).
+    pub fn new(fmt: QFormat) -> QInt {
+        let w = fmt.width();
+        assert!(fmt.int_bits >= 1, "need at least a sign bit");
+        assert!(
+            (2..=MAX_INT_WIDTH).contains(&w),
+            "integer lane supports 2..={MAX_INT_WIDTH}-bit words, got {w}; \
+             use the rounded-f64 lane (quant::qrbd) for wider formats"
+        );
+        let f = fmt.frac_bits;
+        QInt {
+            fmt,
+            f,
+            half: if f == 0 { 0 } else { 1i64 << (f - 1) },
+            min: -(1i64 << (w - 1)),
+            max: (1i64 << (w - 1)) - 1,
+            scale: (1i64 << f) as f64,
+            inv_scale: (2.0f64).powi(-(f as i32)),
+        }
+    }
+
+    /// Ingest: round-half-away-from-zero + saturate, identical to
+    /// [`QFormat::q`] on every finite input (regression-tested at the
+    /// tie and saturation boundaries).
+    #[inline]
+    pub fn to_fix(&self, x: f64) -> i64 {
+        // `as i64` saturates on overflow/NaN per Rust cast semantics;
+        // the clamp then enforces the word width.
+        let v = (x * self.scale).round() as i64;
+        v.clamp(self.min, self.max)
+    }
+
+    /// Egress: exact (every word is a ≤53-bit dyadic rational).
+    #[inline]
+    pub fn from_fix(&self, v: i64) -> f64 {
+        v as f64 * self.inv_scale
+    }
+
+    /// Saturate an f-scaled sum to the word width.
+    #[inline]
+    pub fn sat(&self, v: i64) -> i64 {
+        v.clamp(self.min, self.max)
+    }
+
+    /// Renormalize a 2f-scaled product/accumulator to f bits with
+    /// round-half-away-from-zero + saturation. The sign-split keeps
+    /// negative ties rounding away from zero (an arithmetic
+    /// `(p + half) >> f` would floor them toward −∞ — the asymmetry the
+    /// regression tests pin down).
+    #[inline]
+    pub fn rnorm(&self, p: i64) -> i64 {
+        let q = if p >= 0 {
+            (p + self.half) >> self.f
+        } else {
+            -((-p + self.half) >> self.f)
+        };
+        self.sat(q)
+    }
+
+    /// Shared-divider emulation: the quantized reciprocal of an f-scaled
+    /// word (dequantize, one f64 division, requantize) — the same
+    /// divider output the legacy lane's `ctx.s(1/d)` models.
+    #[inline]
+    pub fn recip_fix(&self, d: i64) -> i64 {
+        self.to_fix(1.0 / self.from_fix(d))
+    }
+}
+
+/// Flat int 6×6 block, row-major like [`M6`]: entry (i, j) at `i*6 + j`.
+pub type I6 = [i64; 36];
+/// Int spatial vector: angular part 0..3, linear part 3..6.
+pub type IV6 = [i64; 6];
+
+/// Quantized spatial transform: row-major 3×3 rotation + translation.
+#[derive(Debug, Clone, Copy)]
+pub struct IXform {
+    e: [i64; 9],
+    r: [i64; 3],
+}
+
+impl IXform {
+    const ZERO: IXform = IXform { e: [0; 9], r: [0; 3] };
+}
+
+#[inline]
+fn to_fix_sv(ctx: &QInt, v: &SV) -> IV6 {
+    let a = v.to_array();
+    [
+        ctx.to_fix(a[0]),
+        ctx.to_fix(a[1]),
+        ctx.to_fix(a[2]),
+        ctx.to_fix(a[3]),
+        ctx.to_fix(a[4]),
+        ctx.to_fix(a[5]),
+    ]
+}
+
+fn to_fix_m6(ctx: &QInt, m: &M6) -> I6 {
+    let mut out = [0i64; 36];
+    for (o, x) in out.iter_mut().zip(m) {
+        *o = ctx.to_fix(*x);
+    }
+    out
+}
+
+/// Cross product of f-scaled 3-vectors, renormalized per component.
+#[inline]
+fn icross3(ctx: &QInt, a: &[i64; 3], b: &[i64; 3]) -> [i64; 3] {
+    [
+        ctx.rnorm(a[1] * b[2] - a[2] * b[1]),
+        ctx.rnorm(a[2] * b[0] - a[0] * b[2]),
+        ctx.rnorm(a[0] * b[1] - a[1] * b[0]),
+    ]
+}
+
+/// Motion cross product v × m (int twin of [`SV::crm`]); the linear part
+/// accumulates all four products at 2f and renormalizes once.
+#[inline]
+fn icrm(ctx: &QInt, v: &IV6, m: &IV6) -> IV6 {
+    let (w, vl) = ([v[0], v[1], v[2]], [v[3], v[4], v[5]]);
+    let (mw, ml) = ([m[0], m[1], m[2]], [m[3], m[4], m[5]]);
+    [
+        ctx.rnorm(w[1] * mw[2] - w[2] * mw[1]),
+        ctx.rnorm(w[2] * mw[0] - w[0] * mw[2]),
+        ctx.rnorm(w[0] * mw[1] - w[1] * mw[0]),
+        ctx.rnorm(w[1] * ml[2] - w[2] * ml[1] + vl[1] * mw[2] - vl[2] * mw[1]),
+        ctx.rnorm(w[2] * ml[0] - w[0] * ml[2] + vl[2] * mw[0] - vl[0] * mw[2]),
+        ctx.rnorm(w[0] * ml[1] - w[1] * ml[0] + vl[0] * mw[1] - vl[1] * mw[0]),
+    ]
+}
+
+/// Force cross product v ×* f (int twin of [`SV::crf`]).
+#[inline]
+fn icrf(ctx: &QInt, v: &IV6, f: &IV6) -> IV6 {
+    let (w, vl) = ([v[0], v[1], v[2]], [v[3], v[4], v[5]]);
+    let (fa, fl) = ([f[0], f[1], f[2]], [f[3], f[4], f[5]]);
+    [
+        ctx.rnorm(w[1] * fa[2] - w[2] * fa[1] + vl[1] * fl[2] - vl[2] * fl[1]),
+        ctx.rnorm(w[2] * fa[0] - w[0] * fa[2] + vl[2] * fl[0] - vl[0] * fl[2]),
+        ctx.rnorm(w[0] * fa[1] - w[1] * fa[0] + vl[0] * fl[1] - vl[1] * fl[0]),
+        ctx.rnorm(w[1] * fl[2] - w[2] * fl[1]),
+        ctx.rnorm(w[2] * fl[0] - w[0] * fl[2]),
+        ctx.rnorm(w[0] * fl[1] - w[1] * fl[0]),
+    ]
+}
+
+/// a · v over a flat int block: 6 MACs per row, one renorm per entry.
+#[inline]
+fn imatvec6(ctx: &QInt, a: &I6, v: &IV6) -> IV6 {
+    let mut out = [0i64; 6];
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = 0i64;
+        for (j, x) in v.iter().enumerate() {
+            acc += a[i * 6 + j] * x;
+        }
+        *o = ctx.rnorm(acc);
+    }
+    out
+}
+
+/// aᵀ b with one renorm (the Sᵀf joint projection).
+#[inline]
+fn idot6(ctx: &QInt, a: &IV6, b: &IV6) -> i64 {
+    let mut acc = 0i64;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    ctx.rnorm(acc)
+}
+
+#[inline]
+fn iscale6(ctx: &QInt, v: &IV6, s: i64) -> IV6 {
+    let mut out = *v;
+    for x in out.iter_mut() {
+        *x = ctx.rnorm(*x * s);
+    }
+    out
+}
+
+#[inline]
+fn iadd6(ctx: &QInt, a: &IV6, b: &IV6) -> IV6 {
+    let mut out = *a;
+    for (o, x) in out.iter_mut().zip(b) {
+        *o = ctx.sat(*o + x);
+    }
+    out
+}
+
+/// Fused congruence transform XᵀAX on int blocks — the hot op of the
+/// articulated-inertia propagation, mirroring [`crate::spatial::mat6::xtax`]
+/// with a width-f renormalization between the two passes (the register
+/// file a hardware pipeline would have there).
+fn ixtax(ctx: &QInt, x: &I6, a: &I6) -> I6 {
+    let mut t = [0i64; 36];
+    for i in 0..6 {
+        for j in 0..6 {
+            let mut acc = 0i64;
+            for k in 0..6 {
+                acc += a[i * 6 + k] * x[k * 6 + j];
+            }
+            t[i * 6 + j] = ctx.rnorm(acc);
+        }
+    }
+    let mut out = [0i64; 36];
+    for i in 0..6 {
+        for j in 0..6 {
+            let mut acc = 0i64;
+            for k in 0..6 {
+                acc += x[k * 6 + i] * t[k * 6 + j];
+            }
+            out[i * 6 + j] = ctx.rnorm(acc);
+        }
+    }
+    out
+}
+
+/// Motion transform X·v: ang = E·w, lin = E·(l − r × w).
+#[inline]
+fn ixf_apply(ctx: &QInt, x: &IXform, v: &IV6) -> IV6 {
+    let w = [v[0], v[1], v[2]];
+    let l = [v[3], v[4], v[5]];
+    let rxw = icross3(ctx, &x.r, &w);
+    let t = [
+        ctx.sat(l[0] - rxw[0]),
+        ctx.sat(l[1] - rxw[1]),
+        ctx.sat(l[2] - rxw[2]),
+    ];
+    let mut out = [0i64; 6];
+    for i in 0..3 {
+        let (mut aw, mut al) = (0i64, 0i64);
+        for j in 0..3 {
+            aw += x.e[i * 3 + j] * w[j];
+            al += x.e[i * 3 + j] * t[j];
+        }
+        out[i] = ctx.rnorm(aw);
+        out[i + 3] = ctx.rnorm(al);
+    }
+    out
+}
+
+/// Inverse force transform Xᵀf: lin = Eᵀf_lin, ang = Eᵀf_ang + r × lin —
+/// RNEA's backward-pass `X_λ(i)^T f_i`.
+#[inline]
+fn ixf_inv_apply_force(ctx: &QInt, x: &IXform, f: &IV6) -> IV6 {
+    let fa = [f[0], f[1], f[2]];
+    let fl = [f[3], f[4], f[5]];
+    let (mut ang, mut lin) = ([0i64; 3], [0i64; 3]);
+    for i in 0..3 {
+        let (mut aa, mut al) = (0i64, 0i64);
+        for j in 0..3 {
+            aa += x.e[j * 3 + i] * fa[j];
+            al += x.e[j * 3 + i] * fl[j];
+        }
+        ang[i] = ctx.rnorm(aa);
+        lin[i] = ctx.rnorm(al);
+    }
+    let rxl = icross3(ctx, &x.r, &lin);
+    [
+        ctx.sat(ang[0] + rxl[0]),
+        ctx.sat(ang[1] + rxl[1]),
+        ctx.sat(ang[2] + rxl[2]),
+        lin[0],
+        lin[1],
+        lin[2],
+    ]
+}
+
+/// Int 6×6 motion matrix of a quantized transform: `[E 0; −E·r̃ E]` with
+/// the bottom-left block's products renormalized to f bits (the DSP
+/// result register), mirroring [`crate::spatial::Xform::to_mat6`].
+fn ixf_to_mat6(ctx: &QInt, x: &IXform) -> I6 {
+    let mut m = [0i64; 36];
+    for i in 0..3 {
+        for j in 0..3 {
+            m[i * 6 + j] = x.e[i * 3 + j];
+            m[(i + 3) * 6 + (j + 3)] = x.e[i * 3 + j];
+        }
+    }
+    let r = x.r;
+    let skew = [[0, -r[2], r[1]], [r[2], 0, -r[0]], [-r[1], r[0], 0]];
+    for i in 0..3 {
+        for j in 0..3 {
+            let mut acc = 0i64;
+            for (k, row) in skew.iter().enumerate() {
+                acc += x.e[i * 3 + k] * row[j];
+            }
+            m[(i + 3) * 6 + j] = ctx.rnorm(-acc);
+        }
+    }
+    m
+}
+
+/// Preallocated buffers + per-`(robot, format)` ingested constants for
+/// the integer kernels — the int twin of [`super::qrbd::QuantScratch`].
+/// One scratch serves one robot DOF; `rnea_into` / `minv_into` /
+/// `fd_into` perform zero heap allocation per task, and the quantized
+/// inertia constants, gravity word, and topology column lists are built
+/// once per `(robot name, format)` and reused across tasks (the "scale
+/// once on ingest" half of the lane's contract).
+#[derive(Debug, Clone)]
+pub struct QuantIntScratch {
+    n: usize,
+    ctx: QInt,
+    /// Ingest cache key: constants below are valid for this robot+format.
+    const_key: Option<(String, QFormat)>,
+    topo: Topology,
+    /// Quantized inertia blocks (BRAM constants), one per link.
+    ic: Vec<I6>,
+    /// Quantized base acceleration (gravity trick), ingested once.
+    ia0: IV6,
+    // f64 staging for the per-task kinematics (sin/cos "LUT" pass).
+    kin: Kin,
+    qq: Vec<f64>,
+    qdq: Vec<f64>,
+    // Quantized per-task state.
+    qfix: Vec<i64>,
+    qdfix: Vec<i64>,
+    ufix: Vec<i64>,
+    tfix: Vec<i64>,
+    irhs: Vec<i64>,
+    // Int kinematic cache.
+    ixup: Vec<IXform>,
+    x6: Vec<I6>,
+    is: Vec<IV6>,
+    iv: Vec<IV6>,
+    // RNEA sweeps.
+    ia_acc: Vec<IV6>,
+    ifo: Vec<IV6>,
+    // Minv sweeps.
+    iart: Vec<I6>,
+    iu: Vec<IV6>,
+    idinv: Vec<i64>,
+    /// Force columns, flattened `i*n + j`.
+    ifcol: Vec<IV6>,
+    /// Acceleration responses, flattened `i*n + j`.
+    iacol: Vec<IV6>,
+    /// M⁻¹ in fixed point, flattened `i*n + j`.
+    irow: Vec<i64>,
+}
+
+impl QuantIntScratch {
+    /// Allocate every buffer for an `n`-DOF robot. The format is bound
+    /// lazily on the first kernel call (and rebound when it changes).
+    pub fn new(n: usize) -> QuantIntScratch {
+        QuantIntScratch {
+            n,
+            // Placeholder context; replaced on first ingest (const_key
+            // is None so every kernel re-ingests before reading it).
+            ctx: QInt::new(QFormat::new(12, 12)),
+            const_key: None,
+            topo: Topology { subcols: Vec::new(), brcols: Vec::new() },
+            ic: vec![[0; 36]; n],
+            ia0: [0; 6],
+            kin: Kin::empty(n),
+            qq: vec![0.0; n],
+            qdq: vec![0.0; n],
+            qfix: vec![0; n],
+            qdfix: vec![0; n],
+            ufix: vec![0; n],
+            tfix: vec![0; n],
+            irhs: vec![0; n],
+            ixup: vec![IXform::ZERO; n],
+            x6: vec![[0; 36]; n],
+            is: vec![[0; 6]; n],
+            iv: vec![[0; 6]; n],
+            ia_acc: vec![[0; 6]; n],
+            ifo: vec![[0; 6]; n],
+            iart: vec![[0; 36]; n],
+            iu: vec![[0; 6]; n],
+            idinv: vec![0; n],
+            ifcol: vec![[0; 6]; n * n],
+            iacol: vec![[0; 6]; n * n],
+            irow: vec![0; n * n],
+        }
+    }
+
+    /// DOF the scratch was sized for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// (Re)ingest per-robot constants when the `(robot, format)` pair
+    /// changes: quantize the inertia blocks and the gravity word once,
+    /// rebuild the topology column lists. Keyed by robot *name* — the
+    /// registry's routing key — so callers that mutate a robot's
+    /// inertias in place must use a fresh scratch.
+    fn ensure_ingest(&mut self, robot: &Robot, fmt: QFormat) {
+        assert_eq!(robot.dof(), self.n, "scratch sized for a different robot");
+        if self
+            .const_key
+            .as_ref()
+            .is_some_and(|(name, f)| *f == fmt && *name == robot.name)
+        {
+            return;
+        }
+        let ctx = QInt::new(fmt);
+        for (block, link) in self.ic.iter_mut().zip(&robot.links) {
+            *block = to_fix_m6(&ctx, &link.inertia.to_mat6());
+        }
+        self.ia0 = to_fix_sv(&ctx, &SV::new(V3::ZERO, -robot.gravity));
+        self.topo = Topology::new(robot);
+        self.ctx = ctx;
+        self.const_key = Some((robot.name.clone(), fmt));
+    }
+
+    /// Rebuild the int kinematic cache for the quantized state held in
+    /// `qfix` (+ `qdfix` when `with_vel`): one f64 transform pass from
+    /// the dequantized (exact) inputs — the sin/cos LUT lookup — then
+    /// quantized E/r entries, an integer velocity propagation, and (only
+    /// when `need_x6`, i.e. an M⁻¹ sweep follows) the int 6×6 motion
+    /// blocks that `ixtax` consumes — the RNEA-only path skips them.
+    fn ikin(&mut self, robot: &Robot, with_vel: bool, need_x6: bool) {
+        let ctx = self.ctx;
+        let n = self.n;
+        for i in 0..n {
+            self.qq[i] = ctx.from_fix(self.qfix[i]);
+            self.qdq[i] = if with_vel { ctx.from_fix(self.qdfix[i]) } else { 0.0 };
+        }
+        if with_vel {
+            self.kin.recompute(robot, &self.qq, &self.qdq);
+        } else {
+            self.kin.recompute_positions(robot, &self.qq);
+        }
+        for i in 0..n {
+            let x = &self.kin.xup[i];
+            let mut e = [0i64; 9];
+            for r in 0..3 {
+                for c in 0..3 {
+                    e[r * 3 + c] = ctx.to_fix(x.e.0[r][c]);
+                }
+            }
+            let r3 = [
+                ctx.to_fix(x.r.0[0]),
+                ctx.to_fix(x.r.0[1]),
+                ctx.to_fix(x.r.0[2]),
+            ];
+            self.ixup[i] = IXform { e, r: r3 };
+            if need_x6 {
+                self.x6[i] = ixf_to_mat6(&ctx, &self.ixup[i]);
+            }
+            self.is[i] = to_fix_sv(&ctx, &self.kin.s[i]);
+        }
+        if with_vel {
+            for i in 0..n {
+                let vj = iscale6(&ctx, &self.is[i], self.qdfix[i]);
+                self.iv[i] = match robot.links[i].parent {
+                    Some(p) => {
+                        let vp = self.iv[p];
+                        iadd6(&ctx, &ixf_apply(&ctx, &self.ixup[i], &vp), &vj)
+                    }
+                    None => vj,
+                };
+            }
+        } else {
+            self.iv.fill([0; 6]);
+        }
+    }
+
+    /// Forward + backward RNEA sweeps over the current int kin cache;
+    /// `with_qdd` adds the S·q̈ term (reads `ufix`), otherwise this is
+    /// the bias pass. Joint torques land in `tfix` (f-scaled).
+    fn rnea_fix(&mut self, robot: &Robot, with_qdd: bool) {
+        let ctx = self.ctx;
+        let n = self.n;
+        for i in 0..n {
+            let ap = match robot.links[i].parent {
+                Some(p) => self.ia_acc[p],
+                None => self.ia0,
+            };
+            let mut ai = ixf_apply(&ctx, &self.ixup[i], &ap);
+            if with_qdd {
+                ai = iadd6(&ctx, &ai, &iscale6(&ctx, &self.is[i], self.ufix[i]));
+            }
+            let vdot = icrm(&ctx, &self.iv[i], &iscale6(&ctx, &self.is[i], self.qdfix[i]));
+            let ai = iadd6(&ctx, &ai, &vdot);
+            let iai = imatvec6(&ctx, &self.ic[i], &ai);
+            let ivi = imatvec6(&ctx, &self.ic[i], &self.iv[i]);
+            let fi = iadd6(&ctx, &iai, &icrf(&ctx, &self.iv[i], &ivi));
+            self.ia_acc[i] = ai;
+            self.ifo[i] = fi;
+        }
+        for i in (0..n).rev() {
+            self.tfix[i] = idot6(&ctx, &self.is[i], &self.ifo[i]);
+            if let Some(p) = robot.links[i].parent {
+                let up = ixf_inv_apply_force(&ctx, &self.ixup[i], &self.ifo[i]);
+                self.ifo[p] = iadd6(&ctx, &self.ifo[p], &up);
+            }
+        }
+    }
+
+    /// Analytical M⁻¹ sweeps over the current int kin cache (Algorithm 1
+    /// with the reciprocal through the shared-divider emulation). The
+    /// fixed-point matrix lands in `irow` (f-scaled, flattened `i·n+j`).
+    fn minv_fix(&mut self, robot: &Robot) {
+        let ctx = self.ctx;
+        let n = self.n;
+        self.iart.copy_from_slice(&self.ic);
+        self.ifcol.fill([0; 6]);
+        self.iacol.fill([0; 6]);
+        self.irow.fill(0);
+
+        for i in (0..n).rev() {
+            let s = self.is[i];
+            let ui = imatvec6(&ctx, &self.iart[i], &s);
+            let di = idot6(&ctx, &s, &ui);
+            let dinv = ctx.recip_fix(di);
+            self.iu[i] = ui;
+            self.idinv[i] = dinv;
+            self.irow[i * n + i] = ctx.sat(self.irow[i * n + i] + dinv);
+            for &j in &self.topo.subcols[i] {
+                let sf = idot6(&ctx, &s, &self.ifcol[i * n + j]);
+                if sf != 0 {
+                    self.irow[i * n + j] = ctx.sat(self.irow[i * n + j] - ctx.rnorm(dinv * sf));
+                }
+            }
+            if let Some(p) = robot.links[i].parent {
+                // IA_art = IA − (U Uᵀ)·D⁻¹, each product renormalized.
+                let mut ia_art = [0i64; 36];
+                for a in 0..6 {
+                    for b in 0..6 {
+                        let uu = ctx.rnorm(ui[a] * ui[b]);
+                        ia_art[a * 6 + b] =
+                            ctx.sat(self.iart[i][a * 6 + b] - ctx.rnorm(uu * dinv));
+                    }
+                }
+                let contrib = ixtax(&ctx, &self.x6[i], &ia_art);
+                for e in 0..36 {
+                    self.iart[p][e] = ctx.sat(self.iart[p][e] + contrib[e]);
+                }
+                for &j in &self.topo.subcols[i] {
+                    let fij =
+                        iadd6(&ctx, &self.ifcol[i * n + j], &iscale6(&ctx, &ui, self.irow[i * n + j]));
+                    let up = ixf_inv_apply_force(&ctx, &self.ixup[i], &fij);
+                    self.ifcol[p * n + j] = iadd6(&ctx, &self.ifcol[p * n + j], &up);
+                }
+            }
+        }
+
+        for i in 0..n {
+            let s = self.is[i];
+            match robot.links[i].parent {
+                None => {
+                    for &j in &self.topo.brcols[i] {
+                        self.iacol[i * n + j] = iscale6(&ctx, &s, self.irow[i * n + j]);
+                    }
+                }
+                Some(p) => {
+                    for &j in &self.topo.brcols[i] {
+                        let ap = self.iacol[p * n + j];
+                        let xa = ixf_apply(&ctx, &self.ixup[i], &ap);
+                        let corr = ctx.rnorm(self.idinv[i] * idot6(&ctx, &self.iu[i], &xa));
+                        if corr != 0 {
+                            self.irow[i * n + j] = ctx.sat(self.irow[i * n + j] - corr);
+                        }
+                        self.iacol[i * n + j] =
+                            iadd6(&ctx, &xa, &iscale6(&ctx, &s, self.irow[i * n + j]));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Integer RNEA (ID): τ = ID(q, q̇, q̈), dequantized into `tau`.
+    pub fn rnea_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        qdd: &[f64],
+        fmt: QFormat,
+        tau: &mut [f64],
+    ) {
+        self.ensure_ingest(robot, fmt);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(q[i]);
+            self.qdfix[i] = ctx.to_fix(qd[i]);
+            self.ufix[i] = ctx.to_fix(qdd[i]);
+        }
+        self.ikin(robot, true, false);
+        self.rnea_fix(robot, true);
+        for i in 0..n {
+            tau[i] = ctx.from_fix(self.tfix[i]);
+        }
+    }
+
+    /// Integer analytical M⁻¹(q), dequantized into `out` (N×N).
+    pub fn minv_into(&mut self, robot: &Robot, q: &[f64], fmt: QFormat, out: &mut DMat) {
+        self.ensure_ingest(robot, fmt);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(out.d.len(), n * n, "output sized for a different robot");
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(q[i]);
+        }
+        self.ikin(robot, false, true);
+        self.minv_fix(robot);
+        for (o, v) in out.d.iter_mut().zip(&self.irow) {
+            *o = ctx.from_fix(*v);
+        }
+    }
+
+    /// Fused integer forward dynamics q̈ = M⁻¹(q)·(τ − C(q, q̇)): **one**
+    /// int kinematics pass shared by the bias sweep and the M⁻¹ sweep
+    /// (which reads only the position entries), with τ − C folded into
+    /// the fixed-point matvec and a single dequantization on egress —
+    /// the integer twin of [`crate::dynamics::DynWorkspace::fd_into`].
+    pub fn fd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fmt: QFormat,
+        qdd: &mut [f64],
+    ) {
+        self.ensure_ingest(robot, fmt);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(qdd.len(), n);
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(q[i]);
+            self.qdfix[i] = ctx.to_fix(qd[i]);
+            self.ufix[i] = ctx.to_fix(tau[i]);
+        }
+        self.ikin(robot, true, true);
+        self.rnea_fix(robot, false); // bias: q̈ ≡ 0, tfix ← C
+        self.minv_fix(robot); // reads ixup/x6/is only — same kin pass
+        for i in 0..n {
+            self.irhs[i] = ctx.sat(self.ufix[i] - self.tfix[i]);
+        }
+        for i in 0..n {
+            let mut acc = 0i64;
+            for j in 0..n {
+                acc += self.irow[i * n + j] * self.irhs[j];
+            }
+            qdd[i] = ctx.from_fix(ctx.rnorm(acc));
+        }
+    }
+}
+
+/// Integer RNEA, allocating wrapper over [`QuantIntScratch::rnea_into`].
+pub fn quant_rnea_i64(robot: &Robot, q: &[f64], qd: &[f64], qdd: &[f64], fmt: QFormat) -> Vec<f64> {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut tau = vec![0.0; n];
+    ws.rnea_into(robot, q, qd, qdd, fmt, &mut tau);
+    tau
+}
+
+/// Integer M⁻¹, allocating wrapper over [`QuantIntScratch::minv_into`].
+pub fn quant_minv_i64(robot: &Robot, q: &[f64], fmt: QFormat) -> DMat {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut out = DMat::zeros(n, n);
+    ws.minv_into(robot, q, fmt, &mut out);
+    out
+}
+
+/// Integer FD, allocating wrapper over [`QuantIntScratch::fd_into`].
+pub fn quant_fd_i64(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fmt: QFormat) -> Vec<f64> {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut qdd = vec![0.0; n];
+    ws.fd_into(robot, q, qd, tau, fmt, &mut qdd);
+    qdd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamics::{minv, rnea};
+    use crate::model::{builtin, State};
+    use crate::util::rng::Rng;
+
+    /// The satellite bugfix regression: ingest rounding must agree with
+    /// the legacy `QFormat::q` on every shared vector, in particular at
+    /// negative half-step ties (round-half-away-from-zero, never
+    /// truncation) and at both saturation rails.
+    #[test]
+    fn ingest_rounding_matches_legacy_q_at_boundaries() {
+        for fmt in [
+            QFormat::new(8, 8),
+            QFormat::new(12, 12),
+            QFormat::new(10, 16),
+            QFormat::new(12, 0),
+        ] {
+            let ctx = QInt::new(fmt);
+            let step = fmt.step();
+            let mut xs = vec![0.0, step, -step, 0.3, -0.3, 1.75, -1.75];
+            for k in 0..8 {
+                // Exact half-step ties on both sides of zero.
+                xs.push((k as f64 + 0.5) * step);
+                xs.push(-(k as f64 + 0.5) * step);
+            }
+            xs.extend([
+                fmt.max_val(),
+                fmt.max_val() + step,
+                fmt.max_val() + 0.5 * step,
+                -fmt.max_val() - step,
+                -fmt.max_val() - 2.0 * step,
+                -fmt.max_val() - 1.5 * step,
+                1e12,
+                -1e12,
+            ]);
+            for &x in &xs {
+                assert_eq!(
+                    ctx.from_fix(ctx.to_fix(x)),
+                    fmt.q(x),
+                    "x = {x} fmt = {}",
+                    fmt.label()
+                );
+            }
+        }
+    }
+
+    /// Renormalization ties: a 2f-scaled product at exactly ±half must
+    /// round away from zero like `q()` of the exact real value. An
+    /// arithmetic-shift implementation fails the negative cases
+    /// (−0.5·step would land on 0 instead of −step).
+    #[test]
+    fn renorm_rounds_negative_ties_away_from_zero() {
+        for fmt in [QFormat::new(8, 8), QFormat::new(12, 12), QFormat::new(10, 16)] {
+            let ctx = QInt::new(fmt);
+            let two_f = fmt.step() * fmt.step(); // 2^-2f, exact
+            let h = 1i64 << (fmt.frac_bits - 1);
+            for m in [1i64, -1, 3, -3, 7, -7, 101, -101] {
+                let p = m * h; // (m/2)·step as a 2f-scaled word
+                let real = p as f64 * two_f;
+                assert_eq!(
+                    ctx.from_fix(ctx.rnorm(p)),
+                    fmt.q(real),
+                    "tie p = {p} fmt = {}",
+                    fmt.label()
+                );
+            }
+            // And across random (non-tie) products.
+            let mut rng = Rng::new(42);
+            for _ in 0..500 {
+                let p = rng.range(-1e6, 1e6) as i64;
+                let real = p as f64 * two_f;
+                assert_eq!(ctx.from_fix(ctx.rnorm(p)), fmt.q(real), "p = {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn fine_format_tracks_float_rnea() {
+        // 26-bit (12.14): per-op rounding is ~6e-5 with headroom to
+        // ±2048; amplified through the sweeps the torque error stays
+        // well under engineering tolerance.
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(900);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -2.0, 2.0);
+        let exact = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let quant = quant_rnea_i64(&robot, &s.q, &s.qd, &qdd, QFormat::new(12, 14));
+        for i in 0..n {
+            assert!(
+                (exact[i] - quant[i]).abs() < 5e-2 * (1.0 + exact[i].abs()),
+                "joint {i}: {} vs {}",
+                exact[i],
+                quant[i]
+            );
+        }
+    }
+
+    #[test]
+    fn int_error_grows_as_precision_drops() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(901);
+        let n = robot.dof();
+        let mut errs = Vec::new();
+        for frac in [16u32, 12, 8] {
+            let mut total = 0.0;
+            let mut cases = 0;
+            let mut ws = QuantIntScratch::new(n);
+            let mut tau = vec![0.0; n];
+            for _ in 0..8 {
+                let s = State::random(&robot, &mut rng);
+                let qdd = rng.vec_range(n, -2.0, 2.0);
+                let exact = rnea(&robot, &s.q, &s.qd, &qdd, None);
+                ws.rnea_into(&robot, &s.q, &s.qd, &qdd, QFormat::new(10, frac), &mut tau);
+                for i in 0..n {
+                    total += (exact[i] - tau[i]).abs();
+                    cases += 1;
+                }
+            }
+            errs.push(total / cases as f64);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "mean errors {errs:?} must increase");
+    }
+
+    #[test]
+    fn int_minv_close_to_exact_at_fine_format() {
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(902);
+        let s = State::random(&robot, &mut rng);
+        // 12 integer bits: the iiwa wrist diagonal (~1/D ≈ 5e2) must not
+        // saturate the word.
+        let exact = minv(&robot, &s.q);
+        let quant = quant_minv_i64(&robot, &s.q, QFormat::new(12, 14));
+        let rel = exact.sub(&quant).max_abs() / exact.max_abs();
+        assert!(rel < 5e-2, "relative error {rel}");
+    }
+
+    #[test]
+    fn int_fd_roundtrip_error_bounded() {
+        // FD(ID(q̈)) at the paper's 24-bit format stays close to q̈.
+        let robot = builtin::iiwa();
+        let mut rng = Rng::new(903);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let back = quant_fd_i64(&robot, &s.q, &s.qd, &tau, QFormat::new(12, 12));
+        for i in 0..n {
+            assert!(
+                (back[i] - qdd[i]).abs() < 0.5,
+                "joint {i}: {} vs {}",
+                back[i],
+                qdd[i]
+            );
+        }
+    }
+
+    /// One scratch reused across tasks, robots, and formats must match
+    /// fresh scratches bitwise — the ingest cache may never leak stale
+    /// constants across a (robot, format) switch.
+    #[test]
+    fn scratch_reuse_and_ingest_rebind_match_fresh() {
+        let iiwa = builtin::iiwa();
+        let n = iiwa.dof();
+        let fa = QFormat::new(12, 12);
+        let fb = QFormat::new(10, 14);
+        let mut ws = QuantIntScratch::new(n);
+        let mut rng = Rng::new(904);
+        for fmt in [fa, fb, fa] {
+            for _ in 0..2 {
+                let s = State::random(&iiwa, &mut rng);
+                let qdd = rng.vec_range(n, -2.0, 2.0);
+                let tau = rng.vec_range(n, -8.0, 8.0);
+
+                let mut tau_ws = vec![0.0; n];
+                ws.rnea_into(&iiwa, &s.q, &s.qd, &qdd, fmt, &mut tau_ws);
+                assert_eq!(tau_ws, quant_rnea_i64(&iiwa, &s.q, &s.qd, &qdd, fmt));
+
+                let mut mi_ws = DMat::zeros(n, n);
+                ws.minv_into(&iiwa, &s.q, fmt, &mut mi_ws);
+                assert_eq!(mi_ws.d, quant_minv_i64(&iiwa, &s.q, fmt).d);
+
+                let mut qdd_ws = vec![0.0; n];
+                ws.fd_into(&iiwa, &s.q, &s.qd, &tau, fmt, &mut qdd_ws);
+                assert_eq!(qdd_ws, quant_fd_i64(&iiwa, &s.q, &s.qd, &tau, fmt));
+            }
+        }
+    }
+
+    /// Robots with the same DOF count but different names/inertias must
+    /// not share ingested constants (the cache is keyed, not assumed).
+    #[test]
+    fn ingest_cache_keyed_by_robot() {
+        let a = builtin::iiwa();
+        let mut b = builtin::iiwa();
+        b.name = "iiwa-heavy".to_string();
+        for l in &mut b.links {
+            l.inertia.mass *= 2.0;
+        }
+        let fmt = QFormat::new(12, 12);
+        let n = a.dof();
+        let mut rng = Rng::new(905);
+        let s = State::random(&a, &mut rng);
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let mut ws = QuantIntScratch::new(n);
+        let mut t1 = vec![0.0; n];
+        let mut t2 = vec![0.0; n];
+        ws.rnea_into(&a, &s.q, &s.qd, &qdd, fmt, &mut t1);
+        ws.rnea_into(&b, &s.q, &s.qd, &qdd, fmt, &mut t2);
+        assert_eq!(t2, quant_rnea_i64(&b, &s.q, &s.qd, &qdd, fmt));
+        assert_ne!(t1, t2, "doubled masses must change the torques");
+    }
+
+    #[test]
+    fn int_lane_error_envelope_matches_legacy_lane() {
+        // Both lanes realize the same format; their mean errors against
+        // the exact kernels should sit in the same decade.
+        let robot = builtin::hyq();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let mut rng = Rng::new(906);
+        let (mut e_int, mut e_leg) = (0.0f64, 0.0f64);
+        for _ in 0..6 {
+            let s = State::random(&robot, &mut rng);
+            let qdd = rng.vec_range(n, -2.0, 2.0);
+            let exact = rnea(&robot, &s.q, &s.qd, &qdd, None);
+            let ti = quant_rnea_i64(&robot, &s.q, &s.qd, &qdd, fmt);
+            let tl = super::super::qrbd::quant_rnea(&robot, &s.q, &s.qd, &qdd, fmt);
+            for i in 0..n {
+                e_int += (ti[i] - exact[i]).abs();
+                e_leg += (tl[i] - exact[i]).abs();
+            }
+        }
+        assert!(e_int > 0.0 && e_leg > 0.0);
+        let ratio = e_int / e_leg;
+        assert!(
+            (0.05..=20.0).contains(&ratio),
+            "lanes diverged: int {e_int} vs legacy {e_leg}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "integer lane supports")]
+    fn wide_formats_are_rejected() {
+        QInt::new(QFormat::new(16, 16)); // 32-bit: legacy lane only
+    }
+}

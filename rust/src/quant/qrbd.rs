@@ -17,7 +17,17 @@
 //!   backend runs allocation-free exactly like the f64 one.
 //!
 //! The allocating functions are thin wrappers over a fresh scratch, so
-//! both styles are numerically identical bit for bit.
+//! both styles are numerically identical bit for bit. The fused
+//! [`QuantScratch::fd_into`] shares **one** quantized kinematics pass
+//! between the RNEA bias sweep and the Minv sweep (which reads only the
+//! position entries), like its f64 twin
+//! [`crate::dynamics::DynWorkspace::fd_into`].
+//!
+//! This module is the *rounded-f64* lane: faithful error behaviour at
+//! any format ≤ 53 bits, f64 datapath underneath. The true-integer
+//! `i64` lane — same algorithms over flat `[i64; 36]` blocks, constants
+//! scaled once on ingest — lives in [`super::qint`] and is the faster
+//! choice for the paper's ≤ 26-bit DSP formats.
 
 use super::qformat::QFormat;
 use crate::dynamics::kinematics::Kin;
@@ -158,6 +168,45 @@ impl QuantScratch {
         self.n
     }
 
+    /// Forward + backward RNEA sweeps over the scratch's **current**
+    /// quantized kinematic cache. `use_qdd` adds the S·q̈ term (reading
+    /// `self.uq`); without it this is the bias pass — bitwise identical
+    /// to running with an explicit zero q̈, since adding the zero motion
+    /// vector never changes a sum's bits.
+    fn rnea_sweeps(&mut self, robot: &Robot, ctx: &Q, use_qdd: bool, tau: &mut [f64]) {
+        let n = self.n;
+        let a0 = SV::new(V3::ZERO, -robot.gravity);
+        for i in 0..n {
+            let link = &robot.links[i];
+            let s = self.kin.s[i];
+            let vi = self.kin.v[i];
+            let ap = match link.parent {
+                Some(p) => self.a[p],
+                None => a0,
+            };
+            let ai = if use_qdd {
+                ctx.sv(
+                    &(self.kin.xup[i].apply(&ap)
+                        + s.scale(self.uq[i])
+                        + vi.crm(&s.scale(self.kin.qd[i]))),
+                )
+            } else {
+                ctx.sv(&(self.kin.xup[i].apply(&ap) + vi.crm(&s.scale(self.kin.qd[i]))))
+            };
+            // Inertia constants quantized once (as stored in BRAM/LUTs).
+            let iq = ctx.m6(&link.inertia.to_mat6());
+            let fi = ctx.sv(&(matvec6(&iq, &ai) + vi.crf(&matvec6(&iq, &vi))));
+            self.a[i] = ai;
+            self.f[i] = fi;
+        }
+        for i in (0..n).rev() {
+            tau[i] = ctx.s(self.kin.s[i].dot(&self.f[i]));
+            if let Some(p) = robot.links[i].parent {
+                self.f[p] = ctx.sv(&(self.f[p] + self.kin.xup[i].inv_apply_force(&self.f[i])));
+            }
+        }
+    }
+
     /// Quantized RNEA (ID), written into `tau`. Intermediate v/a/f are
     /// quantized per joint step; see [`quant_rnea`].
     pub fn rnea_into(
@@ -179,32 +228,7 @@ impl QuantScratch {
             self.uq[i] = ctx.s(qdd[i]);
         }
         quant_kin_into(robot, &self.qq, &self.qdq, &ctx, &mut self.kin);
-        let a0 = SV::new(V3::ZERO, -robot.gravity);
-        for i in 0..n {
-            let link = &robot.links[i];
-            let s = self.kin.s[i];
-            let vi = self.kin.v[i];
-            let ap = match link.parent {
-                Some(p) => self.a[p],
-                None => a0,
-            };
-            let ai = ctx.sv(
-                &(self.kin.xup[i].apply(&ap)
-                    + s.scale(self.uq[i])
-                    + vi.crm(&s.scale(self.kin.qd[i]))),
-            );
-            // Inertia constants quantized once (as stored in BRAM/LUTs).
-            let iq = ctx.m6(&link.inertia.to_mat6());
-            let fi = ctx.sv(&(matvec6(&iq, &ai) + vi.crf(&matvec6(&iq, &vi))));
-            self.a[i] = ai;
-            self.f[i] = fi;
-        }
-        for i in (0..n).rev() {
-            tau[i] = ctx.s(self.kin.s[i].dot(&self.f[i]));
-            if let Some(p) = robot.links[i].parent {
-                self.f[p] = ctx.sv(&(self.f[p] + self.kin.xup[i].inv_apply_force(&self.f[i])));
-            }
-        }
+        self.rnea_sweeps(robot, &ctx, true, tau);
     }
 
     /// Quantized analytical Minv (original algorithm: reciprocal inline,
@@ -213,12 +237,21 @@ impl QuantScratch {
         let ctx = Q::new(fmt);
         let n = self.n;
         assert_eq!(robot.dof(), n, "scratch sized for a different robot");
-        assert_eq!(out.d.len(), n * n, "output sized for a different robot");
         for i in 0..n {
             self.qq[i] = ctx.s(q[i]);
         }
         quant_kin_into(robot, &self.qq, &self.zero, &ctx, &mut self.kin);
+        self.minv_sweeps(robot, &ctx, out);
+    }
 
+    /// Backward + forward Minv sweeps over the scratch's **current**
+    /// quantized kinematic cache. Reads only the position-dependent
+    /// entries (`kin.xup`, `kin.s`), so a cache built *with* velocities
+    /// (the fused FD path) yields bitwise the same matrix as the
+    /// zero-velocity cache `minv_into` builds.
+    fn minv_sweeps(&mut self, robot: &Robot, ctx: &Q, out: &mut DMat) {
+        let n = self.n;
+        assert_eq!(out.d.len(), n * n, "output sized for a different robot");
         for i in 0..n {
             self.ia[i] = ctx.m6(&robot.links[i].inertia.to_mat6());
         }
@@ -284,9 +317,15 @@ impl QuantScratch {
         }
     }
 
-    /// Quantized FD = quantized Minv · (τ − quantized bias), written into
-    /// `qdd`. Leaves the bias in scratch and M⁻¹ in the internal matrix
-    /// buffer; see [`quant_fd`].
+    /// Fused quantized FD = quantized Minv · (τ − quantized bias),
+    /// written into `qdd`: **one** quantized kinematics pass feeds both
+    /// the RNEA bias sweep and the Minv sweep (which reads only the
+    /// position entries), mirroring [`crate::dynamics::DynWorkspace::fd_into`].
+    /// Bitwise identical to composing `rnea_into(q̈=0)` + `minv_into` +
+    /// the rounded matvec (the pre-fusion implementation; see the
+    /// `fused_fd_matches_unfused_composition_bitwise` test). Leaves the
+    /// bias in scratch and M⁻¹ in the internal matrix buffer; see
+    /// [`quant_fd`].
     pub fn fd_into(
         &mut self,
         robot: &Robot,
@@ -298,17 +337,21 @@ impl QuantScratch {
     ) {
         let ctx = Q::new(fmt);
         let n = self.n;
+        assert_eq!(robot.dof(), n, "scratch sized for a different robot");
         assert_eq!(tau.len(), n);
         assert_eq!(qdd.len(), n);
-        // Temporarily take the buffers the sub-kernels must not alias.
-        let zero = std::mem::take(&mut self.zero);
+        for i in 0..n {
+            self.qq[i] = ctx.s(q[i]);
+            self.qdq[i] = ctx.s(qd[i]);
+        }
+        // One shared quantized kinematics pass (the Minv sweep ignores
+        // the velocity entries, so the q̇-bearing cache serves both).
+        quant_kin_into(robot, &self.qq, &self.qdq, &ctx, &mut self.kin);
+        // Temporarily take the buffers the sub-sweeps must not alias.
         let mut bias = std::mem::take(&mut self.bias);
         let mut mi = std::mem::replace(&mut self.mi, DMat::zeros(0, 0));
-        self.rnea_into(robot, q, qd, &zero, fmt, &mut bias);
-        // Give the zero vector back before minv_into — it reads it as
-        // the zero-velocity input to the quantized kinematics.
-        self.zero = zero;
-        self.minv_into(robot, q, fmt, &mut mi);
+        self.rnea_sweeps(robot, &ctx, false, &mut bias);
+        self.minv_sweeps(robot, &ctx, &mut mi);
         for i in 0..n {
             self.rhs[i] = ctx.s(tau[i] - bias[i]);
         }
@@ -492,6 +535,38 @@ mod tests {
                     (approx - m[(i, j)]).abs() < 1e-2 * (1.0 + m[(i, j)].abs()),
                     "M[{i}][{j}]"
                 );
+            }
+        }
+    }
+
+    /// The fused `fd_into` (one shared quantized kinematics pass) must be
+    /// bitwise identical to the pre-fusion composition it replaced:
+    /// quantized bias (RNEA at q̈ = 0), quantized Minv, rounded τ − C,
+    /// rounded matvec.
+    #[test]
+    fn fused_fd_matches_unfused_composition_bitwise() {
+        for robot in [builtin::iiwa(), builtin::hyq()] {
+            let n = robot.dof();
+            let fmt = QFormat::new(12, 14);
+            let ctx = Q::new(fmt);
+            let mut rng = Rng::new(506);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let tau = rng.vec_range(n, -8.0, 8.0);
+                let zero = vec![0.0; n];
+                let bias = quant_rnea(&robot, &s.q, &s.qd, &zero, fmt);
+                let mi = quant_minv(&robot, &s.q, fmt);
+                let rhs: Vec<f64> = (0..n).map(|i| ctx.s(tau[i] - bias[i])).collect();
+                let want: Vec<f64> = (0..n)
+                    .map(|i| {
+                        let mut acc = 0.0;
+                        for j in 0..n {
+                            acc += mi[(i, j)] * rhs[j];
+                        }
+                        ctx.s(acc)
+                    })
+                    .collect();
+                assert_eq!(quant_fd(&robot, &s.q, &s.qd, &tau, fmt), want);
             }
         }
     }

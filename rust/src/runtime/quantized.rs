@@ -14,21 +14,40 @@
 //! q̈ with the quantized FD and advance the state with the same
 //! semi-implicit update as the f64 integrator — matching the ICMS
 //! operating model (fixed-point accelerator in the loop, float state).
+//!
+//! Like [`super::NativeEngine`], an engine built with parallelism fans
+//! batches out across the global [`WorkerPool`] zero-copy
+//! ([`WorkerPool::eval_flat_quant`]): pool workers run the identical
+//! decode→`QuantScratch`→encode loop at the route's format, so pooled
+//! execution is **bitwise identical** to serial
+//! (`tests/parallel_quant.rs`). Optional M⁻¹ error compensation
+//! ([`MinvCompensation`], paper Fig. 5(d)) is fitted once at engine
+//! construction and added to every quantized M⁻¹ before encoding.
 
 use super::artifact::ArtifactFn;
 use super::engine::EngineError;
-use super::native::{decode, encode, validate_batch, validate_rollout};
+use super::native::{decode, encode, validate_batch, validate_rollout, PAR_MIN_ROWS};
 use super::DynamicsEngine;
+use crate::dynamics::{BatchKernel, WorkerPool};
 use crate::model::{Robot, State};
+use crate::quant::compensate::MinvCompensation;
 use crate::quant::{QFormat, QuantScratch};
 use crate::sim::integrate::semi_implicit_update;
 use crate::spatial::DMat;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Configurations sampled when fitting the per-robot [`MinvCompensation`]
+/// offset at engine construction (seeded, deterministic).
+const COMP_FIT_SAMPLES: usize = 24;
+const COMP_FIT_SEED: u64 = 0xC0;
 
 /// Batched fixed-point CPU executor for one (robot, function, batch,
 /// format) route.
 pub struct QuantEngine {
-    /// The robot this engine serves.
-    pub robot: Robot,
+    /// The robot this engine serves (shared with pool jobs, so the
+    /// workers' `Arc::ptr_eq` cache fast path hits on every batch).
+    pub robot: Arc<Robot>,
     /// The RBD function this route evaluates.
     pub function: ArtifactFn,
     /// Maximum tasks per executed batch.
@@ -36,6 +55,11 @@ pub struct QuantEngine {
     /// The fixed-point format every kernel evaluation is rounded to.
     pub fmt: QFormat,
     n: usize,
+    /// Max chunks a batch may split into on the global worker pool
+    /// (1 = serial execution on the calling thread).
+    par_chunks: usize,
+    /// Fitted M⁻¹ compensation offset, when requested (Minv routes only).
+    comp: Option<MinvCompensation>,
     ws: QuantScratch,
     // Per-task f64 staging buffers (decoded from the flat f32 operands).
     q: Vec<f64>,
@@ -46,11 +70,57 @@ pub struct QuantEngine {
 }
 
 impl QuantEngine {
-    /// Build an engine (and its quantized scratch) for one robot,
+    /// Build a serial engine (and its quantized scratch) for one robot,
     /// function, and fixed-point format.
     pub fn new(robot: Robot, function: ArtifactFn, batch: usize, fmt: QFormat) -> QuantEngine {
+        QuantEngine::with_options(robot, function, batch, fmt, 1, false)
+    }
+
+    /// As [`QuantEngine::new`], but batches of at least [`PAR_MIN_ROWS`]
+    /// rows split into up to `parallel` contiguous chunks on the global
+    /// [`WorkerPool`] (`0` = one chunk per pool worker, `1` = serial),
+    /// bitwise identical to serial execution.
+    pub fn with_parallelism(
+        robot: Robot,
+        function: ArtifactFn,
+        batch: usize,
+        fmt: QFormat,
+        parallel: usize,
+    ) -> QuantEngine {
+        QuantEngine::with_options(robot, function, batch, fmt, parallel, false)
+    }
+
+    /// Full constructor: parallelism as in [`QuantEngine::with_parallelism`]
+    /// plus opt-in M⁻¹ error compensation. When `compensate` is set on an
+    /// M⁻¹ route, a per-(robot, format) [`MinvCompensation`] offset is
+    /// fitted here (seeded, deterministic) and added to every quantized
+    /// M⁻¹ in f64 before encoding; other functions ignore the flag.
+    /// Compensated M⁻¹ batches always execute serially — the offset is
+    /// applied before the f32 encode, which the pool's in-place handoff
+    /// cannot replicate.
+    pub fn with_options(
+        robot: Robot,
+        function: ArtifactFn,
+        batch: usize,
+        fmt: QFormat,
+        parallel: usize,
+        compensate: bool,
+    ) -> QuantEngine {
         let n = robot.dof();
         assert!(batch > 0, "batch must be positive");
+        // Clamp to the pool size, exactly like the native engine:
+        // `parallel == 1` never touches (or spawns) the global pool.
+        let par_chunks = match parallel {
+            1 => 1,
+            0 => WorkerPool::global().threads(),
+            p => p.min(WorkerPool::global().threads()),
+        };
+        let comp = if compensate && function == ArtifactFn::Minv {
+            let mut rng = Rng::new(COMP_FIT_SEED);
+            Some(MinvCompensation::fit(&robot, fmt, COMP_FIT_SAMPLES, &mut rng))
+        } else {
+            None
+        };
         QuantEngine {
             ws: QuantScratch::new(n),
             q: vec![0.0; n],
@@ -58,12 +128,24 @@ impl QuantEngine {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
-            robot,
+            robot: Arc::new(robot),
             function,
             batch,
             fmt,
             n,
+            par_chunks,
+            comp,
         }
+    }
+
+    /// Max pool chunks a batch may split into (1 = serial).
+    pub fn parallelism(&self) -> usize {
+        self.par_chunks
+    }
+
+    /// Whether this engine applies the fitted M⁻¹ compensation offset.
+    pub fn compensated(&self) -> bool {
+        self.comp.is_some()
     }
 
     /// Robot DOF (the per-operand row length).
@@ -80,11 +162,45 @@ impl QuantEngine {
     /// Execute one batch through the quantized kernels. Same contract as
     /// [`super::NativeEngine::run`]: `arity` flat f32 operands, row-major
     /// (B, N), any B ≤ `batch`.
+    ///
+    /// With parallelism ([`QuantEngine::with_parallelism`]), batches of ≥
+    /// [`PAR_MIN_ROWS`] rows fan out across the global [`WorkerPool`]
+    /// zero-copy at this route's format, bitwise identical to the serial
+    /// loop below (compensated M⁻¹ stays serial; see
+    /// [`QuantEngine::with_options`]).
     pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
         let b = validate_batch(inputs, self.function.arity(), n, self.batch)?;
         let per_task = DynamicsEngine::out_per_task(self);
         let mut out = vec![0.0f32; b * per_task];
+        if self.par_chunks > 1
+            && b >= PAR_MIN_ROWS
+            && !(self.function == ArtifactFn::Minv && self.comp.is_some())
+        {
+            let kernel = match self.function {
+                ArtifactFn::Rnea => BatchKernel::Rnea,
+                ArtifactFn::Fd => BatchKernel::Fd,
+                ArtifactFn::Minv => BatchKernel::Minv,
+            };
+            // M⁻¹ is unary; hand the pool `q` for the unused operands.
+            let (qd, u) = match self.function {
+                ArtifactFn::Minv => (&inputs[0], &inputs[0]),
+                _ => (&inputs[1], &inputs[2]),
+            };
+            WorkerPool::global().eval_flat_quant(
+                &self.robot,
+                kernel,
+                self.fmt,
+                &inputs[0],
+                qd,
+                u,
+                n,
+                per_task,
+                &mut out,
+                self.par_chunks,
+            );
+            return Ok(out);
+        }
         for k in 0..b {
             let span = k * n..(k + 1) * n;
             match self.function {
@@ -119,6 +235,13 @@ impl QuantEngine {
                 ArtifactFn::Minv => {
                     decode(&inputs[0][span], &mut self.q);
                     self.ws.minv_into(&self.robot, &self.q, self.fmt, &mut self.out_mat);
+                    if let Some(c) = &self.comp {
+                        // M̂⁻¹ = quantized M⁻¹ + fitted offset, in f64
+                        // before the f32 encode (Fig. 5(d)).
+                        for (o, d) in self.out_mat.d.iter_mut().zip(&c.offset.d) {
+                            *o += d;
+                        }
+                    }
                     encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
                 }
             }
@@ -262,6 +385,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The `+comp` registration flag: a compensated M⁻¹ route must serve
+    /// strictly smaller error against the exact f64 M⁻¹ than the same
+    /// route uncompensated (the paper's Fig. 5(d) correction), and
+    /// non-Minv routes must ignore the flag entirely.
+    #[test]
+    fn compensated_minv_route_reduces_error() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(10, 8); // coarse: visible reciprocal error
+        let b = 8;
+        let mut rng = Rng::new(712);
+        let mut q = Vec::with_capacity(b * n);
+        let mut states = Vec::with_capacity(b);
+        for _ in 0..b {
+            let s = State::random(&robot, &mut rng);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            states.push(s);
+        }
+        let inputs = vec![q];
+        let mut plain = QuantEngine::new(robot.clone(), ArtifactFn::Minv, b, fmt);
+        let mut comp = QuantEngine::with_options(robot.clone(), ArtifactFn::Minv, b, fmt, 1, true);
+        assert!(!plain.compensated());
+        assert!(comp.compensated());
+        let out_p = plain.run(&inputs).expect("plain run");
+        let out_c = comp.run(&inputs).expect("compensated run");
+        let (mut err_p, mut err_c) = (0.0f64, 0.0f64);
+        for (k, s) in states.iter().enumerate() {
+            let qr: Vec<f64> = s.q.iter().map(|&x| x as f32 as f64).collect();
+            let exact = crate::dynamics::minv(&robot, &qr);
+            for i in 0..n {
+                for j in 0..n {
+                    let e = exact[(i, j)];
+                    err_p += (out_p[k * n * n + i * n + j] as f64 - e).powi(2);
+                    err_c += (out_c[k * n * n + i * n + j] as f64 - e).powi(2);
+                }
+            }
+        }
+        assert!(
+            err_c < err_p,
+            "compensation must reduce aggregate M⁻¹ error: {} vs {}",
+            err_c.sqrt(),
+            err_p.sqrt()
+        );
+        // Non-Minv routes never fit an offset.
+        let rnea_comp =
+            QuantEngine::with_options(robot.clone(), ArtifactFn::Rnea, b, fmt, 1, true);
+        assert!(!rnea_comp.compensated());
     }
 
     #[test]

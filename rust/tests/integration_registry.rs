@@ -138,6 +138,86 @@ fn registry_serves_two_robots_concurrently() {
     }
 }
 
+/// A URDF-loaded robot registered from the CLI spec, served next to a
+/// builtin: the spec's `name=path.urdf[:backend]` form must parse, route
+/// under the given name, and answer correct-dimension, finite results on
+/// both robots through one coordinator.
+#[test]
+fn registry_spec_loads_urdf_robot_next_to_builtin() {
+    const MINI_URDF: &str = r#"<?xml version="1.0"?>
+<robot name="mini-urdf-arm">
+  <link name="base"/>
+  <link name="upper">
+    <inertial>
+      <origin xyz="0 0 0.1"/>
+      <mass value="2.0"/>
+      <inertia ixx="0.02" iyy="0.02" izz="0.01" ixy="0" ixz="0" iyz="0"/>
+    </inertial>
+  </link>
+  <link name="lower">
+    <inertial>
+      <origin xyz="0 0 0.15"/>
+      <mass value="1.0"/>
+      <inertia ixx="0.01" iyy="0.01" izz="0.005"/>
+    </inertial>
+  </link>
+  <joint name="j1" type="revolute">
+    <parent link="base"/>
+    <child link="upper"/>
+    <origin xyz="0 0 0.2" rpy="0 0 0"/>
+    <axis xyz="0 1 0"/>
+    <limit lower="-1.5" upper="1.5" velocity="3.0"/>
+  </joint>
+  <joint name="j2" type="continuous">
+    <parent link="upper"/>
+    <child link="lower"/>
+    <origin xyz="0 0 0.3"/>
+    <axis xyz="0 1 0"/>
+  </joint>
+</robot>"#;
+    let path = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("mini_registry.urdf");
+    std::fs::write(&path, MINI_URDF).expect("write temp urdf");
+
+    let spec = format!("iiwa,mini={}:quant@12.14", path.display());
+    let registry = RobotRegistry::from_cli_spec(&spec, 8).expect("spec parses");
+    assert_eq!(registry.names(), vec!["iiwa".to_string(), "mini".to_string()]);
+    let entry = registry.get("mini").expect("urdf robot registered");
+    // Registered under the spec's name (not the URDF's own), 2 moving
+    // joints, quantized backend.
+    assert_eq!(entry.robot.name, "mini");
+    assert_eq!(entry.robot.dof(), 2);
+    assert_eq!(entry.backend, BackendKind::NativeQuant(QFormat::new(12, 14)));
+
+    let coord = Coordinator::start_registry(&registry, 100);
+    // URDF robot: quantized RNEA answers with its own dimension and
+    // matches the quantized reference kernel bitwise.
+    let q = vec![0.3f32, -0.4];
+    let qd = vec![0.1f32, 0.2];
+    let u = vec![0.5f32, -0.5];
+    let out = coord
+        .submit_to("mini", ArtifactFn::Rnea, vec![q.clone(), qd.clone(), u.clone()])
+        .recv()
+        .expect("answer")
+        .expect("ok");
+    assert_eq!(out.len(), 2);
+    let to64 = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+    let want = quant_rnea(&entry.robot, &to64(&q), &to64(&qd), &to64(&u), QFormat::new(12, 14));
+    for i in 0..2 {
+        assert_eq!(out[i], want[i] as f32, "urdf robot joint {i}");
+    }
+    // The builtin next door still routes with its own dimension.
+    let n = registry.get("iiwa").unwrap().robot.dof();
+    let out = coord
+        .submit_to("iiwa", ArtifactFn::Rnea, vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]])
+        .recv()
+        .expect("answer")
+        .expect("ok");
+    assert_eq!(out.len(), n);
+    assert!(out.iter().all(|x| x.is_finite()));
+    coord.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
 /// Quantized-vs-f64 native engine accuracy: the served error must stay
 /// within the envelope the quantization error analyzer measures for the
 /// same format, and a finer format must serve strictly more accurately.

@@ -1,0 +1,193 @@
+//! Parallel-quantized equivalence: a quantized route (or engine) whose
+//! batches fan out across the engine-generic worker pool must answer
+//! **bitwise identically** to serial execution — the pool workers run
+//! the exact decode→`QuantScratch`→encode loop of the serial
+//! `QuantEngine`, one cached per-(structure, format) scratch per worker.
+//! Covers the engine-level fan-out for every RBD function, full/partial
+//! batches, and a mixed f64 + quantized registry under concurrent load.
+
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
+use draco::model::{builtin_robot, Robot, State};
+use draco::quant::QFormat;
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::QuantEngine;
+use draco::util::rng::Rng;
+
+/// Flat row-major (b, n) f32 operands for `function`.
+fn flat_inputs(robot: &Robot, function: ArtifactFn, b: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = robot.dof();
+    let mut rng = Rng::new(seed);
+    let mut q = Vec::with_capacity(b * n);
+    let mut qd = Vec::with_capacity(b * n);
+    let mut u = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let s = State::random(robot, &mut rng);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+    }
+    match function {
+        ArtifactFn::Minv => vec![q],
+        _ => vec![q, qd, u],
+    }
+}
+
+/// Engine level: the pooled fan-out inside `QuantEngine::run` is bitwise
+/// equal to the serial engine for every function, across full and
+/// partial batches, odd chunk counts, and two formats.
+#[test]
+fn parallel_quant_engine_matches_serial_bitwise() {
+    for (name, fmt) in [("iiwa", QFormat::new(12, 14)), ("atlas", QFormat::new(12, 12))] {
+        let robot = builtin_robot(name).unwrap();
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            let mut serial = QuantEngine::new(robot.clone(), function, 64, fmt);
+            // One serial reference per batch size, shared by every chunk
+            // count.
+            let cases: Vec<(Vec<Vec<f32>>, Vec<f32>)> = [2usize, 5, 16, 64]
+                .into_iter()
+                .map(|b| {
+                    let inputs = flat_inputs(&robot, function, b, 9_000 + b as u64);
+                    let want = serial.run(&inputs).expect("serial run");
+                    (inputs, want)
+                })
+                .collect();
+            for parallel in [2usize, 3, 8, 0] {
+                let mut par =
+                    QuantEngine::with_parallelism(robot.clone(), function, 64, fmt, parallel);
+                for (inputs, want) in &cases {
+                    let got = par.run(inputs).expect("parallel run");
+                    assert_eq!(
+                        want,
+                        &got,
+                        "{name}/{} fmt={} rows={} parallel={parallel}",
+                        function.name(),
+                        fmt.label(),
+                        inputs[0].len() / robot.dof()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Single-task batches never split (below `PAR_MIN_ROWS`) and still
+/// match the serial engine exactly.
+#[test]
+fn tiny_quant_batches_stay_serial_and_identical() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let fmt = QFormat::new(12, 12);
+    let mut serial = QuantEngine::new(robot.clone(), ArtifactFn::Fd, 8, fmt);
+    let mut par = QuantEngine::with_parallelism(robot.clone(), ArtifactFn::Fd, 8, fmt, 0);
+    let inputs = flat_inputs(&robot, ArtifactFn::Fd, 1, 9_500);
+    assert_eq!(serial.run(&inputs).unwrap(), par.run(&inputs).unwrap());
+}
+
+/// Coordinator level: the same request stream through a serial registry
+/// and a pooled registry — a **mixed** f64 + quantized deployment, both
+/// robots parallel — produces bitwise-identical responses under load.
+#[test]
+fn parallel_quant_route_matches_serial_route_bitwise() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let atlas = builtin_robot("atlas").unwrap();
+    let fmt = QFormat::new(12, 12);
+
+    let build = |parallel: usize| {
+        let mut reg = RobotRegistry::new();
+        reg.register_parallel(iiwa.clone(), BackendKind::Native, 16, parallel)
+            .register_parallel(atlas.clone(), BackendKind::NativeQuant(fmt), 16, parallel);
+        Coordinator::start_registry(&reg, 20_000)
+    };
+    let serial = build(1);
+    let pooled = build(0); // one chunk per pool worker
+
+    // Full batch (16), partial batch (5), and a single-task batch per
+    // (robot, function) pair — identical streams to both coordinators.
+    for (robot, base_seed) in [(&iiwa, 300u64), (&atlas, 400)] {
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            for (burst, seed_off) in [(16usize, 0u64), (5, 1), (1, 2)] {
+                let n = robot.dof();
+                let per_task: Vec<Vec<Vec<f32>>> = (0..burst)
+                    .map(|k| flat_inputs(robot, function, 1, base_seed + 10 * seed_off + k as u64))
+                    .collect();
+                let answers = |coord: &Coordinator| -> Vec<Vec<f32>> {
+                    let rxs: Vec<_> = per_task
+                        .iter()
+                        .map(|ops| coord.submit_to(&robot.name, function, ops.clone()))
+                        .collect();
+                    rxs.into_iter()
+                        .map(|rx| rx.recv().expect("answer").expect("ok"))
+                        .collect()
+                };
+                let want = answers(&serial);
+                let got = answers(&pooled);
+                assert_eq!(want.len(), got.len());
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    let expect_len = match function {
+                        ArtifactFn::Minv => n * n,
+                        _ => n,
+                    };
+                    assert_eq!(a.len(), expect_len);
+                    assert_eq!(
+                        a,
+                        b,
+                        "{}/{} burst={burst} task {k} diverged",
+                        robot.name,
+                        function.name()
+                    );
+                }
+            }
+        }
+    }
+    serial.shutdown();
+    pooled.shutdown();
+}
+
+/// Mixed registry under genuinely concurrent clients: interleaved f64
+/// and quantized traffic through pooled routes still matches each
+/// robot's serial reference engine bitwise (no cross-lane workspace
+/// aliasing in the pool workers).
+#[test]
+fn mixed_registry_under_load_matches_reference_engines() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+    let fmt = QFormat::new(12, 14);
+    let mut reg = RobotRegistry::new();
+    reg.register_parallel(iiwa.clone(), BackendKind::Native, 8, 0)
+        .register_parallel(hyq.clone(), BackendKind::NativeQuant(fmt), 8, 0);
+    let coord = std::sync::Arc::new(Coordinator::start_registry(&reg, 150));
+
+    let spawn = |coord: std::sync::Arc<Coordinator>, robot: Robot, seed: u64| {
+        std::thread::spawn(move || {
+            let reqs: Vec<Vec<Vec<f32>>> = (0..24)
+                .map(|k| flat_inputs(&robot, ArtifactFn::Fd, 1, seed + k))
+                .collect();
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|ops| coord.submit_to(&robot.name, ArtifactFn::Fd, ops.clone()))
+                .collect();
+            let outs: Vec<Vec<f32>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("answer").expect("ok"))
+                .collect();
+            (reqs, outs)
+        })
+    };
+    let h_iiwa = spawn(std::sync::Arc::clone(&coord), iiwa.clone(), 500);
+    let h_hyq = spawn(std::sync::Arc::clone(&coord), hyq.clone(), 600);
+
+    // Serial single-task references (batch identity: every request was
+    // its own row, so per-row results are batching-independent).
+    let (reqs, outs) = h_iiwa.join().expect("iiwa client");
+    let mut iiwa_ref = draco::runtime::NativeEngine::new(iiwa.clone(), ArtifactFn::Fd, 1);
+    for (ops, out) in reqs.iter().zip(&outs) {
+        assert_eq!(&iiwa_ref.run(ops).expect("ref"), out, "iiwa diverged");
+    }
+    let (reqs, outs) = h_hyq.join().expect("hyq client");
+    let mut hyq_ref = QuantEngine::new(hyq.clone(), ArtifactFn::Fd, 1, fmt);
+    for (ops, out) in reqs.iter().zip(&outs) {
+        assert_eq!(&hyq_ref.run(ops).expect("ref"), out, "hyq quant diverged");
+    }
+    if let Ok(coord) = std::sync::Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,98 @@
+#!/usr/bin/env bash
+# Compare two BENCH_hotpath.json files row by row, or validate one file
+# against the draco.hotpath.v1 schema. Pure bash + awk — no jq/python
+# dependency, parses the pretty-printed JSON the bench emits.
+#
+#   scripts/bench_diff.sh old.json new.json   # per-(robot, fn) median deltas
+#   scripts/bench_diff.sh --check file.json   # schema validation (CI runs
+#                                             # this on the --quick smoke
+#                                             # output)
+set -euo pipefail
+
+usage() {
+    echo "usage: $0 old.json new.json | $0 --check file.json" >&2
+    exit 2
+}
+
+# Emit "robot|fn|median_us" per bench row. Relies on the serializer's
+# deterministic (BTreeMap, alphabetical) key order within each row
+# object: fn, mean_us, median_us, robot, tasks_per_s — so tasks_per_s
+# closes a row. The speedups array never carries tasks_per_s, so its
+# objects never emit.
+extract() {
+    awk '
+        /"fn":/         { v = $2; gsub(/[",]/, "", v); fn = v }
+        /"median_us":/  { v = $2; gsub(/[",]/, "", v); med = v }
+        /"robot":/      { v = $2; gsub(/[",]/, "", v); robot = v }
+        /"tasks_per_s":/ {
+            if (fn != "" && med != "") print robot "|" fn "|" med
+            fn = ""; med = ""
+        }
+    ' "$1"
+}
+
+[ $# -eq 2 ] || usage
+
+if [ "$1" = "--check" ]; then
+    f="$2"
+    [ -f "$f" ] || { echo "no such file: $f" >&2; exit 1; }
+    if ! grep -q '"schema": "draco.hotpath.v1"' "$f"; then
+        echo "SCHEMA FAIL: missing \"schema\": \"draco.hotpath.v1\" in $f" >&2
+        exit 1
+    fi
+    rows="$(extract "$f")"
+    count="$(printf '%s\n' "$rows" | grep -c '|' || true)"
+    if [ "$count" -lt 1 ]; then
+        echo "SCHEMA FAIL: no bench rows parsed from $f" >&2
+        exit 1
+    fi
+    # Every kernel and serving row CI depends on must be present.
+    for need in \
+        "iiwa|fd_ws" \
+        "iiwa|fd_quant64_ws" \
+        "iiwa|fd_quant_int64" \
+        "iiwa|minv_quant_int64" \
+        "iiwa|fd_pool64" \
+        "iiwa|serve_fd_par64" \
+        "iiwa|serve_fd_quant_par64" \
+        "mixed|serve_fd_mixed64"; do
+        if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
+            echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
+            exit 1
+        fi
+    done
+    if ! printf '%s\n' "$rows" | awk -F'|' '
+        $3 + 0 <= 0 { print "SCHEMA FAIL: non-positive median in row " $1 "/" $2; bad = 1 }
+        END { exit bad }
+    '; then
+        exit 1
+    fi
+    echo "bench schema OK ($count rows in $f)"
+    exit 0
+fi
+
+old="$1"
+new="$2"
+[ -f "$old" ] || { echo "no such file: $old" >&2; exit 1; }
+[ -f "$new" ] || { echo "no such file: $new" >&2; exit 1; }
+
+printf '%-10s %-24s %12s %12s %9s\n' "robot" "fn" "old(us)" "new(us)" "delta"
+awk -F'|' '
+    NR == FNR { a[$1 "|" $2] = $3; next }
+    {
+        key = $1 "|" $2
+        if (key in a) {
+            d = (a[key] > 0) ? ($3 - a[key]) / a[key] * 100 : 0
+            printf "%-10s %-24s %12.3f %12.3f %+8.1f%%\n", $1, $2, a[key], $3, d
+            delete a[key]
+        } else {
+            printf "%-10s %-24s %12s %12.3f %9s\n", $1, $2, "-", $3, "(new)"
+        }
+    }
+    END {
+        for (k in a) {
+            split(k, p, "|")
+            printf "%-10s %-24s %12.3f %12s %9s\n", p[1], p[2], a[k], "-", "(gone)"
+        }
+    }
+' <(extract "$old") <(extract "$new")
