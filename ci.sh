@@ -25,6 +25,18 @@ cargo doc --no-deps
 echo "== docs link check =="
 bash ../scripts/check_doc_links.sh
 
+echo "== quantize --emit-spec smoke (search -> serving loop) =="
+# The bit-width search must emit a ready-to-paste registry spec line:
+# qint when the scaling analysis proves the chosen format, quant when
+# it rejects it — either way the line parses as a --robots entry.
+spec_out="$(cargo run --release --quiet -- quantize --robot iiwa --controller pid \
+    --tol 5e-3 --steps 300 --emit-spec)"
+echo "$spec_out" | tail -n 4
+if ! printf '%s\n' "$spec_out" | grep -Eq '^iiwa:(qint|quant)@[0-9]+\.[0-9]+$'; then
+    echo "EMIT-SPEC FAIL: no registry spec line in quantize output" >&2
+    exit 1
+fi
+
 echo "== bench smoke: hotpath_cpu --quick =="
 cargo bench --bench hotpath_cpu -- --quick
 

@@ -23,9 +23,12 @@
 //! same shape through a QUANTIZED route on the engine-generic pool).
 //! Quantized-lane rows: `fd_quant64_ws` (legacy rounded-f64 lane) vs
 //! `fd_quant_int64` / `minv_quant_int64` (the true-integer i64 lane at
-//! the same format and operands — the integer lane should win).
-//! `mul6_flat` times the flattened branch-free 6×6 kernel that
-//! dominates the Minv sweeps.
+//! the same format and operands — the integer lane should win),
+//! `minv_qint_deferred64` (the division-deferring integer M⁻¹ under its
+//! shift schedule vs the inline-divider row), `fd_qint_srv64` (the qint
+//! serving engine, batched), and `serve_fd_qint_par64` (a qint route on
+//! the pool). `mul6_flat` times the flattened branch-free 6×6 kernel
+//! that dominates the Minv sweeps.
 
 use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
@@ -33,9 +36,10 @@ use draco::dynamics::{
     DynWorkspace, WorkerPool,
 };
 use draco::model::{builtin_robot, Robot, State};
+use draco::quant::scaling::validate_int_backend;
 use draco::quant::{QFormat, QuantIntScratch};
 use draco::runtime::artifact::ArtifactFn;
-use draco::runtime::{NativeEngine, QuantEngine};
+use draco::runtime::{NativeEngine, QIntEngine, QuantEngine};
 use draco::spatial::mat6::{mul6, xtax};
 use draco::spatial::DMat;
 use draco::util::bench::{time_auto, Table};
@@ -287,7 +291,35 @@ fn main() {
                 black_box(&out32);
             });
             add("iiwa", "minv_quant_int64", &st, BATCH);
+
+            // Division-deferring integer M⁻¹ under the proved shift
+            // schedule — compare with the inline-divider minv_quant_int64
+            // row above at the same format and q-rows.
+            let sched = validate_int_backend(&iiwa, fmt_int).expect("iiwa@12.12 accepted");
+            let st = time_auto(target_ms, || {
+                for k in 0..BATCH {
+                    for (d, s) in q.iter_mut().zip(&inputs[0][k * n..(k + 1) * n]) {
+                        *d = *s as f64;
+                    }
+                    iws.minv_dd_into(&iiwa, &q, &sched, &mut mi);
+                    for (d, s) in out32[k * n * n..(k + 1) * n * n].iter_mut().zip(&mi.d) {
+                        *d = *s as f32;
+                    }
+                }
+                black_box(&out32);
+            });
+            add("iiwa", "minv_qint_deferred64", &st, BATCH);
         }
+
+        // The qint SERVING backend: batched FD through QIntEngine
+        // (deferred integer M⁻¹ inside the fused FD, engine-level f32
+        // decode/encode included) — apples-to-apples with fd_quant64_ws.
+        let mut qieng = QIntEngine::new(iiwa.clone(), ArtifactFn::Fd, BATCH, QFormat::new(12, 12))
+            .expect("iiwa@12.12 accepted");
+        let st = time_auto(target_ms, || {
+            black_box(qieng.run(&inputs).expect("qint fd batch"));
+        });
+        add("iiwa", "fd_qint_srv64", &st, BATCH);
 
         // Trajectory rollout: 64 integrator steps per request through the
         // workspace (per-task number below = per step).
@@ -419,6 +451,33 @@ fn main() {
         });
         add("iiwa", "serve_fd_quant_par64", &st, 64);
         qpcoord.shutdown();
+
+        // Pooled INTEGER serving: the same 64-request dispatch shape
+        // through a qint route (deferred integer FD on the pool, the
+        // engine's shift schedule travelling with every job) — compare
+        // with serve_fd_quant_par64's rounded-f64 route at identical
+        // dispatch cost.
+        let mut ipreg = RobotRegistry::new();
+        ipreg.register_parallel(
+            iiwa.clone(),
+            BackendKind::NativeInt(QFormat::new(12, 12)),
+            64,
+            0,
+        );
+        ipreg.validate().expect("iiwa@12.12 accepted");
+        let ipcoord = Coordinator::start_registry(&ipreg, 100);
+        let ipar_inputs = flat_fd_inputs(&iiwa, 1, 11);
+        let st = time_auto(target_ms, || {
+            let mut rxs = Vec::with_capacity(64);
+            for _ in 0..64usize {
+                rxs.push(ipcoord.submit_to("iiwa", ArtifactFn::Fd, ipar_inputs.clone()));
+            }
+            for rx in rxs {
+                black_box(rx.recv().expect("serve answer").expect("serve ok"));
+            }
+        });
+        add("iiwa", "serve_fd_qint_par64", &st, 64);
+        ipcoord.shutdown();
     }
 
     t.print("CPU hot paths (measured, single thread)");

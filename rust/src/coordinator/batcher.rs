@@ -5,10 +5,12 @@
 //! many registered robots concurrently — the multi-tenant operating model
 //! of the accelerator (one deployment, heterogeneous dynamics queries).
 //! Each route is backed by a [`BackendSpec`]: the native f64 workspace
-//! engine, the quantized fixed-point engine at a per-robot `QFormat`, a
-//! trajectory-rollout route driven through the workspace integrator, or
-//! (behind the `pjrt` feature) a compiled PJRT artifact. The batching
-//! loop is identical either way.
+//! engine, the rounded fixed-point engine at a per-robot `QFormat`, the
+//! true-integer `i64` engine under a proved shift schedule, a
+//! trajectory-rollout route driven through the workspace integrator
+//! (on the robot's serving lane — see [`TrajLane`]), or (behind the
+//! `pjrt` feature) a compiled PJRT artifact. The batching loop is
+//! identical either way.
 
 use super::registry::RobotRegistry;
 use super::stats::{ServeStats, StatsInner};
@@ -17,7 +19,7 @@ use crate::quant::QFormat;
 #[cfg(feature = "pjrt")]
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::artifact::ArtifactFn;
-use crate::runtime::{DynamicsEngine, NativeEngine, QuantEngine};
+use crate::runtime::{DynamicsEngine, NativeEngine, QIntEngine, QuantEngine};
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -73,6 +75,19 @@ pub enum Route {
     Traj,
 }
 
+/// Which datapath a trajectory route integrates q̈ with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrajLane {
+    /// f64 workspace FD (ABA-composed) — the default.
+    F64,
+    /// Rounded fixed-point FD at this format (`QuantEngine`).
+    Quant(QFormat),
+    /// True-integer deferred FD at this format (`QIntEngine`) —
+    /// rollouts on integer backends step through the qint path, not the
+    /// rounded lane.
+    Int(QFormat),
+}
+
 /// How one route executes its batches.
 pub enum BackendSpec {
     /// Native f64 workspace engine: no artifacts, no external toolchain.
@@ -108,15 +123,36 @@ pub enum BackendSpec {
         /// applied on the M⁻¹ route; other functions ignore it).
         comp: bool,
     },
+    /// True-integer `i64` engine (`quant::qint` kernels; FD/M⁻¹ on the
+    /// division-deferring sweeps under a proved shift schedule). The
+    /// engine is built at route startup from the scaling analysis — a
+    /// rejected (robot, format) pair fails every request with the
+    /// overflow witness instead of degrading to the rounded lane;
+    /// registries validate at registration so served routes never hit
+    /// that path.
+    NativeInt {
+        /// Robot served by this route.
+        robot: Robot,
+        /// RBD function this route evaluates.
+        function: ArtifactFn,
+        /// Batch size (requests coalesced per execution).
+        batch: usize,
+        /// Fixed-point format the integer lane carries.
+        fmt: QFormat,
+        /// Max chunks each assembled batch splits into on the global
+        /// worker pool (`0` = one per pool worker, `1` = serial) —
+        /// pooled execution is bitwise identical to serial.
+        parallel: usize,
+    },
     /// Trajectory-rollout route: FD + semi-implicit Euler unrolled
-    /// server-side (quantized FD when `fmt` is set).
+    /// server-side on the robot's serving lane.
     Trajectory {
         /// Robot served by this route.
         robot: Robot,
         /// Rollouts coalesced per drain.
         batch: usize,
-        /// Quantized FD format, or `None` for the f64 path.
-        fmt: Option<QFormat>,
+        /// Which datapath computes q̈ each step.
+        lane: TrajLane,
     },
     /// Compiled PJRT artifact (requires the `pjrt` feature + artifacts).
     #[cfg(feature = "pjrt")]
@@ -129,6 +165,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Native { robot, .. }
             | BackendSpec::NativeQuant { robot, .. }
+            | BackendSpec::NativeInt { robot, .. }
             | BackendSpec::Trajectory { robot, .. } => &robot.name,
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt(meta) => &meta.robot,
@@ -138,9 +175,9 @@ impl BackendSpec {
     /// The route this spec backs.
     pub fn route(&self) -> Route {
         match self {
-            BackendSpec::Native { function, .. } | BackendSpec::NativeQuant { function, .. } => {
-                Route::Step(*function)
-            }
+            BackendSpec::Native { function, .. }
+            | BackendSpec::NativeQuant { function, .. }
+            | BackendSpec::NativeInt { function, .. } => Route::Step(*function),
             BackendSpec::Trajectory { .. } => Route::Traj,
             #[cfg(feature = "pjrt")]
             BackendSpec::Pjrt(meta) => Route::Step(meta.function),
@@ -266,7 +303,11 @@ impl Coordinator {
                 parallel: 1,
             })
             .collect();
-        specs.push(BackendSpec::Trajectory { robot: robot.clone(), batch: traj_batch, fmt: None });
+        specs.push(BackendSpec::Trajectory {
+            robot: robot.clone(),
+            batch: traj_batch,
+            lane: TrajLane::F64,
+        });
         Coordinator::start(specs, n, window_us)
     }
 
@@ -384,10 +425,28 @@ fn worker_loop(
             )));
             step_worker(Box::new(exec), window, rx, stats);
         }
-        BackendSpec::Trajectory { robot, batch, fmt } => {
-            let engine: Box<dyn DynamicsEngine> = match fmt {
-                Some(f) => Box::new(QuantEngine::new(robot, ArtifactFn::Fd, batch, f)),
-                None => Box::new(NativeEngine::new(robot, ArtifactFn::Fd, batch)),
+        BackendSpec::NativeInt { robot, function, batch, fmt, parallel } => {
+            // The engine runs the scaling analysis; a rejected pair
+            // fails every request with the witness — the route never
+            // falls back to the rounded-f64 lane.
+            match QIntEngine::with_parallelism(robot, function, batch, fmt, parallel) {
+                Ok(engine) => {
+                    step_worker(Box::new(EngineExecutor(Box::new(engine))), window, rx, stats)
+                }
+                Err(e) => fail_all(&rx, &e.0),
+            }
+        }
+        BackendSpec::Trajectory { robot, batch, lane } => {
+            let engine: Box<dyn DynamicsEngine> = match lane {
+                TrajLane::Quant(f) => Box::new(QuantEngine::new(robot, ArtifactFn::Fd, batch, f)),
+                TrajLane::Int(f) => match QIntEngine::new(robot, ArtifactFn::Fd, batch, f) {
+                    Ok(engine) => Box::new(engine),
+                    Err(e) => {
+                        fail_all(&rx, &e.0);
+                        return;
+                    }
+                },
+                TrajLane::F64 => Box::new(NativeEngine::new(robot, ArtifactFn::Fd, batch)),
             };
             traj_worker(engine, batch, window, rx, stats);
         }
@@ -589,7 +648,9 @@ fn flush_traj(
     stats.lock().unwrap().record_batch(fill, t0.elapsed().as_micros() as f64);
 }
 
-#[allow(dead_code)] // only reachable from the pjrt arm without the feature
+/// Answer every queued (and future) request on this route with the same
+/// error — the loud-failure path for routes whose engine refused to
+/// build (rejected qint formats, missing PJRT artifacts).
 fn fail_all(rx: &Receiver<Msg>, err: &str) {
     while let Ok(msg) = rx.recv() {
         match msg {

@@ -25,11 +25,12 @@ pub mod batcher;
 pub mod registry;
 pub mod stats;
 
-pub use batcher::{BackendSpec, Coordinator, Job, JobPayload, JobResult, Route, TrajRequest};
+pub use batcher::{BackendSpec, Coordinator, Job, JobPayload, JobResult, Route, TrajLane, TrajRequest};
 pub use registry::{BackendKind, RobotEntry, RobotRegistry, DEFAULT_QUANT_FORMAT};
 pub use stats::ServeStats;
 
 use crate::model::State;
+use crate::quant::qint::quant_rnea_i64;
 use crate::quant::qrbd::quant_rnea;
 use crate::runtime::artifact::ArtifactFn;
 use crate::util::cli::Args;
@@ -40,11 +41,14 @@ use std::time::Instant;
 /// through it, verify numerics against the backend's reference
 /// implementation, and report latency/throughput.
 ///
-/// * `--robots iiwa,atlas:quant[,hyq:quant@14.18+comp,arm=path.urdf]` —
-///   the registry spec: which robots this process serves and each
-///   robot's backend (`native` default, `quant` = fixed point, `+comp`
-///   = fitted M⁻¹ error compensation on the quantized M⁻¹ route;
-///   `name=path.urdf` loads a robot through the URDF-lite importer; see
+/// * `--robots iiwa,atlas:qint@12.14[,hyq:quant@14.18+comp,arm=path.urdf]`
+///   — the registry spec: which robots this process serves and each
+///   robot's backend (`native` default, `quant` = rounded fixed point,
+///   `qint` = the true-integer lane — accepted only when the
+///   fixed-point scaling analysis proves the format, rejected with the
+///   overflow witness otherwise; `+comp` = fitted M⁻¹ error
+///   compensation on the quantized M⁻¹ route; `name=path.urdf` loads a
+///   robot through the URDF-lite importer; see
 ///   [`RobotRegistry::from_cli_spec`]). `--robot NAME` remains as a
 ///   single-robot shorthand.
 /// * `--backend native|pjrt` — `native` (default) serves the registry
@@ -176,6 +180,9 @@ fn run_native_workload(
                 let want = match entry.backend {
                     BackendKind::Native => crate::dynamics::rnea(&entry.robot, &qr, &qdr, &ur, None),
                     BackendKind::NativeQuant(fmt) => quant_rnea(&entry.robot, &qr, &qdr, &ur, fmt),
+                    BackendKind::NativeInt(fmt) => {
+                        quant_rnea_i64(&entry.robot, &qr, &qdr, &ur, fmt)
+                    }
                 };
                 for i in 0..n {
                     let scale = 1.0f64.max(want[i].abs());

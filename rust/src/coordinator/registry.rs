@@ -9,7 +9,7 @@
 //! quantized engine at a per-robot `QFormat` (precision as a serving
 //! knob, per the paper's precision-aware co-design).
 
-use super::batcher::BackendSpec;
+use super::batcher::{BackendSpec, TrajLane};
 use crate::model::{builtin_robot, Robot};
 use crate::quant::QFormat;
 use crate::runtime::artifact::ArtifactFn;
@@ -23,8 +23,18 @@ pub const DEFAULT_QUANT_FORMAT: QFormat = QFormat::new(12, 12);
 pub enum BackendKind {
     /// f64 workspace engine (the default).
     Native,
-    /// Fixed-point engine at this format (`quant::qrbd` kernels).
+    /// Rounded fixed-point engine at this format (`quant::qrbd`
+    /// kernels — f64 datapath underneath, faithful error behaviour at
+    /// any width ≤ 53 bits).
     NativeQuant(QFormat),
+    /// True-integer `i64` engine at this format (`quant::qint` kernels;
+    /// FD/M⁻¹ on the division-deferring sweeps under a shift schedule).
+    /// Registration requires the fixed-point scaling analysis to accept
+    /// the (robot, format) pair — see
+    /// [`crate::quant::scaling::validate_int_backend`] and
+    /// [`RobotRegistry::validate`]; there is **no** silent fallback to
+    /// the rounded lane.
+    NativeInt(QFormat),
 }
 
 impl BackendKind {
@@ -33,6 +43,7 @@ impl BackendKind {
         match self {
             BackendKind::Native => "native".to_string(),
             BackendKind::NativeQuant(fmt) => format!("native-quant {}", fmt.label()),
+            BackendKind::NativeInt(fmt) => format!("native-int {}", fmt.label()),
         }
     }
 }
@@ -168,22 +179,49 @@ impl RobotRegistry {
                         parallel: entry.parallel,
                         comp: entry.comp,
                     },
+                    BackendKind::NativeInt(fmt) => BackendSpec::NativeInt {
+                        robot: entry.robot.clone(),
+                        function,
+                        batch: entry.batch,
+                        fmt,
+                        parallel: entry.parallel,
+                    },
                 });
             }
             specs.push(BackendSpec::Trajectory {
                 robot: entry.robot.clone(),
                 batch: entry.batch,
-                fmt: match entry.backend {
-                    BackendKind::Native => None,
-                    BackendKind::NativeQuant(fmt) => Some(fmt),
+                lane: match entry.backend {
+                    BackendKind::Native => TrajLane::F64,
+                    BackendKind::NativeQuant(fmt) => TrajLane::Quant(fmt),
+                    BackendKind::NativeInt(fmt) => TrajLane::Int(fmt),
                 },
             });
         }
         specs
     }
 
+    /// Check every `qint` entry against the fixed-point scaling
+    /// analysis; an `Err` names the entry and the overflowing stage.
+    /// [`RobotRegistry::from_cli_spec`] runs this implicitly; callers
+    /// registering [`BackendKind::NativeInt`] programmatically should
+    /// call it before starting a coordinator — a failing entry's routes
+    /// would otherwise answer every request with the same witness (the
+    /// engine refuses to build; requests are never silently served by
+    /// the rounded-f64 lane).
+    pub fn validate(&self) -> Result<(), String> {
+        for e in &self.entries {
+            if let BackendKind::NativeInt(fmt) = e.backend {
+                crate::quant::scaling::validate_int_backend(&e.robot, fmt)
+                    .map_err(|err| format!("registry entry '{}': {err}", e.robot.name))?;
+            }
+        }
+        Ok(())
+    }
+
     /// Build a registry from a CLI spec: a comma-separated list of
-    /// entries `name[=path.urdf][:native|:quant[@INT.FRAC][+comp]]`.
+    /// entries
+    /// `name[=path.urdf][:native|:quant[@INT.FRAC][+comp]|:qint[@INT.FRAC]]`.
     /// Plain names resolve against the builtin robots; `name=path.urdf`
     /// loads the robot through the URDF-lite importer
     /// ([`crate::model::urdf::robot_from_urdf`]) and registers it under
@@ -195,6 +233,10 @@ impl RobotRegistry {
     /// * `hyq:quant@14.18` — quantized at Q14.18;
     /// * `atlas:quant@12.10+comp` — quantized with the fitted M⁻¹ error
     ///   compensation applied on the M⁻¹ route;
+    /// * `atlas:qint@12.14` — the true-integer `i64` lane; the
+    ///   fixed-point scaling analysis must accept the (robot, format)
+    ///   pair or registration **fails here** with the overflow witness
+    ///   (an explicit `qint` spec never degrades to the rounded lane);
     /// * `arm=models/arm.urdf:quant` — a URDF-loaded robot named `arm`
     ///   served next to the builtins.
     pub fn from_cli_spec(spec: &str, batch: usize) -> Result<RobotRegistry, String> {
@@ -254,16 +296,39 @@ impl RobotRegistry {
                             }
                             (BackendKind::Native, false)
                         }
+                        _ if core == "qint" || core.starts_with("qint@") => {
+                            if comp {
+                                return Err(format!(
+                                    "'+comp' applies to the rounded-f64 quant lane only in \
+                                     '{entry}' (the fitted offset does not model the integer \
+                                     datapath)"
+                                ));
+                            }
+                            let fmt = match core.strip_prefix("qint").unwrap().strip_prefix('@') {
+                                None => DEFAULT_QUANT_FORMAT,
+                                Some(f) => parse_qformat(f)?,
+                            };
+                            // An explicit qint spec must serve integer
+                            // kernels or fail HERE with the scaling
+                            // analysis' witness — never quietly degrade
+                            // to the rounded-f64 lane.
+                            crate::quant::scaling::validate_int_backend(&robot, fmt)
+                                .map_err(|e| format!("registry entry '{entry}': {e}"))?;
+                            (BackendKind::NativeInt(fmt), false)
+                        }
                         _ => {
                             let rest = core.strip_prefix("quant").ok_or_else(|| {
-                                format!("unknown backend '{b}' (try native|quant[@I.F][+comp])")
+                                format!(
+                                    "unknown backend '{b}' (try native|quant[@I.F][+comp]|qint[@I.F])"
+                                )
                             })?;
                             let fmt = match rest.strip_prefix('@') {
                                 None if rest.is_empty() => DEFAULT_QUANT_FORMAT,
                                 Some(f) => parse_qformat(f)?,
                                 None => {
                                     return Err(format!(
-                                        "unknown backend '{b}' (try native|quant[@I.F][+comp])"
+                                        "unknown backend '{b}' \
+                                         (try native|quant[@I.F][+comp]|qint[@I.F])"
                                     ))
                                 }
                             };
@@ -288,7 +353,12 @@ fn looks_like_backend(s: &str) -> bool {
     let core = s.strip_suffix("+comp").unwrap_or(s);
     // Exact grammar only: a path segment that merely *starts* with
     // "quant" (e.g. `…ros:quant_overlay/arm.urdf`) must stay a path.
-    !core.contains('/') && (core == "native" || core == "quant" || core.starts_with("quant@"))
+    !core.contains('/')
+        && (core == "native"
+            || core == "quant"
+            || core.starts_with("quant@")
+            || core == "qint"
+            || core.starts_with("qint@"))
 }
 
 /// Parse `INT.FRAC` (e.g. `12.14`) into a [`QFormat`].
@@ -408,10 +478,76 @@ mod tests {
                     assert_eq!(parallel, 0, "quant routes must inherit parallelism");
                     assert!(!comp);
                 }
+                BackendSpec::NativeInt { parallel, .. } => {
+                    assert_eq!(parallel, 0, "qint routes must inherit parallelism");
+                }
                 BackendSpec::Trajectory { .. } => {}
                 #[cfg(feature = "pjrt")]
                 BackendSpec::Pjrt(_) => {}
             }
         }
+    }
+
+    #[test]
+    fn cli_spec_parses_qint_backends() {
+        let reg =
+            RobotRegistry::from_cli_spec("iiwa:qint,atlas:qint@12.14", 16).expect("accepted");
+        assert_eq!(reg.get("iiwa").unwrap().backend, BackendKind::NativeInt(DEFAULT_QUANT_FORMAT));
+        assert_eq!(
+            reg.get("atlas").unwrap().backend,
+            BackendKind::NativeInt(QFormat::new(12, 14))
+        );
+        assert!(looks_like_backend("qint"));
+        assert!(looks_like_backend("qint@12.14"));
+        assert!(!looks_like_backend("qint_overlay/arm.urdf"));
+        // The int-lane routes expand like any other backend: 3 step
+        // routes + a trajectory route on the integer lane.
+        let specs = reg.specs();
+        assert_eq!(specs.len(), 8);
+        let int_steps = specs
+            .iter()
+            .filter(|s| matches!(s, BackendSpec::NativeInt { .. }))
+            .count();
+        assert_eq!(int_steps, 6);
+        assert!(specs.iter().any(|s| matches!(
+            s,
+            BackendSpec::Trajectory { lane: TrajLane::Int(_), .. }
+        )));
+    }
+
+    /// The no-silent-fallback satellite: an explicit `qint` spec that
+    /// the integer lane cannot carry must fail REGISTRATION with the
+    /// reason — wide words name the width cap, range rejections name
+    /// the overflowing stage and joint.
+    #[test]
+    fn cli_spec_qint_rejections_carry_the_witness() {
+        let err = RobotRegistry::from_cli_spec("iiwa:qint@16.16", 16).unwrap_err();
+        assert!(err.contains("26"), "width cap not named: {err}");
+        let err = RobotRegistry::from_cli_spec("baxter:qint@12.12", 16).unwrap_err();
+        assert!(err.contains("minv.Dinv"), "overflow stage not named: {err}");
+        assert!(err.contains("w2"), "overflowing joint not named: {err}");
+        // One more integer bit and the same robot registers fine.
+        RobotRegistry::from_cli_spec("baxter:qint@13.13", 16).expect("baxter@13.13 fits");
+        // Compensation models the rounded lane's reciprocal, not the
+        // integer datapath.
+        assert!(RobotRegistry::from_cli_spec("iiwa:qint+comp", 16).is_err());
+        assert!(RobotRegistry::from_cli_spec("iiwa:qint@12.12+comp", 16).is_err());
+    }
+
+    /// Programmatic registrations go through [`RobotRegistry::validate`].
+    #[test]
+    fn validate_checks_programmatic_int_entries() {
+        let mut reg = RobotRegistry::new();
+        reg.register(
+            builtin_robot("baxter").unwrap(),
+            BackendKind::NativeInt(QFormat::new(12, 12)),
+            8,
+        );
+        let err = reg.validate().unwrap_err();
+        assert!(err.contains("baxter") && err.contains("minv.Dinv"), "{err}");
+        let mut ok = RobotRegistry::new();
+        ok.register(builtin_robot("iiwa").unwrap(), BackendKind::NativeInt(QFormat::new(12, 14)), 8)
+            .register(builtin_robot("hyq").unwrap(), BackendKind::Native, 8);
+        ok.validate().expect("valid registry");
     }
 }

@@ -29,10 +29,14 @@
 //!
 //! Each worker keeps a small MRU set of workspaces (plus flat-path
 //! staging buffers), keyed by **(robot structure, backend)** — a
-//! [`DynWorkspace`] per f64 structure, a [`QuantScratch`] per
-//! (structure, format). Robots are matched by `Arc` identity with a
-//! structural fallback; backends by exact equality, so cache entries
-//! never alias across formats or lanes. All chunks of one batch reuse a
+//! [`DynWorkspace`] per f64 structure, a [`QuantScratch`] per rounded
+//! (structure, format), a [`QuantIntScratch`] per integer (structure,
+//! format). Robots are matched by `Arc` identity with a structural
+//! fallback; backends by exact equality, so cache entries never alias
+//! across formats or lanes (the integer and rounded lanes at the SAME
+//! format are distinct backends). Integer jobs additionally carry the
+//! `Arc<ShiftSchedule>` their engine validated, so pooled
+//! division-deferring sweeps consume identical holding shifts. All chunks of one batch reuse a
 //! single workspace per worker with no rebuild, and a multi-robot
 //! registry's parallel routes can interleave batches of different
 //! robots and precisions (the serving steady state) without ever
@@ -41,7 +45,8 @@
 use super::batch::{eval_batch, BatchKernel, BatchOutput, BatchTask};
 use super::workspace::DynWorkspace;
 use crate::model::Robot;
-use crate::quant::{QFormat, QuantScratch};
+use crate::quant::scaling::ShiftSchedule;
+use crate::quant::{QFormat, QuantIntScratch, QuantScratch};
 use crate::spatial::DMat;
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -56,6 +61,10 @@ pub enum PoolBackend {
     /// Emulated fixed point at this format (`quant::qrbd` kernels) —
     /// what [`crate::runtime::QuantEngine`] serves.
     Quant(QFormat),
+    /// True-integer `i64` lane at this format (`quant::qint` kernels,
+    /// division-deferring M⁻¹ under the job's shift schedule) — what
+    /// [`crate::runtime::QIntEngine`] serves.
+    Int(QFormat),
 }
 
 /// Borrowed view of one contiguous chunk of a flat-f32 batch: `rows`
@@ -100,6 +109,11 @@ struct PoolJob {
     kernel: BatchKernel,
     /// Which datapath evaluates this chunk (task chunks are always f64).
     backend: PoolBackend,
+    /// Shift schedule for `PoolBackend::Int` jobs: shared from the
+    /// engine that validated the format, so pooled execution consumes
+    /// the exact schedule the serial path does (bitwise identity needs
+    /// identical holding shifts, not merely equivalent ones).
+    sched: Option<Arc<ShiftSchedule>>,
     work: PoolWork,
     /// (chunk ordinal, result or panic message) back to the caller.
     out: Sender<(usize, Result<PoolPart, String>)>,
@@ -199,6 +213,7 @@ impl WorkerPool {
                         robot: Arc::clone(robot),
                         kernel,
                         backend: PoolBackend::F64,
+                        sched: None,
                         work: PoolWork::Tasks { tasks: Arc::clone(tasks), range: start..end },
                         out: tx.clone(),
                         ordinal: sent,
@@ -250,7 +265,19 @@ impl WorkerPool {
         out: &mut [f32],
         max_chunks: usize,
     ) {
-        self.eval_flat_backend(robot, kernel, PoolBackend::F64, q, qd, u, n, out_per_task, out, max_chunks);
+        self.eval_flat_backend(
+            robot,
+            kernel,
+            PoolBackend::F64,
+            None,
+            q,
+            qd,
+            u,
+            n,
+            out_per_task,
+            out,
+            max_chunks,
+        );
     }
 
     /// As [`WorkerPool::eval_flat`], but every task runs the quantized
@@ -277,6 +304,46 @@ impl WorkerPool {
             robot,
             kernel,
             PoolBackend::Quant(fmt),
+            None,
+            q,
+            qd,
+            u,
+            n,
+            out_per_task,
+            out,
+            max_chunks,
+        );
+    }
+
+    /// As [`WorkerPool::eval_flat`], but every task runs the
+    /// **true-integer** `i64` lane at `fmt` under `sched` — the fan-out
+    /// of [`crate::runtime::QIntEngine`]. The schedule travels with the
+    /// job (shared `Arc`), so every worker consumes the exact per-joint
+    /// holding shifts the serial engine validated at construction and
+    /// per-task results are bitwise identical to the serial
+    /// decode→`QuantIntScratch`→encode loop. Workers cache one
+    /// `QuantIntScratch` per (robot structure, format) — never aliasing
+    /// the rounded-f64 `Quant` lane's entries at the same format.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_flat_int(
+        &self,
+        robot: &Arc<Robot>,
+        kernel: BatchKernel,
+        fmt: QFormat,
+        sched: &Arc<ShiftSchedule>,
+        q: &[f32],
+        qd: &[f32],
+        u: &[f32],
+        n: usize,
+        out_per_task: usize,
+        out: &mut [f32],
+        max_chunks: usize,
+    ) {
+        self.eval_flat_backend(
+            robot,
+            kernel,
+            PoolBackend::Int(fmt),
+            Some(Arc::clone(sched)),
             q,
             qd,
             u,
@@ -295,6 +362,7 @@ impl WorkerPool {
         robot: &Arc<Robot>,
         kernel: BatchKernel,
         backend: PoolBackend,
+        sched: Option<Arc<ShiftSchedule>>,
         q: &[f32],
         qd: &[f32],
         u: &[f32],
@@ -337,6 +405,7 @@ impl WorkerPool {
                         robot: Arc::clone(robot),
                         kernel,
                         backend,
+                        sched: sched.clone(),
                         work: PoolWork::Flat(chunk),
                         out: tx.clone(),
                         ordinal: sent,
@@ -384,6 +453,7 @@ fn same_structure(a: &Robot, b: &Robot) -> bool {
 enum LaneScratch {
     F64(Box<DynWorkspace>),
     Quant(Box<QuantScratch>),
+    Int(Box<QuantIntScratch>),
 }
 
 /// Per-worker cached state: the lane workspace for the
@@ -406,6 +476,7 @@ impl WorkerCache {
         let lane = match backend {
             PoolBackend::F64 => LaneScratch::F64(Box::new(DynWorkspace::new(robot))),
             PoolBackend::Quant(_) => LaneScratch::Quant(Box::new(QuantScratch::new(n))),
+            PoolBackend::Int(_) => LaneScratch::Int(Box::new(QuantIntScratch::new(n))),
         };
         WorkerCache {
             robot: Arc::clone(robot),
@@ -456,6 +527,7 @@ unsafe fn eval_flat_chunk(
     robot: &Robot,
     kernel: BatchKernel,
     cache: &mut WorkerCache,
+    sched: Option<&ShiftSchedule>,
     c: &FlatChunk,
 ) {
     let n = c.n;
@@ -507,6 +579,31 @@ unsafe fn eval_flat_chunk(
                     }
                 }
             }
+            LaneScratch::Int(ws) => {
+                let PoolBackend::Int(fmt) = *backend else {
+                    unreachable!("int scratch cached under a non-int backend")
+                };
+                match kernel {
+                    BatchKernel::Rnea => {
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.rnea_into(robot, q, qd, u, fmt, out_vec);
+                        encode32(out_vec, out);
+                    }
+                    BatchKernel::Fd => {
+                        let sched = sched.expect("int pool jobs carry a shift schedule");
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.fd_dd_into(robot, q, qd, u, sched, out_vec);
+                        encode32(out_vec, out);
+                    }
+                    BatchKernel::Minv => {
+                        let sched = sched.expect("int pool jobs carry a shift schedule");
+                        ws.minv_dd_into(robot, q, sched, out_mat);
+                        encode32(&out_mat.d, out);
+                    }
+                }
+            }
         }
     }
 }
@@ -515,10 +612,12 @@ unsafe fn eval_flat_chunk(
 /// workspaces for (MRU): bounds worker memory while letting a
 /// multi-robot registry's parallel routes interleave batches without
 /// rebuilding — one slot per resident (structure, lane) pair in the
-/// steady state. Sized for the backend-keyed cache: every builtin robot
-/// served on BOTH lanes (8 pairs) plus imported robots still fit
-/// without thrashing.
-const WORKER_CACHE_SLOTS: usize = 16;
+/// steady state. Sized for the backend-keyed cache across all THREE
+/// lanes: every builtin robot served simultaneously on f64, a quant
+/// format, and a qint format is 12 pairs; the 24-slot cap leaves room
+/// for imported robots and per-robot format variants without
+/// thrashing.
+const WORKER_CACHE_SLOTS: usize = 24;
 
 /// Worker loop: pull chunks from the shared queue until the pool drops.
 fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
@@ -559,7 +658,9 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
                 // Task chunks are injected by the f64 batch API only.
                 let ws = match &mut cache.lane {
                     LaneScratch::F64(ws) => ws,
-                    LaneScratch::Quant(_) => unreachable!("task chunks always run the f64 lane"),
+                    LaneScratch::Quant(_) | LaneScratch::Int(_) => {
+                        unreachable!("task chunks always run the f64 lane")
+                    }
                 };
                 PoolPart::Outputs(
                     tasks[range.clone()]
@@ -571,7 +672,9 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
             PoolWork::Flat(chunk) => {
                 // SAFETY: the caller blocks in eval_flat until this job
                 // answers, so the borrowed rows outlive the evaluation.
-                unsafe { eval_flat_chunk(&job.robot, job.kernel, &mut cache, chunk) };
+                unsafe {
+                    eval_flat_chunk(&job.robot, job.kernel, &mut cache, job.sched.as_deref(), chunk)
+                };
                 PoolPart::Done
             }
         }));
@@ -778,6 +881,93 @@ mod tests {
         // Structural fallback still applies within one backend.
         let clone = Arc::new(builtin::iiwa());
         assert!(cache_serves(&entry, fa, &clone));
+    }
+
+    /// The integer lane is its own backend: `Int(fmt)` and `Quant(fmt)`
+    /// at the SAME format (and the same structure) must never share a
+    /// cache slot — their scratches hold different ingested state
+    /// (rounded-f64 staging vs scaled-once i64 constants).
+    #[test]
+    fn int_lane_never_aliases_quant_lane_at_same_format() {
+        let robot = Arc::new(builtin::iiwa());
+        let fmt = QFormat::new(12, 12);
+        let int_b = PoolBackend::Int(fmt);
+        let quant_b = PoolBackend::Quant(fmt);
+        let int_entry = WorkerCache::new(&robot, int_b);
+        assert!(cache_serves(&int_entry, int_b, &robot), "exact int (structure, format) hits");
+        assert!(!cache_serves(&int_entry, quant_b, &robot), "quant at same format must miss");
+        assert!(!cache_serves(&int_entry, PoolBackend::F64, &robot));
+        assert!(!cache_serves(&int_entry, PoolBackend::Int(QFormat::new(12, 14)), &robot));
+        let quant_entry = WorkerCache::new(&robot, quant_b);
+        assert!(!cache_serves(&quant_entry, int_b, &robot), "int at same format must miss");
+        assert!(matches!(int_entry.lane, LaneScratch::Int(_)));
+        assert!(matches!(quant_entry.lane, LaneScratch::Quant(_)));
+    }
+
+    /// Interleaving the INT lane with the quant lane and the f64 lane
+    /// for the same robot and format through a single-worker pool (one
+    /// MRU set sees every job) must reproduce each serial reference
+    /// bitwise — the schedule travels with the job, so pooled deferred
+    /// M⁻¹ consumes the identical holding shifts.
+    #[test]
+    fn interleaved_int_lane_matches_serial_bitwise() {
+        use crate::quant::scaling::{analyze, ScalingConfig};
+        use crate::quant::QuantIntScratch;
+        let pool = WorkerPool::new(1);
+        let robot = Arc::new(builtin::iiwa());
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let sched = Arc::new(analyze(&robot, fmt, &ScalingConfig::default()).expect("schedule"));
+        let rows = 7;
+        let mut rng = Rng::new(940);
+        let mut q32 = Vec::with_capacity(rows * n);
+        let mut qd32 = Vec::with_capacity(rows * n);
+        let mut u32 = Vec::with_capacity(rows * n);
+        for _ in 0..rows {
+            let s = State::random(&robot, &mut rng);
+            q32.extend(s.q.iter().map(|&x| x as f32));
+            qd32.extend(s.qd.iter().map(|&x| x as f32));
+            u32.extend(rng.vec_range(n, -8.0, 8.0).iter().map(|&x| x as f32));
+        }
+        // Serial int references: the exact decode→kernel→encode loops.
+        let mut ws = QuantIntScratch::new(n);
+        let (mut q, mut qd, mut u, mut o) =
+            (vec![0.0; n], vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let mut want_fd = vec![0.0f32; rows * n];
+        for k in 0..rows {
+            decode32(&q32[k * n..(k + 1) * n], &mut q);
+            decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+            decode32(&u32[k * n..(k + 1) * n], &mut u);
+            ws.fd_dd_into(&robot, &q, &qd, &u, &sched, &mut o);
+            encode32(&o, &mut want_fd[k * n..(k + 1) * n]);
+        }
+        let mut mi = DMat::zeros(n, n);
+        let mut want_mi = vec![0.0f32; rows * n * n];
+        for k in 0..rows {
+            decode32(&q32[k * n..(k + 1) * n], &mut q);
+            ws.minv_dd_into(&robot, &q, &sched, &mut mi);
+            encode32(&mi.d, &mut want_mi[k * n * n..(k + 1) * n * n]);
+        }
+        let mut got = vec![0.0f32; rows * n];
+        let mut got_mi = vec![0.0f32; rows * n * n];
+        // Two rounds with a quant job interleaved so the second int
+        // visit must REUSE (and never mistake) a cached entry.
+        for _ in 0..2 {
+            got.fill(0.0);
+            pool.eval_flat_int(
+                &robot, BatchKernel::Fd, fmt, &sched, &q32, &qd32, &u32, n, n, &mut got, 4,
+            );
+            assert_eq!(got, want_fd, "pooled int FD diverged");
+            got_mi.fill(0.0);
+            pool.eval_flat_int(
+                &robot, BatchKernel::Minv, fmt, &sched, &q32, &q32, &q32, n, n * n, &mut got_mi, 3,
+            );
+            assert_eq!(got_mi, want_mi, "pooled int M⁻¹ diverged");
+            // A quant job at the SAME format between int rounds: must
+            // not disturb (or borrow) the int lane's scratch.
+            got.fill(0.0);
+            pool.eval_flat_quant(&robot, BatchKernel::Fd, fmt, &q32, &qd32, &u32, n, n, &mut got, 4);
+        }
     }
 
     /// Interleaving two quantized formats and the f64 lane for the SAME

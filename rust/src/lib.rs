@@ -7,7 +7,10 @@
 //!   dynamics library (the Pinocchio-equivalent substrate + CPU baseline),
 //!   including the allocation-free workspace core
 //!   ([`dynamics::DynWorkspace`]) and the batched evaluation API.
-//! * [`quant`] — the paper's precision-aware quantization framework.
+//! * [`quant`] — the paper's precision-aware quantization framework,
+//!   including the true-integer `i64` kernel lane and the fixed-point
+//!   scaling analysis ([`quant::scaling`]) that certifies per-joint
+//!   shift schedules for the division-deferring integer M⁻¹.
 //! * [`control`] / [`sim`] — PID/LQR/MPC controllers and the ICMS
 //!   closed-loop control & motion simulator.
 //! * [`accel`] — the FPGA accelerator cycle model (RTP pipelines, division
@@ -15,8 +18,9 @@
 //!   evaluation figures.
 //! * [`runtime`] / [`coordinator`] — the serving path: a multi-robot
 //!   registry routing to per-robot backends (the f64 native workspace
-//!   engine, the quantized fixed-point engine at a per-robot `QFormat`,
-//!   or AOT-compiled HLO artifacts via PJRT behind the `pjrt` feature),
+//!   engine, the rounded fixed-point engine at a per-robot `QFormat`,
+//!   the true-integer `qint` engine gated by the scaling analysis, or
+//!   AOT-compiled HLO artifacts via PJRT behind the `pjrt` feature),
 //!   with dynamic batching and server-side trajectory rollouts. See
 //!   `docs/architecture.md` and `docs/serving.md`.
 //! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).

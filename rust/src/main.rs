@@ -6,16 +6,23 @@
 //! * `info --robot NAME` — topology/inertia summary.
 //! * `estimate [--robot NAME]` — accelerator cycle-model estimates for
 //!   every design × function (Fig. 10-style table).
-//! * `quantize --robot NAME --controller pid|lqr|mpc [--tol MET]` — run
-//!   the bit-width search (paper §III).
+//! * `quantize --robot NAME --controller pid|lqr|mpc [--tol MET]
+//!   [--emit-spec]` — run the bit-width search (paper §III);
+//!   `--emit-spec` closes the search → serving loop by printing a
+//!   ready-to-paste registry spec line: `NAME:qint@I.F` when the
+//!   fixed-point scaling analysis proves the chosen format for the
+//!   integer lane, `NAME:quant@I.F` (rounded-f64 lane) when it rejects
+//!   it — with the overflow witness explaining why.
 //! * `rates [--robot NAME]` — estimated control rates (Fig. 13).
 //! * `serve [--robots SPEC] [--backend native|pjrt] [--batch B]
 //!   [--traj H] [--par P]` — start the batched serving coordinator and
 //!   run a synthetic workload through it. `--robots` takes a registry
-//!   spec such as `iiwa,atlas:quant@12.10+comp,arm=path.urdf`: one
-//!   coordinator serves all listed robots concurrently, each on its own
-//!   backend (f64 native, or the quantized engine at a per-robot
-//!   Q-format, `+comp` adding the fitted M⁻¹ error compensation);
+//!   spec such as `iiwa,atlas:qint@12.14,hyq:quant@12.10+comp,arm=path.urdf`:
+//!   one coordinator serves all listed robots concurrently, each on its
+//!   own backend (f64 native, the rounded quantized engine at a
+//!   per-robot Q-format with `+comp` adding the fitted M⁻¹ error
+//!   compensation, or the true-integer `qint` engine — gated by the
+//!   fixed-point scaling analysis at registration);
 //!   `name=path.urdf` entries load robots through the URDF-lite
 //!   importer. `--traj H` additionally exercises trajectory batch
 //!   requests (H-step rollouts unrolled server-side); `--par P` fans
@@ -149,6 +156,31 @@ fn cmd_quantize(args: &Args) -> i32 {
     match out.chosen {
         Some(f) => println!("chosen format: {}", f.label()),
         None => println!("no candidate met the tolerance; fall back to float"),
+    }
+    if args.flag("emit-spec") {
+        // Close the search → serving loop: print the spec line `serve
+        // --robots` accepts verbatim. The integer lane wins when the
+        // scaling analysis proves the format; otherwise the rounded-f64
+        // lane serves it and the witness says why.
+        match out.chosen {
+            Some(f) => match draco::quant::scaling::validate_int_backend(&r, f) {
+                Ok(sched) => {
+                    println!(
+                        "\nregistry spec (integer lane; max hold shift {}):",
+                        sched.max_hold_shift()
+                    );
+                    println!("{}:qint@{}.{}", r.name, f.int_bits, f.frac_bits);
+                }
+                Err(e) => {
+                    println!("\nregistry spec (rounded-f64 lane — integer lane rejected: {e}):");
+                    println!("{}:quant@{}.{}", r.name, f.int_bits, f.frac_bits);
+                }
+            },
+            None => {
+                println!("\nregistry spec (no format met the tolerance; serve f64):");
+                println!("{}:native", r.name);
+            }
+        }
     }
     0
 }

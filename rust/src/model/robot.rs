@@ -97,6 +97,52 @@ impl Robot {
         (0..self.dof()).map(|i| self.depth(i) + 1).max().unwrap_or(0)
     }
 
+    /// Order-sensitive FNV-style fingerprint of everything the dynamics
+    /// kernels and the fixed-point analyses read from the model:
+    /// topology, joint types/axes, tree transforms, inertial
+    /// parameters, joint/velocity limits, gravity, and the robot name.
+    /// Robots with equal fingerprints are interchangeable for cached
+    /// per-robot derived state (the integer lane's ingested constants,
+    /// shift schedules); robots that merely share a *name* are not —
+    /// keying caches by name would serve one robot with another's
+    /// constants. Word-level mixing keeps it cheap enough for per-task
+    /// cache checks.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn word(h: u64, w: u64) -> u64 {
+            (h ^ w).wrapping_mul(PRIME)
+        }
+        fn f(h: u64, x: f64) -> u64 {
+            word(h, x.to_bits())
+        }
+        fn v(h: u64, x: &V3) -> u64 {
+            x.0.iter().fold(h, |h, &c| f(h, c))
+        }
+        fn m(h: u64, x: &M3) -> u64 {
+            x.0.iter().flatten().fold(h, |h, &c| f(h, c))
+        }
+        let mut h = self
+            .name
+            .as_bytes()
+            .iter()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| word(h, b as u64));
+        h = v(h, &self.gravity);
+        for l in &self.links {
+            h = word(h, l.parent.map(|p| p as u64 + 1).unwrap_or(0));
+            h = word(h, matches!(l.joint.jtype, JointType::Prismatic) as u64);
+            h = v(h, &l.joint.axis);
+            h = m(h, &l.x_tree.e);
+            h = v(h, &l.x_tree.r);
+            h = f(h, l.inertia.mass);
+            h = v(h, &l.inertia.com);
+            h = m(h, &l.inertia.i_o);
+            h = f(h, l.q_min);
+            h = f(h, l.q_max);
+            h = f(h, l.qd_max);
+        }
+        h
+    }
+
     // ---------------- JSON ----------------
 
     pub fn to_json(&self) -> Json {
@@ -313,6 +359,27 @@ mod tests {
         let mut r = builtin::iiwa();
         r.links[2].parent = Some(5);
         assert!(r.validate().is_err());
+    }
+
+    /// The fingerprint distinguishes robots that share a name but
+    /// differ inertially (the cache-aliasing hazard), is stable across
+    /// clones, and reacts to every parameter class it claims to cover.
+    #[test]
+    fn fingerprint_tracks_inertial_identity_not_just_name() {
+        let a = builtin::iiwa();
+        assert_eq!(a.fingerprint(), builtin::iiwa().fingerprint(), "deterministic");
+        let mut heavier = builtin::iiwa();
+        heavier.links[6].inertia.mass *= 2.0;
+        assert_ne!(a.fingerprint(), heavier.fingerprint(), "same name, new payload");
+        let mut renamed = builtin::iiwa();
+        renamed.name = "iiwa-b".to_string();
+        assert_ne!(a.fingerprint(), renamed.fingerprint());
+        let mut limits = builtin::iiwa();
+        limits.links[0].qd_max *= 0.5;
+        assert_ne!(a.fingerprint(), limits.fingerprint(), "limits feed the analyses");
+        let mut rerooted = builtin::iiwa();
+        rerooted.links[4].parent = Some(2);
+        assert_ne!(a.fingerprint(), rerooted.fingerprint());
     }
 
     #[test]

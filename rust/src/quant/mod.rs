@@ -1,16 +1,19 @@
 //! Precision-aware quantization framework (paper §III, Fig. 4): Q-format
 //! emulation, quantized RBD functions (the rounded-f64 lane in [`qrbd`]
-//! and the true-integer `i64` lane in [`qint`]), the error analyzer with
-//! the three amplification heuristics, Minv error compensation, and the
-//! bit-width search driven by the ICMS closed loop.
+//! and the true-integer `i64` lane in [`qint`]), the fixed-point scaling
+//! analysis that certifies integer shift schedules ([`scaling`]), the
+//! error analyzer with the three amplification heuristics, Minv error
+//! compensation, and the bit-width search driven by the ICMS closed loop.
 
 pub mod analyzer;
 pub mod compensate;
 pub mod qformat;
 pub mod qint;
 pub mod qrbd;
+pub mod scaling;
 pub mod search;
 
 pub use qformat::QFormat;
 pub use qint::{QInt, QuantIntScratch};
 pub use qrbd::QuantScratch;
+pub use scaling::{OverflowWitness, ScalingConfig, ShiftSchedule};

@@ -32,14 +32,25 @@
 //! paper's DSP-friendly 18/24-bit formats sit comfortably inside. Wider
 //! formats (e.g. the 32-bit baseline) keep using the legacy lane.
 //!
-//! The M⁻¹ sweep keeps the reciprocal on Algorithm 1's inline path but
-//! routes it through [`QInt::recip_fix`] — the shared-divider emulation
-//! (dequantize, one f64 reciprocal, requantize), exactly the quantized
-//! divider output the legacy lane models. A fixed-point port of the
-//! division-deferring Algorithm 2 needs the holding-factor scaling
-//! analysis (D·IA overflows narrow words) and stays an open item.
+//! Two integer M⁻¹ sweeps exist. [`QuantIntScratch::minv_into`] keeps
+//! the reciprocal on Algorithm 1's inline path through
+//! [`QInt::recip_fix`] — the shared-divider emulation (dequantize, one
+//! f64 reciprocal, requantize). [`QuantIntScratch::minv_dd_into`] is the
+//! **division-deferring** Algorithm 2 port: the backward sweep carries
+//! the holding products `N = D·IA − U Uᵀ` and `G = D·F + U·row`, every
+//! reciprocal moves off the recurrence onto the shared divider, and the
+//! deferred multiply by `1/D` restores the format one stage later. The
+//! holding products are `Λ²`-sized and would overflow narrow words, so
+//! each joint renormalizes them to `frac − g` bits using the per-joint
+//! shifts of a [`super::scaling::ShiftSchedule`] — the word reinterpreted
+//! as `Q(int+g).(frac−g)` for exactly the holding stage, as a DSP
+//! datapath would re-scale its product register. The schedule is the
+//! proof that every such stage fits; callers obtain one from
+//! [`super::scaling::analyze`] (serving backends validate at
+//! registration and panic-free-ness follows).
 
 use super::qformat::QFormat;
+use super::scaling::ShiftSchedule;
 use crate::dynamics::kinematics::Kin;
 use crate::dynamics::minv::Topology;
 use crate::model::Robot;
@@ -59,7 +70,6 @@ pub struct QInt {
     /// The format this context realizes.
     pub fmt: QFormat,
     f: u32,
-    half: i64,
     min: i64,
     max: i64,
     scale: f64,
@@ -81,7 +91,6 @@ impl QInt {
         QInt {
             fmt,
             f,
-            half: if f == 0 { 0 } else { 1i64 << (f - 1) },
             min: -(1i64 << (w - 1)),
             max: (1i64 << (w - 1)) - 1,
             scale: (1i64 << f) as f64,
@@ -113,18 +122,54 @@ impl QInt {
     }
 
     /// Renormalize a 2f-scaled product/accumulator to f bits with
-    /// round-half-away-from-zero + saturation. The sign-split keeps
-    /// negative ties rounding away from zero (an arithmetic
-    /// `(p + half) >> f` would floor them toward −∞ — the asymmetry the
-    /// regression tests pin down).
+    /// round-half-away-from-zero + saturation (the sign-split of
+    /// [`QInt::rshift_round`] keeps negative ties rounding away from
+    /// zero — an arithmetic `(p + half) >> f` would floor them toward
+    /// −∞, the asymmetry the regression tests pin down).
     #[inline]
     pub fn rnorm(&self, p: i64) -> i64 {
+        self.rshift_round(p, self.f)
+    }
+
+    /// Round-half-away-from-zero right shift by `sh` bits + word
+    /// saturation — the one renormalizer behind [`QInt::rnorm`] and the
+    /// holding-stage variants below.
+    #[inline]
+    fn rshift_round(&self, p: i64, sh: u32) -> i64 {
+        let half = if sh == 0 { 0 } else { 1i64 << (sh - 1) };
         let q = if p >= 0 {
-            (p + self.half) >> self.f
+            (p + half) >> sh
         } else {
-            -((-p + self.half) >> self.f)
+            -((-p + half) >> sh)
         };
         self.sat(q)
+    }
+
+    /// **Holding-stage** renormalization: reduce a 2f-scaled product to
+    /// `f − g` fractional bits — the same physical word reinterpreted as
+    /// `Q(int+g).(frac−g)`, trading `g` fraction bits for the integer
+    /// headroom the division-deferring products `D·IA` / `D·F + U·row`
+    /// need (the per-joint `g` comes from the
+    /// [`super::scaling::ShiftSchedule`]; negative `g` instead gains
+    /// fraction bits for light distal joints whose tiny held products
+    /// would round to zero at the route lsb). Round-half-away +
+    /// saturate, boundary-tested like [`QInt::rnorm`].
+    #[inline]
+    pub fn rnorm_hold(&self, p: i64, g: i32) -> i64 {
+        let sh = self.f as i32 + g;
+        debug_assert!((0..=62).contains(&sh), "hold shift out of range");
+        self.rshift_round(p, sh as u32)
+    }
+
+    /// Consume a held product: a `(f − g)`-scaled word multiplied by an
+    /// f-scaled word (the deferred `1/D` from the shared divider) sits
+    /// at `2f − g` bits; shifting by `f − g` restores the route format.
+    /// Requires `|g| ≤ frac_bits` (the schedule guarantees it).
+    #[inline]
+    pub fn rnorm_unhold(&self, p: i64, g: i32) -> i64 {
+        let sh = self.f as i32 - g;
+        debug_assert!((0..=62).contains(&sh), "hold shift out of range");
+        self.rshift_round(p, sh as u32)
     }
 
     /// Shared-divider emulation: the quantized reciprocal of an f-scaled
@@ -365,14 +410,18 @@ fn ixf_to_mat6(ctx: &QInt, x: &IXform) -> I6 {
 /// One scratch serves one robot DOF; `rnea_into` / `minv_into` /
 /// `fd_into` perform zero heap allocation per task, and the quantized
 /// inertia constants, gravity word, and topology column lists are built
-/// once per `(robot name, format)` and reused across tasks (the "scale
+/// once per `(robot fingerprint, format)` and reused across tasks (the "scale
 /// once on ingest" half of the lane's contract).
 #[derive(Debug, Clone)]
 pub struct QuantIntScratch {
     n: usize,
     ctx: QInt,
-    /// Ingest cache key: constants below are valid for this robot+format.
-    const_key: Option<(String, QFormat)>,
+    /// Ingest cache key: constants below are valid for the robot with
+    /// this [`Robot::fingerprint`] at this format. Keyed by fingerprint
+    /// — not by name — so robots that share a name but differ
+    /// inertially (e.g. a payload variant served through the same pool)
+    /// can never be served with one another's ingested constants.
+    const_key: Option<(u64, QFormat)>,
     topo: Topology,
     /// Quantized inertia blocks (BRAM constants), one per link.
     ic: Vec<I6>,
@@ -451,16 +500,20 @@ impl QuantIntScratch {
 
     /// (Re)ingest per-robot constants when the `(robot, format)` pair
     /// changes: quantize the inertia blocks and the gravity word once,
-    /// rebuild the topology column lists. Keyed by robot *name* — the
-    /// registry's routing key — so callers that mutate a robot's
-    /// inertias in place must use a fresh scratch.
+    /// rebuild the topology column lists. Keyed by
+    /// [`Robot::fingerprint`] (cheap word-level hash of the full
+    /// model), so mutated or same-name-but-different robots always
+    /// re-ingest instead of aliasing cached constants.
     fn ensure_ingest(&mut self, robot: &Robot, fmt: QFormat) {
+        self.ensure_ingest_keyed(robot, fmt, robot.fingerprint());
+    }
+
+    /// As [`Self::ensure_ingest`] with the fingerprint precomputed —
+    /// the deferred kernels already hash the model in
+    /// [`Self::check_schedule`] and must not pay for it twice per task.
+    fn ensure_ingest_keyed(&mut self, robot: &Robot, fmt: QFormat, fp: u64) {
         assert_eq!(robot.dof(), self.n, "scratch sized for a different robot");
-        if self
-            .const_key
-            .as_ref()
-            .is_some_and(|(name, f)| *f == fmt && *name == robot.name)
-        {
+        if self.const_key.is_some_and(|(key, f)| f == fmt && key == fp) {
             return;
         }
         let ctx = QInt::new(fmt);
@@ -470,7 +523,7 @@ impl QuantIntScratch {
         self.ia0 = to_fix_sv(&ctx, &SV::new(V3::ZERO, -robot.gravity));
         self.topo = Topology::new(robot);
         self.ctx = ctx;
-        self.const_key = Some((robot.name.clone(), fmt));
+        self.const_key = Some((fp, fmt));
     }
 
     /// Rebuild the int kinematic cache for the quantized state held in
@@ -630,6 +683,212 @@ impl QuantIntScratch {
         }
     }
 
+    /// Division-deferring M⁻¹ sweeps (Algorithm 2) over the current int
+    /// kin cache, driven by the schedule's per-joint holding shifts.
+    /// Mirrors [`crate::dynamics::minv::minv_dd_into`]'s recurrences:
+    /// the backward pass carries held `N`/`G` products at `frac − g`
+    /// bits, the shared divider resolves every `1/D` off the recurrence
+    /// ([`QInt::recip_fix`], consumed one stage later), and the deferred
+    /// rows are divided once before the forward response sweep.
+    fn minv_fix_dd(&mut self, robot: &Robot, hold: &[i32]) {
+        let ctx = self.ctx;
+        let n = self.n;
+        self.iart.copy_from_slice(&self.ic);
+        self.ifcol.fill([0; 6]);
+        self.iacol.fill([0; 6]);
+        self.irow.fill(0);
+        let one = ctx.to_fix(1.0);
+
+        // Backward sweep (stage Mb): scaled numerators only; divider
+        // outputs are consumed a stage later (parent updates), exactly
+        // the staggered schedule of the f64 kernel.
+        for i in (0..n).rev() {
+            let s = self.is[i];
+            let ui = imatvec6(&ctx, &self.iart[i], &s);
+            let di = idot6(&ctx, &s, &ui);
+            let dinv = ctx.recip_fix(di);
+            self.iu[i] = ui;
+            self.idinv[i] = dinv;
+            self.irow[i * n + i] = ctx.sat(self.irow[i * n + i] + one);
+            for &j in &self.topo.subcols[i] {
+                let sf = idot6(&ctx, &s, &self.ifcol[i * n + j]);
+                if sf != 0 {
+                    self.irow[i * n + j] = ctx.sat(self.irow[i * n + j] - sf);
+                }
+            }
+            if let Some(p) = robot.links[i].parent {
+                let g = hold[i];
+                // N = D·IA − U Uᵀ, held at frac − g (both products are
+                // exact at 2f; one renorm per entry).
+                let mut nh = [0i64; 36];
+                for a in 0..6 {
+                    for b in 0..6 {
+                        nh[a * 6 + b] =
+                            ctx.rnorm_hold(di * self.iart[i][a * 6 + b] - ui[a] * ui[b], g);
+                    }
+                }
+                // XᵀNX stays in the held domain (X entries are f-scaled,
+                // so ixtax's per-pass `>> f` renorms preserve the scale);
+                // the deferred multiply by 1/D restores the format.
+                let contrib = ixtax(&ctx, &self.x6[i], &nh);
+                for e in 0..36 {
+                    self.iart[p][e] =
+                        ctx.sat(self.iart[p][e] + ctx.rnorm_unhold(contrib[e] * dinv, g));
+                }
+                for &j in &self.topo.subcols[i] {
+                    // G = D·F + U·row, held; F_λ += (Xᵀ G)·D⁻¹.
+                    let f0 = self.ifcol[i * n + j];
+                    let r = self.irow[i * n + j];
+                    let mut gh = [0i64; 6];
+                    for (k, gk) in gh.iter_mut().enumerate() {
+                        *gk = ctx.rnorm_hold(di * f0[k] + ui[k] * r, g);
+                    }
+                    let up = ixf_inv_apply_force(&ctx, &self.ixup[i], &gh);
+                    for k in 0..6 {
+                        self.ifcol[p * n + j][k] =
+                            ctx.sat(self.ifcol[p * n + j][k] + ctx.rnorm_unhold(up[k] * dinv, g));
+                    }
+                }
+            }
+        }
+
+        // Divider outputs consumed: one multiply turns every deferred
+        // row D_i·M⁻¹_row into the M⁻¹ row.
+        for i in 0..n {
+            let dinv = self.idinv[i];
+            for j in 0..n {
+                let v = self.irow[i * n + j];
+                if v != 0 {
+                    self.irow[i * n + j] = ctx.rnorm(v * dinv);
+                }
+            }
+        }
+
+        // Forward pass (Mf): identical to the inline-divider sweep.
+        for i in 0..n {
+            let s = self.is[i];
+            match robot.links[i].parent {
+                None => {
+                    for &j in &self.topo.brcols[i] {
+                        self.iacol[i * n + j] = iscale6(&ctx, &s, self.irow[i * n + j]);
+                    }
+                }
+                Some(p) => {
+                    for &j in &self.topo.brcols[i] {
+                        let ap = self.iacol[p * n + j];
+                        let xa = ixf_apply(&ctx, &self.ixup[i], &ap);
+                        let corr = ctx.rnorm(self.idinv[i] * idot6(&ctx, &self.iu[i], &xa));
+                        if corr != 0 {
+                            self.irow[i * n + j] = ctx.sat(self.irow[i * n + j] - corr);
+                        }
+                        self.iacol[i * n + j] =
+                            iadd6(&ctx, &xa, &iscale6(&ctx, &s, self.irow[i * n + j]));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bind a schedule to this scratch: the schedule must have been
+    /// derived for exactly this robot (by fingerprint, not name) and
+    /// the lane must carry its format. Serving backends validate at
+    /// registration ([`super::scaling::validate_int_backend`]), so
+    /// these assertions never fire on a served route. Returns the
+    /// model fingerprint so callers can reuse it for the ingest key.
+    fn check_schedule(&self, robot: &Robot, sched: &ShiftSchedule) -> u64 {
+        let fp = robot.fingerprint();
+        assert_eq!(
+            sched.fingerprint, fp,
+            "shift schedule derived for a different robot (or the model changed \
+             since analysis): schedule is for '{}', kernel got '{}'",
+            sched.robot, robot.name
+        );
+        assert_eq!(sched.hold_shift.len(), robot.dof(), "schedule joint count mismatch");
+        assert!(
+            sched.hold_shift.iter().all(|&g| g.unsigned_abs() <= sched.fmt.frac_bits),
+            "schedule holds more bits than the format has"
+        );
+        fp
+    }
+
+    /// Clamp one joint position into the joint-limit box. The schedule
+    /// is proved over that box (certified translation bounds, sampled
+    /// extrema), so the deferred kernels saturate out-of-box positions
+    /// on ingest — the joint-space twin of the word's rail saturation —
+    /// instead of running the held products outside their proof. In-box
+    /// inputs (every valid serve request; integrator drift past a limit
+    /// is the exception) pass through untouched.
+    #[inline]
+    fn q_boxed(robot: &Robot, i: usize, q: f64) -> f64 {
+        q.clamp(robot.links[i].q_min, robot.links[i].q_max)
+    }
+
+    /// Integer **division-deferring** analytical M⁻¹(q) (Algorithm 2)
+    /// under a proved [`ShiftSchedule`], dequantized into `out` (N×N).
+    /// Positions are clamped to the joint-limit box the schedule was
+    /// proved over (see [`Self::q_boxed`]).
+    pub fn minv_dd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        sched: &ShiftSchedule,
+        out: &mut DMat,
+    ) {
+        let fp = self.check_schedule(robot, sched);
+        self.ensure_ingest_keyed(robot, sched.fmt, fp);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(out.d.len(), n * n, "output sized for a different robot");
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(Self::q_boxed(robot, i, q[i]));
+        }
+        self.ikin(robot, false, true);
+        self.minv_fix_dd(robot, &sched.hold_shift);
+        for (o, v) in out.d.iter_mut().zip(&self.irow) {
+            *o = ctx.from_fix(*v);
+        }
+    }
+
+    /// Fused integer forward dynamics through the **division-deferring**
+    /// M⁻¹: one int kinematics pass shared by the bias sweep and the
+    /// deferred M⁻¹ sweep, τ − C folded into the fixed-point matvec —
+    /// the serving kernel of the `qint` backend
+    /// ([`crate::runtime::QIntEngine`]).
+    pub fn fd_dd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        sched: &ShiftSchedule,
+        qdd: &mut [f64],
+    ) {
+        let fp = self.check_schedule(robot, sched);
+        self.ensure_ingest_keyed(robot, sched.fmt, fp);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(qdd.len(), n);
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(Self::q_boxed(robot, i, q[i]));
+            self.qdfix[i] = ctx.to_fix(qd[i]);
+            self.ufix[i] = ctx.to_fix(tau[i]);
+        }
+        self.ikin(robot, true, true);
+        self.rnea_fix(robot, false); // bias: q̈ ≡ 0, tfix ← C
+        self.minv_fix_dd(robot, &sched.hold_shift);
+        for i in 0..n {
+            self.irhs[i] = ctx.sat(self.ufix[i] - self.tfix[i]);
+        }
+        for i in 0..n {
+            let mut acc = 0i64;
+            for j in 0..n {
+                acc += self.irow[i * n + j] * self.irhs[j];
+            }
+            qdd[i] = ctx.from_fix(ctx.rnorm(acc));
+        }
+    }
+
     /// Integer RNEA (ID): τ = ID(q, q̇, q̈), dequantized into `tau`.
     pub fn rnea_into(
         &mut self,
@@ -736,6 +995,32 @@ pub fn quant_fd_i64(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fmt: QFor
     let mut ws = QuantIntScratch::new(n);
     let mut qdd = vec![0.0; n];
     ws.fd_into(robot, q, qd, tau, fmt, &mut qdd);
+    qdd
+}
+
+/// Division-deferring integer M⁻¹, allocating wrapper over
+/// [`QuantIntScratch::minv_dd_into`].
+pub fn quant_minv_dd_i64(robot: &Robot, q: &[f64], sched: &ShiftSchedule) -> DMat {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut out = DMat::zeros(n, n);
+    ws.minv_dd_into(robot, q, sched, &mut out);
+    out
+}
+
+/// Division-deferring integer FD, allocating wrapper over
+/// [`QuantIntScratch::fd_dd_into`].
+pub fn quant_fd_dd_i64(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    tau: &[f64],
+    sched: &ShiftSchedule,
+) -> Vec<f64> {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut qdd = vec![0.0; n];
+    ws.fd_dd_into(robot, q, qd, tau, sched, &mut qdd);
     qdd
 }
 
@@ -930,13 +1215,15 @@ mod tests {
         }
     }
 
-    /// Robots with the same DOF count but different names/inertias must
-    /// not share ingested constants (the cache is keyed, not assumed).
+    /// Robots with the same DOF count — and even the same NAME — but
+    /// different inertias must not share ingested constants: the cache
+    /// is keyed by the full model fingerprint, not the routing name (a
+    /// name-keyed cache would serve a payload variant with the base
+    /// robot's inertia blocks through a shared pool worker).
     #[test]
     fn ingest_cache_keyed_by_robot() {
         let a = builtin::iiwa();
-        let mut b = builtin::iiwa();
-        b.name = "iiwa-heavy".to_string();
+        let mut b = builtin::iiwa(); // same name "iiwa", heavier links
         for l in &mut b.links {
             l.inertia.mass *= 2.0;
         }
@@ -986,5 +1273,211 @@ mod tests {
     #[should_panic(expected = "integer lane supports")]
     fn wide_formats_are_rejected() {
         QInt::new(QFormat::new(16, 16)); // 32-bit: legacy lane only
+    }
+
+    // ---------------- division-deferring lane ----------------
+
+    use super::super::scaling::{analyze, ScalingConfig, ShiftSchedule};
+
+    fn sched(robot: &crate::model::Robot, fmt: QFormat) -> ShiftSchedule {
+        analyze(robot, fmt, &ScalingConfig::default())
+            .unwrap_or_else(|w| panic!("schedule for {}: {w}", robot.name))
+    }
+
+    /// Holding-stage renorm boundary behaviour: for every shift `g` the
+    /// held word is the same physical word at format `Q(int+g).(frac−g)`,
+    /// so `rnorm_hold` of a 2f-scaled product must agree with that
+    /// virtual format's round-half-away `q()` — including negative ties
+    /// and both saturation rails (the new renorm stage of the deferred
+    /// sweep, pinned like the base lane's `rnorm` boundaries).
+    #[test]
+    fn hold_renorm_matches_virtual_format_at_boundaries() {
+        for fmt in [QFormat::new(12, 12), QFormat::new(10, 14), QFormat::new(8, 8)] {
+            let ctx = QInt::new(fmt);
+            for g in [0i32, 1, 3, 5, -2, -4] {
+                let held = QFormat::new(
+                    (fmt.int_bits as i32 + g) as u32,
+                    (fmt.frac_bits as i32 - g) as u32,
+                );
+                let held_step = held.step();
+                let two_f = fmt.step() * fmt.step();
+                let mut ps: Vec<i64> = Vec::new();
+                // Exact half-step ties of the HELD lsb on both sides,
+                // plus values around both saturation rails.
+                let h = 1i64 << (fmt.frac_bits as i32 + g - 1);
+                for m in [1i64, -1, 3, -3, 9, -9, 255, -255] {
+                    ps.push(m * h);
+                }
+                let rail = (held.max_val() / two_f) as i64;
+                ps.extend([rail, rail + h, -rail - h, -rail - 4 * h, i64::MAX / 4, i64::MIN / 4]);
+                for &p in &ps {
+                    let real = p as f64 * two_f;
+                    let got = ctx.rnorm_hold(p, g) as f64 * held_step;
+                    assert_eq!(
+                        got,
+                        held.q(real),
+                        "hold p = {p} g = {g} fmt = {}",
+                        fmt.label()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Unhold renorm boundary behaviour: a held·(f-scaled) product sits
+    /// at `2f − g` bits; restoring the route format must round half away
+    /// from zero at the route lsb and saturate at the route rails.
+    #[test]
+    fn unhold_renorm_matches_route_format_at_boundaries() {
+        for fmt in [QFormat::new(12, 12), QFormat::new(10, 14)] {
+            let ctx = QInt::new(fmt);
+            for g in [0i32, 2, 4, -3] {
+                let scale = (2.0f64).powi(-(2 * fmt.frac_bits as i32 - g));
+                let h = 1i64 << (fmt.frac_bits as i32 - g - 1);
+                let rail = (fmt.max_val() / scale) as i64;
+                for p in [h, -h, 3 * h, -3 * h, 101 * h, -101 * h, rail, rail + h, -rail - 4 * h]
+                {
+                    let real = p as f64 * scale;
+                    assert_eq!(
+                        ctx.from_fix(ctx.rnorm_unhold(p, g)),
+                        fmt.q(real),
+                        "unhold p = {p} g = {g} fmt = {}",
+                        fmt.label()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The deferred integer M⁻¹ under its proved schedule tracks the
+    /// exact f64 division-deferring kernel at the paper's fine format.
+    #[test]
+    fn int_minv_dd_close_to_exact_at_fine_format() {
+        for robot in [builtin::iiwa(), builtin::hyq()] {
+            let fmt = QFormat::new(12, 14);
+            let sc = sched(&robot, fmt);
+            let mut rng = Rng::new(910);
+            let s = State::random(&robot, &mut rng);
+            let exact = crate::dynamics::minv_dd(&robot, &s.q);
+            let quant = quant_minv_dd_i64(&robot, &s.q, &sc);
+            let rel = exact.sub(&quant).max_abs() / exact.max_abs();
+            assert!(rel < 8e-2, "{}: relative error {rel}", robot.name);
+        }
+    }
+
+    /// The schedule's holding shifts are real: the deferred sweep runs
+    /// with g > 0 at 12 integer bits (the very products that used to
+    /// overflow) and still stays within the error envelope of the
+    /// inline-divider integer sweep.
+    #[test]
+    fn deferred_and_inline_int_minv_share_an_error_envelope() {
+        let robot = builtin::iiwa();
+        let fmt = QFormat::new(12, 12);
+        let sc = sched(&robot, fmt);
+        assert!(sc.max_hold_shift() > 0, "no holding shift exercised");
+        let mut rng = Rng::new(911);
+        let (mut e_dd, mut e_in) = (0.0f64, 0.0f64);
+        for _ in 0..4 {
+            let s = State::random(&robot, &mut rng);
+            let exact = minv(&robot, &s.q);
+            let dd = quant_minv_dd_i64(&robot, &s.q, &sc);
+            let inl = quant_minv_i64(&robot, &s.q, fmt);
+            e_dd += exact.sub(&dd).max_abs();
+            e_in += exact.sub(&inl).max_abs();
+        }
+        assert!(e_dd.is_finite() && e_dd > 0.0);
+        let ratio = e_dd / e_in;
+        assert!(
+            (0.02..=50.0).contains(&ratio),
+            "deferred lane diverged: dd {e_dd} vs inline {e_in}"
+        );
+    }
+
+    /// FD through the deferred M⁻¹ roundtrips ID within tolerance.
+    #[test]
+    fn int_fd_dd_roundtrip_error_bounded() {
+        let robot = builtin::iiwa();
+        let fmt = QFormat::new(12, 12);
+        let sc = sched(&robot, fmt);
+        let mut rng = Rng::new(912);
+        let s = State::random(&robot, &mut rng);
+        let n = robot.dof();
+        let qdd = rng.vec_range(n, -1.0, 1.0);
+        let tau = rnea(&robot, &s.q, &s.qd, &qdd, None);
+        let back = quant_fd_dd_i64(&robot, &s.q, &s.qd, &tau, &sc);
+        for i in 0..n {
+            assert!(
+                (back[i] - qdd[i]).abs() < 0.5,
+                "joint {i}: {} vs {}",
+                back[i],
+                qdd[i]
+            );
+        }
+    }
+
+    /// One scratch reused across tasks and formats on the deferred path
+    /// matches fresh scratches bitwise (ingest rebinding included), and
+    /// a 30-DOF humanoid's schedule drives the sweep without overflowing
+    /// the word (outputs stay on the rails).
+    #[test]
+    fn deferred_scratch_reuse_matches_fresh_bitwise() {
+        let robot = builtin::iiwa();
+        let n = robot.dof();
+        let fa = QFormat::new(12, 12);
+        let fb = QFormat::new(12, 14);
+        let (sa, sb) = (sched(&robot, fa), sched(&robot, fb));
+        let mut ws = QuantIntScratch::new(n);
+        let mut rng = Rng::new(913);
+        for sc in [&sa, &sb, &sa] {
+            let s = State::random(&robot, &mut rng);
+            let tau = rng.vec_range(n, -8.0, 8.0);
+            let mut mi = DMat::zeros(n, n);
+            ws.minv_dd_into(&robot, &s.q, sc, &mut mi);
+            assert_eq!(mi.d, quant_minv_dd_i64(&robot, &s.q, sc).d);
+            let mut qdd = vec![0.0; n];
+            ws.fd_dd_into(&robot, &s.q, &s.qd, &tau, sc, &mut qdd);
+            assert_eq!(qdd, quant_fd_dd_i64(&robot, &s.q, &s.qd, &tau, sc));
+        }
+
+        let atlas = builtin::atlas();
+        let fmt = QFormat::new(12, 14);
+        let sc = sched(&atlas, fmt);
+        let s = State::random(&atlas, &mut rng);
+        let mi = quant_minv_dd_i64(&atlas, &s.q, &sc);
+        assert!(mi.d.iter().all(|x| x.is_finite() && x.abs() <= fmt.max_val() + fmt.step()));
+    }
+
+    /// Out-of-box positions saturate into the joint-limit box the
+    /// schedule was proved over — the deferred sweeps never run outside
+    /// their proof.
+    #[test]
+    fn deferred_kernels_clamp_positions_to_the_proved_box() {
+        let robot = builtin::iiwa();
+        let n = robot.dof();
+        let sc = sched(&robot, QFormat::new(12, 12));
+        let wild: Vec<f64> = robot.links.iter().map(|l| l.q_max + 3.0).collect();
+        let boxed: Vec<f64> = robot.links.iter().map(|l| l.q_max).collect();
+        assert_eq!(
+            quant_minv_dd_i64(&robot, &wild, &sc).d,
+            quant_minv_dd_i64(&robot, &boxed, &sc).d
+        );
+        let qd = vec![0.3; n];
+        let tau = vec![1.0; n];
+        assert_eq!(
+            quant_fd_dd_i64(&robot, &wild, &qd, &tau, &sc),
+            quant_fd_dd_i64(&robot, &boxed, &qd, &tau, &sc)
+        );
+    }
+
+    /// A schedule never transfers across robots.
+    #[test]
+    #[should_panic(expected = "different robot")]
+    fn schedule_is_robot_keyed() {
+        let iiwa = builtin::iiwa();
+        let hyq = builtin::hyq();
+        let sc = sched(&iiwa, QFormat::new(12, 12));
+        let mut rng = Rng::new(914);
+        let s = State::random(&hyq, &mut rng);
+        quant_minv_dd_i64(&hyq, &s.q, &sc);
     }
 }

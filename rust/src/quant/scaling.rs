@@ -1,0 +1,735 @@
+//! Fixed-point scaling analysis: per-stage magnitude bounds for the
+//! integer (`i64`) lane over a robot's joint-limit box, and the
+//! [`ShiftSchedule`] that makes the **division-deferring** integer M⁻¹
+//! possible.
+//!
+//! The division-deferring reformulation (Algorithm 2, see
+//! [`crate::dynamics::minv`]) multiplies the articulated-inertia and
+//! force updates through by the holding factor `D_i`, so the backward
+//! sweep carries `N_i = D_i·IA_i − U_i U_iᵀ` and `G_i = D_i·F_i +
+//! U_i·row_i` instead of their divided forms. Those holding products are
+//! `|D|·|IA| ≈ Λ²`-sized — far above what a narrow word's integer bits
+//! can hold — which is why the integer lane historically fell back to
+//! Algorithm 1 (ROADMAP "holding factors D·IA overflow narrow words").
+//! The fix is per-stage rescaling: joint `i`'s held quantities are
+//! stored with `hold_shift[i]` fractional bits *moved into* integer
+//! headroom (the word is reinterpreted as `Q(int+g).(frac−g)` for the
+//! holding stage only), and the later multiply by `1/D_i` renormalizes
+//! back to the route format. This module computes those shifts and
+//! proves they fit — or rejects the format with a concrete
+//! [`OverflowWitness`] naming the overflowing stage and joint.
+//!
+//! ## How each stage is bounded
+//!
+//! * **Certified stages** (`certified: true`) use interval/norm
+//!   propagation that is sound over the whole joint-limit box:
+//!   - kinematic constants: rotation entries lie in `[−1, 1]`; the
+//!     translation of `X_up` is bounded by `‖x_tree.r‖` (plus the joint
+//!     range for prismatic joints) because rotations preserve norms;
+//!   - articulated inertias: the zero-velocity articulated inertia
+//!     `IA_i` is PSD-dominated by the **composite rigid-body inertia**
+//!     of `subtree(i)` (locking joints can only increase apparent
+//!     inertia), whose λ_max is bounded by its trace
+//!     `Λ_i = Σ_j tr(I_com_j) + 2 m_j d_ij² + 3 m_j` with `d_ij` the
+//!     worst-case origin-to-CoM distance along the path — so every
+//!     entry of `IA_i`, `‖U_i‖`, and `D_i` is `≤ Λ_i`, and the holding
+//!     product `N_i` (PSD times transform congruence) is
+//!     `≤ (1+t_i)²·Λ_i²`;
+//!   - the divider: `D_i ≥ Sᵢᵀ I_i Sᵢ` (articulated ⪰ own link rigid
+//!     inertia), a constant computable exactly per link, so
+//!     `1/D_i ≤ 1/d_lo_i` bounds the divider output word.
+//! * **Sampled stages** (`certified: false`) — the deferred rows, the
+//!   per-column force accumulators `F`/`G`, the forward acceleration
+//!   responses, and the M⁻¹ entries themselves — depend on M⁻¹(q)
+//!   magnitudes for which no useful closed-form interval exists. They
+//!   are bounded by replaying the f64 division-deferring sweep at the
+//!   box corners + center + seeded random interior states and recording
+//!   per-stage extrema; the stages that feed the *recursion* (deferred
+//!   rows, `F` columns, the held `G`) gate with
+//!   [`ScalingConfig::margin`] headroom on top. The M⁻¹ egress and the
+//!   forward responses (`minv.out` / `minv.acol`) instead saturate
+//!   gracefully at the rail — exactly the clamp the rounded-f64 lane's
+//!   `QFormat::q` applies to its own output — so they are reported as
+//!   saturation risks, never rejections.
+//! * **Velocity-dependent diagnostics** (`gating: false`) — the RNEA
+//!   velocity/bias sweep bounds over the *velocity* box are reported
+//!   (they tell you when a serving envelope can saturate) but do not
+//!   gate registration: torque-side saturation is input-magnitude
+//!   behaviour already validated by the bit-width search's closed loop,
+//!   not a structural property of the datapath like the holding
+//!   factors.
+
+use super::qformat::QFormat;
+use super::qint::MAX_INT_WIDTH;
+use crate::dynamics::kinematics::Kin;
+use crate::dynamics::minv::Topology;
+use crate::model::{JointType, Robot};
+use crate::spatial::mat6::{matvec6, outer6, scale6, sub6, xtax, M6};
+use crate::spatial::SV;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Operating envelope + sampling knobs for [`analyze`]. The joint
+/// position/velocity boxes come from the robot model; torque and
+/// acceleration operands are client-supplied at serve time, so their
+/// assumed bounds are part of the analysis contract (inputs beyond them
+/// saturate on ingest, as any fixed-point frontend does).
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingConfig {
+    /// Assumed |τ| bound on FD torque / RNEA output operands.
+    pub tau_max: f64,
+    /// Assumed |q̈| bound on RNEA acceleration operands.
+    pub qdd_max: f64,
+    /// States sampled for the non-certified sweep stages (box corners +
+    /// center always included on top of the random interior draws).
+    pub samples: usize,
+    /// Safety factor applied to sampled bounds of *internal* sweep
+    /// stages (deferred rows, F/G accumulators) before gating.
+    pub margin: f64,
+    /// Seed for the interior-state draws (deterministic analysis).
+    pub seed: u64,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig { tau_max: 16.0, qdd_max: 4.0, samples: 24, margin: 2.0, seed: 0x5CA7ED }
+    }
+}
+
+/// One analyzed pipeline stage: its worst-case magnitude over the
+/// operating box, which joint attains it, and how the bound was
+/// obtained.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageBound {
+    /// Stage name (e.g. `minv.hold`, `minv.Dinv`, `rnea.f`).
+    pub stage: &'static str,
+    /// Joint attaining the worst bound, when the stage is per-joint.
+    pub joint: Option<usize>,
+    /// Magnitude bound (margin included for sampled gating stages).
+    pub bound: f64,
+    /// Whether the bound is certified (interval/norm propagation) or
+    /// sampled over the box.
+    pub certified: bool,
+    /// Whether exceeding the word's range at this stage rejects the
+    /// format (diagnostics report saturation risk instead).
+    pub gating: bool,
+}
+
+/// The proof object [`analyze`] produces for an accepted format:
+/// per-joint holding-stage shifts plus every analyzed stage bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShiftSchedule {
+    /// Robot the schedule was derived for (the registry routing key —
+    /// schedules never transfer across robots).
+    pub robot: String,
+    /// [`Robot::fingerprint`] of the analyzed model: binds the schedule
+    /// to the exact inertial parameters it was proved over, so a
+    /// same-name payload variant can never run under another robot's
+    /// shifts.
+    pub fingerprint: u64,
+    /// Format the schedule proves safe.
+    pub fmt: QFormat,
+    /// Per-joint holding-stage shift `g_i`: joint `i`'s deferred
+    /// products `N_i`/`G_i` are renormalized to `frac_bits − g_i`
+    /// fractional bits (integer headroom `int_bits + g_i`), restored to
+    /// the route format by the deferred multiply with `1/D_i`. Positive
+    /// shifts buy the headroom heavy proximal joints need (the `D·IA`
+    /// overflow); **negative** shifts spend unused headroom on extra
+    /// fraction bits for light distal joints, whose tiny `D` would
+    /// otherwise round their held products to zero. Always in
+    /// `[−frac_bits, frac_bits]`.
+    pub hold_shift: Vec<i32>,
+    /// Every analyzed stage, worst joint first within each stage.
+    pub stages: Vec<StageBound>,
+}
+
+impl ShiftSchedule {
+    /// Largest holding-stage shift in the schedule.
+    pub fn max_hold_shift(&self) -> i32 {
+        self.hold_shift.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Non-gating stages whose worst-case bound exceeds the format's
+    /// representable range: the serving envelope under which this
+    /// format starts saturating (diagnostic, not a rejection).
+    pub fn saturation_risks(&self) -> Vec<&StageBound> {
+        let rail = self.fmt.max_val();
+        self.stages.iter().filter(|s| !s.gating && s.bound > rail).collect()
+    }
+}
+
+/// Why a format was rejected: the first pipeline stage whose bound
+/// exceeds what the word can represent, with the joint that attains it.
+#[derive(Debug, Clone)]
+pub struct OverflowWitness {
+    /// Robot the analysis ran for.
+    pub robot: String,
+    /// Rejected format.
+    pub fmt: QFormat,
+    /// Overflowing stage name.
+    pub stage: &'static str,
+    /// Joint attaining the overflow, when per-joint.
+    pub joint: Option<usize>,
+    /// Name of that joint's link (empty when not per-joint).
+    pub joint_name: String,
+    /// The stage's magnitude bound.
+    pub bound: f64,
+    /// What the word (plus any admissible holding shift) can represent.
+    pub limit: f64,
+}
+
+impl fmt::Display for OverflowWitness {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let at = match self.joint {
+            Some(j) => format!(" at joint {j} ({})", self.joint_name),
+            None => String::new(),
+        };
+        write!(
+            f,
+            "scaling analysis rejects {} for '{}': stage '{}'{} needs |x| <= {:.4} \
+             but the bound is {:.4}",
+            self.fmt.label(),
+            self.robot,
+            self.stage,
+            at,
+            self.limit,
+            self.bound
+        )
+    }
+}
+
+impl std::error::Error for OverflowWitness {}
+
+/// Per-robot constants the certified propagation derives once.
+struct RobotBounds {
+    /// Worst-case ‖r‖ of `X_up[i]` over the joint box.
+    t: Vec<f64>,
+    /// Λ_i: trace bound on the subtree composite spatial inertia —
+    /// dominates λ_max(IA_i), ‖U_i‖, D_i.
+    lambda: Vec<f64>,
+    /// Certified lower bound on the divider input: D_i ≥ Sᵢᵀ I_i Sᵢ.
+    d_lo: Vec<f64>,
+    /// λ_max trace bound of each link's own spatial inertia.
+    lam_own: Vec<f64>,
+    /// max(|q_min|, |q_max|) per joint.
+    q_abs: Vec<f64>,
+}
+
+fn robot_bounds(robot: &Robot) -> RobotBounds {
+    let n = robot.dof();
+    let mut t = Vec::with_capacity(n);
+    let mut d_lo = Vec::with_capacity(n);
+    let mut lam_own = Vec::with_capacity(n);
+    let mut q_abs = Vec::with_capacity(n);
+    for l in &robot.links {
+        let q_mag = l.q_min.abs().max(l.q_max.abs());
+        q_abs.push(q_mag);
+        let slide = match l.joint.jtype {
+            JointType::Prismatic => q_mag,
+            JointType::Revolute => 0.0,
+        };
+        t.push(l.x_tree.r.norm() + slide);
+        // Sᵀ I S of the link's own rigid inertia: axisᵀ Ī_o axis for a
+        // revolute joint (S = (axis, 0)), the mass for a prismatic one.
+        let own = match l.joint.jtype {
+            JointType::Revolute => l.joint.axis.dot(&l.inertia.i_o.mul_v(&l.joint.axis)),
+            JointType::Prismatic => l.inertia.mass,
+        };
+        d_lo.push(own);
+        // tr of the 6×6 spatial inertia = tr(Ī_o) + 3m bounds its λ_max.
+        let i_o = &l.inertia.i_o.0;
+        lam_own.push(i_o[0][0] + i_o[1][1] + i_o[2][2] + 3.0 * l.inertia.mass);
+    }
+    // Λ_i: for every j in subtree(i), the body-j inertia expressed at
+    // frame i has trace tr(I_com_j) + 2 m_j d² + 3 m_j with d ≤ (path
+    // translation norms) + ‖com_j‖ — rotations preserve norms, so the
+    // origin-to-CoM distance can never exceed the summed offsets.
+    let mut lambda = vec![0.0; n];
+    for i in 0..n {
+        let mut d_path = vec![f64::NAN; n];
+        d_path[i] = 0.0;
+        for j in i..n {
+            if j > i {
+                match robot.links[j].parent {
+                    Some(p) if !d_path[p].is_nan() => d_path[j] = d_path[p] + t[j],
+                    _ => continue, // not in subtree(i)
+                }
+            }
+            let ine = &robot.links[j].inertia;
+            let com = ine.com.norm();
+            let i_o = &ine.i_o.0;
+            // tr(I_com) = tr(Ī_o) − 2 m ‖com‖² (parallel axis), kept ≥ 0.
+            let tr_com = (i_o[0][0] + i_o[1][1] + i_o[2][2] - 2.0 * ine.mass * com * com).max(0.0);
+            let d = d_path[j] + com;
+            lambda[i] += tr_com + 2.0 * ine.mass * d * d + 3.0 * ine.mass;
+        }
+    }
+    RobotBounds { t, lambda, d_lo, lam_own, q_abs }
+}
+
+/// Sampled extrema of the division-deferring sweep's column stages.
+struct ProbeMax {
+    /// Deferred rows D_i·M⁻¹_row (before the divider multiply).
+    row: f64,
+    /// Per-column force accumulators F.
+    fcol: f64,
+    /// Per-joint max over the held G_i = D_i·F + U_i·row entries and
+    /// their Xᵀ-transformed updates.
+    g: Vec<f64>,
+    /// Forward acceleration responses.
+    acol: f64,
+    /// M⁻¹ entries.
+    out: f64,
+}
+
+/// Replay the f64 division-deferring M⁻¹ sweep at one state, folding
+/// per-stage magnitudes into `mx`. Mirrors
+/// [`crate::dynamics::minv::minv_dd_into`] (same recurrences, same
+/// accumulation order) with instrumentation instead of an output matrix.
+fn probe_minv_dd(robot: &Robot, topo: &Topology, q: &[f64], mx: &mut ProbeMax) {
+    let n = robot.dof();
+    let kin = Kin::positions(robot, q);
+    let mut ia: Vec<M6> = robot.links.iter().map(|l| l.inertia.to_mat6()).collect();
+    let mut u = vec![SV::ZERO; n];
+    let mut dinv = vec![0.0; n];
+    let mut f = vec![SV::ZERO; n * n];
+    let mut row = vec![0.0; n * n];
+
+    for i in (0..n).rev() {
+        let s = kin.s[i];
+        let ui = matvec6(&ia[i], &s);
+        let di = s.dot(&ui);
+        u[i] = ui;
+        dinv[i] = 1.0 / di;
+        row[i * n + i] += 1.0;
+        for &j in &topo.subcols[i] {
+            let sf = s.dot(&f[i * n + j]);
+            if sf != 0.0 {
+                row[i * n + j] -= sf;
+            }
+            mx.row = mx.row.max(row[i * n + j].abs());
+        }
+        mx.row = mx.row.max(row[i * n + i].abs());
+        if let Some(p) = robot.links[i].parent {
+            let uut = outer6(&ui, &ui);
+            let ni = sub6(&scale6(&ia[i], di), &uut);
+            let contrib = xtax(&kin.xup[i].to_mat6(), &ni);
+            for (dst, c) in ia[p].iter_mut().zip(&contrib) {
+                *dst += c * dinv[i];
+            }
+            for &j in &topo.subcols[i] {
+                let gij = f[i * n + j].scale(di) + ui.scale(row[i * n + j]);
+                let up = kin.xup[i].inv_apply_force(&gij);
+                for v in gij.to_array().iter().chain(up.to_array().iter()) {
+                    mx.g[i] = mx.g[i].max(v.abs());
+                }
+                f[p * n + j] = f[p * n + j] + up.scale(dinv[i]);
+                for v in f[p * n + j].to_array() {
+                    mx.fcol = mx.fcol.max(v.abs());
+                }
+            }
+        }
+    }
+
+    let mut a = vec![SV::ZERO; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            row[i * n + j] *= dinv[i];
+            mx.out = mx.out.max(row[i * n + j].abs());
+        }
+    }
+    for i in 0..n {
+        let s = kin.s[i];
+        match robot.links[i].parent {
+            None => {
+                for &j in &topo.brcols[i] {
+                    a[i * n + j] = s.scale(row[i * n + j]);
+                }
+            }
+            Some(p) => {
+                for &j in &topo.brcols[i] {
+                    let xa = kin.xup[i].apply(&a[p * n + j]);
+                    let corr = dinv[i] * u[i].dot(&xa);
+                    if corr != 0.0 {
+                        row[i * n + j] -= corr;
+                        mx.out = mx.out.max(row[i * n + j].abs());
+                    }
+                    a[i * n + j] = xa + s.scale(row[i * n + j]);
+                }
+            }
+        }
+        for &j in &topo.brcols[i] {
+            for v in a[i * n + j].to_array() {
+                mx.acol = mx.acol.max(v.abs());
+            }
+        }
+    }
+}
+
+/// Sample the joint-limit box: both full corners, the center, then
+/// seeded uniform interior states.
+fn sampled_extrema(robot: &Robot, cfg: &ScalingConfig) -> ProbeMax {
+    let n = robot.dof();
+    let topo = Topology::new(robot);
+    let mut mx = ProbeMax { row: 0.0, fcol: 0.0, g: vec![0.0; n], acol: 0.0, out: 0.0 };
+    let lo: Vec<f64> = robot.links.iter().map(|l| l.q_min).collect();
+    let hi: Vec<f64> = robot.links.iter().map(|l| l.q_max).collect();
+    let mid: Vec<f64> = lo.iter().zip(&hi).map(|(a, b)| 0.5 * (a + b)).collect();
+    probe_minv_dd(robot, &topo, &lo, &mut mx);
+    probe_minv_dd(robot, &topo, &hi, &mut mx);
+    probe_minv_dd(robot, &topo, &mid, &mut mx);
+    let mut rng = Rng::new(cfg.seed);
+    for _ in 0..cfg.samples.saturating_sub(3) {
+        let q: Vec<f64> = robot.links.iter().map(|l| rng.range(l.q_min, l.q_max)).collect();
+        probe_minv_dd(robot, &topo, &q, &mut mx);
+    }
+    mx
+}
+
+/// Argmax helper: (worst joint, worst bound) over a per-joint slice.
+fn worst(vals: &[f64]) -> (Option<usize>, f64) {
+    let mut j = 0;
+    let mut b = f64::NEG_INFINITY;
+    for (i, &v) in vals.iter().enumerate() {
+        if v > b {
+            b = v;
+            j = i;
+        }
+    }
+    (Some(j), b)
+}
+
+/// Analyze one (robot, format) pair over the operating box: returns the
+/// per-joint [`ShiftSchedule`] when every gating stage fits the word, or
+/// the worst [`OverflowWitness`] otherwise. Deterministic for fixed
+/// inputs (the engines and pool workers rely on recomputed schedules
+/// being identical).
+pub fn analyze(
+    robot: &Robot,
+    fmt: QFormat,
+    cfg: &ScalingConfig,
+) -> Result<ShiftSchedule, OverflowWitness> {
+    let n = robot.dof();
+    let rail = fmt.max_val();
+    let rb = robot_bounds(robot);
+    let mx = sampled_extrema(robot, cfg);
+
+    // ---- certified per-joint bounds for the deferred backward sweep.
+    let inv_hi: Vec<f64> = rb
+        .d_lo
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d } else { f64::INFINITY })
+        .collect();
+    // Holding stage: the largest quantity carried at frac−g bits is the
+    // congruence-transformed N_i ≤ (1+t)²·Λ² (certified; N PSD with
+    // λ_max ≤ D·λ_max(IA) ≤ Λ², times ‖X‖² ≤ (1+t)²), or the sampled
+    // G_i/XᵀG_i with margin.
+    let held: Vec<f64> = (0..n)
+        .map(|i| {
+            let s = 1.0 + rb.t[i];
+            (s * s * rb.lambda[i] * rb.lambda[i]).max(cfg.margin * mx.g[i])
+        })
+        .collect();
+    // Smallest shift whose reinterpreted rail `max_val·2^g` still holds
+    // the bound; negative when the bound leaves headroom to spare (light
+    // distal joints gain fraction bits instead of losing them).
+    let hold_shift: Vec<i32> = held
+        .iter()
+        .map(|&h| {
+            let g = (h / rail).log2().ceil();
+            let g = if g.is_finite() { g as i32 } else { 0 };
+            g.max(-(fmt.frac_bits as i32))
+        })
+        .collect();
+
+    // ---- certified velocity/bias diagnostics (reported, non-gating).
+    let mut vw = vec![0.0; n];
+    let mut vl = vec![0.0; n];
+    let mut aw = vec![0.0; n];
+    let mut al = vec![0.0; n];
+    let g_norm = robot.gravity.norm();
+    for i in 0..n {
+        let l = &robot.links[i];
+        let (pvw, pvl, paw, pal) = match l.parent {
+            Some(p) => (vw[p], vl[p], aw[p], al[p]),
+            None => (0.0, 0.0, 0.0, g_norm),
+        };
+        let (rev_qd, pri_qd) = match l.joint.jtype {
+            JointType::Revolute => (l.qd_max, 0.0),
+            JointType::Prismatic => (0.0, l.qd_max),
+        };
+        vw[i] = pvw + rev_qd;
+        vl[i] = pvl + rb.t[i] * pvw + pri_qd;
+        let (rev_u, pri_u) = match l.joint.jtype {
+            JointType::Revolute => (cfg.qdd_max, 0.0),
+            JointType::Prismatic => (0.0, cfg.qdd_max),
+        };
+        aw[i] = paw + rev_u + vw[i] * l.qd_max;
+        al[i] = pal + rb.t[i] * paw + pri_u + vw[i].max(vl[i]) * l.qd_max;
+    }
+    // Link forces f = I a + v ×* (I v), accumulated tip → base.
+    let mut f_acc: Vec<f64> = (0..n)
+        .map(|i| rb.lam_own[i] * (aw[i] + al[i] + (vw[i] + vl[i]) * (vw[i] + vl[i])))
+        .collect();
+    for i in (0..n).rev() {
+        if let Some(p) = robot.links[i].parent {
+            let up = (1.0 + rb.t[i]) * f_acc[i];
+            f_acc[p] += up;
+        }
+    }
+
+    // ---- stage table: gating stages first, diagnostics after.
+    let (tj, tb) = worst(&rb.t);
+    let (lj, lb) = worst(&rb.lambda);
+    let (ij, ib) = worst(&inv_hi);
+    let (qj, qb) = worst(&rb.q_abs);
+    let qd_all: Vec<f64> = robot.links.iter().map(|l| l.qd_max).collect();
+    let (dj, db) = worst(&qd_all);
+    let (hj, hb) = worst(&held);
+    let (vj, vb) = worst(&vw.iter().zip(&vl).map(|(a, b)| a.max(*b)).collect::<Vec<f64>>());
+    let (aj, ab) = worst(&aw.iter().zip(&al).map(|(a, b)| a.max(*b)).collect::<Vec<f64>>());
+    let (fj, fb) = worst(&f_acc);
+    let cert = |stage, joint, bound| StageBound { stage, joint, bound, certified: true, gating: true };
+    let samp = |stage, bound| StageBound { stage, joint: None, bound, certified: false, gating: true };
+    let diag = |stage, joint, bound| StageBound { stage, joint, bound, certified: true, gating: false };
+    let stages = vec![
+        cert("input.q", qj, qb),
+        cert("input.qd", dj, db),
+        cert("input.tau", None, cfg.tau_max),
+        cert("kin.xform", tj, tb.max(1.0)),
+        cert("kin.gravity", None, g_norm),
+        cert("minv.unit", None, 1.0),
+        cert("minv.U", lj, lb),
+        cert("minv.D", lj, lb),
+        cert("minv.Dinv", ij, ib),
+        // The holding stage gates through its shift (checked below); its
+        // bound records the worst held magnitude.
+        StageBound { stage: "minv.hold", joint: hj, bound: hb, certified: true, gating: true },
+        samp("minv.row", cfg.margin * mx.row),
+        samp("minv.F", cfg.margin * mx.fcol),
+        // Egress/forward-sweep stages carry M⁻¹-scale values that clamp
+        // at the rail EXACTLY like the rounded-f64 lane's `QFormat::q`
+        // (whose output saturates too): overflow there is a bounded,
+        // monotone distortion shared by both lanes, not recursion
+        // corruption — reported as saturation risk, never a rejection.
+        // The stages that feed the recursion (U/D/divider, holding
+        // products, deferred rows, F columns) are the gating set.
+        StageBound { stage: "minv.out", joint: None, bound: mx.out, certified: false, gating: false },
+        StageBound { stage: "minv.acol", joint: None, bound: mx.acol, certified: false, gating: false },
+        diag("rnea.v", vj, vb),
+        diag("rnea.a", aj, ab),
+        diag("rnea.f", fj, fb),
+        diag("rnea.tau", fj, fb),
+        diag("fd.rhs", fj, cfg.tau_max + fb),
+    ];
+
+    // ---- gate: pick the worst violation as the witness.
+    let mut witness: Option<OverflowWitness> = None;
+    let mut consider = |stage: &'static str, joint: Option<usize>, bound: f64, limit: f64| {
+        if bound > limit {
+            let ratio = bound / limit;
+            let cur = witness.as_ref().map(|w| w.bound / w.limit).unwrap_or(0.0);
+            if ratio > cur {
+                witness = Some(OverflowWitness {
+                    robot: robot.name.clone(),
+                    fmt,
+                    stage,
+                    joint,
+                    joint_name: joint.map(|j| robot.links[j].name.clone()).unwrap_or_default(),
+                    bound,
+                    limit,
+                });
+            }
+        }
+    };
+    for s in &stages {
+        if !s.gating || s.stage == "minv.hold" {
+            continue;
+        }
+        consider(s.stage, s.joint, s.bound, rail);
+    }
+    // Holding shifts may not eat more headroom than the format has
+    // fractional bits (g > frac would leave the held word with negative
+    // precision).
+    for (i, (&g, &h)) in hold_shift.iter().zip(&held).enumerate() {
+        if g > fmt.frac_bits as i32 {
+            let limit = rail * (2.0f64).powi(fmt.frac_bits as i32);
+            consider("minv.hold", Some(i), h, limit);
+        }
+    }
+    match witness {
+        Some(w) => Err(w),
+        None => Ok(ShiftSchedule {
+            robot: robot.name.clone(),
+            fingerprint: robot.fingerprint(),
+            fmt,
+            hold_shift,
+            stages,
+        }),
+    }
+}
+
+/// Process-wide memo of accepted default-config schedules keyed by
+/// (robot fingerprint, format): one serve startup validates a `qint`
+/// robot at registration and again in each of its four route engines —
+/// the analysis (robot bounds + ~24 sampled f64 sweeps) should run
+/// once per (robot, format), not once per route. Determinism makes the
+/// memo purely a cost optimization; the modest cap below only guards a
+/// pathological churn of distinct robots.
+fn schedule_memo() -> &'static Mutex<HashMap<(u64, u32, u32), Arc<ShiftSchedule>>> {
+    static MEMO: OnceLock<Mutex<HashMap<(u64, u32, u32), Arc<ShiftSchedule>>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+const SCHEDULE_MEMO_CAP: usize = 64;
+
+/// Registration-time gate for the `qint` serving backend: word-width
+/// checks plus [`analyze`] under the default [`ScalingConfig`],
+/// memoized per (robot fingerprint, format). The error string names
+/// the failure (width cap or overflow witness) so registries can
+/// surface it verbatim — an explicit `qint` spec must never silently
+/// degrade to the rounded-f64 lane.
+pub fn validate_int_backend(robot: &Robot, fmt: QFormat) -> Result<Arc<ShiftSchedule>, String> {
+    let w = fmt.width();
+    if !(2..=MAX_INT_WIDTH).contains(&w) {
+        return Err(format!(
+            "the integer lane carries 2..={MAX_INT_WIDTH}-bit words, got {} ({}-bit); \
+             use the rounded-f64 'quant' backend for wider formats",
+            fmt.label(),
+            w
+        ));
+    }
+    if fmt.int_bits < 2 {
+        return Err(format!(
+            "{} has {} integer bit(s); the integer lane needs a sign bit plus headroom \
+             (int_bits >= 2)",
+            fmt.label(),
+            fmt.int_bits
+        ));
+    }
+    let key = (robot.fingerprint(), fmt.int_bits, fmt.frac_bits);
+    if let Some(s) = schedule_memo().lock().unwrap().get(&key) {
+        return Ok(Arc::clone(s));
+    }
+    let sched =
+        Arc::new(analyze(robot, fmt, &ScalingConfig::default()).map_err(|e| e.to_string())?);
+    let mut memo = schedule_memo().lock().unwrap();
+    if memo.len() >= SCHEDULE_MEMO_CAP {
+        memo.clear();
+    }
+    memo.insert(key, Arc::clone(&sched));
+    Ok(sched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin;
+
+    #[test]
+    fn paper_formats_accepted_for_showcase_robots() {
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas()] {
+            for fmt in [QFormat::new(12, 12), QFormat::new(12, 14)] {
+                let sched = analyze(&robot, fmt, &ScalingConfig::default())
+                    .unwrap_or_else(|w| panic!("{} {}: {w}", robot.name, fmt.label()));
+                assert_eq!(sched.hold_shift.len(), robot.dof());
+                assert!(sched
+                    .hold_shift
+                    .iter()
+                    .all(|&g| g.unsigned_abs() <= fmt.frac_bits));
+                // Every gating stage fits the word.
+                for s in sched.stages.iter().filter(|s| s.gating && s.stage != "minv.hold") {
+                    assert!(s.bound <= fmt.max_val(), "{}: {} = {}", robot.name, s.stage, s.bound);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn holding_factors_need_real_shifts() {
+        // The whole point of the schedule: D·IA-scale products do NOT fit
+        // the paper's 24-bit words directly — some joint must hold with
+        // g > 0, and the certified Λ bound grows toward the base.
+        let robot = builtin::iiwa();
+        let sched = analyze(&robot, QFormat::new(12, 12), &ScalingConfig::default()).unwrap();
+        assert!(
+            sched.max_hold_shift() > 0,
+            "iiwa holding products fit 12 integer bits without a shift? {:?}",
+            sched.hold_shift
+        );
+        // Base joints articulate the whole arm: their shift can't be
+        // smaller than the wrist's — and the light wrist should *gain*
+        // fraction bits (negative shift), else its tiny D·IA products
+        // round to zero at the route lsb.
+        assert!(sched.hold_shift[0] >= sched.hold_shift[robot.dof() - 1]);
+        assert!(
+            sched.hold_shift[robot.dof() - 1] < 0,
+            "wrist holding shift should be negative: {:?}",
+            sched.hold_shift
+        );
+    }
+
+    #[test]
+    fn narrow_divider_word_rejected_with_witness() {
+        // Baxter's wrist roll projects ~4.5e-4 kg·m² on its own axis:
+        // 1/D exceeds 12 integer bits, so 24-bit formats must be
+        // rejected naming the divider stage and the joint.
+        let robot = builtin::baxter();
+        let w = analyze(&robot, QFormat::new(12, 12), &ScalingConfig::default())
+            .expect_err("baxter@12.12 must reject");
+        assert_eq!(w.stage, "minv.Dinv");
+        assert!(w.joint_name.contains("w2"), "worst joint: {}", w.joint_name);
+        assert!(w.bound > w.limit);
+        let msg = w.to_string();
+        assert!(msg.contains("minv.Dinv") && msg.contains("baxter") && msg.contains("24b(12.12)"));
+        // One more integer bit clears the divider: 13.13 is accepted.
+        analyze(&robot, QFormat::new(13, 13), &ScalingConfig::default())
+            .expect("baxter@13.13 fits");
+    }
+
+    #[test]
+    fn eighteen_bit_words_reject_heavy_humanoids() {
+        let atlas = builtin::atlas();
+        let w = analyze(&atlas, QFormat::new(10, 8), &ScalingConfig::default())
+            .expect_err("atlas@10.8 must reject");
+        assert_eq!(w.stage, "minv.Dinv");
+        // ... while the 7-DOF arm still fits the 18-bit DSP word.
+        analyze(&builtin::iiwa(), QFormat::new(10, 8), &ScalingConfig::default())
+            .expect("iiwa@10.8 fits");
+    }
+
+    #[test]
+    fn analysis_is_deterministic() {
+        let robot = builtin::atlas();
+        let cfg = ScalingConfig::default();
+        let a = analyze(&robot, QFormat::new(12, 14), &cfg).unwrap();
+        let b = analyze(&robot, QFormat::new(12, 14), &cfg).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validate_rejects_wide_and_degenerate_formats() {
+        let robot = builtin::iiwa();
+        let err = validate_int_backend(&robot, QFormat::new(16, 16)).unwrap_err();
+        assert!(err.contains("26"), "width cap not named: {err}");
+        let err = validate_int_backend(&robot, QFormat::new(1, 20)).unwrap_err();
+        assert!(err.contains("int_bits"), "{err}");
+        validate_int_backend(&robot, QFormat::new(12, 14)).expect("accepted");
+    }
+
+    #[test]
+    fn velocity_diagnostics_are_reported_not_gating() {
+        // Atlas at 12 m/s joint speed has worst-case Coriolis torques far
+        // over any 12-integer-bit rail — the analysis must report that as
+        // saturation risk, not reject the format.
+        let robot = builtin::atlas();
+        let sched = analyze(&robot, QFormat::new(12, 14), &ScalingConfig::default()).unwrap();
+        let risks = sched.saturation_risks();
+        assert!(
+            risks.iter().any(|s| s.stage.starts_with("rnea.")),
+            "expected velocity-box saturation diagnostics, got {risks:?}"
+        );
+    }
+}

@@ -8,6 +8,12 @@
 //!   batched interface evaluated through `quant::qrbd` at a per-robot
 //!   `QFormat`, so precision (and, on the accelerator, DSP cost) is a
 //!   per-robot serving knob.
+//! * [`qint`] — the true-integer `i64` lane as a serving backend: the
+//!   same interface through `quant::qint`'s scaled-once constants and
+//!   integer inner loops, with FD/M⁻¹ on the division-deferring sweeps
+//!   under a shift schedule proved at construction by the fixed-point
+//!   scaling analysis (`quant::scaling`). Construction fails with the
+//!   overflow witness instead of degrading to the rounded lane.
 //! * [`engine`] (feature `pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (produced once by `python/compile/aot.py`) and execute them through
 //!   PJRT. Python is never on this path — the artifacts are
@@ -25,6 +31,7 @@
 pub mod artifact;
 pub mod engine;
 pub mod native;
+pub mod qint;
 pub mod quantized;
 
 use crate::model::Robot;
@@ -34,10 +41,12 @@ pub use artifact::{scan_artifacts, ArtifactFn, ArtifactMeta};
 pub use engine::Engine;
 pub use engine::EngineError;
 pub use native::NativeEngine;
+pub use qint::QIntEngine;
 pub use quantized::QuantEngine;
 
 /// Uniform interface over the batched CPU execution backends (f64
-/// [`NativeEngine`] and fixed-point [`QuantEngine`]). The coordinator
+/// [`NativeEngine`], rounded fixed-point [`QuantEngine`], and the
+/// true-integer [`QIntEngine`]). The coordinator
 /// drives one boxed engine per worker thread; both entry points use the
 /// flat-f32 wire layout so backends are interchangeable per route.
 pub trait DynamicsEngine: Send {

@@ -1,0 +1,420 @@
+//! True-integer fixed-point CPU engine: the `qint` serving backend.
+//!
+//! Same flat-f32 batched interface as [`super::NativeEngine`] /
+//! [`super::QuantEngine`], but every evaluation runs the `i64` lane of
+//! [`crate::quant::qint`]: constants scaled once on ingest, integer
+//! multiply + shift-renormalize inner loops, one dequantization on
+//! egress. FD and M⁻¹ run the **division-deferring** sweeps under the
+//! [`ShiftSchedule`] proved at engine construction by the fixed-point
+//! scaling analysis ([`crate::quant::scaling`]); RNEA runs the plain
+//! integer sweeps (no divider on that path).
+//!
+//! Construction is fallible by design: [`QIntEngine::new`] returns the
+//! scaling analysis' [`crate::quant::scaling::OverflowWitness`] (or the
+//! word-width cap) as an [`EngineError`] instead of silently degrading
+//! to the rounded-f64 lane — an explicit `qint` registration either
+//! serves integer kernels or fails naming the overflowing stage.
+//!
+//! With parallelism, batches fan out across the global [`WorkerPool`]
+//! zero-copy ([`WorkerPool::eval_flat_int`]); the engine's schedule
+//! travels with each job (shared `Arc`), so pooled execution is
+//! **bitwise identical** to serial (`tests/parallel_qint.rs`).
+//! Trajectory rollouts integrate q̈ from the deferred integer FD with
+//! the same semi-implicit update as the f64 integrator — integer
+//! accelerator in the loop, float state, matching the ICMS operating
+//! model.
+
+use super::artifact::ArtifactFn;
+use super::engine::EngineError;
+use super::native::{decode, encode, validate_batch, validate_rollout, PAR_MIN_ROWS};
+use super::DynamicsEngine;
+use crate::dynamics::{BatchKernel, WorkerPool};
+use crate::model::{Robot, State};
+use crate::quant::scaling::{self, ShiftSchedule};
+use crate::quant::{QFormat, QuantIntScratch};
+use crate::sim::integrate::semi_implicit_update;
+use crate::spatial::DMat;
+use std::sync::Arc;
+
+/// Batched integer fixed-point executor for one (robot, function,
+/// batch, format) route.
+pub struct QIntEngine {
+    /// The robot this engine serves (shared with pool jobs, so the
+    /// workers' `Arc::ptr_eq` cache fast path hits on every batch).
+    pub robot: Arc<Robot>,
+    /// The RBD function this route evaluates.
+    pub function: ArtifactFn,
+    /// Maximum tasks per executed batch.
+    pub batch: usize,
+    /// The fixed-point format the integer lane carries.
+    pub fmt: QFormat,
+    /// The shift schedule proved at construction (shared with pool
+    /// jobs so pooled sweeps hold with identical per-joint shifts).
+    sched: Arc<ShiftSchedule>,
+    n: usize,
+    /// Max chunks a batch may split into on the global worker pool
+    /// (1 = serial execution on the calling thread).
+    par_chunks: usize,
+    ws: QuantIntScratch,
+    // Per-task f64 staging buffers (decoded from the flat f32 operands).
+    q: Vec<f64>,
+    qd: Vec<f64>,
+    u: Vec<f64>,
+    out_vec: Vec<f64>,
+    out_mat: DMat,
+}
+
+impl QIntEngine {
+    /// Build a serial engine for one robot, function, and format. Runs
+    /// the fixed-point scaling analysis; `Err` carries the word-width
+    /// cap or the overflow witness naming the rejecting stage.
+    pub fn new(
+        robot: Robot,
+        function: ArtifactFn,
+        batch: usize,
+        fmt: QFormat,
+    ) -> Result<QIntEngine, EngineError> {
+        QIntEngine::with_parallelism(robot, function, batch, fmt, 1)
+    }
+
+    /// As [`QIntEngine::new`], but batches of at least [`PAR_MIN_ROWS`]
+    /// rows split into up to `parallel` contiguous chunks on the global
+    /// [`WorkerPool`] (`0` = one chunk per pool worker, `1` = serial),
+    /// bitwise identical to serial execution.
+    pub fn with_parallelism(
+        robot: Robot,
+        function: ArtifactFn,
+        batch: usize,
+        fmt: QFormat,
+        parallel: usize,
+    ) -> Result<QIntEngine, EngineError> {
+        let n = robot.dof();
+        assert!(batch > 0, "batch must be positive");
+        // Memoized per (robot fingerprint, format): the registry's four
+        // routes share one analysis run instead of recomputing it.
+        let sched = scaling::validate_int_backend(&robot, fmt).map_err(EngineError)?;
+        let par_chunks = match parallel {
+            1 => 1,
+            0 => WorkerPool::global().threads(),
+            p => p.min(WorkerPool::global().threads()),
+        };
+        Ok(QIntEngine {
+            ws: QuantIntScratch::new(n),
+            q: vec![0.0; n],
+            qd: vec![0.0; n],
+            u: vec![0.0; n],
+            out_vec: vec![0.0; n],
+            out_mat: DMat::zeros(n, n),
+            robot: Arc::new(robot),
+            function,
+            batch,
+            fmt,
+            sched,
+            n,
+            par_chunks,
+        })
+    }
+
+    /// Max pool chunks a batch may split into (1 = serial).
+    pub fn parallelism(&self) -> usize {
+        self.par_chunks
+    }
+
+    /// The shift schedule this engine's deferred sweeps run under.
+    pub fn schedule(&self) -> &ShiftSchedule {
+        &self.sched
+    }
+
+    /// Robot DOF (the per-operand row length).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Flat output length for a full batch (`batch ·` the per-task size
+    /// defined once by [`DynamicsEngine::out_per_task`]).
+    pub fn expected_output_len(&self) -> usize {
+        self.batch * DynamicsEngine::out_per_task(self)
+    }
+
+    /// Execute one batch through the integer kernels. Same contract as
+    /// [`super::NativeEngine::run`]: `arity` flat f32 operands,
+    /// row-major (B, N), any B ≤ `batch`.
+    pub fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        let b = validate_batch(inputs, self.function.arity(), n, self.batch)?;
+        let per_task = DynamicsEngine::out_per_task(self);
+        let mut out = vec![0.0f32; b * per_task];
+        if self.par_chunks > 1 && b >= PAR_MIN_ROWS {
+            let kernel = match self.function {
+                ArtifactFn::Rnea => BatchKernel::Rnea,
+                ArtifactFn::Fd => BatchKernel::Fd,
+                ArtifactFn::Minv => BatchKernel::Minv,
+            };
+            // M⁻¹ is unary; hand the pool `q` for the unused operands.
+            let (qd, u) = match self.function {
+                ArtifactFn::Minv => (&inputs[0], &inputs[0]),
+                _ => (&inputs[1], &inputs[2]),
+            };
+            WorkerPool::global().eval_flat_int(
+                &self.robot,
+                kernel,
+                self.fmt,
+                &self.sched,
+                &inputs[0],
+                qd,
+                u,
+                n,
+                per_task,
+                &mut out,
+                self.par_chunks,
+            );
+            return Ok(out);
+        }
+        for k in 0..b {
+            let span = k * n..(k + 1) * n;
+            match self.function {
+                ArtifactFn::Rnea => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.rnea_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        self.fmt,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Fd => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span.clone()], &mut self.u);
+                    self.ws.fd_dd_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        &self.sched,
+                        &mut self.out_vec,
+                    );
+                    encode(&self.out_vec, &mut out[span]);
+                }
+                ArtifactFn::Minv => {
+                    decode(&inputs[0][span], &mut self.q);
+                    self.ws.minv_dd_into(&self.robot, &self.q, &self.sched, &mut self.out_mat);
+                    encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Unroll one trajectory request: q̈ from the deferred integer FD
+    /// each step, state advanced with the same semi-implicit update as
+    /// the f64 integrator. Response layout matches
+    /// [`super::NativeEngine::rollout`]: `2·H·N` f32 — H q-rows then H
+    /// q̇-rows.
+    pub fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        decode(q0, &mut self.q);
+        decode(qd0, &mut self.qd);
+        let mut state =
+            State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
+        let mut out = vec![0.0f32; 2 * h * n];
+        for t in 0..h {
+            decode(&tau[t * n..(t + 1) * n], &mut self.u);
+            self.ws.fd_dd_into(
+                &self.robot,
+                &state.q,
+                &state.qd,
+                &self.u,
+                &self.sched,
+                &mut self.out_vec,
+            );
+            semi_implicit_update(&mut state, &self.out_vec, dt);
+            encode(&state.q, &mut out[t * n..(t + 1) * n]);
+            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+        }
+        self.q = state.q;
+        self.qd = state.qd;
+        Ok(out)
+    }
+}
+
+impl DynamicsEngine for QIntEngine {
+    fn robot(&self) -> &Robot {
+        &self.robot
+    }
+    fn function(&self) -> ArtifactFn {
+        self.function
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        QIntEngine::run(self, inputs)
+    }
+    fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        QIntEngine::rollout(self, q0, qd0, tau, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin_robot;
+    use crate::quant::qint::{quant_fd_dd_i64, quant_minv_dd_i64, quant_rnea_i64};
+    use crate::util::rng::Rng;
+
+    fn f32_round(v: &[f64]) -> Vec<f64> {
+        v.iter().map(|&x| x as f32 as f64).collect()
+    }
+
+    #[test]
+    fn qint_engine_matches_allocating_kernels() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 14);
+        let b = 5;
+        let mut rng = Rng::new(720);
+        let mut q = Vec::new();
+        let mut qd = Vec::new();
+        let mut u = Vec::new();
+        let mut cases = Vec::new();
+        for _ in 0..b {
+            let s = State::random(&robot, &mut rng);
+            let uu = rng.vec_range(n, -6.0, 6.0);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            qd.extend(s.qd.iter().map(|&x| x as f32));
+            u.extend(uu.iter().map(|&x| x as f32));
+            cases.push((s, uu));
+        }
+        let inputs = vec![q, qd, u];
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            let mut eng = QIntEngine::new(robot.clone(), function, b, fmt).expect("accepted");
+            let sched = eng.schedule().clone();
+            let ins = match function {
+                ArtifactFn::Minv => inputs[..1].to_vec(),
+                _ => inputs.clone(),
+            };
+            let out = eng.run(&ins).expect("run");
+            for (k, (s, uu)) in cases.iter().enumerate() {
+                let qr = f32_round(&s.q);
+                let qdr = f32_round(&s.qd);
+                let ur = f32_round(uu);
+                match function {
+                    ArtifactFn::Rnea => {
+                        let want = quant_rnea_i64(&robot, &qr, &qdr, &ur, fmt);
+                        for i in 0..n {
+                            assert_eq!(out[k * n + i], want[i] as f32, "rnea task {k} joint {i}");
+                        }
+                    }
+                    ArtifactFn::Fd => {
+                        let want = quant_fd_dd_i64(&robot, &qr, &qdr, &ur, &sched);
+                        for i in 0..n {
+                            assert_eq!(out[k * n + i], want[i] as f32, "fd task {k} joint {i}");
+                        }
+                    }
+                    ArtifactFn::Minv => {
+                        let want = quant_minv_dd_i64(&robot, &qr, &sched);
+                        for i in 0..n {
+                            for j in 0..n {
+                                assert_eq!(
+                                    out[k * n * n + i * n + j],
+                                    want[(i, j)] as f32,
+                                    "minv task {k} [{i}][{j}]"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Construction surfaces the analysis verdict instead of falling
+    /// back: wide words name the cap, range rejections name the stage.
+    #[test]
+    fn constructor_rejects_with_witness() {
+        let baxter = builtin_robot("baxter").unwrap();
+        let err = QIntEngine::new(baxter, ArtifactFn::Fd, 8, QFormat::new(12, 12))
+            .err()
+            .expect("baxter@12.12 must reject");
+        assert!(err.0.contains("minv.Dinv"), "witness not surfaced: {}", err.0);
+        let iiwa = builtin_robot("iiwa").unwrap();
+        let err = QIntEngine::new(iiwa.clone(), ArtifactFn::Fd, 8, QFormat::new(16, 16))
+            .err()
+            .expect("32-bit words must reject");
+        assert!(err.0.contains("26"), "width cap not named: {}", err.0);
+        QIntEngine::new(iiwa, ArtifactFn::Fd, 8, QFormat::new(12, 12)).expect("iiwa fits");
+    }
+
+    #[test]
+    fn qint_engine_validates_like_native() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut eng =
+            QIntEngine::new(robot, ArtifactFn::Rnea, 4, QFormat::new(12, 12)).expect("engine");
+        assert!(eng.run(&[vec![0.0; 28]]).is_err());
+        assert!(eng.run(&[vec![0.0; 10], vec![0.0; 10], vec![0.0; 10]]).is_err());
+        assert!(eng
+            .rollout(&vec![0.0; n], &vec![0.0; n], &vec![0.0; n], -1.0)
+            .is_err());
+    }
+
+    /// Rollouts route through the integer step path: every step matches
+    /// the deferred integer FD + semi-implicit update replayed by hand,
+    /// and two engines over the same request agree bitwise.
+    #[test]
+    fn qint_rollout_steps_through_the_integer_lane() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 14);
+        let mut rng = Rng::new(721);
+        let s0 = State::random(&robot, &mut rng);
+        let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+        let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+        let h = 6;
+        let tau: Vec<f32> =
+            rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect();
+        let dt = 1e-3;
+        let mut eng = QIntEngine::new(robot.clone(), ArtifactFn::Fd, 4, fmt).expect("engine");
+        let sched = eng.schedule().clone();
+        let got = eng.rollout(&q0, &qd0, &tau, dt).expect("rollout");
+        assert_eq!(got.len(), 2 * h * n);
+        // Replay by hand through the allocating deferred-FD wrapper.
+        let mut state = State {
+            q: q0.iter().map(|&x| x as f64).collect(),
+            qd: qd0.iter().map(|&x| x as f64).collect(),
+        };
+        for t in 0..h {
+            let ut: Vec<f64> = tau[t * n..(t + 1) * n].iter().map(|&x| x as f64).collect();
+            let qdd = quant_fd_dd_i64(&robot, &state.q, &state.qd, &ut, &sched);
+            semi_implicit_update(&mut state, &qdd, dt);
+            for i in 0..n {
+                assert_eq!(got[t * n + i], state.q[i] as f32, "step {t} q[{i}]");
+                assert_eq!(got[(h + t) * n + i], state.qd[i] as f32, "step {t} qd[{i}]");
+            }
+        }
+        let mut eng2 = QIntEngine::new(robot, ArtifactFn::Fd, 4, fmt).expect("engine");
+        assert_eq!(eng2.rollout(&q0, &qd0, &tau, dt).expect("rollout"), got);
+    }
+}

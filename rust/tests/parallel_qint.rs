@@ -1,0 +1,247 @@
+//! Parallel-integer equivalence: a `qint` route (or engine) whose
+//! batches fan out across the engine-generic worker pool must answer
+//! **bitwise identically** to serial execution. The pool workers run
+//! the exact decode→`QuantIntScratch`→encode loop of the serial
+//! `QIntEngine`, one cached per-(structure, format) integer scratch per
+//! worker, and every pooled job carries the engine's `Arc<ShiftSchedule>`
+//! so the division-deferring sweeps hold with identical per-joint
+//! shifts. Covers the engine-level fan-out for every RBD function,
+//! full/partial batches, a mixed f64 + quant + qint registry under
+//! concurrent load, trajectory rollouts through the integer lane, and
+//! the loud-failure path for rejected formats.
+
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry, TrajRequest};
+use draco::model::{builtin_robot, Robot, State};
+use draco::quant::QFormat;
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::QIntEngine;
+use draco::util::rng::Rng;
+
+/// Flat row-major (b, n) f32 operands for `function`.
+fn flat_inputs(robot: &Robot, function: ArtifactFn, b: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = robot.dof();
+    let mut rng = Rng::new(seed);
+    let mut q = Vec::with_capacity(b * n);
+    let mut qd = Vec::with_capacity(b * n);
+    let mut u = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let s = State::random(robot, &mut rng);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+    }
+    match function {
+        ArtifactFn::Minv => vec![q],
+        _ => vec![q, qd, u],
+    }
+}
+
+/// Engine level: the pooled fan-out inside `QIntEngine::run` is bitwise
+/// equal to the serial engine for every function, across full and
+/// partial batches, odd chunk counts, and two formats.
+#[test]
+fn parallel_qint_engine_matches_serial_bitwise() {
+    for (name, fmt) in [("iiwa", QFormat::new(12, 14)), ("hyq", QFormat::new(12, 12))] {
+        let robot = builtin_robot(name).unwrap();
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            let mut serial =
+                QIntEngine::new(robot.clone(), function, 64, fmt).expect("accepted format");
+            let cases: Vec<(Vec<Vec<f32>>, Vec<f32>)> = [2usize, 5, 16, 64]
+                .into_iter()
+                .map(|b| {
+                    let inputs = flat_inputs(&robot, function, b, 11_000 + b as u64);
+                    let want = serial.run(&inputs).expect("serial run");
+                    (inputs, want)
+                })
+                .collect();
+            for parallel in [2usize, 3, 8, 0] {
+                let mut par =
+                    QIntEngine::with_parallelism(robot.clone(), function, 64, fmt, parallel)
+                        .expect("accepted format");
+                for (inputs, want) in &cases {
+                    let got = par.run(inputs).expect("parallel run");
+                    assert_eq!(
+                        want,
+                        &got,
+                        "{name}/{} fmt={} rows={} parallel={parallel}",
+                        function.name(),
+                        fmt.label(),
+                        inputs[0].len() / robot.dof()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Coordinator level: the same request stream through a serial registry
+/// and a pooled registry — a mixed f64 + quant + qint deployment with
+/// the quant and qint robots at the SAME format, so pool workers must
+/// keep the two lanes' scratches apart — produces bitwise-identical
+/// responses under load.
+#[test]
+fn parallel_qint_route_matches_serial_route_bitwise() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+    let atlas = builtin_robot("atlas").unwrap();
+    let fmt = QFormat::new(12, 14);
+
+    let build = |parallel: usize| {
+        let mut reg = RobotRegistry::new();
+        reg.register_parallel(iiwa.clone(), BackendKind::Native, 16, parallel)
+            .register_parallel(hyq.clone(), BackendKind::NativeQuant(fmt), 16, parallel)
+            .register_parallel(atlas.clone(), BackendKind::NativeInt(fmt), 16, parallel);
+        reg.validate().expect("int entries accepted");
+        Coordinator::start_registry(&reg, 20_000)
+    };
+    let serial = build(1);
+    let pooled = build(0); // one chunk per pool worker
+
+    for (robot, base_seed) in [(&hyq, 700u64), (&atlas, 800)] {
+        for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            for (burst, seed_off) in [(16usize, 0u64), (5, 1), (1, 2)] {
+                let n = robot.dof();
+                let per_task: Vec<Vec<Vec<f32>>> = (0..burst)
+                    .map(|k| flat_inputs(robot, function, 1, base_seed + 10 * seed_off + k as u64))
+                    .collect();
+                let answers = |coord: &Coordinator| -> Vec<Vec<f32>> {
+                    let rxs: Vec<_> = per_task
+                        .iter()
+                        .map(|ops| coord.submit_to(&robot.name, function, ops.clone()))
+                        .collect();
+                    rxs.into_iter()
+                        .map(|rx| rx.recv().expect("answer").expect("ok"))
+                        .collect()
+                };
+                let want = answers(&serial);
+                let got = answers(&pooled);
+                assert_eq!(want.len(), got.len());
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    let expect_len = match function {
+                        ArtifactFn::Minv => n * n,
+                        _ => n,
+                    };
+                    assert_eq!(a.len(), expect_len);
+                    assert_eq!(
+                        a,
+                        b,
+                        "{}/{} burst={burst} task {k} diverged",
+                        robot.name,
+                        function.name()
+                    );
+                }
+            }
+        }
+    }
+    serial.shutdown();
+    pooled.shutdown();
+}
+
+/// Trajectory requests on a qint robot step through the integer lane:
+/// the route's response equals a standalone `QIntEngine` rollout
+/// bitwise (same deferred FD, same schedule, same integrator).
+#[test]
+fn qint_trajectory_route_rolls_through_the_integer_lane() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let fmt = QFormat::new(12, 14);
+    let mut reg = RobotRegistry::new();
+    reg.register(robot.clone(), BackendKind::NativeInt(fmt), 8);
+    let coord = Coordinator::start_registry(&reg, 100);
+
+    let mut rng = Rng::new(12_345);
+    let s0 = State::random(&robot, &mut rng);
+    let h = 12;
+    let req = TrajRequest {
+        q0: s0.q.iter().map(|&x| x as f32).collect(),
+        qd0: s0.qd.iter().map(|&x| x as f32).collect(),
+        tau: rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect(),
+        dt: 1e-3,
+    };
+    let out = coord
+        .submit_traj("iiwa", req.clone())
+        .recv()
+        .expect("answer")
+        .expect("rollout ok");
+    assert_eq!(out.len(), 2 * h * n);
+    assert!(out.iter().all(|x| x.is_finite()));
+
+    let mut reference =
+        QIntEngine::new(robot.clone(), ArtifactFn::Fd, 8, fmt).expect("accepted format");
+    let want = reference.rollout(&req.q0, &req.qd0, &req.tau, req.dt).expect("reference rollout");
+    assert_eq!(out, want, "trajectory route bypassed the integer lane");
+    coord.shutdown();
+}
+
+/// A registry-validated qint robot serves real traffic next to other
+/// lanes, and its step answers match the serial reference engine even
+/// under concurrent clients (no cross-lane scratch aliasing).
+#[test]
+fn mixed_lane_registry_under_load_matches_reference_engines() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+    let fmt = QFormat::new(12, 12);
+    let mut reg = RobotRegistry::new();
+    reg.register_parallel(iiwa.clone(), BackendKind::NativeQuant(fmt), 8, 0)
+        .register_parallel(hyq.clone(), BackendKind::NativeInt(fmt), 8, 0);
+    reg.validate().expect("int entry accepted");
+    let coord = std::sync::Arc::new(Coordinator::start_registry(&reg, 150));
+
+    let spawn = |coord: std::sync::Arc<Coordinator>, robot: Robot, seed: u64| {
+        std::thread::spawn(move || {
+            let reqs: Vec<Vec<Vec<f32>>> = (0..24)
+                .map(|k| flat_inputs(&robot, ArtifactFn::Fd, 1, seed + k))
+                .collect();
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|ops| coord.submit_to(&robot.name, ArtifactFn::Fd, ops.clone()))
+                .collect();
+            let outs: Vec<Vec<f32>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("answer").expect("ok"))
+                .collect();
+            (reqs, outs)
+        })
+    };
+    let h_iiwa = spawn(std::sync::Arc::clone(&coord), iiwa.clone(), 900);
+    let h_hyq = spawn(std::sync::Arc::clone(&coord), hyq.clone(), 1000);
+
+    let (reqs, outs) = h_iiwa.join().expect("iiwa client");
+    let mut iiwa_ref = draco::runtime::QuantEngine::new(iiwa.clone(), ArtifactFn::Fd, 1, fmt);
+    for (ops, out) in reqs.iter().zip(&outs) {
+        assert_eq!(&iiwa_ref.run(ops).expect("ref"), out, "iiwa quant diverged");
+    }
+    let (reqs, outs) = h_hyq.join().expect("hyq client");
+    let mut hyq_ref =
+        QIntEngine::new(hyq.clone(), ArtifactFn::Fd, 1, fmt).expect("accepted format");
+    for (ops, out) in reqs.iter().zip(&outs) {
+        assert_eq!(&hyq_ref.run(ops).expect("ref"), out, "hyq qint diverged");
+    }
+    if let Ok(coord) = std::sync::Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+/// A spec the scaling analysis rejects fails registration with the
+/// witness; forcing the same pair past the registry (programmatic
+/// registration without `validate()`) fails every request loudly —
+/// requests are never silently served by the rounded-f64 lane.
+#[test]
+fn rejected_qint_routes_fail_loudly_not_silently() {
+    let err = RobotRegistry::from_cli_spec("baxter:qint@12.12", 8).unwrap_err();
+    assert!(err.contains("minv.Dinv"), "witness missing from registration error: {err}");
+
+    let baxter = builtin_robot("baxter").unwrap();
+    let n = baxter.dof();
+    let mut reg = RobotRegistry::new();
+    reg.register(baxter, BackendKind::NativeInt(QFormat::new(12, 12)), 8);
+    assert!(reg.validate().is_err());
+    // Start it anyway: the route must answer with the witness, not with
+    // rounded-f64 numbers.
+    let coord = Coordinator::start_registry(&reg, 100);
+    let ops = vec![vec![0.1f32; n], vec![0.0; n], vec![0.0; n]];
+    let res = coord.submit_to("baxter", ArtifactFn::Fd, ops).recv().expect("answer");
+    let err = res.expect_err("rejected format must not serve");
+    assert!(err.contains("minv.Dinv"), "route error lost the witness: {err}");
+    coord.shutdown();
+}

@@ -52,9 +52,12 @@ if [ "$1" = "--check" ]; then
         "iiwa|fd_quant64_ws" \
         "iiwa|fd_quant_int64" \
         "iiwa|minv_quant_int64" \
+        "iiwa|minv_qint_deferred64" \
+        "iiwa|fd_qint_srv64" \
         "iiwa|fd_pool64" \
         "iiwa|serve_fd_par64" \
         "iiwa|serve_fd_quant_par64" \
+        "iiwa|serve_fd_qint_par64" \
         "mixed|serve_fd_mixed64"; do
         if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
             echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
