@@ -43,4 +43,14 @@ cargo bench --bench hotpath_cpu -- --quick
 echo "== bench schema check (bench_diff --check) =="
 bash ../scripts/bench_diff.sh --check BENCH_hotpath.json
 
+echo "== overload smoke: loadgen --smoke =="
+# Short open-loop ramp against a capacity-pinned route; asserts the
+# overload invariants (no expired job executed, monotone shedding,
+# Control-p99 bound, breaker trip/half-open/recover) and rewrites
+# BENCH_serve.json, whose schema the next step validates.
+cargo run --release --quiet -- loadgen --smoke
+
+echo "== serve bench schema check (bench_diff --check) =="
+bash ../scripts/bench_diff.sh --check BENCH_serve.json
+
 echo "CI OK"

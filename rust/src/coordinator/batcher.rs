@@ -8,20 +8,31 @@
 //! engine, the rounded fixed-point engine at a per-robot `QFormat`, the
 //! true-integer `i64` engine under a proved shift schedule, a
 //! trajectory-rollout route driven through the workspace integrator
-//! (on the robot's serving lane — see [`TrajLane`]), or (behind the
-//! `pjrt` feature) a compiled PJRT artifact. The batching loop is
-//! identical either way.
+//! (on the robot's serving lane — see [`TrajLane`]), a fault-injection
+//! chaos route, or (behind the `pjrt` feature) a compiled PJRT artifact.
+//! The batching loop is identical either way.
+//!
+//! Overload behaviour is governed by the QoS layer (see
+//! [`super::qos`]): jobs carry a priority class and an optional
+//! deadline, admission is bounded per (route, class), batch formation
+//! drains `Control` before `Interactive` before `Bulk` and drops
+//! expired jobs unexecuted, and a panicking engine evaluation is caught
+//! at the batch boundary and counted toward the route's circuit
+//! breaker.
 
+use super::qos::{QosClass, QosPolicy, RouteGate, ServeError, SubmitOptions};
 use super::registry::RobotRegistry;
-use super::stats::{ServeStats, StatsInner};
+use super::stats::{lock_stats, ServeStats, StatsInner};
+use crate::dynamics::pool::panic_message;
 use crate::model::Robot;
 use crate::quant::QFormat;
 #[cfg(feature = "pjrt")]
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::artifact::ArtifactFn;
-use crate::runtime::{DynamicsEngine, NativeEngine, QIntEngine, QuantEngine};
-use std::collections::BTreeMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::runtime::{ChaosEngine, DynamicsEngine, NativeEngine, QIntEngine, QuantEngine};
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -52,14 +63,31 @@ pub enum JobPayload {
 pub struct Job {
     /// The request body.
     pub payload: JobPayload,
-    /// When the request entered the coordinator (for latency stats).
+    /// Priority class (decides the draining lane).
+    pub class: QosClass,
+    /// Optional deadline relative to `enqueued` [µs]; a job still queued
+    /// past it is dropped at batch formation — never executed.
+    pub deadline_us: Option<u64>,
+    /// When the request entered the coordinator (for latency stats and
+    /// deadline accounting).
     pub enqueued: Instant,
     /// Channel the flat f32 result (or error) is sent back on.
     pub resp: Sender<JobResult>,
 }
 
-/// Per-task result: the flat f32 output slice for this task.
-pub type JobResult = Result<Vec<f32>, String>;
+impl Job {
+    /// `Some(waited_us)` when the job's deadline has passed.
+    fn expired(&self) -> Option<u64> {
+        let deadline = self.deadline_us?;
+        let waited = self.enqueued.elapsed().as_micros() as u64;
+        (waited >= deadline).then_some(waited)
+    }
+}
+
+/// Per-task result: the flat f32 output slice for this task, or a
+/// structured [`ServeError`] naming why it was refused / dropped /
+/// failed.
+pub type JobResult = Result<Vec<f32>, ServeError>;
 
 enum Msg {
     Work(Job),
@@ -88,7 +116,9 @@ pub enum TrajLane {
     Int(QFormat),
 }
 
-/// How one route executes its batches.
+/// How one route executes its batches. Every variant names the default
+/// [`QosClass`] of jobs submitted to the route without a per-request
+/// override (`SubmitOptions::class`).
 pub enum BackendSpec {
     /// Native f64 workspace engine: no artifacts, no external toolchain.
     Native {
@@ -102,6 +132,8 @@ pub enum BackendSpec {
         /// worker pool (`0` = one per pool worker, `1` = serial).
         /// Pooled execution is bitwise identical to serial.
         parallel: usize,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
     },
     /// Quantized fixed-point engine (`quant::qrbd` kernels) at a
     /// per-robot format — precision as a serving knob.
@@ -122,6 +154,8 @@ pub enum BackendSpec {
         /// Opt-in M⁻¹ error compensation (fitted at route startup,
         /// applied on the M⁻¹ route; other functions ignore it).
         comp: bool,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
     },
     /// True-integer `i64` engine (`quant::qint` kernels; FD/M⁻¹ on the
     /// division-deferring sweeps under a proved shift schedule). The
@@ -143,6 +177,8 @@ pub enum BackendSpec {
         /// worker pool (`0` = one per pool worker, `1` = serial) —
         /// pooled execution is bitwise identical to serial.
         parallel: usize,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
     },
     /// Trajectory-rollout route: FD + semi-implicit Euler unrolled
     /// server-side on the robot's serving lane.
@@ -153,10 +189,36 @@ pub enum BackendSpec {
         batch: usize,
         /// Which datapath computes q̈ each step.
         lane: TrajLane,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
+    },
+    /// Fault-injection route for robustness tests and the loadgen
+    /// harness: the native f64 engine wrapped in [`ChaosEngine`]. An
+    /// infinite value in the first operand triggers an engine panic
+    /// (exercising the batch-boundary catch and circuit breaker); a
+    /// nonzero `delay_us` throttles every execution, pinning the
+    /// route's capacity at ~`batch / delay_us` tasks/µs so overload
+    /// scenarios are deterministic.
+    Chaos {
+        /// Robot served by this route.
+        robot: Robot,
+        /// RBD function this route evaluates.
+        function: ArtifactFn,
+        /// Batch size (requests coalesced per execution).
+        batch: usize,
+        /// Artificial per-execution delay [µs] (`0` = none).
+        delay_us: u64,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
     },
     /// Compiled PJRT artifact (requires the `pjrt` feature + artifacts).
     #[cfg(feature = "pjrt")]
-    Pjrt(ArtifactMeta),
+    Pjrt {
+        /// The compiled artifact this route loads.
+        meta: ArtifactMeta,
+        /// Default QoS class for this route's jobs.
+        class: QosClass,
+    },
 }
 
 impl BackendSpec {
@@ -166,9 +228,10 @@ impl BackendSpec {
             BackendSpec::Native { robot, .. }
             | BackendSpec::NativeQuant { robot, .. }
             | BackendSpec::NativeInt { robot, .. }
-            | BackendSpec::Trajectory { robot, .. } => &robot.name,
+            | BackendSpec::Trajectory { robot, .. }
+            | BackendSpec::Chaos { robot, .. } => &robot.name,
             #[cfg(feature = "pjrt")]
-            BackendSpec::Pjrt(meta) => &meta.robot,
+            BackendSpec::Pjrt { meta, .. } => &meta.robot,
         }
     }
 
@@ -177,10 +240,37 @@ impl BackendSpec {
         match self {
             BackendSpec::Native { function, .. }
             | BackendSpec::NativeQuant { function, .. }
-            | BackendSpec::NativeInt { function, .. } => Route::Step(*function),
+            | BackendSpec::NativeInt { function, .. }
+            | BackendSpec::Chaos { function, .. } => Route::Step(*function),
             BackendSpec::Trajectory { .. } => Route::Traj,
             #[cfg(feature = "pjrt")]
-            BackendSpec::Pjrt(meta) => Route::Step(meta.function),
+            BackendSpec::Pjrt { meta, .. } => Route::Step(meta.function),
+        }
+    }
+
+    /// Default QoS class of jobs on this route.
+    pub fn class(&self) -> QosClass {
+        match self {
+            BackendSpec::Native { class, .. }
+            | BackendSpec::NativeQuant { class, .. }
+            | BackendSpec::NativeInt { class, .. }
+            | BackendSpec::Trajectory { class, .. }
+            | BackendSpec::Chaos { class, .. } => *class,
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { class, .. } => *class,
+        }
+    }
+
+    /// Batch size of this route (the retry-hint quantum of its gate).
+    fn batch_size(&self) -> usize {
+        match self {
+            BackendSpec::Native { batch, .. }
+            | BackendSpec::NativeQuant { batch, .. }
+            | BackendSpec::NativeInt { batch, .. }
+            | BackendSpec::Trajectory { batch, .. }
+            | BackendSpec::Chaos { batch, .. } => *batch,
+            #[cfg(feature = "pjrt")]
+            BackendSpec::Pjrt { meta, .. } => meta.batch,
         }
     }
 }
@@ -254,30 +344,56 @@ impl BatchExecutor for PjrtExecutor {
     }
 }
 
+/// One route's front-end state: the worker channel plus the shared
+/// admission gate the dispatching side checks before enqueueing.
+struct RouteHandle {
+    tx: Sender<Msg>,
+    gate: Arc<RouteGate>,
+}
+
 /// Routing front-end: `submit_to(robot, fn, …)` → per-(robot, function)
 /// worker; `submit_traj(robot, …)` → the robot's trajectory worker.
 pub struct Coordinator {
-    routes: BTreeMap<(String, Route), Sender<Msg>>,
+    routes: BTreeMap<(String, Route), RouteHandle>,
     default_robot: Option<String>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
 }
 
 impl Coordinator {
-    /// Start one worker per backend spec. `n` is the robot DOF (used by
-    /// the PJRT path to define operand shapes); `window_us` is the
-    /// batching window (deadline to fill a batch). The first spec's
-    /// robot becomes the default target of [`Coordinator::submit`].
+    /// Start one worker per backend spec under the default [`QosPolicy`].
+    /// `n` is the robot DOF (used by the PJRT path to define operand
+    /// shapes); `window_us` is the batching window (deadline to fill a
+    /// batch). The first spec's robot becomes the default target of
+    /// [`Coordinator::submit`].
     pub fn start(specs: Vec<BackendSpec>, n: usize, window_us: u64) -> Coordinator {
+        Coordinator::start_with_policy(specs, n, window_us, QosPolicy::default())
+    }
+
+    /// [`Coordinator::start`] with an explicit overload policy
+    /// (admission caps and circuit-breaker tuning, shared by every
+    /// route).
+    pub fn start_with_policy(
+        specs: Vec<BackendSpec>,
+        n: usize,
+        window_us: u64,
+        policy: QosPolicy,
+    ) -> Coordinator {
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let default_robot = specs.first().map(|s| s.robot_name().to_string());
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
         for spec in specs {
             let (tx, rx) = channel::<Msg>();
-            routes.insert((spec.robot_name().to_string(), spec.route()), tx);
+            let gate =
+                Arc::new(RouteGate::new(spec.class(), policy, spec.batch_size(), window_us));
+            routes.insert(
+                (spec.robot_name().to_string(), spec.route()),
+                RouteHandle { tx, gate: Arc::clone(&gate) },
+            );
             let st = Arc::clone(&stats);
-            workers.push(std::thread::spawn(move || worker_loop(spec, n, window_us, rx, st)));
+            workers
+                .push(std::thread::spawn(move || worker_loop(spec, n, window_us, rx, st, gate)));
         }
         Coordinator { routes, default_robot, workers, stats }
     }
@@ -301,12 +417,14 @@ impl Coordinator {
                 function,
                 batch,
                 parallel: 1,
+                class: QosClass::default(),
             })
             .collect();
         specs.push(BackendSpec::Trajectory {
             robot: robot.clone(),
             batch: traj_batch,
             lane: TrajLane::F64,
+            class: QosClass::default(),
         });
         Coordinator::start(specs, n, window_us)
     }
@@ -321,7 +439,10 @@ impl Coordinator {
     /// Start a PJRT coordinator over compiled artifacts.
     #[cfg(feature = "pjrt")]
     pub fn start_pjrt(artifacts: Vec<ArtifactMeta>, n: usize, window_us: u64) -> Coordinator {
-        let specs = artifacts.into_iter().map(BackendSpec::Pjrt).collect();
+        let specs = artifacts
+            .into_iter()
+            .map(|meta| BackendSpec::Pjrt { meta, class: QosClass::default() })
+            .collect();
         Coordinator::start(specs, n, window_us)
     }
 
@@ -329,11 +450,25 @@ impl Coordinator {
     /// passed to [`Coordinator::start`]); returns the channel the result
     /// arrives on. Single-robot deployments can ignore routing entirely.
     pub fn submit(&self, function: ArtifactFn, operands: Vec<Vec<f32>>) -> Receiver<JobResult> {
+        self.submit_opts(function, operands, SubmitOptions::default())
+    }
+
+    /// [`Coordinator::submit`] with explicit QoS options (class override
+    /// and/or deadline).
+    pub fn submit_opts(
+        &self,
+        function: ArtifactFn,
+        operands: Vec<Vec<f32>>,
+        opts: SubmitOptions,
+    ) -> Receiver<JobResult> {
         match self.default_robot.clone() {
-            Some(name) => self.submit_to(&name, function, operands),
+            Some(name) => self.submit_to_opts(&name, function, operands, opts),
             None => {
                 let (tx, rx) = channel();
-                let _ = tx.send(Err(format!("no executable for {}", function.name())));
+                let _ = tx.send(Err(ServeError::BadRequest(format!(
+                    "no executable for {}",
+                    function.name()
+                ))));
                 rx
             }
         }
@@ -346,31 +481,87 @@ impl Coordinator {
         function: ArtifactFn,
         operands: Vec<Vec<f32>>,
     ) -> Receiver<JobResult> {
-        self.dispatch(robot, Route::Step(function), JobPayload::Step(operands))
+        self.submit_to_opts(robot, function, operands, SubmitOptions::default())
+    }
+
+    /// [`Coordinator::submit_to`] with explicit QoS options (class
+    /// override and/or deadline).
+    pub fn submit_to_opts(
+        &self,
+        robot: &str,
+        function: ArtifactFn,
+        operands: Vec<Vec<f32>>,
+        opts: SubmitOptions,
+    ) -> Receiver<JobResult> {
+        self.dispatch(robot, Route::Step(function), JobPayload::Step(operands), opts)
     }
 
     /// Submit one trajectory rollout for a named robot. The response is
     /// flat f32 of length `2·H·N`: H q-rows then H q̇-rows (see
     /// [`NativeEngine::rollout`]).
     pub fn submit_traj(&self, robot: &str, req: TrajRequest) -> Receiver<JobResult> {
-        self.dispatch(robot, Route::Traj, JobPayload::Traj(req))
+        self.submit_traj_opts(robot, req, SubmitOptions::default())
     }
 
-    fn dispatch(&self, robot: &str, route: Route, payload: JobPayload) -> Receiver<JobResult> {
+    /// [`Coordinator::submit_traj`] with explicit QoS options.
+    pub fn submit_traj_opts(
+        &self,
+        robot: &str,
+        req: TrajRequest,
+        opts: SubmitOptions,
+    ) -> Receiver<JobResult> {
+        self.dispatch(robot, Route::Traj, JobPayload::Traj(req), opts)
+    }
+
+    fn dispatch(
+        &self,
+        robot: &str,
+        route: Route,
+        payload: JobPayload,
+        opts: SubmitOptions,
+    ) -> Receiver<JobResult> {
         let (tx, rx) = channel();
         match self.routes.get(&(robot.to_string(), route)) {
-            Some(sender) => {
-                let job = Job { payload, enqueued: Instant::now(), resp: tx };
-                // If the worker is gone the send fails and tx is dropped
-                // with it — recv() errors out on the caller side.
-                let _ = sender.send(Msg::Work(job));
+            Some(handle) => {
+                let class = opts.class.unwrap_or(handle.gate.default_class);
+                match handle.gate.admit(class) {
+                    Ok(()) => {
+                        let job = Job {
+                            payload,
+                            class,
+                            deadline_us: opts.deadline_us,
+                            enqueued: Instant::now(),
+                            resp: tx,
+                        };
+                        // If the worker is gone the send fails and the
+                        // job (with its response sender) is dropped —
+                        // recv() errors out on the caller side. Give the
+                        // admission unit back either way.
+                        if handle.tx.send(Msg::Work(job)).is_err() {
+                            handle.gate.release(class);
+                        }
+                    }
+                    Err(err) => {
+                        // Refused at admission: count it and answer
+                        // immediately — the job was never enqueued.
+                        {
+                            let mut st = lock_stats(&self.stats);
+                            match &err {
+                                ServeError::Rejected { .. } => st.rejected += 1,
+                                ServeError::Shed { .. } => st.shed += 1,
+                                _ => {}
+                            }
+                        }
+                        let _ = tx.send(Err(err));
+                    }
+                }
             }
             None => {
                 let what = match route {
                     Route::Step(f) => format!("no route for robot '{robot}' / {}", f.name()),
                     Route::Traj => format!("no trajectory route for robot '{robot}'"),
                 };
-                let _ = tx.send(Err(what));
+                let _ = tx.send(Err(ServeError::BadRequest(what)));
             }
         }
         rx
@@ -383,21 +574,101 @@ impl Coordinator {
         names
     }
 
-    /// Snapshot of the aggregate serving statistics.
+    /// Snapshot of the aggregate serving statistics. Degrades (never
+    /// panics) if a recorder previously poisoned the stats lock.
     pub fn stats(&self) -> ServeStats {
-        self.stats.lock().unwrap().snapshot()
+        lock_stats(&self.stats).snapshot()
     }
 
-    /// Stop every worker (flushing queued work) and join the threads.
+    /// Admitted-but-unanswered depth of one (robot, function, class)
+    /// lane — `0` for unknown routes.
+    pub fn depth(&self, robot: &str, function: ArtifactFn, class: QosClass) -> usize {
+        self.routes
+            .get(&(robot.to_string(), Route::Step(function)))
+            .map_or(0, |h| h.gate.depth(class))
+    }
+
+    /// Stop every worker and join the threads. Jobs still queued are
+    /// answered with [`ServeError::ShuttingDown`] — shutdown never hangs
+    /// behind a backlog and never leaves a receiver waiting forever.
     pub fn shutdown(self) {
-        for (_, tx) in &self.routes {
-            let _ = tx.send(Msg::Stop);
+        for handle in self.routes.values() {
+            let _ = handle.tx.send(Msg::Stop);
         }
         drop(self.routes);
         for w in self.workers {
             let _ = w.join();
         }
     }
+}
+
+/// Strict-priority class lanes of one route worker: `Control` drains
+/// before `Interactive` before `Bulk`.
+#[derive(Default)]
+struct ClassLanes([VecDeque<Job>; 3]);
+
+impl ClassLanes {
+    fn push(&mut self, job: Job) {
+        self.0[job.class.index()].push_back(job);
+    }
+
+    fn len(&self) -> usize {
+        self.0.iter().map(VecDeque::len).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.0.iter().all(VecDeque::is_empty)
+    }
+
+    /// Pick up to `cap` jobs in strict priority order, dropping expired
+    /// jobs on the way (answered as [`ServeError::Expired`] — they are
+    /// never executed).
+    fn form_batch(
+        &mut self,
+        cap: usize,
+        stats: &Arc<Mutex<StatsInner>>,
+        gate: &RouteGate,
+    ) -> Vec<Job> {
+        let mut picked = Vec::with_capacity(cap);
+        for lane in self.0.iter_mut() {
+            while picked.len() < cap {
+                let Some(job) = lane.pop_front() else { break };
+                if let Some(waited_us) = job.expired() {
+                    lock_stats(stats).expired += 1;
+                    gate.release(job.class);
+                    let deadline_us = job.deadline_us.unwrap_or(0);
+                    let _ = job.resp.send(Err(ServeError::Expired { deadline_us, waited_us }));
+                } else {
+                    picked.push(job);
+                }
+            }
+            if picked.len() >= cap {
+                break;
+            }
+        }
+        picked
+    }
+
+    /// Answer every queued job with [`ServeError::ShuttingDown`].
+    fn fail_all_queued(&mut self, gate: &RouteGate) {
+        for lane in self.0.iter_mut() {
+            for job in lane.drain(..) {
+                gate.release(job.class);
+                let _ = job.resp.send(Err(ServeError::ShuttingDown));
+            }
+        }
+    }
+}
+
+/// What ended a drain pass.
+enum Drained {
+    /// Window expired or the batch filled: flush and keep serving.
+    Open,
+    /// `Stop` received: fail queued jobs and exit.
+    Stopped,
+    /// Every sender is gone (coordinator dropped without `shutdown`):
+    /// flush what's queued, then exit.
+    Disconnected,
 }
 
 /// Worker: owns its executor. PJRT handles are not `Send`, and the native
@@ -409,140 +680,196 @@ fn worker_loop(
     window_us: u64,
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
+    gate: Arc<RouteGate>,
 ) {
     let _ = n; // used only by the pjrt arm
     let window = Duration::from_micros(window_us);
     match spec {
-        BackendSpec::Native { robot, function, batch, parallel } => {
+        BackendSpec::Native { robot, function, batch, parallel, class: _ } => {
             let exec = EngineExecutor(Box::new(NativeEngine::with_parallelism(
                 robot, function, batch, parallel,
             )));
-            step_worker(Box::new(exec), window, rx, stats);
+            step_worker(Box::new(exec), window, rx, stats, gate);
         }
-        BackendSpec::NativeQuant { robot, function, batch, fmt, parallel, comp } => {
+        BackendSpec::NativeQuant { robot, function, batch, fmt, parallel, comp, class: _ } => {
             let exec = EngineExecutor(Box::new(QuantEngine::with_options(
                 robot, function, batch, fmt, parallel, comp,
             )));
-            step_worker(Box::new(exec), window, rx, stats);
+            step_worker(Box::new(exec), window, rx, stats, gate);
         }
-        BackendSpec::NativeInt { robot, function, batch, fmt, parallel } => {
+        BackendSpec::NativeInt { robot, function, batch, fmt, parallel, class: _ } => {
             // The engine runs the scaling analysis; a rejected pair
             // fails every request with the witness — the route never
             // falls back to the rounded-f64 lane.
             match QIntEngine::with_parallelism(robot, function, batch, fmt, parallel) {
-                Ok(engine) => {
-                    step_worker(Box::new(EngineExecutor(Box::new(engine))), window, rx, stats)
-                }
-                Err(e) => fail_all(&rx, &e.0),
+                Ok(engine) => step_worker(
+                    Box::new(EngineExecutor(Box::new(engine))),
+                    window,
+                    rx,
+                    stats,
+                    gate,
+                ),
+                Err(e) => fail_all(&rx, &gate, &ServeError::Engine(e.0)),
             }
         }
-        BackendSpec::Trajectory { robot, batch, lane } => {
+        BackendSpec::Chaos { robot, function, batch, delay_us, class: _ } => {
+            let exec =
+                EngineExecutor(Box::new(ChaosEngine::new(robot, function, batch, delay_us)));
+            step_worker(Box::new(exec), window, rx, stats, gate);
+        }
+        BackendSpec::Trajectory { robot, batch, lane, class: _ } => {
             let engine: Box<dyn DynamicsEngine> = match lane {
                 TrajLane::Quant(f) => Box::new(QuantEngine::new(robot, ArtifactFn::Fd, batch, f)),
                 TrajLane::Int(f) => match QIntEngine::new(robot, ArtifactFn::Fd, batch, f) {
                     Ok(engine) => Box::new(engine),
                     Err(e) => {
-                        fail_all(&rx, &e.0);
+                        fail_all(&rx, &gate, &ServeError::Engine(e.0));
                         return;
                     }
                 },
                 TrajLane::F64 => Box::new(NativeEngine::new(robot, ArtifactFn::Fd, batch)),
             };
-            traj_worker(engine, batch, window, rx, stats);
+            traj_worker(engine, batch, window, rx, stats, gate);
         }
         #[cfg(feature = "pjrt")]
-        BackendSpec::Pjrt(meta) => {
+        BackendSpec::Pjrt { meta, class: _ } => {
             let client = match xla::PjRtClient::cpu() {
                 Ok(c) => c,
                 Err(e) => {
-                    fail_all(&rx, &format!("pjrt client: {e:?}"));
+                    fail_all(&rx, &gate, &ServeError::Engine(format!("pjrt client: {e:?}")));
                     return;
                 }
             };
             let engine = match crate::runtime::engine::Engine::load(&client, meta, n) {
                 Ok(e) => e,
                 Err(e) => {
-                    fail_all(&rx, &e.0);
+                    fail_all(&rx, &gate, &ServeError::Engine(e.0));
                     return;
                 }
             };
-            step_worker(Box::new(PjrtExecutor { engine, _client: client }), window, rx, stats);
+            step_worker(
+                Box::new(PjrtExecutor { engine, _client: client }),
+                window,
+                rx,
+                stats,
+                gate,
+            );
         }
     }
 }
 
 /// Step-batch loop: block for the first job, drain within the window,
-/// execute as one batch.
+/// form one strict-priority batch (dropping expired jobs), execute it.
 fn step_worker(
     mut exec: Box<dyn BatchExecutor>,
     window: Duration,
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
+    gate: Arc<RouteGate>,
 ) {
-    let b = exec.batch();
-    let mut queue: Vec<Job> = Vec::with_capacity(b);
+    let b = exec.batch().max(1);
+    let mut lanes = ClassLanes::default();
     loop {
-        match rx.recv() {
-            Ok(Msg::Work(j)) => queue.push(j),
-            Ok(Msg::Stop) | Err(_) => break,
+        if lanes.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Work(j)) => lanes.push(j),
+                Ok(Msg::Stop) | Err(_) => return,
+            }
         }
-        if !drain_window(&rx, &mut queue, b, window) {
-            flush(exec.as_mut(), &mut queue, &stats);
-            return;
+        match drain_into(&rx, &mut lanes, b, window) {
+            Drained::Open => {
+                let picked = lanes.form_batch(b, &stats, &gate);
+                flush_step(exec.as_mut(), picked, &stats, &gate);
+            }
+            Drained::Stopped => {
+                lanes.fail_all_queued(&gate);
+                return;
+            }
+            Drained::Disconnected => {
+                while !lanes.is_empty() {
+                    let picked = lanes.form_batch(b, &stats, &gate);
+                    flush_step(exec.as_mut(), picked, &stats, &gate);
+                }
+                return;
+            }
         }
-        flush(exec.as_mut(), &mut queue, &stats);
     }
-    flush(exec.as_mut(), &mut queue, &stats);
 }
 
-/// Trajectory loop: drain rollout requests within the window and execute
-/// them back-to-back on one engine (one workspace, zero per-step
-/// dispatch).
+/// Trajectory loop: same skeleton as [`step_worker`], executing rollouts
+/// back-to-back on one engine (one workspace, zero per-step dispatch).
 fn traj_worker(
     mut engine: Box<dyn DynamicsEngine>,
     cap: usize,
     window: Duration,
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
+    gate: Arc<RouteGate>,
 ) {
     let cap = cap.max(1);
-    let mut queue: Vec<Job> = Vec::with_capacity(cap);
+    let mut lanes = ClassLanes::default();
     loop {
-        match rx.recv() {
-            Ok(Msg::Work(j)) => queue.push(j),
-            Ok(Msg::Stop) | Err(_) => break,
+        if lanes.is_empty() {
+            match rx.recv() {
+                Ok(Msg::Work(j)) => lanes.push(j),
+                Ok(Msg::Stop) | Err(_) => return,
+            }
         }
-        if !drain_window(&rx, &mut queue, cap, window) {
-            flush_traj(engine.as_mut(), &mut queue, &stats, cap);
-            return;
+        match drain_into(&rx, &mut lanes, cap, window) {
+            Drained::Open => {
+                let picked = lanes.form_batch(cap, &stats, &gate);
+                flush_traj(engine.as_mut(), picked, &stats, &gate, cap);
+            }
+            Drained::Stopped => {
+                lanes.fail_all_queued(&gate);
+                return;
+            }
+            Drained::Disconnected => {
+                while !lanes.is_empty() {
+                    let picked = lanes.form_batch(cap, &stats, &gate);
+                    flush_traj(engine.as_mut(), picked, &stats, &gate, cap);
+                }
+                return;
+            }
         }
-        flush_traj(engine.as_mut(), &mut queue, &stats, cap);
     }
-    flush_traj(engine.as_mut(), &mut queue, &stats, cap);
 }
 
 /// Collect further work until `cap` jobs are queued or the window
-/// expires. Returns `false` when the worker should flush and exit (Stop
-/// received or all senders gone).
-fn drain_window(rx: &Receiver<Msg>, queue: &mut Vec<Job>, cap: usize, window: Duration) -> bool {
+/// expires.
+fn drain_into(
+    rx: &Receiver<Msg>,
+    lanes: &mut ClassLanes,
+    cap: usize,
+    window: Duration,
+) -> Drained {
     let deadline = Instant::now() + window;
-    while queue.len() < cap {
+    while lanes.len() < cap {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(Msg::Work(j)) => queue.push(j),
-            Ok(Msg::Stop) => return false,
-            Err(_) => break,
+            Ok(Msg::Work(j)) => lanes.push(j),
+            Ok(Msg::Stop) => return Drained::Stopped,
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => return Drained::Disconnected,
         }
     }
-    true
+    Drained::Open
 }
 
-/// Execute the queued step jobs as one batch and fan results out.
-fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<StatsInner>>) {
-    if queue.is_empty() {
+/// Execute one formed step batch and fan results out. The engine call is
+/// wrapped in `catch_unwind`: a panicking evaluation fails only this
+/// batch (answered as [`ServeError::Engine`]) and counts toward the
+/// route's circuit breaker instead of killing the worker thread.
+fn flush_step(
+    exec: &mut dyn BatchExecutor,
+    mut picked: Vec<Job>,
+    stats: &Arc<Mutex<StatsInner>>,
+    gate: &RouteGate,
+) {
+    if picked.is_empty() {
         return;
     }
     let b = exec.batch();
@@ -550,30 +877,30 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
     let arity = exec.arity();
 
     // Reject malformed jobs up front: a bad task must fail alone instead
-    // of poisoning (or panicking) the whole assembled batch. Single
-    // in-place pass (answering rejects as they are dropped) — the old
-    // `queue.remove(k)` loop was O(n²) under a malformed burst.
-    queue.retain(|job| {
+    // of poisoning (or panicking) the whole assembled batch.
+    picked.retain(|job| {
         let ok = match &job.payload {
             JobPayload::Step(ops) => ops.len() == arity && ops.iter().all(|op| op.len() == n),
             JobPayload::Traj(_) => false,
         };
         if !ok {
-            let _ = job
-                .resp
-                .send(Err(format!("bad operands: expected {arity} arrays of length {n}")));
+            gate.release(job.class);
+            let _ = job.resp.send(Err(ServeError::BadRequest(format!(
+                "bad operands: expected {arity} arrays of length {n}"
+            ))));
         }
         ok
     });
-    if queue.is_empty() {
+    if picked.is_empty() {
         return;
     }
-    let fill = queue.len().min(b);
+    // `form_batch` already capped the pick at the batch size.
+    let fill = picked.len();
 
     // Assemble operands, padding the tail by repeating the last task
     // (keeps the padded rows numerically benign).
     let mut inputs: Vec<Vec<f32>> = vec![Vec::with_capacity(b * n); arity];
-    for job in queue.iter().take(fill) {
+    for job in picked.iter() {
         if let JobPayload::Step(ops) = &job.payload {
             for (k, op) in ops.iter().enumerate().take(arity) {
                 inputs[k].extend_from_slice(op);
@@ -590,72 +917,101 @@ fn flush(exec: &mut dyn BatchExecutor, queue: &mut Vec<Job>, stats: &Arc<Mutex<S
     }
 
     let t0 = Instant::now();
-    let result = exec.execute(&inputs);
+    let result = catch_unwind(AssertUnwindSafe(|| exec.execute(&inputs)))
+        .unwrap_or_else(|p| Err(format!("engine panicked: {}", panic_message(p.as_ref()))));
     let exec_us = t0.elapsed().as_micros() as f64;
 
     let out_per_task = exec.out_per_task();
     match result {
         Ok(flat) => {
-            for (i, job) in queue.drain(..).enumerate() {
-                if i < fill {
-                    let chunk = flat[i * out_per_task..(i + 1) * out_per_task].to_vec();
-                    let wait_us = job.enqueued.elapsed().as_micros() as f64;
-                    stats.lock().unwrap().record(wait_us);
-                    let _ = job.resp.send(Ok(chunk));
-                } else {
-                    let _ = job.resp.send(Err("overflow past batch".into()));
-                }
+            gate.on_success();
+            let mut st = lock_stats(stats);
+            for job in picked.iter() {
+                st.record(job.class, job.enqueued.elapsed().as_micros() as f64);
+            }
+            drop(st);
+            for (i, job) in picked.drain(..).enumerate() {
+                gate.release(job.class);
+                let chunk = flat[i * out_per_task..(i + 1) * out_per_task].to_vec();
+                let _ = job.resp.send(Ok(chunk));
             }
         }
-        Err(e) => {
-            for job in queue.drain(..) {
-                let _ = job.resp.send(Err(e.clone()));
+        Err(msg) => {
+            if gate.on_failure() {
+                lock_stats(stats).breaker_trips += 1;
+            }
+            for job in picked.drain(..) {
+                gate.release(job.class);
+                let _ = job.resp.send(Err(ServeError::Engine(msg.clone())));
             }
         }
     }
     // Record the batch on BOTH paths: a failed execution still consumed
     // a batch slot and wall clock, and skipping it skewed `mean_fill` /
     // `mean_exec_us` against `batches` under error bursts.
-    stats.lock().unwrap().record_batch(fill as f64 / b as f64, exec_us);
+    lock_stats(stats).record_batch(fill as f64 / b as f64, exec_us);
 }
 
-/// Execute the queued trajectory rollouts back-to-back and fan results
-/// out.
+/// Execute one formed trajectory batch (rollouts back-to-back) and fan
+/// results out. Each rollout is individually `catch_unwind`-wrapped so a
+/// panicking integration fails only its own request.
 fn flush_traj(
     engine: &mut dyn DynamicsEngine,
-    queue: &mut Vec<Job>,
+    mut picked: Vec<Job>,
     stats: &Arc<Mutex<StatsInner>>,
+    gate: &RouteGate,
     cap: usize,
 ) {
-    if queue.is_empty() {
+    if picked.is_empty() {
         return;
     }
-    let fill = queue.len().min(cap) as f64 / cap as f64;
+    let fill = picked.len().min(cap) as f64 / cap as f64;
     let t0 = Instant::now();
-    for job in queue.drain(..) {
+    for job in picked.drain(..) {
         let result = match &job.payload {
             JobPayload::Traj(req) => {
-                engine.rollout(&req.q0, &req.qd0, &req.tau, req.dt).map_err(|e| e.0)
+                catch_unwind(AssertUnwindSafe(|| {
+                    engine.rollout(&req.q0, &req.qd0, &req.tau, req.dt)
+                }))
+                .unwrap_or_else(|p| {
+                    Err(crate::runtime::EngineError(format!(
+                        "engine panicked: {}",
+                        panic_message(p.as_ref())
+                    )))
+                })
+                .map_err(|e| ServeError::Engine(e.0))
             }
-            JobPayload::Step(_) => Err("step operands sent to a trajectory route".to_string()),
+            JobPayload::Step(_) => {
+                Err(ServeError::BadRequest("step operands sent to a trajectory route".into()))
+            }
         };
-        if result.is_ok() {
-            let wait_us = job.enqueued.elapsed().as_micros() as f64;
-            stats.lock().unwrap().record(wait_us);
+        match &result {
+            Ok(_) => {
+                gate.on_success();
+                lock_stats(stats).record(job.class, job.enqueued.elapsed().as_micros() as f64);
+            }
+            Err(ServeError::Engine(_)) => {
+                if gate.on_failure() {
+                    lock_stats(stats).breaker_trips += 1;
+                }
+            }
+            Err(_) => {}
         }
+        gate.release(job.class);
         let _ = job.resp.send(result);
     }
-    stats.lock().unwrap().record_batch(fill, t0.elapsed().as_micros() as f64);
+    lock_stats(stats).record_batch(fill, t0.elapsed().as_micros() as f64);
 }
 
 /// Answer every queued (and future) request on this route with the same
 /// error — the loud-failure path for routes whose engine refused to
 /// build (rejected qint formats, missing PJRT artifacts).
-fn fail_all(rx: &Receiver<Msg>, err: &str) {
+fn fail_all(rx: &Receiver<Msg>, gate: &RouteGate, err: &ServeError) {
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Work(j) => {
-                let _ = j.resp.send(Err(err.to_string()));
+                gate.release(j.class);
+                let _ = j.resp.send(Err(err.clone()));
             }
             Msg::Stop => break,
         }
@@ -672,7 +1028,7 @@ mod tests {
         let coord = Coordinator::start(Vec::new(), 7, 100);
         let rx = coord.submit(ArtifactFn::Minv, vec![vec![0.0; 7]]);
         let res = rx.recv().unwrap();
-        assert!(res.is_err());
+        assert!(matches!(res, Err(ServeError::BadRequest(_))));
         coord.shutdown();
     }
 
@@ -696,7 +1052,7 @@ mod tests {
         // Wrong arity: one operand instead of three.
         let rx = coord.submit(ArtifactFn::Rnea, vec![vec![0.0; 7]]);
         let res = rx.recv().expect("worker must answer even on failure");
-        assert!(res.is_err());
+        assert!(matches!(res, Err(ServeError::BadRequest(_))));
         coord.shutdown();
     }
 
@@ -726,9 +1082,57 @@ mod tests {
         assert_eq!(out.len(), 2 * h * n);
         assert!(out.iter().all(|x| x.is_finite()));
         // Malformed rollouts fail alone.
-        let bad = TrajRequest { q0: vec![0.0; n - 1], qd0: vec![0.0; n], tau: vec![0.0; n], dt: 1e-3 };
+        let bad =
+            TrajRequest { q0: vec![0.0; n - 1], qd0: vec![0.0; n], tau: vec![0.0; n], dt: 1e-3 };
         let rx = coord.submit_traj("iiwa", bad);
         assert!(rx.recv().unwrap().is_err());
+        coord.shutdown();
+    }
+
+    /// A zero admission cap rejects at submission — deterministically,
+    /// regardless of worker speed — with a structured retry hint, and
+    /// the rejection is counted.
+    #[test]
+    fn zero_cap_rejects_at_admission() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let spec = BackendSpec::Native {
+            robot,
+            function: ArtifactFn::Rnea,
+            batch: 4,
+            parallel: 1,
+            class: QosClass::Bulk,
+        };
+        let policy = QosPolicy { queue_cap: [0, 0, 0], ..QosPolicy::default() };
+        let coord = Coordinator::start_with_policy(vec![spec], n, 100, policy);
+        let res = coord.submit(ArtifactFn::Rnea, vec![vec![0.1; n]; 3]).recv().unwrap();
+        match res {
+            Err(ServeError::Rejected { class, retry_after_us, .. }) => {
+                assert_eq!(class, QosClass::Bulk, "route default class applies");
+                assert!(retry_after_us >= 100, "hint covers at least one window");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(coord.stats().rejected, 1);
+        coord.shutdown();
+    }
+
+    /// A job whose deadline has already passed when the batch forms is
+    /// answered `Expired` and never executed.
+    #[test]
+    fn expired_job_is_dropped_not_executed() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Rnea, 8)], 100);
+        let opts = SubmitOptions::deadline_us(0);
+        let rx = coord.submit_opts(ArtifactFn::Rnea, vec![vec![0.1; n]; 3], opts);
+        match rx.recv().unwrap() {
+            Err(ServeError::Expired { deadline_us, .. }) => assert_eq!(deadline_us, 0),
+            other => panic!("expected Expired, got {other:?}"),
+        }
+        let st = coord.stats();
+        assert_eq!(st.expired, 1);
+        assert_eq!(st.completed, 0, "an expired job must never execute");
         coord.shutdown();
     }
 }

@@ -1,0 +1,504 @@
+//! Open-loop load generator: the tail-latency and overload harness for
+//! the serving coordinator (`draco loadgen`).
+//!
+//! Requests arrive on a **Poisson process at a fixed offered rate**,
+//! independent of how fast the server answers (open loop — a closed
+//! loop would slow its own arrivals under overload and hide the very
+//! tail it is supposed to measure). Each scenario drives a fresh
+//! coordinator over a throttled [`ChaosEngine`](crate::runtime::chaos)
+//! route whose capacity is pinned by construction
+//! (`batch / (delay + window)`), so "offer 2× capacity" is
+//! deterministic across hosts.
+//!
+//! Per (scenario, class) the harness reports offered load, goodput,
+//! shed counts, and p50/p99/p99.9 latency (from the coordinator's
+//! per-class reservoirs), and writes `rust/BENCH_serve.json`
+//! (schema `draco.serve.v1`) next to the hotpath bench dump so the
+//! overload envelope is tracked in-repo. In every scenario a trickle of
+//! **probe jobs with an already-expired deadline** rides along; a probe
+//! that comes back `Ok` means an expired job was executed — the
+//! invariant `--smoke` asserts never happens.
+//!
+//! `--smoke` (wired into CI) runs a short ramp and additionally checks:
+//! monotone shedding (the reject rate must not fall as offered load
+//! grows), Control-class p99 under overload within 2× its uncontended
+//! p99 (plus one batching window of tolerance), and the circuit-breaker
+//! cycle (trip on consecutive injected panics → shed → half-open →
+//! recover).
+
+use super::batcher::{BackendSpec, Coordinator, JobResult};
+use super::qos::{QosClass, QosPolicy, ServeError, SubmitOptions};
+use crate::model::{builtin_robot, Robot};
+use crate::runtime::artifact::ArtifactFn;
+use crate::util::bench::Table;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// Shared knobs of one loadgen run (every scenario reuses them).
+struct LoadCfg {
+    batch: usize,
+    window_us: u64,
+    delay_us: u64,
+    /// Class mix weights, indexed by [`QosClass::index`] (normalized at
+    /// sampling time).
+    mix: [f64; 3],
+    duration: Duration,
+    seed: u64,
+    policy: QosPolicy,
+}
+
+impl LoadCfg {
+    /// Deterministic route capacity [tasks/s]: one batch per
+    /// (drain window + throttled execution) cycle.
+    fn capacity_per_s(&self) -> f64 {
+        self.batch as f64 * 1e6 / (self.delay_us + self.window_us) as f64
+    }
+}
+
+/// Client-side outcome counts and server-side latency percentiles of
+/// one class in one scenario.
+#[derive(Debug, Clone, Copy, Default)]
+struct ClassOutcome {
+    offered: u64,
+    completed: u64,
+    /// Admission rejections plus breaker sheds (both are refused-before-
+    /// execution outcomes).
+    rejected: u64,
+    expired: u64,
+    engine_errors: u64,
+    p50_us: f64,
+    p99_us: f64,
+    p999_us: f64,
+}
+
+/// One scenario: a name, its offered rate, and the per-class outcomes.
+struct ScenarioResult {
+    name: String,
+    offered_per_s: f64,
+    elapsed_s: f64,
+    classes: [ClassOutcome; 3],
+    /// Deadline-0 probe jobs that came back `Ok` — an executed expired
+    /// job. Must stay 0.
+    probes_executed: u64,
+    probes_sent: u64,
+}
+
+impl ScenarioResult {
+    fn total_offered(&self) -> u64 {
+        self.classes.iter().map(|c| c.offered).sum()
+    }
+
+    fn reject_rate(&self) -> f64 {
+        let rejected: u64 = self.classes.iter().map(|c| c.rejected).sum();
+        let offered = self.total_offered();
+        if offered == 0 {
+            0.0
+        } else {
+            rejected as f64 / offered as f64
+        }
+    }
+}
+
+/// Sample a class from the (unnormalized) mix weights.
+fn sample_class(rng: &mut Rng, mix: &[f64; 3]) -> QosClass {
+    let total: f64 = mix.iter().sum();
+    let u = rng.f64() * total;
+    if u < mix[0] {
+        QosClass::Control
+    } else if u < mix[0] + mix[1] {
+        QosClass::Interactive
+    } else {
+        QosClass::Bulk
+    }
+}
+
+/// Parse `control:0.2,interactive:0.3,bulk:0.5` into mix weights.
+fn parse_mix(s: &str) -> Result<[f64; 3], String> {
+    let mut mix = [0.0; 3];
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (name, w) =
+            part.split_once(':').ok_or_else(|| format!("bad class weight '{part}' (want name:weight)"))?;
+        let class = QosClass::parse(name.trim())
+            .ok_or_else(|| format!("unknown class '{name}' (try control|interactive|bulk)"))?;
+        mix[class.index()] =
+            w.trim().parse().map_err(|_| format!("bad weight '{w}' in '{part}'"))?;
+    }
+    if mix.iter().sum::<f64>() <= 0.0 {
+        return Err("class mix needs at least one positive weight".to_string());
+    }
+    Ok(mix)
+}
+
+/// Busy-wait-assisted sleep until `next_s` seconds after `t0`: sleep for
+/// the bulk of the gap, spin the last slice so short inter-arrival gaps
+/// (sub-millisecond at high rates) keep their shape.
+fn wait_until(t0: Instant, next_s: f64) {
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= next_s {
+            return;
+        }
+        let rem = next_s - now;
+        if rem > 1e-3 {
+            std::thread::sleep(Duration::from_secs_f64(rem - 5e-4));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Run one open-loop scenario at `rate_per_s` against a fresh throttled
+/// coordinator.
+fn run_scenario(robot: &Robot, cfg: &LoadCfg, name: &str, rate_per_s: f64) -> ScenarioResult {
+    let n = robot.dof();
+    let spec = BackendSpec::Chaos {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: cfg.batch,
+        delay_us: cfg.delay_us,
+        class: QosClass::default(),
+    };
+    let coord = Coordinator::start_with_policy(vec![spec], n, cfg.window_us, cfg.policy);
+
+    // One clean operand template; every request clones it.
+    let ops: Vec<Vec<f32>> = vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]];
+
+    let mut rng = Rng::new(cfg.seed ^ rate_per_s.to_bits());
+    let mut pending: Vec<(QosClass, Receiver<JobResult>)> = Vec::new();
+    let mut probes: Vec<Receiver<JobResult>> = Vec::new();
+    let mut classes = [ClassOutcome::default(); 3];
+
+    let dur_s = cfg.duration.as_secs_f64();
+    let t0 = Instant::now();
+    let mut next_s = 0.0;
+    let mut k = 0u64;
+    while next_s < dur_s {
+        wait_until(t0, next_s);
+        let class = sample_class(&mut rng, &cfg.mix);
+        classes[class.index()].offered += 1;
+        pending.push((
+            class,
+            coord.submit_to_opts(
+                &robot.name,
+                ArtifactFn::Fd,
+                ops.clone(),
+                SubmitOptions::class(class),
+            ),
+        ));
+        // Ride-along probe with an already-expired deadline: it must
+        // come back Expired (or Rejected) — never Ok.
+        if k % 24 == 23 {
+            probes.push(coord.submit_to_opts(
+                &robot.name,
+                ArtifactFn::Fd,
+                ops.clone(),
+                SubmitOptions { class: Some(class), deadline_us: Some(0) },
+            ));
+        }
+        k += 1;
+        // Exponential inter-arrival gap (Poisson process).
+        next_s += -(1.0 - rng.f64()).ln() / rate_per_s;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    // Drain every outstanding response (bounded queues ⇒ bounded wait).
+    for (class, rx) in pending {
+        let out = &mut classes[class.index()];
+        match rx.recv() {
+            Ok(Ok(_)) => out.completed += 1,
+            Ok(Err(ServeError::Rejected { .. })) | Ok(Err(ServeError::Shed { .. })) => {
+                out.rejected += 1
+            }
+            Ok(Err(ServeError::Expired { .. })) => out.expired += 1,
+            Ok(Err(_)) | Err(_) => out.engine_errors += 1,
+        }
+    }
+    let mut probes_executed = 0u64;
+    let probes_sent = probes.len() as u64;
+    for rx in probes {
+        if matches!(rx.recv(), Ok(Ok(_))) {
+            probes_executed += 1;
+        }
+    }
+
+    let st = coord.stats();
+    for c in QosClass::ALL {
+        let cs = st.class(c);
+        let out = &mut classes[c.index()];
+        out.p50_us = cs.p50_latency_us;
+        out.p99_us = cs.p99_latency_us;
+        out.p999_us = cs.p999_latency_us;
+    }
+    coord.shutdown();
+
+    ScenarioResult {
+        name: name.to_string(),
+        offered_per_s: rate_per_s,
+        elapsed_s,
+        classes,
+        probes_executed,
+        probes_sent,
+    }
+}
+
+/// Deterministic circuit-breaker cycle: three injected panics on a
+/// batch-of-1 chaos route trip the breaker, the next admission sheds,
+/// and after the cooldown a clean half-open probe recovers the route.
+fn breaker_cycle(robot: &Robot) -> Result<(), String> {
+    let n = robot.dof();
+    let spec = BackendSpec::Chaos {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: 1,
+        delay_us: 0,
+        class: QosClass::default(),
+    };
+    let policy = QosPolicy { breaker_trip: 3, breaker_cooldown_us: 50_000, ..QosPolicy::default() };
+    let coord = Coordinator::start_with_policy(vec![spec], n, 100, policy);
+
+    let clean: Vec<Vec<f32>> = vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]];
+    let mut poison = clean.clone();
+    poison[0][0] = f32::INFINITY;
+
+    for i in 0..3 {
+        match coord.submit_to(&robot.name, ArtifactFn::Fd, poison.clone()).recv() {
+            Ok(Err(ServeError::Engine(_))) => {}
+            other => return Err(format!("poison batch {i}: expected Engine error, got {other:?}")),
+        }
+    }
+    match coord.submit_to(&robot.name, ArtifactFn::Fd, clean.clone()).recv() {
+        Ok(Err(ServeError::Shed { retry_after_us, .. })) => {
+            if retry_after_us == 0 {
+                return Err("breaker shed without a retry hint".to_string());
+            }
+        }
+        other => return Err(format!("tripped breaker: expected Shed, got {other:?}")),
+    }
+    std::thread::sleep(Duration::from_micros(60_000));
+    match coord.submit_to(&robot.name, ArtifactFn::Fd, clean).recv() {
+        Ok(Ok(_)) => {}
+        other => return Err(format!("half-open probe: expected Ok, got {other:?}")),
+    }
+    let st = coord.stats();
+    if st.breaker_trips < 1 {
+        return Err("breaker trip was not counted".to_string());
+    }
+    if st.shed < 1 {
+        return Err("breaker shed was not counted".to_string());
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// `draco loadgen`: open-loop Poisson load against a capacity-pinned
+/// route, per-class tail-latency / shed report, `rust/BENCH_serve.json`
+/// emission.
+///
+/// * `--robot NAME` — served robot (default `iiwa`).
+/// * `--rate R` — offered rate [req/s] of the `overload` scenario
+///   (default 2× the pinned capacity).
+/// * `--duration-ms D` — per-scenario generation window (default 1500).
+/// * `--batch B`, `--window-us W`, `--delay-us U` — capacity pinning:
+///   the route serves one batch of `B` per `W + U` µs.
+/// * `--classes control:0.2,interactive:0.3,bulk:0.5` — offered mix.
+/// * `--ramp` — additionally sweep 1× and 3× capacity scenarios.
+/// * `--seed S` — arrival-process seed.
+/// * `--smoke` — short CI mode: forces the ramp, then asserts zero
+///   expired-executed probes, monotone shedding, the Control-p99
+///   overload bound, and the breaker trip/half-open/recover cycle.
+///   Exit code 1 on any violation.
+pub fn loadgen_cli(args: &Args) -> i32 {
+    let smoke = args.flag("smoke");
+    let robot_name = args.opt_or("robot", "iiwa").to_string();
+    let robot = match builtin_robot(&robot_name) {
+        Some(r) => r,
+        None => {
+            eprintln!("unknown robot '{robot_name}' (try iiwa|hyq|atlas|baxter)");
+            return 2;
+        }
+    };
+    let mix = match parse_mix(args.opt_or("classes", "control:0.2,interactive:0.3,bulk:0.5")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("bad --classes: {e}");
+            return 2;
+        }
+    };
+    let cfg = LoadCfg {
+        batch: args.opt_usize("batch", 8),
+        window_us: args.opt_usize("window-us", 2_000) as u64,
+        delay_us: args.opt_usize("delay-us", 20_000) as u64,
+        mix,
+        duration: Duration::from_millis(args.opt_usize(
+            "duration-ms",
+            if smoke { 700 } else { 1_500 },
+        ) as u64),
+        seed: args.opt_usize("seed", 2026) as u64,
+        // Tight caps so overload converts to explicit shed responses
+        // within a sub-second scenario (the serving default is deeper).
+        policy: QosPolicy { queue_cap: [64, 32, 16], ..QosPolicy::default() },
+    };
+    let capacity = cfg.capacity_per_s();
+    let over_rate = args.opt_f64("rate", 2.0 * capacity);
+    println!(
+        "loadgen: robot {robot_name}, batch {}, window {} µs, delay {} µs → capacity ≈ {:.0} req/s",
+        cfg.batch, cfg.window_us, cfg.delay_us, capacity
+    );
+
+    // Scenario sweep: the uncontended/overload pair is always measured
+    // (their rows are the tracked baseline); --ramp / --smoke add the
+    // intermediate and deep-overload points.
+    let mut plan: Vec<(String, f64)> =
+        vec![("uncontended".to_string(), 0.5 * capacity), ("overload".to_string(), over_rate)];
+    if args.flag("ramp") || smoke {
+        plan.push(("ramp-1x".to_string(), capacity));
+        plan.push(("ramp-3x".to_string(), 3.0 * capacity));
+    }
+
+    let mut results = Vec::new();
+    for (name, rate) in &plan {
+        println!("\nscenario '{name}': offering {rate:.0} req/s for {:?} …", cfg.duration);
+        results.push(run_scenario(&robot, &cfg, name, *rate));
+    }
+
+    let mut table =
+        Table::new(&["scenario", "class", "offered", "ok", "rej", "exp", "goodput/s", "p50 µs", "p99 µs", "p99.9 µs"]);
+    for r in &results {
+        for c in QosClass::ALL {
+            let o = &r.classes[c.index()];
+            table.row(&[
+                r.name.clone(),
+                c.name().to_string(),
+                o.offered.to_string(),
+                o.completed.to_string(),
+                o.rejected.to_string(),
+                o.expired.to_string(),
+                format!("{:.0}", o.completed as f64 / r.elapsed_s),
+                format!("{:.0}", o.p50_us),
+                format!("{:.0}", o.p99_us),
+                format!("{:.0}", o.p999_us),
+            ]);
+        }
+    }
+    table.print("open-loop serving: offered load vs goodput and tail latency");
+
+    // JSON dump: one row per (scenario, class). "scenario" sorts last
+    // among the row keys, so line-oriented extractors can use it as the
+    // row terminator (as bench_diff.sh does).
+    let mut rows = Vec::new();
+    for r in &results {
+        for c in QosClass::ALL {
+            let o = &r.classes[c.index()];
+            rows.push(json::obj(vec![
+                ("scenario", json::s(&r.name)),
+                ("class", json::s(c.name())),
+                ("offered_per_s", json::num(o.offered as f64 / r.elapsed_s)),
+                ("goodput_per_s", json::num(o.completed as f64 / r.elapsed_s)),
+                ("completed", json::num(o.completed as f64)),
+                ("rejected", json::num(o.rejected as f64)),
+                ("expired", json::num(o.expired as f64)),
+                ("p50_us", json::num(o.p50_us)),
+                ("p99_us", json::num(o.p99_us)),
+                ("p999_us", json::num(o.p999_us)),
+            ]));
+        }
+    }
+    let out = json::obj(vec![
+        ("schema", json::s("draco.serve.v1")),
+        ("smoke", Json::Bool(smoke)),
+        ("robot", json::s(&robot.name)),
+        ("batch", json::num(cfg.batch as f64)),
+        ("window_us", json::num(cfg.window_us as f64)),
+        ("delay_us", json::num(cfg.delay_us as f64)),
+        ("capacity_per_s", json::num(capacity)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
+    match std::fs::write(path, out.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+
+    // Invariants. Checked (and fatal) in --smoke; reported otherwise.
+    let mut failures: Vec<String> = Vec::new();
+    for r in &results {
+        if r.probes_executed > 0 {
+            failures.push(format!(
+                "scenario '{}': {}/{} expired-deadline probes were EXECUTED",
+                r.name, r.probes_executed, r.probes_sent
+            ));
+        }
+        // Load scenarios send only clean traffic; an engine error here
+        // is a serving bug, not an injected fault.
+        let engine: u64 = r.classes.iter().map(|c| c.engine_errors).sum();
+        if engine > 0 {
+            failures.push(format!(
+                "scenario '{}': {engine} engine errors on clean traffic",
+                r.name
+            ));
+        }
+    }
+    // Monotone shedding: sort by offered rate; the reject rate must not
+    // fall as offered load grows (small tolerance for sampling noise),
+    // and the deepest overload point must actually shed.
+    let mut by_rate: Vec<&ScenarioResult> = results.iter().collect();
+    by_rate.sort_by(|a, b| a.offered_per_s.total_cmp(&b.offered_per_s));
+    for pair in by_rate.windows(2) {
+        if pair[1].reject_rate() < pair[0].reject_rate() - 0.05 {
+            failures.push(format!(
+                "shed rate fell from {:.1}% ('{}' @ {:.0}/s) to {:.1}% ('{}' @ {:.0}/s)",
+                pair[0].reject_rate() * 100.0,
+                pair[0].name,
+                pair[0].offered_per_s,
+                pair[1].reject_rate() * 100.0,
+                pair[1].name,
+                pair[1].offered_per_s,
+            ));
+        }
+    }
+    if let Some(deepest) = by_rate.last() {
+        if deepest.offered_per_s > 1.5 * capacity && deepest.reject_rate() == 0.0 {
+            failures.push(format!(
+                "'{}' offered {:.0}/s (≥1.5× capacity) but shed nothing — admission control inert",
+                deepest.name, deepest.offered_per_s
+            ));
+        }
+    }
+    // Control-class isolation: p99 under overload within 2× the
+    // uncontended p99, plus one batching window of scheduling slack.
+    let unc = results.iter().find(|r| r.name == "uncontended");
+    let over = results.iter().find(|r| r.name == "overload");
+    if let (Some(unc), Some(over)) = (unc, over) {
+        let ctl = QosClass::Control.index();
+        let (u99, o99) = (unc.classes[ctl].p99_us, over.classes[ctl].p99_us);
+        let bound = 2.0 * u99 + cfg.window_us as f64;
+        println!(
+            "control p99: {u99:.0} µs uncontended → {o99:.0} µs under overload (bound {bound:.0})"
+        );
+        if unc.classes[ctl].completed > 0 && over.classes[ctl].completed > 0 && o99 > bound {
+            failures.push(format!(
+                "control p99 {o99:.0} µs under overload exceeds 2× uncontended ({u99:.0} µs) + window"
+            ));
+        }
+    }
+    if smoke {
+        if let Err(e) = breaker_cycle(&robot) {
+            failures.push(format!("breaker cycle: {e}"));
+        } else {
+            println!("breaker cycle: trip → shed → half-open → recover ok");
+        }
+    }
+
+    if failures.is_empty() {
+        println!("loadgen invariants hold: no expired job executed, shedding monotone");
+        0
+    } else {
+        for f in &failures {
+            eprintln!("LOADGEN VIOLATION: {f}");
+        }
+        i32::from(smoke)
+    }
+}

@@ -18,16 +18,27 @@
 //! native workspaces are deliberately thread-local, so each worker
 //! thread owns its own executor; requests cross threads through
 //! channels.
+//!
+//! Overload robustness lives in [`qos`]: per-route priority classes
+//! (`Control > Interactive > Bulk`), bounded per-class admission with
+//! structured `Rejected { retry_after_us }` shedding, deadline-aware
+//! batch formation (expired jobs are dropped, never executed), and a
+//! per-route circuit breaker behind a batch-boundary panic catch. The
+//! [`loadgen`] module is the open-loop Poisson/ramp harness that
+//! measures all of it (`draco loadgen`).
 
 #![warn(missing_docs)]
 
 pub mod batcher;
+pub mod loadgen;
+pub mod qos;
 pub mod registry;
 pub mod stats;
 
 pub use batcher::{BackendSpec, Coordinator, Job, JobPayload, JobResult, Route, TrajLane, TrajRequest};
+pub use qos::{QosClass, QosPolicy, ServeError, SubmitOptions};
 pub use registry::{BackendKind, RobotEntry, RobotRegistry, DEFAULT_QUANT_FORMAT};
-pub use stats::ServeStats;
+pub use stats::{ClassStats, ServeStats};
 
 use crate::model::State;
 use crate::quant::qint::quant_rnea_i64;
@@ -48,7 +59,9 @@ use std::time::Instant;
 ///   fixed-point scaling analysis proves the format, rejected with the
 ///   overflow witness otherwise; `+comp` = fitted M⁻¹ error
 ///   compensation on the quantized M⁻¹ route; `name=path.urdf` loads a
-///   robot through the URDF-lite importer; see
+///   robot through the URDF-lite importer; a trailing `!control` /
+///   `!interactive` / `!bulk` sets the robot's QoS class — `Control`
+///   drains first under overload, `Bulk` sheds first; see
 ///   [`RobotRegistry::from_cli_spec`]). `--robot NAME` remains as a
 ///   single-robot shorthand.
 /// * `--backend native|pjrt` — `native` (default) serves the registry
@@ -92,10 +105,11 @@ pub fn serve_cli(args: &Args) -> i32 {
             for name in registry.names() {
                 let entry = registry.get(&name).expect("registered");
                 println!(
-                    "  {name}: {} DOF, backend {}{}",
+                    "  {name}: {} DOF, backend {}{}, qos {}",
                     entry.robot.dof(),
                     entry.backend.label(),
-                    if entry.comp { " +comp" } else { "" }
+                    if entry.comp { " +comp" } else { "" },
+                    entry.qos
                 );
             }
             let coord = Coordinator::start_registry(&registry, window_us as u64);
@@ -207,12 +221,19 @@ fn run_native_workload(
         done as f64 / wall
     );
     println!(
-        "batches: {}  mean fill: {:.1}%  p50 latency: {:.0} µs  p95: {:.0} µs",
+        "batches: {}  mean fill: {:.1}%  p50 latency: {:.0} µs  p95: {:.0} µs  p99: {:.0} µs",
         st.batches,
         st.mean_fill * 100.0,
         st.p50_latency_us,
-        st.p95_latency_us
+        st.p95_latency_us,
+        st.p99_latency_us
     );
+    if st.rejected + st.expired + st.shed > 0 {
+        println!(
+            "overload: rejected {}  expired {}  shed {}  breaker trips {}",
+            st.rejected, st.expired, st.shed, st.breaker_trips
+        );
+    }
     println!("max relative error vs backend reference kernels: {max_err:.2e}");
     let mut code = 0;
     if max_err > 1e-3 {

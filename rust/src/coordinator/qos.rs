@@ -1,0 +1,396 @@
+//! Quality-of-service substrate for the serving coordinator: priority
+//! classes, deadline-aware admission control, and per-route circuit
+//! breakers.
+//!
+//! The batcher is fast when traffic is polite; this module is what keeps
+//! it **predictable when traffic is not**. Three mechanisms compose:
+//!
+//! * **Priority classes** ([`QosClass`]): every job carries a class
+//!   (`Control > Interactive > Bulk`); batch formation drains higher
+//!   classes first, so a 1 kHz control-loop request never waits behind a
+//!   10 k-row analytics backlog on the same route.
+//! * **Admission control** ([`RouteGate`]): per-class queues are bounded.
+//!   A job that would overflow its class queue is refused *at submission*
+//!   with a structured [`ServeError::Rejected`] carrying a
+//!   `retry_after_us` hint — overload degrades into explicit shed
+//!   responses instead of unbounded queueing and silent stall. Jobs may
+//!   also carry a deadline; a job whose deadline passes while queued is
+//!   dropped at batch formation as [`ServeError::Expired`] and is
+//!   **never executed**.
+//! * **Fault isolation**: a panicking engine evaluation is caught at the
+//!   batch boundary (it fails only its own batch), failures are counted
+//!   per route, and [`QosPolicy::breaker_trip`] consecutive failures trip
+//!   a circuit breaker — the route sheds with [`ServeError::Shed`] for a
+//!   cooldown, then half-opens and recovers on the first healthy batch.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Priority class of a served request. Lower [`QosClass::index`] drains
+/// first: batch formation exhausts `Control` before `Interactive` before
+/// `Bulk`, so under overload the strict priority order decides who rides
+/// and the per-class admission caps decide who sheds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum QosClass {
+    /// Hard-deadline control-loop traffic (e.g. a 1 kHz QP controller):
+    /// drained first, expected to be a small fraction of offered load.
+    Control,
+    /// Interactive queries (teleop previews, debugging probes): drained
+    /// after `Control`, before `Bulk`. The default class.
+    #[default]
+    Interactive,
+    /// Throughput workloads (analytics sweeps, dataset generation, RL
+    /// rollout farms): drained last and shed first under overload.
+    Bulk,
+}
+
+impl QosClass {
+    /// Every class, in draining order (highest priority first).
+    pub const ALL: [QosClass; 3] = [QosClass::Control, QosClass::Interactive, QosClass::Bulk];
+
+    /// Dense index in draining order: `Control = 0`, `Interactive = 1`,
+    /// `Bulk = 2`.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Control => 0,
+            QosClass::Interactive => 1,
+            QosClass::Bulk => 2,
+        }
+    }
+
+    /// Lower-case name, as accepted by the `!class` registry-spec suffix.
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Control => "control",
+            QosClass::Interactive => "interactive",
+            QosClass::Bulk => "bulk",
+        }
+    }
+
+    /// Parse a class name (`control` / `interactive` / `bulk`).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "control" => Some(QosClass::Control),
+            "interactive" => Some(QosClass::Interactive),
+            "bulk" => Some(QosClass::Bulk),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for QosClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-request submission options: class override and optional deadline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Priority class; `None` inherits the route's default class.
+    pub class: Option<QosClass>,
+    /// Deadline relative to submission [µs]. A job still queued when its
+    /// deadline passes is dropped at batch formation with
+    /// [`ServeError::Expired`] — it is never executed.
+    pub deadline_us: Option<u64>,
+}
+
+impl SubmitOptions {
+    /// Options carrying only a class override.
+    pub fn class(class: QosClass) -> SubmitOptions {
+        SubmitOptions { class: Some(class), deadline_us: None }
+    }
+
+    /// Options carrying only a relative deadline [µs].
+    pub fn deadline_us(deadline_us: u64) -> SubmitOptions {
+        SubmitOptions { class: None, deadline_us: Some(deadline_us) }
+    }
+}
+
+/// Structured serving error: every refused, expired, or failed request
+/// names *why* and, where retrying makes sense, *when*.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Admission control refused the job: its class queue is at capacity.
+    /// The job was never enqueued; retry after the hint.
+    Rejected {
+        /// Class whose queue was full.
+        class: QosClass,
+        /// Queue depth observed at admission (admitted, not yet
+        /// answered).
+        depth: usize,
+        /// Suggested backoff before retrying [µs] (current backlog in
+        /// batch windows).
+        retry_after_us: u64,
+    },
+    /// The route's circuit breaker is open after consecutive batch
+    /// failures; the route sheds instead of queueing onto a faulty
+    /// engine. Retry after the hint (the breaker half-opens then).
+    Shed {
+        /// Consecutive batch failures observed when the breaker tripped.
+        consecutive_failures: u32,
+        /// Remaining breaker cooldown [µs].
+        retry_after_us: u64,
+    },
+    /// The job's deadline passed while it was queued; it was dropped at
+    /// batch formation and **never executed**.
+    Expired {
+        /// The deadline the job carried, relative to submission [µs].
+        deadline_us: u64,
+        /// How long the job had waited when it was dropped [µs].
+        waited_us: u64,
+    },
+    /// Execution-layer failure: engine error or a caught engine panic
+    /// (the panic fails only the batch it was in; the route keeps
+    /// serving).
+    Engine(String),
+    /// Malformed request (arity/shape/routing), refused before
+    /// execution.
+    BadRequest(String),
+    /// The coordinator is shutting down; queued jobs are answered with
+    /// this error instead of being executed or silently dropped.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected { class, depth, retry_after_us } => write!(
+                f,
+                "rejected: {class} queue full (depth {depth}); retry after {retry_after_us} µs"
+            ),
+            ServeError::Shed { consecutive_failures, retry_after_us } => write!(
+                f,
+                "shed: circuit open after {consecutive_failures} consecutive batch failures; \
+                 retry after {retry_after_us} µs"
+            ),
+            ServeError::Expired { deadline_us, waited_us } => write!(
+                f,
+                "expired: {deadline_us} µs deadline passed after {waited_us} µs in queue \
+                 (never executed)"
+            ),
+            ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServeError::ShuttingDown => f.write_str("coordinator shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Overload policy of one coordinator: admission caps and breaker
+/// tuning. Shared by every route the coordinator starts.
+#[derive(Debug, Clone, Copy)]
+pub struct QosPolicy {
+    /// Per-class admission cap, indexed by [`QosClass::index`]: the
+    /// maximum number of admitted-but-unanswered jobs per (route,
+    /// class). Admissions beyond the cap return
+    /// [`ServeError::Rejected`].
+    pub queue_cap: [usize; 3],
+    /// Consecutive failed batches that trip a route's circuit breaker.
+    pub breaker_trip: u32,
+    /// How long a tripped breaker sheds before half-opening [µs].
+    pub breaker_cooldown_us: u64,
+}
+
+impl Default for QosPolicy {
+    fn default() -> QosPolicy {
+        QosPolicy {
+            // Control gets the deepest queue (it drains first anyway);
+            // bulk the shallowest, so overload converts to explicit
+            // shed responses quickly instead of a long silent stall.
+            queue_cap: [4096, 2048, 1024],
+            breaker_trip: 5,
+            breaker_cooldown_us: 100_000,
+        }
+    }
+}
+
+/// Shared admission state of one route: per-class depth gauges the
+/// submitting side checks before enqueueing, plus the circuit-breaker
+/// state the route worker updates after every batch.
+///
+/// Depths count **admitted but unanswered** jobs (queued *or* in the
+/// batch currently executing); the worker releases one unit per job when
+/// its response is sent, whatever the outcome. The count is maintained
+/// with relaxed-failure `fetch_add`/`fetch_sub` pairs, so a burst racing
+/// the cap can transiently overshoot by the number of racing submitters
+/// — bounded and harmless for load shedding.
+#[derive(Debug)]
+pub(crate) struct RouteGate {
+    /// Default class for jobs submitted without an override.
+    pub(crate) default_class: QosClass,
+    policy: QosPolicy,
+    /// Route batch size (retry-hint quantum).
+    batch: usize,
+    /// Route batching window [µs] (retry-hint quantum).
+    window_us: u64,
+    depths: [AtomicUsize; 3],
+    /// Monotonic time base for the breaker timestamps.
+    epoch: Instant,
+    /// µs since `epoch` until which the breaker sheds; `0` = closed.
+    open_until_us: AtomicU64,
+    /// Consecutive failed batches (reset by any successful batch).
+    failures: AtomicU32,
+}
+
+impl RouteGate {
+    /// Gate for one route.
+    pub(crate) fn new(
+        default_class: QosClass,
+        policy: QosPolicy,
+        batch: usize,
+        window_us: u64,
+    ) -> RouteGate {
+        RouteGate {
+            default_class,
+            policy,
+            batch: batch.max(1),
+            window_us: window_us.max(1),
+            depths: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            epoch: Instant::now(),
+            open_until_us: AtomicU64::new(0),
+            failures: AtomicU32::new(0),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Remaining breaker cooldown, or `None` when the breaker is closed
+    /// (or half-open: a lapsed cooldown admits probes again).
+    pub(crate) fn breaker_open(&self) -> Option<(u32, u64)> {
+        let until = self.open_until_us.load(Ordering::Acquire);
+        if until == 0 {
+            return None;
+        }
+        let now = self.now_us();
+        if now < until {
+            Some((self.failures.load(Ordering::Relaxed), until - now))
+        } else {
+            None
+        }
+    }
+
+    /// Try to admit one job of `class`. On success the class depth is
+    /// charged one unit (released via [`RouteGate::release`] when the
+    /// job is answered); on refusal the returned error carries the
+    /// retry-after hint.
+    pub(crate) fn admit(&self, class: QosClass) -> Result<(), ServeError> {
+        if let Some((consecutive_failures, retry_after_us)) = self.breaker_open() {
+            return Err(ServeError::Shed { consecutive_failures, retry_after_us });
+        }
+        let i = class.index();
+        let prev = self.depths[i].fetch_add(1, Ordering::AcqRel);
+        if prev >= self.policy.queue_cap[i] {
+            self.depths[i].fetch_sub(1, Ordering::AcqRel);
+            // Backlog expressed in batch windows: a full queue of D jobs
+            // needs ~D/batch flushes, each at most one window apart.
+            let retry_after_us =
+                self.window_us.saturating_mul(prev as u64 / self.batch as u64 + 1);
+            return Err(ServeError::Rejected { class, depth: prev, retry_after_us });
+        }
+        Ok(())
+    }
+
+    /// Release one admitted unit of `class` (the job was answered).
+    pub(crate) fn release(&self, class: QosClass) {
+        self.depths[class.index()].fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Admitted-but-unanswered depth of `class`.
+    pub(crate) fn depth(&self, class: QosClass) -> usize {
+        self.depths[class.index()].load(Ordering::Acquire)
+    }
+
+    /// A batch succeeded: reset the failure streak and close the breaker
+    /// (a half-open probe that succeeds recovers the route).
+    pub(crate) fn on_success(&self) {
+        self.failures.store(0, Ordering::Relaxed);
+        self.open_until_us.store(0, Ordering::Release);
+    }
+
+    /// A batch failed: extend the failure streak, tripping (or
+    /// re-tripping, for a failed half-open probe) the breaker at the
+    /// policy threshold. Returns `true` when this failure tripped it.
+    pub(crate) fn on_failure(&self) -> bool {
+        let streak = self.failures.fetch_add(1, Ordering::Relaxed).saturating_add(1);
+        if streak >= self.policy.breaker_trip {
+            self.open_until_us
+                .store(self.now_us() + self.policy.breaker_cooldown_us, Ordering::Release);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_order_and_names_round_trip() {
+        assert!(QosClass::Control < QosClass::Interactive);
+        assert!(QosClass::Interactive < QosClass::Bulk);
+        for (i, c) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(QosClass::parse(c.name()), Some(*c));
+        }
+        assert_eq!(QosClass::parse("batch"), None);
+        assert_eq!(QosClass::default(), QosClass::Interactive);
+    }
+
+    #[test]
+    fn gate_admits_to_cap_then_rejects_with_retry_hint() {
+        let policy = QosPolicy { queue_cap: [2, 2, 2], ..QosPolicy::default() };
+        let gate = RouteGate::new(QosClass::Bulk, policy, 4, 100);
+        assert!(gate.admit(QosClass::Bulk).is_ok());
+        assert!(gate.admit(QosClass::Bulk).is_ok());
+        match gate.admit(QosClass::Bulk) {
+            Err(ServeError::Rejected { class, depth, retry_after_us }) => {
+                assert_eq!(class, QosClass::Bulk);
+                assert_eq!(depth, 2);
+                assert!(retry_after_us >= 100);
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        // Caps are per class: control still admits.
+        assert!(gate.admit(QosClass::Control).is_ok());
+        // Releasing frees a slot.
+        gate.release(QosClass::Bulk);
+        assert!(gate.admit(QosClass::Bulk).is_ok());
+    }
+
+    #[test]
+    fn breaker_trips_after_streak_and_recovers_on_success() {
+        let policy =
+            QosPolicy { breaker_trip: 3, breaker_cooldown_us: 3_600_000_000, ..QosPolicy::default() };
+        let gate = RouteGate::new(QosClass::Interactive, policy, 4, 100);
+        assert!(!gate.on_failure());
+        assert!(!gate.on_failure());
+        assert!(gate.breaker_open().is_none(), "two failures must not trip a 3-trip breaker");
+        assert!(gate.on_failure(), "third failure trips");
+        let (fails, retry) = gate.breaker_open().expect("breaker open");
+        assert_eq!(fails, 3);
+        assert!(retry > 0);
+        assert!(matches!(gate.admit(QosClass::Control), Err(ServeError::Shed { .. })));
+        // A successful (half-open) batch closes the breaker.
+        gate.on_success();
+        assert!(gate.breaker_open().is_none());
+        assert!(gate.admit(QosClass::Control).is_ok());
+    }
+
+    #[test]
+    fn serve_errors_display_their_fields() {
+        let s = ServeError::Rejected { class: QosClass::Bulk, depth: 7, retry_after_us: 400 }
+            .to_string();
+        assert!(s.contains("bulk") && s.contains("400"), "{s}");
+        let s = ServeError::Expired { deadline_us: 10, waited_us: 55 }.to_string();
+        assert!(s.contains("never executed"), "{s}");
+        let s = ServeError::Shed { consecutive_failures: 5, retry_after_us: 9 }.to_string();
+        assert!(s.contains("circuit open"), "{s}");
+    }
+}

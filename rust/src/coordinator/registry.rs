@@ -10,6 +10,7 @@
 //! knob, per the paper's precision-aware co-design).
 
 use super::batcher::{BackendSpec, TrajLane};
+use super::qos::QosClass;
 use crate::model::{builtin_robot, Robot};
 use crate::quant::QFormat;
 use crate::runtime::artifact::ArtifactFn;
@@ -66,6 +67,10 @@ pub struct RobotEntry {
     /// per (robot, format) and applied on the quantized M⁻¹ route;
     /// ignored by native entries and by non-Minv routes.
     pub comp: bool,
+    /// Default QoS class of every route of this robot (`!class` in the
+    /// CLI spec): `Control` drains before `Interactive` before `Bulk`,
+    /// and per-request [`super::SubmitOptions`] can still override it.
+    pub qos: QosClass,
 }
 
 /// Registry of robots one coordinator serves, keyed by robot name.
@@ -119,7 +124,8 @@ impl RobotRegistry {
         comp: bool,
     ) -> &mut Self {
         assert!(batch > 0, "batch must be positive");
-        let entry = RobotEntry { robot, backend, batch, parallel, comp };
+        let entry =
+            RobotEntry { robot, backend, batch, parallel, comp, qos: QosClass::default() };
         match self.entries.iter_mut().find(|e| e.robot.name == entry.robot.name) {
             Some(slot) => *slot = entry,
             None => self.entries.push(entry),
@@ -132,6 +138,16 @@ impl RobotRegistry {
     pub fn set_parallelism(&mut self, parallel: usize) -> &mut Self {
         for e in &mut self.entries {
             e.parallel = parallel;
+        }
+        self
+    }
+
+    /// Set the default QoS class of a registered robot's routes (no-op
+    /// for unknown names). `Control` traffic drains before
+    /// `Interactive` before `Bulk` on every route of the coordinator.
+    pub fn set_qos(&mut self, name: &str, qos: QosClass) -> &mut Self {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.robot.name == name) {
+            e.qos = qos;
         }
         self
     }
@@ -170,6 +186,7 @@ impl RobotRegistry {
                         function,
                         batch: entry.batch,
                         parallel: entry.parallel,
+                        class: entry.qos,
                     },
                     BackendKind::NativeQuant(fmt) => BackendSpec::NativeQuant {
                         robot: entry.robot.clone(),
@@ -178,6 +195,7 @@ impl RobotRegistry {
                         fmt,
                         parallel: entry.parallel,
                         comp: entry.comp,
+                        class: entry.qos,
                     },
                     BackendKind::NativeInt(fmt) => BackendSpec::NativeInt {
                         robot: entry.robot.clone(),
@@ -185,6 +203,7 @@ impl RobotRegistry {
                         batch: entry.batch,
                         fmt,
                         parallel: entry.parallel,
+                        class: entry.qos,
                     },
                 });
             }
@@ -196,6 +215,7 @@ impl RobotRegistry {
                     BackendKind::NativeQuant(fmt) => TrajLane::Quant(fmt),
                     BackendKind::NativeInt(fmt) => TrajLane::Int(fmt),
                 },
+                class: entry.qos,
             });
         }
         specs
@@ -221,11 +241,13 @@ impl RobotRegistry {
 
     /// Build a registry from a CLI spec: a comma-separated list of
     /// entries
-    /// `name[=path.urdf][:native|:quant[@INT.FRAC][+comp]|:qint[@INT.FRAC]]`.
+    /// `name[=path.urdf][:native|:quant[@INT.FRAC][+comp]|:qint[@INT.FRAC]][!class]`.
     /// Plain names resolve against the builtin robots; `name=path.urdf`
     /// loads the robot through the URDF-lite importer
     /// ([`crate::model::urdf::robot_from_urdf`]) and registers it under
-    /// `name`. Examples:
+    /// `name`. The optional `!control` / `!interactive` / `!bulk`
+    /// suffix sets the robot's default QoS class (default:
+    /// `interactive`). Examples:
     ///
     /// * `iiwa` — one builtin robot, f64 native backend;
     /// * `iiwa,atlas:quant` — two robots, atlas quantized at the default
@@ -238,10 +260,24 @@ impl RobotRegistry {
     ///   pair or registration **fails here** with the overflow witness
     ///   (an explicit `qint` spec never degrades to the rounded lane);
     /// * `arm=models/arm.urdf:quant` — a URDF-loaded robot named `arm`
-    ///   served next to the builtins.
+    ///   served next to the builtins;
+    /// * `iiwa!control,atlas:quant@12.12!bulk` — iiwa's routes drain as
+    ///   `Control` (ahead of everything else under overload), atlas'
+    ///   quantized routes as `Bulk` (drained last, shed first).
     pub fn from_cli_spec(spec: &str, batch: usize) -> Result<RobotRegistry, String> {
         let mut reg = RobotRegistry::new();
-        for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        for full_entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            // The QoS suffix is split off first — it always trails the
+            // backend (`atlas:quant@12.12!bulk`). A '!'-suffix that is
+            // not a class name stays part of the entry and fails robot
+            // resolution loudly, instead of being silently dropped.
+            let (entry, qos) = match full_entry.rsplit_once('!') {
+                Some((head, tail)) => match QosClass::parse(tail.trim()) {
+                    Some(class) => (head.trim(), class),
+                    None => (full_entry, QosClass::default()),
+                },
+                None => (full_entry, QosClass::default()),
+            };
             // URDF entries are recognized by '=' BEFORE splitting off the
             // backend, and their backend is the suffix after the LAST ':'
             // only when it looks like one — so paths containing ':'
@@ -337,7 +373,9 @@ impl RobotRegistry {
                     }
                 }
             };
+            let name = robot.name.clone();
             reg.register_with(robot, backend, batch, 1, comp);
+            reg.set_qos(&name, qos);
         }
         if reg.is_empty() {
             return Err("no robots given".to_string());
@@ -481,9 +519,9 @@ mod tests {
                 BackendSpec::NativeInt { parallel, .. } => {
                     assert_eq!(parallel, 0, "qint routes must inherit parallelism");
                 }
-                BackendSpec::Trajectory { .. } => {}
+                BackendSpec::Trajectory { .. } | BackendSpec::Chaos { .. } => {}
                 #[cfg(feature = "pjrt")]
-                BackendSpec::Pjrt(_) => {}
+                BackendSpec::Pjrt { .. } => {}
             }
         }
     }
@@ -532,6 +570,39 @@ mod tests {
         // integer datapath.
         assert!(RobotRegistry::from_cli_spec("iiwa:qint+comp", 16).is_err());
         assert!(RobotRegistry::from_cli_spec("iiwa:qint@12.12+comp", 16).is_err());
+    }
+
+    /// The `!class` suffix sets the robot's default QoS class and flows
+    /// through to every expanded backend spec.
+    #[test]
+    fn cli_spec_parses_qos_classes() {
+        let reg =
+            RobotRegistry::from_cli_spec("iiwa!control,atlas:quant@12.12!bulk,hyq", 16).unwrap();
+        assert_eq!(reg.get("iiwa").unwrap().qos, QosClass::Control);
+        assert_eq!(reg.get("atlas").unwrap().qos, QosClass::Bulk);
+        assert_eq!(
+            reg.get("atlas").unwrap().backend,
+            BackendKind::NativeQuant(DEFAULT_QUANT_FORMAT),
+            "the backend still parses underneath the QoS suffix"
+        );
+        assert_eq!(reg.get("hyq").unwrap().qos, QosClass::Interactive, "default class");
+        for spec in reg.specs() {
+            let want = match spec.robot_name() {
+                "iiwa" => QosClass::Control,
+                "atlas" => QosClass::Bulk,
+                _ => QosClass::Interactive,
+            };
+            assert_eq!(spec.class(), want, "spec class for {}", spec.robot_name());
+        }
+        // A '!'-suffix that is not a class name fails loudly instead of
+        // being silently dropped.
+        let err = RobotRegistry::from_cli_spec("iiwa!fast", 16).unwrap_err();
+        assert!(err.contains("iiwa!fast"), "{err}");
+        // set_qos on an unknown name is a no-op.
+        let mut reg = RobotRegistry::new();
+        reg.register(builtin_robot("iiwa").unwrap(), BackendKind::Native, 8)
+            .set_qos("panda", QosClass::Bulk);
+        assert_eq!(reg.get("iiwa").unwrap().qos, QosClass::Interactive);
     }
 
     /// Programmatic registrations go through [`RobotRegistry::validate`].

@@ -1,31 +1,109 @@
-//! Serving statistics: request latency distribution and batch fill.
+//! Serving statistics: request latency distributions (aggregate and
+//! per QoS class), batch fill, and the overload counters (rejected /
+//! expired / shed) the admission-control layer feeds.
 
+use super::qos::QosClass;
 use crate::util::rng::Rng;
+use std::sync::{Mutex, MutexGuard};
 
-/// Reservoir capacity for the latency sample. Bounded memory no matter
+/// Reservoir capacity for each latency sample. Bounded memory no matter
 /// how long the server runs.
 const RESERVOIR: usize = 65536;
 
-/// Mutable accumulator the workers feed; shared behind a mutex.
+/// Lock the shared stats accumulator, recovering from poisoning: a
+/// recorder that panicked while holding the lock must degrade to
+/// slightly-stale counters, not wedge every later `stats()` /
+/// record / shutdown path with a cascading `unwrap` panic. The inner
+/// state is a plain accumulator (counters + reservoirs), so observing a
+/// half-applied record is harmless.
+pub(crate) fn lock_stats(stats: &Mutex<StatsInner>) -> MutexGuard<'_, StatsInner> {
+    stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Seeded uniform latency reservoir (Vitter's Algorithm R) over every
+/// value ever recorded — not the first `RESERVOIR`, which would freeze
+/// the percentiles on startup traffic.
+#[derive(Debug)]
+struct Reservoir {
+    /// The current sample (bounded by `RESERVOIR`).
+    samples: Vec<f64>,
+    /// Values recorded so far (the sampling denominator).
+    seen: u64,
+    /// Seeded PRNG driving replacement — deterministic across runs for a
+    /// given record sequence.
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::new(seed) }
+    }
+
+    fn record(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: keep the newcomer with probability K/seen by
+            // replacing a uniformly random slot.
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < RESERVOIR {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Nearest-rank percentiles over a sorted copy of the sample.
+    /// `total_cmp` keeps the sort total when a non-finite latency slips
+    /// in (NaNs order after +∞) — a poisoned sample must never panic the
+    /// snapshot path.
+    fn percentiles<const K: usize>(&self, ps: [f64; K]) -> [f64; K] {
+        let mut lat = self.samples.clone();
+        lat.sort_by(f64::total_cmp);
+        ps.map(|p| nearest_rank(&lat, p))
+    }
+}
+
+/// Nearest-rank percentile: the ⌈p·len⌉-th smallest value (1-based), so
+/// `nearest_rank(v, 0.5)` over 100 samples reads index 49.
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// Mutable accumulator the workers feed; shared behind a mutex (see
+/// [`lock_stats`] for the poison-recovering access path).
 #[derive(Debug)]
 pub struct StatsInner {
-    /// Requests answered successfully.
+    /// Requests answered successfully (all classes).
     pub completed: u64,
-    /// Batches executed.
+    /// Batches executed (including failed executions — they consumed a
+    /// batch slot and wall clock).
     pub batches: u64,
     /// Sum of per-batch fill fractions (for the mean).
     pub fill_sum: f64,
     /// Sum of per-batch execution times [µs].
     pub exec_us_sum: f64,
-    /// Request latencies [µs]: a uniform reservoir sample (Vitter's
-    /// Algorithm R) over **all** completed requests — not the first
-    /// `RESERVOIR`, which would freeze p50/p95 on startup traffic.
-    /// `completed` doubles as the sampling denominator (every completed
-    /// request records exactly one latency).
-    pub latencies_us: Vec<f64>,
-    /// Seeded PRNG driving reservoir replacement — deterministic across
-    /// runs for a given record sequence.
-    rng: Rng,
+    /// Jobs refused at admission (class queue full).
+    pub rejected: u64,
+    /// Jobs dropped at batch formation because their deadline had
+    /// passed — never executed.
+    pub expired: u64,
+    /// Jobs refused at admission because the route's circuit breaker was
+    /// open.
+    pub shed: u64,
+    /// Circuit-breaker trips (including re-trips of failed half-open
+    /// probes).
+    pub breaker_trips: u64,
+    /// Aggregate latency reservoir over every completed request.
+    all_lat: Reservoir,
+    /// Completions per QoS class, indexed by [`QosClass::index`].
+    class_completed: [u64; 3],
+    /// Per-class latency reservoirs, indexed by [`QosClass::index`].
+    class_lat: [Reservoir; 3],
 }
 
 impl Default for StatsInner {
@@ -35,27 +113,30 @@ impl Default for StatsInner {
             batches: 0,
             fill_sum: 0.0,
             exec_us_sum: 0.0,
-            latencies_us: Vec::new(),
-            rng: Rng::new(0x5EED_1A7E),
+            rejected: 0,
+            expired: 0,
+            shed: 0,
+            breaker_trips: 0,
+            all_lat: Reservoir::new(0x5EED_1A7E),
+            class_completed: [0; 3],
+            class_lat: [
+                Reservoir::new(0x5EED_1A7E ^ 1),
+                Reservoir::new(0x5EED_1A7E ^ 2),
+                Reservoir::new(0x5EED_1A7E ^ 3),
+            ],
         }
     }
 }
 
 impl StatsInner {
-    /// Record one completed request's queue-to-answer latency.
-    pub fn record(&mut self, latency_us: f64) {
+    /// Record one completed request's queue-to-answer latency under its
+    /// QoS class.
+    pub fn record(&mut self, class: QosClass, latency_us: f64) {
         self.completed += 1;
-        if self.latencies_us.len() < RESERVOIR {
-            self.latencies_us.push(latency_us);
-        } else {
-            // Algorithm R: keep the newcomer with probability K/seen by
-            // replacing a uniformly random slot — every latency ever
-            // recorded ends up in the reservoir with equal probability.
-            let j = (self.rng.next_u64() % self.completed) as usize;
-            if j < RESERVOIR {
-                self.latencies_us[j] = latency_us;
-            }
-        }
+        self.all_lat.record(latency_us);
+        let i = class.index();
+        self.class_completed[i] += 1;
+        self.class_lat[i].record(latency_us);
     }
 
     /// Record one executed batch (fill fraction and execution time).
@@ -67,19 +148,18 @@ impl StatsInner {
 
     /// Freeze the current counters into an immutable snapshot.
     pub fn snapshot(&self) -> ServeStats {
-        let mut lat = self.latencies_us.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                // Nearest-rank: the ⌈p·len⌉-th smallest value (1-based),
-                // so pct(0.5) over 100 samples reads index 49 — the old
-                // `(len·p) as usize` truncation read index 50.
-                let rank = (p * lat.len() as f64).ceil() as usize;
-                lat[rank.saturating_sub(1).min(lat.len() - 1)]
-            }
-        };
+        let [p50, p95, p99] = self.all_lat.percentiles([0.50, 0.95, 0.99]);
+        let mut per_class = [ClassStats::default(); 3];
+        for c in QosClass::ALL {
+            let i = c.index();
+            let [p50, p99, p999] = self.class_lat[i].percentiles([0.50, 0.99, 0.999]);
+            per_class[i] = ClassStats {
+                completed: self.class_completed[i],
+                p50_latency_us: p50,
+                p99_latency_us: p99,
+                p999_latency_us: p999,
+            };
+        }
         ServeStats {
             completed: self.completed,
             batches: self.batches,
@@ -89,16 +169,35 @@ impl StatsInner {
             } else {
                 0.0
             },
-            p50_latency_us: pct(0.50),
-            p95_latency_us: pct(0.95),
+            p50_latency_us: p50,
+            p95_latency_us: p95,
+            p99_latency_us: p99,
+            rejected: self.rejected,
+            expired: self.expired,
+            shed: self.shed,
+            breaker_trips: self.breaker_trips,
+            per_class,
         }
     }
+}
+
+/// Per-QoS-class slice of a [`ServeStats`] snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassStats {
+    /// Requests of this class answered successfully.
+    pub completed: u64,
+    /// Median request latency [µs].
+    pub p50_latency_us: f64,
+    /// 99th-percentile request latency [µs].
+    pub p99_latency_us: f64,
+    /// 99.9th-percentile request latency [µs].
+    pub p999_latency_us: f64,
 }
 
 /// Immutable snapshot for reporting.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeStats {
-    /// Requests answered successfully.
+    /// Requests answered successfully (all classes).
     pub completed: u64,
     /// Batches executed.
     pub batches: u64,
@@ -106,10 +205,31 @@ pub struct ServeStats {
     pub mean_fill: f64,
     /// Mean per-batch execution time [µs].
     pub mean_exec_us: f64,
-    /// Median request latency [µs].
+    /// Median request latency [µs], all classes.
     pub p50_latency_us: f64,
-    /// 95th-percentile request latency [µs].
+    /// 95th-percentile request latency [µs], all classes.
     pub p95_latency_us: f64,
+    /// 99th-percentile request latency [µs], all classes.
+    pub p99_latency_us: f64,
+    /// Jobs refused at admission (class queue full).
+    pub rejected: u64,
+    /// Jobs dropped at batch formation past their deadline (never
+    /// executed).
+    pub expired: u64,
+    /// Jobs refused because the route's circuit breaker was open.
+    pub shed: u64,
+    /// Circuit-breaker trips.
+    pub breaker_trips: u64,
+    /// Per-class completions and latency percentiles, indexed by
+    /// [`QosClass::index`].
+    pub per_class: [ClassStats; 3],
+}
+
+impl ServeStats {
+    /// The per-class slice for `class`.
+    pub fn class(&self, class: QosClass) -> &ClassStats {
+        &self.per_class[class.index()]
+    }
 }
 
 #[cfg(test)]
@@ -120,7 +240,7 @@ mod tests {
     fn percentiles_ordered() {
         let mut s = StatsInner::default();
         for i in 0..100 {
-            s.record(i as f64);
+            s.record(QosClass::Interactive, i as f64);
         }
         s.record_batch(0.5, 10.0);
         s.record_batch(1.0, 20.0);
@@ -129,6 +249,11 @@ mod tests {
         assert_eq!(snap.batches, 2);
         assert!((snap.mean_fill - 0.75).abs() < 1e-12);
         assert!(snap.p50_latency_us <= snap.p95_latency_us);
+        assert!(snap.p95_latency_us <= snap.p99_latency_us);
+        // Everything was interactive; the other class slices stay empty.
+        assert_eq!(snap.class(QosClass::Interactive).completed, 100);
+        assert_eq!(snap.class(QosClass::Control).completed, 0);
+        assert_eq!(snap.class(QosClass::Control).p99_latency_us, 0.0);
     }
 
     /// Nearest-rank percentiles: over samples 0..100 the median is the
@@ -137,34 +262,53 @@ mod tests {
     fn nearest_rank_indexing() {
         let mut s = StatsInner::default();
         for i in 0..100 {
-            s.record(i as f64);
+            s.record(QosClass::Control, i as f64);
         }
         let snap = s.snapshot();
         assert_eq!(snap.p50_latency_us, 49.0);
         assert_eq!(snap.p95_latency_us, 94.0);
+        assert_eq!(snap.class(QosClass::Control).p50_latency_us, 49.0);
+        assert_eq!(snap.class(QosClass::Control).p99_latency_us, 98.0);
         // Single sample: every percentile is that sample.
         let mut one = StatsInner::default();
-        one.record(7.0);
+        one.record(QosClass::Bulk, 7.0);
         let snap = one.snapshot();
         assert_eq!(snap.p50_latency_us, 7.0);
         assert_eq!(snap.p95_latency_us, 7.0);
+        assert_eq!(snap.class(QosClass::Bulk).p999_latency_us, 7.0);
+    }
+
+    /// Regression: a NaN latency sample must not panic the percentile
+    /// sort (the old `partial_cmp(..).unwrap()` did). `total_cmp` orders
+    /// NaN after +∞, so the finite percentiles stay meaningful.
+    #[test]
+    fn nan_sample_does_not_panic_snapshot() {
+        let mut s = StatsInner::default();
+        s.record(QosClass::Interactive, 1.0);
+        s.record(QosClass::Interactive, f64::NAN);
+        s.record(QosClass::Interactive, 2.0);
+        s.record(QosClass::Interactive, 3.0);
+        let snap = s.snapshot(); // must not panic
+        assert_eq!(snap.completed, 4);
+        assert_eq!(snap.p50_latency_us, 2.0, "NaN sorts last; the median stays finite");
+        assert!(!snap.p50_latency_us.is_nan());
     }
 
     /// Under sustained load the reservoir must keep sampling: late
     /// requests appear and the percentiles track the whole run, not the
-    /// first 65536 (where the old truncating buffer froze — with
+    /// first 65536 (where a truncating buffer would freeze — with
     /// ascending latencies it would report p50 ≈ 32768 forever).
     #[test]
     fn reservoir_samples_whole_run() {
         let mut s = StatsInner::default();
         let total = 200_000u64;
         for i in 0..total {
-            s.record(i as f64);
+            s.record(QosClass::Bulk, i as f64);
         }
         assert_eq!(s.completed, total);
-        assert_eq!(s.latencies_us.len(), RESERVOIR, "reservoir stays bounded");
+        assert_eq!(s.all_lat.samples.len(), RESERVOIR, "reservoir stays bounded");
         assert!(
-            s.latencies_us.iter().any(|&x| x > 150_000.0),
+            s.all_lat.samples.iter().any(|&x| x > 150_000.0),
             "late latencies must be sampled"
         );
         let snap = s.snapshot();
@@ -172,6 +316,13 @@ mod tests {
         // reservoir of 65536 samples lands well within ±5%.
         assert!((snap.p50_latency_us - 100_000.0).abs() < 5_000.0, "p50 {}", snap.p50_latency_us);
         assert!((snap.p95_latency_us - 190_000.0).abs() < 5_000.0, "p95 {}", snap.p95_latency_us);
+        // The class reservoir saw the same stream (its own seed).
+        assert_eq!(s.class_lat[QosClass::Bulk.index()].samples.len(), RESERVOIR);
+        assert!(
+            (snap.class(QosClass::Bulk).p50_latency_us - 100_000.0).abs() < 5_000.0,
+            "class p50 {}",
+            snap.class(QosClass::Bulk).p50_latency_us
+        );
     }
 
     /// Same record sequence ⇒ same reservoir (seeded, deterministic).
@@ -180,9 +331,9 @@ mod tests {
         let run = || {
             let mut s = StatsInner::default();
             for i in 0..100_000 {
-                s.record(i as f64);
+                s.record(QosClass::Interactive, i as f64);
             }
-            s.latencies_us
+            s.all_lat.samples
         };
         assert_eq!(run(), run());
     }
@@ -192,5 +343,28 @@ mod tests {
         let snap = StatsInner::default().snapshot();
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.p95_latency_us, 0.0);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.expired, 0);
+        assert_eq!(snap.shed, 0);
+    }
+
+    /// A recorder that panicked while holding the stats lock poisons the
+    /// mutex; [`lock_stats`] must recover the inner state instead of
+    /// cascading the panic into every later `stats()` call.
+    #[test]
+    fn lock_stats_recovers_from_poison() {
+        let m = Mutex::new(StatsInner::default());
+        lock_stats(&m).record(QosClass::Control, 5.0);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("injected recorder panic");
+        }));
+        assert!(poison.is_err());
+        assert!(m.is_poisoned(), "mutex must actually be poisoned for this test");
+        // Degraded access still works: record and snapshot proceed.
+        lock_stats(&m).record(QosClass::Control, 6.0);
+        let snap = lock_stats(&m).snapshot();
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.class(QosClass::Control).completed, 2);
     }
 }

@@ -697,8 +697,10 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
     }
 }
 
-/// Best-effort extraction of a panic payload's message.
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+/// Best-effort extraction of a panic payload's message. Shared with the
+/// coordinator's batch-boundary catch (`coordinator::batcher`), which
+/// reports caught engine panics through the same text.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {

@@ -31,7 +31,16 @@
 //!   serial). The default `native` backend
 //!   serves from the allocation-free workspace cores (no artifacts
 //!   needed); `pjrt` executes AOT artifacts and requires
-//!   `--features pjrt` plus `--artifacts DIR`. See docs/serving.md.
+//!   `--features pjrt` plus `--artifacts DIR`. Registry entries take an
+//!   optional `!control`/`!interactive`/`!bulk` suffix selecting the
+//!   route's QoS class (e.g. `iiwa!control,atlas:quant@12.12!bulk`).
+//!   See docs/serving.md.
+//! * `loadgen [--rate R] [--ramp] [--classes MIX] [--smoke]` — open-loop
+//!   Poisson overload harness against a capacity-pinned route:
+//!   per-class p50/p99/p99.9, shed rate, goodput vs offered load;
+//!   writes `rust/BENCH_serve.json`. `--smoke` is the short CI mode
+//!   asserting the overload invariants (no expired job executed,
+//!   monotone shedding, Control-p99 bound, breaker recovery).
 
 use draco::accel::{self, designs::RbdFn, Design};
 use draco::model::{builtin_robot, robot_registry};
@@ -49,9 +58,10 @@ fn main() {
         Some("quantize") => cmd_quantize(&args),
         Some("rates") => cmd_rates(&args),
         Some("serve") => draco::coordinator::serve_cli(&args),
+        Some("loadgen") => draco::coordinator::loadgen::loadgen_cli(&args),
         _ => {
             eprintln!(
-                "usage: draco <export-robots|info|estimate|quantize|rates|serve> [options]"
+                "usage: draco <export-robots|info|estimate|quantize|rates|serve|loadgen> [options]"
             );
             2
         }

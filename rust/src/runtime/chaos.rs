@@ -1,0 +1,123 @@
+//! Fault-injection engine for robustness testing and the load-generator
+//! harness.
+//!
+//! [`ChaosEngine`] wraps the native f64 engine with two controlled
+//! faults:
+//!
+//! * **Injected panics** — an *infinite* value anywhere in the first
+//!   operand makes the evaluation panic. Infinity is a safe sentinel:
+//!   normal traffic (random states, ramps, steps) never produces an
+//!   infinite joint coordinate, so only deliberately poisoned requests
+//!   trip it. The coordinator's batch-boundary `catch_unwind` and
+//!   circuit breaker are exercised end-to-end this way.
+//! * **Throttling** — a fixed per-execution sleep (`delay_us`) pins the
+//!   route's capacity at ~`batch / delay_us` tasks per µs, so overload
+//!   scenarios ("offer 2× capacity") are deterministic instead of
+//!   depending on how fast the host evaluates dynamics.
+
+use super::native::NativeEngine;
+use super::{ArtifactFn, DynamicsEngine, EngineError};
+use crate::model::Robot;
+use std::time::Duration;
+
+/// Native f64 engine wrapped with injectable panics and a capacity
+/// throttle. See the module docs for the fault model.
+pub struct ChaosEngine {
+    inner: NativeEngine,
+    delay_us: u64,
+}
+
+impl ChaosEngine {
+    /// Wrap the native engine for `robot`/`function` at `batch`, adding
+    /// a `delay_us` sleep to every execution (`0` = no throttle).
+    pub fn new(robot: Robot, function: ArtifactFn, batch: usize, delay_us: u64) -> ChaosEngine {
+        ChaosEngine { inner: NativeEngine::new(robot, function, batch), delay_us }
+    }
+
+    /// Panic when the poisoned-request sentinel (an infinite value) is
+    /// present.
+    fn trip_on_sentinel(values: &[f32]) {
+        if values.iter().any(|x| x.is_infinite()) {
+            panic!("chaos: injected engine panic (infinite operand sentinel)");
+        }
+    }
+
+    fn throttle(&self) {
+        if self.delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+        }
+    }
+}
+
+impl DynamicsEngine for ChaosEngine {
+    fn robot(&self) -> &Robot {
+        self.inner.robot()
+    }
+    fn function(&self) -> ArtifactFn {
+        self.inner.function()
+    }
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
+        if let Some(first) = inputs.first() {
+            ChaosEngine::trip_on_sentinel(first);
+        }
+        self.throttle();
+        self.inner.run(inputs)
+    }
+    fn rollout(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+    ) -> Result<Vec<f32>, EngineError> {
+        ChaosEngine::trip_on_sentinel(q0);
+        self.throttle();
+        self.inner.rollout(q0, qd0, tau, dt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builtin_robot;
+
+    #[test]
+    fn clean_inputs_pass_through_to_the_native_engine() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut chaos = ChaosEngine::new(robot, ArtifactFn::Fd, 2, 0);
+        let inputs = vec![vec![0.1; 2 * n], vec![0.0; 2 * n], vec![0.0; 2 * n]];
+        let out = chaos.run(&inputs).expect("clean batch evaluates");
+        assert_eq!(out.len(), 2 * n);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn infinite_sentinel_panics() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut chaos = ChaosEngine::new(robot, ArtifactFn::Fd, 2, 0);
+        let mut q = vec![0.1; 2 * n];
+        q[3] = f32::INFINITY;
+        let inputs = vec![q, vec![0.0; 2 * n], vec![0.0; 2 * n]];
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chaos.run(&inputs)));
+        assert!(hit.is_err(), "the sentinel must panic, not evaluate");
+    }
+
+    #[test]
+    fn throttle_delays_execution() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let mut chaos = ChaosEngine::new(robot, ArtifactFn::Fd, 1, 5_000);
+        let inputs = vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]];
+        let t0 = std::time::Instant::now();
+        chaos.run(&inputs).expect("throttled batch still evaluates");
+        assert!(t0.elapsed() >= Duration::from_micros(5_000), "delay must apply");
+    }
+}

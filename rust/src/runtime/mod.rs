@@ -14,6 +14,9 @@
 //!   under a shift schedule proved at construction by the fixed-point
 //!   scaling analysis (`quant::scaling`). Construction fails with the
 //!   overflow witness instead of degrading to the rounded lane.
+//! * [`chaos`] — fault-injection wrapper over the native engine
+//!   (injectable panics + a capacity throttle) used by the robustness
+//!   tests and the `draco loadgen` overload harness.
 //! * [`engine`] (feature `pjrt`) — load AOT-compiled HLO-text artifacts
 //!   (produced once by `python/compile/aot.py`) and execute them through
 //!   PJRT. Python is never on this path — the artifacts are
@@ -29,6 +32,7 @@
 #![warn(missing_docs)]
 
 pub mod artifact;
+pub mod chaos;
 pub mod engine;
 pub mod native;
 pub mod qint;
@@ -39,6 +43,7 @@ use crate::model::Robot;
 pub use artifact::{scan_artifacts, ArtifactFn, ArtifactMeta};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
+pub use chaos::ChaosEngine;
 pub use engine::EngineError;
 pub use native::NativeEngine;
 pub use qint::QIntEngine;

@@ -242,6 +242,6 @@ fn rejected_qint_routes_fail_loudly_not_silently() {
     let ops = vec![vec![0.1f32; n], vec![0.0; n], vec![0.0; n]];
     let res = coord.submit_to("baxter", ArtifactFn::Fd, ops).recv().expect("answer");
     let err = res.expect_err("rejected format must not serve");
-    assert!(err.contains("minv.Dinv"), "route error lost the witness: {err}");
+    assert!(err.to_string().contains("minv.Dinv"), "route error lost the witness: {err}");
     coord.shutdown();
 }

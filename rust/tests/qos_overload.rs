@@ -1,0 +1,257 @@
+//! Overload-robustness integration tests: QoS priority draining,
+//! deadline-aware admission, fault isolation, and circuit-breaker
+//! recovery — all through the public coordinator API.
+//!
+//! Every test drives a `BackendSpec::Chaos` route: its `delay_us`
+//! throttle pins capacity (so "the worker is busy" is a constructed
+//! fact, not a race), and its infinite-operand sentinel injects panics
+//! on demand.
+
+use draco::coordinator::{
+    BackendSpec, Coordinator, QosClass, QosPolicy, ServeError, SubmitOptions,
+};
+use draco::model::builtin_robot;
+use draco::runtime::ArtifactFn;
+use std::time::Duration;
+
+fn chaos_spec(robot_name: &str, batch: usize, delay_us: u64) -> (BackendSpec, usize) {
+    let robot = builtin_robot(robot_name).unwrap();
+    let n = robot.dof();
+    let spec = BackendSpec::Chaos {
+        robot,
+        function: ArtifactFn::Fd,
+        batch,
+        delay_us,
+        class: QosClass::default(),
+    };
+    (spec, n)
+}
+
+fn clean_ops(n: usize) -> Vec<Vec<f32>> {
+    vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]]
+}
+
+fn poison_ops(n: usize) -> Vec<Vec<f32>> {
+    let mut ops = clean_ops(n);
+    ops[0][0] = f32::INFINITY;
+    ops
+}
+
+/// While a throttled worker is busy, a Control job submitted *after* a
+/// pile of Bulk jobs must still ride the next batch: the class lanes
+/// drain strictly by priority, so Control's observed latency stays well
+/// under the Bulk median.
+#[test]
+fn control_jobs_overtake_queued_bulk() {
+    let (spec, n) = chaos_spec("iiwa", 2, 20_000);
+    let coord = Coordinator::start_with_policy(vec![spec], n, 1_000, QosPolicy::default());
+
+    // Warmup batch occupies the worker for ~20 ms …
+    let warm = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+    std::thread::sleep(Duration::from_millis(5));
+    // … then six Bulk jobs enqueue first, one Control job last.
+    let bulk: Vec<_> = (0..6)
+        .map(|_| {
+            coord.submit_to_opts(
+                "iiwa",
+                ArtifactFn::Fd,
+                clean_ops(n),
+                SubmitOptions::class(QosClass::Bulk),
+            )
+        })
+        .collect();
+    let control = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::class(QosClass::Control),
+    );
+
+    warm.recv().expect("answer").expect("warmup ok");
+    control.recv().expect("answer").expect("control ok");
+    for rx in bulk {
+        rx.recv().expect("answer").expect("bulk ok");
+    }
+
+    let st = coord.stats();
+    let ctl = st.class(QosClass::Control);
+    let blk = st.class(QosClass::Bulk);
+    assert_eq!(ctl.completed, 1);
+    assert_eq!(blk.completed, 6);
+    // Control rode the first post-warmup batch (~2 execution slots of
+    // wait); the Bulk median sat at least one extra 20 ms slot behind it.
+    assert!(
+        ctl.p50_latency_us + 15_000.0 < blk.p50_latency_us,
+        "control p50 {} µs did not overtake bulk p50 {} µs",
+        ctl.p50_latency_us,
+        blk.p50_latency_us
+    );
+    coord.shutdown();
+}
+
+/// Admission control: beyond the per-class cap the coordinator answers
+/// `Rejected` immediately — with the offending class, the cap it hit,
+/// and a retry hint — instead of queueing without bound.
+#[test]
+fn over_cap_submissions_are_rejected_with_retry_hint() {
+    let (spec, n) = chaos_spec("iiwa", 2, 50_000);
+    let policy = QosPolicy { queue_cap: [1, 1, 1], ..QosPolicy::default() };
+    let coord = Coordinator::start_with_policy(vec![spec], n, 1_000, policy);
+
+    let first = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::class(QosClass::Bulk),
+    );
+    let second = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::class(QosClass::Bulk),
+    );
+    match second.recv().expect("rejection is answered immediately") {
+        Err(ServeError::Rejected { class, depth, retry_after_us }) => {
+            assert_eq!(class, QosClass::Bulk);
+            assert_eq!(depth, 1, "cap of 1 was full");
+            assert!(retry_after_us > 0, "rejection must carry a retry hint");
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    first.recv().expect("answer").expect("admitted job still served");
+    let st = coord.stats();
+    assert_eq!(st.rejected, 1);
+    assert_eq!(st.completed, 1);
+    coord.shutdown();
+}
+
+/// A job whose deadline lapses while it waits is answered `Expired` at
+/// batch formation and never reaches the engine.
+#[test]
+fn deadline_lapse_answers_expired_without_execution() {
+    let (spec, n) = chaos_spec("iiwa", 2, 30_000);
+    let coord = Coordinator::start_with_policy(vec![spec], n, 1_000, QosPolicy::default());
+
+    // Occupy the worker for ~30 ms, then submit a 5 ms deadline.
+    let warm = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+    std::thread::sleep(Duration::from_millis(5));
+    let doomed = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::deadline_us(5_000),
+    );
+    match doomed.recv().expect("expired job is still answered") {
+        Err(ServeError::Expired { deadline_us, waited_us }) => {
+            assert_eq!(deadline_us, 5_000);
+            assert!(waited_us >= 5_000, "reported wait {waited_us} µs below the deadline");
+        }
+        other => panic!("expected Expired, got {other:?}"),
+    }
+    warm.recv().expect("answer").expect("warmup ok");
+    let st = coord.stats();
+    assert_eq!(st.expired, 1);
+    assert_eq!(st.completed, 1, "the expired job must not count as completed");
+    coord.shutdown();
+}
+
+/// A panicking engine fails only its own route's batch: the sibling
+/// route keeps serving, the tripped route sheds while its breaker is
+/// open, and a half-open probe after the cooldown recovers it.
+#[test]
+fn route_panic_is_isolated_and_breaker_recovers() {
+    let (iiwa_spec, n_iiwa) = chaos_spec("iiwa", 2, 0);
+    let (hyq_spec, n_hyq) = chaos_spec("hyq", 2, 0);
+    let policy =
+        QosPolicy { breaker_trip: 2, breaker_cooldown_us: 50_000, ..QosPolicy::default() };
+    let coord =
+        Coordinator::start_with_policy(vec![iiwa_spec, hyq_spec], n_iiwa, 500, policy);
+
+    // Two consecutive poisoned batches trip iiwa's breaker …
+    for i in 0..2 {
+        let res = coord
+            .submit_to("iiwa", ArtifactFn::Fd, poison_ops(n_iiwa))
+            .recv()
+            .expect("panicked batch is still answered");
+        match res {
+            Err(ServeError::Engine(msg)) => {
+                assert!(msg.contains("panic"), "batch {i}: engine error lost the cause: {msg}")
+            }
+            other => panic!("batch {i}: expected Engine error, got {other:?}"),
+        }
+        // … while hyq serves clean traffic throughout.
+        coord
+            .submit_to("hyq", ArtifactFn::Fd, clean_ops(n_hyq))
+            .recv()
+            .expect("answer")
+            .expect("sibling route must keep serving");
+    }
+
+    // Breaker open: iiwa sheds at admission, hyq is untouched.
+    match coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n_iiwa)).recv().expect("answered") {
+        Err(ServeError::Shed { consecutive_failures, retry_after_us }) => {
+            assert!(consecutive_failures >= 2);
+            assert!(retry_after_us > 0);
+        }
+        other => panic!("expected Shed while the breaker is open, got {other:?}"),
+    }
+    coord
+        .submit_to("hyq", ArtifactFn::Fd, clean_ops(n_hyq))
+        .recv()
+        .expect("answer")
+        .expect("sibling route unaffected by the open breaker");
+
+    // Cooldown lapses → half-open probe is admitted, succeeds, and
+    // closes the breaker for good.
+    std::thread::sleep(Duration::from_micros(60_000));
+    coord
+        .submit_to("iiwa", ArtifactFn::Fd, clean_ops(n_iiwa))
+        .recv()
+        .expect("answer")
+        .expect("half-open probe must execute");
+    coord
+        .submit_to("iiwa", ArtifactFn::Fd, clean_ops(n_iiwa))
+        .recv()
+        .expect("answer")
+        .expect("breaker closed after the probe");
+
+    let st = coord.stats();
+    assert!(st.breaker_trips >= 1, "trip must be counted");
+    assert_eq!(st.shed, 1);
+    coord.shutdown();
+}
+
+/// Failure granularity is the batch: a clean job sharing a batch with a
+/// poisoned one fails too (documented blast radius), but the route
+/// recovers on the very next batch — no breaker trip from a single
+/// failure under the default policy.
+#[test]
+fn poisoned_batch_fails_whole_batch_then_route_recovers() {
+    let (spec, n) = chaos_spec("iiwa", 2, 20_000);
+    let coord = Coordinator::start_with_policy(vec![spec], n, 1_000, QosPolicy::default());
+
+    // Warmup occupies the worker so the next two jobs co-batch.
+    let warm = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+    std::thread::sleep(Duration::from_millis(5));
+    let poisoned = coord.submit_to("iiwa", ArtifactFn::Fd, poison_ops(n));
+    let innocent = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+
+    warm.recv().expect("answer").expect("warmup ok");
+    assert!(
+        matches!(poisoned.recv().expect("answered"), Err(ServeError::Engine(_))),
+        "poisoned job must fail"
+    );
+    assert!(
+        matches!(innocent.recv().expect("answered"), Err(ServeError::Engine(_))),
+        "batch-mate shares the blast radius"
+    );
+
+    // The next clean batch serves normally — one failed batch does not
+    // trip the default breaker.
+    coord
+        .submit_to("iiwa", ArtifactFn::Fd, clean_ops(n))
+        .recv()
+        .expect("answer")
+        .expect("route recovered after the failed batch");
+    coord.shutdown();
+}

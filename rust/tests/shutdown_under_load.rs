@@ -1,0 +1,105 @@
+//! Shutdown under load: `Coordinator::shutdown` with deep queues must
+//! answer every pending receiver with `ShuttingDown` — no response may
+//! ever hang — across the f64, rounded-quant, and integer-qint lanes
+//! plus the trajectory route.
+
+use draco::coordinator::{
+    Coordinator, QosClass, RobotRegistry, ServeError, SubmitOptions, TrajRequest,
+};
+use draco::model::builtin_robot;
+use draco::runtime::ArtifactFn;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// Submit ~40 step jobs per robot (mixed QoS classes) plus trajectory
+/// rollouts on a long batching window, shut down immediately, and
+/// require every receiver to resolve: either a served result (the job
+/// made it into a batch before the stop) or `ShuttingDown` — never a
+/// dropped channel, never a hang.
+#[test]
+fn shutdown_answers_every_queued_job_across_lanes() {
+    // One coordinator, three serving lanes: f64 native, rounded quant,
+    // and the integer lane (formats the scaling analysis accepts).
+    let reg = RobotRegistry::from_cli_spec("iiwa,atlas:quant@12.12,hyq:qint@12.14", 64)
+        .expect("spec parses");
+    // A 200 ms window means nothing flushes before the shutdown lands:
+    // the queues are guaranteed deep when Stop arrives.
+    let coord = Coordinator::start_registry(&reg, 200_000);
+
+    let classes = [QosClass::Control, QosClass::Interactive, QosClass::Bulk];
+    let mut rxs: Vec<Receiver<_>> = Vec::new();
+    for robot_name in ["iiwa", "atlas", "hyq"] {
+        let n = builtin_robot(robot_name).unwrap().dof();
+        let ops = vec![vec![0.1f32; n], vec![0.0; n], vec![0.0; n]];
+        for k in 0..40 {
+            rxs.push(coord.submit_to_opts(
+                robot_name,
+                ArtifactFn::Fd,
+                ops.clone(),
+                SubmitOptions::class(classes[k % 3]),
+            ));
+        }
+        let h = 4;
+        let req = TrajRequest {
+            q0: vec![0.1; n],
+            qd0: vec![0.0; n],
+            tau: vec![0.0; h * n],
+            dt: 1e-3,
+        };
+        for _ in 0..4 {
+            rxs.push(coord.submit_traj(robot_name, req.clone()));
+        }
+    }
+    let total = rxs.len();
+    assert_eq!(total, 3 * 44);
+
+    let t0 = Instant::now();
+    coord.shutdown();
+
+    let mut served = 0usize;
+    let mut shut = 0usize;
+    for rx in rxs {
+        // A bounded wait turns a would-be hang into a test failure
+        // instead of a CI timeout.
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(out)) => {
+                assert!(!out.is_empty(), "served result must carry data");
+                served += 1;
+            }
+            Ok(Err(ServeError::ShuttingDown)) => shut += 1,
+            Ok(Err(other)) => panic!("unexpected serve error during shutdown: {other:?}"),
+            Err(e) => panic!("receiver hung across shutdown: {e:?}"),
+        }
+    }
+    assert_eq!(served + shut, total);
+    // The 200 ms window guarantees the stop beat the first flush, so at
+    // least some jobs must have been answered with ShuttingDown.
+    assert!(shut > 0, "expected queued jobs to be failed by shutdown (served={served})");
+    // Shutdown must not sit out the full batching window per route.
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "shutdown under load took {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Dropping the coordinator without calling `shutdown` is the graceful
+/// path: workers detect the disconnect and drain what is queued, so
+/// every response still resolves.
+#[test]
+fn dropping_the_coordinator_drains_queued_jobs() {
+    let reg = RobotRegistry::from_cli_spec("iiwa", 8).expect("spec parses");
+    let coord = Coordinator::start_registry(&reg, 50_000);
+    let n = builtin_robot("iiwa").unwrap().dof();
+    let ops = vec![vec![0.1f32; n], vec![0.0; n], vec![0.0; n]];
+    let rxs: Vec<Receiver<_>> =
+        (0..12).map(|_| coord.submit_to("iiwa", ArtifactFn::Fd, ops.clone())).collect();
+    drop(coord);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(out)) => assert!(!out.is_empty()),
+            Ok(Err(e)) => panic!("graceful drain must serve, not fail: {e:?}"),
+            Err(e) => panic!("receiver hung after coordinator drop: {e:?}"),
+        }
+    }
+}

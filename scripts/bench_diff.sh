@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Compare two BENCH_hotpath.json files row by row, or validate one file
-# against the draco.hotpath.v1 schema. Pure bash + awk — no jq/python
-# dependency, parses the pretty-printed JSON the bench emits.
+# Compare two BENCH_*.json files row by row, or validate one file
+# against its schema. Pure bash + awk — no jq/python dependency, parses
+# the pretty-printed JSON the bench/loadgen harnesses emit. Handles both
+# tracked schemas:
 #
-#   scripts/bench_diff.sh old.json new.json   # per-(robot, fn) median deltas
+#   draco.hotpath.v1  (cargo bench --bench hotpath_cpu)  rows keyed (robot, fn)
+#   draco.serve.v1    (draco loadgen)                    rows keyed (scenario, class)
+#
+#   scripts/bench_diff.sh old.json new.json   # per-row median/p99 deltas
 #   scripts/bench_diff.sh --check file.json   # schema validation (CI runs
-#                                             # this on the --quick smoke
-#                                             # output)
+#                                             # this on the smoke outputs)
 set -euo pipefail
 
 usage() {
@@ -14,12 +17,22 @@ usage() {
     exit 2
 }
 
+schema_of() {
+    if grep -q '"schema": "draco.serve.v1"' "$1"; then
+        echo serve
+    elif grep -q '"schema": "draco.hotpath.v1"' "$1"; then
+        echo hotpath
+    else
+        echo unknown
+    fi
+}
+
 # Emit "robot|fn|median_us" per bench row. Relies on the serializer's
 # deterministic (BTreeMap, alphabetical) key order within each row
 # object: fn, mean_us, median_us, robot, tasks_per_s — so tasks_per_s
 # closes a row. The speedups array never carries tasks_per_s, so its
 # objects never emit.
-extract() {
+extract_hotpath() {
     awk '
         /"fn":/         { v = $2; gsub(/[",]/, "", v); fn = v }
         /"median_us":/  { v = $2; gsub(/[",]/, "", v); med = v }
@@ -31,46 +44,102 @@ extract() {
     ' "$1"
 }
 
+# Emit "scenario|class|p99_us|goodput_per_s" per serve row. Same
+# alphabetical-key trick: within a row object "scenario" sorts last
+# (class, completed, expired, goodput_per_s, offered_per_s, p50_us,
+# p999_us, p99_us, rejected, scenario), so it closes the row. The
+# top-level "robot"/"schema" keys sort after "rows", so they cannot
+# bleed into row state.
+extract_serve() {
+    awk '
+        /"class":/         { v = $2; gsub(/[",]/, "", v); cls = v }
+        /"p99_us":/        { v = $2; gsub(/[",]/, "", v); p99 = v }
+        /"goodput_per_s":/ { v = $2; gsub(/[",]/, "", v); gput = v }
+        /"scenario":/ {
+            v = $2; gsub(/[",]/, "", v)
+            if (cls != "" && p99 != "") print v "|" cls "|" p99 "|" gput
+            cls = ""; p99 = ""; gput = ""
+        }
+    ' "$1"
+}
+
 [ $# -eq 2 ] || usage
 
 if [ "$1" = "--check" ]; then
     f="$2"
     [ -f "$f" ] || { echo "no such file: $f" >&2; exit 1; }
-    if ! grep -q '"schema": "draco.hotpath.v1"' "$f"; then
-        echo "SCHEMA FAIL: missing \"schema\": \"draco.hotpath.v1\" in $f" >&2
-        exit 1
-    fi
-    rows="$(extract "$f")"
-    count="$(printf '%s\n' "$rows" | grep -c '|' || true)"
-    if [ "$count" -lt 1 ]; then
-        echo "SCHEMA FAIL: no bench rows parsed from $f" >&2
-        exit 1
-    fi
-    # Every kernel and serving row CI depends on must be present.
-    for need in \
-        "iiwa|fd_ws" \
-        "iiwa|fd_quant64_ws" \
-        "iiwa|fd_quant_int64" \
-        "iiwa|minv_quant_int64" \
-        "iiwa|minv_qint_deferred64" \
-        "iiwa|fd_qint_srv64" \
-        "iiwa|fd_pool64" \
-        "iiwa|serve_fd_par64" \
-        "iiwa|serve_fd_quant_par64" \
-        "iiwa|serve_fd_qint_par64" \
-        "mixed|serve_fd_mixed64"; do
-        if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
-            echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
+    case "$(schema_of "$f")" in
+    hotpath)
+        rows="$(extract_hotpath "$f")"
+        count="$(printf '%s\n' "$rows" | grep -c '|' || true)"
+        if [ "$count" -lt 1 ]; then
+            echo "SCHEMA FAIL: no bench rows parsed from $f" >&2
             exit 1
         fi
-    done
-    if ! printf '%s\n' "$rows" | awk -F'|' '
-        $3 + 0 <= 0 { print "SCHEMA FAIL: non-positive median in row " $1 "/" $2; bad = 1 }
-        END { exit bad }
-    '; then
+        # Every kernel and serving row CI depends on must be present.
+        for need in \
+            "iiwa|fd_ws" \
+            "iiwa|fd_quant64_ws" \
+            "iiwa|fd_quant_int64" \
+            "iiwa|minv_quant_int64" \
+            "iiwa|minv_qint_deferred64" \
+            "iiwa|fd_qint_srv64" \
+            "iiwa|fd_pool64" \
+            "iiwa|serve_fd_par64" \
+            "iiwa|serve_fd_quant_par64" \
+            "iiwa|serve_fd_qint_par64" \
+            "mixed|serve_fd_mixed64"; do
+            if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
+                echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
+                exit 1
+            fi
+        done
+        if ! printf '%s\n' "$rows" | awk -F'|' '
+            $3 + 0 <= 0 { print "SCHEMA FAIL: non-positive median in row " $1 "/" $2; bad = 1 }
+            END { exit bad }
+        '; then
+            exit 1
+        fi
+        echo "bench schema OK ($count rows in $f)"
+        ;;
+    serve)
+        rows="$(extract_serve "$f")"
+        count="$(printf '%s\n' "$rows" | grep -c '|' || true)"
+        if [ "$count" -lt 1 ]; then
+            echo "SCHEMA FAIL: no serve rows parsed from $f" >&2
+            exit 1
+        fi
+        # The uncontended/overload pair for every QoS class is the
+        # tracked envelope; ramp rows may come and go.
+        for need in \
+            "uncontended|control" \
+            "uncontended|interactive" \
+            "uncontended|bulk" \
+            "overload|control" \
+            "overload|interactive" \
+            "overload|bulk"; do
+            if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
+                echo "SCHEMA FAIL: missing serve row ${need} in $f" >&2
+                exit 1
+            fi
+        done
+        if ! printf '%s\n' "$rows" | awk -F'|' '
+            $3 + 0 < 0 || $4 + 0 < 0 {
+                print "SCHEMA FAIL: negative p99/goodput in row " $1 "/" $2; bad = 1
+            }
+            $4 + 0 > 0 { live = 1 }
+            END { if (!live) { print "SCHEMA FAIL: zero goodput in every serve row"; bad = 1 }
+                  exit bad }
+        '; then
+            exit 1
+        fi
+        echo "serve schema OK ($count rows in $f)"
+        ;;
+    *)
+        echo "SCHEMA FAIL: no recognized \"schema\" marker in $f" >&2
         exit 1
-    fi
-    echo "bench schema OK ($count rows in $f)"
+        ;;
+    esac
     exit 0
 fi
 
@@ -78,6 +147,30 @@ old="$1"
 new="$2"
 [ -f "$old" ] || { echo "no such file: $old" >&2; exit 1; }
 [ -f "$new" ] || { echo "no such file: $new" >&2; exit 1; }
+
+if [ "$(schema_of "$old")" = "serve" ] && [ "$(schema_of "$new")" = "serve" ]; then
+    printf '%-14s %-12s %12s %12s %9s\n' "scenario" "class" "old p99(us)" "new p99(us)" "delta"
+    awk -F'|' '
+        NR == FNR { a[$1 "|" $2] = $3; next }
+        {
+            key = $1 "|" $2
+            if (key in a) {
+                d = (a[key] > 0) ? ($3 - a[key]) / a[key] * 100 : 0
+                printf "%-14s %-12s %12.0f %12.0f %+8.1f%%\n", $1, $2, a[key], $3, d
+                delete a[key]
+            } else {
+                printf "%-14s %-12s %12s %12.0f %9s\n", $1, $2, "-", $3, "(new)"
+            }
+        }
+        END {
+            for (k in a) {
+                split(k, p, "|")
+                printf "%-14s %-12s %12.0f %12s %9s\n", p[1], p[2], a[k], "-", "(gone)"
+            }
+        }
+    ' <(extract_serve "$old") <(extract_serve "$new")
+    exit 0
+fi
 
 printf '%-10s %-24s %12s %12s %9s\n' "robot" "fn" "old(us)" "new(us)" "delta"
 awk -F'|' '
@@ -98,4 +191,4 @@ awk -F'|' '
             printf "%-10s %-24s %12.3f %12s %9s\n", p[1], p[2], a[k], "-", "(gone)"
         }
     }
-' <(extract "$old") <(extract "$new")
+' <(extract_hotpath "$old") <(extract_hotpath "$new")
