@@ -43,6 +43,20 @@ cargo bench --bench hotpath_cpu -- --quick
 echo "== bench schema check (bench_diff --check) =="
 bash ../scripts/bench_diff.sh --check BENCH_hotpath.json
 
+echo "== serve smoke: warm dyn_all kinematics memo =="
+# The serve workload ends with a cold/warm `dyn_all` probe per robot:
+# the warm repeat must be bitwise identical to the cold response (serve
+# exits nonzero otherwise) and, on serial routes, must be answered out
+# of the kinematics memo — so the printed hit counter must be nonzero.
+serve_out="$(cargo run --release --quiet -- serve --requests 64 --batch 8 --window-us 200 \
+    --robots iiwa,atlas:qint@12.14)"
+echo "$serve_out" | tail -n 4
+hits="$(printf '%s\n' "$serve_out" | sed -n 's/^dyn_all memo: hits \([0-9]*\).*/\1/p')"
+if [ -z "$hits" ] || [ "$hits" -eq 0 ]; then
+    echo "MEMO SMOKE FAIL: warm dyn_all serve reported no kinematics-memo hits" >&2
+    exit 1
+fi
+
 echo "== overload smoke: loadgen --smoke =="
 # Short open-loop ramp against a capacity-pinned route; asserts the
 # overload invariants (no expired job executed, monotone shedding,

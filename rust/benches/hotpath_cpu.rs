@@ -29,6 +29,13 @@
 //! serving engine, batched), and `serve_fd_qint_par64` (a qint route on
 //! the pool). `mul6_flat` times the flattened branch-free 6×6 kernel
 //! that dominates the Minv sweeps.
+//!
+//! Fused-route rows: `dyn_all_fused64` (one kinematics pass feeding q̈,
+//! the deferred M⁻¹, and the RNEA bias) vs `dyn_all_separate64` (the
+//! same three outputs through the three separate route kernels — the
+//! fused sweep must win), `dyn_all_qint64` (the i64 fused sweep), and
+//! `serve_dyn_all_par64` (64 fused requests through a pooled native
+//! route, per-worker kinematics memos warm).
 
 use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
@@ -309,6 +316,34 @@ fn main() {
                 black_box(&out32);
             });
             add("iiwa", "minv_qint_deferred64", &st, BATCH);
+
+            // Fused INTEGER sweep: one integer kinematics ingest per
+            // task feeding q̈, the deferred M⁻¹ rows, and the fixed-point
+            // bias — the i64 counterpart of dyn_all_fused64, same
+            // per-task f32 decode/encode as the rows above.
+            let per = n * n + 2 * n;
+            let mut all = vec![0.0f64; per];
+            let mut out32 = vec![0.0f32; BATCH * per];
+            let st = time_auto(target_ms, || {
+                for k in 0..BATCH {
+                    let span = k * n..(k + 1) * n;
+                    for (d, s) in q.iter_mut().zip(&inputs[0][span.clone()]) {
+                        *d = *s as f64;
+                    }
+                    for (d, s) in qd.iter_mut().zip(&inputs[1][span.clone()]) {
+                        *d = *s as f64;
+                    }
+                    for (d, s) in u.iter_mut().zip(&inputs[2][span]) {
+                        *d = *s as f64;
+                    }
+                    iws.dyn_all_dd_into(&iiwa, &q, &qd, &u, &sched, &mut all);
+                    for (d, s) in out32[k * per..(k + 1) * per].iter_mut().zip(&all) {
+                        *d = *s as f32;
+                    }
+                }
+                black_box(&out32);
+            });
+            add("iiwa", "dyn_all_qint64", &st, BATCH);
         }
 
         // The qint SERVING backend: batched FD through QIntEngine
@@ -320,6 +355,47 @@ fn main() {
             black_box(qieng.run(&inputs).expect("qint fd batch"));
         });
         add("iiwa", "fd_qint_srv64", &st, BATCH);
+
+        // Fused multi-output sweep: ONE kinematics pass per task feeding
+        // q̈, the division-deferring M⁻¹, and the RNEA bias
+        // (dyn_all_fused64) vs the same three outputs through the three
+        // separate route kernels over identical operands
+        // (dyn_all_separate64). The fused row must win — the separate
+        // calls redo the joint transforms and composite inertias per
+        // output.
+        {
+            let n = iiwa.dof();
+            let mut drng = Rng::new(12);
+            let tasks: Vec<BatchTask> = (0..BATCH)
+                .map(|_| {
+                    let s = State::random(&iiwa, &mut drng);
+                    BatchTask { q: s.q, qd: s.qd, u: drng.vec_range(n, -6.0, 6.0) }
+                })
+                .collect();
+            let mut ws = DynWorkspace::new(&iiwa);
+            let mut fused = vec![0.0f64; n * n + 2 * n];
+            let st = time_auto(target_ms, || {
+                for task in &tasks {
+                    ws.dyn_all_into(&iiwa, &task.q, &task.qd, &task.u, None, &mut fused);
+                }
+                black_box(&fused);
+            });
+            add("iiwa", "dyn_all_fused64", &st, BATCH);
+
+            let mut qdd = vec![0.0f64; n];
+            let mut mi = DMat::zeros(n, n);
+            let mut bias = vec![0.0f64; n];
+            let zero = vec![0.0f64; n];
+            let st = time_auto(target_ms, || {
+                for task in &tasks {
+                    ws.fd_into(&iiwa, &task.q, &task.qd, &task.u, None, &mut qdd);
+                    ws.minv_into(&iiwa, &task.q, &mut mi);
+                    ws.rnea_into(&iiwa, &task.q, &task.qd, &zero, None, &mut bias);
+                    black_box((&qdd, &mi, &bias));
+                }
+            });
+            add("iiwa", "dyn_all_separate64", &st, BATCH);
+        }
 
         // Trajectory rollout: 64 integrator steps per request through the
         // workspace (per-task number below = per step).
@@ -478,6 +554,27 @@ fn main() {
         });
         add("iiwa", "serve_fd_qint_par64", &st, 64);
         ipcoord.shutdown();
+
+        // Pooled FUSED serving: 64 `dyn_all` requests (q̈ ‖ M⁻¹ ‖ C per
+        // task) through one parallel native route — the multi-output
+        // flat fan-out on the worker pool, with each worker's
+        // cross-request kinematics memo staying warm on the repeated
+        // operands, so the row tracks the served hit-path cost.
+        let mut dpreg = RobotRegistry::new();
+        dpreg.register_parallel(iiwa.clone(), BackendKind::Native, 64, 0);
+        let dpcoord = Coordinator::start_registry(&dpreg, 100);
+        let dpar_inputs = flat_fd_inputs(&iiwa, 1, 12);
+        let st = time_auto(target_ms, || {
+            let mut rxs = Vec::with_capacity(64);
+            for _ in 0..64usize {
+                rxs.push(dpcoord.submit_to("iiwa", ArtifactFn::DynAll, dpar_inputs.clone()));
+            }
+            for rx in rxs {
+                black_box(rx.recv().expect("serve answer").expect("serve ok"));
+            }
+        });
+        add("iiwa", "serve_dyn_all_par64", &st, 64);
+        dpcoord.shutdown();
     }
 
     t.print("CPU hot paths (measured, single thread)");

@@ -286,6 +286,13 @@ trait BatchExecutor {
     /// any row count ≤ batch, so partial batches cost only the real
     /// tasks.
     fn pad_to_batch(&self) -> bool;
+    /// Cumulative kinematics-memo `(hits, misses)` of the underlying
+    /// engine. Routes without a memo (PJRT, non-`dyn_all` functions)
+    /// report `(0, 0)` forever; `flush_step` records the per-execute
+    /// delta into the serving stats.
+    fn memo_counters(&self) -> (u64, u64) {
+        (0, 0)
+    }
     fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String>;
 }
 
@@ -308,6 +315,9 @@ impl BatchExecutor for EngineExecutor {
     }
     fn pad_to_batch(&self) -> bool {
         false
+    }
+    fn memo_counters(&self) -> (u64, u64) {
+        self.0.memo_counters()
     }
     fn execute(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, String> {
         self.0.run(inputs).map_err(|e| e.0)
@@ -916,10 +926,20 @@ fn flush_step(
         }
     }
 
+    let (hits_before, misses_before) = exec.memo_counters();
     let t0 = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| exec.execute(&inputs)))
         .unwrap_or_else(|p| Err(format!("engine panicked: {}", panic_message(p.as_ref()))));
     let exec_us = t0.elapsed().as_micros() as f64;
+    // Memo activity is recorded as a per-execute delta so the serving
+    // stats aggregate correctly across many routes sharing one stats
+    // block. Non-memo routes report (0, 0) forever — zero delta.
+    let (hits_after, misses_after) = exec.memo_counters();
+    {
+        let mut st = lock_stats(stats);
+        st.memo_hits += hits_after.saturating_sub(hits_before);
+        st.memo_misses += misses_after.saturating_sub(misses_before);
+    }
 
     let out_per_task = exec.out_per_task();
     match result {
@@ -1114,6 +1134,34 @@ mod tests {
             other => panic!("expected Rejected, got {other:?}"),
         }
         assert_eq!(coord.stats().rejected, 1);
+        coord.shutdown();
+    }
+
+    /// A `dyn_all` route answers the fused flat layout
+    /// (q̈ ‖ M⁻¹ ‖ C, length n²+2n) and a warm repeat of a bitwise
+    /// identical request is served out of the kinematics memo —
+    /// visible in the aggregate serving stats.
+    #[test]
+    fn dyn_all_route_serves_fused_layout_and_counts_memo_hits() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let spec = BackendSpec::Native {
+            robot,
+            function: ArtifactFn::DynAll,
+            batch: 4,
+            parallel: 1,
+            class: QosClass::default(),
+        };
+        let coord = Coordinator::start(vec![spec], n, 100);
+        let ops = vec![vec![0.1; n], vec![0.05; n], vec![0.2; n]];
+        let cold = coord.submit(ArtifactFn::DynAll, ops.clone()).recv().unwrap().unwrap();
+        assert_eq!(cold.len(), n * n + 2 * n, "q̈ | M⁻¹ | C flat layout");
+        assert!(cold.iter().all(|x| x.is_finite()));
+        let warm = coord.submit(ArtifactFn::DynAll, ops).recv().unwrap().unwrap();
+        assert_eq!(warm, cold, "memo hit must be bitwise identical to the cold miss");
+        let st = coord.stats();
+        assert!(st.memo_hits >= 1, "warm repeat must hit the kinematics memo");
+        assert_eq!(st.memo_hits + st.memo_misses, 2, "two tasks, each memo-accounted");
         coord.shutdown();
     }
 

@@ -4,11 +4,16 @@
 //! Requests arrive on a **Poisson process at a fixed offered rate**,
 //! independent of how fast the server answers (open loop — a closed
 //! loop would slow its own arrivals under overload and hide the very
-//! tail it is supposed to measure). Each scenario drives a fresh
+//! tail it is supposed to measure). The overload sweep drives a fresh
 //! coordinator over a throttled [`ChaosEngine`](crate::runtime::chaos)
 //! route whose capacity is pinned by construction
 //! (`batch / (delay + window)`), so "offer 2× capacity" is
-//! deterministic across hosts.
+//! deterministic across hosts. Two `real-*` scenarios then point the
+//! same Poisson front end at the real engines — the native f64 FD
+//! route and the true-integer qint FD route — so the dump also carries
+//! real-engine latency envelopes (these keep the expired-probe and
+//! clean-traffic invariants but are expected not to shed, so they sit
+//! outside the shed-monotonicity checks).
 //!
 //! Per (scenario, class) the harness reports offered load, goodput,
 //! shed counts, and p50/p99/p99.9 latency (from the coordinator's
@@ -26,9 +31,11 @@
 //! cycle (trip on consecutive injected panics → shed → half-open →
 //! recover).
 
-use super::batcher::{BackendSpec, Coordinator, JobResult};
+use super::batcher::{BackendSpec, Coordinator, JobResult, Route};
 use super::qos::{QosClass, QosPolicy, ServeError, SubmitOptions};
+use super::registry::DEFAULT_QUANT_FORMAT;
 use crate::model::{builtin_robot, Robot};
+use crate::quant::QFormat;
 use crate::runtime::artifact::ArtifactFn;
 use crate::util::bench::Table;
 use crate::util::cli::Args;
@@ -150,16 +157,21 @@ fn wait_until(t0: Instant, next_s: f64) {
     }
 }
 
-/// Run one open-loop scenario at `rate_per_s` against a fresh throttled
-/// coordinator.
-fn run_scenario(robot: &Robot, cfg: &LoadCfg, name: &str, rate_per_s: f64) -> ScenarioResult {
+/// Run one open-loop scenario at `rate_per_s` against a fresh
+/// coordinator serving `spec` — the throttled chaos route for the
+/// capacity-pinned overload sweep, or a real engine route (`Native` /
+/// `NativeInt`) for the traffic-realism envelope rows.
+fn run_scenario(
+    robot: &Robot,
+    cfg: &LoadCfg,
+    name: &str,
+    rate_per_s: f64,
+    spec: BackendSpec,
+) -> ScenarioResult {
     let n = robot.dof();
-    let spec = BackendSpec::Chaos {
-        robot: robot.clone(),
-        function: ArtifactFn::Fd,
-        batch: cfg.batch,
-        delay_us: cfg.delay_us,
-        class: QosClass::default(),
+    let function = match spec.route() {
+        Route::Step(f) => f,
+        Route::Traj => unreachable!("loadgen drives step routes only"),
     };
     let coord = Coordinator::start_with_policy(vec![spec], n, cfg.window_us, cfg.policy);
 
@@ -181,19 +193,14 @@ fn run_scenario(robot: &Robot, cfg: &LoadCfg, name: &str, rate_per_s: f64) -> Sc
         classes[class.index()].offered += 1;
         pending.push((
             class,
-            coord.submit_to_opts(
-                &robot.name,
-                ArtifactFn::Fd,
-                ops.clone(),
-                SubmitOptions::class(class),
-            ),
+            coord.submit_to_opts(&robot.name, function, ops.clone(), SubmitOptions::class(class)),
         ));
         // Ride-along probe with an already-expired deadline: it must
         // come back Expired (or Rejected) — never Ok.
         if k % 24 == 23 {
             probes.push(coord.submit_to_opts(
                 &robot.name,
-                ArtifactFn::Fd,
+                function,
                 ops.clone(),
                 SubmitOptions { class: Some(class), deadline_us: Some(0) },
             ));
@@ -293,9 +300,22 @@ fn breaker_cycle(robot: &Robot) -> Result<(), String> {
     Ok(())
 }
 
+/// Fixed-point format the qint envelope scenario carries, per builtin
+/// robot — the formats the scaling analysis proves for each (wider
+/// dynamic range needs more integer or fraction bits).
+fn qint_format_for(name: &str) -> QFormat {
+    match name {
+        "atlas" => QFormat::new(12, 14),
+        "baxter" => QFormat::new(13, 13),
+        _ => DEFAULT_QUANT_FORMAT,
+    }
+}
+
 /// `draco loadgen`: open-loop Poisson load against a capacity-pinned
 /// route, per-class tail-latency / shed report, `rust/BENCH_serve.json`
-/// emission.
+/// emission. Every run also measures the `real-native-fd` and
+/// `real-qint-fd` envelope scenarios: the same arrival process against
+/// the unthrottled native f64 and true-integer engines.
 ///
 /// * `--robot NAME` — served robot (default `iiwa`).
 /// * `--rate R` — offered rate [req/s] of the `overload` scenario
@@ -350,18 +370,59 @@ pub fn loadgen_cli(args: &Args) -> i32 {
 
     // Scenario sweep: the uncontended/overload pair is always measured
     // (their rows are the tracked baseline); --ramp / --smoke add the
-    // intermediate and deep-overload points.
-    let mut plan: Vec<(String, f64)> =
-        vec![("uncontended".to_string(), 0.5 * capacity), ("overload".to_string(), over_rate)];
+    // intermediate and deep-overload points. All of these run on the
+    // throttled chaos route so offered-vs-capacity ratios are pinned.
+    let chaos_spec = || BackendSpec::Chaos {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: cfg.batch,
+        delay_us: cfg.delay_us,
+        class: QosClass::default(),
+    };
+    let mut plan: Vec<(String, f64, BackendSpec)> = vec![
+        ("uncontended".to_string(), 0.5 * capacity, chaos_spec()),
+        ("overload".to_string(), over_rate, chaos_spec()),
+    ];
     if args.flag("ramp") || smoke {
-        plan.push(("ramp-1x".to_string(), capacity));
-        plan.push(("ramp-3x".to_string(), 3.0 * capacity));
+        plan.push(("ramp-1x".to_string(), capacity, chaos_spec()));
+        plan.push(("ramp-3x".to_string(), 3.0 * capacity, chaos_spec()));
     }
+    // Traffic realism: the same Poisson front end against the real
+    // engines — the native f64 FD route and the true-integer qint FD
+    // route — at the chaos route's pinned capacity rate, so
+    // `BENCH_serve.json` carries real-engine latency envelopes next to
+    // the synthetic overload sweep. `real-*` scenarios keep the
+    // expired-probe and clean-traffic invariants but are excluded from
+    // the shed-monotonicity checks: their capacity is the engine's own,
+    // far above the chaos pin, so they are expected not to shed.
+    plan.push((
+        "real-native-fd".to_string(),
+        capacity,
+        BackendSpec::Native {
+            robot: robot.clone(),
+            function: ArtifactFn::Fd,
+            batch: cfg.batch,
+            parallel: 1,
+            class: QosClass::default(),
+        },
+    ));
+    plan.push((
+        "real-qint-fd".to_string(),
+        capacity,
+        BackendSpec::NativeInt {
+            robot: robot.clone(),
+            function: ArtifactFn::Fd,
+            batch: cfg.batch,
+            fmt: qint_format_for(&robot.name),
+            parallel: 1,
+            class: QosClass::default(),
+        },
+    ));
 
     let mut results = Vec::new();
-    for (name, rate) in &plan {
+    for (name, rate, spec) in plan {
         println!("\nscenario '{name}': offering {rate:.0} req/s for {:?} …", cfg.duration);
-        results.push(run_scenario(&robot, &cfg, name, *rate));
+        results.push(run_scenario(&robot, &cfg, &name, rate, spec));
     }
 
     let mut table =
@@ -443,8 +504,12 @@ pub fn loadgen_cli(args: &Args) -> i32 {
     }
     // Monotone shedding: sort by offered rate; the reject rate must not
     // fall as offered load grows (small tolerance for sampling noise),
-    // and the deepest overload point must actually shed.
-    let mut by_rate: Vec<&ScenarioResult> = results.iter().collect();
+    // and the deepest overload point must actually shed. Only the
+    // capacity-pinned chaos scenarios participate — the `real-*`
+    // envelope rows run on unthrottled engines and legitimately absorb
+    // the whole offered load.
+    let mut by_rate: Vec<&ScenarioResult> =
+        results.iter().filter(|r| !r.name.starts_with("real-")).collect();
     by_rate.sort_by(|a, b| a.offered_per_s.total_cmp(&b.offered_per_s));
     for pair in by_rate.windows(2) {
         if pair[1].reject_rate() < pair[0].reject_rate() - 0.05 {

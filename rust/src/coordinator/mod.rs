@@ -152,7 +152,9 @@ pub fn serve_cli(args: &Args) -> i32 {
 /// Synthetic control-loop workload over every registered robot:
 /// round-robin RNEA step requests (validated against the backend's own
 /// reference kernel — f64 RNEA for native robots, `quant_rnea` for
-/// quantized ones), plus optional trajectory rollouts.
+/// quantized ones), a fused `dyn_all` cold/warm probe per robot (the
+/// warm repeat must be served out of the kinematics memo and be bitwise
+/// identical to the cold response), plus optional trajectory rollouts.
 fn run_native_workload(
     coord: &Coordinator,
     registry: &RobotRegistry,
@@ -239,6 +241,66 @@ fn run_native_workload(
     if max_err > 1e-3 {
         eprintln!("NUMERIC MISMATCH between served and reference implementation");
         code = 1;
+    }
+
+    // Fused-route probe: every robot answers one `dyn_all` request cold
+    // (a kinematics-memo miss) and then the bitwise-identical request
+    // warm. The warm repeat must match the cold response byte for byte —
+    // the serving-level statement of the hit ≡ miss proof — and with
+    // serial routes it must land in the memo (hits > 0).
+    if code == 0 {
+        let mut warm_checked = 0usize;
+        for name in &names {
+            let entry = registry.get(name).expect("registered");
+            let n = entry.robot.dof();
+            let s = State::random(&entry.robot, &mut rng);
+            let tau: Vec<f64> = rng.vec_range(n, -2.0, 2.0);
+            let ops: Vec<Vec<f32>> = vec![
+                s.q.iter().map(|&x| x as f32).collect(),
+                s.qd.iter().map(|&x| x as f32).collect(),
+                tau.iter().map(|&x| x as f32).collect(),
+            ];
+            let cold = match coord.submit_to(name, ArtifactFn::DynAll, ops.clone()).recv() {
+                Ok(Ok(out)) => out,
+                Ok(Err(e)) => {
+                    eprintln!("dyn_all {name} failed: {e}");
+                    return 1;
+                }
+                Err(e) => {
+                    eprintln!("dyn_all {name} dropped: {e}");
+                    return 1;
+                }
+            };
+            let want_len = n * n + 2 * n;
+            if cold.len() != want_len || cold.iter().any(|x| !x.is_finite()) {
+                eprintln!(
+                    "dyn_all {name}: malformed fused response ({} of {want_len} values)",
+                    cold.len()
+                );
+                return 1;
+            }
+            let warm = match coord.submit_to(name, ArtifactFn::DynAll, ops).recv() {
+                Ok(Ok(out)) => out,
+                Ok(Err(e)) => {
+                    eprintln!("dyn_all {name} warm repeat failed: {e}");
+                    return 1;
+                }
+                Err(e) => {
+                    eprintln!("dyn_all {name} warm repeat dropped: {e}");
+                    return 1;
+                }
+            };
+            if warm != cold {
+                eprintln!("dyn_all {name}: warm (memo-hit) response differs bitwise from cold");
+                return 1;
+            }
+            warm_checked += 1;
+        }
+        let st = coord.stats();
+        println!(
+            "dyn_all memo: hits {} misses {}  ({warm_checked} warm repeats bitwise == cold)",
+            st.memo_hits, st.memo_misses
+        );
     }
 
     if traj > 0 && code == 0 {

@@ -174,12 +174,15 @@ impl RobotRegistry {
 
     /// Expand the registry into backend specs: for every robot (in
     /// registration order, so the first robot becomes the coordinator's
-    /// default), one step route per RBD function (RNEA / FD / M⁻¹) on
-    /// the robot's backend, plus one trajectory route.
+    /// default), one step route per RBD function (RNEA / FD / M⁻¹ /
+    /// the fused multi-output `dyn_all`) on the robot's backend, plus
+    /// one trajectory route.
     pub fn specs(&self) -> Vec<BackendSpec> {
-        let mut specs = Vec::with_capacity(self.entries.len() * 4);
+        let mut specs = Vec::with_capacity(self.entries.len() * 5);
         for entry in &self.entries {
-            for function in [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv] {
+            for function in
+                [ArtifactFn::Rnea, ArtifactFn::Fd, ArtifactFn::Minv, ArtifactFn::DynAll]
+            {
                 specs.push(match entry.backend {
                     BackendKind::Native => BackendSpec::Native {
                         robot: entry.robot.clone(),
@@ -422,8 +425,8 @@ mod tests {
             .register(builtin_robot("atlas").unwrap(), BackendKind::NativeQuant(QFormat::new(12, 14)), 8);
         assert_eq!(reg.len(), 2);
         let specs = reg.specs();
-        // 3 step routes + 1 trajectory route per robot.
-        assert_eq!(specs.len(), 8);
+        // 4 step routes (rnea/fd/minv/dyn_all) + 1 trajectory per robot.
+        assert_eq!(specs.len(), 10);
         let atlas_traj = specs
             .iter()
             .filter(|s| s.robot_name() == "atlas" && s.route() == Route::Traj)
@@ -538,15 +541,15 @@ mod tests {
         assert!(looks_like_backend("qint"));
         assert!(looks_like_backend("qint@12.14"));
         assert!(!looks_like_backend("qint_overlay/arm.urdf"));
-        // The int-lane routes expand like any other backend: 3 step
+        // The int-lane routes expand like any other backend: 4 step
         // routes + a trajectory route on the integer lane.
         let specs = reg.specs();
-        assert_eq!(specs.len(), 8);
+        assert_eq!(specs.len(), 10);
         let int_steps = specs
             .iter()
             .filter(|s| matches!(s, BackendSpec::NativeInt { .. }))
             .count();
-        assert_eq!(int_steps, 6);
+        assert_eq!(int_steps, 8);
         assert!(specs.iter().any(|s| matches!(
             s,
             BackendSpec::Trajectory { lane: TrajLane::Int(_), .. }

@@ -98,6 +98,12 @@ pub struct StatsInner {
     /// Circuit-breaker trips (including re-trips of failed half-open
     /// probes).
     pub breaker_trips: u64,
+    /// Cross-request kinematics-memo hits across every `dyn_all` route
+    /// (serial engine memos plus pooled per-worker memo deltas).
+    pub memo_hits: u64,
+    /// Cross-request kinematics-memo misses (each miss ran the full
+    /// sweep and populated the memo).
+    pub memo_misses: u64,
     /// Aggregate latency reservoir over every completed request.
     all_lat: Reservoir,
     /// Completions per QoS class, indexed by [`QosClass::index`].
@@ -117,6 +123,8 @@ impl Default for StatsInner {
             expired: 0,
             shed: 0,
             breaker_trips: 0,
+            memo_hits: 0,
+            memo_misses: 0,
             all_lat: Reservoir::new(0x5EED_1A7E),
             class_completed: [0; 3],
             class_lat: [
@@ -176,6 +184,8 @@ impl StatsInner {
             expired: self.expired,
             shed: self.shed,
             breaker_trips: self.breaker_trips,
+            memo_hits: self.memo_hits,
+            memo_misses: self.memo_misses,
             per_class,
         }
     }
@@ -220,6 +230,11 @@ pub struct ServeStats {
     pub shed: u64,
     /// Circuit-breaker trips.
     pub breaker_trips: u64,
+    /// Kinematics-memo hits across every `dyn_all` route (repeated
+    /// linearizations answered without re-running the sweep).
+    pub memo_hits: u64,
+    /// Kinematics-memo misses (full sweeps that populated the memo).
+    pub memo_misses: u64,
     /// Per-class completions and latency percentiles, indexed by
     /// [`QosClass::index`].
     pub per_class: [ClassStats; 3],

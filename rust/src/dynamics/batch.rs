@@ -18,6 +18,10 @@ pub enum BatchKernel {
     Fd,
     /// M⁻¹(q): `u` ignored.
     Minv,
+    /// Fused multi-output dynamics at one (q, q̇): `u` holds τ; the
+    /// output is the flat `[q̈ (N) | M⁻¹ (N·N) | C (N)]` egress of
+    /// [`DynWorkspace::dyn_all_into`].
+    DynAll,
 }
 
 /// One task: a joint state plus the third operand (`u` = q̈ for RNEA,
@@ -75,6 +79,11 @@ pub(crate) fn eval_one(
             let mut out = DMat::zeros(n, n);
             ws.minv_into(robot, &task.q, &mut out);
             BatchOutput::Matrix(out)
+        }
+        BatchKernel::DynAll => {
+            let mut out = vec![0.0; n * n + 2 * n];
+            ws.dyn_all_into(robot, &task.q, &task.qd, &task.u, None, &mut out);
+            BatchOutput::Vector(out)
         }
     }
 }
@@ -164,6 +173,24 @@ mod tests {
                 // Same kernel, same workspace semantics ⇒ bitwise equal.
                 assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
             }
+        }
+    }
+
+    #[test]
+    fn dyn_all_batch_matches_fused_kernel() {
+        let robot = builtin::iiwa();
+        let n = robot.dof();
+        let tasks = random_tasks(&robot, 9, 602);
+        let out = eval_batch(&robot, BatchKernel::DynAll, &tasks);
+        let mut ws = DynWorkspace::new(&robot);
+        for (task, got) in tasks.iter().zip(&out) {
+            let mut want = vec![0.0; n * n + 2 * n];
+            ws.dyn_all_into(&robot, &task.q, &task.qd, &task.u, None, &mut want);
+            assert_eq!(got.as_vector().unwrap(), &want[..]);
+        }
+        let par = eval_batch_par(&robot, BatchKernel::DynAll, &tasks, 4);
+        for (a, b) in out.iter().zip(&par) {
+            assert_eq!(a.as_vector().unwrap(), b.as_vector().unwrap());
         }
     }
 

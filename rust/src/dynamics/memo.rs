@@ -1,0 +1,308 @@
+//! Cross-request kinematics memo — the CPU analog of the paper's
+//! inter-module DSP-reuse pillar, applied across *requests* instead of
+//! across hardware modules.
+//!
+//! An MPC or RL client linearizing around an operating point sends many
+//! `dyn_all` requests at the same (or quantization-identical) joint
+//! state. The expensive shared work — the kinematics pass, the RNEA
+//! bias sweep, and the division-deferring M⁻¹ sweep — is a pure
+//! function of the ingested joint words, so its outputs can be
+//! memoized and only the cheap τ-fold matvec rerun per request.
+//!
+//! Correctness is by construction: entries are keyed by the **exact bit
+//! patterns** of the post-ingest joint words (`f64::to_bits` for the
+//! float lanes, the quantized `i64` words for the integer lane) plus
+//! the [`Robot::fingerprint`](crate::model::Robot::fingerprint), so a
+//! hit replays precisely the sweep outputs a cold evaluation would
+//! recompute — a memo hit is bitwise identical to a miss. The u64 hash
+//! is only a fast reject; every candidate hit compares the full key
+//! word-for-word, so adjacent quantized states (one lsb apart) can
+//! never alias, even under a hash collision.
+//!
+//! The memo is a small bounded LRU kept as an MRU-ordered vector —
+//! entry counts are tens, not thousands, so a linear scan beats a hash
+//! map and its allocation churn — and it is held **per worker** (each
+//! serial engine and each pool worker owns one), so the serving hot
+//! path takes no lock.
+
+/// Default entry capacity used by the serving engines and pool workers.
+///
+/// Sized for the serving shape the memo targets: a handful of clients
+/// each linearizing around a few operating points. Larger working sets
+/// degrade gracefully to the cold path (every call is a miss plus one
+/// bounded insert), never to unbounded memory.
+pub const DEFAULT_MEMO_CAP: usize = 64;
+
+/// Memo value for the float lanes: `(M⁻¹ flat row-major, bias)`.
+pub type FloatMemo = KinMemo<(Vec<f64>, Vec<f64>)>;
+
+/// Memo value for the integer lane: `(held M⁻¹ rows as i64, bias as i64)`.
+///
+/// The integer lane caches the *pre-egress* fixed-point words (`irow`,
+/// `tfix`), so a hit re-runs the same integer τ-fold and the same exact
+/// `from_fix` egress a cold evaluation would.
+pub type IntMemo = KinMemo<(Vec<i64>, Vec<i64>)>;
+
+#[derive(Debug, Clone)]
+struct Entry<V> {
+    robot_fp: u64,
+    hash: u64,
+    key: Vec<u64>,
+    value: V,
+}
+
+/// Bounded per-worker LRU over kinematic-sweep outputs.
+///
+/// Usage is a three-step staging protocol, allocation-free on the hot
+/// path (the key is built in a reused buffer; only a cold-path
+/// [`insert`](Self::insert) clones it):
+///
+/// 1. [`begin`](Self::begin), then [`stage_f64`](Self::stage_f64) /
+///    [`stage_i64`](Self::stage_i64) / [`stage_word`](Self::stage_word)
+///    the post-ingest joint words;
+/// 2. [`lookup`](Self::lookup) — on `true` the entry has been promoted
+///    to the front and [`front`](Self::front) returns its value;
+/// 3. on `false`, compute the sweeps and [`insert`](Self::insert) the
+///    result under the staged key.
+#[derive(Debug, Clone)]
+pub struct KinMemo<V> {
+    cap: usize,
+    /// MRU order: `entries[0]` is the most recently used.
+    entries: Vec<Entry<V>>,
+    hits: u64,
+    misses: u64,
+    key_buf: Vec<u64>,
+}
+
+impl<V> KinMemo<V> {
+    /// New memo holding at most `cap` entries (`cap` must be nonzero).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "memo capacity must be nonzero");
+        KinMemo { cap, entries: Vec::new(), hits: 0, misses: 0, key_buf: Vec::new() }
+    }
+
+    /// New memo at [`DEFAULT_MEMO_CAP`].
+    pub fn with_default_cap() -> Self {
+        Self::new(DEFAULT_MEMO_CAP)
+    }
+
+    /// Entry capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Live entry count (`<= cap`).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entry has been inserted yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `(hits, misses)` since construction. Monotone non-decreasing;
+    /// every [`lookup`](Self::lookup) increments exactly one side.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Start staging a key: clears the reused key buffer.
+    pub fn begin(&mut self) {
+        self.key_buf.clear();
+    }
+
+    /// Stage `f64` words by exact bit pattern (`-0.0 != 0.0`, and every
+    /// NaN payload is its own key — bitwise faithfulness over numeric
+    /// equality, since the sweeps themselves are bit-deterministic).
+    pub fn stage_f64(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.key_buf.push(x.to_bits());
+        }
+    }
+
+    /// Stage `i64` words (the integer lane's quantized joint state).
+    pub fn stage_i64(&mut self, xs: &[i64]) {
+        for &x in xs {
+            self.key_buf.push(x as u64);
+        }
+    }
+
+    /// Stage one raw word (e.g. a packed format descriptor).
+    pub fn stage_word(&mut self, w: u64) {
+        self.key_buf.push(w);
+    }
+
+    /// FNV-1a over the robot fingerprint and the staged key words.
+    fn hash_key(robot_fp: u64, key: &[u64]) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = (OFFSET ^ robot_fp).wrapping_mul(PRIME);
+        for &w in key {
+            h = (h ^ w).wrapping_mul(PRIME);
+        }
+        h
+    }
+
+    /// Probe for the staged key. On a hit the entry is promoted to the
+    /// MRU front (read it with [`front`](Self::front)) and `hits`
+    /// increments; on a miss `misses` increments. The hash is a fast
+    /// reject only — a hit additionally requires `robot_fp` equality
+    /// and full word-for-word key equality.
+    pub fn lookup(&mut self, robot_fp: u64) -> bool {
+        let h = Self::hash_key(robot_fp, &self.key_buf);
+        let pos = self
+            .entries
+            .iter()
+            .position(|e| e.hash == h && e.robot_fp == robot_fp && e.key == self.key_buf);
+        match pos {
+            Some(i) => {
+                let e = self.entries.remove(i);
+                self.entries.insert(0, e);
+                self.hits += 1;
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Value of the MRU entry — the one a `true` [`lookup`](Self::lookup)
+    /// just promoted. Panics if the memo is empty.
+    pub fn front(&self) -> &V {
+        &self.entries.first().expect("front() on an empty memo").value
+    }
+
+    /// Insert `value` under the staged key, evicting from the LRU tail
+    /// past capacity. The caller stages the same key it looked up with;
+    /// the key buffer is left intact (cloned, not drained).
+    pub fn insert(&mut self, robot_fp: u64, value: V) {
+        let hash = Self::hash_key(robot_fp, &self.key_buf);
+        self.entries.insert(0, Entry { robot_fp, hash, key: self.key_buf.clone(), value });
+        self.entries.truncate(self.cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(memo: &mut KinMemo<u32>, words: &[u64]) {
+        memo.begin();
+        for &w in words {
+            memo.stage_word(w);
+        }
+    }
+
+    #[test]
+    fn hit_returns_inserted_value_and_counts() {
+        let mut m: KinMemo<u32> = KinMemo::new(4);
+        stage(&mut m, &[1, 2, 3]);
+        assert!(!m.lookup(7), "cold lookup must miss");
+        m.insert(7, 42);
+        stage(&mut m, &[1, 2, 3]);
+        assert!(m.lookup(7), "same key must hit");
+        assert_eq!(*m.front(), 42);
+        assert_eq!(m.counters(), (1, 1));
+    }
+
+    #[test]
+    fn adjacent_keys_never_alias() {
+        // One-lsb-apart quantized states are distinct keys even though
+        // their hashes could in principle collide: the full-key compare
+        // is what decides a hit.
+        let mut m: KinMemo<u32> = KinMemo::new(8);
+        stage(&mut m, &[100, 200]);
+        m.lookup(1);
+        m.insert(1, 10);
+        stage(&mut m, &[100, 201]);
+        assert!(!m.lookup(1), "adjacent key must not alias");
+        m.insert(1, 11);
+        stage(&mut m, &[100, 200]);
+        assert!(m.lookup(1));
+        assert_eq!(*m.front(), 10);
+        stage(&mut m, &[100, 201]);
+        assert!(m.lookup(1));
+        assert_eq!(*m.front(), 11);
+    }
+
+    #[test]
+    fn robot_fingerprint_partitions_entries() {
+        // Same joint words under two different robots (the pool worker
+        // cache serves structure-compatible robots) must not alias.
+        let mut m: KinMemo<u32> = KinMemo::new(8);
+        stage(&mut m, &[5, 6]);
+        m.lookup(0xAA);
+        m.insert(0xAA, 1);
+        stage(&mut m, &[5, 6]);
+        assert!(!m.lookup(0xBB), "different robot_fp must miss");
+        m.insert(0xBB, 2);
+        stage(&mut m, &[5, 6]);
+        assert!(m.lookup(0xAA));
+        assert_eq!(*m.front(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_at_capacity() {
+        let mut m: KinMemo<u32> = KinMemo::new(2);
+        stage(&mut m, &[1]);
+        m.lookup(0);
+        m.insert(0, 1);
+        stage(&mut m, &[2]);
+        m.lookup(0);
+        m.insert(0, 2);
+        // Touch key [1] so key [2] becomes the LRU tail.
+        stage(&mut m, &[1]);
+        assert!(m.lookup(0));
+        stage(&mut m, &[3]);
+        m.lookup(0);
+        m.insert(0, 3);
+        assert_eq!(m.len(), 2, "capacity bound holds");
+        stage(&mut m, &[2]);
+        assert!(!m.lookup(0), "LRU entry [2] was evicted");
+        stage(&mut m, &[1]);
+        assert!(m.lookup(0), "recently-touched entry [1] survived");
+        stage(&mut m, &[3]);
+        assert!(m.lookup(0), "fresh entry [3] present");
+    }
+
+    #[test]
+    fn counters_are_monotone_over_random_traffic() {
+        // Seeded pseudo-random probe/insert traffic: counters never
+        // decrease, exactly one side moves per lookup, and len stays
+        // within cap.
+        let mut m: KinMemo<u32> = KinMemo::new(3);
+        let mut state = 0x9e37_79b9_u64;
+        let mut prev = (0u64, 0u64);
+        for step in 0..500 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let key = state >> 56; // small space forces hits AND evictions
+            stage(&mut m, &[key]);
+            let hit = m.lookup(0);
+            if !hit {
+                m.insert(0, step as u32);
+            }
+            let now = m.counters();
+            assert!(now.0 >= prev.0 && now.1 >= prev.1, "counters monotone");
+            assert_eq!(now.0 + now.1, prev.0 + prev.1 + 1, "one side per lookup");
+            assert!(m.len() <= m.cap(), "len within cap");
+            prev = now;
+        }
+        assert!(prev.0 > 0, "small key space must produce some hits");
+        assert!(prev.1 > 0, "and some misses");
+    }
+
+    #[test]
+    fn stage_f64_distinguishes_bit_patterns() {
+        let mut m: KinMemo<u32> = KinMemo::new(4);
+        m.begin();
+        m.stage_f64(&[0.0]);
+        m.lookup(0);
+        m.insert(0, 1);
+        m.begin();
+        m.stage_f64(&[-0.0]);
+        assert!(!m.lookup(0), "-0.0 is a distinct bit pattern from 0.0");
+    }
+}

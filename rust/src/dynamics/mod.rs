@@ -8,12 +8,14 @@ pub mod crba;
 pub mod deriv;
 pub mod fd;
 pub mod kinematics;
+pub mod memo;
 pub mod minv;
 pub mod pool;
 pub mod rnea;
 pub mod workspace;
 
 pub use batch::{eval_batch, eval_batch_par, BatchKernel, BatchOutput, BatchTask};
+pub use memo::{FloatMemo, IntMemo, KinMemo, DEFAULT_MEMO_CAP};
 pub use pool::WorkerPool;
 pub use crba::{crba, crba_into};
 pub use deriv::{fd_derivatives, rnea_derivatives};

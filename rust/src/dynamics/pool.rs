@@ -43,6 +43,7 @@
 //! rebuilding a workspace.
 
 use super::batch::{eval_batch, BatchKernel, BatchOutput, BatchTask};
+use super::memo::{FloatMemo, IntMemo};
 use super::workspace::DynWorkspace;
 use crate::model::Robot;
 use crate::quant::scaling::ShiftSchedule;
@@ -99,8 +100,12 @@ enum PoolWork {
 enum PoolPart {
     /// Outputs of a task chunk, in task order.
     Outputs(Vec<BatchOutput>),
-    /// A flat chunk wrote into the caller's buffer; nothing to return.
-    Done,
+    /// A flat chunk wrote into the caller's buffer; the payload is the
+    /// kinematics-memo `(hits, misses)` delta this chunk produced on its
+    /// worker (zero for every kernel but `DynAll`), so the caller's
+    /// engine can keep cumulative cache counters without any shared
+    /// state between workers.
+    Done { hits: u64, misses: u64 },
 }
 
 /// One chunk of a batch, evaluated by whichever worker pulls it first.
@@ -230,7 +235,7 @@ impl WorkerPool {
             let (ordinal, res) = rx.recv().expect("pool worker answered");
             match res {
                 Ok(PoolPart::Outputs(outs)) => parts[ordinal] = Some(outs),
-                Ok(PoolPart::Done) => {} // not produced by task chunks
+                Ok(PoolPart::Done { .. }) => {} // not produced by task chunks
                 Err(msg) => panic_msg = Some(msg),
             }
         }
@@ -252,6 +257,13 @@ impl WorkerPool {
     /// identical to a serial decode→kernel→encode loop because the
     /// workers run exactly that loop. Panics from malformed tasks are
     /// re-raised here after every chunk has answered.
+    ///
+    /// Returns the summed kinematics-memo `(hits, misses)` delta across
+    /// every worker that served a chunk — nonzero only for
+    /// [`BatchKernel::DynAll`], whose per-worker memos skip repeated
+    /// sweeps across requests. Memo hits replay the cached sweep through
+    /// the identical egress tail, so the bitwise-equals-serial guarantee
+    /// holds regardless of each worker's memo state.
     #[allow(clippy::too_many_arguments)]
     pub fn eval_flat(
         &self,
@@ -264,7 +276,7 @@ impl WorkerPool {
         out_per_task: usize,
         out: &mut [f32],
         max_chunks: usize,
-    ) {
+    ) -> (u64, u64) {
         self.eval_flat_backend(
             robot,
             kernel,
@@ -277,7 +289,7 @@ impl WorkerPool {
             out_per_task,
             out,
             max_chunks,
-        );
+        )
     }
 
     /// As [`WorkerPool::eval_flat`], but every task runs the quantized
@@ -285,7 +297,8 @@ impl WorkerPool {
     /// quantized routes. Per-task results are bitwise identical to the
     /// serial [`crate::runtime::QuantEngine`] loop (same decode →
     /// `QuantScratch` kernel → encode chain); workers cache one
-    /// `QuantScratch` per (robot structure, format).
+    /// `QuantScratch` per (robot structure, format). Returns the memo
+    /// `(hits, misses)` delta as [`WorkerPool::eval_flat`] does.
     #[allow(clippy::too_many_arguments)]
     pub fn eval_flat_quant(
         &self,
@@ -299,7 +312,7 @@ impl WorkerPool {
         out_per_task: usize,
         out: &mut [f32],
         max_chunks: usize,
-    ) {
+    ) -> (u64, u64) {
         self.eval_flat_backend(
             robot,
             kernel,
@@ -312,7 +325,7 @@ impl WorkerPool {
             out_per_task,
             out,
             max_chunks,
-        );
+        )
     }
 
     /// As [`WorkerPool::eval_flat`], but every task runs the
@@ -324,6 +337,8 @@ impl WorkerPool {
     /// decode→`QuantIntScratch`→encode loop. Workers cache one
     /// `QuantIntScratch` per (robot structure, format) — never aliasing
     /// the rounded-f64 `Quant` lane's entries at the same format.
+    /// Returns the memo `(hits, misses)` delta as
+    /// [`WorkerPool::eval_flat`] does.
     #[allow(clippy::too_many_arguments)]
     pub fn eval_flat_int(
         &self,
@@ -338,7 +353,7 @@ impl WorkerPool {
         out_per_task: usize,
         out: &mut [f32],
         max_chunks: usize,
-    ) {
+    ) -> (u64, u64) {
         self.eval_flat_backend(
             robot,
             kernel,
@@ -351,11 +366,12 @@ impl WorkerPool {
             out_per_task,
             out,
             max_chunks,
-        );
+        )
     }
 
     /// Backend-generic flat fan-out; see [`WorkerPool::eval_flat`] for
-    /// the layout/borrowing contract.
+    /// the layout/borrowing contract and the returned memo-counter
+    /// delta.
     #[allow(clippy::too_many_arguments)]
     fn eval_flat_backend(
         &self,
@@ -370,7 +386,7 @@ impl WorkerPool {
         out_per_task: usize,
         out: &mut [f32],
         max_chunks: usize,
-    ) {
+    ) -> (u64, u64) {
         assert!(n > 0, "flat batches need a positive row length");
         let rows = q.len() / n;
         assert_eq!(q.len(), rows * n, "q rows misaligned");
@@ -378,7 +394,7 @@ impl WorkerPool {
         assert_eq!(u.len(), rows * n, "u rows misaligned");
         assert_eq!(out.len(), rows * out_per_task, "output rows misaligned");
         if rows == 0 {
-            return;
+            return (0, 0);
         }
         let chunks = max_chunks.max(1).min(self.threads).min(rows);
         let per = rows.div_ceil(chunks);
@@ -422,15 +438,22 @@ impl WorkerPool {
         // finished or was dropped by a dying worker), so unwinding is
         // sound there too.
         let mut panic_msg: Option<String> = None;
+        let (mut hits, mut misses) = (0u64, 0u64);
         for _ in 0..sent {
             let (_, res) = rx.recv().expect("pool worker answered");
-            if let Err(msg) = res {
-                panic_msg = Some(msg);
+            match res {
+                Ok(PoolPart::Done { hits: h, misses: m }) => {
+                    hits += h;
+                    misses += m;
+                }
+                Ok(PoolPart::Outputs(_)) => {} // not produced by flat chunks
+                Err(msg) => panic_msg = Some(msg),
             }
         }
         if let Some(msg) = panic_msg {
             panic!("worker pool task panicked: {msg}");
         }
+        (hits, misses)
     }
 }
 
@@ -458,7 +481,14 @@ enum LaneScratch {
 
 /// Per-worker cached state: the lane workspace for the
 /// (robot structure, backend) pair last seen plus the flat-path staging
-/// buffers, all sized from the DOF.
+/// buffers, all sized from the DOF. `DynAll` jobs additionally consult
+/// the cache's cross-request kinematics memo (`fmemo` for the f64 and
+/// rounded lanes, `imemo` for the integer lane — only the entry's own
+/// lane ever populates, the other stays empty) so repeated
+/// linearizations at the same quantized state skip the sweep. Memos are
+/// per-worker, so the hot path stays lock-free; they are discarded with
+/// the cache on task panic (sound: a memo only ever holds results of
+/// completed sweeps).
 struct WorkerCache {
     robot: Arc<Robot>,
     backend: PoolBackend,
@@ -468,6 +498,10 @@ struct WorkerCache {
     u: Vec<f64>,
     out_vec: Vec<f64>,
     out_mat: DMat,
+    /// Fused-egress staging for `DynAll` rows (`n² + 2n` values).
+    out_all: Vec<f64>,
+    fmemo: FloatMemo,
+    imemo: IntMemo,
 }
 
 impl WorkerCache {
@@ -487,7 +521,18 @@ impl WorkerCache {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
+            out_all: vec![0.0; n * n + 2 * n],
+            fmemo: FloatMemo::with_default_cap(),
+            imemo: IntMemo::with_default_cap(),
         }
+    }
+
+    /// Combined memo counters across both lanes (only one is ever
+    /// nonzero for a given cache entry).
+    fn memo_counters(&self) -> (u64, u64) {
+        let (fh, fm) = self.fmemo.counters();
+        let (ih, im) = self.imemo.counters();
+        (fh + ih, fm + im)
     }
 }
 
@@ -516,7 +561,9 @@ fn encode32(src: &[f64], dst: &mut [f32]) {
 /// does — decode each f32 row into f64 staging, run the lane's workspace
 /// kernel (f64 `DynWorkspace`, or `QuantScratch` at the job's format),
 /// encode the f64 result back — so per-task outputs are bitwise
-/// identical to serial execution.
+/// identical to serial execution. Returns the kinematics-memo
+/// `(hits, misses)` delta this chunk produced (zero for every kernel
+/// but [`BatchKernel::DynAll`]).
 ///
 /// # Safety
 /// The chunk's pointers must reference live, disjoint buffers of the
@@ -529,10 +576,16 @@ unsafe fn eval_flat_chunk(
     cache: &mut WorkerCache,
     sched: Option<&ShiftSchedule>,
     c: &FlatChunk,
-) {
+) -> (u64, u64) {
     let n = c.n;
     assert_eq!(robot.dof(), n, "flat chunk row length != robot DOF");
-    let WorkerCache { backend, lane, q, qd, u, out_vec, out_mat, .. } = cache;
+    let (hits0, misses0) = cache.memo_counters();
+    // The memo partitions entries by robot fingerprint; only the fused
+    // route consults it, so skip the hash for the single-output kernels.
+    let robot_fp =
+        if kernel == BatchKernel::DynAll { robot.fingerprint() } else { 0 };
+    let WorkerCache { backend, lane, q, qd, u, out_vec, out_mat, out_all, fmemo, imemo, .. } =
+        cache;
     for k in 0..c.rows {
         let qrow = std::slice::from_raw_parts(c.q.add(k * n), n);
         let out = std::slice::from_raw_parts_mut(c.out.add(k * c.out_per_task), c.out_per_task);
@@ -555,6 +608,12 @@ unsafe fn eval_flat_chunk(
                     ws.minv_into(robot, q, out_mat);
                     encode32(&out_mat.d, out);
                 }
+                BatchKernel::DynAll => {
+                    decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                    decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                    ws.dyn_all_memo_into(robot, robot_fp, q, qd, u, fmemo, out_all);
+                    encode32(out_all, out);
+                }
             },
             LaneScratch::Quant(ws) => {
                 let PoolBackend::Quant(fmt) = *backend else {
@@ -576,6 +635,12 @@ unsafe fn eval_flat_chunk(
                     BatchKernel::Minv => {
                         ws.minv_into(robot, q, fmt, out_mat);
                         encode32(&out_mat.d, out);
+                    }
+                    BatchKernel::DynAll => {
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.dyn_all_memo_into(robot, robot_fp, q, qd, u, fmt, fmemo, out_all);
+                        encode32(out_all, out);
                     }
                 }
             }
@@ -602,10 +667,19 @@ unsafe fn eval_flat_chunk(
                         ws.minv_dd_into(robot, q, sched, out_mat);
                         encode32(&out_mat.d, out);
                     }
+                    BatchKernel::DynAll => {
+                        let sched = sched.expect("int pool jobs carry a shift schedule");
+                        decode32(std::slice::from_raw_parts(c.qd.add(k * n), n), qd);
+                        decode32(std::slice::from_raw_parts(c.u.add(k * n), n), u);
+                        ws.dyn_all_dd_memo_into(robot, q, qd, u, sched, imemo, out_all);
+                        encode32(out_all, out);
+                    }
                 }
             }
         }
     }
+    let (hits1, misses1) = cache.memo_counters();
+    (hits1 - hits0, misses1 - misses0)
 }
 
 /// (Robot structure, backend) pairs each pool worker keeps warm
@@ -672,10 +746,10 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
             PoolWork::Flat(chunk) => {
                 // SAFETY: the caller blocks in eval_flat until this job
                 // answers, so the borrowed rows outlive the evaluation.
-                unsafe {
+                let (hits, misses) = unsafe {
                     eval_flat_chunk(&job.robot, job.kernel, &mut cache, job.sched.as_deref(), chunk)
                 };
-                PoolPart::Done
+                PoolPart::Done { hits, misses }
             }
         }));
         let result = match result {
@@ -822,7 +896,7 @@ mod tests {
             let mut got = vec![0.0f32; rows * per_task];
             for chunks in [2, 3, 16] {
                 got.fill(0.0);
-                match kernel {
+                let _ = match kernel {
                     BatchKernel::Minv => pool.eval_flat(
                         &robot,
                         kernel,
@@ -845,7 +919,7 @@ mod tests {
                         &mut got,
                         chunks,
                     ),
-                }
+                };
                 assert_eq!(got, want, "kernel {kernel:?} chunks {chunks}");
             }
         }
@@ -1039,6 +1113,111 @@ mod tests {
             pool.eval_flat(&robot, BatchKernel::Fd, &q32, &qd32, &u32, n, n, &mut got, 4);
             assert_eq!(got, want_f64, "f64 lane diverged");
         }
+    }
+
+    /// The fused DynAll kernel through the pool: every lane must match
+    /// its memo-less serial reference bitwise (memo hits replay the
+    /// cached sweep through the identical egress tail), and the
+    /// per-worker memo deltas must surface through the eval_flat return
+    /// — repeated rows hit, a warm second batch hits everywhere.
+    #[test]
+    fn pooled_dyn_all_matches_serial_and_counts_memo_hits() {
+        use crate::quant::scaling::{analyze, ScalingConfig};
+        let pool = WorkerPool::new(1); // one worker ⇒ deterministic memo accounting
+        let robot = Arc::new(builtin::iiwa());
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let sched = Arc::new(analyze(&robot, fmt, &ScalingConfig::default()).expect("schedule"));
+        let per = n * n + 2 * n;
+        // 3 distinct states, then bit-exact repeats of all 3 — the
+        // repeats must be memo hits on every lane.
+        let mut rng = Rng::new(950);
+        let (mut q32, mut qd32, mut u32) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..3 {
+            let s = State::random(&robot, &mut rng);
+            q32.extend(s.q.iter().map(|&x| x as f32));
+            qd32.extend(s.qd.iter().map(|&x| x as f32));
+            u32.extend(rng.vec_range(n, -8.0, 8.0).iter().map(|&x| x as f32));
+        }
+        let (qq, dd, uu) = (q32.clone(), qd32.clone(), u32.clone());
+        q32.extend(qq);
+        qd32.extend(dd);
+        u32.extend(uu);
+        let rows = 6;
+        let (mut q, mut qd, mut u) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let mut want = vec![0.0f64; per];
+
+        // f64 lane.
+        let mut ws = DynWorkspace::new(&robot);
+        let mut want32 = vec![0.0f32; rows * per];
+        for k in 0..rows {
+            decode32(&q32[k * n..(k + 1) * n], &mut q);
+            decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+            decode32(&u32[k * n..(k + 1) * n], &mut u);
+            ws.dyn_all_into(&robot, &q, &qd, &u, None, &mut want);
+            encode32(&want, &mut want32[k * per..(k + 1) * per]);
+        }
+        let mut got = vec![0.0f32; rows * per];
+        let (h, m) =
+            pool.eval_flat(&robot, BatchKernel::DynAll, &q32, &qd32, &u32, n, per, &mut got, 1);
+        assert_eq!(got, want32, "pooled f64 dyn_all diverged from serial");
+        assert_eq!((h, m), (3, 3), "repeated rows must hit the worker memo");
+        got.fill(0.0);
+        let (h, m) =
+            pool.eval_flat(&robot, BatchKernel::DynAll, &q32, &qd32, &u32, n, per, &mut got, 1);
+        assert_eq!(got, want32, "warm-memo batch diverged from serial");
+        assert_eq!((h, m), (6, 0), "a warm second batch hits everywhere");
+
+        // Rounded quant lane.
+        let mut qws = QuantScratch::new(n);
+        for k in 0..rows {
+            decode32(&q32[k * n..(k + 1) * n], &mut q);
+            decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+            decode32(&u32[k * n..(k + 1) * n], &mut u);
+            qws.dyn_all_into(&robot, &q, &qd, &u, fmt, &mut want);
+            encode32(&want, &mut want32[k * per..(k + 1) * per]);
+        }
+        got.fill(0.0);
+        let (h, m) = pool.eval_flat_quant(
+            &robot,
+            BatchKernel::DynAll,
+            fmt,
+            &q32,
+            &qd32,
+            &u32,
+            n,
+            per,
+            &mut got,
+            1,
+        );
+        assert_eq!(got, want32, "pooled quant dyn_all diverged from serial");
+        assert_eq!((h, m), (3, 3));
+
+        // True-integer lane.
+        let mut iws = QuantIntScratch::new(n);
+        for k in 0..rows {
+            decode32(&q32[k * n..(k + 1) * n], &mut q);
+            decode32(&qd32[k * n..(k + 1) * n], &mut qd);
+            decode32(&u32[k * n..(k + 1) * n], &mut u);
+            iws.dyn_all_dd_into(&robot, &q, &qd, &u, &sched, &mut want);
+            encode32(&want, &mut want32[k * per..(k + 1) * per]);
+        }
+        got.fill(0.0);
+        let (h, m) = pool.eval_flat_int(
+            &robot,
+            BatchKernel::DynAll,
+            fmt,
+            &sched,
+            &q32,
+            &qd32,
+            &u32,
+            n,
+            per,
+            &mut got,
+            1,
+        );
+        assert_eq!(got, want32, "pooled qint dyn_all diverged from serial");
+        assert_eq!((h, m), (3, 3));
     }
 
     #[test]

@@ -141,6 +141,89 @@ impl DynWorkspace {
         fold_rhs_matvec(&self.mi, tau, &self.bias, qdd);
     }
 
+    /// Fused multi-output dynamics: one kinematics pass feeds the RNEA
+    /// bias sweep, the division-deferring M⁻¹ sweep, and the FD τ-fold,
+    /// and all three results leave in one flat egress slice:
+    ///
+    /// ```text
+    /// out = [ q̈ (N) | M⁻¹ (N×N row-major) | C (N) ]      len = N² + 2N
+    /// ```
+    ///
+    /// This is the [`fd_into`](Self::fd_into) fusion generalized to
+    /// multi-output egress — the CPU analog of the paper's inter-module
+    /// DSP reuse: an MPC/RL client wanting FD *and* M⁻¹ *and* C at the
+    /// same `(q, q̇)` pays one sweep instead of three routes. Each
+    /// section is bitwise identical to what the separate `fd` / `minv` /
+    /// `rnea(q̈=0)` routes produce at the same inputs.
+    pub fn dyn_all_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fext: Option<&[SV]>,
+        out: &mut [f64],
+    ) {
+        let n = self.n;
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        let (qdd, rest) = out.split_at_mut(n);
+        self.fd_into(robot, q, qd, tau, fext, qdd);
+        let (mi, bias) = rest.split_at_mut(n * n);
+        mi.copy_from_slice(&self.mi.d);
+        bias.copy_from_slice(&self.bias);
+    }
+
+    /// [`dyn_all_into`](Self::dyn_all_into) with a cross-request
+    /// kinematics memo: the sweep outputs `(M⁻¹, C)` are keyed by the
+    /// exact bit patterns of `(q, q̇)` plus `robot_fp`
+    /// ([`Robot::fingerprint`]), so a repeated linearization point skips
+    /// the kinematics/bias/M⁻¹ sweeps and re-runs only the τ-fold
+    /// matvec. A hit is bitwise identical to a cold miss by
+    /// construction — the cached words are exactly the sweep outputs —
+    /// so memo state never changes results, only cost. External forces
+    /// are not part of the key, so this entry point is `fext = None`
+    /// only (the serving route's shape).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dyn_all_memo_into(
+        &mut self,
+        robot: &Robot,
+        robot_fp: u64,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        memo: &mut super::memo::FloatMemo,
+        out: &mut [f64],
+    ) {
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        memo.begin();
+        memo.stage_f64(q);
+        memo.stage_f64(qd);
+        if memo.lookup(robot_fp) {
+            let (mi, bias) = memo.front();
+            self.mi.d.copy_from_slice(mi);
+            self.bias.copy_from_slice(bias);
+        } else {
+            self.kin.recompute(robot, q, qd);
+            bias_into(robot, &self.kin, None, &mut self.a, &mut self.f, &mut self.bias);
+            minv_dd_into(
+                robot,
+                &self.kin,
+                &self.topo,
+                &mut self.minv_scratch,
+                &mut self.divq,
+                &mut self.mi,
+            );
+            memo.insert(robot_fp, (self.mi.d.clone(), self.bias.clone()));
+        }
+        let (qdd, rest) = out.split_at_mut(n);
+        fold_rhs_matvec(&self.mi, tau, &self.bias, qdd);
+        let (mi, bias) = rest.split_at_mut(n * n);
+        mi.copy_from_slice(&self.mi.d);
+        bias.copy_from_slice(&self.bias);
+    }
+
     /// Forward dynamics via the O(N) Articulated Body Algorithm — the
     /// motion-simulator fast path. Writes q̈ into `qdd`.
     pub fn aba_into(
@@ -207,6 +290,150 @@ mod tests {
                 assert_eq!(ws.divq.requests.len(), n, "one divider request per joint");
             }
         }
+    }
+
+    #[test]
+    fn dyn_all_sections_match_separate_routes_bitwise() {
+        // The fused multi-output egress must be *bitwise* what the
+        // separate fd / minv / rnea(q̈=0) kernels produce — that is the
+        // contract the DynAll route's differential tests build on.
+        for robot in [builtin::iiwa(), builtin::hyq(), builtin::atlas(), builtin::baxter()] {
+            let n = robot.dof();
+            let mut ws = DynWorkspace::new(&robot);
+            let mut sep = DynWorkspace::new(&robot);
+            let mut rng = Rng::new(502);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let tau = rng.vec_range(n, -10.0, 10.0);
+                let mut out = vec![0.0; n * n + 2 * n];
+                ws.dyn_all_into(&robot, &s.q, &s.qd, &tau, None, &mut out);
+
+                let mut qdd = vec![0.0; n];
+                sep.fd_into(&robot, &s.q, &s.qd, &tau, None, &mut qdd);
+                assert_eq!(&out[..n], &qdd[..], "{}: fused q̈ != fd route", robot.name);
+
+                let mut mi = DMat::zeros(n, n);
+                sep.minv_into(&robot, &s.q, &mut mi);
+                assert_eq!(&out[n..n + n * n], &mi.d[..], "{}: fused M⁻¹ != minv route", robot.name);
+
+                let zero = vec![0.0; n];
+                let mut bias = vec![0.0; n];
+                sep.rnea_into(&robot, &s.q, &s.qd, &zero, None, &mut bias);
+                assert_eq!(&out[n + n * n..], &bias[..], "{}: fused C != rnea(0) route", robot.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dyn_all_memo_hit_is_bitwise_identical_to_miss() {
+        use crate::dynamics::memo::FloatMemo;
+        let robot = builtin::iiwa();
+        let fp = robot.fingerprint();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut memo = FloatMemo::new(8);
+        let mut rng = Rng::new(503);
+        let s = State::random(&robot, &mut rng);
+        let tau_a = rng.vec_range(n, -10.0, 10.0);
+        let tau_b = rng.vec_range(n, -10.0, 10.0);
+        let per = n * n + 2 * n;
+
+        let mut cold = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau_a, &mut memo, &mut cold);
+        assert_eq!(memo.counters(), (0, 1));
+
+        // Same (q, q̇), new τ: the sweeps are skipped, only the τ-fold
+        // reruns — and the result is bitwise what a memo-less call gives.
+        let mut warm = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau_b, &mut memo, &mut warm);
+        assert_eq!(memo.counters(), (1, 1));
+        let mut plain = vec![0.0; per];
+        ws.dyn_all_into(&robot, &s.q, &s.qd, &tau_b, None, &mut plain);
+        assert_eq!(warm, plain, "memo hit must be bitwise identical to cold compute");
+
+        // Exact repeat hits again and reproduces the first answer bitwise.
+        let mut again = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau_a, &mut memo, &mut again);
+        assert_eq!(again, cold);
+        assert_eq!(memo.counters(), (2, 1));
+    }
+
+    #[test]
+    fn dyn_all_memo_adjacent_states_never_alias() {
+        use crate::dynamics::memo::FloatMemo;
+        let robot = builtin::iiwa();
+        let fp = robot.fingerprint();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut memo = FloatMemo::new(8);
+        let mut rng = Rng::new(504);
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(n, -5.0, 5.0);
+        let per = n * n + 2 * n;
+
+        // One-ulp-apart q: distinct keys, distinct (correct) answers.
+        let mut q_adj = s.q.clone();
+        q_adj[0] = f64::from_bits(q_adj[0].to_bits() + 1);
+        let mut out_a = vec![0.0; per];
+        let mut out_b = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau, &mut memo, &mut out_a);
+        ws.dyn_all_memo_into(&robot, fp, &q_adj, &s.qd, &tau, &mut memo, &mut out_b);
+        assert_eq!(memo.counters(), (0, 2), "adjacent state must miss, not alias");
+
+        // Each key replays its own cached sweep, bitwise.
+        let mut ref_a = vec![0.0; per];
+        let mut ref_b = vec![0.0; per];
+        ws.dyn_all_into(&robot, &s.q, &s.qd, &tau, None, &mut ref_a);
+        ws.dyn_all_into(&robot, &q_adj, &s.qd, &tau, None, &mut ref_b);
+        let mut hit_a = vec![0.0; per];
+        let mut hit_b = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau, &mut memo, &mut hit_a);
+        ws.dyn_all_memo_into(&robot, fp, &q_adj, &s.qd, &tau, &mut memo, &mut hit_b);
+        assert_eq!(memo.counters(), (2, 2));
+        assert_eq!(hit_a, ref_a);
+        assert_eq!(hit_b, ref_b);
+    }
+
+    #[test]
+    fn dyn_all_memo_seeded_sweep_with_eviction() {
+        // Proptest-style randomized traffic: a tiny-capacity memo under
+        // a revisit-heavy seeded stream must (a) always produce output
+        // bitwise equal to the memo-less kernel, (b) keep counters
+        // monotone with exactly one increment per call, and (c) never
+        // exceed capacity even as evictions churn.
+        use crate::dynamics::memo::FloatMemo;
+        let robot = builtin::iiwa();
+        let fp = robot.fingerprint();
+        let n = robot.dof();
+        let mut ws = DynWorkspace::new(&robot);
+        let mut plain_ws = DynWorkspace::new(&robot);
+        let mut memo = FloatMemo::new(3);
+        let mut rng = Rng::new(505);
+        let per = n * n + 2 * n;
+
+        // A pool of 6 operating points against capacity 3 forces both
+        // hits (revisits while resident) and evictions (working set > cap).
+        let states: Vec<State> = (0..6).map(|_| State::random(&robot, &mut rng)).collect();
+        let mut pick = 0x2545_f491_4f6c_dd1d_u64;
+        let mut prev = (0u64, 0u64);
+        for step in 0..64 {
+            pick = pick.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let s = &states[(pick >> 59) as usize % states.len()];
+            let tau = rng.vec_range(n, -8.0, 8.0);
+            let mut got = vec![0.0; per];
+            ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau, &mut memo, &mut got);
+            let mut want = vec![0.0; per];
+            plain_ws.dyn_all_into(&robot, &s.q, &s.qd, &tau, None, &mut want);
+            assert_eq!(got, want, "step {step}: memo path diverged from plain kernel");
+            let now = memo.counters();
+            assert_eq!(now.0 + now.1, prev.0 + prev.1 + 1, "one counter per call");
+            assert!(now.0 >= prev.0 && now.1 >= prev.1, "counters monotone");
+            assert!(memo.len() <= memo.cap(), "eviction keeps len within cap");
+            prev = now;
+        }
+        let (hits, misses) = memo.counters();
+        assert!(hits > 0, "revisit-heavy stream must hit");
+        assert!(misses > 3, "working set > cap must keep evicting/missing");
     }
 
     #[test]

@@ -24,7 +24,11 @@
 //!   compensation, or the true-integer `qint` engine — gated by the
 //!   fixed-point scaling analysis at registration);
 //!   `name=path.urdf` entries load robots through the URDF-lite
-//!   importer. `--traj H` additionally exercises trajectory batch
+//!   importer. Every robot gets the rnea/fd/minv step routes plus the
+//!   fused `dyn_all` route (q̈ ‖ M⁻¹ ‖ C from one kinematics pass,
+//!   with a cross-request kinematics memo whose hit/miss counters the
+//!   workload prints) and a trajectory route. `--traj H` additionally
+//!   exercises trajectory batch
 //!   requests (H-step rollouts unrolled server-side); `--par P` fans
 //!   each step route's batches — native and quantized alike — out
 //!   across the worker pool (0 = one chunk per core; rollouts stay

@@ -889,6 +889,115 @@ impl QuantIntScratch {
         }
     }
 
+    /// Fused integer multi-output dynamics through the
+    /// **division-deferring** M⁻¹: one int kinematics pass feeds the
+    /// bias sweep, the deferred M⁻¹ sweep, and the FD τ-fold, with flat
+    /// egress `out = [q̈ (N) | M⁻¹ (N×N row-major) | C (N)]` (`N² + 2N`
+    /// entries, each dequantized exactly on egress) — the integer twin
+    /// of [`crate::dynamics::DynWorkspace::dyn_all_into`]. Each section
+    /// is bitwise what the separate `fd_dd_into` / `minv_dd_into` /
+    /// `rnea_into(q̈=0)` calls produce at the same in-box inputs.
+    pub fn dyn_all_dd_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        sched: &ShiftSchedule,
+        out: &mut [f64],
+    ) {
+        let fp = self.check_schedule(robot, sched);
+        self.ensure_ingest_keyed(robot, sched.fmt, fp);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(Self::q_boxed(robot, i, q[i]));
+            self.qdfix[i] = ctx.to_fix(qd[i]);
+            self.ufix[i] = ctx.to_fix(tau[i]);
+        }
+        self.ikin(robot, true, true);
+        self.rnea_fix(robot, false); // bias: q̈ ≡ 0, tfix ← C
+        self.minv_fix_dd(robot, &sched.hold_shift);
+        self.dyn_all_dd_finish(out);
+    }
+
+    /// [`dyn_all_dd_into`](Self::dyn_all_dd_into) with a cross-request
+    /// memo of the fixed-point sweep outputs (`irow`, `tfix`). The key
+    /// is the **quantized** joint words `(qfix, q̇fix)` plus a packed
+    /// format word and the robot fingerprint, so any raw state that
+    /// ingests onto a cached operating point hits; a hit skips the
+    /// int kinematics/bias/deferred-M⁻¹ sweeps and re-runs only the
+    /// integer τ-fold and the exact `from_fix` egress — bitwise
+    /// identical to a cold miss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dyn_all_dd_memo_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        sched: &ShiftSchedule,
+        memo: &mut crate::dynamics::memo::IntMemo,
+        out: &mut [f64],
+    ) {
+        let fp = self.check_schedule(robot, sched);
+        self.ensure_ingest_keyed(robot, sched.fmt, fp);
+        let ctx = self.ctx;
+        let n = self.n;
+        assert_eq!(tau.len(), n);
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        for i in 0..n {
+            self.qfix[i] = ctx.to_fix(Self::q_boxed(robot, i, q[i]));
+            self.qdfix[i] = ctx.to_fix(qd[i]);
+            self.ufix[i] = ctx.to_fix(tau[i]);
+        }
+        memo.begin();
+        memo.stage_word(((sched.fmt.int_bits as u64) << 32) | sched.fmt.frac_bits as u64);
+        memo.stage_i64(&self.qfix);
+        memo.stage_i64(&self.qdfix);
+        if memo.lookup(fp) {
+            let (mi, bias) = memo.front();
+            self.irow.copy_from_slice(mi);
+            self.tfix.copy_from_slice(bias);
+        } else {
+            self.ikin(robot, true, true);
+            self.rnea_fix(robot, false);
+            self.minv_fix_dd(robot, &sched.hold_shift);
+            memo.insert(fp, (self.irow.clone(), self.tfix.clone()));
+        }
+        self.dyn_all_dd_finish(out);
+    }
+
+    /// Shared tail of the `dyn_all` paths: integer τ − C fold, the
+    /// fixed-point matvec, and the exact `from_fix` egress of all three
+    /// sections. Reads the (recomputed or replayed) `irow` / `tfix`
+    /// words, so memo hits and cold computes take literally the same
+    /// instructions from here on.
+    fn dyn_all_dd_finish(&mut self, out: &mut [f64]) {
+        let ctx = self.ctx;
+        let n = self.n;
+        for i in 0..n {
+            self.irhs[i] = ctx.sat(self.ufix[i] - self.tfix[i]);
+        }
+        let (qdd, rest) = out.split_at_mut(n);
+        for i in 0..n {
+            let mut acc = 0i64;
+            for j in 0..n {
+                acc += self.irow[i * n + j] * self.irhs[j];
+            }
+            qdd[i] = ctx.from_fix(ctx.rnorm(acc));
+        }
+        let (mi, bias) = rest.split_at_mut(n * n);
+        for (o, v) in mi.iter_mut().zip(&self.irow) {
+            *o = ctx.from_fix(*v);
+        }
+        for i in 0..n {
+            bias[i] = ctx.from_fix(self.tfix[i]);
+        }
+    }
+
     /// Integer RNEA (ID): τ = ID(q, q̇, q̈), dequantized into `tau`.
     pub fn rnea_into(
         &mut self,
@@ -1022,6 +1131,23 @@ pub fn quant_fd_dd_i64(
     let mut qdd = vec![0.0; n];
     ws.fd_dd_into(robot, q, qd, tau, sched, &mut qdd);
     qdd
+}
+
+/// Fused division-deferring integer multi-output dynamics, flat egress
+/// `[q̈ | M⁻¹ | C]` (`N² + 2N` entries). Allocating wrapper over
+/// [`QuantIntScratch::dyn_all_dd_into`].
+pub fn quant_dyn_all_dd_i64(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    tau: &[f64],
+    sched: &ShiftSchedule,
+) -> Vec<f64> {
+    let n = robot.dof();
+    let mut ws = QuantIntScratch::new(n);
+    let mut out = vec![0.0; n * n + 2 * n];
+    ws.dyn_all_dd_into(robot, q, qd, tau, sched, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -1282,6 +1408,74 @@ mod tests {
     fn sched(robot: &crate::model::Robot, fmt: QFormat) -> ShiftSchedule {
         analyze(robot, fmt, &ScalingConfig::default())
             .unwrap_or_else(|w| panic!("schedule for {}: {w}", robot.name))
+    }
+
+    /// The fused multi-output egress must be bitwise the three separate
+    /// integer routes: q̈ from the deferred FD, M⁻¹ from the deferred
+    /// sweep, C from the integer RNEA at q̈ = 0.
+    #[test]
+    fn dyn_all_dd_sections_match_separate_int_routes_bitwise() {
+        for robot in [builtin::iiwa(), builtin::hyq()] {
+            let n = robot.dof();
+            let fmt = QFormat::new(12, 12);
+            let sc = sched(&robot, fmt);
+            let mut rng = Rng::new(915);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let tau = rng.vec_range(n, -8.0, 8.0);
+                let out = quant_dyn_all_dd_i64(&robot, &s.q, &s.qd, &tau, &sc);
+                assert_eq!(&out[..n], &quant_fd_dd_i64(&robot, &s.q, &s.qd, &tau, &sc)[..]);
+                assert_eq!(&out[n..n + n * n], &quant_minv_dd_i64(&robot, &s.q, &sc).d[..]);
+                let zero = vec![0.0; n];
+                assert_eq!(
+                    &out[n + n * n..],
+                    &quant_rnea_i64(&robot, &s.q, &s.qd, &zero, fmt)[..]
+                );
+            }
+        }
+    }
+
+    /// A memo hit replays the cached fixed-point sweeps bitwise, keys on
+    /// the quantized joint words (sub-quantum perturbations hit), and
+    /// adjacent quantized states never alias.
+    #[test]
+    fn dyn_all_dd_memo_hit_matches_cold_and_keys_on_quantized_words() {
+        use crate::dynamics::memo::IntMemo;
+        let robot = builtin::iiwa();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let sc = sched(&robot, fmt);
+        let ctx = QInt::new(fmt);
+        let mut ws = QuantIntScratch::new(n);
+        let mut memo = IntMemo::new(8);
+        let mut rng = Rng::new(916);
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(n, -8.0, 8.0);
+        let per = n * n + 2 * n;
+
+        let mut cold = vec![0.0; per];
+        ws.dyn_all_dd_memo_into(&robot, &s.q, &s.qd, &tau, &sc, &mut memo, &mut cold);
+        assert_eq!(cold, quant_dyn_all_dd_i64(&robot, &s.q, &s.qd, &tau, &sc));
+        assert_eq!(memo.counters(), (0, 1));
+
+        // Quarter-quantum perturbation from a representable point:
+        // same quantized word → hit, bitwise the same answer.
+        let mut q_near = s.q.clone();
+        q_near[0] = ctx.from_fix(ctx.to_fix(s.q[0])) + 0.25 * fmt.step();
+        let mut warm = vec![0.0; per];
+        ws.dyn_all_dd_memo_into(&robot, &q_near, &s.qd, &tau, &sc, &mut memo, &mut warm);
+        assert_eq!(memo.counters(), (1, 1));
+        assert_eq!(warm, cold);
+
+        // One full quantum: adjacent operating point, must miss and get
+        // its own correct answer.
+        let mut q_adj = s.q.clone();
+        q_adj[0] += fmt.step();
+        let mut other = vec![0.0; per];
+        ws.dyn_all_dd_memo_into(&robot, &q_adj, &s.qd, &tau, &sc, &mut memo, &mut other);
+        assert_eq!(memo.counters(), (1, 2));
+        assert_eq!(other, quant_dyn_all_dd_i64(&robot, &q_adj, &s.qd, &tau, &sc));
+        assert_ne!(other, cold, "adjacent quantized q must not alias");
     }
 
     /// Holding-stage renorm boundary behaviour: for every shift `g` the

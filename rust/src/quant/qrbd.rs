@@ -365,6 +365,111 @@ impl QuantScratch {
         }
         self.mi = mi;
     }
+
+    /// Fused quantized multi-output dynamics: one quantized kinematics
+    /// pass feeds the bias sweep, the Minv sweep, and the FD τ-fold,
+    /// with flat egress `out = [q̈ (N) | M⁻¹ (N×N row-major) | C (N)]`
+    /// (`N² + 2N` entries) — the quantized mirror of
+    /// [`crate::dynamics::DynWorkspace::dyn_all_into`]. Each section is
+    /// bitwise what the separate `fd_into` / `minv_into` /
+    /// `rnea_into(q̈=0)` calls produce at the same inputs.
+    pub fn dyn_all_into(
+        &mut self,
+        robot: &Robot,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fmt: QFormat,
+        out: &mut [f64],
+    ) {
+        let ctx = Q::new(fmt);
+        let n = self.n;
+        assert_eq!(robot.dof(), n, "scratch sized for a different robot");
+        assert_eq!(tau.len(), n);
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        for i in 0..n {
+            self.qq[i] = ctx.s(q[i]);
+            self.qdq[i] = ctx.s(qd[i]);
+        }
+        quant_kin_into(robot, &self.qq, &self.qdq, &ctx, &mut self.kin);
+        let mut bias = std::mem::take(&mut self.bias);
+        let mut mi = std::mem::replace(&mut self.mi, DMat::zeros(0, 0));
+        self.rnea_sweeps(robot, &ctx, false, &mut bias);
+        self.minv_sweeps(robot, &ctx, &mut mi);
+        self.bias = bias;
+        self.mi = mi;
+        self.dyn_all_finish(&ctx, tau, out);
+    }
+
+    /// [`dyn_all_into`](Self::dyn_all_into) with a cross-request memo of
+    /// the sweep outputs `(M⁻¹, C)`. The key is the **post-quantization**
+    /// joint words (so any raw state that quantizes onto a cached
+    /// operating point hits) plus a packed format word and the robot
+    /// fingerprint; a hit skips the kinematics/bias/Minv sweeps and
+    /// re-runs only the rounded τ-fold, bitwise identical to a cold miss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dyn_all_memo_into(
+        &mut self,
+        robot: &Robot,
+        robot_fp: u64,
+        q: &[f64],
+        qd: &[f64],
+        tau: &[f64],
+        fmt: QFormat,
+        memo: &mut crate::dynamics::memo::FloatMemo,
+        out: &mut [f64],
+    ) {
+        let ctx = Q::new(fmt);
+        let n = self.n;
+        assert_eq!(robot.dof(), n, "scratch sized for a different robot");
+        assert_eq!(tau.len(), n);
+        assert_eq!(out.len(), n * n + 2 * n, "dyn_all egress is qdd|minv|bias");
+        for i in 0..n {
+            self.qq[i] = ctx.s(q[i]);
+            self.qdq[i] = ctx.s(qd[i]);
+        }
+        memo.begin();
+        memo.stage_word(((fmt.int_bits as u64) << 32) | fmt.frac_bits as u64);
+        memo.stage_f64(&self.qq);
+        memo.stage_f64(&self.qdq);
+        if memo.lookup(robot_fp) {
+            let (mi, bias) = memo.front();
+            self.mi.d.copy_from_slice(mi);
+            self.bias.copy_from_slice(bias);
+        } else {
+            quant_kin_into(robot, &self.qq, &self.qdq, &ctx, &mut self.kin);
+            let mut bias = std::mem::take(&mut self.bias);
+            let mut mi = std::mem::replace(&mut self.mi, DMat::zeros(0, 0));
+            self.rnea_sweeps(robot, &ctx, false, &mut bias);
+            self.minv_sweeps(robot, &ctx, &mut mi);
+            self.bias = bias;
+            self.mi = mi;
+            memo.insert(robot_fp, (self.mi.d.clone(), self.bias.clone()));
+        }
+        self.dyn_all_finish(&ctx, tau, out);
+    }
+
+    /// Shared tail of the `dyn_all` paths: rounded τ − C fold, rounded
+    /// matvec, flat egress. Reads the (restored or replayed) `self.bias`
+    /// / `self.mi` byproducts, so memo hits and cold computes take
+    /// literally the same instructions from here on.
+    fn dyn_all_finish(&mut self, ctx: &Q, tau: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        for i in 0..n {
+            self.rhs[i] = ctx.s(tau[i] - self.bias[i]);
+        }
+        let (qdd, rest) = out.split_at_mut(n);
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += self.mi[(i, j)] * self.rhs[j];
+            }
+            qdd[i] = ctx.s(acc);
+        }
+        let (mi_out, bias_out) = rest.split_at_mut(n * n);
+        mi_out.copy_from_slice(&self.mi.d);
+        bias_out.copy_from_slice(&self.bias);
+    }
 }
 
 /// Quantized RNEA (ID). Intermediate v/a/f quantized per joint step.
@@ -403,6 +508,23 @@ pub fn quant_fd(robot: &Robot, q: &[f64], qd: &[f64], tau: &[f64], fmt: QFormat)
     let mut qdd = vec![0.0; n];
     ws.fd_into(robot, q, qd, tau, fmt, &mut qdd);
     qdd
+}
+
+/// Fused quantized multi-output dynamics, flat egress
+/// `[q̈ | M⁻¹ | C]` (`N² + 2N` entries). Allocating wrapper over
+/// [`QuantScratch::dyn_all_into`].
+pub fn quant_dyn_all(
+    robot: &Robot,
+    q: &[f64],
+    qd: &[f64],
+    tau: &[f64],
+    fmt: QFormat,
+) -> Vec<f64> {
+    let n = robot.dof();
+    let mut ws = QuantScratch::new(n);
+    let mut out = vec![0.0; n * n + 2 * n];
+    ws.dyn_all_into(robot, q, qd, tau, fmt, &mut out);
+    out
 }
 
 /// Quantized ΔRNEA via quantized tangent sweeps (used by LQR/MPC
@@ -569,6 +691,71 @@ mod tests {
                 assert_eq!(quant_fd(&robot, &s.q, &s.qd, &tau, fmt), want);
             }
         }
+    }
+
+    /// The fused multi-output egress must be bitwise the three separate
+    /// quantized routes: q̈ from `quant_fd`, M⁻¹ from `quant_minv`, C
+    /// from `quant_rnea(q̈ = 0)`.
+    #[test]
+    fn dyn_all_sections_match_separate_quant_routes_bitwise() {
+        for robot in [builtin::iiwa(), builtin::hyq()] {
+            let n = robot.dof();
+            let fmt = QFormat::new(12, 14);
+            let mut rng = Rng::new(507);
+            for _ in 0..3 {
+                let s = State::random(&robot, &mut rng);
+                let tau = rng.vec_range(n, -8.0, 8.0);
+                let out = quant_dyn_all(&robot, &s.q, &s.qd, &tau, fmt);
+                assert_eq!(&out[..n], &quant_fd(&robot, &s.q, &s.qd, &tau, fmt)[..]);
+                assert_eq!(&out[n..n + n * n], &quant_minv(&robot, &s.q, fmt).d[..]);
+                let zero = vec![0.0; n];
+                assert_eq!(&out[n + n * n..], &quant_rnea(&robot, &s.q, &s.qd, &zero, fmt)[..]);
+            }
+        }
+    }
+
+    /// A memo hit must replay the cached sweeps bitwise — and because
+    /// the key is the post-quantization words, a *different raw* state
+    /// that quantizes onto the same operating point hits too.
+    #[test]
+    fn dyn_all_memo_hit_matches_cold_and_keys_on_quantized_words() {
+        use crate::dynamics::memo::FloatMemo;
+        let robot = builtin::iiwa();
+        let fp = robot.fingerprint();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let mut ws = QuantScratch::new(n);
+        let mut memo = FloatMemo::new(8);
+        let mut rng = Rng::new(508);
+        let s = State::random(&robot, &mut rng);
+        let tau = rng.vec_range(n, -8.0, 8.0);
+        let per = n * n + 2 * n;
+
+        let mut cold = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &s.q, &s.qd, &tau, fmt, &mut memo, &mut cold);
+        assert_eq!(cold, quant_dyn_all(&robot, &s.q, &s.qd, &tau, fmt));
+        assert_eq!(memo.counters(), (0, 1));
+
+        // Perturb q below half a quantum: same quantized words → hit,
+        // bitwise the same answer.
+        let ctx = Q::new(fmt);
+        let mut q_near = s.q.clone();
+        q_near[0] = ctx.s(s.q[0]) + 0.25 * fmt.step();
+        assert_eq!(ctx.s(q_near[0]), ctx.s(s.q[0]), "perturbation must round away");
+        let mut warm = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &q_near, &s.qd, &tau, fmt, &mut memo, &mut warm);
+        assert_eq!(memo.counters(), (1, 1));
+        assert_eq!(warm, cold);
+
+        // One full quantum is an adjacent operating point: miss, and its
+        // own correct answer.
+        let mut q_adj = s.q.clone();
+        q_adj[0] += fmt.step();
+        let mut other = vec![0.0; per];
+        ws.dyn_all_memo_into(&robot, fp, &q_adj, &s.qd, &tau, fmt, &mut memo, &mut other);
+        assert_eq!(memo.counters(), (1, 2));
+        assert_eq!(other, quant_dyn_all(&robot, &q_adj, &s.qd, &tau, fmt));
+        assert_ne!(other, cold, "adjacent quantized q must not alias");
     }
 
     /// Reusing one scratch across tasks (and interleaving the three

@@ -15,6 +15,11 @@ pub enum ArtifactFn {
     Fd,
     /// M⁻¹(q): 1 input (B,N) → 1 output (B,N,N).
     Minv,
+    /// Fused multi-output dynamics at one (q, q̇): 3 inputs (B,N) →
+    /// one flat (B, N²+2N) output laid out `[q̈ (N) | M⁻¹ (N·N) | C (N)]`
+    /// per task — FD, M⁻¹, and the bias torques from a single kinematic
+    /// sweep (the inter-module-reuse route).
+    DynAll,
 }
 
 impl ArtifactFn {
@@ -24,6 +29,9 @@ impl ArtifactFn {
             "rnea" | "id" => Some(ArtifactFn::Rnea),
             "fd" => Some(ArtifactFn::Fd),
             "minv" => Some(ArtifactFn::Minv),
+            // Underscore-free canonical tag (artifact stems split on '_'),
+            // with the snake-case alias accepted for CLI ergonomics.
+            "dynall" | "dyn_all" => Some(ArtifactFn::DynAll),
             _ => None,
         }
     }
@@ -34,13 +42,14 @@ impl ArtifactFn {
             ArtifactFn::Rnea => "rnea",
             ArtifactFn::Fd => "fd",
             ArtifactFn::Minv => "minv",
+            ArtifactFn::DynAll => "dynall",
         }
     }
 
     /// Number of (B,N) input operands.
     pub fn arity(&self) -> usize {
         match self {
-            ArtifactFn::Rnea | ArtifactFn::Fd => 3,
+            ArtifactFn::Rnea | ArtifactFn::Fd | ArtifactFn::DynAll => 3,
             ArtifactFn::Minv => 1,
         }
     }
@@ -100,6 +109,16 @@ mod tests {
         let m = ArtifactMeta::from_path(Path::new("atlas_minv_b1.hlo.txt")).unwrap();
         assert_eq!(m.function, ArtifactFn::Minv);
         assert_eq!(m.batch, 1);
+    }
+
+    #[test]
+    fn parses_dyn_all_tags() {
+        let m = ArtifactMeta::from_path(Path::new("iiwa_dynall_b8.hlo.txt")).unwrap();
+        assert_eq!(m.function, ArtifactFn::DynAll);
+        assert_eq!(m.robot, "iiwa");
+        assert_eq!(ArtifactFn::parse("dyn_all"), Some(ArtifactFn::DynAll));
+        assert_eq!(ArtifactFn::DynAll.name(), "dynall");
+        assert_eq!(ArtifactFn::DynAll.arity(), 3);
     }
 
     #[test]

@@ -63,12 +63,21 @@ pub trait DynamicsEngine: Send {
     fn batch(&self) -> usize;
     /// Robot DOF (the per-operand row length).
     fn n(&self) -> usize;
-    /// Flat f32 output length per task (N for RNEA/FD, N² for M⁻¹).
+    /// Flat f32 output length per task (N for RNEA/FD, N² for M⁻¹,
+    /// N²+2N for the fused DynAll egress `[q̈ | M⁻¹ | C]`).
     fn out_per_task(&self) -> usize {
         match self.function() {
             ArtifactFn::Minv => self.n() * self.n(),
+            ArtifactFn::DynAll => self.n() * self.n() + 2 * self.n(),
             _ => self.n(),
         }
+    }
+    /// Cumulative `(hits, misses)` of the engine's cross-request
+    /// kinematics memo (serial memo plus any pooled per-worker memo
+    /// deltas). `(0, 0)` for engines/functions without a memo — only
+    /// the `DynAll` route consults one.
+    fn memo_counters(&self) -> (u64, u64) {
+        (0, 0)
     }
     /// Execute one step batch: `arity` flat f32 operands, row-major
     /// (B, N), any B ≤ [`DynamicsEngine::batch`]; returns B output rows.

@@ -14,7 +14,7 @@
 use super::artifact::ArtifactFn;
 use super::engine::EngineError;
 use super::DynamicsEngine;
-use crate::dynamics::{BatchKernel, DynWorkspace, WorkerPool};
+use crate::dynamics::{BatchKernel, DynWorkspace, FloatMemo, WorkerPool};
 use crate::model::{Robot, State};
 use crate::sim::integrate::step_semi_implicit_ws;
 use crate::spatial::DMat;
@@ -48,6 +48,17 @@ pub struct NativeEngine {
     u: Vec<f64>,
     out_vec: Vec<f64>,
     out_mat: DMat,
+    /// Fused-egress staging for `DynAll` tasks (`n² + 2n` values).
+    out_all: Vec<f64>,
+    /// Robot fingerprint partitioning memo entries (computed once here,
+    /// matching what pool workers derive per chunk).
+    robot_fp: u64,
+    /// Cross-request kinematics memo for serial `DynAll` batches.
+    memo: FloatMemo,
+    /// Memo `(hits, misses)` accumulated from pooled `DynAll` batches
+    /// (the workers' own memos; deltas returned by the pool).
+    pool_hits: u64,
+    pool_misses: u64,
 }
 
 impl NativeEngine {
@@ -79,6 +90,7 @@ impl NativeEngine {
             0 => WorkerPool::global().threads(),
             p => p.min(WorkerPool::global().threads()),
         };
+        let robot_fp = robot.fingerprint();
         NativeEngine {
             ws: DynWorkspace::new(&robot),
             q: vec![0.0; n],
@@ -86,6 +98,11 @@ impl NativeEngine {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
+            out_all: vec![0.0; n * n + 2 * n],
+            robot_fp,
+            memo: FloatMemo::with_default_cap(),
+            pool_hits: 0,
+            pool_misses: 0,
             robot: Arc::new(robot),
             function,
             batch,
@@ -131,13 +148,14 @@ impl NativeEngine {
                 ArtifactFn::Rnea => BatchKernel::Rnea,
                 ArtifactFn::Fd => BatchKernel::Fd,
                 ArtifactFn::Minv => BatchKernel::Minv,
+                ArtifactFn::DynAll => BatchKernel::DynAll,
             };
             // M⁻¹ is unary; hand the pool `q` for the unused operands.
             let (qd, u) = match self.function {
                 ArtifactFn::Minv => (&inputs[0], &inputs[0]),
                 _ => (&inputs[1], &inputs[2]),
             };
-            WorkerPool::global().eval_flat(
+            let (hits, misses) = WorkerPool::global().eval_flat(
                 &self.robot,
                 kernel,
                 &inputs[0],
@@ -148,6 +166,8 @@ impl NativeEngine {
                 &mut out,
                 self.par_chunks,
             );
+            self.pool_hits += hits;
+            self.pool_misses += misses;
             return Ok(out);
         }
         for k in 0..b {
@@ -185,6 +205,21 @@ impl NativeEngine {
                     decode(&inputs[0][span], &mut self.q);
                     self.ws.minv_into(&self.robot, &self.q, &mut self.out_mat);
                     encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+                ArtifactFn::DynAll => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span], &mut self.u);
+                    self.ws.dyn_all_memo_into(
+                        &self.robot,
+                        self.robot_fp,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        &mut self.memo,
+                        &mut self.out_all,
+                    );
+                    encode(&self.out_all, &mut out[k * per_task..(k + 1) * per_task]);
                 }
             }
         }
@@ -241,6 +276,10 @@ impl DynamicsEngine for NativeEngine {
     }
     fn n(&self) -> usize {
         self.n
+    }
+    fn memo_counters(&self) -> (u64, u64) {
+        let (h, m) = self.memo.counters();
+        (h + self.pool_hits, m + self.pool_misses)
     }
     fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         NativeEngine::run(self, inputs)
@@ -410,6 +449,49 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The fused DynAll route: serial output matches the memo-less fused
+    /// kernel per row bitwise, a repeated batch is answered from the
+    /// memo (counters advance, output identical), and a pooled engine
+    /// reproduces the serial rows bitwise while surfacing the workers'
+    /// memo deltas.
+    #[test]
+    fn native_engine_serves_dyn_all_with_memo() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let b = 6;
+        let per = n * n + 2 * n;
+        let (inputs, _) = flat_inputs(&robot, b, 704);
+        let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::DynAll, b);
+        assert_eq!(DynamicsEngine::out_per_task(&eng), per);
+        let out = eng.run(&inputs).expect("run");
+        assert_eq!(out.len(), b * per);
+        // Reference: the memo-less fused kernel on the decoded rows.
+        let mut ws = crate::dynamics::DynWorkspace::new(&robot);
+        let (mut q, mut qd, mut u) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let mut want = vec![0.0f64; per];
+        for k in 0..b {
+            decode(&inputs[0][k * n..(k + 1) * n], &mut q);
+            decode(&inputs[1][k * n..(k + 1) * n], &mut qd);
+            decode(&inputs[2][k * n..(k + 1) * n], &mut u);
+            ws.dyn_all_into(&robot, &q, &qd, &u, None, &mut want);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(out[k * per + i], *w as f32, "row {k} value {i}");
+            }
+        }
+        assert_eq!(eng.memo_counters(), (0, b as u64), "cold batch: all misses");
+        // The identical batch again: all memo hits, identical output.
+        let again = eng.run(&inputs).expect("warm run");
+        assert_eq!(again, out, "memo hits must replay the sweep bitwise");
+        assert_eq!(eng.memo_counters(), (b as u64, b as u64));
+        // Pooled engine: bitwise identical rows, worker memo deltas
+        // surface through the engine counters.
+        let mut par = NativeEngine::with_parallelism(robot, ArtifactFn::DynAll, b, 0);
+        let pout = par.run(&inputs).expect("pooled run");
+        assert_eq!(pout, out, "pooled dyn_all diverged from serial");
+        let (h, m) = par.memo_counters();
+        assert_eq!(h + m, b as u64, "every pooled row hit or missed exactly once");
     }
 
     #[test]

@@ -28,7 +28,7 @@ use super::artifact::ArtifactFn;
 use super::engine::EngineError;
 use super::native::{decode, encode, validate_batch, validate_rollout, PAR_MIN_ROWS};
 use super::DynamicsEngine;
-use crate::dynamics::{BatchKernel, WorkerPool};
+use crate::dynamics::{BatchKernel, IntMemo, WorkerPool};
 use crate::model::{Robot, State};
 use crate::quant::scaling::{self, ShiftSchedule};
 use crate::quant::{QFormat, QuantIntScratch};
@@ -62,6 +62,15 @@ pub struct QIntEngine {
     u: Vec<f64>,
     out_vec: Vec<f64>,
     out_mat: DMat,
+    /// Fused-egress staging for `DynAll` tasks (`n² + 2n` values).
+    out_all: Vec<f64>,
+    /// Cross-request kinematics memo for serial `DynAll` batches (keyed
+    /// on the ingested fixed-point joint words; the kernel derives the
+    /// robot fingerprint from its schedule check).
+    memo: IntMemo,
+    /// Memo `(hits, misses)` accumulated from pooled `DynAll` batches.
+    pool_hits: u64,
+    pool_misses: u64,
 }
 
 impl QIntEngine {
@@ -105,6 +114,10 @@ impl QIntEngine {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
+            out_all: vec![0.0; n * n + 2 * n],
+            memo: IntMemo::with_default_cap(),
+            pool_hits: 0,
+            pool_misses: 0,
             robot: Arc::new(robot),
             function,
             batch,
@@ -149,13 +162,14 @@ impl QIntEngine {
                 ArtifactFn::Rnea => BatchKernel::Rnea,
                 ArtifactFn::Fd => BatchKernel::Fd,
                 ArtifactFn::Minv => BatchKernel::Minv,
+                ArtifactFn::DynAll => BatchKernel::DynAll,
             };
             // M⁻¹ is unary; hand the pool `q` for the unused operands.
             let (qd, u) = match self.function {
                 ArtifactFn::Minv => (&inputs[0], &inputs[0]),
                 _ => (&inputs[1], &inputs[2]),
             };
-            WorkerPool::global().eval_flat_int(
+            let (hits, misses) = WorkerPool::global().eval_flat_int(
                 &self.robot,
                 kernel,
                 self.fmt,
@@ -168,6 +182,8 @@ impl QIntEngine {
                 &mut out,
                 self.par_chunks,
             );
+            self.pool_hits += hits;
+            self.pool_misses += misses;
             return Ok(out);
         }
         for k in 0..b {
@@ -205,6 +221,21 @@ impl QIntEngine {
                     decode(&inputs[0][span], &mut self.q);
                     self.ws.minv_dd_into(&self.robot, &self.q, &self.sched, &mut self.out_mat);
                     encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+                ArtifactFn::DynAll => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span], &mut self.u);
+                    self.ws.dyn_all_dd_memo_into(
+                        &self.robot,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        &self.sched,
+                        &mut self.memo,
+                        &mut self.out_all,
+                    );
+                    encode(&self.out_all, &mut out[k * per_task..(k + 1) * per_task]);
                 }
             }
         }
@@ -262,6 +293,10 @@ impl DynamicsEngine for QIntEngine {
     }
     fn n(&self) -> usize {
         self.n
+    }
+    fn memo_counters(&self) -> (u64, u64) {
+        let (h, m) = self.memo.counters();
+        (h + self.pool_hits, m + self.pool_misses)
     }
     fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         QIntEngine::run(self, inputs)
@@ -365,6 +400,46 @@ mod tests {
             .expect("32-bit words must reject");
         assert!(err.0.contains("26"), "width cap not named: {}", err.0);
         QIntEngine::new(iiwa, ArtifactFn::Fd, 8, QFormat::new(12, 12)).expect("iiwa fits");
+    }
+
+    /// The fused DynAll route on the integer lane: serial rows match the
+    /// memo-less fused kernel bitwise, and a repeated batch answers from
+    /// the memo with identical output.
+    #[test]
+    fn qint_engine_serves_dyn_all_with_memo() {
+        use crate::quant::qint::quant_dyn_all_dd_i64;
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let b = 4;
+        let per = n * n + 2 * n;
+        let mut rng = Rng::new(722);
+        let (mut q, mut qd, mut u) = (Vec::new(), Vec::new(), Vec::new());
+        let mut cases = Vec::new();
+        for _ in 0..b {
+            let s = State::random(&robot, &mut rng);
+            let uu = rng.vec_range(n, -6.0, 6.0);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            qd.extend(s.qd.iter().map(|&x| x as f32));
+            u.extend(uu.iter().map(|&x| x as f32));
+            cases.push((s, uu));
+        }
+        let inputs = vec![q, qd, u];
+        let mut eng = QIntEngine::new(robot.clone(), ArtifactFn::DynAll, b, fmt).expect("engine");
+        let sched = eng.schedule().clone();
+        assert_eq!(DynamicsEngine::out_per_task(&eng), per);
+        let out = eng.run(&inputs).expect("run");
+        for (k, (s, uu)) in cases.iter().enumerate() {
+            let want =
+                quant_dyn_all_dd_i64(&robot, &f32_round(&s.q), &f32_round(&s.qd), &f32_round(uu), &sched);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(out[k * per + i], *w as f32, "row {k} value {i}");
+            }
+        }
+        assert_eq!(DynamicsEngine::memo_counters(&eng), (0, b as u64));
+        let again = eng.run(&inputs).expect("warm run");
+        assert_eq!(again, out, "memo hits must replay the sweep bitwise");
+        assert_eq!(DynamicsEngine::memo_counters(&eng), (b as u64, b as u64));
     }
 
     #[test]

@@ -28,7 +28,7 @@ use super::artifact::ArtifactFn;
 use super::engine::EngineError;
 use super::native::{decode, encode, validate_batch, validate_rollout, PAR_MIN_ROWS};
 use super::DynamicsEngine;
-use crate::dynamics::{BatchKernel, WorkerPool};
+use crate::dynamics::{BatchKernel, FloatMemo, WorkerPool};
 use crate::model::{Robot, State};
 use crate::quant::compensate::MinvCompensation;
 use crate::quant::{QFormat, QuantScratch};
@@ -67,6 +67,17 @@ pub struct QuantEngine {
     u: Vec<f64>,
     out_vec: Vec<f64>,
     out_mat: DMat,
+    /// Fused-egress staging for `DynAll` tasks (`n² + 2n` values).
+    out_all: Vec<f64>,
+    /// Robot fingerprint partitioning memo entries.
+    robot_fp: u64,
+    /// Cross-request kinematics memo for serial `DynAll` batches (keyed
+    /// on the post-quantization joint words, so sub-quantum input
+    /// perturbations still hit).
+    memo: FloatMemo,
+    /// Memo `(hits, misses)` accumulated from pooled `DynAll` batches.
+    pool_hits: u64,
+    pool_misses: u64,
 }
 
 impl QuantEngine {
@@ -121,6 +132,7 @@ impl QuantEngine {
         } else {
             None
         };
+        let robot_fp = robot.fingerprint();
         QuantEngine {
             ws: QuantScratch::new(n),
             q: vec![0.0; n],
@@ -128,6 +140,11 @@ impl QuantEngine {
             u: vec![0.0; n],
             out_vec: vec![0.0; n],
             out_mat: DMat::zeros(n, n),
+            out_all: vec![0.0; n * n + 2 * n],
+            robot_fp,
+            memo: FloatMemo::with_default_cap(),
+            pool_hits: 0,
+            pool_misses: 0,
             robot: Arc::new(robot),
             function,
             batch,
@@ -181,13 +198,14 @@ impl QuantEngine {
                 ArtifactFn::Rnea => BatchKernel::Rnea,
                 ArtifactFn::Fd => BatchKernel::Fd,
                 ArtifactFn::Minv => BatchKernel::Minv,
+                ArtifactFn::DynAll => BatchKernel::DynAll,
             };
             // M⁻¹ is unary; hand the pool `q` for the unused operands.
             let (qd, u) = match self.function {
                 ArtifactFn::Minv => (&inputs[0], &inputs[0]),
                 _ => (&inputs[1], &inputs[2]),
             };
-            WorkerPool::global().eval_flat_quant(
+            let (hits, misses) = WorkerPool::global().eval_flat_quant(
                 &self.robot,
                 kernel,
                 self.fmt,
@@ -199,6 +217,8 @@ impl QuantEngine {
                 &mut out,
                 self.par_chunks,
             );
+            self.pool_hits += hits;
+            self.pool_misses += misses;
             return Ok(out);
         }
         for k in 0..b {
@@ -243,6 +263,22 @@ impl QuantEngine {
                         }
                     }
                     encode(&self.out_mat.d, &mut out[k * n * n..(k + 1) * n * n]);
+                }
+                ArtifactFn::DynAll => {
+                    decode(&inputs[0][span.clone()], &mut self.q);
+                    decode(&inputs[1][span.clone()], &mut self.qd);
+                    decode(&inputs[2][span], &mut self.u);
+                    self.ws.dyn_all_memo_into(
+                        &self.robot,
+                        self.robot_fp,
+                        &self.q,
+                        &self.qd,
+                        &self.u,
+                        self.fmt,
+                        &mut self.memo,
+                        &mut self.out_all,
+                    );
+                    encode(&self.out_all, &mut out[k * per_task..(k + 1) * per_task]);
                 }
             }
         }
@@ -300,6 +336,10 @@ impl DynamicsEngine for QuantEngine {
     }
     fn n(&self) -> usize {
         self.n
+    }
+    fn memo_counters(&self) -> (u64, u64) {
+        let (h, m) = self.memo.counters();
+        (h + self.pool_hits, m + self.pool_misses)
     }
     fn run(&mut self, inputs: &[Vec<f32>]) -> Result<Vec<f32>, EngineError> {
         QuantEngine::run(self, inputs)
@@ -434,6 +474,58 @@ mod tests {
         let rnea_comp =
             QuantEngine::with_options(robot.clone(), ArtifactFn::Rnea, b, fmt, 1, true);
         assert!(!rnea_comp.compensated());
+    }
+
+    /// The fused DynAll route on the rounded lane: serial rows match the
+    /// memo-less fused kernel bitwise, and a repeat batch with
+    /// sub-quantum input noise still hits the memo (keys are the
+    /// post-quantization words) while reproducing identical output.
+    #[test]
+    fn quant_engine_serves_dyn_all_with_quantized_memo_keys() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let fmt = QFormat::new(12, 12);
+        let b = 4;
+        let per = n * n + 2 * n;
+        let mut rng = Rng::new(713);
+        let (mut q, mut qd, mut u) = (Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..b {
+            let s = State::random(&robot, &mut rng);
+            q.extend(s.q.iter().map(|&x| x as f32));
+            qd.extend(s.qd.iter().map(|&x| x as f32));
+            u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+        }
+        let inputs = vec![q, qd, u];
+        let mut eng = QuantEngine::new(robot.clone(), ArtifactFn::DynAll, b, fmt);
+        assert_eq!(crate::runtime::DynamicsEngine::out_per_task(&eng), per);
+        let out = eng.run(&inputs).expect("run");
+        // Reference: the memo-less fused kernel on the decoded rows.
+        let mut ws = QuantScratch::new(n);
+        let (mut qr, mut qdr, mut ur) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        let mut want = vec![0.0f64; per];
+        for k in 0..b {
+            for i in 0..n {
+                qr[i] = inputs[0][k * n + i] as f64;
+                qdr[i] = inputs[1][k * n + i] as f64;
+                ur[i] = inputs[2][k * n + i] as f64;
+            }
+            ws.dyn_all_into(&robot, &qr, &qdr, &ur, fmt, &mut want);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(out[k * per + i], *w as f32, "row {k} value {i}");
+            }
+        }
+        assert_eq!(crate::runtime::DynamicsEngine::memo_counters(&eng), (0, b as u64));
+        // Quarter-step noise on q: quantizes to the same words, so the
+        // whole batch hits the memo. τ is NOT memo-keyed (it only enters
+        // the post-memo fold), so keep it identical for a bitwise match.
+        let step = fmt.step() as f32;
+        let mut noisy = inputs.clone();
+        for x in noisy[0].iter_mut() {
+            *x = fmt.q(*x as f64) as f32 + 0.25 * step;
+        }
+        let again = eng.run(&noisy).expect("warm run");
+        assert_eq!(again, out, "sub-quantum noise must replay the cached sweep bitwise");
+        assert_eq!(crate::runtime::DynamicsEngine::memo_counters(&eng), (b as u64, b as u64));
     }
 
     #[test]

@@ -1,0 +1,413 @@
+//! Fused-route equivalence: the multi-output `dyn_all` route
+//! (q̈ ‖ M⁻¹ ‖ C from one kinematics pass) must answer **bitwise
+//! identically** to the three separate fd / minv / rnea routes, on
+//! every backend lane (f64 native, rounded quant, true-integer qint),
+//! for every builtin robot, serially and fanned out across the worker
+//! pool. The cross-request kinematics memo riding on the fused route
+//! is purely a latency knob: a hit replays the cached sweep outputs
+//! through the identical tail, so warm responses are bitwise equal to
+//! cold ones — including under concurrent pooled load — adjacent
+//! quantized states never alias, and eviction at capacity degrades to
+//! a plain (still bitwise-correct) miss.
+
+use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
+use draco::dynamics::{DynWorkspace, DEFAULT_MEMO_CAP};
+use draco::model::{builtin_robot, Robot, State};
+use draco::quant::qrbd::quant_dyn_all;
+use draco::quant::QFormat;
+use draco::runtime::artifact::ArtifactFn;
+use draco::runtime::{DynamicsEngine, NativeEngine, QIntEngine, QuantEngine};
+use draco::util::rng::Rng;
+use std::sync::Arc;
+
+/// Flat row-major (b, n) f32 operands: q, q̇, τ.
+fn flat_inputs(robot: &Robot, b: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = robot.dof();
+    let mut rng = Rng::new(seed);
+    let mut q = Vec::with_capacity(b * n);
+    let mut qd = Vec::with_capacity(b * n);
+    let mut u = Vec::with_capacity(b * n);
+    for _ in 0..b {
+        let s = State::random(robot, &mut rng);
+        q.extend(s.q.iter().map(|&x| x as f32));
+        qd.extend(s.qd.iter().map(|&x| x as f32));
+        u.extend(rng.vec_range(n, -6.0, 6.0).iter().map(|&x| x as f32));
+    }
+    vec![q, qd, u]
+}
+
+/// Run the fused engine and the three separate engines on identical
+/// operands and compare every output slice bitwise. The bias reference
+/// is the RNEA route at q̈ = 0 — exactly what C(q, q̇) is.
+fn check_fused_vs_separate(
+    label: &str,
+    n: usize,
+    inputs: &[Vec<f32>],
+    dyn_all: &mut dyn DynamicsEngine,
+    fd: &mut dyn DynamicsEngine,
+    minv: &mut dyn DynamicsEngine,
+    rnea: &mut dyn DynamicsEngine,
+) {
+    let b = inputs[0].len() / n;
+    let fused = dyn_all.run(inputs).expect("dyn_all run");
+    let qdd = fd.run(inputs).expect("fd run");
+    let mi = minv.run(std::slice::from_ref(&inputs[0])).expect("minv run");
+    let bias = rnea
+        .run(&[inputs[0].clone(), inputs[1].clone(), vec![0.0f32; b * n]])
+        .expect("rnea run");
+    let per = n * n + 2 * n;
+    assert_eq!(fused.len(), b * per, "{label}: fused output length");
+    for k in 0..b {
+        let row = &fused[k * per..(k + 1) * per];
+        assert_eq!(&row[..n], &qdd[k * n..(k + 1) * n], "{label}: q̈ diverged (task {k})");
+        assert_eq!(
+            &row[n..n + n * n],
+            &mi[k * n * n..(k + 1) * n * n],
+            "{label}: M⁻¹ diverged (task {k})"
+        );
+        assert_eq!(
+            &row[n + n * n..],
+            &bias[k * n..(k + 1) * n],
+            "{label}: bias diverged (task {k})"
+        );
+    }
+}
+
+/// Engine level, exhaustive: every builtin robot × every backend lane ×
+/// serial and pooled execution — the fused sweep equals the three
+/// separate route kernels bitwise.
+#[test]
+fn fused_engine_matches_separate_engines_every_backend_and_robot() {
+    let robots = [
+        ("iiwa", QFormat::new(12, 12)),
+        ("hyq", QFormat::new(12, 12)),
+        ("atlas", QFormat::new(12, 14)),
+        ("baxter", QFormat::new(13, 13)),
+    ];
+    const FNS: [ArtifactFn; 4] =
+        [ArtifactFn::DynAll, ArtifactFn::Fd, ArtifactFn::Minv, ArtifactFn::Rnea];
+    for (name, fmt) in robots {
+        let robot = builtin_robot(name).unwrap();
+        let n = robot.dof();
+        for parallel in [1usize, 0] {
+            for b in [1usize, 6] {
+                let inputs = flat_inputs(&robot, b, 40_000 + 7 * b as u64);
+
+                let mut nat: Vec<NativeEngine> = FNS
+                    .iter()
+                    .map(|&f| NativeEngine::with_parallelism(robot.clone(), f, 8, parallel))
+                    .collect();
+                let (head, tail) = nat.split_at_mut(1);
+                let (fd_e, rest) = tail.split_at_mut(1);
+                let (mi_e, rn_e) = rest.split_at_mut(1);
+                check_fused_vs_separate(
+                    &format!("{name}/native parallel={parallel} rows={b}"),
+                    n,
+                    &inputs,
+                    &mut head[0],
+                    &mut fd_e[0],
+                    &mut mi_e[0],
+                    &mut rn_e[0],
+                );
+
+                let mut qnt: Vec<QuantEngine> = FNS
+                    .iter()
+                    .map(|&f| QuantEngine::with_options(robot.clone(), f, 8, fmt, parallel, false))
+                    .collect();
+                let (head, tail) = qnt.split_at_mut(1);
+                let (fd_e, rest) = tail.split_at_mut(1);
+                let (mi_e, rn_e) = rest.split_at_mut(1);
+                check_fused_vs_separate(
+                    &format!("{name}/quant@{} parallel={parallel} rows={b}", fmt.label()),
+                    n,
+                    &inputs,
+                    &mut head[0],
+                    &mut fd_e[0],
+                    &mut mi_e[0],
+                    &mut rn_e[0],
+                );
+
+                let mut int: Vec<QIntEngine> = FNS
+                    .iter()
+                    .map(|&f| {
+                        QIntEngine::with_parallelism(robot.clone(), f, 8, fmt, parallel)
+                            .expect("accepted format")
+                    })
+                    .collect();
+                let (head, tail) = int.split_at_mut(1);
+                let (fd_e, rest) = tail.split_at_mut(1);
+                let (mi_e, rn_e) = rest.split_at_mut(1);
+                check_fused_vs_separate(
+                    &format!("{name}/qint@{} parallel={parallel} rows={b}", fmt.label()),
+                    n,
+                    &inputs,
+                    &mut head[0],
+                    &mut fd_e[0],
+                    &mut mi_e[0],
+                    &mut rn_e[0],
+                );
+            }
+        }
+    }
+}
+
+/// Coordinator level: a pooled mixed-lane registry answers `dyn_all`
+/// requests bitwise equal to its own fd / minv / rnea routes — the
+/// serving-path statement of the fused equivalence, dispatch and
+/// batching included.
+#[test]
+fn fused_route_matches_separate_routes_through_the_coordinator() {
+    let iiwa = builtin_robot("iiwa").unwrap();
+    let hyq = builtin_robot("hyq").unwrap();
+    let atlas = builtin_robot("atlas").unwrap();
+    let mut reg = RobotRegistry::new();
+    reg.register_parallel(iiwa.clone(), BackendKind::Native, 8, 0)
+        .register_parallel(hyq.clone(), BackendKind::NativeQuant(QFormat::new(12, 12)), 8, 0)
+        .register_parallel(atlas.clone(), BackendKind::NativeInt(QFormat::new(12, 14)), 8, 0);
+    reg.validate().expect("int entry accepted");
+    let coord = Coordinator::start_registry(&reg, 150);
+
+    let answer = |robot: &str, f: ArtifactFn, ops: Vec<Vec<f32>>| -> Vec<f32> {
+        coord.submit_to(robot, f, ops).recv().expect("answer").expect("ok")
+    };
+    for robot in [&iiwa, &hyq, &atlas] {
+        let n = robot.dof();
+        let per = n * n + 2 * n;
+        for k in 0..3u64 {
+            let ops = flat_inputs(robot, 1, 50_000 + 10 * k);
+            let fused = answer(&robot.name, ArtifactFn::DynAll, ops.clone());
+            let qdd = answer(&robot.name, ArtifactFn::Fd, ops.clone());
+            let mi = answer(&robot.name, ArtifactFn::Minv, vec![ops[0].clone()]);
+            let bias = answer(
+                &robot.name,
+                ArtifactFn::Rnea,
+                vec![ops[0].clone(), ops[1].clone(), vec![0.0f32; n]],
+            );
+            assert_eq!(fused.len(), per, "{}: fused response length", robot.name);
+            assert_eq!(&fused[..n], &qdd[..], "{}: q̈ route diverged", robot.name);
+            assert_eq!(&fused[n..n + n * n], &mi[..], "{}: M⁻¹ route diverged", robot.name);
+            assert_eq!(&fused[n + n * n..], &bias[..], "{}: bias route diverged", robot.name);
+        }
+    }
+    coord.shutdown();
+}
+
+/// Trajectory rollouts are function-independent: an engine built for
+/// the fused route rolls out bitwise identically to the FD engine on
+/// every lane — registering a robot's routes for `dyn_all` does not
+/// perturb its trajectory serving.
+#[test]
+fn rollout_on_a_dyn_all_engine_matches_the_fd_engine() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let fmt = QFormat::new(12, 12);
+    let mut rng = Rng::new(61_000);
+    let s0 = State::random(&robot, &mut rng);
+    let h = 10;
+    let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+    let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+    let tau: Vec<f32> = rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect();
+
+    fn check_rollout(
+        lane: &str,
+        dyn_all: &mut dyn DynamicsEngine,
+        fd: &mut dyn DynamicsEngine,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+    ) {
+        let n = dyn_all.n();
+        let h = tau.len() / n;
+        let got = dyn_all.rollout(q0, qd0, tau, 1e-3).expect("dyn_all rollout");
+        let want = fd.rollout(q0, qd0, tau, 1e-3).expect("fd rollout");
+        assert_eq!(got.len(), 2 * h * n, "{lane}: rollout length");
+        assert_eq!(got, want, "{lane}: dyn_all engine rollout diverged from fd engine");
+    }
+    check_rollout(
+        "native",
+        &mut NativeEngine::new(robot.clone(), ArtifactFn::DynAll, 8),
+        &mut NativeEngine::new(robot.clone(), ArtifactFn::Fd, 8),
+        &q0,
+        &qd0,
+        &tau,
+    );
+    check_rollout(
+        "quant",
+        &mut QuantEngine::new(robot.clone(), ArtifactFn::DynAll, 8, fmt),
+        &mut QuantEngine::new(robot.clone(), ArtifactFn::Fd, 8, fmt),
+        &q0,
+        &qd0,
+        &tau,
+    );
+    check_rollout(
+        "qint",
+        &mut QIntEngine::new(robot.clone(), ArtifactFn::DynAll, 8, fmt).expect("accepted"),
+        &mut QIntEngine::new(robot.clone(), ArtifactFn::Fd, 8, fmt).expect("accepted"),
+        &q0,
+        &qd0,
+        &tau,
+    );
+}
+
+/// Memo hits under concurrent pooled load stay bitwise identical to
+/// the memo-less cold kernel: four client threads hammer one pooled
+/// `dyn_all` route with the same four states, and every one of the 192
+/// responses equals the fresh-workspace reference — and the memo
+/// actually engaged.
+#[test]
+fn memo_hits_under_concurrent_pooled_load_stay_bitwise_identical() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let mut reg = RobotRegistry::new();
+    reg.register_parallel(robot.clone(), BackendKind::Native, 8, 0);
+    let coord = Arc::new(Coordinator::start_registry(&reg, 150));
+
+    let probes: Vec<Vec<Vec<f32>>> =
+        (0..4u64).map(|k| flat_inputs(&robot, 1, 60_000 + k)).collect();
+    // Memo-less cold reference: the fused workspace kernel on the
+    // f32-rounded operands the engine sees.
+    let mut ws = DynWorkspace::new(&robot);
+    let refs: Vec<Vec<f32>> = probes
+        .iter()
+        .map(|ops| {
+            let q: Vec<f64> = ops[0].iter().map(|&x| x as f64).collect();
+            let qd: Vec<f64> = ops[1].iter().map(|&x| x as f64).collect();
+            let u: Vec<f64> = ops[2].iter().map(|&x| x as f64).collect();
+            let mut out = vec![0.0f64; n * n + 2 * n];
+            ws.dyn_all_into(&robot, &q, &qd, &u, None, &mut out);
+            out.iter().map(|&x| x as f32).collect()
+        })
+        .collect();
+
+    let rounds = 12usize;
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let coord = Arc::clone(&coord);
+            let probes = probes.clone();
+            let name = robot.name.clone();
+            std::thread::spawn(move || {
+                let mut rounds_out = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    let rxs: Vec<_> = probes
+                        .iter()
+                        .map(|ops| coord.submit_to(&name, ArtifactFn::DynAll, ops.clone()))
+                        .collect();
+                    rounds_out.push(
+                        rxs.into_iter()
+                            .map(|rx| rx.recv().expect("answer").expect("ok"))
+                            .collect::<Vec<Vec<f32>>>(),
+                    );
+                }
+                rounds_out
+            })
+        })
+        .collect();
+    for h in handles {
+        for round in h.join().expect("client thread") {
+            for (got, want) in round.iter().zip(&refs) {
+                assert_eq!(got, want, "warm pooled response diverged from the cold kernel");
+            }
+        }
+    }
+    let st = coord.stats();
+    assert!(st.memo_hits > 0, "repeated states under load must hit the memo");
+    assert_eq!(
+        st.memo_hits + st.memo_misses,
+        (4 * rounds * probes.len()) as u64,
+        "every dyn_all task is memo-accounted exactly once"
+    );
+    if let Ok(coord) = Arc::try_unwrap(coord) {
+        coord.shutdown();
+    }
+}
+
+/// Quantized memo keys are the post-quantization words: a state
+/// exactly one quantum away from a cached one must MISS (no aliasing)
+/// and still answer bitwise equal to the memo-less quantized kernel.
+#[test]
+fn adjacent_quantized_states_never_alias_in_the_memo() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let n = robot.dof();
+    let fmt = QFormat::new(12, 12);
+    let mut eng = QuantEngine::with_options(robot.clone(), ArtifactFn::DynAll, 4, fmt, 1, false);
+
+    let mut rng = Rng::new(77_001);
+    let s = State::random(&robot, &mut rng);
+    let tau = rng.vec_range(n, -4.0, 4.0);
+    // Base state on the quantization grid (grid points at Q12.12 are
+    // exactly f32-representable), neighbour exactly one quantum away.
+    let q_base: Vec<f32> = s.q.iter().map(|&x| fmt.q(x) as f32).collect();
+    let mut q_adj = q_base.clone();
+    q_adj[0] += fmt.step() as f32;
+    let qd: Vec<f32> = s.qd.iter().map(|&x| fmt.q(x) as f32).collect();
+    let tau32: Vec<f32> = tau.iter().map(|&x| x as f32).collect();
+
+    let reference = |q32: &[f32]| -> Vec<f32> {
+        let q: Vec<f64> = q32.iter().map(|&x| x as f64).collect();
+        let qdr: Vec<f64> = qd.iter().map(|&x| x as f64).collect();
+        let ur: Vec<f64> = tau32.iter().map(|&x| x as f64).collect();
+        quant_dyn_all(&robot, &q, &qdr, &ur, fmt).iter().map(|&x| x as f32).collect()
+    };
+
+    let base_out =
+        eng.run(&[q_base.clone(), qd.clone(), tau32.clone()]).expect("base run");
+    assert_eq!(base_out, reference(&q_base), "base response vs memo-less kernel");
+    assert_eq!(eng.memo_counters(), (0, 1), "cold base state must miss");
+
+    let adj_out = eng.run(&[q_adj.clone(), qd.clone(), tau32.clone()]).expect("adjacent run");
+    assert_eq!(
+        eng.memo_counters(),
+        (0, 2),
+        "a state one quantum away must not alias the cached entry"
+    );
+    assert_eq!(adj_out, reference(&q_adj), "adjacent response vs memo-less kernel");
+    assert_ne!(base_out, adj_out, "distinct quantized states must answer differently");
+
+    // The true warm path still works: repeating the base state hits.
+    let warm = eng.run(&[q_base.clone(), qd.clone(), tau32.clone()]).expect("warm run");
+    assert_eq!(eng.memo_counters(), (1, 2), "bitwise repeat must hit");
+    assert_eq!(warm, base_out, "memo hit must be bitwise identical to its cold miss");
+}
+
+/// Eviction at capacity: after `DEFAULT_MEMO_CAP` fresh states the
+/// oldest entry is gone — its re-run is a miss, not a stale hit — and
+/// the evicted-then-recomputed response is bitwise identical to the
+/// original cold one. Counters stay monotone throughout.
+#[test]
+fn memo_evicts_at_capacity_and_recomputes_bitwise_identically() {
+    let robot = builtin_robot("iiwa").unwrap();
+    let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::DynAll, 1);
+
+    let probes: Vec<Vec<Vec<f32>>> = (0..=DEFAULT_MEMO_CAP as u64)
+        .map(|k| flat_inputs(&robot, 1, 80_000 + k))
+        .collect();
+    let first_cold = eng.run(&probes[0]).expect("cold run");
+    assert_eq!(eng.memo_counters(), (0, 1));
+    let warm = eng.run(&probes[0]).expect("warm run");
+    assert_eq!(eng.memo_counters(), (1, 1), "repeat while cached must hit");
+    assert_eq!(warm, first_cold);
+
+    // Fill the memo with DEFAULT_MEMO_CAP fresh states: probe 0 becomes
+    // the LRU entry and falls out when the last one is inserted.
+    let (mut ph, mut pm) = eng.memo_counters();
+    for p in &probes[1..] {
+        let out = eng.run(p).expect("fill run");
+        assert!(out.iter().all(|x| x.is_finite()));
+        let (h, m) = eng.memo_counters();
+        assert!(h >= ph && m >= pm, "memo counters must be monotone");
+        (ph, pm) = (h, m);
+    }
+    assert_eq!(
+        eng.memo_counters(),
+        (1, 1 + DEFAULT_MEMO_CAP as u64),
+        "every fresh state is one miss"
+    );
+
+    let evicted = eng.run(&probes[0]).expect("post-eviction run");
+    assert_eq!(
+        eng.memo_counters(),
+        (1, 2 + DEFAULT_MEMO_CAP as u64),
+        "the evicted state must re-run as a miss, never a stale hit"
+    );
+    assert_eq!(evicted, first_cold, "recomputed response must equal the original cold one");
+}

@@ -85,9 +85,12 @@ if [ "$1" = "--check" ]; then
             "iiwa|minv_qint_deferred64" \
             "iiwa|fd_qint_srv64" \
             "iiwa|fd_pool64" \
+            "iiwa|dyn_all_fused64" \
+            "iiwa|dyn_all_qint64" \
             "iiwa|serve_fd_par64" \
             "iiwa|serve_fd_quant_par64" \
             "iiwa|serve_fd_qint_par64" \
+            "iiwa|serve_dyn_all_par64" \
             "mixed|serve_fd_mixed64"; do
             if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
                 echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
@@ -110,14 +113,18 @@ if [ "$1" = "--check" ]; then
             exit 1
         fi
         # The uncontended/overload pair for every QoS class is the
-        # tracked envelope; ramp rows may come and go.
+        # tracked envelope, and every run measures the real-engine
+        # scenarios (native f64 + true-integer FD routes); ramp rows
+        # may come and go.
         for need in \
             "uncontended|control" \
             "uncontended|interactive" \
             "uncontended|bulk" \
             "overload|control" \
             "overload|interactive" \
-            "overload|bulk"; do
+            "overload|bulk" \
+            "real-native-fd|bulk" \
+            "real-qint-fd|bulk"; do
             if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
                 echo "SCHEMA FAIL: missing serve row ${need} in $f" >&2
                 exit 1
