@@ -57,6 +57,19 @@ if [ -z "$hits" ] || [ "$hits" -eq 0 ]; then
     exit 1
 fi
 
+echo "== wire smoke: serve --listen + replay =="
+# Bring the JSONL TCP front-end up on an ephemeral port, let the
+# self-drive client push mixed routes (steps, three-segment dyn_all,
+# a mid-horizon-streamed trajectory, a deadline-0 expiry, and malformed
+# frames) through a real socket with --tee, then re-execute the capture
+# offline: replay exits nonzero unless every comparable response is
+# bitwise identical and lazy/full parsing agree on every captured line.
+TEE="$(mktemp)"
+trap 'rm -f "$TEE"' EXIT
+cargo run --release --quiet -- serve --requests 32 --batch 8 --window-us 200 \
+    --robots iiwa,atlas:qint@12.14 --traj 16 --listen 127.0.0.1:0 --tee "$TEE"
+cargo run --release --quiet -- replay "$TEE"
+
 echo "== overload smoke: loadgen --smoke =="
 # Short open-loop ramp against a capacity-pinned route; asserts the
 # overload invariants (no expired job executed, monotone shedding,

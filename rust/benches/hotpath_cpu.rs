@@ -36,6 +36,13 @@
 //! fused sweep must win), `dyn_all_qint64` (the i64 fused sweep), and
 //! `serve_dyn_all_par64` (64 fused requests through a pooled native
 //! route, per-worker kinematics memos warm).
+//!
+//! Network-path rows: `json_lazy_vs_full` (the lazy hot-field scanner
+//! over a 64-line request corpus) vs `json_full_tree64` (the full
+//! `Json` tree parse of the same lines), and `serve_net_jsonl` (64 FD
+//! requests pipelined over a real TCP JSONL connection — framing, lazy
+//! ingest, and response streaming included; compare with
+//! `serve_fd_par64` for the protocol tax).
 
 use draco::coordinator::{BackendKind, Coordinator, RobotRegistry};
 use draco::dynamics::{
@@ -43,6 +50,8 @@ use draco::dynamics::{
     DynWorkspace, WorkerPool,
 };
 use draco::model::{builtin_robot, Robot, State};
+use draco::net::frame::{req_step_line, req_traj_line};
+use draco::net::{Frame, LazyReq, NetClient, NetServer};
 use draco::quant::scaling::validate_int_backend;
 use draco::quant::{QFormat, QuantIntScratch};
 use draco::runtime::artifact::ArtifactFn;
@@ -54,6 +63,7 @@ use draco::util::json::{self, Json};
 use draco::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::hint::black_box;
+use std::sync::Arc;
 
 const BATCH: usize = 64;
 
@@ -575,6 +585,109 @@ fn main() {
         });
         add("iiwa", "serve_dyn_all_par64", &st, 64);
         dpcoord.shutdown();
+
+        // Wire-ingest cost: the hand-rolled lazy hot-field scanner
+        // (json_lazy_vs_full — id/robot/route/class/deadline extracted,
+        // payloads left as byte spans) against the full Json tree parse
+        // (json_full_tree64) over the same 64-line request corpus the
+        // net front-end sees: 48 step requests + 16 trajectory requests
+        // with their large tau arrays. The lazy row must win — it is the
+        // per-line admission cost of every socket request.
+        {
+            let n = iiwa.dof();
+            let mut jrng = Rng::new(14);
+            let mut vecf = |len: usize| -> Vec<f32> {
+                jrng.vec_range(len, -1.0, 1.0).iter().map(|&x| x as f32).collect()
+            };
+            let mut corpus: Vec<String> = Vec::with_capacity(64);
+            for id in 0..64u64 {
+                if id % 4 == 3 {
+                    corpus.push(req_traj_line(
+                        id,
+                        "iiwa",
+                        Some("bulk"),
+                        Some(250),
+                        &vecf(n),
+                        &vecf(n),
+                        &vecf(8 * n),
+                        1e-3,
+                    ));
+                } else {
+                    corpus.push(req_step_line(
+                        id,
+                        "iiwa",
+                        "fd",
+                        Some("interactive"),
+                        None,
+                        &[vecf(n), vecf(n), vecf(n)],
+                    ));
+                }
+            }
+            let st_lazy = time_auto(target_ms, || {
+                for line in &corpus {
+                    let r = LazyReq::scan(line).expect("lazy scan");
+                    black_box((r.id, r.robot, r.route, r.class, r.deadline_us));
+                }
+            });
+            add("iiwa", "json_lazy_vs_full", &st_lazy, 64);
+            let st_full = time_auto(target_ms, || {
+                for line in &corpus {
+                    black_box(Frame::parse(line).expect("full parse"));
+                }
+            });
+            add("iiwa", "json_full_tree64", &st_full, 64);
+            println!(
+                "lazy hot-field scan vs full Json parse: {:.2}x ({:.3} vs {:.3} us/line)",
+                st_full.median_us() / st_lazy.median_us(),
+                st_lazy.median_us() / 64.0,
+                st_full.median_us() / 64.0
+            );
+        }
+
+        // End-to-end socket serving: 64 FD requests pipelined over one
+        // real TCP JSONL connection per iteration — text framing, lazy
+        // ingest, sink submission, and response streaming all included.
+        // Compare with serve_fd_par64 (the same dispatch shape without
+        // the wire) for the protocol tax.
+        {
+            let mut nreg = RobotRegistry::new();
+            nreg.register(iiwa.clone(), BackendKind::Native, 64);
+            let ncoord = Arc::new(Coordinator::start_registry(&nreg, 100));
+            let dims: BTreeMap<String, usize> =
+                [("iiwa".to_string(), iiwa.dof())].into_iter().collect();
+            let server =
+                NetServer::start(Arc::clone(&ncoord), dims, "127.0.0.1:0", None, "iiwa", 64, 100)
+                    .expect("bind net server");
+            let mut client = NetClient::connect(server.addr()).expect("connect net server");
+            let n = iiwa.dof();
+            let mut nrng = Rng::new(13);
+            let lines: Vec<String> = (0..64u64)
+                .map(|id| {
+                    let ops: Vec<Vec<f32>> = (0..3)
+                        .map(|_| {
+                            nrng.vec_range(n, -1.0, 1.0).iter().map(|&x| x as f32).collect()
+                        })
+                        .collect();
+                    req_step_line(id, "iiwa", "fd", None, None, &ops)
+                })
+                .collect();
+            let st = time_auto(target_ms, || {
+                for line in &lines {
+                    client.send_line(line).expect("send req line");
+                }
+                let mut done = 0;
+                while done < 64 {
+                    match client.read_frame().expect("response frame") {
+                        Frame::Done { .. } => done += 1,
+                        Frame::Err { msg, .. } => panic!("err frame on clean traffic: {msg}"),
+                        _ => {}
+                    }
+                }
+            });
+            add("iiwa", "serve_net_jsonl", &st, 64);
+            drop(client);
+            server.stop();
+        }
     }
 
     t.print("CPU hot paths (measured, single thread)");

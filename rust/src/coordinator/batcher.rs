@@ -71,8 +71,11 @@ pub struct Job {
     /// When the request entered the coordinator (for latency stats and
     /// deadline accounting).
     pub enqueued: Instant,
-    /// Channel the flat f32 result (or error) is sent back on.
-    pub resp: Sender<JobResult>,
+    /// Where this job's output goes: an in-process channel
+    /// ([`ChannelSink`], the `submit_*` API) or a network connection
+    /// (the JSONL server's socket writer). Trajectory workers stream
+    /// rows into it mid-horizon.
+    pub sink: Box<dyn ResponseSink>,
 }
 
 impl Job {
@@ -82,12 +85,105 @@ impl Job {
         let waited = self.enqueued.elapsed().as_micros() as u64;
         (waited >= deadline).then_some(waited)
     }
+
+    /// Terminate this job with an error (consumes the job; `done` is
+    /// the sink's exactly-once completion call).
+    fn fail(mut self, err: ServeError) {
+        self.sink.done(Err(err));
+    }
 }
 
 /// Per-task result: the flat f32 output slice for this task, or a
 /// structured [`ServeError`] naming why it was refused / dropped /
 /// failed.
 pub type JobResult = Result<Vec<f32>, ServeError>;
+
+/// Per-job egress abstraction — the refactor seam between the batcher
+/// and whoever is waiting for the answer. The in-process path
+/// ([`ChannelSink`]) buffers chunks and sends one [`JobResult`]; the
+/// network path writes `chunk` frames straight to the client socket as
+/// the integrator produces rows.
+///
+/// Contract: `accepted` fires at most once (after admission, before any
+/// chunk); `begin_stream` fires at most once, only on streamed
+/// (trajectory) jobs, before the first chunk; `chunk` fires zero or
+/// more times; `done` fires exactly once and nothing follows it.
+pub trait ResponseSink: Send {
+    /// The job passed admission and was enqueued (the wire `ack`).
+    fn accepted(&mut self) {}
+    /// A streamed response is starting: expect up to `rows` chunks of
+    /// length `2·half` each (`q_t ‖ q̇_t`; `half` = robot DOF). Sizing
+    /// hint only — a failing rollout may end the stream early.
+    fn begin_stream(&mut self, _rows: usize, _half: usize) {}
+    /// One flat f32 payload fragment (a whole step answer, or one
+    /// trajectory row).
+    fn chunk(&mut self, data: &[f32]);
+    /// Terminal outcome. No calls follow.
+    fn done(&mut self, result: Result<(), ServeError>);
+    /// Whether the consumer is still listening. Trajectory workers poll
+    /// this between integration steps and cancel the remaining horizon
+    /// when it turns false (a disconnected network client stops costing
+    /// integrator time mid-request).
+    fn alive(&self) -> bool {
+        true
+    }
+}
+
+/// [`ResponseSink`] backing the in-process `submit_*` API: accumulates
+/// chunks and answers one [`JobResult`] on the paired [`Receiver`].
+/// Streamed trajectory rows (`q_t ‖ q̇_t` per chunk) are de-interleaved
+/// back into the legacy `[H q-rows | H q̇-rows]` flat layout, so callers
+/// of [`Coordinator::submit_traj`] see exactly the pre-streaming wire
+/// format.
+pub struct ChannelSink {
+    tx: Sender<JobResult>,
+    buf: Vec<f32>,
+    /// `Some((rows_hint, half))` once `begin_stream` fired.
+    stream: Option<(usize, usize)>,
+}
+
+impl ChannelSink {
+    /// New sink plus the receiver its single [`JobResult`] arrives on.
+    pub fn new() -> (ChannelSink, Receiver<JobResult>) {
+        let (tx, rx) = channel();
+        (ChannelSink { tx, buf: Vec::new(), stream: None }, rx)
+    }
+}
+
+impl ResponseSink for ChannelSink {
+    fn begin_stream(&mut self, rows: usize, half: usize) {
+        self.stream = Some((rows, half));
+        self.buf.reserve(2 * rows * half);
+    }
+    fn chunk(&mut self, data: &[f32]) {
+        self.buf.extend_from_slice(data);
+    }
+    fn done(&mut self, result: Result<(), ServeError>) {
+        let msg = match result {
+            Ok(()) => {
+                let buf = std::mem::take(&mut self.buf);
+                match self.stream {
+                    // De-interleave the streamed rows; the *actual*
+                    // chunk count (not the hint) decides H.
+                    Some((_, half)) if half > 0 && buf.len() % (2 * half) == 0 => {
+                        let h = buf.len() / (2 * half);
+                        let mut flat = vec![0.0f32; buf.len()];
+                        for t in 0..h {
+                            let row = &buf[t * 2 * half..(t + 1) * 2 * half];
+                            flat[t * half..(t + 1) * half].copy_from_slice(&row[..half]);
+                            flat[(h + t) * half..(h + t + 1) * half]
+                                .copy_from_slice(&row[half..]);
+                        }
+                        Ok(flat)
+                    }
+                    _ => Ok(buf),
+                }
+            }
+            Err(e) => Err(e),
+        };
+        let _ = self.tx.send(msg);
+    }
+}
 
 enum Msg {
     Work(Job),
@@ -530,25 +626,72 @@ impl Coordinator {
         payload: JobPayload,
         opts: SubmitOptions,
     ) -> Receiver<JobResult> {
-        let (tx, rx) = channel();
+        let (sink, rx) = ChannelSink::new();
+        self.dispatch_sink(robot, route, payload, opts, Box::new(sink));
+        rx
+    }
+
+    /// Submit one step task whose output goes to a caller-provided
+    /// [`ResponseSink`] — the entry point the network layer uses (its
+    /// sink writes `chunk` frames straight to the client socket).
+    /// Admission, QoS classes, deadlines, and breakers apply exactly as
+    /// on the channel API.
+    pub fn submit_to_sink(
+        &self,
+        robot: &str,
+        function: ArtifactFn,
+        operands: Vec<Vec<f32>>,
+        opts: SubmitOptions,
+        sink: Box<dyn ResponseSink>,
+    ) {
+        self.dispatch_sink(robot, Route::Step(function), JobPayload::Step(operands), opts, sink);
+    }
+
+    /// Submit one trajectory rollout whose rows stream into a
+    /// caller-provided [`ResponseSink`] as the integrator produces them.
+    pub fn submit_traj_sink(
+        &self,
+        robot: &str,
+        req: TrajRequest,
+        opts: SubmitOptions,
+        sink: Box<dyn ResponseSink>,
+    ) {
+        self.dispatch_sink(robot, Route::Traj, JobPayload::Traj(req), opts, sink);
+    }
+
+    fn dispatch_sink(
+        &self,
+        robot: &str,
+        route: Route,
+        payload: JobPayload,
+        opts: SubmitOptions,
+        mut sink: Box<dyn ResponseSink>,
+    ) {
         match self.routes.get(&(robot.to_string(), route)) {
             Some(handle) => {
                 let class = opts.class.unwrap_or(handle.gate.default_class);
                 match handle.gate.admit(class) {
                     Ok(()) => {
+                        // Ack before the worker can see the job, so the
+                        // wire ordering `ack` < first `chunk` holds by
+                        // construction.
+                        sink.accepted();
                         let job = Job {
                             payload,
                             class,
                             deadline_us: opts.deadline_us,
                             enqueued: Instant::now(),
-                            resp: tx,
+                            sink,
                         };
-                        // If the worker is gone the send fails and the
-                        // job (with its response sender) is dropped —
-                        // recv() errors out on the caller side. Give the
-                        // admission unit back either way.
-                        if handle.tx.send(Msg::Work(job)).is_err() {
+                        // If the worker is gone the send fails; recover
+                        // the job from the send error so its sink still
+                        // gets a terminal answer, and give the admission
+                        // unit back either way.
+                        if let Err(send_err) = handle.tx.send(Msg::Work(job)) {
                             handle.gate.release(class);
+                            if let Msg::Work(job) = send_err.0 {
+                                job.fail(ServeError::ShuttingDown);
+                            }
                         }
                     }
                     Err(err) => {
@@ -562,7 +705,7 @@ impl Coordinator {
                                 _ => {}
                             }
                         }
-                        let _ = tx.send(Err(err));
+                        sink.done(Err(err));
                     }
                 }
             }
@@ -571,10 +714,9 @@ impl Coordinator {
                     Route::Step(f) => format!("no route for robot '{robot}' / {}", f.name()),
                     Route::Traj => format!("no trajectory route for robot '{robot}'"),
                 };
-                let _ = tx.send(Err(ServeError::BadRequest(what)));
+                sink.done(Err(ServeError::BadRequest(what)));
             }
         }
-        rx
     }
 
     /// Names of the robots this coordinator routes for (sorted, deduped).
@@ -647,7 +789,7 @@ impl ClassLanes {
                     lock_stats(stats).expired += 1;
                     gate.release(job.class);
                     let deadline_us = job.deadline_us.unwrap_or(0);
-                    let _ = job.resp.send(Err(ServeError::Expired { deadline_us, waited_us }));
+                    job.fail(ServeError::Expired { deadline_us, waited_us });
                 } else {
                     picked.push(job);
                 }
@@ -664,7 +806,7 @@ impl ClassLanes {
         for lane in self.0.iter_mut() {
             for job in lane.drain(..) {
                 gate.release(job.class);
-                let _ = job.resp.send(Err(ServeError::ShuttingDown));
+                job.fail(ServeError::ShuttingDown);
             }
         }
     }
@@ -875,7 +1017,7 @@ fn drain_into(
 /// route's circuit breaker instead of killing the worker thread.
 fn flush_step(
     exec: &mut dyn BatchExecutor,
-    mut picked: Vec<Job>,
+    picked: Vec<Job>,
     stats: &Arc<Mutex<StatsInner>>,
     gate: &RouteGate,
 ) {
@@ -888,19 +1030,22 @@ fn flush_step(
 
     // Reject malformed jobs up front: a bad task must fail alone instead
     // of poisoning (or panicking) the whole assembled batch.
-    picked.retain(|job| {
+    let mut valid = Vec::with_capacity(picked.len());
+    for job in picked {
         let ok = match &job.payload {
             JobPayload::Step(ops) => ops.len() == arity && ops.iter().all(|op| op.len() == n),
             JobPayload::Traj(_) => false,
         };
-        if !ok {
+        if ok {
+            valid.push(job);
+        } else {
             gate.release(job.class);
-            let _ = job.resp.send(Err(ServeError::BadRequest(format!(
+            job.fail(ServeError::BadRequest(format!(
                 "bad operands: expected {arity} arrays of length {n}"
-            ))));
+            )));
         }
-        ok
-    });
+    }
+    let mut picked = valid;
     if picked.is_empty() {
         return;
     }
@@ -950,10 +1095,10 @@ fn flush_step(
                 st.record(job.class, job.enqueued.elapsed().as_micros() as f64);
             }
             drop(st);
-            for (i, job) in picked.drain(..).enumerate() {
+            for (i, mut job) in picked.drain(..).enumerate() {
                 gate.release(job.class);
-                let chunk = flat[i * out_per_task..(i + 1) * out_per_task].to_vec();
-                let _ = job.resp.send(Ok(chunk));
+                job.sink.chunk(&flat[i * out_per_task..(i + 1) * out_per_task]);
+                job.sink.done(Ok(()));
             }
         }
         Err(msg) => {
@@ -962,7 +1107,7 @@ fn flush_step(
             }
             for job in picked.drain(..) {
                 gate.release(job.class);
-                let _ = job.resp.send(Err(ServeError::Engine(msg.clone())));
+                job.fail(ServeError::Engine(msg.clone()));
             }
         }
     }
@@ -975,6 +1120,14 @@ fn flush_step(
 /// Execute one formed trajectory batch (rollouts back-to-back) and fan
 /// results out. Each rollout is individually `catch_unwind`-wrapped so a
 /// panicking integration fails only its own request.
+///
+/// Rollouts **stream**: every integrated row goes into the job's sink
+/// via [`DynamicsEngine::rollout_stream`] before the next step runs, so
+/// a network client sees its first `chunk` frame while the horizon is
+/// still integrating. Between steps the sink's `alive()` is polled — a
+/// consumer that disconnected mid-horizon cancels the remaining steps
+/// (counted as a completed job: the work done so far was delivered as
+/// far as the wire allowed).
 fn flush_traj(
     engine: &mut dyn DynamicsEngine,
     mut picked: Vec<Job>,
@@ -987,11 +1140,20 @@ fn flush_traj(
     }
     let fill = picked.len().min(cap) as f64 / cap as f64;
     let t0 = Instant::now();
-    for job in picked.drain(..) {
+    for mut job in picked.drain(..) {
         let result = match &job.payload {
             JobPayload::Traj(req) => {
+                let n = engine.n();
+                // Sizing hint for the sink; real traffic always divides
+                // evenly (validate_rollout enforces it before step 1).
+                let rows_hint = if n > 0 && req.tau.len() % n == 0 { req.tau.len() / n } else { 0 };
+                job.sink.begin_stream(rows_hint, n);
+                let sink = &mut job.sink;
                 catch_unwind(AssertUnwindSafe(|| {
-                    engine.rollout(&req.q0, &req.qd0, &req.tau, req.dt)
+                    engine.rollout_stream(&req.q0, &req.qd0, &req.tau, req.dt, &mut |row| {
+                        sink.chunk(row);
+                        sink.alive()
+                    })
                 }))
                 .unwrap_or_else(|p| {
                     Err(crate::runtime::EngineError(format!(
@@ -999,6 +1161,7 @@ fn flush_traj(
                         panic_message(p.as_ref())
                     )))
                 })
+                .map(|_emitted| ())
                 .map_err(|e| ServeError::Engine(e.0))
             }
             JobPayload::Step(_) => {
@@ -1006,7 +1169,7 @@ fn flush_traj(
             }
         };
         match &result {
-            Ok(_) => {
+            Ok(()) => {
                 gate.on_success();
                 lock_stats(stats).record(job.class, job.enqueued.elapsed().as_micros() as f64);
             }
@@ -1018,7 +1181,7 @@ fn flush_traj(
             Err(_) => {}
         }
         gate.release(job.class);
-        let _ = job.resp.send(result);
+        job.sink.done(result);
     }
     lock_stats(stats).record_batch(fill, t0.elapsed().as_micros() as f64);
 }
@@ -1031,7 +1194,7 @@ fn fail_all(rx: &Receiver<Msg>, gate: &RouteGate, err: &ServeError) {
         match msg {
             Msg::Work(j) => {
                 gate.release(j.class);
-                let _ = j.resp.send(Err(err.clone()));
+                j.fail(err.clone());
             }
             Msg::Stop => break,
         }
@@ -1162,6 +1325,70 @@ mod tests {
         let st = coord.stats();
         assert!(st.memo_hits >= 1, "warm repeat must hit the kinematics memo");
         assert_eq!(st.memo_hits + st.memo_misses, 2, "two tasks, each memo-accounted");
+        coord.shutdown();
+    }
+
+    /// Trajectory responses stream through the per-job sink: every
+    /// integrated row arrives as its own chunk (H chunks of `2·N`,
+    /// matching the buffered layout bitwise), and a sink that reports
+    /// dead after 3 rows cancels the remaining horizon — streaming is
+    /// real, not a post-hoc split of a finished buffer.
+    #[test]
+    fn traj_sink_streams_rows_and_cancels_when_dead() {
+        struct Collect {
+            rows: Arc<Mutex<Vec<Vec<f32>>>>,
+            done_tx: Sender<Result<(), ServeError>>,
+            live_rows: usize,
+        }
+        impl ResponseSink for Collect {
+            fn chunk(&mut self, data: &[f32]) {
+                self.rows.lock().unwrap().push(data.to_vec());
+            }
+            fn done(&mut self, result: Result<(), ServeError>) {
+                let _ = self.done_tx.send(result);
+            }
+            fn alive(&self) -> bool {
+                self.rows.lock().unwrap().len() < self.live_rows
+            }
+        }
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Fd, 8)], 100);
+        let h = 6;
+        let req = TrajRequest {
+            q0: vec![0.1; n],
+            qd0: vec![0.0; n],
+            tau: vec![0.0; h * n],
+            dt: 1e-3,
+        };
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (done_tx, done_rx) = channel();
+        coord.submit_traj_sink(
+            "iiwa",
+            req.clone(),
+            SubmitOptions::default(),
+            Box::new(Collect { rows: Arc::clone(&rows), done_tx, live_rows: usize::MAX }),
+        );
+        done_rx.recv().expect("terminal").expect("rollout ok");
+        let got = rows.lock().unwrap().clone();
+        assert_eq!(got.len(), h, "one chunk per integrated row");
+        assert!(got.iter().all(|r| r.len() == 2 * n));
+        let flat = coord.submit_traj("iiwa", req.clone()).recv().unwrap().unwrap();
+        for (t, row) in got.iter().enumerate() {
+            assert_eq!(&row[..n], &flat[t * n..(t + 1) * n], "q row {t}");
+            assert_eq!(&row[n..], &flat[(h + t) * n..(h + t + 1) * n], "qd row {t}");
+        }
+        // A sink that dies after 3 rows cancels the rest of the horizon.
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (done_tx, done_rx) = channel();
+        coord.submit_traj_sink(
+            "iiwa",
+            req,
+            SubmitOptions::default(),
+            Box::new(Collect { rows: Arc::clone(&rows), done_tx, live_rows: 3 }),
+        );
+        done_rx.recv().expect("terminal").expect("cancelled rollout still completes");
+        assert_eq!(rows.lock().unwrap().len(), 3, "no row emitted after the sink died");
         coord.shutdown();
     }
 

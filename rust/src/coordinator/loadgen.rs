@@ -251,6 +251,187 @@ fn run_scenario(
     }
 }
 
+/// Nearest-rank percentile of a sorted sample (0.0 on empty input).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Terminal-frame kind a reader thread reports back, with its receipt
+/// time.
+const NET_DONE: u8 = 0;
+const NET_REJECTED: u8 = 1;
+const NET_EXPIRED: u8 = 2;
+const NET_ERR: u8 = 3;
+
+/// The same open-loop Poisson scenario, but over the JSONL wire: a
+/// fresh coordinator behind a [`NetServer`](crate::net::NetServer) on
+/// an ephemeral port, one client connection, requests as `req` lines,
+/// outcomes matched back by id on a reader thread. Unlike the
+/// in-process scenarios (whose percentiles come from the coordinator's
+/// server-side reservoirs), latencies here are **client-side**: send of
+/// the request line to receipt of the terminal frame, so the rows in
+/// `BENCH_serve.json` track framing + socket + parse overhead too.
+fn run_net_scenario(
+    robot: &Robot,
+    cfg: &LoadCfg,
+    name: &str,
+    rate_per_s: f64,
+) -> Result<ScenarioResult, String> {
+    use crate::net::{frame, Frame, NetClient, NetServer};
+    use std::io::Write;
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let n = robot.dof();
+    let spec = BackendSpec::Native {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: cfg.batch,
+        parallel: 1,
+        class: QosClass::default(),
+    };
+    let coord = Arc::new(Coordinator::start_with_policy(vec![spec], n, cfg.window_us, cfg.policy));
+    let dims = [(robot.name.clone(), n)].into_iter().collect();
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        dims,
+        "127.0.0.1:0",
+        None,
+        &robot.name,
+        cfg.batch,
+        cfg.window_us,
+    )
+    .map_err(|e| format!("bind: {e}"))?;
+
+    let mut stream = TcpStream::connect(server.addr()).map_err(|e| format!("connect: {e}"))?;
+    let read_half = stream.try_clone().map_err(|e| e.to_string())?;
+    let (term_tx, term_rx) = std::sync::mpsc::channel::<(u64, u8, Instant)>();
+    let reader = std::thread::spawn(move || {
+        let Ok(mut client) = NetClient::from_stream(read_half) else { return };
+        while let Ok(f) = client.read_frame() {
+            let at = Instant::now();
+            let id = f.id().unwrap_or(u64::MAX);
+            let kind = match f {
+                Frame::Done { .. } => NET_DONE,
+                Frame::Rejected { .. } | Frame::Shed { .. } => NET_REJECTED,
+                Frame::Expired { .. } => NET_EXPIRED,
+                Frame::Err { .. } => NET_ERR,
+                _ => continue,
+            };
+            if term_tx.send((id, kind, at)).is_err() {
+                return;
+            }
+        }
+    });
+
+    let ops: Vec<Vec<f32>> = vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]];
+    let mut rng = Rng::new(cfg.seed ^ rate_per_s.to_bits() ^ 0x6e65);
+    // Per request id (sequential): class, probe flag, send instant.
+    let mut sent: Vec<(QosClass, bool, Instant)> = Vec::new();
+    let mut classes = [ClassOutcome::default(); 3];
+    let dur_s = cfg.duration.as_secs_f64();
+    let t0 = Instant::now();
+    let mut next_s = 0.0;
+    let mut k = 0u64;
+    let send = |line: &str, stream: &mut TcpStream| -> Result<(), String> {
+        stream.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        stream.write_all(b"\n").map_err(|e| format!("send: {e}"))
+    };
+    while next_s < dur_s {
+        wait_until(t0, next_s);
+        let class = sample_class(&mut rng, &cfg.mix);
+        classes[class.index()].offered += 1;
+        let id = sent.len() as u64;
+        let line =
+            frame::req_step_line(id, &robot.name, "fd", Some(class.name()), None, &ops);
+        sent.push((class, false, Instant::now()));
+        send(&line, &mut stream)?;
+        if k % 24 == 23 {
+            let id = sent.len() as u64;
+            let line = frame::req_step_line(
+                id,
+                &robot.name,
+                "fd",
+                Some(class.name()),
+                Some(0),
+                &ops,
+            );
+            sent.push((class, true, Instant::now()));
+            send(&line, &mut stream)?;
+        }
+        k += 1;
+        next_s += -(1.0 - rng.f64()).ln() / rate_per_s;
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    // Collect one terminal frame per request (bounded wait).
+    let mut outcomes: Vec<Option<(u8, Instant)>> = vec![None; sent.len()];
+    let mut got = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while got < sent.len() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match term_rx.recv_timeout(left) {
+            Ok((id, kind, at)) => {
+                if let Some(slot) = outcomes.get_mut(id as usize) {
+                    if slot.is_none() {
+                        *slot = Some((kind, at));
+                        got += 1;
+                    }
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = reader.join();
+    server.stop();
+
+    let mut probes_sent = 0u64;
+    let mut probes_executed = 0u64;
+    let mut lat: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, (class, probe, sent_at)) in sent.iter().enumerate() {
+        let outcome = outcomes[i];
+        if *probe {
+            probes_sent += 1;
+            if matches!(outcome, Some((NET_DONE, _))) {
+                probes_executed += 1;
+            }
+            continue;
+        }
+        let out = &mut classes[class.index()];
+        match outcome {
+            Some((NET_DONE, at)) => {
+                out.completed += 1;
+                lat[class.index()].push(at.duration_since(*sent_at).as_secs_f64() * 1e6);
+            }
+            Some((NET_REJECTED, _)) => out.rejected += 1,
+            Some((NET_EXPIRED, _)) => out.expired += 1,
+            // `err` frames and unresolved ids are both serving bugs on
+            // clean traffic; the invariant check flags them.
+            Some((_, _)) | None => out.engine_errors += 1,
+        }
+    }
+    for (i, l) in lat.iter_mut().enumerate() {
+        l.sort_by(f64::total_cmp);
+        classes[i].p50_us = pct(l, 0.50);
+        classes[i].p99_us = pct(l, 0.99);
+        classes[i].p999_us = pct(l, 0.999);
+    }
+
+    Ok(ScenarioResult {
+        name: name.to_string(),
+        offered_per_s: rate_per_s,
+        elapsed_s,
+        classes,
+        probes_executed,
+        probes_sent,
+    })
+}
+
 /// Deterministic circuit-breaker cycle: three injected panics on a
 /// batch-of-1 chaos route trip the breaker, the next admission sheds,
 /// and after the cooldown a clean half-open probe recovers the route.
@@ -314,8 +495,12 @@ fn qint_format_for(name: &str) -> QFormat {
 /// `draco loadgen`: open-loop Poisson load against a capacity-pinned
 /// route, per-class tail-latency / shed report, `rust/BENCH_serve.json`
 /// emission. Every run also measures the `real-native-fd` and
-/// `real-qint-fd` envelope scenarios: the same arrival process against
-/// the unthrottled native f64 and true-integer engines.
+/// `real-qint-fd` envelope scenarios (the same arrival process against
+/// the unthrottled native f64 and true-integer engines) plus
+/// `real-net-fd`: identical arrivals sent as JSONL `req` lines over a
+/// real TCP socket with client-side latency accounting, so the dump
+/// tracks wire framing + lazy-parse overhead alongside the in-process
+/// envelopes.
 ///
 /// * `--robot NAME` — served robot (default `iiwa`).
 /// * `--rate R` — offered rate [req/s] of the `overload` scenario
@@ -424,6 +609,24 @@ pub fn loadgen_cli(args: &Args) -> i32 {
         println!("\nscenario '{name}': offering {rate:.0} req/s for {:?} …", cfg.duration);
         results.push(run_scenario(&robot, &cfg, &name, rate, spec));
     }
+    // Network envelope: the same Poisson arrivals as `real-native-fd`,
+    // but as JSONL `req` lines over a real TCP socket, with client-side
+    // latency accounting. The `real-` prefix keeps it outside the
+    // shed-monotonicity checks, like the other unthrottled-engine rows.
+    let mut net_failure: Option<String> = None;
+    println!(
+        "\nscenario 'real-net-fd': offering {capacity:.0} req/s over the JSONL wire for {:?} …",
+        cfg.duration
+    );
+    match run_net_scenario(&robot, &cfg, "real-net-fd", capacity) {
+        Ok(r) => {
+            if r.classes.iter().map(|c| c.completed).sum::<u64>() == 0 {
+                net_failure = Some("real-net-fd completed zero requests".to_string());
+            }
+            results.push(r);
+        }
+        Err(e) => net_failure = Some(format!("real-net-fd: {e}")),
+    }
 
     let mut table =
         Table::new(&["scenario", "class", "offered", "ok", "rej", "exp", "goodput/s", "p50 µs", "p99 µs", "p99.9 µs"]);
@@ -485,6 +688,7 @@ pub fn loadgen_cli(args: &Args) -> i32 {
 
     // Invariants. Checked (and fatal) in --smoke; reported otherwise.
     let mut failures: Vec<String> = Vec::new();
+    failures.extend(net_failure);
     for r in &results {
         if r.probes_executed > 0 {
             failures.push(format!(

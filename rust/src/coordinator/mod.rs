@@ -35,7 +35,10 @@ pub mod qos;
 pub mod registry;
 pub mod stats;
 
-pub use batcher::{BackendSpec, Coordinator, Job, JobPayload, JobResult, Route, TrajLane, TrajRequest};
+pub use batcher::{
+    BackendSpec, ChannelSink, Coordinator, Job, JobPayload, JobResult, ResponseSink, Route,
+    TrajLane, TrajRequest,
+};
 pub use qos::{QosClass, QosPolicy, ServeError, SubmitOptions};
 pub use registry::{BackendKind, RobotEntry, RobotRegistry, DEFAULT_QUANT_FORMAT};
 pub use stats::{ClassStats, ServeStats};
@@ -78,6 +81,15 @@ use std::time::Instant;
 ///   rollouts stay serial (each step depends on the last).
 /// * `--requests N`, `--batch B`, `--window-us W`, `--dt S` — workload
 ///   shape.
+/// * `--listen ADDR` (native backend) — after the in-process workload
+///   passes, bind the streaming JSONL front-end on `ADDR` (use
+///   `127.0.0.1:0` for an ephemeral port) and run the wire self-drive
+///   smoke against it over real TCP: step routes, chunked `dyn_all`
+///   and trajectory streams (compared bitwise against the in-process
+///   rollout), deadline expiry, and malformed-frame handling.
+/// * `--tee PATH` — with `--listen`, record every inbound request line
+///   and outbound frame to a JSONL log that `draco replay PATH` can
+///   re-execute and verify bitwise.
 pub fn serve_cli(args: &Args) -> i32 {
     let backend = args.opt_or("backend", "native").to_string();
     let requests = args.opt_usize("requests", 512);
@@ -115,7 +127,43 @@ pub fn serve_cli(args: &Args) -> i32 {
             let coord = Coordinator::start_registry(&registry, window_us as u64);
             let traj = args.opt_usize("traj", 0);
             let dt = args.opt_f64("dt", 1e-3);
-            run_native_workload(&coord, &registry, requests, traj, dt)
+            let code = run_native_workload(&coord, &registry, requests, traj, dt);
+            if code != 0 {
+                return code;
+            }
+            if let Some(listen) = args.opt("listen") {
+                let dims: std::collections::BTreeMap<String, usize> = registry
+                    .names()
+                    .iter()
+                    .map(|n| (n.clone(), registry.get(n).expect("registered").robot.dof()))
+                    .collect();
+                let coord = std::sync::Arc::new(coord);
+                let server = match crate::net::NetServer::start(
+                    std::sync::Arc::clone(&coord),
+                    dims,
+                    listen,
+                    args.opt("tee"),
+                    &spec,
+                    batch,
+                    window_us as u64,
+                ) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("cannot listen on {listen}: {e}");
+                        return 1;
+                    }
+                };
+                match args.opt("tee") {
+                    Some(path) => {
+                        println!("\nlistening on {} (JSONL wire), tee → {path}", server.addr())
+                    }
+                    None => println!("\nlistening on {} (JSONL wire)", server.addr()),
+                }
+                let code = crate::net::self_drive(server.addr(), &registry, &coord, dt);
+                server.stop();
+                return code;
+            }
+            0
         }
         "pjrt" => {
             // Multi-robot registries and trajectory routes are native-only.
@@ -300,6 +348,53 @@ fn run_native_workload(
         println!(
             "dyn_all memo: hits {} misses {}  ({warm_checked} warm repeats bitwise == cold)",
             st.memo_hits, st.memo_misses
+        );
+    }
+
+    // Deadline probes: one request per robot with an already-expired
+    // deadline must be refused with the structured `Expired` error
+    // (never executed), while an in-deadline twin on the same route
+    // still completes — expiry exercised on live lanes, not only in the
+    // loadgen harness.
+    if code == 0 {
+        let mut expired_ok = 0usize;
+        for name in &names {
+            let entry = registry.get(name).expect("registered");
+            let n = entry.robot.dof();
+            let mut mk = || -> Vec<Vec<f32>> {
+                (0..3)
+                    .map(|_| rng.vec_range(n, -1.0, 1.0).iter().map(|&x| x as f32).collect())
+                    .collect()
+            };
+            let stale = coord.submit_to_opts(name, ArtifactFn::Fd, mk(), SubmitOptions::deadline_us(0));
+            let fresh =
+                coord.submit_to_opts(name, ArtifactFn::Fd, mk(), SubmitOptions::deadline_us(5_000_000));
+            match stale.recv() {
+                Ok(Err(ServeError::Expired { deadline_us: 0, .. })) => expired_ok += 1,
+                Ok(Ok(_)) => {
+                    eprintln!("deadline probe {name}: executed despite an expired deadline");
+                    return 1;
+                }
+                Ok(Err(e)) => {
+                    eprintln!("deadline probe {name}: unexpected refusal: {e}");
+                    return 1;
+                }
+                Err(e) => {
+                    eprintln!("deadline probe {name}: dropped: {e}");
+                    return 1;
+                }
+            }
+            match fresh.recv() {
+                Ok(Ok(out)) if out.len() == n => {}
+                other => {
+                    eprintln!("deadline probe {name}: in-deadline twin failed: {other:?}");
+                    return 1;
+                }
+            }
+        }
+        println!(
+            "deadline probes: {expired_ok}/{} expired on live lanes, in-deadline twins completed",
+            names.len()
         );
     }
 

@@ -23,6 +23,9 @@
 //!   AOT-compiled HLO artifacts via PJRT behind the `pjrt` feature),
 //!   with dynamic batching and server-side trajectory rollouts. See
 //!   `docs/architecture.md` and `docs/serving.md`.
+//! * [`net`] — the streaming JSONL TCP front-end: lazy hot-field request
+//!   parsing, chunked trajectory egress, raw-JSONL record (`--tee`) and
+//!   bitwise replay (`draco replay`).
 //! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).
 
 pub mod accel;
@@ -30,6 +33,7 @@ pub mod coordinator;
 pub mod control;
 pub mod dynamics;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

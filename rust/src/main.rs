@@ -44,7 +44,15 @@
 //!   per-class p50/p99/p99.9, shed rate, goodput vs offered load;
 //!   writes `rust/BENCH_serve.json`. `--smoke` is the short CI mode
 //!   asserting the overload invariants (no expired job executed,
-//!   monotone shedding, Control-p99 bound, breaker recovery).
+//!   monotone shedding, Control-p99 bound, breaker recovery). Includes
+//!   a network scenario driving the JSONL wire over a real socket.
+//! * `serve --listen ADDR [--tee PATH]` — additionally bring up the
+//!   streaming JSONL TCP front-end (chunked trajectory egress, lazy
+//!   hot-field parsing) and self-drive it; `--tee` records the raw
+//!   wire traffic for `draco replay`.
+//! * `replay LOG` — re-execute a `--tee` capture offline and assert the
+//!   replayed response payloads are bitwise identical to the recorded
+//!   ones (timing-dependent refusals are skipped). See docs/serving.md.
 
 use draco::accel::{self, designs::RbdFn, Design};
 use draco::model::{builtin_robot, robot_registry};
@@ -63,9 +71,10 @@ fn main() {
         Some("rates") => cmd_rates(&args),
         Some("serve") => draco::coordinator::serve_cli(&args),
         Some("loadgen") => draco::coordinator::loadgen::loadgen_cli(&args),
+        Some("replay") => draco::net::replay_cli(&args),
         _ => {
             eprintln!(
-                "usage: draco <export-robots|info|estimate|quantize|rates|serve|loadgen> [options]"
+                "usage: draco <export-robots|info|estimate|quantize|rates|serve|loadgen|replay> [options]"
             );
             2
         }

@@ -1,0 +1,477 @@
+//! Typed JSONL wire frames.
+//!
+//! Every frame is one JSON object on one line, tagged by a `"type"`
+//! field. Client → server traffic is a single frame type (`req`); the
+//! server answers with an event stream per request id:
+//!
+//! * `ack` — the request passed admission and was enqueued.
+//! * `rejected` / `shed` / `expired` — the structured QoS refusals from
+//!   [`ServeError`], carrying the same retry hints as the in-process
+//!   API (`retry_after_us`, queue depth, breaker failure count, waited
+//!   time).
+//! * `chunk` — one flat f32 payload fragment with a per-request
+//!   sequence number. Step answers are one chunk (`dyn_all` splits into
+//!   its three segments q̈ | M⁻¹ | C); trajectory responses are one
+//!   chunk per integrated row `q_t ‖ q̇_t`, flushed mid-horizon.
+//! * `done` — terminal success, naming the chunk count.
+//! * `err` — terminal failure with a message (engine errors, malformed
+//!   frames, unknown routes).
+//!
+//! Writers are hand-rolled (alphabetical keys, matching the
+//! deterministic [`Json`] object serialization) because chunk egress is
+//! the serving hot path; parsing goes through the full [`Json`] tree —
+//! the *lazy* request path lives in [`super::lazy`]. f32 payloads are
+//! written with the shortest round-trip decimal (`{}` formatting), so
+//! text → f64 → f32 recovers every value bitwise; non-finite values
+//! serialize as `null` and parse back as NaN (JSON has no Inf/NaN).
+
+use crate::coordinator::ServeError;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// One parsed wire frame (any direction).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Session header, first line of a tee log: enough to rebuild the
+    /// serving registry for an offline replay.
+    Hello {
+        /// The `--robots` registry spec the server was started with.
+        spec: String,
+        /// Per-route batch size.
+        batch: usize,
+        /// Batching window [µs].
+        window_us: u64,
+    },
+    /// A client request (step or trajectory).
+    Req(NetReq),
+    /// Request admitted and enqueued.
+    Ack {
+        /// Request id this acknowledges.
+        id: u64,
+    },
+    /// Admission refusal: class queue full ([`ServeError::Rejected`]).
+    Rejected {
+        /// Request id.
+        id: u64,
+        /// Class whose queue was full.
+        class: String,
+        /// Queue depth observed at admission.
+        depth: usize,
+        /// Retry hint [µs].
+        retry_after_us: u64,
+    },
+    /// Circuit breaker open ([`ServeError::Shed`]).
+    Shed {
+        /// Request id.
+        id: u64,
+        /// Consecutive batch failures that opened the breaker.
+        consecutive_failures: u32,
+        /// Retry hint [µs].
+        retry_after_us: u64,
+    },
+    /// Deadline passed while queued ([`ServeError::Expired`]).
+    Expired {
+        /// Request id.
+        id: u64,
+        /// The deadline the request carried [µs].
+        deadline_us: u64,
+        /// How long it actually waited [µs].
+        waited_us: u64,
+    },
+    /// One payload fragment.
+    Chunk {
+        /// Request id.
+        id: u64,
+        /// 0-based fragment sequence number within the request.
+        seq: u64,
+        /// Flat f32 payload values.
+        data: Vec<f32>,
+    },
+    /// Terminal success.
+    Done {
+        /// Request id.
+        id: u64,
+        /// Total `chunk` frames sent for this request.
+        chunks: u64,
+    },
+    /// Terminal failure.
+    Err {
+        /// Request id (`0` when the line was too malformed to carry one).
+        id: u64,
+        /// Human-readable reason.
+        msg: String,
+    },
+}
+
+/// A fully parsed `req` frame (the [`Json`]-tree path; the lazy scanner
+/// in [`super::lazy`] extracts the same hot fields without a tree).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetReq {
+    /// Client-chosen request id; response frames echo it.
+    pub id: u64,
+    /// Target robot name.
+    pub robot: String,
+    /// Route tag: `rnea` | `fd` | `minv` | `dynall` | `traj`.
+    pub route: String,
+    /// Optional QoS class override (`control`/`interactive`/`bulk`).
+    pub class: Option<String>,
+    /// Optional relative deadline [µs].
+    pub deadline_us: Option<u64>,
+    /// Step operands (arity × N), step routes only.
+    pub ops: Option<Vec<Vec<f32>>>,
+    /// Initial joint positions, trajectory routes only.
+    pub q0: Option<Vec<f32>>,
+    /// Initial joint velocities, trajectory routes only.
+    pub qd0: Option<Vec<f32>>,
+    /// Flat torque rows (H·N), trajectory routes only.
+    pub tau: Option<Vec<f32>>,
+    /// Integration step [s], trajectory routes only.
+    pub dt: Option<f64>,
+}
+
+/// Append one f32 in its shortest round-trip decimal form (`null` for
+/// non-finite values — the documented lossy case).
+fn push_f32(out: &mut String, v: f32) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_f32_arr(out: &mut String, data: &[f32]) {
+    out.push('[');
+    for (i, v) in data.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_f32(out, *v);
+    }
+    out.push(']');
+}
+
+/// `hello` line (keys alphabetical, like every writer here).
+pub fn hello_line(spec: &str, batch: usize, window_us: u64) -> String {
+    format!(
+        "{{\"batch\":{batch},\"spec\":{},\"type\":\"hello\",\"window_us\":{window_us}}}",
+        Json::Str(spec.to_string()).dump()
+    )
+}
+
+/// `ack` line.
+pub fn ack_line(id: u64) -> String {
+    format!("{{\"id\":{id},\"type\":\"ack\"}}")
+}
+
+/// `chunk` line.
+pub fn chunk_line(id: u64, seq: u64, data: &[f32]) -> String {
+    let mut s = String::with_capacity(48 + 12 * data.len());
+    s.push_str("{\"data\":");
+    push_f32_arr(&mut s, data);
+    let _ = write!(s, ",\"id\":{id},\"seq\":{seq},\"type\":\"chunk\"}}");
+    s
+}
+
+/// `done` line.
+pub fn done_line(id: u64, chunks: u64) -> String {
+    format!("{{\"chunks\":{chunks},\"id\":{id},\"type\":\"done\"}}")
+}
+
+/// `err` line (message JSON-escaped).
+pub fn err_line(id: u64, msg: &str) -> String {
+    format!("{{\"id\":{id},\"msg\":{},\"type\":\"err\"}}", Json::Str(msg.to_string()).dump())
+}
+
+/// Map a [`ServeError`] to its wire frame: the three structured QoS
+/// refusals keep their fields (the retry hints cross the wire intact);
+/// everything else becomes an `err` frame with the display message.
+pub fn serve_error_line(id: u64, err: &ServeError) -> String {
+    match err {
+        ServeError::Rejected { class, depth, retry_after_us } => format!(
+            "{{\"class\":\"{}\",\"depth\":{depth},\"id\":{id},\"retry_after_us\":{retry_after_us},\"type\":\"rejected\"}}",
+            class.name()
+        ),
+        ServeError::Shed { consecutive_failures, retry_after_us } => format!(
+            "{{\"consecutive_failures\":{consecutive_failures},\"id\":{id},\"retry_after_us\":{retry_after_us},\"type\":\"shed\"}}"
+        ),
+        ServeError::Expired { deadline_us, waited_us } => format!(
+            "{{\"deadline_us\":{deadline_us},\"id\":{id},\"type\":\"expired\",\"waited_us\":{waited_us}}}"
+        ),
+        other => err_line(id, &other.to_string()),
+    }
+}
+
+/// Build a step `req` line.
+pub fn req_step_line(
+    id: u64,
+    robot: &str,
+    route: &str,
+    class: Option<&str>,
+    deadline_us: Option<u64>,
+    ops: &[Vec<f32>],
+) -> String {
+    let mut s = String::with_capacity(64 + ops.iter().map(|o| 12 * o.len() + 2).sum::<usize>());
+    s.push('{');
+    if let Some(c) = class {
+        let _ = write!(s, "\"class\":\"{c}\",");
+    }
+    if let Some(d) = deadline_us {
+        let _ = write!(s, "\"deadline_us\":{d},");
+    }
+    let _ = write!(s, "\"id\":{id},\"ops\":[");
+    for (i, op) in ops.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        push_f32_arr(&mut s, op);
+    }
+    let _ = write!(
+        s,
+        "],\"robot\":{},\"route\":\"{route}\",\"type\":\"req\"}}",
+        Json::Str(robot.to_string()).dump()
+    );
+    s
+}
+
+/// Build a trajectory `req` line.
+#[allow(clippy::too_many_arguments)]
+pub fn req_traj_line(
+    id: u64,
+    robot: &str,
+    class: Option<&str>,
+    deadline_us: Option<u64>,
+    q0: &[f32],
+    qd0: &[f32],
+    tau: &[f32],
+    dt: f64,
+) -> String {
+    let mut s = String::with_capacity(96 + 12 * (q0.len() + qd0.len() + tau.len()));
+    s.push('{');
+    if let Some(c) = class {
+        let _ = write!(s, "\"class\":\"{c}\",");
+    }
+    if let Some(d) = deadline_us {
+        let _ = write!(s, "\"deadline_us\":{d},");
+    }
+    let _ = write!(s, "\"dt\":{dt},\"id\":{id},\"q0\":");
+    push_f32_arr(&mut s, q0);
+    s.push_str(",\"qd0\":");
+    push_f32_arr(&mut s, qd0);
+    let _ = write!(s, ",\"robot\":{},\"route\":\"traj\",\"tau\":", Json::Str(robot.to_string()).dump());
+    push_f32_arr(&mut s, tau);
+    s.push_str(",\"type\":\"req\"}");
+    s
+}
+
+fn get_u64(v: &Json, key: &str) -> Option<u64> {
+    let n = v.get(key)?.as_f64()?;
+    (n >= 0.0 && n.fract() == 0.0).then_some(n as u64)
+}
+
+/// Parse a JSON f32 array; `null` elements become NaN (matching the
+/// writer's lossy non-finite case).
+fn f32_vec(v: &Json) -> Option<Vec<f32>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| match x {
+            Json::Null => Some(f32::NAN),
+            _ => x.as_f64().map(|n| n as f32),
+        })
+        .collect()
+}
+
+impl Frame {
+    /// Parse one wire line through the full [`Json`] parser.
+    pub fn parse(line: &str) -> Result<Frame, String> {
+        let v = Json::parse(line).map_err(|e| e.to_string())?;
+        let typ = v.get("type").and_then(Json::as_str).ok_or("frame has no \"type\"")?;
+        let id = || get_u64(&v, "id").ok_or_else(|| format!("{typ} frame has no integer \"id\""));
+        match typ {
+            "hello" => Ok(Frame::Hello {
+                spec: v.get("spec").and_then(Json::as_str).ok_or("hello has no spec")?.into(),
+                batch: v.get("batch").and_then(Json::as_usize).ok_or("hello has no batch")?,
+                window_us: get_u64(&v, "window_us").ok_or("hello has no window_us")?,
+            }),
+            "req" => {
+                let ops = match v.get("ops") {
+                    None => None,
+                    Some(a) => Some(
+                        a.as_arr()
+                            .ok_or("ops is not an array")?
+                            .iter()
+                            .map(|op| f32_vec(op).ok_or("ops row is not a number array"))
+                            .collect::<Result<Vec<_>, _>>()?,
+                    ),
+                };
+                let arr = |key: &str| -> Result<Option<Vec<f32>>, String> {
+                    match v.get(key) {
+                        None => Ok(None),
+                        Some(a) => Ok(Some(
+                            f32_vec(a).ok_or_else(|| format!("{key} is not a number array"))?,
+                        )),
+                    }
+                };
+                Ok(Frame::Req(NetReq {
+                    id: id()?,
+                    robot: v.get("robot").and_then(Json::as_str).unwrap_or("").into(),
+                    route: v.get("route").and_then(Json::as_str).unwrap_or("").into(),
+                    class: v.get("class").and_then(Json::as_str).map(str::to_string),
+                    deadline_us: get_u64(&v, "deadline_us"),
+                    ops,
+                    q0: arr("q0")?,
+                    qd0: arr("qd0")?,
+                    tau: arr("tau")?,
+                    dt: v.get("dt").and_then(Json::as_f64),
+                }))
+            }
+            "ack" => Ok(Frame::Ack { id: id()? }),
+            "rejected" => Ok(Frame::Rejected {
+                id: id()?,
+                class: v.get("class").and_then(Json::as_str).unwrap_or("").into(),
+                depth: v.get("depth").and_then(Json::as_usize).unwrap_or(0),
+                retry_after_us: get_u64(&v, "retry_after_us").unwrap_or(0),
+            }),
+            "shed" => Ok(Frame::Shed {
+                id: id()?,
+                consecutive_failures: get_u64(&v, "consecutive_failures").unwrap_or(0) as u32,
+                retry_after_us: get_u64(&v, "retry_after_us").unwrap_or(0),
+            }),
+            "expired" => Ok(Frame::Expired {
+                id: id()?,
+                deadline_us: get_u64(&v, "deadline_us").unwrap_or(0),
+                waited_us: get_u64(&v, "waited_us").unwrap_or(0),
+            }),
+            "chunk" => Ok(Frame::Chunk {
+                id: id()?,
+                seq: get_u64(&v, "seq").ok_or("chunk has no seq")?,
+                data: v.get("data").and_then(f32_vec).ok_or("chunk has no data array")?,
+            }),
+            "done" => Ok(Frame::Done { id: id()?, chunks: get_u64(&v, "chunks").unwrap_or(0) }),
+            "err" => Ok(Frame::Err {
+                id: id()?,
+                msg: v.get("msg").and_then(Json::as_str).unwrap_or("").into(),
+            }),
+            other => Err(format!("unknown frame type '{other}'")),
+        }
+    }
+
+    /// The request id this frame refers to (`None` for `hello`).
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Frame::Hello { .. } => None,
+            Frame::Req(r) => Some(r.id),
+            Frame::Ack { id }
+            | Frame::Rejected { id, .. }
+            | Frame::Shed { id, .. }
+            | Frame::Expired { id, .. }
+            | Frame::Chunk { id, .. }
+            | Frame::Done { id, .. }
+            | Frame::Err { id, .. } => Some(*id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::QosClass;
+
+    #[test]
+    fn response_frames_round_trip() {
+        let cases = vec![
+            (ack_line(7), Frame::Ack { id: 7 }),
+            (done_line(7, 32), Frame::Done { id: 7, chunks: 32 }),
+            (
+                chunk_line(9, 2, &[1.5, -0.25, 3.0e-7]),
+                Frame::Chunk { id: 9, seq: 2, data: vec![1.5, -0.25, 3.0e-7] },
+            ),
+            (err_line(1, "bad \"x\"\n"), Frame::Err { id: 1, msg: "bad \"x\"\n".into() }),
+            (
+                serve_error_line(
+                    3,
+                    &ServeError::Rejected {
+                        class: QosClass::Bulk,
+                        depth: 12,
+                        retry_after_us: 400,
+                    },
+                ),
+                Frame::Rejected { id: 3, class: "bulk".into(), depth: 12, retry_after_us: 400 },
+            ),
+            (
+                serve_error_line(
+                    4,
+                    &ServeError::Shed { consecutive_failures: 5, retry_after_us: 100_000 },
+                ),
+                Frame::Shed { id: 4, consecutive_failures: 5, retry_after_us: 100_000 },
+            ),
+            (
+                serve_error_line(5, &ServeError::Expired { deadline_us: 10, waited_us: 220 }),
+                Frame::Expired { id: 5, deadline_us: 10, waited_us: 220 },
+            ),
+            (
+                hello_line("iiwa,atlas:qint@12.14", 8, 200),
+                Frame::Hello { spec: "iiwa,atlas:qint@12.14".into(), batch: 8, window_us: 200 },
+            ),
+        ];
+        for (line, want) in cases {
+            assert_eq!(Frame::parse(&line).unwrap(), want, "{line}");
+        }
+    }
+
+    /// Every f32 bit pattern that is finite must survive text framing
+    /// bitwise — the property the replay comparison rests on.
+    #[test]
+    fn f32_payloads_round_trip_bitwise() {
+        let vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::MIN,
+            1.0e-45,        // smallest subnormal
+            3.4028233e38,   // near MAX
+            0.1,
+            -0.30000001,
+            core::f32::consts::PI,
+        ];
+        let line = chunk_line(1, 0, &vals);
+        match Frame::parse(&line).unwrap() {
+            Frame::Chunk { data, .. } => {
+                assert_eq!(data.len(), vals.len());
+                for (a, b) in data.iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{b} corrupted to {a}");
+                }
+            }
+            other => panic!("expected chunk, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn req_lines_parse_back() {
+        let ops = vec![vec![0.5f32; 3], vec![-1.25; 3], vec![2.0; 3]];
+        let line = req_step_line(11, "iiwa", "fd", Some("control"), Some(500), &ops);
+        match Frame::parse(&line).unwrap() {
+            Frame::Req(r) => {
+                assert_eq!(r.id, 11);
+                assert_eq!(r.robot, "iiwa");
+                assert_eq!(r.route, "fd");
+                assert_eq!(r.class.as_deref(), Some("control"));
+                assert_eq!(r.deadline_us, Some(500));
+                assert_eq!(r.ops.unwrap(), ops);
+            }
+            other => panic!("expected req, got {other:?}"),
+        }
+        let line = req_traj_line(12, "atlas", None, None, &[0.1; 4], &[0.0; 4], &[0.2; 8], 1e-3);
+        match Frame::parse(&line).unwrap() {
+            Frame::Req(r) => {
+                assert_eq!(r.route, "traj");
+                assert_eq!(r.q0.unwrap().len(), 4);
+                assert_eq!(r.tau.unwrap().len(), 8);
+                assert_eq!(r.dt, Some(1e-3));
+            }
+            other => panic!("expected req, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,431 @@
+//! Lazy hot-field request parsing.
+//!
+//! The serving front-end only needs a handful of fields to *route* a
+//! request — `robot`, `route`, `class`, `deadline_us`, `id` — while the
+//! payload arrays (`ops`, `q0`, `qd0`, `tau`) dominate the line's byte
+//! count. Building a full [`Json`](crate::util::json::Json) tree heap-
+//! allocates every number twice (tree node + later flat vector).
+//! [`LazyReq::scan`] instead makes one pass over the top-level object,
+//! decoding only the hot scalar fields and recording the payload values
+//! as *byte spans* into the original line; [`parse_f32_array`] /
+//! [`parse_f32_matrix`] then convert a span straight into the flat
+//! `Vec<f32>` the batcher wants.
+//!
+//! Agreement contract (checked by tests here and by `draco replay` on
+//! every captured corpus line): for any line the full parser accepts,
+//! the lazy scanner extracts identical field values, with one narrowing
+//! — hot *string* fields must be escape-free (robot names, routes and
+//! classes are plain identifiers; a `\u`-escaped robot name is a scan
+//! error, not a silent mismatch). Numbers are parsed text → f64 → f32,
+//! the same pipeline the full parser uses, so payloads agree bitwise.
+
+/// Cursor over the raw line bytes.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+/// Hot fields of a `req` line, payload arrays left as unparsed spans.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LazyReq<'a> {
+    /// Frame type tag (callers expect `"req"`).
+    pub typ: &'a str,
+    /// Request id.
+    pub id: u64,
+    /// Target robot name.
+    pub robot: Option<&'a str>,
+    /// Route tag.
+    pub route: Option<&'a str>,
+    /// QoS class override.
+    pub class: Option<&'a str>,
+    /// Relative deadline [µs].
+    pub deadline_us: Option<u64>,
+    /// Integration step [s] (trajectory requests).
+    pub dt: Option<f64>,
+    /// Unparsed span of the `ops` matrix.
+    pub ops: Option<&'a str>,
+    /// Unparsed span of the `q0` array.
+    pub q0: Option<&'a str>,
+    /// Unparsed span of the `qd0` array.
+    pub qd0: Option<&'a str>,
+    /// Unparsed span of the `tau` array.
+    pub tau: Option<&'a str>,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    /// Consume a string token and return its raw contents (between the
+    /// quotes, escapes NOT decoded — hot fields must be escape-free).
+    fn string_raw(&mut self, src: &'a str) -> Result<&'a str, String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            match c {
+                b'"' => {
+                    let s = &src[start..self.i];
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    // Skip the escape introducer and its single-byte
+                    // tail; \uXXXX tails are ASCII hex so byte-wise
+                    // skipping stays inside the string.
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    /// Skip one JSON value of any type, strings-and-nesting aware.
+    fn skip_value(&mut self) -> Result<(), String> {
+        match self.peek().ok_or("unexpected end of line")? {
+            b'"' => {
+                // Reuse the raw-string walk; contents discarded.
+                let src = core::str::from_utf8(self.b).map_err(|_| "invalid UTF-8")?;
+                self.string_raw(src)?;
+                Ok(())
+            }
+            b'{' | b'[' => {
+                let mut depth = 0usize;
+                while let Some(c) = self.peek() {
+                    match c {
+                        b'{' | b'[' => {
+                            depth += 1;
+                            self.i += 1;
+                        }
+                        b'}' | b']' => {
+                            depth -= 1;
+                            self.i += 1;
+                            if depth == 0 {
+                                return Ok(());
+                            }
+                        }
+                        b'"' => {
+                            let src =
+                                core::str::from_utf8(self.b).map_err(|_| "invalid UTF-8")?;
+                            self.string_raw(src)?;
+                        }
+                        _ => self.i += 1,
+                    }
+                }
+                Err("unterminated container".into())
+            }
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            b'-' | b'0'..=b'9' => {
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                        self.i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                Ok(())
+            }
+            other => Err(format!("unexpected byte '{}' at {}", other as char, self.i)),
+        }
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), String> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+}
+
+/// Decode an unsigned integer span the way the full parser does
+/// (f64 parse, then an exact-integer check).
+fn span_u64(span: &str) -> Result<u64, String> {
+    let n: f64 = span.trim().parse().map_err(|_| format!("'{span}' is not a number"))?;
+    if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
+        Ok(n as u64)
+    } else {
+        Err(format!("'{span}' is not an unsigned integer"))
+    }
+}
+
+fn unquote(span: &str) -> Result<&str, String> {
+    let inner = span
+        .trim()
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .ok_or_else(|| format!("'{span}' is not a string"))?;
+    if inner.contains('\\') {
+        Err(format!("hot string field contains escapes: '{span}'"))
+    } else {
+        Ok(inner)
+    }
+}
+
+impl<'a> LazyReq<'a> {
+    /// Single-pass scan of one request line. Hot scalar fields are
+    /// decoded; payload arrays are kept as spans; unknown keys are
+    /// skipped structurally.
+    pub fn scan(line: &'a str) -> Result<LazyReq<'a>, String> {
+        let mut s = Scan { b: line.as_bytes(), i: 0 };
+        let mut out = LazyReq::default();
+        s.ws();
+        s.expect(b'{')?;
+        s.ws();
+        if s.peek() == Some(b'}') {
+            s.i += 1;
+        } else {
+            loop {
+                s.ws();
+                let key = s.string_raw(line)?;
+                s.ws();
+                s.expect(b':')?;
+                s.ws();
+                let vstart = s.i;
+                s.skip_value()?;
+                let span = &line[vstart..s.i];
+                match key {
+                    "type" => out.typ = unquote(span)?,
+                    "id" => out.id = span_u64(span)?,
+                    "robot" => out.robot = Some(unquote(span)?),
+                    "route" => out.route = Some(unquote(span)?),
+                    "class" => out.class = Some(unquote(span)?),
+                    "deadline_us" => out.deadline_us = Some(span_u64(span)?),
+                    "dt" => {
+                        out.dt = Some(
+                            span.trim()
+                                .parse::<f64>()
+                                .map_err(|_| format!("dt '{span}' is not a number"))?,
+                        );
+                    }
+                    "ops" => out.ops = Some(span),
+                    "q0" => out.q0 = Some(span),
+                    "qd0" => out.qd0 = Some(span),
+                    "tau" => out.tau = Some(span),
+                    _ => {}
+                }
+                s.ws();
+                match s.peek() {
+                    Some(b',') => s.i += 1,
+                    Some(b'}') => {
+                        s.i += 1;
+                        break;
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", s.i)),
+                }
+            }
+        }
+        s.ws();
+        if s.i != s.b.len() {
+            return Err(format!("trailing bytes after object at byte {}", s.i));
+        }
+        if out.typ.is_empty() {
+            return Err("frame has no \"type\"".into());
+        }
+        Ok(out)
+    }
+}
+
+/// Parse a recorded array span (e.g. `[1.5,-2,null]`) straight into a
+/// flat f32 vector. Numbers go text → f64 → f32, identical to the full
+/// parser's pipeline, so values agree bitwise; `null` becomes NaN.
+pub fn parse_f32_array(span: &str) -> Result<Vec<f32>, String> {
+    let mut s = Scan { b: span.as_bytes(), i: 0 };
+    let mut out = Vec::new();
+    parse_f32_array_at(&mut s, span, &mut out)?;
+    s.ws();
+    if s.i != s.b.len() {
+        return Err("trailing bytes after array".into());
+    }
+    Ok(out)
+}
+
+fn parse_f32_array_at(s: &mut Scan<'_>, src: &str, out: &mut Vec<f32>) -> Result<(), String> {
+    s.ws();
+    s.expect(b'[')?;
+    s.ws();
+    if s.peek() == Some(b']') {
+        s.i += 1;
+        return Ok(());
+    }
+    loop {
+        s.ws();
+        if s.b[s.i..].starts_with(b"null") {
+            out.push(f32::NAN);
+            s.i += 4;
+        } else {
+            let start = s.i;
+            while let Some(c) = s.peek() {
+                if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                    s.i += 1;
+                } else {
+                    break;
+                }
+            }
+            let tok = &src[start..s.i];
+            let v: f64 = tok.parse().map_err(|_| format!("'{tok}' is not a number"))?;
+            out.push(v as f32);
+        }
+        s.ws();
+        match s.peek() {
+            Some(b',') => s.i += 1,
+            Some(b']') => {
+                s.i += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {}", s.i)),
+        }
+    }
+}
+
+/// Parse a recorded matrix span (array of arrays) into row vectors.
+pub fn parse_f32_matrix(span: &str) -> Result<Vec<Vec<f32>>, String> {
+    let mut s = Scan { b: span.as_bytes(), i: 0 };
+    s.ws();
+    s.expect(b'[')?;
+    s.ws();
+    let mut rows = Vec::new();
+    if s.peek() == Some(b']') {
+        s.i += 1;
+    } else {
+        loop {
+            let mut row = Vec::new();
+            parse_f32_array_at(&mut s, span, &mut row)?;
+            rows.push(row);
+            s.ws();
+            match s.peek() {
+                Some(b',') => s.i += 1,
+                Some(b']') => {
+                    s.i += 1;
+                    break;
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", s.i)),
+            }
+        }
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        return Err("trailing bytes after matrix".into());
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::{req_step_line, req_traj_line, Frame};
+    use crate::util::rng::Rng;
+
+    /// Lazy scan must agree with the full Json-tree parse on every
+    /// field of a generated corpus — the ISSUE acceptance property.
+    #[test]
+    fn lazy_scan_agrees_with_full_parse() {
+        let mut rng = Rng::new(8080);
+        for k in 0..64u64 {
+            let n = 3 + (k as usize % 5);
+            let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+                (0..len).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect()
+            };
+            let line = if k % 3 == 0 {
+                let tau = mk(&mut rng, n * 8);
+                req_traj_line(
+                    k,
+                    "iiwa",
+                    (k % 2 == 0).then_some("bulk"),
+                    (k % 4 == 0).then_some(k * 10),
+                    &mk(&mut rng, n),
+                    &mk(&mut rng, n),
+                    &tau,
+                    1e-3,
+                )
+            } else {
+                let route = ["rnea", "fd", "minv", "dynall"][k as usize % 4];
+                let ops = vec![mk(&mut rng, n), mk(&mut rng, n), mk(&mut rng, n)];
+                req_step_line(k, "atlas", route, None, None, &ops)
+            };
+            let lazy = LazyReq::scan(&line).unwrap();
+            let full = match Frame::parse(&line).unwrap() {
+                Frame::Req(r) => r,
+                other => panic!("expected req, got {other:?}"),
+            };
+            assert_eq!(lazy.typ, "req");
+            assert_eq!(lazy.id, full.id);
+            assert_eq!(lazy.robot.unwrap(), full.robot);
+            assert_eq!(lazy.route.unwrap(), full.route);
+            assert_eq!(lazy.class.map(str::to_string), full.class);
+            assert_eq!(lazy.deadline_us, full.deadline_us);
+            assert_eq!(lazy.dt, full.dt);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            match (lazy.ops, full.ops) {
+                (Some(span), Some(mat)) => {
+                    let lm = parse_f32_matrix(span).unwrap();
+                    assert_eq!(lm.len(), mat.len());
+                    for (a, b) in lm.iter().zip(&mat) {
+                        assert_eq!(bits(a), bits(b));
+                    }
+                }
+                (None, None) => {}
+                other => panic!("ops presence disagrees: {other:?}"),
+            }
+            for (span, arr) in [(lazy.q0, full.q0), (lazy.qd0, full.qd0), (lazy.tau, full.tau)] {
+                match (span, arr) {
+                    (Some(sp), Some(a)) => {
+                        assert_eq!(bits(&parse_f32_array(sp).unwrap()), bits(&a));
+                    }
+                    (None, None) => {}
+                    other => panic!("array presence disagrees: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scan_skips_unknown_keys_and_nested_values() {
+        let line = r#"{"extra":{"a":[1,{"b":"}]"}],"c":null},"id":3,"robot":"iiwa","route":"fd","type":"req","z":"tail"}"#;
+        let r = LazyReq::scan(line).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.robot, Some("iiwa"));
+        assert_eq!(r.route, Some("fd"));
+    }
+
+    #[test]
+    fn malformed_lines_error_not_panic() {
+        let bad = [
+            "",
+            "{",
+            "[1,2,3]",
+            "{\"id\":}",
+            "{\"id\":1",
+            "{\"id\":1} trailing",
+            "{\"type\":\"req\",\"id\":\"x\"}",
+            "{\"robot\":\"a\\\"b\",\"type\":\"req\"}", // escaped hot field
+            "{\"id\":1,\"type\":\"req\"}{}",
+            "{\"unterminated\":\"abc",
+        ];
+        for line in bad {
+            assert!(LazyReq::scan(line).is_err(), "accepted: {line}");
+        }
+        assert!(parse_f32_array("[1,2,").is_err());
+        assert!(parse_f32_array("[1,2]x").is_err());
+        assert!(parse_f32_matrix("[[1],[2]").is_err());
+    }
+}

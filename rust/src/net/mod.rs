@@ -1,0 +1,34 @@
+//! Streaming JSONL network front-end.
+//!
+//! Wire model: one TCP connection per client carrying newline-delimited
+//! JSON frames in both directions (grammar in `docs/serving.md`). A
+//! request names a robot, a route, and optionally a QoS class and
+//! deadline; the server answers with an event stream per request id —
+//! `ack` on admission, zero or more `chunk` payload frames, then
+//! exactly one terminal frame (`done`, a structured refusal carrying
+//! PR 6's retry hints, or `err`). Trajectory and `dyn_all` responses
+//! are *chunked*: rows hit the socket as the integrator produces them,
+//! so a client consumes `q_t ‖ q̇_t` while the remaining horizon is
+//! still being computed.
+//!
+//! Layers:
+//!
+//! * [`frame`] — typed frames, deterministic writers (alphabetical
+//!   keys, shortest-round-trip f32 text), full-tree parser.
+//! * [`lazy`] — single-pass hot-field scanner used on the request path;
+//!   payload arrays stay byte spans until the batcher needs them.
+//! * [`server`] — the TCP listener, per-connection reader, socket-
+//!   backed [`ResponseSink`](crate::coordinator::ResponseSink), raw
+//!   JSONL tee, and an end-to-end self-drive smoke.
+//! * [`replay`] — offline re-execution of a tee capture with bitwise
+//!   payload comparison (`draco replay LOG`).
+
+pub mod frame;
+pub mod lazy;
+pub mod replay;
+pub mod server;
+
+pub use frame::{Frame, NetReq};
+pub use lazy::LazyReq;
+pub use replay::{replay_cli, replay_log, ReplayReport};
+pub use server::{self_drive, NetClient, NetServer, MAX_LINE_BYTES};

@@ -1,0 +1,301 @@
+//! Offline replay of a `--tee` capture.
+//!
+//! A tee log is a single JSONL file: a `hello` frame naming the serving
+//! config (registry spec, batch, window), then every inbound request
+//! line verbatim interleaved with every outbound response frame.
+//! [`replay_log`] rebuilds the same registry, re-drives each request
+//! sequentially through a fresh [`Coordinator`], and checks that the
+//! replayed payloads are **bitwise identical** to the captured `chunk`
+//! frames — the end-to-end proof that text framing, lazy parsing, and
+//! the streaming sinks are all lossless.
+//!
+//! Two classes of capture are excluded from the bitwise comparison:
+//!
+//! * timing-dependent refusals (`rejected` / `shed` / `expired`) — a
+//!   quiet replay machine admits what a loaded server refused, so these
+//!   are counted, not compared (replay also strips deadlines);
+//! * requests with no terminal frame (client disconnected mid-stream).
+//!
+//! Each request line is additionally parsed twice — lazily
+//! ([`LazyReq::scan`], the path the live server used) and through the
+//! full [`Json`](crate::util::json::Json) tree ([`Frame::parse`]) — and
+//! the two must agree on every hot field and every payload value,
+//! bit for bit. Replay assumes request ids are unique across the log
+//! (true of single-connection captures, which is what the CI smoke and
+//! the self-drive produce).
+
+use super::frame::{Frame, NetReq};
+use super::lazy::{self, LazyReq};
+use crate::coordinator::{
+    Coordinator, QosClass, ResponseSink, RobotRegistry, ServeError, SubmitOptions, TrajRequest,
+};
+use crate::runtime::ArtifactFn;
+use crate::util::cli::Args;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc::{channel, Sender};
+
+/// Terminal state a request reached in the live capture.
+enum Out {
+    Done,
+    Refused,
+    Errored,
+}
+
+/// Everything the log recorded about one request id.
+struct Live {
+    chunks: Vec<f32>,
+    outcome: Option<Out>,
+}
+
+/// Replay tallies; `is_clean` is the CI gate.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Request lines found in the log.
+    pub requests: usize,
+    /// Requests with a deterministic terminal outcome, re-driven.
+    pub compared: usize,
+    /// Re-driven requests whose outcome matched bitwise.
+    pub matched: usize,
+    /// Live refusals (rejected/shed/expired) — timing-dependent, skipped.
+    pub timing_skipped: usize,
+    /// Requests with no terminal frame in the log, skipped.
+    pub incomplete: usize,
+    /// Request lines where lazy and full parsing were cross-checked.
+    pub lazy_checked: usize,
+    /// Cross-checks where the lazy scanner disagreed with the full parser.
+    pub lazy_mismatches: usize,
+    /// Lines neither parser could route (answered `err` live), skipped.
+    pub malformed: usize,
+}
+
+impl ReplayReport {
+    /// True when every comparable request replayed bitwise-identical
+    /// and lazy/full parsing agreed on every checked line.
+    pub fn is_clean(&self) -> bool {
+        self.requests > 0 && self.matched == self.compared && self.lazy_mismatches == 0
+    }
+}
+
+/// Sink that concatenates chunk payloads in emission order — exactly
+/// the byte stream a [`SocketSink`](super::server) would have framed.
+struct CollectSink {
+    data: Vec<f32>,
+    tx: Sender<(Vec<f32>, Result<(), ServeError>)>,
+}
+
+impl ResponseSink for CollectSink {
+    fn chunk(&mut self, data: &[f32]) {
+        self.data.extend_from_slice(data);
+    }
+
+    fn done(&mut self, result: Result<(), ServeError>) {
+        let _ = self.tx.send((std::mem::take(&mut self.data), result));
+    }
+}
+
+/// Re-drive one lazily parsed request (deadline stripped) and block for
+/// its payload. Any failure — missing field, unknown route, refusal,
+/// engine error — collapses to `Err`, mirroring a live `err` frame.
+fn redrive(coord: &Coordinator, r: &LazyReq<'_>) -> Result<Vec<f32>, String> {
+    let robot = r.robot.ok_or("req has no robot")?;
+    let route = r.route.ok_or("req has no route")?;
+    let mut opts = SubmitOptions::default();
+    if let Some(c) = r.class {
+        opts.class = Some(QosClass::parse(c).ok_or_else(|| format!("unknown class '{c}'"))?);
+    }
+    let (tx, rx) = channel();
+    let sink = Box::new(CollectSink { data: Vec::new(), tx });
+    if route == "traj" {
+        let q0 = lazy::parse_f32_array(r.q0.ok_or("traj req has no q0")?)?;
+        let qd0 = lazy::parse_f32_array(r.qd0.ok_or("traj req has no qd0")?)?;
+        let tau = lazy::parse_f32_array(r.tau.ok_or("traj req has no tau")?)?;
+        let dt = r.dt.ok_or("traj req has no dt")?;
+        coord.submit_traj_sink(robot, TrajRequest { q0, qd0, tau, dt }, opts, sink);
+    } else {
+        let f = ArtifactFn::parse(route).ok_or_else(|| format!("unknown route '{route}'"))?;
+        let ops = lazy::parse_f32_matrix(r.ops.ok_or("step req has no ops")?)?;
+        coord.submit_to_sink(robot, f, ops, opts, sink);
+    }
+    let (data, result) = rx.recv().map_err(|_| "sink dropped without done".to_string())?;
+    result.map_err(|e| e.to_string())?;
+    Ok(data)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Field-by-field agreement between the lazy scan and the full parse of
+/// the same line (payload spans decoded and compared bitwise).
+fn agree(l: &LazyReq<'_>, full: &NetReq) -> Result<(), String> {
+    if l.id != full.id {
+        return Err("id differs".into());
+    }
+    if l.robot.unwrap_or("") != full.robot {
+        return Err("robot differs".into());
+    }
+    if l.route.unwrap_or("") != full.route {
+        return Err("route differs".into());
+    }
+    if l.class != full.class.as_deref() {
+        return Err("class differs".into());
+    }
+    if l.deadline_us != full.deadline_us {
+        return Err("deadline_us differs".into());
+    }
+    if l.dt.map(f64::to_bits) != full.dt.map(f64::to_bits) {
+        return Err("dt differs".into());
+    }
+    match (l.ops, &full.ops) {
+        (Some(span), Some(mat)) => {
+            let lm = lazy::parse_f32_matrix(span).map_err(|e| format!("ops: {e}"))?;
+            if lm.len() != mat.len() || lm.iter().zip(mat).any(|(a, b)| bits(a) != bits(b)) {
+                return Err("ops values differ".into());
+            }
+        }
+        (None, None) => {}
+        _ => return Err("ops presence differs".into()),
+    }
+    for (span, arr, name) in
+        [(l.q0, &full.q0, "q0"), (l.qd0, &full.qd0, "qd0"), (l.tau, &full.tau, "tau")]
+    {
+        match (span, arr) {
+            (Some(sp), Some(a)) => {
+                let lv = lazy::parse_f32_array(sp).map_err(|e| format!("{name}: {e}"))?;
+                if bits(&lv) != bits(a) {
+                    return Err(format!("{name} values differ"));
+                }
+            }
+            (None, None) => {}
+            _ => return Err(format!("{name} presence differs")),
+        }
+    }
+    Ok(())
+}
+
+/// Parse, re-drive, and verify one capture file. Errors are structural
+/// (unreadable file, bad hello, duplicate ids); per-request divergences
+/// land in the report instead.
+pub fn replay_log(path: &str) -> Result<ReplayReport, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let hello = lines.next().ok_or("log is empty")?;
+    let (spec, batch, window_us) = match Frame::parse(hello)? {
+        Frame::Hello { spec, batch, window_us } => (spec, batch, window_us),
+        other => return Err(format!("log does not start with a hello frame: {other:?}")),
+    };
+    let registry = RobotRegistry::from_cli_spec(&spec, batch)?;
+
+    let mut reqs: Vec<&str> = Vec::new();
+    let mut seen = BTreeSet::new();
+    let mut live: BTreeMap<u64, Live> = BTreeMap::new();
+    let mut report = ReplayReport::default();
+    for line in lines {
+        if let Ok(l) = LazyReq::scan(line) {
+            if l.typ == "req" {
+                if !seen.insert(l.id) {
+                    return Err(format!(
+                        "duplicate request id {} — replay expects single-connection captures",
+                        l.id
+                    ));
+                }
+                reqs.push(line);
+                continue;
+            }
+        }
+        match Frame::parse(line) {
+            Ok(f) => {
+                let Some(id) = f.id() else { continue };
+                let entry = live
+                    .entry(id)
+                    .or_insert_with(|| Live { chunks: Vec::new(), outcome: None });
+                match f {
+                    Frame::Chunk { data, .. } => entry.chunks.extend_from_slice(&data),
+                    Frame::Done { .. } => entry.outcome = Some(Out::Done),
+                    Frame::Rejected { .. } | Frame::Shed { .. } | Frame::Expired { .. } => {
+                        entry.outcome = Some(Out::Refused)
+                    }
+                    Frame::Err { .. } => entry.outcome = Some(Out::Errored),
+                    _ => {}
+                }
+            }
+            Err(_) => report.malformed += 1,
+        }
+    }
+
+    report.requests = reqs.len();
+    let coord = Coordinator::start_registry(&registry, window_us);
+    for raw in reqs {
+        let l = LazyReq::scan(raw).expect("req lines were lazily scanned once already");
+        if let Ok(Frame::Req(full)) = Frame::parse(raw) {
+            report.lazy_checked += 1;
+            if let Err(e) = agree(&l, &full) {
+                eprintln!("replay: lazy/full parse disagree on id {}: {e}", l.id);
+                report.lazy_mismatches += 1;
+            }
+        }
+        match live.get(&l.id) {
+            None => report.incomplete += 1,
+            Some(Live { outcome: None, .. }) => report.incomplete += 1,
+            Some(Live { outcome: Some(Out::Refused), .. }) => report.timing_skipped += 1,
+            Some(Live { outcome: Some(Out::Errored), .. }) => {
+                report.compared += 1;
+                match redrive(&coord, &l) {
+                    Err(_) => report.matched += 1,
+                    Ok(_) => eprintln!("replay: id {} errored live but replayed cleanly", l.id),
+                }
+            }
+            Some(Live { outcome: Some(Out::Done), chunks }) => {
+                report.compared += 1;
+                match redrive(&coord, &l) {
+                    Ok(data) if bits(&data) == bits(chunks) => report.matched += 1,
+                    Ok(data) => eprintln!(
+                        "replay: id {} payload diverged ({} replayed vs {} captured values)",
+                        l.id,
+                        data.len(),
+                        chunks.len()
+                    ),
+                    Err(e) => eprintln!("replay: id {} failed to replay: {e}", l.id),
+                }
+            }
+        }
+    }
+    coord.shutdown();
+    Ok(report)
+}
+
+/// `draco replay LOG` — exit 0 iff the capture replays clean.
+pub fn replay_cli(args: &Args) -> i32 {
+    let Some(path) = args.positional.first() else {
+        eprintln!("usage: draco replay LOG.jsonl");
+        return 2;
+    };
+    match replay_log(path) {
+        Ok(r) => {
+            println!(
+                "replay: {} requests — {}/{} replayed bitwise-identical, {} timing-dependent \
+                 refusals skipped, {} incomplete, lazy/full parse agreed on {}/{} lines, \
+                 {} malformed lines",
+                r.requests,
+                r.matched,
+                r.compared,
+                r.timing_skipped,
+                r.incomplete,
+                r.lazy_checked - r.lazy_mismatches,
+                r.lazy_checked,
+                r.malformed
+            );
+            if r.is_clean() {
+                println!("replay: OK");
+                0
+            } else {
+                eprintln!("replay: FAILED");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("replay: {e}");
+            1
+        }
+    }
+}

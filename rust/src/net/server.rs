@@ -1,0 +1,611 @@
+//! JSONL TCP front-end.
+//!
+//! One thread per accepted connection reads newline-delimited request
+//! frames, routes them through the [`Coordinator`]'s sink submit paths
+//! (so admission, QoS classes, deadlines, and circuit breakers apply
+//! exactly as for in-process callers), and a [`SocketSink`] writes the
+//! response event stream — `ack`, `chunk`…, `done`/refusal — straight
+//! back to the socket as the batcher produces it. Trajectory rows hit
+//! the wire mid-horizon; nothing is buffered server-side.
+//!
+//! Malformed traffic never kills a connection: an unparseable,
+//! non-UTF-8, or oversized line (cap [`MAX_LINE_BYTES`]) is answered
+//! with an `err` frame and the reader resynchronises at the next
+//! newline. Only socket EOF/errors end a connection.
+//!
+//! With `--tee PATH` the server appends every *inbound request line
+//! verbatim* and every *outbound frame* to a JSONL log headed by a
+//! `hello` frame — enough for `draco replay` to rebuild the registry,
+//! re-drive each request, and compare payloads bitwise (see
+//! [`super::replay`]).
+
+use super::frame::{self, Frame};
+use super::lazy::{self, LazyReq};
+use crate::coordinator::{
+    Coordinator, QosClass, ResponseSink, RobotRegistry, ServeError, SubmitOptions, TrajRequest,
+};
+use crate::runtime::ArtifactFn;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hard cap on one wire line. A 64-DoF, 1024-step trajectory request is
+/// ~1.5 MiB of decimal text, so 4 MiB leaves headroom; anything larger
+/// is answered with an `err` frame and skipped to the next newline.
+pub const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// Append-only tee log shared by every connection.
+struct Tee(Mutex<std::fs::File>);
+
+impl Tee {
+    fn append(&self, line: &str) {
+        let mut f = match self.0.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let _ = f.write_all(line.as_bytes());
+        let _ = f.write_all(b"\n");
+    }
+}
+
+/// Write half of one connection, shared between the reader thread (for
+/// `ack`/`err`) and the batcher workers (for `chunk`/`done`). The first
+/// socket write error latches `dead`, which streaming sinks observe via
+/// [`ResponseSink::alive`] to cancel mid-horizon work.
+struct Wire {
+    w: Mutex<TcpStream>,
+    dead: AtomicBool,
+    tee: Option<Arc<Tee>>,
+}
+
+impl Wire {
+    fn dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    fn send(&self, line: &str) {
+        if self.dead() {
+            return;
+        }
+        let mut w = match self.w.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let mut buf = Vec::with_capacity(line.len() + 1);
+        buf.extend_from_slice(line.as_bytes());
+        buf.push(b'\n');
+        if w.write_all(&buf).is_err() {
+            self.dead.store(true, Ordering::SeqCst);
+            return;
+        }
+        // Tee under the write lock so the log preserves wire order.
+        if let Some(t) = &self.tee {
+            t.append(line);
+        }
+    }
+}
+
+/// [`ResponseSink`] that frames batcher output onto the client socket.
+struct SocketSink {
+    wire: Arc<Wire>,
+    id: u64,
+    seq: u64,
+    /// `dyn_all` answers split into their natural q̈ | M⁻¹ | C segments,
+    /// one `chunk` frame each.
+    segments: Option<Vec<usize>>,
+}
+
+impl SocketSink {
+    fn new(wire: Arc<Wire>, id: u64, segments: Option<Vec<usize>>) -> SocketSink {
+        SocketSink { wire, id, seq: 0, segments }
+    }
+
+    fn emit(&mut self, data: &[f32]) {
+        let line = frame::chunk_line(self.id, self.seq, data);
+        self.seq += 1;
+        self.wire.send(&line);
+    }
+}
+
+impl ResponseSink for SocketSink {
+    fn accepted(&mut self) {
+        self.wire.send(&frame::ack_line(self.id));
+    }
+
+    fn chunk(&mut self, data: &[f32]) {
+        match self.segments.clone() {
+            Some(segs) => {
+                let mut off = 0;
+                for len in segs {
+                    let end = (off + len).min(data.len());
+                    self.emit(&data[off..end]);
+                    off = end;
+                }
+                if off < data.len() {
+                    self.emit(&data[off..]);
+                }
+            }
+            None => self.emit(data),
+        }
+    }
+
+    fn done(&mut self, result: Result<(), ServeError>) {
+        match result {
+            Ok(()) => self.wire.send(&frame::done_line(self.id, self.seq)),
+            Err(e) => self.wire.send(&frame::serve_error_line(self.id, &e)),
+        }
+    }
+
+    fn alive(&self) -> bool {
+        !self.wire.dead()
+    }
+}
+
+/// Bounded line reads: the distinction the fuzz tests care about.
+pub(crate) enum LineRead {
+    /// Peer closed the socket cleanly.
+    Eof,
+    /// One complete line (newline stripped) within the cap.
+    Line,
+    /// Line exceeded the cap; the remainder was discarded up to the
+    /// next newline so the stream is resynchronised.
+    Oversized,
+}
+
+/// Read one `\n`-terminated line into `buf`, never buffering more than
+/// `cap + 1` bytes of a runaway line.
+pub(crate) fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    let n = r.by_ref().take(cap as u64 + 1).read_until(b'\n', buf)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        return Ok(LineRead::Line);
+    }
+    if buf.len() <= cap {
+        // EOF before a newline: treat the tail as a final line.
+        return Ok(LineRead::Line);
+    }
+    loop {
+        let (skip, found) = {
+            let avail = r.fill_buf()?;
+            if avail.is_empty() {
+                return Ok(LineRead::Oversized);
+            }
+            match avail.iter().position(|&c| c == b'\n') {
+                Some(p) => (p + 1, true),
+                None => (avail.len(), false),
+            }
+        };
+        r.consume(skip);
+        if found {
+            return Ok(LineRead::Oversized);
+        }
+    }
+}
+
+/// Listening JSONL server. [`NetServer::stop`] unblocks the accept loop
+/// and joins every connection thread.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// serve `coord` on it. `dims` maps robot name → DoF (for `dyn_all`
+    /// segment framing); `spec`/`batch`/`window_us` describe the
+    /// serving config and head the tee log as a `hello` frame.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        dims: BTreeMap<String, usize>,
+        listen: &str,
+        tee: Option<&str>,
+        spec: &str,
+        batch: usize,
+        window_us: u64,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let tee = match tee {
+            Some(path) => {
+                let t = Tee(Mutex::new(std::fs::File::create(path)?));
+                t.append(&frame::hello_line(spec, batch, window_us));
+                Some(Arc::new(t))
+            }
+            None => None,
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            let mut conns = Vec::new();
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { break };
+                let coord = Arc::clone(&coord);
+                let dims = dims.clone();
+                let tee = tee.clone();
+                conns.push(std::thread::spawn(move || serve_conn(&coord, &dims, tee, stream)));
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(NetServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join all connection threads. Connections end
+    /// when their client disconnects, so call this after clients close.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Self-connect to unblock the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(
+    coord: &Coordinator,
+    dims: &BTreeMap<String, usize>,
+    tee: Option<Arc<Tee>>,
+    stream: TcpStream,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let wire = Arc::new(Wire { w: Mutex::new(stream), dead: AtomicBool::new(false), tee });
+    let mut reader = BufReader::new(read_half);
+    let mut buf = Vec::with_capacity(4096);
+    loop {
+        if wire.dead() {
+            return;
+        }
+        buf.clear();
+        match read_line_bounded(&mut reader, &mut buf, MAX_LINE_BYTES) {
+            Ok(LineRead::Eof) | Err(_) => return,
+            Ok(LineRead::Oversized) => {
+                wire.send(&frame::err_line(
+                    0,
+                    &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                ));
+                continue;
+            }
+            Ok(LineRead::Line) => {}
+        }
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+        if buf.iter().all(u8::is_ascii_whitespace) {
+            continue;
+        }
+        let Ok(line) = core::str::from_utf8(&buf) else {
+            // Not teed: an invalid-UTF-8 line would corrupt the JSONL
+            // log for replay.
+            wire.send(&frame::err_line(0, "request line is not valid UTF-8"));
+            continue;
+        };
+        if let Some(t) = &wire.tee {
+            t.append(line);
+        }
+        handle_line(coord, dims, &wire, line);
+    }
+}
+
+fn handle_line(
+    coord: &Coordinator,
+    dims: &BTreeMap<String, usize>,
+    wire: &Arc<Wire>,
+    line: &str,
+) {
+    let req = match LazyReq::scan(line) {
+        Ok(r) => r,
+        Err(e) => {
+            wire.send(&frame::err_line(0, &format!("bad frame: {e}")));
+            return;
+        }
+    };
+    let id = req.id;
+    let fail = |msg: &str| wire.send(&frame::err_line(id, msg));
+    if req.typ != "req" {
+        fail(&format!("unsupported frame type '{}'", req.typ));
+        return;
+    }
+    let Some(robot) = req.robot else {
+        fail("req has no robot");
+        return;
+    };
+    let Some(route) = req.route else {
+        fail("req has no route");
+        return;
+    };
+    let mut opts = SubmitOptions::default();
+    if let Some(c) = req.class {
+        match QosClass::parse(c) {
+            Some(cl) => opts.class = Some(cl),
+            None => {
+                fail(&format!("unknown class '{c}'"));
+                return;
+            }
+        }
+    }
+    opts.deadline_us = req.deadline_us;
+    if route == "traj" {
+        let (Some(q0), Some(qd0), Some(tau), Some(dt)) = (req.q0, req.qd0, req.tau, req.dt)
+        else {
+            fail("traj req needs q0, qd0, tau, dt");
+            return;
+        };
+        let parse = |span: &str, what: &str| match lazy::parse_f32_array(span) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                fail(&format!("{what}: {e}"));
+                None
+            }
+        };
+        let (Some(q0), Some(qd0), Some(tau)) =
+            (parse(q0, "q0"), parse(qd0, "qd0"), parse(tau, "tau"))
+        else {
+            return;
+        };
+        let sink = SocketSink::new(Arc::clone(wire), id, None);
+        coord.submit_traj_sink(robot, TrajRequest { q0, qd0, tau, dt }, opts, Box::new(sink));
+    } else {
+        let Some(f) = ArtifactFn::parse(route) else {
+            fail(&format!("unknown route '{route}'"));
+            return;
+        };
+        let Some(span) = req.ops else {
+            fail("step req has no ops");
+            return;
+        };
+        let ops = match lazy::parse_f32_matrix(span) {
+            Ok(m) => m,
+            Err(e) => {
+                fail(&format!("ops: {e}"));
+                return;
+            }
+        };
+        let segments = if f == ArtifactFn::DynAll {
+            dims.get(robot).map(|&n| vec![n, n * n, n])
+        } else {
+            None
+        };
+        let sink = SocketSink::new(Arc::clone(wire), id, segments);
+        coord.submit_to_sink(robot, f, ops, opts, Box::new(sink));
+    }
+}
+
+/// Blocking line-oriented client for tests, the self-drive smoke, and
+/// the loadgen network mode.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    /// Connect to a [`NetServer`].
+    pub fn connect(addr: SocketAddr) -> std::io::Result<NetClient> {
+        NetClient::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Wrap an existing stream (e.g. the read half of a cloned socket
+    /// when sending and receiving happen on different threads).
+    pub fn from_stream(stream: TcpStream) -> std::io::Result<NetClient> {
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(NetClient { reader, writer: stream })
+    }
+
+    /// Send one raw line (newline appended).
+    pub fn send_line(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")
+    }
+
+    /// Read and parse the next frame, skipping blank lines.
+    pub fn read_frame(&mut self) -> std::io::Result<Frame> {
+        use std::io::{Error, ErrorKind};
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            match read_line_bounded(&mut self.reader, &mut buf, MAX_LINE_BYTES)? {
+                LineRead::Eof => {
+                    return Err(Error::new(ErrorKind::UnexpectedEof, "server closed connection"))
+                }
+                LineRead::Oversized => {
+                    return Err(Error::new(ErrorKind::InvalidData, "oversized frame"))
+                }
+                LineRead::Line => {}
+            }
+            let line = core::str::from_utf8(&buf)
+                .map_err(|_| Error::new(ErrorKind::InvalidData, "frame is not UTF-8"))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            return Frame::parse(line).map_err(|e| Error::new(ErrorKind::InvalidData, e));
+        }
+    }
+}
+
+/// `ack`-wait helper shared by the smoke driver.
+fn expect_ack(c: &mut NetClient, id: u64) -> Result<(), String> {
+    match c.read_frame().map_err(|e| e.to_string())? {
+        Frame::Ack { id: got } if got == id => Ok(()),
+        other => Err(format!("expected ack for id {id}, got {other:?}")),
+    }
+}
+
+/// Read `chunk` frames until `done`, returning the chunks in order plus
+/// the delay to the first chunk. Refusal or `err` frames become errors.
+fn read_stream(c: &mut NetClient, id: u64) -> Result<(Vec<Vec<f32>>, Duration), String> {
+    let t0 = Instant::now();
+    let mut first = Duration::ZERO;
+    let mut chunks: Vec<Vec<f32>> = Vec::new();
+    loop {
+        match c.read_frame().map_err(|e| e.to_string())? {
+            Frame::Chunk { id: got, seq, data } if got == id => {
+                if seq != chunks.len() as u64 {
+                    return Err(format!("id {id}: chunk seq {seq}, expected {}", chunks.len()));
+                }
+                if chunks.is_empty() {
+                    first = t0.elapsed();
+                }
+                chunks.push(data);
+            }
+            Frame::Done { id: got, chunks: n } if got == id => {
+                if n != chunks.len() as u64 {
+                    return Err(format!("id {id}: done says {n} chunks, saw {}", chunks.len()));
+                }
+                return Ok((chunks, first));
+            }
+            other => return Err(format!("id {id}: unexpected frame {other:?}")),
+        }
+    }
+}
+
+/// End-to-end smoke of the wire protocol against a live server: per
+/// robot it checks a step route, the three-segment `dyn_all` framing, a
+/// mid-horizon-streamed trajectory (compared bitwise against the
+/// in-process rollout), and a deadline-0 expiry; then it verifies that
+/// unknown routes and robots produce `err` frames without dropping the
+/// connection. Returns a process exit code.
+pub fn self_drive(
+    addr: SocketAddr,
+    registry: &RobotRegistry,
+    coord: &Coordinator,
+    dt: f64,
+) -> i32 {
+    match drive(addr, registry, coord, dt) {
+        Ok(()) => {
+            println!("self-drive: OK");
+            0
+        }
+        Err(e) => {
+            eprintln!("self-drive: FAILED: {e}");
+            1
+        }
+    }
+}
+
+fn drive(
+    addr: SocketAddr,
+    registry: &RobotRegistry,
+    coord: &Coordinator,
+    dt: f64,
+) -> Result<(), String> {
+    let io = |e: std::io::Error| e.to_string();
+    let mut c = NetClient::connect(addr).map_err(io)?;
+    let mut rng = Rng::new(0x5eed);
+    let mut id = 0u64;
+    let names = registry.names();
+    for name in &names {
+        let n = registry.get(name).ok_or("registry lookup failed")?.robot.dof();
+        let mut vecf =
+            |len: usize| (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect::<Vec<f32>>();
+
+        // Step route: one chunk of N.
+        id += 1;
+        let ops = vec![vecf(n), vecf(n), vecf(n)];
+        c.send_line(&frame::req_step_line(id, name, "fd", None, None, &ops)).map_err(io)?;
+        expect_ack(&mut c, id)?;
+        let (chunks, _) = read_stream(&mut c, id)?;
+        if chunks.len() != 1 || chunks[0].len() != n {
+            return Err(format!("{name} fd: expected 1 chunk of {n} values"));
+        }
+
+        // dyn_all: three segments q̈ (N) | M⁻¹ (N²) | C (N).
+        id += 1;
+        let ops = vec![vecf(n), vecf(n), vecf(n)];
+        c.send_line(&frame::req_step_line(id, name, "dynall", None, None, &ops)).map_err(io)?;
+        expect_ack(&mut c, id)?;
+        let (chunks, _) = read_stream(&mut c, id)?;
+        let lens: Vec<usize> = chunks.iter().map(Vec::len).collect();
+        if lens != [n, n * n, n] {
+            return Err(format!("{name} dyn_all: segment lengths {lens:?}, expected [{n}, {}, {n}]", n * n));
+        }
+
+        // Trajectory: H rows streamed mid-horizon, bitwise-identical to
+        // the buffered in-process rollout.
+        let h = 32;
+        id += 1;
+        let (q0, qd0, tau) = (vecf(n), vecf(n), vecf(h * n));
+        c.send_line(&frame::req_traj_line(id, name, None, None, &q0, &qd0, &tau, dt))
+            .map_err(io)?;
+        expect_ack(&mut c, id)?;
+        let t0 = Instant::now();
+        let (rows, first) = read_stream(&mut c, id)?;
+        let total = t0.elapsed();
+        if rows.len() != h {
+            return Err(format!("{name} traj: {} rows, expected {h}", rows.len()));
+        }
+        let legacy = coord
+            .submit_traj(name, TrajRequest { q0, qd0, tau, dt })
+            .recv()
+            .map_err(|_| "traj channel closed")?
+            .map_err(|e| e.to_string())?;
+        for (t, row) in rows.iter().enumerate() {
+            if row.len() != 2 * n {
+                return Err(format!("{name} traj row {t}: {} values, expected {}", row.len(), 2 * n));
+            }
+            for j in 0..n {
+                let (wq, wqd) = (legacy[t * n + j], legacy[(h + t) * n + j]);
+                if row[j].to_bits() != wq.to_bits() || row[n + j].to_bits() != wqd.to_bits() {
+                    return Err(format!("{name} traj row {t} differs from in-process rollout"));
+                }
+            }
+        }
+        println!(
+            "  {name}: traj h={h} streamed over TCP, first row after {first:?} \
+             (full horizon after {total:?}), rows bitwise == in-process rollout"
+        );
+
+        // Deadline 0: admitted (ack) then expired at batch formation.
+        id += 1;
+        let ops = vec![vecf(n), vecf(n), vecf(n)];
+        c.send_line(&frame::req_step_line(id, name, "fd", Some("bulk"), Some(0), &ops))
+            .map_err(io)?;
+        expect_ack(&mut c, id)?;
+        match c.read_frame().map_err(io)? {
+            Frame::Expired { id: got, deadline_us: 0, .. } if got == id => {}
+            other => {
+                return Err(format!("{name}: deadline-0 req answered {other:?}, expected expired"))
+            }
+        }
+    }
+
+    // Malformed traffic keeps the connection alive.
+    let first = names.first().ok_or("empty registry")?;
+    id += 1;
+    c.send_line(&frame::req_step_line(id, first, "warp", None, None, &[vec![0.0]]))
+        .map_err(io)?;
+    match c.read_frame().map_err(io)? {
+        Frame::Err { id: got, .. } if got == id => {}
+        other => return Err(format!("unknown route answered {other:?}, expected err")),
+    }
+    id += 1;
+    c.send_line(&frame::req_step_line(id, "no-such-robot", "fd", None, None, &[vec![0.0]]))
+        .map_err(io)?;
+    match c.read_frame().map_err(io)? {
+        Frame::Err { id: got, .. } if got == id => {}
+        other => return Err(format!("unknown robot answered {other:?}, expected err")),
+    }
+    println!("  wire: deadline expiry, unknown route/robot all answered in-band");
+    Ok(())
+}

@@ -92,4 +92,38 @@ pub trait DynamicsEngine: Send {
         tau: &[f32],
         dt: f64,
     ) -> Result<Vec<f32>, EngineError>;
+    /// Streaming twin of [`DynamicsEngine::rollout`]: `emit` is called
+    /// once per integration step with the encoded row `q_t ‖ q̇_t`
+    /// (length `2·N`) **as the integrator produces it** — the egress
+    /// path the network layer chunks on. Returning `false` from `emit`
+    /// cancels the remaining horizon (the engine state still advances
+    /// only through the emitted steps). Returns the number of steps
+    /// emitted.
+    ///
+    /// The default implementation runs the full [`DynamicsEngine::rollout`]
+    /// and replays its rows (correct but unstreamed); the CPU engines
+    /// override it with true per-step emission, and reimplement
+    /// `rollout` on top of it so both entry points are bitwise
+    /// identical by construction.
+    fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        let n = self.n();
+        let flat = self.rollout(q0, qd0, tau, dt)?;
+        let h = flat.len() / (2 * n);
+        let mut row = vec![0.0f32; 2 * n];
+        for t in 0..h {
+            row[..n].copy_from_slice(&flat[t * n..(t + 1) * n]);
+            row[n..].copy_from_slice(&flat[(h + t) * n..(h + t + 1) * n]);
+            if !emit(&row) {
+                return Ok(t + 1);
+            }
+        }
+        Ok(h)
+    }
 }

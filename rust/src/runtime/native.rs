@@ -230,6 +230,8 @@ impl NativeEngine {
     /// ([`step_semi_implicit_ws`], i.e. O(N) ABA + semi-implicit Euler).
     /// `tau` holds H torque rows of length N (row-major); the response is
     /// flat f32 of length `2·H·N`: all H q-rows, then all H q̇-rows.
+    /// Built on [`NativeEngine::rollout_stream`], so the buffered and
+    /// streamed egress are bitwise identical by construction.
     pub fn rollout(
         &mut self,
         q0: &[f32],
@@ -239,11 +241,38 @@ impl NativeEngine {
     ) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
         let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        let mut out = vec![0.0f32; 2 * h * n];
+        let mut t = 0usize;
+        self.rollout_stream(q0, qd0, tau, dt, &mut |row| {
+            out[t * n..(t + 1) * n].copy_from_slice(&row[..n]);
+            out[(h + t) * n..(h + t + 1) * n].copy_from_slice(&row[n..]);
+            t += 1;
+            true
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming rollout: `emit` receives the encoded row `q_t ‖ q̇_t`
+    /// (length `2·N`) after **each** integration step — the row leaves
+    /// the engine before step `t+1` runs, which is what lets the network
+    /// layer flush trajectory chunks mid-horizon. `emit` returning
+    /// `false` cancels the remaining steps. Returns the emitted count.
+    pub fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
         decode(q0, &mut self.q);
         decode(qd0, &mut self.qd);
         let mut state =
             State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
-        let mut out = vec![0.0f32; 2 * h * n];
+        let mut row = vec![0.0f32; 2 * n];
+        let mut emitted = h;
         for t in 0..h {
             decode(&tau[t * n..(t + 1) * n], &mut self.u);
             step_semi_implicit_ws(
@@ -255,12 +284,16 @@ impl NativeEngine {
                 None,
                 dt,
             );
-            encode(&state.q, &mut out[t * n..(t + 1) * n]);
-            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+            encode(&state.q, &mut row[..n]);
+            encode(&state.qd, &mut row[n..]);
+            if !emit(&row) {
+                emitted = t + 1;
+                break;
+            }
         }
         self.q = state.q;
         self.qd = state.qd;
-        Ok(out)
+        Ok(emitted)
     }
 }
 
@@ -292,6 +325,16 @@ impl DynamicsEngine for NativeEngine {
         dt: f64,
     ) -> Result<Vec<f32>, EngineError> {
         NativeEngine::rollout(self, q0, qd0, tau, dt)
+    }
+    fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        NativeEngine::rollout_stream(self, q0, qd0, tau, dt, emit)
     }
 }
 
@@ -390,6 +433,52 @@ mod tests {
             cases.push((s, uu));
         }
         (vec![q, qd, u], cases)
+    }
+
+    /// Streamed rows are bitwise identical to the buffered rollout, and
+    /// an emit callback returning `false` cancels the remaining horizon
+    /// mid-flight — the control actually returns before step H runs,
+    /// which is the property the chunked network egress relies on.
+    #[test]
+    fn rollout_stream_matches_buffered_and_cancels_mid_horizon() {
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let h = 12;
+        let mut rng = Rng::new(730);
+        let s0 = State::random(&robot, &mut rng);
+        let q0: Vec<f32> = s0.q.iter().map(|&x| x as f32).collect();
+        let qd0: Vec<f32> = s0.qd.iter().map(|&x| x as f32).collect();
+        let tau: Vec<f32> = rng.vec_range(h * n, -2.0, 2.0).iter().map(|&x| x as f32).collect();
+        let dt = 1e-3;
+        let mut eng = NativeEngine::new(robot.clone(), ArtifactFn::Fd, 4);
+        let flat = eng.rollout(&q0, &qd0, &tau, dt).expect("buffered rollout");
+        let mut eng2 = NativeEngine::new(robot.clone(), ArtifactFn::Fd, 4);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        let emitted = eng2
+            .rollout_stream(&q0, &qd0, &tau, dt, &mut |row| {
+                rows.push(row.to_vec());
+                true
+            })
+            .expect("streamed rollout");
+        assert_eq!(emitted, h);
+        assert_eq!(rows.len(), h);
+        for (t, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), 2 * n);
+            assert_eq!(&row[..n], &flat[t * n..(t + 1) * n], "q row {t}");
+            assert_eq!(&row[n..], &flat[(h + t) * n..(h + t + 1) * n], "qd row {t}");
+        }
+        // Cancellation: stop after 3 rows; exactly 3 must have been
+        // emitted (no step 4 ran before control returned).
+        let mut eng3 = NativeEngine::new(robot, ArtifactFn::Fd, 4);
+        let mut seen = 0usize;
+        let emitted = eng3
+            .rollout_stream(&q0, &qd0, &tau, dt, &mut |_| {
+                seen += 1;
+                seen < 3
+            })
+            .expect("cancelled rollout");
+        assert_eq!(emitted, 3);
+        assert_eq!(seen, 3);
     }
 
     #[test]

@@ -256,11 +256,36 @@ impl QIntEngine {
     ) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
         let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        let mut out = vec![0.0f32; 2 * h * n];
+        let mut t = 0usize;
+        self.rollout_stream(q0, qd0, tau, dt, &mut |row| {
+            out[t * n..(t + 1) * n].copy_from_slice(&row[..n]);
+            out[(h + t) * n..(h + t + 1) * n].copy_from_slice(&row[n..]);
+            t += 1;
+            true
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming rollout on the integer lane — per-step `q_t ‖ q̇_t`
+    /// emission with the same contract as
+    /// [`super::NativeEngine::rollout_stream`].
+    pub fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
         decode(q0, &mut self.q);
         decode(qd0, &mut self.qd);
         let mut state =
             State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
-        let mut out = vec![0.0f32; 2 * h * n];
+        let mut row = vec![0.0f32; 2 * n];
+        let mut emitted = h;
         for t in 0..h {
             decode(&tau[t * n..(t + 1) * n], &mut self.u);
             self.ws.fd_dd_into(
@@ -272,12 +297,16 @@ impl QIntEngine {
                 &mut self.out_vec,
             );
             semi_implicit_update(&mut state, &self.out_vec, dt);
-            encode(&state.q, &mut out[t * n..(t + 1) * n]);
-            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+            encode(&state.q, &mut row[..n]);
+            encode(&state.qd, &mut row[n..]);
+            if !emit(&row) {
+                emitted = t + 1;
+                break;
+            }
         }
         self.q = state.q;
         self.qd = state.qd;
-        Ok(out)
+        Ok(emitted)
     }
 }
 
@@ -309,6 +338,16 @@ impl DynamicsEngine for QIntEngine {
         dt: f64,
     ) -> Result<Vec<f32>, EngineError> {
         QIntEngine::rollout(self, q0, qd0, tau, dt)
+    }
+    fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        QIntEngine::rollout_stream(self, q0, qd0, tau, dt, emit)
     }
 }
 

@@ -299,11 +299,36 @@ impl QuantEngine {
     ) -> Result<Vec<f32>, EngineError> {
         let n = self.n;
         let h = validate_rollout(q0, qd0, tau, dt, n)?;
+        let mut out = vec![0.0f32; 2 * h * n];
+        let mut t = 0usize;
+        self.rollout_stream(q0, qd0, tau, dt, &mut |row| {
+            out[t * n..(t + 1) * n].copy_from_slice(&row[..n]);
+            out[(h + t) * n..(h + t + 1) * n].copy_from_slice(&row[n..]);
+            t += 1;
+            true
+        })?;
+        Ok(out)
+    }
+
+    /// Streaming rollout on the quantized lane — per-step `q_t ‖ q̇_t`
+    /// emission with the same contract as
+    /// [`super::NativeEngine::rollout_stream`].
+    pub fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        let n = self.n;
+        let h = validate_rollout(q0, qd0, tau, dt, n)?;
         decode(q0, &mut self.q);
         decode(qd0, &mut self.qd);
         let mut state =
             State { q: std::mem::take(&mut self.q), qd: std::mem::take(&mut self.qd) };
-        let mut out = vec![0.0f32; 2 * h * n];
+        let mut row = vec![0.0f32; 2 * n];
+        let mut emitted = h;
         for t in 0..h {
             decode(&tau[t * n..(t + 1) * n], &mut self.u);
             self.ws.fd_into(
@@ -315,12 +340,16 @@ impl QuantEngine {
                 &mut self.out_vec,
             );
             semi_implicit_update(&mut state, &self.out_vec, dt);
-            encode(&state.q, &mut out[t * n..(t + 1) * n]);
-            encode(&state.qd, &mut out[(h + t) * n..(h + t + 1) * n]);
+            encode(&state.q, &mut row[..n]);
+            encode(&state.qd, &mut row[n..]);
+            if !emit(&row) {
+                emitted = t + 1;
+                break;
+            }
         }
         self.q = state.q;
         self.qd = state.qd;
-        Ok(out)
+        Ok(emitted)
     }
 }
 
@@ -352,6 +381,16 @@ impl DynamicsEngine for QuantEngine {
         dt: f64,
     ) -> Result<Vec<f32>, EngineError> {
         QuantEngine::rollout(self, q0, qd0, tau, dt)
+    }
+    fn rollout_stream(
+        &mut self,
+        q0: &[f32],
+        qd0: &[f32],
+        tau: &[f32],
+        dt: f64,
+        emit: &mut dyn FnMut(&[f32]) -> bool,
+    ) -> Result<usize, EngineError> {
+        QuantEngine::rollout_stream(self, q0, qd0, tau, dt, emit)
     }
 }
 

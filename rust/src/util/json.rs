@@ -3,7 +3,8 @@
 //! Substrate module: the vendored crate set has no `serde`/`serde_json`
 //! (offline environment), so robot descriptions, configs and result dumps
 //! go through this self-contained implementation. Supports the full JSON
-//! grammar (RFC 8259) minus `\u` surrogate-pair edge cases beyond the BMP.
+//! grammar (RFC 8259), including `\u` surrogate-pair decoding beyond the
+//! BMP (a lone or mismatched surrogate decodes to U+FFFD).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -332,8 +333,43 @@ impl<'a> Parser<'a> {
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            if (0xD800..=0xDBFF).contains(&cp) {
+                                // High surrogate: combine with an
+                                // immediately following \uDC00–\uDFFF low
+                                // surrogate into one supplementary-plane
+                                // scalar (RFC 8259 §7). A lone or
+                                // mismatched surrogate decodes to U+FFFD
+                                // without consuming what follows.
+                                let lo = if self.i + 10 < self.b.len()
+                                    && self.b[self.i + 5] == b'\\'
+                                    && self.b[self.i + 6] == b'u'
+                                {
+                                    std::str::from_utf8(&self.b[self.i + 7..self.i + 11])
+                                        .ok()
+                                        .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                        .filter(|lo| (0xDC00..=0xDFFF).contains(lo))
+                                } else {
+                                    None
+                                };
+                                match lo {
+                                    Some(lo) => {
+                                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                        self.i += 10;
+                                    }
+                                    None => {
+                                        s.push('\u{fffd}');
+                                        self.i += 4;
+                                    }
+                                }
+                            } else if (0xDC00..=0xDFFF).contains(&cp) {
+                                // Unpaired low surrogate.
+                                s.push('\u{fffd}');
+                                self.i += 4;
+                            } else {
+                                s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -441,6 +477,41 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_beyond_the_bmp() {
+        // U+1F600 via its UTF-16 surrogate pair, lower- and uppercase hex.
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("\u{1f600}".into()));
+        assert_eq!(
+            Json::parse("\"x\\uD83D\\uDE00y\"").unwrap(),
+            Json::Str("x\u{1f600}y".into())
+        );
+        // U+10000, the first supplementary-plane scalar.
+        assert_eq!(Json::parse("\"\\ud800\\udc00\"").unwrap(), Json::Str("\u{10000}".into()));
+        // Lone high (mid-string and at end-of-string), lone low, and a
+        // high followed by a non-surrogate escape all decode to U+FFFD
+        // without consuming the data after them.
+        assert_eq!(Json::parse("\"\\ud83dZ\"").unwrap(), Json::Str("\u{fffd}Z".into()));
+        assert_eq!(Json::parse("\"\\ud800\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(Json::parse("\"\\ude00\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(
+            Json::parse("\"\\ud83d\\u0041\"").unwrap(),
+            Json::Str("\u{fffd}A".into())
+        );
+    }
+
+    #[test]
+    fn escape_round_trips_astral_text() {
+        // Serialized astral scalars are emitted as literal UTF-8 and must
+        // survive dump → parse unchanged; parsing the escaped spelling
+        // must agree with parsing the literal spelling.
+        let v = Json::Str("mixed \u{1f600} \u{10abcd} text \"q\"\n".into());
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::parse("\"\u{1f600}\"").unwrap()
+        );
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Wire-level integration tests for the streaming JSONL front-end:
+//! malformed-frame handling (every bad line is answered in-band with an
+//! `err` frame and the connection survives), chunked response streaming
+//! (ack < chunks < done, contiguous sequence numbers, bitwise agreement
+//! with the in-process API), and record/replay (a `--tee` capture
+//! re-executes bitwise-identical through `replay_log`).
+
+use draco::coordinator::{Coordinator, RobotRegistry};
+use draco::net::{replay_log, Frame, NetClient, NetServer, MAX_LINE_BYTES};
+use draco::net::frame::{req_step_line, req_traj_line};
+use draco::coordinator::TrajRequest;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Bring up a server over a fresh single-robot coordinator; returns the
+/// server, a coordinator handle for in-process cross-checks, and N.
+fn start_server(tee: Option<&str>) -> (NetServer, Arc<Coordinator>, usize) {
+    let registry = RobotRegistry::from_cli_spec("iiwa", 4).unwrap();
+    let n = registry.get("iiwa").unwrap().robot.dof();
+    let coord = Arc::new(Coordinator::start_registry(&registry, 200));
+    let dims: BTreeMap<String, usize> = [("iiwa".to_string(), n)].into_iter().collect();
+    let server =
+        NetServer::start(Arc::clone(&coord), dims, "127.0.0.1:0", tee, "iiwa", 4, 200).unwrap();
+    (server, coord, n)
+}
+
+fn ops(n: usize, v: f32) -> Vec<Vec<f32>> {
+    vec![vec![v; n], vec![0.0; n], vec![0.0; n]]
+}
+
+fn expect_err_for(client: &mut NetClient, id: u64) {
+    match client.read_frame().unwrap() {
+        Frame::Err { id: got, msg } => assert_eq!(got, id, "err for wrong id: {msg}"),
+        other => panic!("expected err frame for id {id}, got {other:?}"),
+    }
+}
+
+/// Read ack + chunks + done for `id`; returns the chunks in order.
+fn read_ok_stream(client: &mut NetClient, id: u64) -> Vec<Vec<f32>> {
+    match client.read_frame().unwrap() {
+        Frame::Ack { id: got } => assert_eq!(got, id),
+        other => panic!("expected ack for id {id}, got {other:?}"),
+    }
+    let mut chunks = Vec::new();
+    loop {
+        match client.read_frame().unwrap() {
+            Frame::Chunk { id: got, seq, data } => {
+                assert_eq!(got, id);
+                assert_eq!(seq, chunks.len() as u64, "chunk seq must be contiguous");
+                chunks.push(data);
+            }
+            Frame::Done { id: got, chunks: count } => {
+                assert_eq!(got, id);
+                assert_eq!(count, chunks.len() as u64, "done must name the chunk count");
+                return chunks;
+            }
+            other => panic!("unexpected frame for id {id}: {other:?}"),
+        }
+    }
+}
+
+/// Every malformed line — truncated JSON, binary garbage, unknown
+/// route/robot/class, wrong frame type, oversized line — is answered
+/// with an `err` frame, and the same connection then serves a clean
+/// request. Nothing hangs, nothing disconnects.
+#[test]
+fn malformed_frames_are_answered_in_band_and_the_connection_survives() {
+    let (server, _coord, n) = start_server(None);
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    let mut client = NetClient::from_stream(raw.try_clone().unwrap()).unwrap();
+
+    // Truncated line (unterminated object).
+    raw.write_all(b"{\"id\":1,\"type\":\"req\"\n").unwrap();
+    expect_err_for(&mut client, 0);
+
+    // Binary garbage: not UTF-8.
+    raw.write_all(b"{\"id\":2,\xff\xfe}\n").unwrap();
+    expect_err_for(&mut client, 0);
+
+    // Valid JSON, wrong frame type.
+    raw.write_all(b"{\"id\":3,\"type\":\"ack\"}\n").unwrap();
+    expect_err_for(&mut client, 3);
+
+    // Unknown route / robot / class — the id comes back in the err.
+    client.send_line(&req_step_line(4, "iiwa", "warp", None, None, &ops(n, 0.1))).unwrap();
+    expect_err_for(&mut client, 4);
+    client.send_line(&req_step_line(5, "r2d2", "fd", None, None, &ops(n, 0.1))).unwrap();
+    expect_err_for(&mut client, 5);
+    client
+        .send_line(&req_step_line(6, "iiwa", "fd", Some("warp"), None, &ops(n, 0.1)))
+        .unwrap();
+    expect_err_for(&mut client, 6);
+
+    // Missing payload.
+    raw.write_all(b"{\"id\":7,\"robot\":\"iiwa\",\"route\":\"fd\",\"type\":\"req\"}\n").unwrap();
+    expect_err_for(&mut client, 7);
+
+    // Oversized line: capped, discarded to the next newline, answered.
+    let mut big = vec![b'a'; MAX_LINE_BYTES + 16];
+    big.push(b'\n');
+    raw.write_all(&big).unwrap();
+    expect_err_for(&mut client, 0);
+
+    // The connection still works.
+    client.send_line(&req_step_line(8, "iiwa", "fd", None, None, &ops(n, 0.1))).unwrap();
+    let chunks = read_ok_stream(&mut client, 8);
+    assert_eq!(chunks.len(), 1);
+    assert_eq!(chunks[0].len(), n);
+    assert!(chunks[0].iter().all(|x| x.is_finite()));
+
+    drop(client);
+    drop(raw);
+    server.stop();
+}
+
+/// Trajectory responses stream one `q_t ‖ q̇_t` row per chunk, in
+/// order, and the concatenation is bitwise identical to the buffered
+/// in-process rollout; `dyn_all` splits into its three segments.
+#[test]
+fn streamed_responses_are_chunked_in_order_and_bitwise_identical() {
+    let (server, coord, n) = start_server(None);
+    let mut client = NetClient::connect(server.addr()).unwrap();
+
+    let h = 12;
+    let q0 = vec![0.2f32; n];
+    let qd0 = vec![-0.1f32; n];
+    let tau: Vec<f32> = (0..h * n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+    client
+        .send_line(&req_traj_line(1, "iiwa", None, None, &q0, &qd0, &tau, 1e-3))
+        .unwrap();
+    let rows = read_ok_stream(&mut client, 1);
+    assert_eq!(rows.len(), h, "one chunk per integrated row");
+    let legacy = coord
+        .submit_traj("iiwa", TrajRequest { q0, qd0, tau, dt: 1e-3 })
+        .recv()
+        .unwrap()
+        .unwrap();
+    for (t, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), 2 * n);
+        for j in 0..n {
+            assert_eq!(row[j].to_bits(), legacy[t * n + j].to_bits(), "q row {t}");
+            assert_eq!(row[n + j].to_bits(), legacy[(h + t) * n + j].to_bits(), "q̇ row {t}");
+        }
+    }
+
+    client.send_line(&req_step_line(2, "iiwa", "dynall", None, None, &ops(n, 0.3))).unwrap();
+    let segs = read_ok_stream(&mut client, 2);
+    let lens: Vec<usize> = segs.iter().map(Vec::len).collect();
+    assert_eq!(lens, [n, n * n, n], "dyn_all must frame q̈ | M⁻¹ | C segments");
+
+    drop(client);
+    server.stop();
+}
+
+/// A tee capture of mixed traffic — steps, a fused route, a streamed
+/// trajectory, a deadline-0 expiry, an unknown route — replays clean:
+/// every deterministic outcome reproduces bitwise, the refusal is
+/// skipped as timing-dependent, and lazy/full parsing agree everywhere.
+#[test]
+fn tee_capture_replays_bitwise() {
+    let tee = std::env::temp_dir().join(format!("draco_net_wire_tee_{}.jsonl", std::process::id()));
+    let tee_str = tee.to_str().unwrap().to_string();
+    let (server, _coord, n) = start_server(Some(&tee_str));
+    let mut client = NetClient::connect(server.addr()).unwrap();
+
+    for id in 1..=3u64 {
+        client
+            .send_line(&req_step_line(id, "iiwa", "fd", None, None, &ops(n, 0.05 * id as f32)))
+            .unwrap();
+        assert_eq!(read_ok_stream(&mut client, id).len(), 1);
+    }
+    client.send_line(&req_step_line(4, "iiwa", "dynall", None, None, &ops(n, 0.4))).unwrap();
+    assert_eq!(read_ok_stream(&mut client, 4).len(), 3);
+
+    let h = 6;
+    let tau: Vec<f32> = (0..h * n).map(|i| (i as f32).sin()).collect();
+    client
+        .send_line(&req_traj_line(5, "iiwa", None, None, &vec![0.1; n], &vec![0.0; n], &tau, 1e-3))
+        .unwrap();
+    assert_eq!(read_ok_stream(&mut client, 5).len(), h);
+
+    // Deadline-0: expired live; replay strips deadlines and skips it.
+    client
+        .send_line(&req_step_line(6, "iiwa", "fd", Some("bulk"), Some(0), &ops(n, 0.1)))
+        .unwrap();
+    match client.read_frame().unwrap() {
+        Frame::Ack { id: 6 } => {}
+        other => panic!("expected ack, got {other:?}"),
+    }
+    match client.read_frame().unwrap() {
+        Frame::Expired { id: 6, .. } => {}
+        other => panic!("expected expired, got {other:?}"),
+    }
+
+    // Unknown route: a deterministic error — replay must also error.
+    client.send_line(&req_step_line(7, "iiwa", "warp", None, None, &ops(n, 0.1))).unwrap();
+    expect_err_for(&mut client, 7);
+
+    drop(client);
+    server.stop();
+
+    let report = replay_log(&tee_str).unwrap();
+    assert_eq!(report.requests, 7);
+    assert_eq!(report.compared, 6, "five successes + one deterministic error");
+    assert_eq!(report.matched, 6, "replayed payloads must be bitwise identical");
+    assert_eq!(report.timing_skipped, 1, "the expired request is timing-dependent");
+    assert_eq!(report.lazy_mismatches, 0);
+    assert!(report.is_clean());
+    let _ = std::fs::remove_file(&tee);
+}

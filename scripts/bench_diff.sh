@@ -91,6 +91,8 @@ if [ "$1" = "--check" ]; then
             "iiwa|serve_fd_quant_par64" \
             "iiwa|serve_fd_qint_par64" \
             "iiwa|serve_dyn_all_par64" \
+            "iiwa|json_lazy_vs_full" \
+            "iiwa|serve_net_jsonl" \
             "mixed|serve_fd_mixed64"; do
             if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
                 echo "SCHEMA FAIL: missing bench row ${need} in $f" >&2
@@ -114,8 +116,8 @@ if [ "$1" = "--check" ]; then
         fi
         # The uncontended/overload pair for every QoS class is the
         # tracked envelope, and every run measures the real-engine
-        # scenarios (native f64 + true-integer FD routes); ramp rows
-        # may come and go.
+        # scenarios (native f64 + true-integer FD routes, plus the FD
+        # route over the TCP JSONL wire); ramp rows may come and go.
         for need in \
             "uncontended|control" \
             "uncontended|interactive" \
@@ -124,7 +126,8 @@ if [ "$1" = "--check" ]; then
             "overload|interactive" \
             "overload|bulk" \
             "real-native-fd|bulk" \
-            "real-qint-fd|bulk"; do
+            "real-qint-fd|bulk" \
+            "real-net-fd|bulk"; do
             if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
                 echo "SCHEMA FAIL: missing serve row ${need} in $f" >&2
                 exit 1
