@@ -70,6 +70,13 @@ cargo run --release --quiet -- serve --requests 32 --batch 8 --window-us 200 \
     --robots iiwa,atlas:qint@12.14 --traj 16 --listen 127.0.0.1:0 --tee "$TEE"
 cargo run --release --quiet -- replay "$TEE"
 
+echo "== fault smoke: loadgen --smoke --faults =="
+# Wire fault suite under a seeded FaultPlan: 4 concurrent connections
+# (healthy, garbage-spraying, write-tearing, mid-stream-disconnecting)
+# plus a retry client driven into a flooded lane. Exits nonzero on any
+# cross-connection id bleed, stuck batch, or non-terminating retry.
+cargo run --release --quiet -- loadgen --smoke --faults
+
 echo "== overload smoke: loadgen --smoke =="
 # Short open-loop ramp against a capacity-pinned route; asserts the
 # overload invariants (no expired job executed, monotone shedding,

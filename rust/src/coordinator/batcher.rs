@@ -774,7 +774,9 @@ impl ClassLanes {
 
     /// Pick up to `cap` jobs in strict priority order, dropping expired
     /// jobs on the way (answered as [`ServeError::Expired`] — they are
-    /// never executed).
+    /// never executed) and jobs whose consumer is already gone
+    /// (answered as [`ServeError::Cancelled`] — executing them would
+    /// burn engine time on output nobody can receive).
     fn form_batch(
         &mut self,
         cap: usize,
@@ -785,7 +787,11 @@ impl ClassLanes {
         for lane in self.0.iter_mut() {
             while picked.len() < cap {
                 let Some(job) = lane.pop_front() else { break };
-                if let Some(waited_us) = job.expired() {
+                if !job.sink.alive() {
+                    lock_stats(stats).cancelled += 1;
+                    gate.release(job.class);
+                    job.fail(ServeError::Cancelled);
+                } else if let Some(waited_us) = job.expired() {
                     lock_stats(stats).expired += 1;
                     gate.release(job.class);
                     let deadline_us = job.deadline_us.unwrap_or(0);
@@ -1408,6 +1414,49 @@ mod tests {
         let st = coord.stats();
         assert_eq!(st.expired, 1);
         assert_eq!(st.completed, 0, "an expired job must never execute");
+        coord.shutdown();
+    }
+
+    /// A queued job whose sink is already dead when the batch forms is
+    /// answered `Cancelled`, never executed, and its admission unit is
+    /// released — a disconnected peer cannot leave a stuck batch slot.
+    #[test]
+    fn dead_sink_job_is_cancelled_not_executed() {
+        struct DeadSink {
+            done_tx: Sender<Result<(), ServeError>>,
+        }
+        impl ResponseSink for DeadSink {
+            fn chunk(&mut self, _data: &[f32]) {}
+            fn done(&mut self, result: Result<(), ServeError>) {
+                let _ = self.done_tx.send(result);
+            }
+            fn alive(&self) -> bool {
+                false
+            }
+        }
+        let robot = builtin_robot("iiwa").unwrap();
+        let n = robot.dof();
+        let coord = Coordinator::start_native(&robot, &[(ArtifactFn::Rnea, 8)], 100);
+        let (done_tx, done_rx) = channel();
+        coord.submit_to_sink(
+            "iiwa",
+            ArtifactFn::Rnea,
+            vec![vec![0.1; n]; 3],
+            SubmitOptions::default(),
+            Box::new(DeadSink { done_tx }),
+        );
+        match done_rx.recv().expect("terminal answer") {
+            Err(ServeError::Cancelled) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        let st = coord.stats();
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.completed, 0, "a cancelled job must never execute");
+        assert_eq!(
+            coord.depth("iiwa", ArtifactFn::Rnea, QosClass::Interactive),
+            0,
+            "cancellation must release the admission unit"
+        );
         coord.shutdown();
     }
 }

@@ -30,6 +30,14 @@
 //! p99 (plus one batching window of tolerance), and the circuit-breaker
 //! cycle (trip on consecutive injected panics → shed → half-open →
 //! recover).
+//!
+//! Three wire-robustness scenarios ride along in every run (and are the
+//! whole run under `--faults`, the CI fault smoke): `real-net-multi`
+//! (concurrent connections with overlapping request ids, responses
+//! checked bitwise against per-connection references), `real-net-faults`
+//! (a healthy client beside seeded garbage-injecting, write-tearing,
+//! and mid-stream-disconnecting peers), and `net_retry_recovery` (a
+//! hint-honouring retry client converging against a saturated route).
 
 use super::batcher::{BackendSpec, Coordinator, JobResult, Route};
 use super::qos::{QosClass, QosPolicy, ServeError, SubmitOptions};
@@ -76,6 +84,11 @@ struct ClassOutcome {
     rejected: u64,
     expired: u64,
     engine_errors: u64,
+    /// Wire-client resubmissions after `rejected`/`shed`/`expired`
+    /// hints (populated by the retry scenario; 0 elsewhere).
+    retries: u64,
+    /// Total client-side backoff time across those retries [µs].
+    backoff_us: u64,
     p50_us: f64,
     p99_us: f64,
     p999_us: f64,
@@ -432,6 +445,599 @@ fn run_net_scenario(
     })
 }
 
+/// Connections the multi-client and fault scenarios drive concurrently.
+const FAULT_CONNS: usize = 4;
+
+/// Per-connection tally a client thread reports back.
+#[derive(Debug, Default, Clone)]
+struct ConnTally {
+    offered: u64,
+    completed: u64,
+    rejected: u64,
+    expired: u64,
+    /// `err` frames with id 0 — the server's in-band answers to
+    /// injected garbage lines.
+    garbage_errs: u64,
+    lat_us: Vec<f64>,
+}
+
+/// Fold per-connection tallies into the per-class outcome array, with
+/// client-side latency percentiles.
+fn fold_tallies(tallies: Vec<(QosClass, ConnTally)>) -> [ClassOutcome; 3] {
+    let mut classes = [ClassOutcome::default(); 3];
+    let mut lat: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (class, t) in tallies {
+        let out = &mut classes[class.index()];
+        out.offered += t.offered;
+        out.completed += t.completed;
+        out.rejected += t.rejected;
+        out.expired += t.expired;
+        lat[class.index()].extend(t.lat_us);
+    }
+    for (i, l) in lat.iter_mut().enumerate() {
+        l.sort_by(f64::total_cmp);
+        classes[i].p50_us = pct(l, 0.50);
+        classes[i].p99_us = pct(l, 0.99);
+        classes[i].p999_us = pct(l, 0.999);
+    }
+    classes
+}
+
+/// Operand set for connection `c` — each connection's values differ, so
+/// each connection's correct payload is distinct and a response bled
+/// across connections cannot pass the bitwise check.
+fn conn_ops(n: usize, c: usize) -> Vec<Vec<f32>> {
+    vec![vec![0.1 + 0.05 * c as f32; n], vec![0.01 * c as f32; n], vec![0.0; n]]
+}
+
+/// Read frames until `id`'s terminal frame, folding the outcome into
+/// `t`. `err` frames for id 0 (the server's answers to injected garbage
+/// lines) are counted, not fatal; an `err` for `id` itself is — these
+/// helpers only send well-formed traffic. With `expect`, a `done`
+/// payload must match it bitwise (the cross-connection routing check).
+/// Returns the payload on `done`, `None` on a structured refusal.
+fn read_terminal(
+    client: &mut crate::net::NetClient,
+    id: u64,
+    expect: Option<&[f32]>,
+    sent_at: Instant,
+    t: &mut ConnTally,
+) -> Result<Option<Vec<f32>>, String> {
+    use crate::net::Frame;
+    let mut payload: Vec<f32> = Vec::new();
+    loop {
+        match client.read_frame().map_err(|e| format!("read: {e}"))? {
+            Frame::Ack { id: got } if got == id => {}
+            Frame::Chunk { id: got, data, .. } if got == id => payload.extend(data),
+            Frame::Done { id: got, .. } if got == id => {
+                if let Some(want) = expect {
+                    let same = payload.len() == want.len()
+                        && payload.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        return Err(format!(
+                            "id {id}: payload differs from this connection's reference — \
+                             response bled across connections"
+                        ));
+                    }
+                }
+                t.completed += 1;
+                t.lat_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+                return Ok(Some(payload));
+            }
+            Frame::Rejected { id: got, .. } | Frame::Shed { id: got, .. } if got == id => {
+                t.rejected += 1;
+                return Ok(None);
+            }
+            Frame::Expired { id: got, .. } if got == id => {
+                t.expired += 1;
+                return Ok(None);
+            }
+            Frame::Err { id: 0, .. } => t.garbage_errs += 1,
+            Frame::Err { id: got, msg } if got == id => {
+                return Err(format!("id {id}: err on well-formed traffic: {msg}"))
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Send one step request on a healthy client and block for its terminal
+/// frame (see [`read_terminal`] for outcome handling).
+fn drive_step(
+    client: &mut crate::net::NetClient,
+    id: u64,
+    robot: &str,
+    class: QosClass,
+    ops: &[Vec<f32>],
+    expect: Option<&[f32]>,
+    t: &mut ConnTally,
+) -> Result<Option<Vec<f32>>, String> {
+    use crate::net::frame;
+    t.offered += 1;
+    let sent_at = Instant::now();
+    client
+        .send_line(&frame::req_step_line(id, robot, "fd", Some(class.name()), None, ops))
+        .map_err(|e| format!("send: {e}"))?;
+    read_terminal(client, id, expect, sent_at, t)
+}
+
+/// Poll every class lane of the served step route until all drain to
+/// depth 0 — the no-stuck-batches invariant after clients disconnect.
+fn drain_check(coord: &Coordinator, robot: &str) -> Result<(), String> {
+    let deadline = Instant::now() + Duration::from_secs(3);
+    loop {
+        let depth: usize =
+            QosClass::ALL.iter().map(|&c| coord.depth(robot, ArtifactFn::Fd, c)).sum();
+        if depth == 0 {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            return Err(format!("stuck batches: route depth still {depth} after clients left"));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// `real-net-multi` (bench row `serve_net_multi`): [`FAULT_CONNS`]
+/// concurrent client connections drive the same route with deliberately
+/// **overlapping request ids** and per-connection operands. Every
+/// response must arrive on the connection that asked, bitwise identical
+/// to the in-process reference for that connection's operands — the
+/// cross-connection id-bleed check — and after the clients leave, every
+/// lane must drain to depth 0.
+fn run_multi_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, String> {
+    use crate::net::{NetClient, NetServer};
+    use std::sync::Arc;
+
+    let n = robot.dof();
+    let spec = BackendSpec::Native {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: cfg.batch,
+        parallel: 1,
+        class: QosClass::default(),
+    };
+    let coord = Arc::new(Coordinator::start_with_policy(vec![spec], n, cfg.window_us, cfg.policy));
+    let dims = [(robot.name.clone(), n)].into_iter().collect();
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        dims,
+        "127.0.0.1:0",
+        None,
+        &robot.name,
+        cfg.batch,
+        cfg.window_us,
+    )
+    .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.addr();
+
+    // In-process reference payload per connection's operand set.
+    let mut expected: Vec<Vec<f32>> = Vec::new();
+    for c in 0..FAULT_CONNS {
+        match coord.submit_to(&robot.name, ArtifactFn::Fd, conn_ops(n, c)).recv() {
+            Ok(Ok(v)) => expected.push(v),
+            other => return Err(format!("in-process reference for conn {c}: {other:?}")),
+        }
+    }
+
+    let conn_class = [QosClass::Control, QosClass::Interactive, QosClass::Bulk, QosClass::Bulk];
+    let per_conn: u64 = 48;
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..FAULT_CONNS {
+        let robot_name = robot.name.clone();
+        let want = expected[c].clone();
+        let ops = conn_ops(n, c);
+        let class = conn_class[c % conn_class.len()];
+        threads.push(std::thread::spawn(move || -> Result<(QosClass, ConnTally), String> {
+            let mut client = NetClient::connect(addr).map_err(|e| format!("conn {c}: {e}"))?;
+            let mut t = ConnTally::default();
+            for i in 0..per_conn {
+                // Ids overlap across connections by construction; only
+                // the payload (distinct per connection) proves routing.
+                let got =
+                    drive_step(&mut client, 1 + i, &robot_name, class, &ops, Some(&want), &mut t)
+                        .map_err(|e| format!("conn {c}: {e}"))?;
+                if got.is_none() {
+                    return Err(format!("conn {c}: request {} refused on a lightly loaded route", 1 + i));
+                }
+            }
+            Ok((class, t))
+        }));
+    }
+    let mut tallies = Vec::new();
+    for th in threads {
+        tallies.push(th.join().map_err(|_| "client thread panicked".to_string())??);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    drain_check(&coord, &robot.name)?;
+    server.stop();
+
+    Ok(ScenarioResult {
+        name: "real-net-multi".to_string(),
+        offered_per_s: (FAULT_CONNS as u64 * per_conn) as f64 / elapsed_s,
+        elapsed_s,
+        classes: fold_tallies(tallies),
+        probes_executed: 0,
+        probes_sent: 0,
+    })
+}
+
+/// `real-net-faults`: [`FAULT_CONNS`] concurrent connections, three of
+/// them hostile under seeded [`FaultPlan`](crate::net::FaultPlan)s —
+/// every-line garbage injection, every-line torn dribbled writes, and a
+/// mid-stream disconnect while a trajectory is still streaming against
+/// a full egress queue. Asserts the tentpole invariants: the healthy
+/// connection's payloads stay bitwise identical to a fault-free wire
+/// pass, every hostile request that reached the wire intact still
+/// terminates with its correct payload, garbage is answered in-band
+/// (`err`) without dropping anyone, the dead peer leaves no stuck
+/// batches, and a fresh client is served immediately afterwards.
+fn run_faults_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, String> {
+    use super::registry::RobotRegistry;
+    use crate::net::{frame, FaultPlan, FaultyClient, NetClient, NetServer};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    let n = robot.dof();
+    // Full registry: the disconnect connection needs the traj route.
+    let registry = RobotRegistry::from_cli_spec(&robot.name, cfg.batch)?;
+    let coord = Arc::new(Coordinator::start_registry(&registry, cfg.window_us));
+    let dims = [(robot.name.clone(), n)].into_iter().collect();
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        dims,
+        "127.0.0.1:0",
+        None,
+        &robot.name,
+        cfg.batch,
+        cfg.window_us,
+    )
+    .map_err(|e| format!("bind: {e}"))?;
+    let addr = server.addr();
+    let k: u64 = 24;
+
+    // Fault-free reference pass: the healthy connection's payload, from
+    // an undisturbed wire round trip.
+    let reference = {
+        let mut client = NetClient::connect(addr).map_err(|e| format!("reference: {e}"))?;
+        let mut t = ConnTally::default();
+        drive_step(&mut client, 1, &robot.name, QosClass::Control, &conn_ops(n, 0), None, &mut t)
+            .map_err(|e| format!("reference: {e}"))?
+            .ok_or("reference request refused on an idle route")?
+    };
+    // In-process references for the hostile connections' operand sets.
+    let mut expected: Vec<Vec<f32>> = Vec::new();
+    for c in 0..FAULT_CONNS {
+        match coord.submit_to(&robot.name, ArtifactFn::Fd, conn_ops(n, c)).recv() {
+            Ok(Ok(v)) => expected.push(v),
+            other => return Err(format!("in-process reference for conn {c}: {other:?}")),
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut threads: Vec<
+        std::thread::JoinHandle<Result<(QosClass, ConnTally), String>>,
+    > = Vec::new();
+
+    // Connection 0 — healthy control client: every payload must stay
+    // bitwise identical to the fault-free reference while the peers
+    // misbehave.
+    {
+        let robot_name = robot.name.clone();
+        let want = reference.clone();
+        let ops = conn_ops(n, 0);
+        threads.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect(addr).map_err(|e| format!("healthy: {e}"))?;
+            let mut t = ConnTally::default();
+            for i in 0..k {
+                let got = drive_step(
+                    &mut client,
+                    1 + i,
+                    &robot_name,
+                    QosClass::Control,
+                    &ops,
+                    Some(&want),
+                    &mut t,
+                )
+                .map_err(|e| format!("healthy: {e}"))?;
+                if got.is_none() {
+                    return Err(format!("healthy: request {} refused on an idle route", 1 + i));
+                }
+            }
+            Ok((QosClass::Control, t))
+        }));
+    }
+
+    // Connection 1 — garbage injector: one garbage line before every
+    // real request. Every garbage line must be answered in-band (`err`
+    // id 0) and every real request must still complete correctly.
+    {
+        let robot_name = robot.name.clone();
+        let want = expected[1].clone();
+        let ops = conn_ops(n, 1);
+        let seed = cfg.seed ^ 0x9a7b;
+        threads.push(std::thread::spawn(move || {
+            let sock = TcpStream::connect(addr).map_err(|e| format!("garbage: {e}"))?;
+            let read_half = sock.try_clone().map_err(|e| format!("garbage: {e}"))?;
+            let plan = FaultPlan {
+                seed,
+                garbage_every: 1.0,
+                tear_writes: 0.0,
+                fragment_delay_us: 0,
+                disconnect_after: 0,
+            };
+            let mut faulty =
+                FaultyClient::from_stream(sock, plan).map_err(|e| format!("garbage: {e}"))?;
+            let mut reader =
+                NetClient::from_stream(read_half).map_err(|e| format!("garbage: {e}"))?;
+            let mut t = ConnTally::default();
+            let g = k / 2;
+            for i in 0..g {
+                t.offered += 1;
+                let sent_at = Instant::now();
+                faulty
+                    .send_line(&frame::req_step_line(
+                        1 + i,
+                        &robot_name,
+                        "fd",
+                        Some(QosClass::Interactive.name()),
+                        None,
+                        &ops,
+                    ))
+                    .map_err(|e| format!("garbage: send: {e}"))?;
+                let got = read_terminal(&mut reader, 1 + i, Some(&want), sent_at, &mut t)
+                    .map_err(|e| format!("garbage: {e}"))?;
+                if got.is_none() {
+                    return Err(format!("garbage: request {} refused on an idle route", 1 + i));
+                }
+            }
+            if t.garbage_errs == 0 {
+                return Err("garbage: injected lines produced no err frames".to_string());
+            }
+            Ok((QosClass::Interactive, t))
+        }));
+    }
+
+    // Connection 2 — torn writer: every request line dribbled across
+    // delayed fragments (driving the server's resumable bounded reads).
+    // Each request must still complete with its correct payload.
+    {
+        let robot_name = robot.name.clone();
+        let want = expected[2].clone();
+        let ops = conn_ops(n, 2);
+        let seed = cfg.seed ^ 0x70a1;
+        threads.push(std::thread::spawn(move || {
+            let sock = TcpStream::connect(addr).map_err(|e| format!("torn: {e}"))?;
+            let read_half = sock.try_clone().map_err(|e| format!("torn: {e}"))?;
+            let plan = FaultPlan {
+                seed,
+                garbage_every: 0.0,
+                tear_writes: 1.0,
+                fragment_delay_us: 300,
+                disconnect_after: 0,
+            };
+            let mut faulty =
+                FaultyClient::from_stream(sock, plan).map_err(|e| format!("torn: {e}"))?;
+            let mut reader = NetClient::from_stream(read_half).map_err(|e| format!("torn: {e}"))?;
+            let mut t = ConnTally::default();
+            let g = k / 2;
+            for i in 0..g {
+                t.offered += 1;
+                let sent_at = Instant::now();
+                faulty
+                    .send_line(&frame::req_step_line(
+                        1 + i,
+                        &robot_name,
+                        "fd",
+                        Some(QosClass::Bulk.name()),
+                        None,
+                        &ops,
+                    ))
+                    .map_err(|e| format!("torn: send: {e}"))?;
+                let got = read_terminal(&mut reader, 1 + i, Some(&want), sent_at, &mut t)
+                    .map_err(|e| format!("torn: {e}"))?;
+                if got.is_none() {
+                    return Err(format!("torn: request {} refused on an idle route", 1 + i));
+                }
+            }
+            Ok((QosClass::Bulk, t))
+        }));
+    }
+
+    // Connection 3 — mid-stream disconnect: a long trajectory fills the
+    // bounded egress queue (the client reads almost nothing), then the
+    // plan disconnects mid-line. The server must cancel production via
+    // the dead wire and leave nothing stuck.
+    {
+        let robot_name = robot.name.clone();
+        let ops = conn_ops(n, 3);
+        let seed = cfg.seed ^ 0xdeadu64;
+        threads.push(std::thread::spawn(move || {
+            let sock = TcpStream::connect(addr).map_err(|e| format!("disconnect: {e}"))?;
+            let read_half = sock.try_clone().map_err(|e| format!("disconnect: {e}"))?;
+            let plan = FaultPlan {
+                seed,
+                garbage_every: 0.0,
+                tear_writes: 0.0,
+                fragment_delay_us: 0,
+                disconnect_after: 2,
+            };
+            let mut faulty =
+                FaultyClient::from_stream(sock, plan).map_err(|e| format!("disconnect: {e}"))?;
+            let mut reader =
+                NetClient::from_stream(read_half).map_err(|e| format!("disconnect: {e}"))?;
+            let mut t = ConnTally::default();
+            // Horizon far deeper than the egress queue so the producer
+            // is still streaming when the peer vanishes.
+            let h = 4096;
+            let q0 = vec![0.1f32; n];
+            let qd0 = vec![0.0f32; n];
+            let tau = vec![0.05f32; h * n];
+            t.offered += 1;
+            faulty
+                .send_line(&frame::req_traj_line(
+                    1,
+                    &robot_name,
+                    Some(QosClass::Bulk.name()),
+                    None,
+                    &q0,
+                    &qd0,
+                    &tau,
+                    1e-3,
+                ))
+                .map_err(|e| format!("disconnect: send: {e}"))?;
+            // Let the stream start (ack + a few rows), then vanish.
+            for _ in 0..4 {
+                reader.read_frame().map_err(|e| format!("disconnect: read: {e}"))?;
+            }
+            t.offered += 1;
+            let sent = faulty
+                .send_line(&frame::req_step_line(
+                    2,
+                    &robot_name,
+                    "fd",
+                    Some(QosClass::Bulk.name()),
+                    None,
+                    &ops,
+                ))
+                .map_err(|e| format!("disconnect: send: {e}"))?;
+            if sent {
+                return Err("disconnect: fault plan failed to cut the connection".to_string());
+            }
+            Ok((QosClass::Bulk, t))
+        }));
+    }
+
+    let mut tallies = Vec::new();
+    for th in threads {
+        tallies.push(th.join().map_err(|_| "fault thread panicked".to_string())??);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    // No stuck batches, and the route still serves a fresh client.
+    drain_check(&coord, &robot.name)?;
+    {
+        let mut probe = NetClient::connect(addr).map_err(|e| format!("post-probe: {e}"))?;
+        let mut pt = ConnTally::default();
+        let got =
+            drive_step(&mut probe, 1, &robot.name, QosClass::Control, &conn_ops(n, 0), None, &mut pt)
+                .map_err(|e| format!("post-probe: {e}"))?;
+        if got.is_none() {
+            return Err("post-probe request refused — route wedged by faulty peers".to_string());
+        }
+    }
+    server.stop();
+
+    let classes = fold_tallies(tallies);
+    let offered: u64 = classes.iter().map(|c| c.offered).sum();
+    Ok(ScenarioResult {
+        name: "real-net-faults".to_string(),
+        offered_per_s: offered as f64 / elapsed_s,
+        elapsed_s,
+        classes,
+        probes_executed: 0,
+        probes_sent: 0,
+    })
+}
+
+/// `net_retry_recovery`: a [`RetryClient`](crate::net::RetryClient)
+/// against a deliberately saturated route. The bulk lane is capped low
+/// and pre-filled with an in-process flood, so the client's first wire
+/// attempts come back `rejected` with live retry hints; the client must
+/// back off (hint-aware, jittered) and converge to success on every
+/// request as the flood drains — its attempt and backoff totals feed
+/// the goodput table's retry columns.
+fn run_retry_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, String> {
+    use crate::net::{NetServer, RetryClient, RetryOutcome, RetryPolicy};
+    use std::sync::Arc;
+
+    let n = robot.dof();
+    let spec = BackendSpec::Chaos {
+        robot: robot.clone(),
+        function: ArtifactFn::Fd,
+        batch: cfg.batch,
+        delay_us: cfg.delay_us,
+        class: QosClass::default(),
+    };
+    let policy = QosPolicy { queue_cap: [8, 8, 8], ..QosPolicy::default() };
+    let coord = Arc::new(Coordinator::start_with_policy(vec![spec], n, cfg.window_us, policy));
+    let dims = [(robot.name.clone(), n)].into_iter().collect();
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        dims,
+        "127.0.0.1:0",
+        None,
+        &robot.name,
+        cfg.batch,
+        cfg.window_us,
+    )
+    .map_err(|e| format!("bind: {e}"))?;
+
+    let retry_policy = RetryPolicy { base_us: 500, budget_us: 3_000_000, ..RetryPolicy::default() };
+    let mut client = RetryClient::connect(server.addr(), retry_policy, cfg.seed ^ 0x7e72)
+        .map_err(|e| format!("connect: {e}"))?;
+
+    // Saturate the bulk lane (the throttled route holds its depth at
+    // the cap for a full batch cycle); the flood's own overflow resolves
+    // as rejected immediately, and the receivers are drained at the end.
+    let ops = conn_ops(n, 0);
+    let flood: Vec<Receiver<JobResult>> = (0..16)
+        .map(|_| {
+            coord.submit_to_opts(
+                &robot.name,
+                ArtifactFn::Fd,
+                ops.clone(),
+                SubmitOptions::class(QosClass::Bulk),
+            )
+        })
+        .collect();
+
+    let reqs: u64 = 6;
+    let mut t = ConnTally::default();
+    let t0 = Instant::now();
+    for i in 0..reqs {
+        t.offered += 1;
+        let sent_at = Instant::now();
+        match client.step(1 + i, &robot.name, "fd", Some(QosClass::Bulk.name()), &ops) {
+            Ok(RetryOutcome::Ok(_)) => {
+                t.completed += 1;
+                t.lat_us.push(sent_at.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(RetryOutcome::Exhausted(what)) => {
+                return Err(format!("retry budget exhausted on request {}: {what}", 1 + i))
+            }
+            Ok(RetryOutcome::Err(msg)) => {
+                return Err(format!("request {} hit a terminal err: {msg}", 1 + i))
+            }
+            Err(e) => return Err(format!("transport: {e}")),
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let stats = client.stats();
+    if stats.retries == 0 {
+        return Err("saturated route never refused the retry client — scenario inert".to_string());
+    }
+    for rx in flood {
+        let _ = rx.recv();
+    }
+    drain_check(&coord, &robot.name)?;
+    server.stop();
+
+    let mut classes = fold_tallies(vec![(QosClass::Bulk, t)]);
+    let b = QosClass::Bulk.index();
+    classes[b].retries = stats.retries;
+    classes[b].backoff_us = stats.backoff_us;
+    Ok(ScenarioResult {
+        name: "net_retry_recovery".to_string(),
+        offered_per_s: reqs as f64 / elapsed_s,
+        elapsed_s,
+        classes,
+        probes_executed: 0,
+        probes_sent: 0,
+    })
+}
+
 /// Deterministic circuit-breaker cycle: three injected panics on a
 /// batch-of-1 chaos route trip the breaker, the next admission sheds,
 /// and after the cooldown a clean half-open probe recovers the route.
@@ -515,8 +1121,22 @@ fn qint_format_for(name: &str) -> QFormat {
 ///   expired-executed probes, monotone shedding, the Control-p99
 ///   overload bound, and the breaker trip/half-open/recover cycle.
 ///   Exit code 1 on any violation.
+/// * `--faults` — fault-suite mode: run only the multi-connection and
+///   fault-injection scenarios (`real-net-multi`, `real-net-faults`,
+///   `net_retry_recovery`), with every invariant fatal and no bench
+///   dump written. This is the CI fault smoke.
+///
+/// Every full run additionally drives the three wire-robustness
+/// scenarios: `real-net-multi` ([`FAULT_CONNS`] concurrent clients,
+/// overlapping ids, bitwise routing check — tracked in the bench dump
+/// as `serve_net_multi`), `real-net-faults` (seeded garbage / torn
+/// writes / mid-stream disconnect peers beside a healthy client), and
+/// `net_retry_recovery` (a `RetryClient` converging against a
+/// saturated route; its attempt/backoff totals fill the goodput
+/// table's retry columns).
 pub fn loadgen_cli(args: &Args) -> i32 {
     let smoke = args.flag("smoke");
+    let faults_only = args.flag("faults");
     let robot_name = args.opt_or("robot", "iiwa").to_string();
     let robot = match builtin_robot(&robot_name) {
         Some(r) => r,
@@ -605,31 +1225,51 @@ pub fn loadgen_cli(args: &Args) -> i32 {
     ));
 
     let mut results = Vec::new();
-    for (name, rate, spec) in plan {
-        println!("\nscenario '{name}': offering {rate:.0} req/s for {:?} …", cfg.duration);
-        results.push(run_scenario(&robot, &cfg, &name, rate, spec));
-    }
-    // Network envelope: the same Poisson arrivals as `real-native-fd`,
-    // but as JSONL `req` lines over a real TCP socket, with client-side
-    // latency accounting. The `real-` prefix keeps it outside the
-    // shed-monotonicity checks, like the other unthrottled-engine rows.
-    let mut net_failure: Option<String> = None;
-    println!(
-        "\nscenario 'real-net-fd': offering {capacity:.0} req/s over the JSONL wire for {:?} …",
-        cfg.duration
-    );
-    match run_net_scenario(&robot, &cfg, "real-net-fd", capacity) {
-        Ok(r) => {
-            if r.classes.iter().map(|c| c.completed).sum::<u64>() == 0 {
-                net_failure = Some("real-net-fd completed zero requests".to_string());
-            }
-            results.push(r);
+    let mut hard_failures: Vec<String> = Vec::new();
+    if !faults_only {
+        for (name, rate, spec) in plan {
+            println!("\nscenario '{name}': offering {rate:.0} req/s for {:?} …", cfg.duration);
+            results.push(run_scenario(&robot, &cfg, &name, rate, spec));
         }
-        Err(e) => net_failure = Some(format!("real-net-fd: {e}")),
+        // Network envelope: the same Poisson arrivals as
+        // `real-native-fd`, but as JSONL `req` lines over a real TCP
+        // socket, with client-side latency accounting. The `real-`
+        // prefix keeps it outside the shed-monotonicity checks, like
+        // the other unthrottled-engine rows.
+        println!(
+            "\nscenario 'real-net-fd': offering {capacity:.0} req/s over the JSONL wire for {:?} …",
+            cfg.duration
+        );
+        match run_net_scenario(&robot, &cfg, "real-net-fd", capacity) {
+            Ok(r) => {
+                if r.classes.iter().map(|c| c.completed).sum::<u64>() == 0 {
+                    hard_failures.push("real-net-fd completed zero requests".to_string());
+                }
+                results.push(r);
+            }
+            Err(e) => hard_failures.push(format!("real-net-fd: {e}")),
+        }
+    }
+    // Wire-robustness scenarios: concurrent clients with overlapping
+    // ids, the seeded fault suite, and the retry/backoff client. These
+    // run in every mode and are the only scenarios in --faults mode.
+    let fault_plan: [(&str, fn(&Robot, &LoadCfg) -> Result<ScenarioResult, String>); 3] = [
+        ("real-net-multi", run_multi_scenario),
+        ("real-net-faults", run_faults_scenario),
+        ("net_retry_recovery", run_retry_scenario),
+    ];
+    for (what, run) in fault_plan {
+        println!("\nscenario '{what}' …");
+        match run(&robot, &cfg) {
+            Ok(r) => results.push(r),
+            Err(e) => hard_failures.push(format!("{what}: {e}")),
+        }
     }
 
-    let mut table =
-        Table::new(&["scenario", "class", "offered", "ok", "rej", "exp", "goodput/s", "p50 µs", "p99 µs", "p99.9 µs"]);
+    let mut table = Table::new(&[
+        "scenario", "class", "offered", "ok", "rej", "exp", "retry", "backoff µs", "goodput/s",
+        "p50 µs", "p99 µs", "p99.9 µs",
+    ]);
     for r in &results {
         for c in QosClass::ALL {
             let o = &r.classes[c.index()];
@@ -640,6 +1280,8 @@ pub fn loadgen_cli(args: &Args) -> i32 {
                 o.completed.to_string(),
                 o.rejected.to_string(),
                 o.expired.to_string(),
+                o.retries.to_string(),
+                o.backoff_us.to_string(),
                 format!("{:.0}", o.completed as f64 / r.elapsed_s),
                 format!("{:.0}", o.p50_us),
                 format!("{:.0}", o.p99_us),
@@ -651,44 +1293,55 @@ pub fn loadgen_cli(args: &Args) -> i32 {
 
     // JSON dump: one row per (scenario, class). "scenario" sorts last
     // among the row keys, so line-oriented extractors can use it as the
-    // row terminator (as bench_diff.sh does).
-    let mut rows = Vec::new();
-    for r in &results {
-        for c in QosClass::ALL {
-            let o = &r.classes[c.index()];
-            rows.push(json::obj(vec![
-                ("scenario", json::s(&r.name)),
-                ("class", json::s(c.name())),
-                ("offered_per_s", json::num(o.offered as f64 / r.elapsed_s)),
-                ("goodput_per_s", json::num(o.completed as f64 / r.elapsed_s)),
-                ("completed", json::num(o.completed as f64)),
-                ("rejected", json::num(o.rejected as f64)),
-                ("expired", json::num(o.expired as f64)),
-                ("p50_us", json::num(o.p50_us)),
-                ("p99_us", json::num(o.p99_us)),
-                ("p999_us", json::num(o.p999_us)),
-            ]));
+    // row terminator (as bench_diff.sh does). Skipped in --faults mode,
+    // which runs only a subset of the tracked scenarios.
+    if !faults_only {
+        let mut rows = Vec::new();
+        for r in &results {
+            // `real-net-multi` is tracked in the dump under the stable
+            // row name `serve_net_multi`; its `real-` display prefix
+            // only marks shed-monotonicity exemption.
+            let bench_name =
+                if r.name == "real-net-multi" { "serve_net_multi" } else { r.name.as_str() };
+            for c in QosClass::ALL {
+                let o = &r.classes[c.index()];
+                rows.push(json::obj(vec![
+                    ("scenario", json::s(bench_name)),
+                    ("class", json::s(c.name())),
+                    ("offered_per_s", json::num(o.offered as f64 / r.elapsed_s)),
+                    ("goodput_per_s", json::num(o.completed as f64 / r.elapsed_s)),
+                    ("completed", json::num(o.completed as f64)),
+                    ("rejected", json::num(o.rejected as f64)),
+                    ("expired", json::num(o.expired as f64)),
+                    ("retries", json::num(o.retries as f64)),
+                    ("backoff_us", json::num(o.backoff_us as f64)),
+                    ("p50_us", json::num(o.p50_us)),
+                    ("p99_us", json::num(o.p99_us)),
+                    ("p999_us", json::num(o.p999_us)),
+                ]));
+            }
+        }
+        let out = json::obj(vec![
+            ("schema", json::s("draco.serve.v1")),
+            ("smoke", Json::Bool(smoke)),
+            ("robot", json::s(&robot.name)),
+            ("batch", json::num(cfg.batch as f64)),
+            ("window_us", json::num(cfg.window_us as f64)),
+            ("delay_us", json::num(cfg.delay_us as f64)),
+            ("capacity_per_s", json::num(capacity)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
+        match std::fs::write(path, out.pretty()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
         }
     }
-    let out = json::obj(vec![
-        ("schema", json::s("draco.serve.v1")),
-        ("smoke", Json::Bool(smoke)),
-        ("robot", json::s(&robot.name)),
-        ("batch", json::num(cfg.batch as f64)),
-        ("window_us", json::num(cfg.window_us as f64)),
-        ("delay_us", json::num(cfg.delay_us as f64)),
-        ("capacity_per_s", json::num(capacity)),
-        ("rows", Json::Arr(rows)),
-    ]);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
-    match std::fs::write(path, out.pretty()) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
-    }
 
-    // Invariants. Checked (and fatal) in --smoke; reported otherwise.
+    // Invariants. Checked (and fatal) in --smoke and --faults;
+    // reported otherwise.
     let mut failures: Vec<String> = Vec::new();
-    failures.extend(net_failure);
+    failures.extend(hard_failures);
     for r in &results {
         if r.probes_executed > 0 {
             failures.push(format!(
@@ -711,9 +1364,12 @@ pub fn loadgen_cli(args: &Args) -> i32 {
     // and the deepest overload point must actually shed. Only the
     // capacity-pinned chaos scenarios participate — the `real-*`
     // envelope rows run on unthrottled engines and legitimately absorb
-    // the whole offered load.
-    let mut by_rate: Vec<&ScenarioResult> =
-        results.iter().filter(|r| !r.name.starts_with("real-")).collect();
+    // the whole offered load, and the `net_*` robustness scenarios
+    // measure convergence, not shedding.
+    let mut by_rate: Vec<&ScenarioResult> = results
+        .iter()
+        .filter(|r| !r.name.starts_with("real-") && !r.name.starts_with("net_"))
+        .collect();
     by_rate.sort_by(|a, b| a.offered_per_s.total_cmp(&b.offered_per_s));
     for pair in by_rate.windows(2) {
         if pair[1].reject_rate() < pair[0].reject_rate() - 0.05 {
@@ -762,12 +1418,19 @@ pub fn loadgen_cli(args: &Args) -> i32 {
     }
 
     if failures.is_empty() {
-        println!("loadgen invariants hold: no expired job executed, shedding monotone");
+        if faults_only {
+            println!(
+                "fault suite green: healthy payloads bitwise-stable beside faulty peers, \
+                 no id bleed, no stuck batches, retry client converged"
+            );
+        } else {
+            println!("loadgen invariants hold: no expired job executed, shedding monotone");
+        }
         0
     } else {
         for f in &failures {
             eprintln!("LOADGEN VIOLATION: {f}");
         }
-        i32::from(smoke)
+        i32::from(smoke || faults_only)
     }
 }

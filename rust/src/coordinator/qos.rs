@@ -151,6 +151,11 @@ pub enum ServeError {
     /// The coordinator is shutting down; queued jobs are answered with
     /// this error instead of being executed or silently dropped.
     ShuttingDown,
+    /// The consumer of this job's responses disconnected while the job
+    /// was still queued; it was dropped at batch formation and **never
+    /// executed** (a job already streaming is cancelled between rows
+    /// via the sink's `alive` poll instead).
+    Cancelled,
 }
 
 impl fmt::Display for ServeError {
@@ -173,6 +178,9 @@ impl fmt::Display for ServeError {
             ServeError::Engine(msg) => write!(f, "engine error: {msg}"),
             ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
             ServeError::ShuttingDown => f.write_str("coordinator shutting down"),
+            ServeError::Cancelled => {
+                f.write_str("cancelled: consumer disconnected before execution")
+            }
         }
     }
 }

@@ -95,6 +95,9 @@ pub struct StatsInner {
     /// Jobs refused at admission because the route's circuit breaker was
     /// open.
     pub shed: u64,
+    /// Jobs dropped at batch formation because their consumer (a
+    /// disconnected network peer) was gone — never executed.
+    pub cancelled: u64,
     /// Circuit-breaker trips (including re-trips of failed half-open
     /// probes).
     pub breaker_trips: u64,
@@ -122,6 +125,7 @@ impl Default for StatsInner {
             rejected: 0,
             expired: 0,
             shed: 0,
+            cancelled: 0,
             breaker_trips: 0,
             memo_hits: 0,
             memo_misses: 0,
@@ -183,6 +187,7 @@ impl StatsInner {
             rejected: self.rejected,
             expired: self.expired,
             shed: self.shed,
+            cancelled: self.cancelled,
             breaker_trips: self.breaker_trips,
             memo_hits: self.memo_hits,
             memo_misses: self.memo_misses,
@@ -228,6 +233,9 @@ pub struct ServeStats {
     pub expired: u64,
     /// Jobs refused because the route's circuit breaker was open.
     pub shed: u64,
+    /// Jobs dropped at batch formation because their consumer was gone
+    /// (disconnected network peer) — never executed.
+    pub cancelled: u64,
     /// Circuit-breaker trips.
     pub breaker_trips: u64,
     /// Kinematics-memo hits across every `dyn_all` route (repeated

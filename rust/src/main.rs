@@ -39,13 +39,17 @@
 //!   optional `!control`/`!interactive`/`!bulk` suffix selecting the
 //!   route's QoS class (e.g. `iiwa!control,atlas:quant@12.12!bulk`).
 //!   See docs/serving.md.
-//! * `loadgen [--rate R] [--ramp] [--classes MIX] [--smoke]` — open-loop
-//!   Poisson overload harness against a capacity-pinned route:
-//!   per-class p50/p99/p99.9, shed rate, goodput vs offered load;
-//!   writes `rust/BENCH_serve.json`. `--smoke` is the short CI mode
-//!   asserting the overload invariants (no expired job executed,
-//!   monotone shedding, Control-p99 bound, breaker recovery). Includes
-//!   a network scenario driving the JSONL wire over a real socket.
+//! * `loadgen [--rate R] [--ramp] [--classes MIX] [--smoke] [--faults]`
+//!   — open-loop Poisson overload harness against a capacity-pinned
+//!   route: per-class p50/p99/p99.9, shed rate, retry counts, goodput
+//!   vs offered load; writes `rust/BENCH_serve.json`. `--smoke` is the
+//!   short CI mode asserting the overload invariants (no expired job
+//!   executed, monotone shedding, Control-p99 bound, breaker
+//!   recovery). Network scenarios drive the JSONL wire over real
+//!   sockets: single-connection Poisson arrivals, multi-client
+//!   overlapping-id routing, seeded fault injection, and retry/backoff
+//!   recovery; `--faults` runs only the fault suite (the CI fault
+//!   gate).
 //! * `serve --listen ADDR [--tee PATH]` — additionally bring up the
 //!   streaming JSONL TCP front-end (chunked trajectory egress, lazy
 //!   hot-field parsing) and self-drive it; `--tee` records the raw

@@ -1,0 +1,230 @@
+//! Deterministic wire-level fault injection.
+//!
+//! [`FaultyClient`] wraps a raw TCP stream to the server and corrupts
+//! its *outbound* traffic according to a seeded [`FaultPlan`]: standalone
+//! garbage lines between requests, writes torn into delayed fragments
+//! (exercising the server's resumable bounded reader), and a mid-line
+//! disconnect after a configured number of sends (exercising dead-wire
+//! cancellation). Every fault is drawn from a [`Rng`] seeded by the
+//! plan, so a scenario replays byte-identically: the fault suite can
+//! assert exact server behaviour, not just "something went wrong".
+//!
+//! The shim only perturbs the client→server direction. Responses are
+//! read with a plain [`NetClient`](super::NetClient) over the same
+//! socket (or the reading half is simply abandoned for disconnect
+//! scenarios); server→client faults are equivalent to a slow or dead
+//! reader, which the egress-queue grace in [`super::server`] covers.
+
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// What to inject, and how often. All probabilities are per sent line;
+/// `0.0` disables that fault class. Two clients driving the same plan
+/// (same seed) against the same request sequence emit identical bytes.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for the fault RNG.
+    pub seed: u64,
+    /// Probability of emitting one standalone garbage line before a
+    /// request line.
+    pub garbage_every: f64,
+    /// Probability of tearing a request line into several separately
+    /// flushed fragments.
+    pub tear_writes: f64,
+    /// Pause between torn fragments [µs] — dribbles a line across the
+    /// server's read timeouts.
+    pub fragment_delay_us: u64,
+    /// Disconnect mid-line on the Nth send (1-based); `0` never
+    /// disconnects.
+    pub disconnect_after: u64,
+}
+
+impl Default for FaultPlan {
+    /// A moderately hostile peer: occasional garbage, frequent torn
+    /// writes with a short dribble, no disconnect.
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0xFA_17,
+            garbage_every: 0.25,
+            tear_writes: 0.5,
+            fragment_delay_us: 200,
+            disconnect_after: 0,
+        }
+    }
+}
+
+/// A client whose writes misbehave per a [`FaultPlan`]. See the module
+/// docs for the fault classes.
+pub struct FaultyClient {
+    sock: TcpStream,
+    rng: Rng,
+    plan: FaultPlan,
+    sent: u64,
+    disconnected: bool,
+}
+
+impl FaultyClient {
+    /// Connect to `addr` and fault per `plan`.
+    pub fn connect(addr: SocketAddr, plan: FaultPlan) -> std::io::Result<FaultyClient> {
+        FaultyClient::from_stream(TcpStream::connect(addr)?, plan)
+    }
+
+    /// Wrap an existing stream (e.g. the write half of a cloned socket
+    /// whose read half feeds a [`NetClient`](super::NetClient)).
+    pub fn from_stream(sock: TcpStream, plan: FaultPlan) -> std::io::Result<FaultyClient> {
+        let rng = Rng::new(plan.seed);
+        Ok(FaultyClient { sock, rng, plan, sent: 0, disconnected: false })
+    }
+
+    /// Whether the plan's mid-line disconnect has fired.
+    pub fn disconnected(&self) -> bool {
+        self.disconnected
+    }
+
+    /// Lines fully sent so far (garbage and torn-off partials excluded).
+    pub fn sent(&self) -> u64 {
+        self.sent
+    }
+
+    /// Send one request line through the fault shim. Returns `Ok(true)`
+    /// if the line reached the socket intact (possibly torn into
+    /// fragments), `Ok(false)` if the plan disconnected mid-line
+    /// instead — after which every call is a no-op `Ok(false)`.
+    pub fn send_line(&mut self, line: &str) -> std::io::Result<bool> {
+        if self.disconnected {
+            return Ok(false);
+        }
+        if self.rng.f64() < self.plan.garbage_every {
+            let junk = self.garbage_line();
+            self.sock.write_all(junk.as_bytes())?;
+            self.sock.write_all(b"\n")?;
+        }
+        if self.plan.disconnect_after > 0 && self.sent + 1 >= self.plan.disconnect_after {
+            // Tear the connection down mid-line: the server must treat
+            // the torn prefix as noise and cancel anything this
+            // connection still has queued or streaming.
+            let bytes = line.as_bytes();
+            let cut = 1 + self.rng.below(bytes.len().saturating_sub(1).max(1));
+            self.sock.write_all(&bytes[..cut.min(bytes.len())])?;
+            let _ = self.sock.flush();
+            let _ = self.sock.shutdown(Shutdown::Both);
+            self.disconnected = true;
+            return Ok(false);
+        }
+        if self.rng.f64() < self.plan.tear_writes {
+            let mut rest = line.as_bytes();
+            while !rest.is_empty() {
+                let take = 1 + self.rng.below(rest.len());
+                self.sock.write_all(&rest[..take])?;
+                self.sock.flush()?;
+                rest = &rest[take..];
+                if !rest.is_empty() && self.plan.fragment_delay_us > 0 {
+                    std::thread::sleep(Duration::from_micros(self.plan.fragment_delay_us));
+                }
+            }
+            self.sock.write_all(b"\n")?;
+        } else {
+            self.sock.write_all(line.as_bytes())?;
+            self.sock.write_all(b"\n")?;
+        }
+        self.sent += 1;
+        Ok(true)
+    }
+
+    /// One standalone garbage line: never valid JSON-with-a-known-type,
+    /// never containing an interior newline, so the server must answer
+    /// `err` and resynchronise on the next real line.
+    fn garbage_line(&mut self) -> String {
+        match self.rng.below(4) {
+            0 => "}{not json at all".to_string(),
+            1 => "{\"type\":\"req\",\"id\":".to_string(),
+            2 => {
+                let n = 1 + self.rng.below(32);
+                let mut s = String::with_capacity(n);
+                for _ in 0..n {
+                    // Printable-ish noise plus the odd control byte the
+                    // UTF-8 check still accepts.
+                    let c = (0x20 + self.rng.below(0x5e)) as u8 as char;
+                    s.push(c);
+                }
+                s
+            }
+            _ => "{\"id\":true,\"robot\":7,\"route\":[],\"type\":\"req\"}".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    fn pump(plan: FaultPlan, lines: &[&str]) -> Vec<u8> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut got = Vec::new();
+            let _ = s.read_to_end(&mut got);
+            got
+        });
+        let mut c = FaultyClient::connect(addr, plan).unwrap();
+        for l in lines {
+            let _ = c.send_line(l).unwrap();
+        }
+        drop(c);
+        sink.join().unwrap()
+    }
+
+    /// The same plan (same seed) against the same lines yields an
+    /// identical byte stream — faults are reproducible, not flaky.
+    #[test]
+    fn same_seed_same_bytes() {
+        let plan = FaultPlan { fragment_delay_us: 0, ..FaultPlan::default() };
+        let lines = ["{\"id\":1,\"type\":\"req\"}", "{\"id\":2,\"type\":\"req\"}"];
+        let a = pump(plan.clone(), &lines);
+        let b = pump(plan.clone(), &lines);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "seeded fault plan must be byte-deterministic");
+        // A different seed takes a different path.
+        let c = pump(FaultPlan { seed: 99, ..plan }, &lines);
+        assert_ne!(a, c);
+    }
+
+    /// `disconnect_after` cuts mid-line exactly once, then every send
+    /// is a no-op.
+    #[test]
+    fn disconnects_once_mid_line() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let sink = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut got = Vec::new();
+            let _ = s.read_to_end(&mut got);
+            got
+        });
+        let plan = FaultPlan {
+            garbage_every: 0.0,
+            tear_writes: 0.0,
+            disconnect_after: 2,
+            ..FaultPlan::default()
+        };
+        let mut c = FaultyClient::connect(addr, plan).unwrap();
+        let line = "{\"id\":1,\"route\":\"fd\",\"type\":\"req\"}";
+        assert!(c.send_line(line).unwrap(), "first send is intact");
+        assert!(!c.send_line(line).unwrap(), "second send disconnects");
+        assert!(c.disconnected());
+        assert_eq!(c.sent(), 1);
+        assert!(!c.send_line(line).unwrap(), "after disconnect: no-op");
+        let got = sink.join().unwrap();
+        // One full line, then a strict prefix of the second.
+        let nl = got.iter().position(|&b| b == b'\n').unwrap();
+        assert_eq!(&got[..nl], line.as_bytes());
+        let tail = &got[nl + 1..];
+        assert!(tail.len() < line.len(), "second line must be torn");
+        assert_eq!(tail, &line.as_bytes()[..tail.len()]);
+    }
+}

@@ -150,6 +150,34 @@ fn push_f32_arr(out: &mut String, data: &[f32]) {
     out.push(']');
 }
 
+/// Inject a connection-namespace tag into a captured wire line:
+/// `{"x":1}` → `{"conn":N,"x":1}`. Tee-only — frames on the live socket
+/// never carry it. The tag deliberately *leads* the object (the one
+/// documented exception to alphabetical key order) so [`conn_tag`] can
+/// extract it without parsing the rest of the line; both the lazy
+/// scanner and the full parser skip unknown keys, so tagged request
+/// lines stay parseable. Non-object lines pass through untouched (they
+/// are counted malformed at replay anyway).
+pub fn tag_conn(conn: u64, line: &str) -> String {
+    match line.strip_prefix('{') {
+        Some(rest) if rest.trim_start() == "}" => format!("{{\"conn\":{conn}}}"),
+        Some(rest) => format!("{{\"conn\":{conn},{rest}"),
+        None => line.to_string(),
+    }
+}
+
+/// Extract the connection tag of a teed line, if present. Untagged
+/// lines (the `hello` header, pre-namespacing captures) belong to
+/// connection 0.
+pub fn conn_tag(line: &str) -> Option<u64> {
+    let rest = line.strip_prefix("{\"conn\":")?;
+    let end = rest.find(|c: char| !c.is_ascii_digit())?;
+    if end == 0 || !matches!(rest.as_bytes()[end], b',' | b'}') {
+        return None;
+    }
+    rest[..end].parse().ok()
+}
+
 /// `hello` line (keys alphabetical, like every writer here).
 pub fn hello_line(spec: &str, batch: usize, window_us: u64) -> String {
     format!(
@@ -446,6 +474,39 @@ mod tests {
             }
             other => panic!("expected chunk, got {other:?}"),
         }
+    }
+
+    /// Connection tags round-trip through tag/extract, tagged frames
+    /// still parse (unknown keys are skipped), and untagged lines read
+    /// back as connection 0 at the caller's default.
+    #[test]
+    fn conn_tags_round_trip_and_stay_parseable() {
+        let line = ack_line(7);
+        let tagged = tag_conn(3, &line);
+        assert_eq!(tagged, "{\"conn\":3,\"id\":7,\"type\":\"ack\"}");
+        assert_eq!(conn_tag(&tagged), Some(3));
+        assert_eq!(conn_tag(&line), None, "untagged lines have no tag");
+        assert_eq!(Frame::parse(&tagged).unwrap(), Frame::Ack { id: 7 }, "tag is skipped");
+        // Request lines survive tagging for both parsers.
+        let req = req_step_line(11, "iiwa", "fd", None, None, &[vec![1.5f32; 2]]);
+        let tagged = tag_conn(42, &req);
+        assert_eq!(conn_tag(&tagged), Some(42));
+        match Frame::parse(&tagged).unwrap() {
+            Frame::Req(r) => {
+                assert_eq!(r.id, 11);
+                assert_eq!(r.ops.unwrap(), vec![vec![1.5f32; 2]]);
+            }
+            other => panic!("expected req, got {other:?}"),
+        }
+        let lazy = crate::net::LazyReq::scan(&tagged).expect("lazy scan skips the tag");
+        assert_eq!(lazy.id, 11);
+        assert_eq!(lazy.robot, Some("iiwa"));
+        // Degenerate inputs: empty object, non-object garbage.
+        assert_eq!(tag_conn(1, "{}"), "{\"conn\":1}");
+        assert_eq!(conn_tag("{\"conn\":1}"), Some(1));
+        assert_eq!(tag_conn(1, "not json"), "not json");
+        assert_eq!(conn_tag("{\"conn\":x}"), None);
+        assert_eq!(conn_tag("{\"connive\":3}"), None);
     }
 
     #[test]

@@ -11,24 +11,40 @@
 //! so a client consumes `q_t ‖ q̇_t` while the remaining horizon is
 //! still being computed.
 //!
+//! Request ids are namespaced *per connection*: two clients may use
+//! overlapping ids freely, and tee captures tag every line with its
+//! connection (`{"conn":N,…}`) so replay keeps them separate.
+//!
 //! Layers:
 //!
 //! * [`frame`] — typed frames, deterministic writers (alphabetical
-//!   keys, shortest-round-trip f32 text), full-tree parser.
+//!   keys, shortest-round-trip f32 text), full-tree parser, connection
+//!   tagging for multi-client captures.
 //! * [`lazy`] — single-pass hot-field scanner used on the request path;
 //!   payload arrays stay byte spans until the batcher needs them.
-//! * [`server`] — the TCP listener, per-connection reader, socket-
-//!   backed [`ResponseSink`](crate::coordinator::ResponseSink), raw
-//!   JSONL tee, and an end-to-end self-drive smoke.
-//! * [`replay`] — offline re-execution of a tee capture with bitwise
-//!   payload comparison (`draco replay LOG`).
+//! * [`server`] — the TCP listener, per-connection reader + bounded
+//!   egress writer, socket-backed
+//!   [`ResponseSink`](crate::coordinator::ResponseSink), raw JSONL tee
+//!   (self-disabling on write error), and an end-to-end self-drive
+//!   smoke. Dead connections cancel their queued and streaming work.
+//! * [`chaos`] — seeded fault-injection client (garbage lines, torn
+//!   writes, mid-line disconnects) for the fault suite.
+//! * [`retry`] — client-side retry/backoff loop honouring the server's
+//!   `retry_after_us` hints under a per-request budget.
+//! * [`replay`] — offline re-execution of a tee capture (single- or
+//!   multi-connection) with bitwise payload comparison
+//!   (`draco replay LOG`).
 
+pub mod chaos;
 pub mod frame;
 pub mod lazy;
 pub mod replay;
+pub mod retry;
 pub mod server;
 
+pub use chaos::{FaultPlan, FaultyClient};
 pub use frame::{Frame, NetReq};
 pub use lazy::LazyReq;
 pub use replay::{replay_cli, replay_log, ReplayReport};
+pub use retry::{RetryClient, RetryOutcome, RetryPolicy, RetryStats};
 pub use server::{self_drive, NetClient, NetServer, MAX_LINE_BYTES};

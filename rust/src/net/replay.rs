@@ -20,11 +20,15 @@
 //! ([`LazyReq::scan`], the path the live server used) and through the
 //! full [`Json`](crate::util::json::Json) tree ([`Frame::parse`]) — and
 //! the two must agree on every hot field and every payload value,
-//! bit for bit. Replay assumes request ids are unique across the log
-//! (true of single-connection captures, which is what the CI smoke and
-//! the self-drive produce).
+//! bit for bit. Request ids are namespaced per connection: the server
+//! tags every teed line with its connection id (`{"conn":N,…}`, see
+//! [`frame::conn_tag`]), and replay keys its bookkeeping by
+//! `(connection, id)` — multi-client captures with overlapping ids
+//! replay fine, as long as each connection's own ids are unique.
+//! Untagged lines (pre-tagging captures, hand-written logs) fall back
+//! to connection 0.
 
-use super::frame::{Frame, NetReq};
+use super::frame::{self, Frame, NetReq};
 use super::lazy::{self, LazyReq};
 use crate::coordinator::{
     Coordinator, QosClass, ResponseSink, RobotRegistry, ServeError, SubmitOptions, TrajRequest,
@@ -186,20 +190,23 @@ pub fn replay_log(path: &str) -> Result<ReplayReport, String> {
     };
     let registry = RobotRegistry::from_cli_spec(&spec, batch)?;
 
-    let mut reqs: Vec<&str> = Vec::new();
-    let mut seen = BTreeSet::new();
-    let mut live: BTreeMap<u64, Live> = BTreeMap::new();
+    let mut reqs: Vec<(u64, &str)> = Vec::new();
+    let mut seen: BTreeSet<(u64, u64)> = BTreeSet::new();
+    let mut live: BTreeMap<(u64, u64), Live> = BTreeMap::new();
     let mut report = ReplayReport::default();
     for line in lines {
+        // Connection tag injected by the tee; untagged lines → conn 0.
+        let conn = frame::conn_tag(line).unwrap_or(0);
         if let Ok(l) = LazyReq::scan(line) {
             if l.typ == "req" {
-                if !seen.insert(l.id) {
+                if !seen.insert((conn, l.id)) {
                     return Err(format!(
-                        "duplicate request id {} — replay expects single-connection captures",
+                        "duplicate request id {} on connection {conn} — captures must be \
+                         id-unique per connection",
                         l.id
                     ));
                 }
-                reqs.push(line);
+                reqs.push((conn, line));
                 continue;
             }
         }
@@ -207,7 +214,7 @@ pub fn replay_log(path: &str) -> Result<ReplayReport, String> {
             Ok(f) => {
                 let Some(id) = f.id() else { continue };
                 let entry = live
-                    .entry(id)
+                    .entry((conn, id))
                     .or_insert_with(|| Live { chunks: Vec::new(), outcome: None });
                 match f {
                     Frame::Chunk { data, .. } => entry.chunks.extend_from_slice(&data),
@@ -225,7 +232,7 @@ pub fn replay_log(path: &str) -> Result<ReplayReport, String> {
 
     report.requests = reqs.len();
     let coord = Coordinator::start_registry(&registry, window_us);
-    for raw in reqs {
+    for (conn, raw) in reqs {
         let l = LazyReq::scan(raw).expect("req lines were lazily scanned once already");
         if let Ok(Frame::Req(full)) = Frame::parse(raw) {
             report.lazy_checked += 1;
@@ -234,7 +241,7 @@ pub fn replay_log(path: &str) -> Result<ReplayReport, String> {
                 report.lazy_mismatches += 1;
             }
         }
-        match live.get(&l.id) {
+        match live.get(&(conn, l.id)) {
             None => report.incomplete += 1,
             Some(Live { outcome: None, .. }) => report.incomplete += 1,
             Some(Live { outcome: Some(Out::Refused), .. }) => report.timing_skipped += 1,

@@ -1,0 +1,238 @@
+//! Retrying wire client: jittered exponential backoff under a deadline
+//! budget.
+//!
+//! The server's refusal frames are *hints, not errors*: `rejected`
+//! (queue full) and `shed` (breaker open) carry a `retry_after_us`
+//! sized from the live queue depth and batching window, and `expired`
+//! means the request itself waited too long. [`RetryClient`] closes the
+//! loop: it resubmits on any of the three, waiting the larger of the
+//! server's hint and its own exponential schedule (±jitter so N clients
+//! refused together don't re-collide), and gives up with
+//! [`RetryOutcome::Exhausted`] once the per-request budget cannot fund
+//! the next wait. `err` frames are terminal — retrying a malformed or
+//! unroutable request can never succeed.
+//!
+//! Every retry decision draws from a seeded [`Rng`], so a loadgen
+//! scenario's retry schedule is reproducible run-to-run.
+
+use super::frame::{self, Frame};
+use super::NetClient;
+use crate::util::rng::Rng;
+use std::net::SocketAddr;
+use std::time::Duration;
+
+/// Backoff schedule and budget for one [`RetryClient`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// First backoff [µs].
+    pub base_us: u64,
+    /// Multiplier per attempt.
+    pub factor: f64,
+    /// Ceiling on a single backoff (and on honoured server hints) [µs].
+    pub max_backoff_us: u64,
+    /// Jitter fraction: the wait is scaled by a uniform draw from
+    /// `[1 − jitter, 1 + jitter]`.
+    pub jitter: f64,
+    /// Total per-request budget across all waits [µs]; when the next
+    /// wait does not fit in what remains, the client gives up.
+    pub budget_us: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            base_us: 200,
+            factor: 2.0,
+            max_backoff_us: 50_000,
+            jitter: 0.25,
+            budget_us: 2_000_000,
+        }
+    }
+}
+
+/// Counters a [`RetryClient`] accumulates across requests; loadgen
+/// reports them per scenario.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RetryStats {
+    /// Resubmissions performed (first attempts not counted).
+    pub retries: u64,
+    /// Total time spent backing off [µs].
+    pub backoff_us: u64,
+}
+
+/// Terminal result of one retried request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RetryOutcome {
+    /// Completed: concatenated payload of every `chunk`, in order.
+    Ok(Vec<f32>),
+    /// Non-retryable failure (an `err` frame, e.g. bad route).
+    Err(String),
+    /// Retryable refusals kept coming until the backoff budget was
+    /// spent; carries the last refusal's description.
+    Exhausted(String),
+}
+
+/// Compute the next backoff wait [µs]: the larger of the exponential
+/// schedule and the server's hint (both clamped to `max_backoff_us`),
+/// scaled by the jitter draw, never zero. `attempt` counts completed
+/// attempts (0 → first retry).
+pub fn backoff(policy: &RetryPolicy, rng: &mut Rng, attempt: u32, hint_us: u64) -> u64 {
+    let exp = (policy.base_us as f64) * policy.factor.powi(attempt as i32);
+    let exp = (exp as u64).min(policy.max_backoff_us);
+    let hint = hint_us.min(policy.max_backoff_us);
+    let wait = exp.max(hint) as f64;
+    let scale = 1.0 + policy.jitter * (2.0 * rng.f64() - 1.0);
+    ((wait * scale) as u64).max(1)
+}
+
+/// What one attempt's response stream amounted to.
+enum Attempt {
+    Done(Vec<f32>),
+    Fatal(String),
+    Recoverable { hint_us: u64, what: String },
+}
+
+/// A [`NetClient`] that honours the server's retry contract. Not
+/// pipelined: one request in flight at a time (frames for other ids,
+/// e.g. stragglers from an abandoned attempt, are skipped).
+pub struct RetryClient {
+    client: NetClient,
+    policy: RetryPolicy,
+    rng: Rng,
+    stats: RetryStats,
+}
+
+impl RetryClient {
+    /// Connect to a server; `seed` fixes the jitter schedule.
+    pub fn connect(
+        addr: SocketAddr,
+        policy: RetryPolicy,
+        seed: u64,
+    ) -> std::io::Result<RetryClient> {
+        Ok(RetryClient {
+            client: NetClient::connect(addr)?,
+            policy,
+            rng: Rng::new(seed),
+            stats: RetryStats::default(),
+        })
+    }
+
+    /// Counters accumulated so far.
+    pub fn stats(&self) -> RetryStats {
+        self.stats
+    }
+
+    /// Submit a step request and retry refusals until it completes, the
+    /// server answers a terminal `err`, or the backoff budget runs out.
+    /// `Err` is reserved for transport failures (broken socket).
+    pub fn step(
+        &mut self,
+        id: u64,
+        robot: &str,
+        route: &str,
+        class: Option<&str>,
+        ops: &[Vec<f32>],
+    ) -> std::io::Result<RetryOutcome> {
+        let mut attempt: u32 = 0;
+        let mut spent_us: u64 = 0;
+        loop {
+            self.client.send_line(&frame::req_step_line(id, robot, route, class, None, ops))?;
+            let wait = match self.collect(id)? {
+                Attempt::Done(payload) => return Ok(RetryOutcome::Ok(payload)),
+                Attempt::Fatal(msg) => return Ok(RetryOutcome::Err(msg)),
+                Attempt::Recoverable { hint_us, what } => {
+                    let wait = backoff(&self.policy, &mut self.rng, attempt, hint_us);
+                    if spent_us + wait > self.policy.budget_us {
+                        return Ok(RetryOutcome::Exhausted(what));
+                    }
+                    wait
+                }
+            };
+            attempt += 1;
+            spent_us += wait;
+            self.stats.retries += 1;
+            self.stats.backoff_us += wait;
+            std::thread::sleep(Duration::from_micros(wait));
+        }
+    }
+
+    /// Read frames for `id` until its terminal frame.
+    fn collect(&mut self, id: u64) -> std::io::Result<Attempt> {
+        let mut payload: Vec<f32> = Vec::new();
+        loop {
+            match self.client.read_frame()? {
+                Frame::Ack { id: got } if got == id => {}
+                Frame::Chunk { id: got, data, .. } if got == id => payload.extend(data),
+                Frame::Done { id: got, .. } if got == id => return Ok(Attempt::Done(payload)),
+                Frame::Rejected { id: got, class, depth, retry_after_us } if got == id => {
+                    return Ok(Attempt::Recoverable {
+                        hint_us: retry_after_us,
+                        what: format!("rejected: {class} queue full (depth {depth})"),
+                    })
+                }
+                Frame::Shed { id: got, consecutive_failures, retry_after_us } if got == id => {
+                    return Ok(Attempt::Recoverable {
+                        hint_us: retry_after_us,
+                        what: format!("shed: breaker open after {consecutive_failures} failures"),
+                    })
+                }
+                Frame::Expired { id: got, deadline_us, waited_us } if got == id => {
+                    return Ok(Attempt::Recoverable {
+                        hint_us: 0,
+                        what: format!("expired: waited {waited_us}µs against {deadline_us}µs"),
+                    })
+                }
+                Frame::Err { id: got, msg } if got == id || got == 0 => {
+                    return Ok(Attempt::Fatal(msg))
+                }
+                // Frames for other ids (stragglers from an abandoned
+                // attempt on this connection) are skipped.
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RetryPolicy {
+        RetryPolicy { jitter: 0.0, ..RetryPolicy::default() }
+    }
+
+    /// No jitter: the wait is exactly max(exponential, hint), clamped.
+    #[test]
+    fn backoff_honours_hint_and_clamp() {
+        let p = policy();
+        let mut rng = Rng::new(1);
+        assert_eq!(backoff(&p, &mut rng, 0, 0), 200);
+        assert_eq!(backoff(&p, &mut rng, 1, 0), 400);
+        assert_eq!(backoff(&p, &mut rng, 0, 5_000), 5_000, "server hint dominates");
+        assert_eq!(backoff(&p, &mut rng, 20, 0), p.max_backoff_us, "exponent clamps");
+        assert_eq!(
+            backoff(&p, &mut rng, 0, 10_000_000),
+            p.max_backoff_us,
+            "absurd hints clamp too"
+        );
+    }
+
+    /// Jitter stays within ±fraction and the wait is never zero.
+    #[test]
+    fn backoff_jitter_bounded_and_nonzero() {
+        let p = RetryPolicy { jitter: 0.25, ..policy() };
+        let mut rng = Rng::new(42);
+        for attempt in 0..8 {
+            let w = backoff(&p, &mut rng, attempt, 0);
+            let nominal = (200.0 * 2.0f64.powi(attempt as i32)).min(50_000.0);
+            assert!(w as f64 >= nominal * 0.74 && w as f64 <= nominal * 1.26, "wait {w} outside jitter band around {nominal}");
+            assert!(w >= 1);
+        }
+        // Same seed → same schedule.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for attempt in 0..8 {
+            assert_eq!(backoff(&p, &mut a, attempt, 300), backoff(&p, &mut b, attempt, 300));
+        }
+    }
+}

@@ -46,10 +46,10 @@ extract_hotpath() {
 
 # Emit "scenario|class|p99_us|goodput_per_s" per serve row. Same
 # alphabetical-key trick: within a row object "scenario" sorts last
-# (class, completed, expired, goodput_per_s, offered_per_s, p50_us,
-# p999_us, p99_us, rejected, scenario), so it closes the row. The
-# top-level "robot"/"schema" keys sort after "rows", so they cannot
-# bleed into row state.
+# (backoff_us, class, completed, expired, goodput_per_s, offered_per_s,
+# p50_us, p999_us, p99_us, rejected, retries, scenario), so it closes
+# the row. The top-level "robot"/"schema" keys sort after "rows", so
+# they cannot bleed into row state.
 extract_serve() {
     awk '
         /"class":/         { v = $2; gsub(/[",]/, "", v); cls = v }
@@ -117,7 +117,9 @@ if [ "$1" = "--check" ]; then
         # The uncontended/overload pair for every QoS class is the
         # tracked envelope, and every run measures the real-engine
         # scenarios (native f64 + true-integer FD routes, plus the FD
-        # route over the TCP JSONL wire); ramp rows may come and go.
+        # route over the TCP JSONL wire) and the wire-robustness pair
+        # (multi-client bitwise routing, retry/backoff recovery); ramp
+        # rows may come and go.
         for need in \
             "uncontended|control" \
             "uncontended|interactive" \
@@ -127,7 +129,9 @@ if [ "$1" = "--check" ]; then
             "overload|bulk" \
             "real-native-fd|bulk" \
             "real-qint-fd|bulk" \
-            "real-net-fd|bulk"; do
+            "real-net-fd|bulk" \
+            "serve_net_multi|bulk" \
+            "net_retry_recovery|bulk"; do
             if ! printf '%s\n' "$rows" | grep -q "^${need}|"; then
                 echo "SCHEMA FAIL: missing serve row ${need} in $f" >&2
                 exit 1
