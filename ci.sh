@@ -65,10 +65,20 @@ echo "== wire smoke: serve --listen + replay =="
 # offline: replay exits nonzero unless every comparable response is
 # bitwise identical and lazy/full parsing agree on every captured line.
 TEE="$(mktemp)"
-trap 'rm -f "$TEE"' EXIT
+TRACE="$(mktemp)"
+trap 'rm -f "$TEE" "$TRACE"' EXIT
 cargo run --release --quiet -- serve --requests 32 --batch 8 --window-us 200 \
     --robots iiwa,atlas:qint@12.14 --traj 16 --listen 127.0.0.1:0 --tee "$TEE"
 cargo run --release --quiet -- replay "$TEE"
+
+echo "== trace smoke: serve --trace + stats --trace-file =="
+# Run a short traced workload and validate the Chrome trace-event
+# export: `stats --trace-file` parses the JSON and exits nonzero unless
+# it finds at least one complete job span — so an empty, truncated, or
+# malformed export fails CI here.
+cargo run --release --quiet -- serve --requests 32 --batch 8 --window-us 200 \
+    --robots iiwa --trace "$TRACE"
+cargo run --release --quiet -- stats --trace-file "$TRACE"
 
 echo "== fault smoke: loadgen --smoke --faults =="
 # Wire fault suite under a seeded FaultPlan: 4 concurrent connections

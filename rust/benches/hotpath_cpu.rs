@@ -16,7 +16,9 @@
 //! can track the perf trajectory. Pass `--quick` for a smoke run (CI).
 //!
 //! Parallel-serving rows: `fd_pool64` (the worker-pool handoff — one
-//! 64-task batch fanned across the persistent pool), `serve_fd_par64`
+//! 64-task batch fanned across the persistent pool), `trace_overhead`
+//! (the same pooled batch plus the per-job disabled-tracing span path —
+//! must stay within 2% of `fd_pool64`), `serve_fd_par64`
 //! (64 FD requests through a coordinator route with intra-route
 //! parallelism, to compare against the serial `serve_fd_mixed64`
 //! baseline at the same dispatch cost), and `serve_fd_quant_par64` (the
@@ -52,6 +54,7 @@ use draco::dynamics::{
 use draco::model::{builtin_robot, Robot, State};
 use draco::net::frame::{req_step_line, req_traj_line};
 use draco::net::{Frame, LazyReq, NetClient, NetServer};
+use draco::obs::{ObsHub, Terminal};
 use draco::quant::scaling::validate_int_backend;
 use draco::quant::{QFormat, QuantIntScratch};
 use draco::runtime::artifact::ArtifactFn;
@@ -490,7 +493,35 @@ fn main() {
         let st = time_auto(target_ms, || {
             black_box(pool.eval(&iiwa, BatchKernel::Fd, &pool_tasks, chunks));
         });
+        let pool_median_us = st.median_us();
         add("iiwa", "fd_pool64", &st, BATCH);
+
+        // Disabled-tracing tax: the identical pooled 64-task FD batch,
+        // but every task additionally walks the full span hot path the
+        // coordinator runs per job — one `OnceLock` load returning the
+        // inert span (tracing OFF), the no-op lifecycle stamps, and the
+        // terminal finish. The budget is <2% over fd_pool64 above; the
+        // bench_diff gate tracks this row.
+        let obs = ObsHub::new();
+        let st = time_auto(target_ms, || {
+            for _ in 0..BATCH {
+                let mut span = obs.begin_span("iiwa", "fd", "bulk");
+                span.stamp_enqueue();
+                span.stamp_formed();
+                span.stamp_kernel_start();
+                span.stamp_kernel_end();
+                span.stamp_chunk();
+                span.finish(Terminal::Done);
+            }
+            black_box(pool.eval(&iiwa, BatchKernel::Fd, &pool_tasks, chunks));
+        });
+        println!(
+            "disabled-tracing overhead vs fd_pool64: {:+.2}% ({:.3} vs {:.3} us/task)",
+            (st.median_us() / pool_median_us - 1.0) * 100.0,
+            st.median_us() / BATCH as f64,
+            pool_median_us / BATCH as f64
+        );
+        add("iiwa", "trace_overhead", &st, BATCH);
 
         // Intra-route parallelism: 64 FD requests through ONE
         // coordinator route whose batches split across the worker pool —

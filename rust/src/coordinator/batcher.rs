@@ -25,6 +25,7 @@ use super::registry::RobotRegistry;
 use super::stats::{lock_stats, ServeStats, StatsInner};
 use crate::dynamics::pool::panic_message;
 use crate::model::Robot;
+use crate::obs::{ObsHub, RouteStages, Span, Terminal};
 use crate::quant::QFormat;
 #[cfg(feature = "pjrt")]
 use crate::runtime::artifact::ArtifactMeta;
@@ -76,6 +77,9 @@ pub struct Job {
     /// (the JSONL server's socket writer). Trajectory workers stream
     /// rows into it mid-horizon.
     pub sink: Box<dyn ResponseSink>,
+    /// Trace span stamped as the job moves through the pipeline — the
+    /// inert [`Span::disabled`] unless `serve --trace` is on.
+    pub span: Span,
 }
 
 impl Job {
@@ -87,9 +91,32 @@ impl Job {
     }
 
     /// Terminate this job with an error (consumes the job; `done` is
-    /// the sink's exactly-once completion call).
+    /// the sink's exactly-once completion call). The span's terminal
+    /// mirrors the error, so every traced job ends in exactly one
+    /// terminal stamp no matter which failure path consumed it.
     fn fail(mut self, err: ServeError) {
+        self.span.finish(terminal_for(&err));
         self.sink.done(Err(err));
+    }
+}
+
+/// The trace terminal that mirrors a [`ServeError`].
+fn terminal_for(err: &ServeError) -> Terminal {
+    match err {
+        ServeError::Rejected { .. } => Terminal::Rejected,
+        ServeError::Shed { .. } => Terminal::Shed,
+        ServeError::Expired { .. } => Terminal::Expired,
+        ServeError::Cancelled => Terminal::Cancelled,
+        ServeError::ShuttingDown => Terminal::Shutdown,
+        ServeError::Engine(_) | ServeError::BadRequest(_) => Terminal::Error,
+    }
+}
+
+/// Display name of a route for spans and stage-metric labels.
+fn route_label(route: Route) -> &'static str {
+    match route {
+        Route::Step(f) => f.name(),
+        Route::Traj => "traj",
     }
 }
 
@@ -464,6 +491,7 @@ pub struct Coordinator {
     default_robot: Option<String>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<StatsInner>>,
+    obs: Arc<ObsHub>,
 }
 
 impl Coordinator {
@@ -486,6 +514,8 @@ impl Coordinator {
         policy: QosPolicy,
     ) -> Coordinator {
         let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let obs = Arc::new(ObsHub::new());
+        let class_names: Vec<&str> = QosClass::ALL.iter().map(|c| c.name()).collect();
         let default_robot = specs.first().map(|s| s.robot_name().to_string());
         let mut routes = BTreeMap::new();
         let mut workers = Vec::new();
@@ -497,11 +527,20 @@ impl Coordinator {
                 (spec.robot_name().to_string(), spec.route()),
                 RouteHandle { tx, gate: Arc::clone(&gate) },
             );
+            let stages =
+                obs.route_stages(spec.robot_name(), route_label(spec.route()), &class_names);
             let st = Arc::clone(&stats);
-            workers
-                .push(std::thread::spawn(move || worker_loop(spec, n, window_us, rx, st, gate)));
+            workers.push(std::thread::spawn(move || {
+                worker_loop(spec, n, window_us, rx, st, gate, stages)
+            }));
         }
-        Coordinator { routes, default_robot, workers, stats }
+        Coordinator { routes, default_robot, workers, stats, obs }
+    }
+
+    /// The observability hub: always-on metrics registry plus the
+    /// opt-in trace sink ([`ObsHub::enable_tracing`]).
+    pub fn obs(&self) -> &Arc<ObsHub> {
+        &self.obs
     }
 
     /// Start a native coordinator serving `functions` for one robot, one
@@ -670,18 +709,21 @@ impl Coordinator {
         match self.routes.get(&(robot.to_string(), route)) {
             Some(handle) => {
                 let class = opts.class.unwrap_or(handle.gate.default_class);
+                let mut span = self.obs.begin_span(robot, route_label(route), class.name());
                 match handle.gate.admit(class) {
                     Ok(()) => {
                         // Ack before the worker can see the job, so the
                         // wire ordering `ack` < first `chunk` holds by
                         // construction.
                         sink.accepted();
+                        span.stamp_enqueue();
                         let job = Job {
                             payload,
                             class,
                             deadline_us: opts.deadline_us,
                             enqueued: Instant::now(),
                             sink,
+                            span,
                         };
                         // If the worker is gone the send fails; recover
                         // the job from the send error so its sink still
@@ -696,7 +738,8 @@ impl Coordinator {
                     }
                     Err(err) => {
                         // Refused at admission: count it and answer
-                        // immediately — the job was never enqueued.
+                        // immediately — the job was never enqueued. The
+                        // short span still records the refusal terminal.
                         {
                             let mut st = lock_stats(&self.stats);
                             match &err {
@@ -705,6 +748,7 @@ impl Coordinator {
                                 _ => {}
                             }
                         }
+                        span.finish(terminal_for(&err));
                         sink.done(Err(err));
                     }
                 }
@@ -839,6 +883,7 @@ fn worker_loop(
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
     gate: Arc<RouteGate>,
+    stages: RouteStages,
 ) {
     let _ = n; // used only by the pjrt arm
     let window = Duration::from_micros(window_us);
@@ -847,13 +892,13 @@ fn worker_loop(
             let exec = EngineExecutor(Box::new(NativeEngine::with_parallelism(
                 robot, function, batch, parallel,
             )));
-            step_worker(Box::new(exec), window, rx, stats, gate);
+            step_worker(Box::new(exec), window, rx, stats, gate, stages);
         }
         BackendSpec::NativeQuant { robot, function, batch, fmt, parallel, comp, class: _ } => {
             let exec = EngineExecutor(Box::new(QuantEngine::with_options(
                 robot, function, batch, fmt, parallel, comp,
             )));
-            step_worker(Box::new(exec), window, rx, stats, gate);
+            step_worker(Box::new(exec), window, rx, stats, gate, stages);
         }
         BackendSpec::NativeInt { robot, function, batch, fmt, parallel, class: _ } => {
             // The engine runs the scaling analysis; a rejected pair
@@ -866,6 +911,7 @@ fn worker_loop(
                     rx,
                     stats,
                     gate,
+                    stages,
                 ),
                 Err(e) => fail_all(&rx, &gate, &ServeError::Engine(e.0)),
             }
@@ -873,7 +919,7 @@ fn worker_loop(
         BackendSpec::Chaos { robot, function, batch, delay_us, class: _ } => {
             let exec =
                 EngineExecutor(Box::new(ChaosEngine::new(robot, function, batch, delay_us)));
-            step_worker(Box::new(exec), window, rx, stats, gate);
+            step_worker(Box::new(exec), window, rx, stats, gate, stages);
         }
         BackendSpec::Trajectory { robot, batch, lane, class: _ } => {
             let engine: Box<dyn DynamicsEngine> = match lane {
@@ -887,7 +933,7 @@ fn worker_loop(
                 },
                 TrajLane::F64 => Box::new(NativeEngine::new(robot, ArtifactFn::Fd, batch)),
             };
-            traj_worker(engine, batch, window, rx, stats, gate);
+            traj_worker(engine, batch, window, rx, stats, gate, stages);
         }
         #[cfg(feature = "pjrt")]
         BackendSpec::Pjrt { meta, class: _ } => {
@@ -911,6 +957,7 @@ fn worker_loop(
                 rx,
                 stats,
                 gate,
+                stages,
             );
         }
     }
@@ -924,6 +971,7 @@ fn step_worker(
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
     gate: Arc<RouteGate>,
+    stages: RouteStages,
 ) {
     let b = exec.batch().max(1);
     let mut lanes = ClassLanes::default();
@@ -937,7 +985,7 @@ fn step_worker(
         match drain_into(&rx, &mut lanes, b, window) {
             Drained::Open => {
                 let picked = lanes.form_batch(b, &stats, &gate);
-                flush_step(exec.as_mut(), picked, &stats, &gate);
+                flush_step(exec.as_mut(), picked, &stats, &gate, &stages);
             }
             Drained::Stopped => {
                 lanes.fail_all_queued(&gate);
@@ -946,7 +994,7 @@ fn step_worker(
             Drained::Disconnected => {
                 while !lanes.is_empty() {
                     let picked = lanes.form_batch(b, &stats, &gate);
-                    flush_step(exec.as_mut(), picked, &stats, &gate);
+                    flush_step(exec.as_mut(), picked, &stats, &gate, &stages);
                 }
                 return;
             }
@@ -963,6 +1011,7 @@ fn traj_worker(
     rx: Receiver<Msg>,
     stats: Arc<Mutex<StatsInner>>,
     gate: Arc<RouteGate>,
+    stages: RouteStages,
 ) {
     let cap = cap.max(1);
     let mut lanes = ClassLanes::default();
@@ -976,7 +1025,7 @@ fn traj_worker(
         match drain_into(&rx, &mut lanes, cap, window) {
             Drained::Open => {
                 let picked = lanes.form_batch(cap, &stats, &gate);
-                flush_traj(engine.as_mut(), picked, &stats, &gate, cap);
+                flush_traj(engine.as_mut(), picked, &stats, &gate, cap, &stages);
             }
             Drained::Stopped => {
                 lanes.fail_all_queued(&gate);
@@ -985,7 +1034,7 @@ fn traj_worker(
             Drained::Disconnected => {
                 while !lanes.is_empty() {
                     let picked = lanes.form_batch(cap, &stats, &gate);
-                    flush_traj(engine.as_mut(), picked, &stats, &gate, cap);
+                    flush_traj(engine.as_mut(), picked, &stats, &gate, cap, &stages);
                 }
                 return;
             }
@@ -1023,9 +1072,10 @@ fn drain_into(
 /// route's circuit breaker instead of killing the worker thread.
 fn flush_step(
     exec: &mut dyn BatchExecutor,
-    picked: Vec<Job>,
+    mut picked: Vec<Job>,
     stats: &Arc<Mutex<StatsInner>>,
     gate: &RouteGate,
+    stages: &RouteStages,
 ) {
     if picked.is_empty() {
         return;
@@ -1033,6 +1083,16 @@ fn flush_step(
     let b = exec.batch();
     let n = exec.n();
     let arity = exec.arity();
+
+    // Batch formation: the queue stage of every picked job ends here.
+    let t_formed = Instant::now();
+    for job in picked.iter_mut() {
+        job.span.stamp_formed();
+        stages.record_queue(
+            job.class.index(),
+            t_formed.saturating_duration_since(job.enqueued).as_micros() as u64,
+        );
+    }
 
     // Reject malformed jobs up front: a bad task must fail alone instead
     // of poisoning (or panicking) the whole assembled batch.
@@ -1078,10 +1138,17 @@ fn flush_step(
     }
 
     let (hits_before, misses_before) = exec.memo_counters();
+    for job in picked.iter_mut() {
+        job.span.stamp_kernel_start();
+    }
     let t0 = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| exec.execute(&inputs)))
         .unwrap_or_else(|p| Err(format!("engine panicked: {}", panic_message(p.as_ref()))));
     let exec_us = t0.elapsed().as_micros() as f64;
+    for job in picked.iter_mut() {
+        job.span.stamp_kernel_end();
+        stages.record_kernel(job.class.index(), exec_us as u64);
+    }
     // Memo activity is recorded as a per-execute delta so the serving
     // stats aggregate correctly across many routes sharing one stats
     // block. Non-memo routes report (0, 0) forever — zero delta.
@@ -1103,8 +1170,12 @@ fn flush_step(
             drop(st);
             for (i, mut job) in picked.drain(..).enumerate() {
                 gate.release(job.class);
+                let t_eg = Instant::now();
+                job.span.stamp_chunk();
                 job.sink.chunk(&flat[i * out_per_task..(i + 1) * out_per_task]);
                 job.sink.done(Ok(()));
+                stages.record_egress(job.class.index(), t_eg.elapsed().as_micros() as u64);
+                job.span.finish(Terminal::Done);
             }
         }
         Err(msg) => {
@@ -1121,6 +1192,7 @@ fn flush_step(
     // a batch slot and wall clock, and skipping it skewed `mean_fill` /
     // `mean_exec_us` against `batches` under error bursts.
     lock_stats(stats).record_batch(fill as f64 / b as f64, exec_us);
+    stages.record_batch((fill * 100 / b.max(1)) as u64, exec_us as u64);
 }
 
 /// Execute one formed trajectory batch (rollouts back-to-back) and fan
@@ -1140,13 +1212,25 @@ fn flush_traj(
     stats: &Arc<Mutex<StatsInner>>,
     gate: &RouteGate,
     cap: usize,
+    stages: &RouteStages,
 ) {
     if picked.is_empty() {
         return;
     }
+    // Batch formation: the queue stage of every picked rollout ends here.
+    let t_formed = Instant::now();
+    for job in picked.iter_mut() {
+        job.span.stamp_formed();
+        stages.record_queue(
+            job.class.index(),
+            t_formed.saturating_duration_since(job.enqueued).as_micros() as u64,
+        );
+    }
     let fill = picked.len().min(cap) as f64 / cap as f64;
     let t0 = Instant::now();
     for mut job in picked.drain(..) {
+        job.span.stamp_kernel_start();
+        let t_kernel = Instant::now();
         let result = match &job.payload {
             JobPayload::Traj(req) => {
                 let n = engine.n();
@@ -1155,8 +1239,10 @@ fn flush_traj(
                 let rows_hint = if n > 0 && req.tau.len() % n == 0 { req.tau.len() / n } else { 0 };
                 job.sink.begin_stream(rows_hint, n);
                 let sink = &mut job.sink;
+                let span = &mut job.span;
                 catch_unwind(AssertUnwindSafe(|| {
                     engine.rollout_stream(&req.q0, &req.qd0, &req.tau, req.dt, &mut |row| {
+                        span.stamp_chunk();
                         sink.chunk(row);
                         sink.alive()
                     })
@@ -1174,6 +1260,8 @@ fn flush_traj(
                 Err(ServeError::BadRequest("step operands sent to a trajectory route".into()))
             }
         };
+        job.span.stamp_kernel_end();
+        stages.record_kernel(job.class.index(), t_kernel.elapsed().as_micros() as u64);
         match &result {
             Ok(()) => {
                 gate.on_success();
@@ -1187,9 +1275,18 @@ fn flush_traj(
             Err(_) => {}
         }
         gate.release(job.class);
+        let terminal = match &result {
+            Ok(()) => Terminal::Done,
+            Err(e) => terminal_for(e),
+        };
+        let t_eg = Instant::now();
         job.sink.done(result);
+        stages.record_egress(job.class.index(), t_eg.elapsed().as_micros() as u64);
+        job.span.finish(terminal);
     }
-    lock_stats(stats).record_batch(fill, t0.elapsed().as_micros() as f64);
+    let exec_us = t0.elapsed().as_micros() as f64;
+    lock_stats(stats).record_batch(fill, exec_us);
+    stages.record_batch((fill * 100.0) as u64, exec_us as u64);
 }
 
 /// Answer every queued (and future) request on this route with the same

@@ -17,9 +17,11 @@
 //!
 //! Per (scenario, class) the harness reports offered load, goodput,
 //! shed counts, and p50/p99/p99.9 latency (from the coordinator's
-//! per-class reservoirs), and writes `rust/BENCH_serve.json`
-//! (schema `draco.serve.v1`) next to the hotpath bench dump so the
-//! overload envelope is tracked in-repo. In every scenario a trickle of
+//! per-class reservoirs), plus a server-side **per-stage breakdown**
+//! (queue wait vs kernel vs egress flush at p50/p99, from the
+//! [`RouteStages`](crate::obs::RouteStages) histograms), and writes
+//! `rust/BENCH_serve.json` (schema `draco.serve.v1`) next to the
+//! hotpath bench dump so the overload envelope is tracked in-repo. In every scenario a trickle of
 //! **probe jobs with an already-expired deadline** rides along; a probe
 //! that comes back `Ok` means an expired job was executed — the
 //! invariant `--smoke` asserts never happens.
@@ -94,6 +96,47 @@ struct ClassOutcome {
     p999_us: f64,
 }
 
+/// Server-side per-stage latency attribution of one scenario: where a
+/// request's time went — queue wait vs kernel execution vs egress flush
+/// — read from the coordinator's aggregate stage histograms (see
+/// [`RouteStages`](crate::obs::RouteStages)) before shutdown. All-zero
+/// for the wire-robustness scenarios, which measure other invariants.
+#[derive(Debug, Clone, Copy, Default)]
+struct StageBreakdown {
+    queue_p50_us: f64,
+    queue_p99_us: f64,
+    kernel_p50_us: f64,
+    kernel_p99_us: f64,
+    egress_p50_us: f64,
+    egress_p99_us: f64,
+}
+
+impl StageBreakdown {
+    /// Read the unlabelled (all-class, all-route) stage histograms from
+    /// `coord`'s metrics registry. Loadgen scenarios run one route per
+    /// fresh coordinator, so the aggregates are exactly this scenario's.
+    fn capture(coord: &Coordinator) -> StageBreakdown {
+        let snap = coord.obs().snapshot();
+        let pick = |name: &str| -> (f64, f64) {
+            match snap.hists.get(name) {
+                Some(h) => (h.percentile(0.50), h.percentile(0.99)),
+                None => (0.0, 0.0),
+            }
+        };
+        let (queue_p50_us, queue_p99_us) = pick("stage_queue_us");
+        let (kernel_p50_us, kernel_p99_us) = pick("stage_kernel_us");
+        let (egress_p50_us, egress_p99_us) = pick("stage_egress_us");
+        StageBreakdown {
+            queue_p50_us,
+            queue_p99_us,
+            kernel_p50_us,
+            kernel_p99_us,
+            egress_p50_us,
+            egress_p99_us,
+        }
+    }
+}
+
 /// One scenario: a name, its offered rate, and the per-class outcomes.
 struct ScenarioResult {
     name: String,
@@ -104,6 +147,9 @@ struct ScenarioResult {
     /// job. Must stay 0.
     probes_executed: u64,
     probes_sent: u64,
+    /// Server-side queue/kernel/egress attribution (zeros where the
+    /// scenario does not drive a fresh single-route coordinator).
+    stages: StageBreakdown,
 }
 
 impl ScenarioResult {
@@ -252,6 +298,7 @@ fn run_scenario(
         out.p99_us = cs.p99_latency_us;
         out.p999_us = cs.p999_latency_us;
     }
+    let stages = StageBreakdown::capture(&coord);
     coord.shutdown();
 
     ScenarioResult {
@@ -261,6 +308,7 @@ fn run_scenario(
         classes,
         probes_executed,
         probes_sent,
+        stages,
     }
 }
 
@@ -442,6 +490,7 @@ fn run_net_scenario(
         classes,
         probes_executed,
         probes_sent,
+        stages: StageBreakdown::capture(&coord),
     })
 }
 
@@ -660,6 +709,7 @@ fn run_multi_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, St
         classes: fold_tallies(tallies),
         probes_executed: 0,
         probes_sent: 0,
+        stages: StageBreakdown::default(),
     })
 }
 
@@ -938,6 +988,7 @@ fn run_faults_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, S
         classes,
         probes_executed: 0,
         probes_sent: 0,
+        stages: StageBreakdown::default(),
     })
 }
 
@@ -1035,6 +1086,7 @@ fn run_retry_scenario(robot: &Robot, cfg: &LoadCfg) -> Result<ScenarioResult, St
         classes,
         probes_executed: 0,
         probes_sent: 0,
+        stages: StageBreakdown::default(),
     })
 }
 
@@ -1291,6 +1343,31 @@ pub fn loadgen_cli(args: &Args) -> i32 {
     }
     table.print("open-loop serving: offered load vs goodput and tail latency");
 
+    // Per-stage latency attribution: where a completed request's time
+    // went, server-side (queue wait vs kernel vs egress flush), from the
+    // coordinator's stage histograms. Wire-robustness scenarios carry no
+    // breakdown (all-zero rows are skipped).
+    let mut stage_table = Table::new(&[
+        "scenario", "queue p50", "queue p99", "kernel p50", "kernel p99", "egress p50",
+        "egress p99",
+    ]);
+    for r in &results {
+        let s = &r.stages;
+        if s.queue_p99_us == 0.0 && s.kernel_p99_us == 0.0 && s.egress_p99_us == 0.0 {
+            continue;
+        }
+        stage_table.row(&[
+            r.name.clone(),
+            format!("{:.0}", s.queue_p50_us),
+            format!("{:.0}", s.queue_p99_us),
+            format!("{:.0}", s.kernel_p50_us),
+            format!("{:.0}", s.kernel_p99_us),
+            format!("{:.0}", s.egress_p50_us),
+            format!("{:.0}", s.egress_p99_us),
+        ]);
+    }
+    stage_table.print("per-stage latency attribution [µs]: queue vs kernel vs egress");
+
     // JSON dump: one row per (scenario, class). "scenario" sorts last
     // among the row keys, so line-oriented extractors can use it as the
     // row terminator (as bench_diff.sh does). Skipped in --faults mode,
@@ -1318,6 +1395,12 @@ pub fn loadgen_cli(args: &Args) -> i32 {
                     ("p50_us", json::num(o.p50_us)),
                     ("p99_us", json::num(o.p99_us)),
                     ("p999_us", json::num(o.p999_us)),
+                    ("queue_p50_us", json::num(r.stages.queue_p50_us)),
+                    ("queue_p99_us", json::num(r.stages.queue_p99_us)),
+                    ("kernel_p50_us", json::num(r.stages.kernel_p50_us)),
+                    ("kernel_p99_us", json::num(r.stages.kernel_p99_us)),
+                    ("egress_p50_us", json::num(r.stages.egress_p50_us)),
+                    ("egress_p99_us", json::num(r.stages.egress_p99_us)),
                 ]));
             }
         }

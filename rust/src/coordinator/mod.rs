@@ -90,6 +90,11 @@ use std::time::Instant;
 /// * `--tee PATH` — with `--listen`, record every inbound request line
 ///   and outbound frame to a JSONL log that `draco replay PATH` can
 ///   re-execute and verify bitwise.
+/// * `--trace PATH` (native backend) — enable per-request span tracing
+///   and export the run as Chrome trace-event JSON to `PATH` on exit
+///   (open in `chrome://tracing` or Perfetto; validate with
+///   `draco stats --trace-file PATH`). Tracing off costs one atomic
+///   load per request — see the `trace_overhead` bench row.
 pub fn serve_cli(args: &Args) -> i32 {
     let backend = args.opt_or("backend", "native").to_string();
     let requests = args.opt_usize("requests", 512);
@@ -125,10 +130,19 @@ pub fn serve_cli(args: &Args) -> i32 {
                 );
             }
             let coord = Coordinator::start_registry(&registry, window_us as u64);
+            if args.opt("trace").is_some() {
+                coord.obs().enable_tracing(
+                    crate::obs::TRACE_RINGS,
+                    crate::obs::TRACE_RING_CAPACITY,
+                );
+                println!("tracing enabled ({} rings × {} spans)",
+                    crate::obs::TRACE_RINGS, crate::obs::TRACE_RING_CAPACITY);
+            }
             let traj = args.opt_usize("traj", 0);
             let dt = args.opt_f64("dt", 1e-3);
             let code = run_native_workload(&coord, &registry, requests, traj, dt);
             if code != 0 {
+                export_trace(args, coord.obs());
                 return code;
             }
             if let Some(listen) = args.opt("listen") {
@@ -161,8 +175,17 @@ pub fn serve_cli(args: &Args) -> i32 {
                 }
                 let code = crate::net::self_drive(server.addr(), &registry, &coord, dt);
                 server.stop();
+                let snap = coord.obs().snapshot();
+                println!(
+                    "wire: malformed lines {}  slow-reader kills {}  egress high-water {}",
+                    snap.counters.get("net_malformed_lines_total").copied().unwrap_or(0),
+                    snap.counters.get("net_slow_reader_kills_total").copied().unwrap_or(0),
+                    snap.gauges.get("net_egress_queue_highwater").copied().unwrap_or(0)
+                );
+                export_trace(args, coord.obs());
                 return code;
             }
+            export_trace(args, coord.obs());
             0
         }
         "pjrt" => {
@@ -194,6 +217,24 @@ pub fn serve_cli(args: &Args) -> i32 {
             eprintln!("unknown backend '{other}' (try native|pjrt)");
             2
         }
+    }
+}
+
+/// Drain the span rings and write the Chrome trace-event JSON export to
+/// the `--trace PATH` file. No-op unless both the flag was given and
+/// tracing was actually enabled.
+fn export_trace(args: &Args, obs: &crate::obs::ObsHub) {
+    let Some(path) = args.opt("trace") else { return };
+    let Some(sink) = obs.trace() else { return };
+    let records = sink.drain();
+    let json = crate::obs::chrome_trace_json(&records);
+    match std::fs::write(path, json) {
+        Ok(()) => println!(
+            "trace: {} spans -> {path} (dropped {})",
+            records.len(),
+            sink.dropped_spans()
+        ),
+        Err(e) => eprintln!("trace: cannot write {path}: {e}"),
     }
 }
 
@@ -277,6 +318,13 @@ fn run_native_workload(
         st.p50_latency_us,
         st.p95_latency_us,
         st.p99_latency_us
+    );
+    println!(
+        "batch fill: p50 {:.0}% p99 {:.0}%  batch exec: p50 {:.0} µs p99 {:.0} µs",
+        st.fill_p50 * 100.0,
+        st.fill_p99 * 100.0,
+        st.exec_p50_us,
+        st.exec_p99_us
     );
     if st.rejected + st.expired + st.shed > 0 {
         println!(

@@ -113,6 +113,10 @@ pub struct StatsInner {
     class_completed: [u64; 3],
     /// Per-class latency reservoirs, indexed by [`QosClass::index`].
     class_lat: [Reservoir; 3],
+    /// Batch fill-fraction reservoir (one sample per executed batch).
+    fill: Reservoir,
+    /// Batch execution-time reservoir [µs].
+    exec_us: Reservoir,
 }
 
 impl Default for StatsInner {
@@ -136,6 +140,8 @@ impl Default for StatsInner {
                 Reservoir::new(0x5EED_1A7E ^ 2),
                 Reservoir::new(0x5EED_1A7E ^ 3),
             ],
+            fill: Reservoir::new(0x5EED_1A7E ^ 4),
+            exec_us: Reservoir::new(0x5EED_1A7E ^ 5),
         }
     }
 }
@@ -156,11 +162,15 @@ impl StatsInner {
         self.batches += 1;
         self.fill_sum += fill;
         self.exec_us_sum += exec_us;
+        self.fill.record(fill);
+        self.exec_us.record(exec_us);
     }
 
     /// Freeze the current counters into an immutable snapshot.
     pub fn snapshot(&self) -> ServeStats {
         let [p50, p95, p99] = self.all_lat.percentiles([0.50, 0.95, 0.99]);
+        let [fill_p50, fill_p99] = self.fill.percentiles([0.50, 0.99]);
+        let [exec_p50_us, exec_p99_us] = self.exec_us.percentiles([0.50, 0.99]);
         let mut per_class = [ClassStats::default(); 3];
         for c in QosClass::ALL {
             let i = c.index();
@@ -181,6 +191,10 @@ impl StatsInner {
             } else {
                 0.0
             },
+            fill_p50,
+            fill_p99,
+            exec_p50_us,
+            exec_p99_us,
             p50_latency_us: p50,
             p95_latency_us: p95,
             p99_latency_us: p99,
@@ -220,6 +234,14 @@ pub struct ServeStats {
     pub mean_fill: f64,
     /// Mean per-batch execution time [µs].
     pub mean_exec_us: f64,
+    /// Median batch fill fraction (1.0 = every batch full).
+    pub fill_p50: f64,
+    /// 99th-percentile batch fill fraction.
+    pub fill_p99: f64,
+    /// Median per-batch execution time [µs].
+    pub exec_p50_us: f64,
+    /// 99th-percentile per-batch execution time [µs].
+    pub exec_p99_us: f64,
     /// Median request latency [µs], all classes.
     pub p50_latency_us: f64,
     /// 95th-percentile request latency [µs], all classes.
@@ -271,6 +293,12 @@ mod tests {
         assert_eq!(snap.completed, 100);
         assert_eq!(snap.batches, 2);
         assert!((snap.mean_fill - 0.75).abs() < 1e-12);
+        // Two batch samples: nearest-rank p50 is the first (0.5 / 10µs),
+        // p99 the second (1.0 / 20µs).
+        assert_eq!(snap.fill_p50, 0.5);
+        assert_eq!(snap.fill_p99, 1.0);
+        assert_eq!(snap.exec_p50_us, 10.0);
+        assert_eq!(snap.exec_p99_us, 20.0);
         assert!(snap.p50_latency_us <= snap.p95_latency_us);
         assert!(snap.p95_latency_us <= snap.p99_latency_us);
         // Everything was interactive; the other class slices stay empty.
@@ -366,6 +394,8 @@ mod tests {
         let snap = StatsInner::default().snapshot();
         assert_eq!(snap.completed, 0);
         assert_eq!(snap.p95_latency_us, 0.0);
+        assert_eq!(snap.fill_p50, 0.0);
+        assert_eq!(snap.exec_p99_us, 0.0);
         assert_eq!(snap.rejected, 0);
         assert_eq!(snap.expired, 0);
         assert_eq!(snap.shed, 0);

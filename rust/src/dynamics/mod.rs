@@ -16,7 +16,7 @@ pub mod workspace;
 
 pub use batch::{eval_batch, eval_batch_par, BatchKernel, BatchOutput, BatchTask};
 pub use memo::{FloatMemo, IntMemo, KinMemo, DEFAULT_MEMO_CAP};
-pub use pool::WorkerPool;
+pub use pool::{pool_activity, WorkerPool};
 pub use crba::{crba, crba_into};
 pub use deriv::{fd_derivatives, rnea_derivatives};
 pub use fd::{aba, aba_into, fd, AbaScratch};

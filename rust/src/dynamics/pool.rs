@@ -50,8 +50,26 @@ use crate::quant::scaling::ShiftSchedule;
 use crate::quant::{QFormat, QuantIntScratch, QuantScratch};
 use crate::spatial::DMat;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Total chunks evaluated by pool workers, process-wide.
+static POOL_CHUNKS: AtomicU64 = AtomicU64::new(0);
+/// Total worker-busy nanoseconds across the pool, process-wide.
+static POOL_BUSY_NS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide worker-pool activity: `(chunks evaluated, busy µs)`.
+/// Both counters are monotone and cover every pool instance; the busy
+/// time is the summed wall-clock each worker spent inside chunk
+/// evaluation, so `busy µs / elapsed µs` estimates effective pool
+/// parallelism. Snapshotted into the observability metrics
+/// (`pool_chunks_total` / `pool_busy_us_total` — see
+/// [`crate::obs::ObsHub::snapshot`]).
+pub fn pool_activity() -> (u64, u64) {
+    (POOL_CHUNKS.load(Ordering::Relaxed), POOL_BUSY_NS.load(Ordering::Relaxed) / 1_000)
+}
 
 /// Numeric datapath a pool job runs — the pool's per-job engine
 /// descriptor.
@@ -727,6 +745,7 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
         // alive for later batches. AssertUnwindSafe is sound because the
         // cache is dropped below on panic and kernels overwrite it per
         // task anyway.
+        let t_busy = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match &job.work {
             PoolWork::Tasks { tasks, range } => {
                 // Task chunks are injected by the f64 batch API only.
@@ -752,6 +771,8 @@ fn worker(queue: Arc<Mutex<Receiver<PoolJob>>>) {
                 PoolPart::Done { hits, misses }
             }
         }));
+        POOL_CHUNKS.fetch_add(1, Ordering::Relaxed);
+        POOL_BUSY_NS.fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let result = match result {
             Ok(part) => {
                 // Return the workspace to the front of the MRU set.

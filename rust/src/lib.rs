@@ -26,6 +26,10 @@
 //! * [`net`] — the streaming JSONL TCP front-end: lazy hot-field request
 //!   parsing, chunked trajectory egress, raw-JSONL record (`--tee`) and
 //!   bitwise replay (`draco replay`).
+//! * [`obs`] — observability: per-request spans exported as Chrome
+//!   trace JSON (`serve --trace`), the atomic metrics registry with
+//!   per-stage latency histograms, and the live `stats` wire route
+//!   (`draco stats`). See `docs/observability.md`.
 //! * [`util`] — offline substrates (JSON, RNG, property tests, CLI, bench).
 
 pub mod accel;
@@ -34,6 +38,7 @@ pub mod control;
 pub mod dynamics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -57,6 +57,12 @@
 //! * `replay LOG` — re-execute a `--tee` capture offline and assert the
 //!   replayed response payloads are bitwise identical to the recorded
 //!   ones (timing-dependent refusals are skipped). See docs/serving.md.
+//! * `stats ADDR | stats --trace-file PATH` — live-metrics client for a
+//!   serving `--listen` endpoint (requests a `stats` frame over the
+//!   JSONL wire and renders it Prometheus-style), or validator for a
+//!   `serve --trace PATH` Chrome trace-event export (counts complete
+//!   job spans; nonzero exit on invalid/empty traces — the CI trace
+//!   smoke gate). See docs/observability.md.
 
 use draco::accel::{self, designs::RbdFn, Design};
 use draco::model::{builtin_robot, robot_registry};
@@ -76,9 +82,10 @@ fn main() {
         Some("serve") => draco::coordinator::serve_cli(&args),
         Some("loadgen") => draco::coordinator::loadgen::loadgen_cli(&args),
         Some("replay") => draco::net::replay_cli(&args),
+        Some("stats") => draco::obs::stats_cli(&args),
         _ => {
             eprintln!(
-                "usage: draco <export-robots|info|estimate|quantize|rates|serve|loadgen|replay> [options]"
+                "usage: draco <export-robots|info|estimate|quantize|rates|serve|loadgen|replay|stats> [options]"
             );
             2
         }

@@ -101,6 +101,18 @@ pub enum Frame {
         /// Human-readable reason.
         msg: String,
     },
+    /// Live metrics snapshot, answering a `stats` request: every
+    /// counter and gauge of the server's observability hub plus the
+    /// terminal serving counters, as flat name → integer maps.
+    Stats {
+        /// Request id this answers.
+        id: u64,
+        /// Counter values by metric name.
+        counters: std::collections::BTreeMap<String, u64>,
+        /// Gauge values by metric name (includes derived histogram
+        /// percentiles, pre-rounded to integer µs).
+        gauges: std::collections::BTreeMap<String, u64>,
+    },
 }
 
 /// A fully parsed `req` frame (the [`Json`]-tree path; the lazy scanner
@@ -208,6 +220,30 @@ pub fn done_line(id: u64, chunks: u64) -> String {
 /// `err` line (message JSON-escaped).
 pub fn err_line(id: u64, msg: &str) -> String {
     format!("{{\"id\":{id},\"msg\":{},\"type\":\"err\"}}", Json::Str(msg.to_string()).dump())
+}
+
+/// Client → server `stats` request line.
+pub fn stats_req_line(id: u64) -> String {
+    format!("{{\"id\":{id},\"type\":\"stats\"}}")
+}
+
+/// Server → client `stats` snapshot line. Built through the [`Json`]
+/// tree (the stats route is cold — determinism over speed): keys come
+/// out alphabetical like every hand-rolled writer here.
+pub fn stats_line(
+    id: u64,
+    counters: &std::collections::BTreeMap<String, u64>,
+    gauges: &std::collections::BTreeMap<String, u64>,
+) -> String {
+    let to_obj = |m: &std::collections::BTreeMap<String, u64>| {
+        Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect())
+    };
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("counters".to_string(), to_obj(counters));
+    obj.insert("gauges".to_string(), to_obj(gauges));
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("type".to_string(), Json::Str("stats".to_string()));
+    Json::Obj(obj).dump()
 }
 
 /// Map a [`ServeError`] to its wire frame: the three structured QoS
@@ -379,6 +415,20 @@ impl Frame {
                 id: id()?,
                 msg: v.get("msg").and_then(Json::as_str).unwrap_or("").into(),
             }),
+            "stats" => {
+                let map = |key: &str| -> std::collections::BTreeMap<String, u64> {
+                    match v.get(key) {
+                        Some(Json::Obj(m)) => m
+                            .iter()
+                            .filter_map(|(k, x)| {
+                                x.as_f64().map(|n| (k.clone(), n.max(0.0) as u64))
+                            })
+                            .collect(),
+                        _ => Default::default(),
+                    }
+                };
+                Ok(Frame::Stats { id: id()?, counters: map("counters"), gauges: map("gauges") })
+            }
             other => Err(format!("unknown frame type '{other}'")),
         }
     }
@@ -394,7 +444,8 @@ impl Frame {
             | Frame::Expired { id, .. }
             | Frame::Chunk { id, .. }
             | Frame::Done { id, .. }
-            | Frame::Err { id, .. } => Some(*id),
+            | Frame::Err { id, .. }
+            | Frame::Stats { id, .. } => Some(*id),
         }
     }
 }
@@ -444,6 +495,32 @@ mod tests {
         for (line, want) in cases {
             assert_eq!(Frame::parse(&line).unwrap(), want, "{line}");
         }
+    }
+
+    /// `stats` frames round-trip: the bare request parses (empty maps),
+    /// and a snapshot line recovers every counter and gauge.
+    #[test]
+    fn stats_frames_round_trip() {
+        match Frame::parse(&stats_req_line(42)).unwrap() {
+            Frame::Stats { id, counters, gauges } => {
+                assert_eq!(id, 42);
+                assert!(counters.is_empty());
+                assert!(gauges.is_empty());
+            }
+            other => panic!("expected stats, got {other:?}"),
+        }
+        let mut counters = std::collections::BTreeMap::new();
+        counters.insert("serve_completed".to_string(), 128u64);
+        counters.insert("net_malformed_lines_total".to_string(), 3u64);
+        let mut gauges = std::collections::BTreeMap::new();
+        gauges.insert("net_egress_queue_highwater".to_string(), 17u64);
+        let line = stats_line(9, &counters, &gauges);
+        assert!(line.starts_with("{\"counters\":"), "alphabetical keys: {line}");
+        assert_eq!(
+            Frame::parse(&line).unwrap(),
+            Frame::Stats { id: 9, counters, gauges },
+            "{line}"
+        );
     }
 
     /// Every f32 bit pattern that is finite must survive text framing

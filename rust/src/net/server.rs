@@ -46,12 +46,13 @@ use super::lazy::{self, LazyReq};
 use crate::coordinator::{
     Coordinator, QosClass, ResponseSink, RobotRegistry, ServeError, SubmitOptions, TrajRequest,
 };
+use crate::obs::{Counter, Gauge, MetricsRegistry};
 use crate::runtime::ArtifactFn;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
@@ -119,6 +120,32 @@ impl Tee {
     }
 }
 
+/// Connection-layer metric handles, resolved once from the
+/// coordinator's registry at server start and shared by every
+/// connection (the previously invisible failure modes of the front
+/// end, now countable over the `stats` route).
+#[derive(Clone)]
+struct NetCounters {
+    /// Lines refused before dispatch: oversized, invalid UTF-8, or
+    /// unscannable JSON.
+    malformed: Arc<Counter>,
+    /// Connections killed because the peer stopped draining its egress
+    /// queue within the grace window.
+    slow_kills: Arc<Counter>,
+    /// High-water mark of any connection's egress-queue depth [lines].
+    egress_hw: Arc<Gauge>,
+}
+
+impl NetCounters {
+    fn new(m: &MetricsRegistry) -> NetCounters {
+        NetCounters {
+            malformed: m.counter("net_malformed_lines_total"),
+            slow_kills: m.counter("net_slow_reader_kills_total"),
+            egress_hw: m.gauge("net_egress_queue_highwater"),
+        }
+    }
+}
+
 /// Producer-side handle of one connection's write path, shared between
 /// the reader thread (for `ack`/`err`) and the batcher workers (for
 /// `chunk`/`done`/refusals). Lines go into a bounded queue drained by
@@ -136,6 +163,11 @@ struct Wire {
     /// Socket handle used to force the connection down from any thread
     /// (unblocks a reader mid-`recv` and a writer mid-`send`).
     sock: TcpStream,
+    /// Lines enqueued but not yet written (shared with the writer
+    /// thread, which decrements as it drains).
+    depth: Arc<AtomicU64>,
+    /// Connection-layer metric handles.
+    counters: NetCounters,
 }
 
 impl Wire {
@@ -162,13 +194,25 @@ impl Wire {
         let deadline = Instant::now() + Duration::from_millis(EGRESS_GRACE_MS);
         loop {
             match self.tx.try_send(line) {
-                Ok(()) => return,
+                Ok(()) => {
+                    let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+                    self.counters.egress_hw.record_max(d);
+                    return;
+                }
                 Err(TrySendError::Disconnected(_)) => {
                     self.kill();
                     return;
                 }
                 Err(TrySendError::Full(back)) => {
-                    if self.dead() || Instant::now() >= deadline {
+                    if self.dead() {
+                        self.kill();
+                        return;
+                    }
+                    if Instant::now() >= deadline {
+                        // The peer stopped draining: this is the
+                        // slow-reader kill, distinct from EOF/error
+                        // deaths, and is counted as such.
+                        self.counters.slow_kills.inc();
                         self.kill();
                         return;
                     }
@@ -191,6 +235,7 @@ fn writer_loop(
     tee: Option<Arc<Tee>>,
     conn_id: u64,
     dead: Arc<AtomicBool>,
+    depth: Arc<AtomicU64>,
 ) {
     loop {
         let line = match rx.recv_timeout(Duration::from_millis(POLL_INTERVAL_MS)) {
@@ -203,6 +248,7 @@ fn writer_loop(
             }
             Err(RecvTimeoutError::Disconnected) => return,
         };
+        depth.fetch_sub(1, Ordering::Relaxed);
         if dead.load(Ordering::SeqCst) {
             // Connection already declared dead: drop queued output.
             return;
@@ -379,6 +425,7 @@ impl NetServer {
         };
         let stop = Arc::new(AtomicBool::new(false));
         let wires: Arc<Mutex<Vec<Weak<Wire>>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = NetCounters::new(coord.obs().metrics());
         let stop2 = Arc::clone(&stop);
         let wires2 = Arc::clone(&wires);
         let accept = std::thread::spawn(move || {
@@ -398,8 +445,9 @@ impl NetServer {
                         let tee = tee.clone();
                         let stop = Arc::clone(&stop2);
                         let wires = Arc::clone(&wires2);
+                        let counters = counters.clone();
                         conns.push(std::thread::spawn(move || {
-                            serve_conn(&coord, &dims, tee, stream, conn_id, &stop, &wires)
+                            serve_conn(&coord, &dims, tee, stream, conn_id, &stop, &wires, counters)
                         }));
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -472,6 +520,7 @@ fn register_wire(wires: &Mutex<Vec<Weak<Wire>>>, wire: &Arc<Wire>) {
     g.push(Arc::downgrade(wire));
 }
 
+#[allow(clippy::too_many_arguments)]
 fn serve_conn(
     coord: &Coordinator,
     dims: &BTreeMap<String, usize>,
@@ -480,6 +529,7 @@ fn serve_conn(
     conn_id: u64,
     stop: &AtomicBool,
     wires: &Mutex<Vec<Weak<Wire>>>,
+    counters: NetCounters,
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
     let Ok(write_half) = stream.try_clone() else { return };
@@ -487,13 +537,15 @@ fn serve_conn(
     // dead wire while the peer is idle.
     let _ = read_half.set_read_timeout(Some(Duration::from_millis(POLL_INTERVAL_MS)));
     let dead = Arc::new(AtomicBool::new(false));
+    let depth = Arc::new(AtomicU64::new(0));
     let (tx, rx) = sync_channel(EGRESS_QUEUE_LINES);
     let writer = {
         let tee = tee.clone();
         let dead = Arc::clone(&dead);
-        std::thread::spawn(move || writer_loop(rx, write_half, tee, conn_id, dead))
+        let depth = Arc::clone(&depth);
+        std::thread::spawn(move || writer_loop(rx, write_half, tee, conn_id, dead, depth))
     };
-    let wire = Arc::new(Wire { tx, dead, conn_id, sock: stream });
+    let wire = Arc::new(Wire { tx, dead, conn_id, sock: stream, depth, counters });
     register_wire(wires, &wire);
     let mut reader = BufReader::new(read_half);
     let mut buf = Vec::with_capacity(4096);
@@ -520,6 +572,7 @@ fn serve_conn(
         match status {
             LineRead::Eof => break 'conn,
             LineRead::Oversized => {
+                wire.counters.malformed.inc();
                 wire.send(&frame::err_line(
                     0,
                     &format!("request line exceeds {MAX_LINE_BYTES} bytes"),
@@ -537,6 +590,7 @@ fn serve_conn(
         let Ok(line) = core::str::from_utf8(&buf) else {
             // Not teed: an invalid-UTF-8 line would corrupt the JSONL
             // log for replay.
+            wire.counters.malformed.inc();
             wire.send(&frame::err_line(0, "request line is not valid UTF-8"));
             continue 'conn;
         };
@@ -563,12 +617,21 @@ fn handle_line(
     let req = match LazyReq::scan(line) {
         Ok(r) => r,
         Err(e) => {
+            wire.counters.malformed.inc();
             wire.send(&frame::err_line(0, &format!("bad frame: {e}")));
             return;
         }
     };
     let id = req.id;
     let fail = |msg: &str| wire.send(&frame::err_line(id, msg));
+    if req.typ == "stats" {
+        // Live metrics snapshot — answered inline by the connection
+        // reader (the batcher is not involved), so it works even while
+        // every route is saturated or breaker-open.
+        let (counters, gauges) = stats_body(coord);
+        wire.send(&frame::stats_line(id, &counters, &gauges));
+        return;
+    }
     if req.typ != "req" {
         fail(&format!("unsupported frame type '{}'", req.typ));
         return;
@@ -636,6 +699,41 @@ fn handle_line(
         let sink = SocketSink::new(Arc::clone(wire), id, segments);
         coord.submit_to_sink(robot, f, ops, opts, Box::new(sink));
     }
+}
+
+/// The flat counter/gauge maps of a `stats` wire frame: the obs-hub
+/// snapshot plus the terminal serving counters under `serve_*` names,
+/// and derived p50/p99 gauges (integer µs / %) for every unlabelled
+/// histogram — labelled per-`(robot, route, class)` histograms stay
+/// available via the Prometheus rendering of `draco stats ADDR`, but
+/// the wire frame carries only the compact aggregate view.
+pub(crate) fn stats_body(
+    coord: &Coordinator,
+) -> (BTreeMap<String, u64>, BTreeMap<String, u64>) {
+    let snap = coord.obs().snapshot();
+    let st = coord.stats();
+    let mut counters = snap.counters;
+    for (name, v) in [
+        ("serve_completed", st.completed),
+        ("serve_batches", st.batches),
+        ("serve_rejected", st.rejected),
+        ("serve_expired", st.expired),
+        ("serve_shed", st.shed),
+        ("serve_cancelled", st.cancelled),
+        ("serve_breaker_trips", st.breaker_trips),
+        ("serve_memo_hits", st.memo_hits),
+        ("serve_memo_misses", st.memo_misses),
+    ] {
+        counters.insert(name.to_string(), v);
+    }
+    let mut gauges = snap.gauges;
+    for (name, h) in &snap.hists {
+        if !name.contains('{') {
+            gauges.insert(format!("{name}_p50"), h.percentile(0.50).round() as u64);
+            gauges.insert(format!("{name}_p99"), h.percentile(0.99).round() as u64);
+        }
+    }
+    (counters, gauges)
 }
 
 /// Blocking line-oriented client for tests, the self-drive smoke, and

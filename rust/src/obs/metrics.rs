@@ -1,0 +1,488 @@
+//! Atomic metrics primitives and the process-wide registry.
+//!
+//! Three shapes cover the serving stack's needs:
+//!
+//! * [`Counter`] — monotone `u64` (requests, errors, kills).
+//! * [`Gauge`] — last-or-max `u64` (queue-depth high-water).
+//! * [`Histogram`] — fixed log₂ buckets over µs values; lock-free
+//!   `record`, percentile estimates from the bucket bounds with linear
+//!   interpolation inside the landing bucket.
+//!
+//! All three are plain `AtomicU64`s with relaxed ordering: a `record` on
+//! the serving hot path is one or three uncontended `fetch_add`s, cheap
+//! enough to stay **always on** (the `trace_overhead` bench row tracks
+//! the budget). Handles are `Arc`s resolved once at registration — the
+//! hot path never does a name lookup.
+//!
+//! [`MetricsRegistry`] is the name → handle map (get-or-register,
+//! poison-recovering locks); [`MetricsSnapshot`] is its point-in-time
+//! copy, renderable as Prometheus-style text and serialized over the
+//! wire by the `stats` route (`net::frame`). Metric names follow the
+//! Prometheus idiom — `snake_case` with a `_total` suffix for counters
+//! and an optional `{key="value",…}` label block sorted by key (see
+//! docs/observability.md for the full reference).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log₂ buckets in a [`Histogram`]: bucket `i ≥ 1` holds
+/// values in `[2^(i-1), 2^i)` µs, bucket 0 holds zeros; the last bucket
+/// absorbs everything from `2^38` µs (~3.2 days) up.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Fresh counter at zero.
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value / high-water gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Fresh gauge at zero.
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to `v` if `v` is larger (high-water tracking).
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log₂-bucket histogram over `u64` values (µs by convention).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Bucket index of `v`: 0 for zero, else `floor(log2 v) + 1`, capped to
+/// the last bucket — so bucket `i ≥ 1` covers `[2^(i-1), 2^i)`.
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// Fresh histogram with every bucket at zero.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (three relaxed `fetch_add`s).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+}
+
+/// Point-in-time copy of one [`Histogram`].
+#[derive(Debug, Clone, Default)]
+pub struct HistSnapshot {
+    /// Per-bucket counts ([`HIST_BUCKETS`] entries).
+    pub buckets: Vec<u64>,
+    /// Total recorded values.
+    pub count: u64,
+    /// Sum of recorded values.
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Nearest-rank percentile estimate (`p` in `[0, 1]`), linearly
+    /// interpolated inside the landing bucket. Zero when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                if i == 0 {
+                    return 0.0; // bucket 0 holds exactly the zeros
+                }
+                let lo = (1u64 << (i - 1)) as f64;
+                let hi = (1u64 << i) as f64;
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        (1u64 << (HIST_BUCKETS - 1)) as f64
+    }
+
+    /// Mean of recorded values. Zero when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Name → handle registry. Registration is get-or-create (two callers
+/// asking for the same name share one atomic); the returned `Arc` is the
+/// hot-path handle, so lookups happen once at setup, never per event.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-register the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            lock(&self.counters).entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())),
+        )
+    }
+
+    /// Get-or-register the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            lock(&self.gauges).entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())),
+        )
+    }
+
+    /// Get-or-register the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            lock(&self.hists).entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: lock(&self.counters).iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            gauges: lock(&self.gauges).iter().map(|(k, v)| (k.clone(), v.get())).collect(),
+            hists: lock(&self.hists).iter().map(|(k, v)| (k.clone(), v.snapshot())).collect(),
+        }
+    }
+}
+
+/// Split `name{labels}` into `(name, labels-without-braces)`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Point-in-time copy of a [`MetricsRegistry`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, u64>,
+    /// Histogram snapshots by name.
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Render as Prometheus-style exposition text: `# TYPE` headers,
+    /// `name{labels} value` lines, histograms as cumulative
+    /// `_bucket{le="…"}` series plus `_sum` / `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_base = String::new();
+        let mut typed = |out: &mut String, name: &str, kind: &str| {
+            let (base, _) = split_labels(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+                last_base = base.to_string();
+            }
+        };
+        for (name, v) in &self.counters {
+            typed(&mut out, name, "counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            typed(&mut out, name, "gauge");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            typed(&mut out, name, "histogram");
+            let (base, labels) = split_labels(name);
+            let tail = |le: &str| match labels {
+                Some(l) => format!("{base}_bucket{{{l},le=\"{le}\"}}"),
+                None => format!("{base}_bucket{{le=\"{le}\"}}"),
+            };
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let hi = if i == 0 { 0 } else { 1u64 << i };
+                let _ = writeln!(out, "{} {cum}", tail(&hi.to_string()));
+            }
+            let _ = writeln!(out, "{} {}", tail("+Inf"), h.count);
+            match labels {
+                Some(l) => {
+                    let _ = writeln!(out, "{base}_sum{{{l}}} {}", h.sum);
+                    let _ = writeln!(out, "{base}_count{{{l}}} {}", h.count);
+                }
+                None => {
+                    let _ = writeln!(out, "{base}_sum {}", h.sum);
+                    let _ = writeln!(out, "{base}_count {}", h.count);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The three per-stage latency histograms of one `(robot, route, class)`:
+/// time queued (admission → batch formation), time in the kernel, and
+/// time in egress (kernel end → last response write).
+#[derive(Debug, Clone)]
+pub struct StageTrio {
+    /// Queue-wait histogram [µs].
+    pub queue: Arc<Histogram>,
+    /// Kernel-execution histogram [µs].
+    pub kernel: Arc<Histogram>,
+    /// Egress-flush histogram [µs].
+    pub egress: Arc<Histogram>,
+}
+
+impl StageTrio {
+    fn new(m: &MetricsRegistry, labels: Option<(&str, &str, &str)>) -> StageTrio {
+        let name = |stage: &str| match labels {
+            Some((robot, route, class)) => format!(
+                "stage_{stage}_us{{class=\"{class}\",robot=\"{robot}\",route=\"{route}\"}}"
+            ),
+            None => format!("stage_{stage}_us"),
+        };
+        StageTrio {
+            queue: m.histogram(&name("queue")),
+            kernel: m.histogram(&name("kernel")),
+            egress: m.histogram(&name("egress")),
+        }
+    }
+}
+
+/// Per-route stage attribution: one labelled [`StageTrio`] per QoS class
+/// (indexed by class index) plus the route-agnostic aggregate trio, the
+/// batch-fill distribution, and the batch-execution distribution. One
+/// `RouteStages` is resolved per `(robot, route)` at route registration;
+/// every record is then index + `fetch_add`, no lookups.
+#[derive(Debug, Clone)]
+pub struct RouteStages {
+    per_class: Vec<StageTrio>,
+    all: StageTrio,
+    /// Batch fill distribution [% of route batch capacity], aggregate.
+    pub fill: Arc<Histogram>,
+    /// Batch kernel-execution distribution [µs], aggregate.
+    pub exec: Arc<Histogram>,
+}
+
+impl RouteStages {
+    /// Resolve the stage histograms of `(robot, route)` for every class
+    /// name in `classes` (indexed by position).
+    pub fn new(m: &MetricsRegistry, robot: &str, route: &str, classes: &[&str]) -> RouteStages {
+        RouteStages {
+            per_class: classes
+                .iter()
+                .map(|class| StageTrio::new(m, Some((robot, route, class))))
+                .collect(),
+            all: StageTrio::new(m, None),
+            fill: m.histogram("batch_fill_pct"),
+            exec: m.histogram("batch_exec_us"),
+        }
+    }
+
+    /// Record a queue-wait sample for class index `class`.
+    pub fn record_queue(&self, class: usize, us: u64) {
+        self.per_class[class].queue.record(us);
+        self.all.queue.record(us);
+    }
+
+    /// Record a kernel-time sample for class index `class`.
+    pub fn record_kernel(&self, class: usize, us: u64) {
+        self.per_class[class].kernel.record(us);
+        self.all.kernel.record(us);
+    }
+
+    /// Record an egress-flush sample for class index `class`.
+    pub fn record_egress(&self, class: usize, us: u64) {
+        self.per_class[class].egress.record(us);
+        self.all.egress.record(us);
+    }
+
+    /// Record one executed batch: fill percentage and kernel µs.
+    pub fn record_batch(&self, fill_pct: u64, exec_us: u64) {
+        self.fill.record(fill_pct);
+        self.exec.record(exec_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_log2() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let p50 = s.percentile(0.5);
+        let p99 = s.percentile(0.99);
+        // Log2 buckets bound the true percentile within 2x.
+        assert!((250.0..=1024.0).contains(&p50), "p50 {p50}");
+        assert!((512.0..=1024.0).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p99);
+        assert!((s.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.percentile(0.99), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_shares_handles_by_name() {
+        let m = MetricsRegistry::new();
+        let a = m.counter("x_total");
+        let b = m.counter("x_total");
+        a.inc();
+        b.add(2);
+        assert_eq!(m.counter("x_total").get(), 3);
+        m.gauge("g").record_max(7);
+        m.gauge("g").record_max(3);
+        assert_eq!(m.gauge("g").get(), 7);
+        let snap = m.snapshot();
+        assert_eq!(snap.counters["x_total"], 3);
+        assert_eq!(snap.gauges["g"], 7);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_types_and_buckets() {
+        let m = MetricsRegistry::new();
+        m.counter("jobs_total").add(5);
+        m.histogram("lat_us{route=\"fd\"}").record(3);
+        let text = m.snapshot().render_prometheus();
+        assert!(text.contains("# TYPE jobs_total counter"), "{text}");
+        assert!(text.contains("jobs_total 5"), "{text}");
+        assert!(text.contains("# TYPE lat_us histogram"), "{text}");
+        assert!(text.contains("lat_us_bucket{route=\"fd\",le=\"4\"} 1"), "{text}");
+        assert!(text.contains("lat_us_count{route=\"fd\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn route_stages_record_labelled_and_aggregate() {
+        let m = MetricsRegistry::new();
+        let rs = RouteStages::new(&m, "iiwa", "fd", &["control", "interactive", "bulk"]);
+        rs.record_queue(1, 10);
+        rs.record_kernel(1, 20);
+        rs.record_egress(1, 5);
+        rs.record_batch(50, 20);
+        let snap = m.snapshot();
+        assert_eq!(snap.hists["stage_queue_us"].count, 1);
+        assert_eq!(
+            snap.hists["stage_queue_us{class=\"interactive\",robot=\"iiwa\",route=\"fd\"}"].count,
+            1
+        );
+        assert_eq!(snap.hists["batch_fill_pct"].count, 1);
+        assert_eq!(snap.hists["batch_exec_us"].count, 1);
+    }
+}

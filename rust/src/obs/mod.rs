@@ -1,0 +1,229 @@
+//! Observability: end-to-end request tracing, live metrics, and
+//! per-stage latency attribution for the serving stack.
+//!
+//! Two planes, one hub:
+//!
+//! * **Metrics** ([`metrics`]) are *always on*: atomic counters, gauges,
+//!   and log₂-bucket histograms in a [`MetricsRegistry`], including the
+//!   per-`(robot, route, class)` stage histograms ([`RouteStages`])
+//!   that attribute every served request's latency to queue vs kernel
+//!   vs egress. Exposed live over the wire by the `stats` JSONL route
+//!   (`draco stats ADDR` renders Prometheus-style text) and folded into
+//!   the `serve` / `loadgen` summaries.
+//! * **Tracing** ([`span`]) is *opt-in* (`serve --trace PATH`): every
+//!   coordinator job carries a [`Span`] stamped at admission, enqueue,
+//!   batch formation, kernel start/end, and egress (streams stamp
+//!   first/last chunk), finished with exactly one [`Terminal`], and
+//!   recorded into lock-free drop-oldest rings. Drained records export
+//!   as Chrome trace-event JSON for `chrome://tracing` / Perfetto.
+//!
+//! [`ObsHub`] owns both planes. The coordinator creates one hub per
+//! instance; the disabled-tracing hot path is a single `OnceLock` load
+//! returning a no-op span (budgeted by the `trace_overhead` bench row
+//! at <2% of `fd_pool64`-class throughput). See docs/observability.md.
+
+pub mod metrics;
+pub mod span;
+
+pub use metrics::{
+    Counter, Gauge, HistSnapshot, Histogram, MetricsRegistry, MetricsSnapshot, RouteStages,
+    StageTrio, HIST_BUCKETS,
+};
+pub use span::{chrome_trace_json, Span, SpanRecord, SpanRing, Terminal, TraceSink};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::sync::{Arc, OnceLock};
+
+/// Default number of span rings when tracing is enabled.
+pub const TRACE_RINGS: usize = 8;
+/// Default per-ring capacity when tracing is enabled.
+pub const TRACE_RING_CAPACITY: usize = 8192;
+
+/// One serving instance's observability state: the always-on metrics
+/// registry plus the opt-in trace sink behind a `OnceLock` (so the
+/// disabled check on the admission path is one atomic load).
+#[derive(Debug, Default)]
+pub struct ObsHub {
+    metrics: Arc<MetricsRegistry>,
+    trace: OnceLock<Arc<TraceSink>>,
+}
+
+impl ObsHub {
+    /// Fresh hub with tracing disabled.
+    pub fn new() -> ObsHub {
+        ObsHub::default()
+    }
+
+    /// The metrics registry.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Enable tracing (idempotent — the first enable wins) and return
+    /// the sink.
+    pub fn enable_tracing(&self, rings: usize, capacity: usize) -> Arc<TraceSink> {
+        Arc::clone(self.trace.get_or_init(|| TraceSink::new(rings, capacity)))
+    }
+
+    /// The trace sink, if tracing was enabled.
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.trace.get()
+    }
+
+    /// Open a span for one request — a real span when tracing is
+    /// enabled, the inert [`Span::disabled`] otherwise.
+    pub fn begin_span(&self, robot: &str, route: &str, class: &'static str) -> Span {
+        match self.trace.get() {
+            Some(sink) => sink.begin(robot, route, class),
+            None => Span::disabled(),
+        }
+    }
+
+    /// Resolve the per-stage histograms of one `(robot, route)`.
+    pub fn route_stages(&self, robot: &str, route: &str, classes: &[&str]) -> RouteStages {
+        RouteStages::new(&self.metrics, robot, route, classes)
+    }
+
+    /// Registry snapshot extended with the hub-level extras: worker-pool
+    /// activity counters and, when tracing is enabled, the monotone
+    /// `dropped_spans_total`.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        let (chunks, busy_us) = crate::dynamics::pool_activity();
+        snap.counters.insert("pool_chunks_total".to_string(), chunks);
+        snap.counters.insert("pool_busy_us_total".to_string(), busy_us);
+        if let Some(sink) = self.trace.get() {
+            snap.counters.insert("dropped_spans_total".to_string(), sink.dropped_spans());
+        }
+        snap
+    }
+}
+
+/// `draco stats` — live metrics client and trace-file validator.
+///
+/// * `draco stats ADDR` connects to a serving `--listen` endpoint,
+///   requests a `stats` frame, and renders it Prometheus-style.
+/// * `draco stats --trace-file PATH` validates a `serve --trace` export:
+///   parses the JSON, counts complete (`ph:"X"`) `job` spans, prints the
+///   terminal breakdown, and fails (exit 1) on invalid JSON or zero
+///   spans — the CI trace-smoke gate.
+pub fn stats_cli(args: &Args) -> i32 {
+    if let Some(path) = args.opt("trace-file") {
+        return validate_trace_file(path);
+    }
+    let Some(addr) = args.positional.first() else {
+        eprintln!("usage: draco stats ADDR | draco stats --trace-file PATH");
+        return 2;
+    };
+    let sock: std::net::SocketAddr = match addr.parse() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bad address {addr}: {e}");
+            return 2;
+        }
+    };
+    let mut client = match crate::net::NetClient::connect(sock) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("connect {addr}: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = client.send_line(&crate::net::frame::stats_req_line(1)) {
+        eprintln!("send stats request: {e}");
+        return 1;
+    }
+    loop {
+        match client.read_frame() {
+            Ok(crate::net::Frame::Stats { counters, gauges, .. }) => {
+                let snap = MetricsSnapshot { counters, gauges, ..MetricsSnapshot::default() };
+                print!("{}", snap.render_prometheus());
+                return 0;
+            }
+            Ok(crate::net::Frame::Err { msg, .. }) => {
+                eprintln!("server error: {msg}");
+                return 1;
+            }
+            Ok(_) => continue,
+            Err(e) => {
+                eprintln!("read stats frame: {e}");
+                return 1;
+            }
+        }
+    }
+}
+
+fn validate_trace_file(path: &str) -> i32 {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("read {path}: {e}");
+            return 1;
+        }
+    };
+    let parsed = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{path} is not valid JSON: {e:?}");
+            return 1;
+        }
+    };
+    let Some(events) = parsed.get("traceEvents").and_then(|e| e.as_arr()) else {
+        eprintln!("{path} has no traceEvents array");
+        return 1;
+    };
+    let mut by_terminal: std::collections::BTreeMap<String, u64> = Default::default();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) == Some("X")
+            && ev.get("name").and_then(|n| n.as_str()) == Some("job")
+        {
+            let term = ev
+                .get("args")
+                .and_then(|a| a.get("terminal"))
+                .and_then(|t| t.as_str())
+                .unwrap_or("unknown");
+            *by_terminal.entry(term.to_string()).or_insert(0) += 1;
+        }
+    }
+    let total: u64 = by_terminal.values().sum();
+    let breakdown: Vec<String> =
+        by_terminal.iter().map(|(k, v)| format!("{k} {v}")).collect();
+    println!("trace ok: {total} complete spans ({})", breakdown.join(", "));
+    if total == 0 {
+        eprintln!("{path} contains no complete job spans");
+        return 1;
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_spans_are_disabled_until_enabled() {
+        let hub = ObsHub::new();
+        assert!(!hub.begin_span("iiwa", "fd", "bulk").is_enabled());
+        assert!(hub.trace().is_none());
+        hub.enable_tracing(2, 64);
+        let mut s = hub.begin_span("iiwa", "fd", "bulk");
+        assert!(s.is_enabled());
+        s.finish(Terminal::Done);
+        let recs = hub.trace().unwrap().drain();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn hub_snapshot_includes_pool_and_trace_extras() {
+        let hub = ObsHub::new();
+        hub.metrics().counter("x_total").inc();
+        let snap = hub.snapshot();
+        assert_eq!(snap.counters["x_total"], 1);
+        assert!(snap.counters.contains_key("pool_chunks_total"));
+        assert!(snap.counters.contains_key("pool_busy_us_total"));
+        assert!(!snap.counters.contains_key("dropped_spans_total"));
+        hub.enable_tracing(1, 8);
+        assert!(hub.snapshot().counters.contains_key("dropped_spans_total"));
+    }
+}

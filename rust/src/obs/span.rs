@@ -1,0 +1,506 @@
+//! Request spans, lock-free span rings, and Chrome-trace export.
+//!
+//! A [`Span`] rides inside every coordinator `Job`. When tracing is
+//! disabled (the default) a span is `None` in an `Option<Box<…>>` —
+//! every stamp is a null check, so the serving hot path pays nothing
+//! measurable (the `trace_overhead` bench row keeps this honest). When
+//! `serve --trace PATH` enables a [`TraceSink`], each span carries its
+//! stage timestamps (admission, enqueue, batch formation, kernel
+//! start/end, first/last chunk, end) on a shared µs clock and, on
+//! [`Span::finish`], pushes a completed [`SpanRecord`] into one of the
+//! sink's [`SpanRing`]s.
+//!
+//! Rings are multi-producer **drop-oldest**: a push claims a slot with a
+//! `fetch_add` and swaps its record pointer in; a non-null pointer
+//! swapped *out* is a dropped (overwritten) span, counted in the
+//! monotone `dropped_spans` counter. Producers never block and never
+//! take a lock; the collector drains by swapping slots back to null.
+//! Each OS thread is assigned one ring round-robin on first push, so
+//! route workers do not contend on a shared head.
+//!
+//! [`chrome_trace_json`] renders drained records as Chrome trace-event
+//! JSON (`chrome://tracing` / [Perfetto](https://ui.perfetto.dev)): one
+//! `"job"` complete event per span plus per-stage `queue` / `kernel` /
+//! `egress` / `stream` slices, grouped on one track per
+//! `(robot, route, class)`.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How a span ended. Every admitted (or refused) request gets exactly
+/// one terminal; a span dropped without an explicit finish records
+/// [`Terminal::Abandoned`] from its `Drop` impl so the invariant holds
+/// even on bug paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Terminal {
+    /// Executed and answered successfully.
+    Done,
+    /// Refused at admission: class queue full.
+    Rejected,
+    /// Refused at admission: circuit breaker open.
+    Shed,
+    /// Dropped at batch formation: deadline passed while queued.
+    Expired,
+    /// Dropped: consumer disconnected before/while execution.
+    Cancelled,
+    /// Failed in the engine (error or caught panic) or malformed.
+    Error,
+    /// Failed because the coordinator was shutting down.
+    Shutdown,
+    /// Span dropped without an explicit terminal (bug backstop).
+    Abandoned,
+}
+
+impl Terminal {
+    /// Lower-case label used in trace events and summaries.
+    pub fn label(self) -> &'static str {
+        match self {
+            Terminal::Done => "done",
+            Terminal::Rejected => "rejected",
+            Terminal::Shed => "shed",
+            Terminal::Expired => "expired",
+            Terminal::Cancelled => "cancelled",
+            Terminal::Error => "error",
+            Terminal::Shutdown => "shutdown",
+            Terminal::Abandoned => "abandoned",
+        }
+    }
+}
+
+/// One completed request span: identity, stage timestamps on the
+/// sink's µs clock (`None` = the request never reached that stage), and
+/// the terminal outcome.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Robot the request targeted.
+    pub robot: Arc<str>,
+    /// Route label (`rnea` / `fd` / `minv` / `dynall` / `traj`).
+    pub route: Arc<str>,
+    /// QoS class name.
+    pub class: &'static str,
+    /// Admission decision [µs since sink epoch]. Always present.
+    pub t_admit_us: u64,
+    /// Enqueued to the route worker.
+    pub t_enqueue_us: Option<u64>,
+    /// Picked into a batch at formation.
+    pub t_formed_us: Option<u64>,
+    /// Kernel execution began.
+    pub t_kernel_start_us: Option<u64>,
+    /// Kernel execution ended.
+    pub t_kernel_end_us: Option<u64>,
+    /// First response chunk written (streaming responses).
+    pub t_first_chunk_us: Option<u64>,
+    /// Last response chunk written (streaming responses).
+    pub t_last_chunk_us: Option<u64>,
+    /// Terminal stamp [µs since sink epoch]. Always present.
+    pub t_end_us: u64,
+    /// How the request ended.
+    pub terminal: Terminal,
+}
+
+/// Lock-free multi-producer drop-oldest ring of span records.
+#[derive(Debug)]
+pub struct SpanRing {
+    slots: Vec<AtomicPtr<SpanRecord>>,
+    head: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    /// Ring holding at most `capacity` records (min 1).
+    pub fn new(capacity: usize) -> SpanRing {
+        SpanRing {
+            slots: (0..capacity.max(1)).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            head: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Push one record; if the claimed slot still holds an undrained
+    /// record, that older record is dropped (freed) and counted.
+    pub fn push(&self, rec: Box<SpanRecord>) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        let old = self.slots[i].swap(Box::into_raw(rec), Ordering::AcqRel);
+        if !old.is_null() {
+            // SAFETY: a non-null pointer swapped out of a slot is owned
+            // exclusively by this call — push and drain both take
+            // ownership via `swap`, so no other thread can see it again.
+            drop(unsafe { Box::from_raw(old) });
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take every undrained record out of the ring (unordered).
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for slot in &self.slots {
+            let p = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: as in `push` — `swap` transfers sole ownership.
+                out.push(*unsafe { Box::from_raw(p) });
+            }
+        }
+        out
+    }
+
+    /// Monotone count of records overwritten before being drained.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for SpanRing {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            let p = slot.swap(std::ptr::null_mut(), Ordering::AcqRel);
+            if !p.is_null() {
+                // SAFETY: sole ownership via `swap`, as in `push`.
+                drop(unsafe { Box::from_raw(p) });
+            }
+        }
+    }
+}
+
+/// Round-robin ring assignment: each OS thread picks one ring index on
+/// its first push and keeps it, so producers on different worker
+/// threads land on different rings.
+fn ring_index(rings: usize) -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    SLOT.with(|s| {
+        if s.get() == usize::MAX {
+            s.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        s.get() % rings
+    })
+}
+
+/// The tracing backend: a shared µs clock plus per-thread span rings.
+/// Created only when tracing is enabled; the hot path reaches it through
+/// one `OnceLock` load in `ObsHub`.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    rings: Vec<SpanRing>,
+}
+
+impl TraceSink {
+    /// Sink with `rings` rings of `capacity` records each.
+    pub fn new(rings: usize, capacity: usize) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            epoch: Instant::now(),
+            rings: (0..rings.max(1)).map(|_| SpanRing::new(capacity)).collect(),
+        })
+    }
+
+    /// Microseconds since this sink was created (the trace time base).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span stamped at admission.
+    pub fn begin(self: &Arc<TraceSink>, robot: &str, route: &str, class: &'static str) -> Span {
+        let rec = SpanRecord {
+            robot: Arc::from(robot),
+            route: Arc::from(route),
+            class,
+            t_admit_us: self.now_us(),
+            t_enqueue_us: None,
+            t_formed_us: None,
+            t_kernel_start_us: None,
+            t_kernel_end_us: None,
+            t_first_chunk_us: None,
+            t_last_chunk_us: None,
+            t_end_us: 0,
+            terminal: Terminal::Abandoned,
+        };
+        Span(Some(Box::new(ActiveSpan { sink: Arc::clone(self), rec })))
+    }
+
+    fn push(&self, rec: Box<SpanRecord>) {
+        self.rings[ring_index(self.rings.len())].push(rec);
+    }
+
+    /// Drain every ring, returning records sorted by admission time.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> = self.rings.iter().flat_map(|r| r.drain()).collect();
+        out.sort_by_key(|r| (r.t_admit_us, r.t_end_us));
+        out
+    }
+
+    /// Monotone total of spans overwritten before being drained.
+    pub fn dropped_spans(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped()).sum()
+    }
+}
+
+#[derive(Debug)]
+struct ActiveSpan {
+    sink: Arc<TraceSink>,
+    rec: SpanRecord,
+}
+
+/// Per-request span handle. Disabled spans (`Span::disabled`) make every
+/// stamp a branch on `None`; enabled spans write timestamps into their
+/// record and push it to the sink on [`Span::finish`].
+#[derive(Debug, Default)]
+pub struct Span(Option<Box<ActiveSpan>>);
+
+impl Span {
+    /// The no-op span used when tracing is off.
+    pub fn disabled() -> Span {
+        Span(None)
+    }
+
+    /// Whether this span records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn stamp(&mut self, f: impl FnOnce(&mut SpanRecord, u64)) {
+        if let Some(a) = self.0.as_mut() {
+            let now = a.sink.now_us();
+            f(&mut a.rec, now);
+        }
+    }
+
+    /// The job entered its route queue.
+    pub fn stamp_enqueue(&mut self) {
+        self.stamp(|r, t| r.t_enqueue_us = Some(t));
+    }
+
+    /// The job was picked into a batch.
+    pub fn stamp_formed(&mut self) {
+        self.stamp(|r, t| r.t_formed_us = Some(t));
+    }
+
+    /// Kernel execution is starting for the job's batch.
+    pub fn stamp_kernel_start(&mut self) {
+        self.stamp(|r, t| r.t_kernel_start_us = Some(t));
+    }
+
+    /// Kernel execution finished for the job's batch.
+    pub fn stamp_kernel_end(&mut self) {
+        self.stamp(|r, t| r.t_kernel_end_us = Some(t));
+    }
+
+    /// A response chunk was written (first call sets the first-chunk
+    /// stamp; every call advances the last-chunk stamp).
+    pub fn stamp_chunk(&mut self) {
+        self.stamp(|r, t| {
+            if r.t_first_chunk_us.is_none() {
+                r.t_first_chunk_us = Some(t);
+            }
+            r.t_last_chunk_us = Some(t);
+        });
+    }
+
+    /// Record the terminal stamp and hand the completed record to the
+    /// sink. Idempotent: the first call wins, later calls (and the
+    /// `Drop` backstop) are no-ops.
+    pub fn finish(&mut self, terminal: Terminal) {
+        if let Some(a) = self.0.take() {
+            let ActiveSpan { sink, mut rec } = *a;
+            rec.t_end_us = sink.now_us();
+            rec.terminal = terminal;
+            sink.push(Box::new(rec));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        // Backstop: a span dropped without a terminal still records one,
+        // so "every admitted job ends in exactly one terminal" holds.
+        self.finish(Terminal::Abandoned);
+    }
+}
+
+/// Render drained records as Chrome trace-event JSON. One `"job"`
+/// complete event (`ph:"X"`) spans admission → end with the terminal in
+/// its args; `queue` / `kernel` / `egress` / `stream` slices attribute
+/// the inside. Tracks (`tid`) are one per `(robot, route, class)`, named
+/// via `thread_name` metadata events.
+pub fn chrome_trace_json(records: &[SpanRecord]) -> String {
+    let mut tids: BTreeMap<(String, String, &'static str), u64> = BTreeMap::new();
+    let mut events: Vec<Json> = Vec::new();
+    for r in records {
+        let key = (r.robot.to_string(), r.route.to_string(), r.class);
+        let next = tids.len() as u64 + 1;
+        let tid = *tids.entry(key).or_insert(next);
+        let slice = |name: &str, ts: u64, end: u64, events: &mut Vec<Json>| {
+            events.push(json::obj(vec![
+                ("cat", json::s("stage")),
+                ("dur", json::num(end.saturating_sub(ts) as f64)),
+                ("name", json::s(name)),
+                ("ph", json::s("X")),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(tid as f64)),
+                ("ts", json::num(ts as f64)),
+            ]));
+        };
+        events.push(json::obj(vec![
+            (
+                "args",
+                json::obj(vec![
+                    ("class", json::s(r.class)),
+                    ("robot", json::s(&r.robot)),
+                    ("route", json::s(&r.route)),
+                    ("terminal", json::s(r.terminal.label())),
+                ]),
+            ),
+            ("cat", json::s("request")),
+            ("dur", json::num(r.t_end_us.saturating_sub(r.t_admit_us) as f64)),
+            ("name", json::s("job")),
+            ("ph", json::s("X")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(tid as f64)),
+            ("ts", json::num(r.t_admit_us as f64)),
+        ]));
+        if let (Some(enq), Some(formed)) = (r.t_enqueue_us, r.t_formed_us) {
+            slice("queue", enq, formed, &mut events);
+        }
+        if let (Some(ks), Some(ke)) = (r.t_kernel_start_us, r.t_kernel_end_us) {
+            slice("kernel", ks, ke, &mut events);
+            slice("egress", ke, r.t_end_us, &mut events);
+        }
+        if let (Some(first), Some(last)) = (r.t_first_chunk_us, r.t_last_chunk_us) {
+            slice("stream", first, last, &mut events);
+        }
+    }
+    for ((robot, route, class), tid) in &tids {
+        events.push(json::obj(vec![
+            ("args", json::obj(vec![("name", json::s(&format!("{robot}/{route} [{class}]")))])),
+            ("name", json::s("thread_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(*tid as f64)),
+        ]));
+    }
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finished(sink: &Arc<TraceSink>, terminal: Terminal) {
+        let mut s = sink.begin("iiwa", "fd", "interactive");
+        s.stamp_enqueue();
+        s.stamp_formed();
+        s.stamp_kernel_start();
+        s.stamp_kernel_end();
+        s.finish(terminal);
+    }
+
+    #[test]
+    fn span_records_every_stamp_and_one_terminal() {
+        let sink = TraceSink::new(2, 16);
+        finished(&sink, Terminal::Done);
+        let recs = sink.drain();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.terminal, Terminal::Done);
+        assert!(r.t_enqueue_us.is_some());
+        assert!(r.t_formed_us.is_some());
+        assert!(r.t_kernel_start_us.unwrap() <= r.t_kernel_end_us.unwrap());
+        assert!(r.t_end_us >= r.t_admit_us);
+        // Finish is idempotent and drain is destructive.
+        assert!(sink.drain().is_empty());
+    }
+
+    #[test]
+    fn dropped_span_records_abandoned_terminal() {
+        let sink = TraceSink::new(1, 8);
+        {
+            let mut s = sink.begin("iiwa", "traj", "bulk");
+            s.stamp_chunk();
+            s.stamp_chunk();
+            // dropped without finish
+        }
+        let recs = sink.drain();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].terminal, Terminal::Abandoned);
+        assert!(recs[0].t_first_chunk_us.is_some());
+        assert!(recs[0].t_last_chunk_us >= recs[0].t_first_chunk_us);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let ring = SpanRing::new(4);
+        let sink = TraceSink::new(1, 4);
+        for k in 0..10u64 {
+            let mut s = sink.begin("iiwa", "fd", "bulk");
+            s.finish(Terminal::Done);
+            // Also exercise the raw ring directly with distinguishable
+            // admission stamps.
+            ring.push(Box::new(SpanRecord {
+                robot: Arc::from("iiwa"),
+                route: Arc::from("fd"),
+                class: "bulk",
+                t_admit_us: k,
+                t_enqueue_us: None,
+                t_formed_us: None,
+                t_kernel_start_us: None,
+                t_kernel_end_us: None,
+                t_first_chunk_us: None,
+                t_last_chunk_us: None,
+                t_end_us: k,
+                terminal: Terminal::Done,
+            }));
+        }
+        assert_eq!(ring.dropped(), 6);
+        let recs = ring.drain();
+        assert_eq!(recs.len(), 4);
+        // The survivors are the newest four pushes.
+        let mut stamps: Vec<u64> = recs.iter().map(|r| r.t_admit_us).collect();
+        stamps.sort_unstable();
+        assert_eq!(stamps, vec![6, 7, 8, 9]);
+        // The sink's rings overflowed too (capacity 4, 10 finishes).
+        assert_eq!(sink.dropped_spans(), 6);
+        assert_eq!(sink.drain().len(), 4);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let mut s = Span::disabled();
+        assert!(!s.is_enabled());
+        s.stamp_enqueue();
+        s.stamp_kernel_start();
+        s.finish(Terminal::Done);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_job_events() {
+        let sink = TraceSink::new(2, 16);
+        finished(&sink, Terminal::Done);
+        finished(&sink, Terminal::Expired);
+        let recs = sink.drain();
+        let text = chrome_trace_json(&recs);
+        let parsed = Json::parse(&text).expect("valid trace json");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("events");
+        let jobs: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                    && e.get("name").and_then(|n| n.as_str()) == Some("job")
+            })
+            .collect();
+        assert_eq!(jobs.len(), 2);
+        let terminals: Vec<&str> = jobs
+            .iter()
+            .filter_map(|e| e.get("args")?.get("terminal")?.as_str())
+            .collect();
+        assert!(terminals.contains(&"done") && terminals.contains(&"expired"));
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")));
+    }
+}

@@ -1,0 +1,361 @@
+//! Observability integration tests: span completeness across every
+//! terminal path, metrics-vs-trace consistency under pooled multi-client
+//! load, the `stats` wire route, and drop-oldest ring overflow — all
+//! through the public coordinator and network APIs.
+//!
+//! The refusal paths reuse the overload-test construction: a
+//! `BackendSpec::Chaos` route whose `delay_us` throttle pins capacity
+//! (so "the worker is busy" is a constructed fact, not a race) and whose
+//! infinite-operand sentinel injects engine panics on demand.
+
+use draco::coordinator::{
+    BackendSpec, Coordinator, QosClass, QosPolicy, ResponseSink, ServeError, SubmitOptions,
+};
+use draco::model::builtin_robot;
+use draco::net::{frame, Frame, NetClient, NetServer};
+use draco::obs::Terminal;
+use draco::runtime::ArtifactFn;
+use std::collections::BTreeMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn chaos_spec(robot_name: &str, batch: usize, delay_us: u64) -> (BackendSpec, usize) {
+    let robot = builtin_robot(robot_name).unwrap();
+    let n = robot.dof();
+    let spec = BackendSpec::Chaos {
+        robot,
+        function: ArtifactFn::Fd,
+        batch,
+        delay_us,
+        class: QosClass::default(),
+    };
+    (spec, n)
+}
+
+fn native_spec(robot_name: &str, batch: usize, parallel: usize) -> (BackendSpec, usize) {
+    let robot = builtin_robot(robot_name).unwrap();
+    let n = robot.dof();
+    let spec = BackendSpec::Native {
+        robot,
+        function: ArtifactFn::Fd,
+        batch,
+        parallel,
+        class: QosClass::default(),
+    };
+    (spec, n)
+}
+
+fn clean_ops(n: usize) -> Vec<Vec<f32>> {
+    vec![vec![0.1; n], vec![0.0; n], vec![0.0; n]]
+}
+
+fn poison_ops(n: usize) -> Vec<Vec<f32>> {
+    let mut ops = clean_ops(n);
+    ops[0][0] = f32::INFINITY;
+    ops
+}
+
+/// Sink whose consumer is already gone — drives the `Cancelled` span
+/// path at batch formation.
+struct DeadSink {
+    done_tx: Sender<Result<(), ServeError>>,
+}
+
+impl ResponseSink for DeadSink {
+    fn chunk(&mut self, _data: &[f32]) {}
+    fn done(&mut self, result: Result<(), ServeError>) {
+        let _ = self.done_tx.send(result);
+    }
+    fn alive(&self) -> bool {
+        false
+    }
+}
+
+/// Every request — served, refused at admission, dropped at formation,
+/// failed in the engine, or cancelled — produces exactly one span with
+/// the matching terminal; nothing is recorded as `Abandoned`, and the
+/// recorded terminal counts agree with the coordinator's own stats.
+#[test]
+fn every_terminal_path_records_exactly_one_span() {
+    let (spec, n) = chaos_spec("iiwa", 2, 20_000);
+    let policy = QosPolicy {
+        queue_cap: [8, 8, 1],
+        breaker_trip: 2,
+        breaker_cooldown_us: 200_000,
+        ..QosPolicy::default()
+    };
+    let coord = Coordinator::start_with_policy(vec![spec], n, 1_000, policy);
+    coord.obs().enable_tracing(2, 256);
+
+    // Done: one clean request, served.
+    coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n)).recv().unwrap().expect("clean ok");
+
+    // Rejected: while the worker is busy, the Bulk cap of 1 fills and
+    // the second Bulk submission is refused at admission.
+    let warm = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+    std::thread::sleep(Duration::from_millis(5));
+    let b1 = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::class(QosClass::Bulk),
+    );
+    let b2 = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::class(QosClass::Bulk),
+    );
+    assert!(matches!(b2.recv().unwrap(), Err(ServeError::Rejected { .. })));
+    warm.recv().unwrap().expect("warm ok");
+    b1.recv().unwrap().expect("queued bulk ok");
+
+    // Expired: a 5 ms deadline lapses behind a ~20 ms busy worker.
+    let warm2 = coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n));
+    std::thread::sleep(Duration::from_millis(5));
+    let doomed = coord.submit_to_opts(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::deadline_us(5_000),
+    );
+    assert!(matches!(doomed.recv().unwrap(), Err(ServeError::Expired { .. })));
+    warm2.recv().unwrap().expect("warm2 ok");
+
+    // Error ×2 (tripping the breaker), then Shed while it is open.
+    for _ in 0..2 {
+        assert!(matches!(
+            coord.submit_to("iiwa", ArtifactFn::Fd, poison_ops(n)).recv().unwrap(),
+            Err(ServeError::Engine(_))
+        ));
+    }
+    assert!(matches!(
+        coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n)).recv().unwrap(),
+        Err(ServeError::Shed { .. })
+    ));
+
+    // Cancelled: the sink is dead when the batch forms.
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    coord.submit_to_sink(
+        "iiwa",
+        ArtifactFn::Fd,
+        clean_ops(n),
+        SubmitOptions::default(),
+        Box::new(DeadSink { done_tx }),
+    );
+    assert!(matches!(done_rx.recv().unwrap(), Err(ServeError::Cancelled)));
+
+    // Shutdown joins the workers, so every span has been pushed before
+    // the drain (the Done path finishes its span after the client's
+    // receiver fires).
+    let st = coord.stats();
+    let obs = Arc::clone(coord.obs());
+    coord.shutdown();
+    let recs = obs.trace().expect("tracing enabled").drain();
+
+    let mut by_terminal: BTreeMap<Terminal, u64> = BTreeMap::new();
+    for r in &recs {
+        *by_terminal.entry(r.terminal).or_insert(0) += 1;
+    }
+    assert_eq!(by_terminal.get(&Terminal::Done), Some(&4), "{by_terminal:?}");
+    assert_eq!(by_terminal.get(&Terminal::Rejected), Some(&1));
+    assert_eq!(by_terminal.get(&Terminal::Expired), Some(&1));
+    assert_eq!(by_terminal.get(&Terminal::Error), Some(&2));
+    assert_eq!(by_terminal.get(&Terminal::Shed), Some(&1));
+    assert_eq!(by_terminal.get(&Terminal::Cancelled), Some(&1));
+    assert_eq!(by_terminal.get(&Terminal::Abandoned), None, "no span may be abandoned");
+    assert_eq!(recs.len(), 10, "one span per request, exactly");
+
+    // Recorded terminals agree with the coordinator's own counters.
+    assert_eq!(st.completed, 4);
+    assert_eq!(st.rejected, 1);
+    assert_eq!(st.expired, 1);
+    assert_eq!(st.shed, 1);
+    assert_eq!(st.cancelled, 1);
+
+    // Stage stamps: served spans carry the full lifecycle in order;
+    // admission-refused spans never reach the queue.
+    for r in &recs {
+        assert!(r.t_end_us >= r.t_admit_us);
+        match r.terminal {
+            Terminal::Done => {
+                let enq = r.t_enqueue_us.expect("done span enqueued");
+                let formed = r.t_formed_us.expect("done span formed");
+                let ks = r.t_kernel_start_us.expect("done span kernel start");
+                let ke = r.t_kernel_end_us.expect("done span kernel end");
+                assert!(r.t_admit_us <= enq && enq <= formed && formed <= ks && ks <= ke);
+                assert!(ke <= r.t_end_us);
+            }
+            Terminal::Rejected | Terminal::Shed => {
+                assert!(r.t_formed_us.is_none(), "refused span reached formation: {r:?}");
+                assert!(r.t_kernel_start_us.is_none());
+            }
+            Terminal::Expired | Terminal::Cancelled => {
+                assert!(r.t_enqueue_us.is_some(), "queued-drop span was never enqueued");
+                assert!(r.t_kernel_start_us.is_none(), "dropped span hit the kernel: {r:?}");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Four client threads hammer one pooled native route; afterwards the
+/// drained trace, the metrics registry, and the coordinator stats must
+/// all tell the same story: every job traced `Done` with monotone
+/// stamps, one stage sample per executed job, one fill sample per batch.
+#[test]
+fn trace_and_metrics_agree_under_pooled_load() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 25;
+    let (spec, n) = native_spec("iiwa", 16, 0);
+    let coord = Coordinator::start_with_policy(vec![spec], n, 500, QosPolicy::default());
+    coord.obs().enable_tracing(8, 8192);
+
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                for _ in 0..PER_THREAD {
+                    coord
+                        .submit_to("iiwa", ArtifactFn::Fd, clean_ops(n))
+                        .recv()
+                        .unwrap()
+                        .expect("pooled job ok");
+                }
+            });
+        }
+    });
+
+    let total = (THREADS * PER_THREAD) as u64;
+    let st = coord.stats();
+    let snap = coord.obs().snapshot();
+    let obs = Arc::clone(coord.obs());
+    coord.shutdown();
+    let recs = obs.trace().expect("tracing enabled").drain();
+
+    assert_eq!(st.completed, total);
+    assert_eq!(recs.len(), total as usize, "one span per served job");
+    assert!(recs.iter().all(|r| r.terminal == Terminal::Done));
+    for r in &recs {
+        let enq = r.t_enqueue_us.unwrap();
+        let formed = r.t_formed_us.unwrap();
+        let ks = r.t_kernel_start_us.unwrap();
+        let ke = r.t_kernel_end_us.unwrap();
+        assert!(r.t_admit_us <= enq && enq <= formed && formed <= ks && ks <= ke);
+    }
+    assert_eq!(obs.trace().unwrap().dropped_spans(), 0, "rings were deep enough");
+
+    // One queue/kernel sample per executed job; one fill/exec sample per
+    // batch — the histograms and ServeStats count the same events.
+    assert_eq!(snap.hists["stage_queue_us"].count, total);
+    assert_eq!(snap.hists["stage_kernel_us"].count, total);
+    assert_eq!(snap.hists["batch_fill_pct"].count, st.batches);
+    assert_eq!(snap.hists["batch_exec_us"].count, st.batches);
+    // The per-class labelled histograms partition the aggregate.
+    let per_class: u64 = snap
+        .hists
+        .iter()
+        .filter(|(name, _)| name.starts_with("stage_queue_us{"))
+        .map(|(_, h)| h.count)
+        .sum();
+    assert_eq!(per_class, total);
+}
+
+/// The `stats` wire route answers a live snapshot whose serve counters
+/// match the coordinator's terminal `ServeStats`, and the net-layer
+/// counters see a malformed line the moment one arrives.
+#[test]
+fn stats_wire_route_matches_serve_stats() {
+    let (spec, n) = native_spec("iiwa", 8, 1);
+    let coord =
+        Arc::new(Coordinator::start_with_policy(vec![spec], n, 500, QosPolicy::default()));
+    let dims: BTreeMap<String, usize> = [("iiwa".to_string(), n)].into_iter().collect();
+    let server = NetServer::start(Arc::clone(&coord), dims, "127.0.0.1:0", None, "iiwa", 8, 500)
+        .expect("bind");
+    let mut client = NetClient::connect(server.addr()).expect("connect");
+
+    // Serve a few clean requests over the wire.
+    let ops = clean_ops(n);
+    for id in 1..=3u64 {
+        client
+            .send_line(&frame::req_step_line(id, "iiwa", "fd", None, None, &ops))
+            .expect("send req");
+        loop {
+            match client.read_frame().expect("frame") {
+                Frame::Done { id: got, .. } if got == id => break,
+                Frame::Err { msg, .. } => panic!("err on clean traffic: {msg}"),
+                _ => {}
+            }
+        }
+    }
+    // One malformed line, answered in-band and counted.
+    client.send_line("this is not json").expect("send garbage");
+    assert!(matches!(client.read_frame().expect("frame"), Frame::Err { .. }));
+
+    client.send_line(&frame::stats_req_line(9)).expect("send stats req");
+    let (counters, gauges) = loop {
+        match client.read_frame().expect("frame") {
+            Frame::Stats { id, counters, gauges } => {
+                assert_eq!(id, 9);
+                break (counters, gauges);
+            }
+            Frame::Err { msg, .. } => panic!("stats request refused: {msg}"),
+            _ => {}
+        }
+    };
+
+    let st = coord.stats();
+    assert_eq!(counters["serve_completed"], st.completed);
+    assert_eq!(st.completed, 3);
+    assert_eq!(counters["serve_rejected"], st.rejected);
+    assert_eq!(counters["serve_shed"], st.shed);
+    assert_eq!(counters["serve_expired"], st.expired);
+    assert_eq!(counters["net_malformed_lines_total"], 1);
+    assert_eq!(counters["net_slow_reader_kills_total"], 0);
+    assert!(counters.contains_key("pool_chunks_total"));
+    // Unlabelled histogram percentiles surface as gauges.
+    assert!(gauges.contains_key("stage_kernel_us_p99"), "{gauges:?}");
+    assert!(gauges.contains_key("net_egress_queue_highwater"));
+
+    drop(client);
+    server.stop();
+}
+
+/// With deliberately tiny rings, overload overwrites the oldest spans:
+/// the drain returns the newest `capacity` records, `dropped_spans` is
+/// exactly the overflow and never decreases.
+#[test]
+fn ring_overflow_drops_oldest_spans_monotonically() {
+    let (spec, n) = native_spec("iiwa", 1, 1);
+    let coord = Coordinator::start_with_policy(vec![spec], n, 200, QosPolicy::default());
+    // One ring of 4 slots; every worker thread lands on it.
+    coord.obs().enable_tracing(1, 4);
+
+    let mut dropped_seen = 0u64;
+    let mut t_after_16 = 0u64;
+    for k in 0..20 {
+        coord.submit_to("iiwa", ArtifactFn::Fd, clean_ops(n)).recv().unwrap().expect("ok");
+        let d = coord.obs().trace().unwrap().dropped_spans();
+        assert!(d >= dropped_seen, "dropped_spans went backwards at job {k}: {dropped_seen} -> {d}");
+        dropped_seen = d;
+        if k == 15 {
+            // Sequential submissions: jobs 17..20 are admitted after
+            // this instant, so drop-oldest must keep exactly them.
+            t_after_16 = coord.obs().trace().unwrap().now_us();
+        }
+    }
+
+    let obs = Arc::clone(coord.obs());
+    coord.shutdown();
+    let sink = obs.trace().unwrap();
+    let recs = sink.drain();
+    assert_eq!(recs.len(), 4, "ring keeps exactly its capacity");
+    assert_eq!(sink.dropped_spans(), 16, "20 spans through 4 slots drop 16");
+    assert!(recs.iter().all(|r| r.terminal == Terminal::Done));
+    // Drop-oldest: every survivor is one of the last 4 jobs, all of
+    // which were admitted after the 16th job completed.
+    assert!(
+        recs.iter().all(|r| r.t_admit_us >= t_after_16),
+        "an old span survived past 16 newer pushes: {recs:?}"
+    );
+}

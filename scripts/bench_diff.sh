@@ -46,10 +46,13 @@ extract_hotpath() {
 
 # Emit "scenario|class|p99_us|goodput_per_s" per serve row. Same
 # alphabetical-key trick: within a row object "scenario" sorts last
-# (backoff_us, class, completed, expired, goodput_per_s, offered_per_s,
-# p50_us, p999_us, p99_us, rejected, retries, scenario), so it closes
-# the row. The top-level "robot"/"schema" keys sort after "rows", so
-# they cannot bleed into row state.
+# (backoff_us, class, completed, egress_*, expired, goodput_per_s,
+# kernel_*, offered_per_s, p50_us, p999_us, p99_us, queue_*, rejected,
+# retries, scenario), so it closes the row. The per-stage keys
+# ({queue,kernel,egress}_{p50,p99}_us) cannot false-match the
+# /"p99_us":/ pattern — their p99_us is preceded by "_", not a quote.
+# The top-level "robot"/"schema" keys sort after "rows", so they
+# cannot bleed into row state.
 extract_serve() {
     awk '
         /"class":/         { v = $2; gsub(/[",]/, "", v); cls = v }
@@ -85,6 +88,7 @@ if [ "$1" = "--check" ]; then
             "iiwa|minv_qint_deferred64" \
             "iiwa|fd_qint_srv64" \
             "iiwa|fd_pool64" \
+            "iiwa|trace_overhead" \
             "iiwa|dyn_all_fused64" \
             "iiwa|dyn_all_qint64" \
             "iiwa|serve_fd_par64" \
@@ -147,6 +151,16 @@ if [ "$1" = "--check" ]; then
         '; then
             exit 1
         fi
+        # Per-stage latency attribution: every serve dump must carry the
+        # queue/kernel/egress breakdown columns (loadgen writes them per
+        # scenario; wire-robustness scenarios legitimately hold zeros).
+        for key in queue_p50_us queue_p99_us kernel_p50_us kernel_p99_us \
+                   egress_p50_us egress_p99_us; do
+            if ! grep -q "\"${key}\":" "$f"; then
+                echo "SCHEMA FAIL: missing per-stage column \"${key}\" in $f" >&2
+                exit 1
+            fi
+        done
         echo "serve schema OK ($count rows in $f)"
         ;;
     *)
